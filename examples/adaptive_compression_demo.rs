@@ -1,0 +1,70 @@
+//! Adaptive Gradient Compression (Algorithm 3) in action: trains the
+//! small preset with DiLoCoX and traces how the controller's rank r_t and
+//! local-step count H_t respond to the measured effective rank of the
+//! averaged pseudo-gradients (Principle of Rank Diminishing).
+//!
+//!     cargo run --release --example adaptive_compression_demo
+
+use dilocox::config::{Algo, ExperimentConfig};
+use dilocox::metrics::Table;
+use dilocox::train::{run_experiment, RunOpts};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = format!("{}/artifacts/small", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&artifacts).exists() {
+        eprintln!("artifacts/small missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let mut cfg = ExperimentConfig::default_for("small", Algo::DiLoCoX);
+    cfg.artifacts_dir = artifacts;
+    cfg.train.outer_steps = 12;
+    cfg.train.local_steps = 6; // H₁
+    cfg.train.inner_lr = 2e-3;
+    cfg.train.outer_lr = 0.6;
+    cfg.train.overlap = false; // sync mode: the controller sees every Δ
+    cfg.compression.rank = 32; // r₁
+    cfg.compression.adaptive = true;
+    cfg.compression.rank_window = 3; // c
+    cfg.compression.min_rank = 2;
+
+    println!(
+        "Adaptive compression on `small` ({}): r₁={}, H₁={}, window c={}",
+        cfg.algo.name(),
+        cfg.compression.rank,
+        cfg.train.local_steps,
+        cfg.compression.rank_window
+    );
+
+    let out = run_experiment(&cfg, &RunOpts { quiet: true, ..Default::default() })?;
+
+    let mut t = Table::new(&[
+        "outer",
+        "rank r_t",
+        "H_t",
+        "train loss",
+        "wire/sync",
+        "ratio",
+    ]);
+    for r in &out.metrics.records {
+        t.row(&[
+            r.outer_step.to_string(),
+            r.rank.to_string(),
+            r.inner_steps.to_string(),
+            format!("{:.4}", r.loss),
+            dilocox::util::fmt_bytes(r.wire_bytes),
+            format!("{:.0}x", r.compression_ratio),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "final eval loss {:.4}; total wire {}",
+        out.metrics.final_eval_loss.unwrap(),
+        dilocox::util::fmt_bytes(out.metrics.total_wire_bytes())
+    );
+    println!(
+        "\nAs training enters its low-rank regime the controller shrinks r_t \
+         (cheaper syncs) and rescales H_t = H₁·α — Algorithm 3 end to end."
+    );
+    Ok(())
+}

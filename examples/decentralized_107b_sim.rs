@@ -1,0 +1,96 @@
+//! The paper's headline experiment, simulated at true scale: pre-training
+//! Qwen1.5-107B across two decentralized clusters (160× A800-40G) over a
+//! 1 Gbps WAN.  Reproduces Fig. 4, the §2.2 memory argument (OpenDiLoCo
+//! OOM), and a bandwidth sweep showing where decentralized training
+//! becomes practical.
+//!
+//!     cargo run --release --example decentralized_107b_sim
+
+use dilocox::config::Algo;
+use dilocox::metrics::Table;
+use dilocox::report::{self, paper};
+use dilocox::sim::{self, ScaleConfig, SimAlgo};
+use dilocox::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let rounds = 16;
+
+    // ---- Figure 4 at both scales ---------------------------------------
+    for scale in [ScaleConfig::opt_1_3b(), ScaleConfig::qwen_107b()] {
+        let rows = sim::figure4_row(&scale, rounds);
+        let paper_rows: &[(&str, f64)] = if scale.params > 10e9 {
+            &paper::FIG4_107B
+        } else {
+            &paper::FIG4_1_3B
+        };
+        println!("{}", report::figure4_table(&scale.name, paper_rows, &rows));
+    }
+
+    // ---- §2.2 memory story ----------------------------------------------
+    println!("Memory per GPU (A800-40G), Qwen1.5-107B:");
+    let mut t = Table::new(&["configuration", "per-GPU", "worst GPU", "verdict"]);
+    let hbm = 40_000_000_000u64;
+    let od = sim::memory::opendiloco_memory(107e9, hbm);
+    let dx = sim::memory::dilocox_memory(107e9, 80, hbm);
+    for (name, r) in [("OpenDiLoCo (no MP)", od), ("DiLoCoX (PP=80, dual opt sharded)", dx)] {
+        t.row(&[
+            name.to_string(),
+            fmt_bytes(r.per_gpu_bytes),
+            fmt_bytes(r.worst_gpu_bytes),
+            format!("{:?}", r.verdict),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- bandwidth sweep: when does decentralized training make sense? --
+    println!("DiLoCoX 107B throughput vs inter-cluster bandwidth:");
+    let mut t = Table::new(&[
+        "bandwidth",
+        "sync time",
+        "tokens/s",
+        "GPU util",
+        "comm hidden?",
+    ]);
+    for gbps in [0.1, 0.5, 1.0, 2.0, 10.0, 100.0] {
+        let mut scale = ScaleConfig::qwen_107b();
+        scale.net.inter_bw_gbps = gbps;
+        let algo = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+        let r = sim::simulate(&scale, &algo, rounds);
+        let local_phase = r.step_secs * algo.local_steps as f64;
+        t.row(&[
+            format!("{gbps} Gbps"),
+            fmt_secs(r.comm_secs),
+            report::fmt_tps(r.tokens_per_sec),
+            format!("{:.0}%", 100.0 * r.gpu_utilization),
+            if r.comm_secs <= local_phase { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- local-step sweep: the H trade-off -------------------------------
+    println!("DiLoCoX 107B: local steps H vs throughput (overlap on):");
+    let mut t = Table::new(&["H", "tokens/s", "syncs/hour", "GPU util"]);
+    let scale = ScaleConfig::qwen_107b();
+    for h in [25, 50, 125, 250, 500] {
+        let mut algo = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+        algo.local_steps = h;
+        let r = sim::simulate(&scale, &algo, rounds);
+        let round_secs = (r.step_secs * h as f64).max(r.comm_secs);
+        t.row(&[
+            h.to_string(),
+            report::fmt_tps(r.tokens_per_sec),
+            format!("{:.1}", 3600.0 / round_secs),
+            format!("{:.0}%", 100.0 * r.gpu_utilization),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "At the paper's H=125 the {} sync hides entirely behind ~{} of local \
+         compute — the one-step-delay overlap at work.",
+        fmt_secs(sim::simulate(&scale, &SimAlgo::paper_setting(Algo::DiLoCoX, &scale), 4).comm_secs),
+        fmt_secs(
+            sim::simulate(&scale, &SimAlgo::paper_setting(Algo::DiLoCoX, &scale), 4).step_secs
+                * 125.0
+        )
+    );
+}

@@ -1,0 +1,77 @@
+//! Quickstart: train a tiny transformer with DiLoCoX over two simulated
+//! decentralized clusters and compare against vanilla AllReduce.
+//!
+//!     make artifacts            # once: AOT-lower the jax/pallas programs
+//!     cargo run --release --example quickstart
+//!
+//! Prints loss curves and the wire-byte ledger — the paper's story in
+//! thirty seconds: same convergence, orders of magnitude less traffic.
+
+use dilocox::config::{Algo, ExperimentConfig};
+use dilocox::metrics::Table;
+use dilocox::train::{run_experiment, RunOpts};
+use dilocox::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = format!("{}/artifacts/tiny", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&artifacts).exists() {
+        eprintln!("artifacts/tiny missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let opts = RunOpts { quiet: true, ..Default::default() };
+    let mut rows = Table::new(&[
+        "algorithm",
+        "final eval loss",
+        "WAN traffic",
+        "compression",
+        "modeled time @1Gbps",
+    ]);
+
+    let mut outcomes = Vec::new();
+    for algo in [Algo::AllReduce, Algo::DiLoCoX] {
+        let mut cfg = ExperimentConfig::default_for("tiny", algo);
+        cfg.artifacts_dir = artifacts.clone();
+        cfg.train.outer_steps = 8;
+        cfg.train.local_steps = if algo == Algo::AllReduce { 5 } else { 5 };
+        cfg.train.inner_lr = 3e-3;
+        cfg.train.outer_lr = 0.5;
+        cfg.compression.rank = 8;
+        println!("running {} ...", algo.name());
+        let out = run_experiment(&cfg, &opts)?;
+        let m = &out.metrics;
+        let ratio = if m.total_wire_bytes() > 0 {
+            let full = 4.0
+                * out.params.len() as f64
+                * m.records.iter().filter(|r| r.wire_bytes > 0).count() as f64;
+            full / m.total_wire_bytes() as f64
+        } else {
+            1.0
+        };
+        rows.row(&[
+            algo.name().to_string(),
+            format!("{:.4}", m.final_eval_loss.unwrap()),
+            fmt_bytes(m.total_wire_bytes()),
+            format!("{ratio:.0}x"),
+            dilocox::util::fmt_secs(m.total_elapsed()),
+        ]);
+        outcomes.push((algo, out));
+    }
+
+    println!("\n{}", rows.render());
+
+    println!("eval-loss curves (outer step -> loss):");
+    for (algo, out) in &outcomes {
+        let pts: Vec<String> = out
+            .eval_curve
+            .iter()
+            .map(|(s, l)| format!("{s}:{l:.3}"))
+            .collect();
+        println!("  {:<10} {}", algo.name(), pts.join("  "));
+    }
+    println!(
+        "\nDiLoCoX reaches AllReduce-class loss while moving a fraction of \
+         the bytes — the paper's Figure 3 + 4 story at toy scale."
+    );
+    Ok(())
+}

@@ -1,0 +1,298 @@
+"""AOT exporter: lower every L2 stage/optimizer program to HLO *text* and
+write the artifact bundle the rust coordinator consumes.
+
+artifacts/<preset>/
+    manifest.json        — config, program I/O signatures, flat param layout
+    <program>.hlo.txt    — HLO text (NOT serialized proto: xla_extension
+                           0.5.1 rejects jax>=0.5's 64-bit instruction ids;
+                           the text parser reassigns ids — see DESIGN.md)
+    stage_<i>.init.bin   — little-endian f32 initial parameters per stage
+    single.init.bin      — M=1 layout (== concatenation of the stage inits)
+    goldens/             — input/output samples for rust numerics tests
+
+Run once via `make artifacts`; python never appears on the request path.
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .presets import PRESETS, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    out = []
+    for a in args:
+        out.append({
+            "dtype": str(a.dtype),
+            "shape": [int(s) for s in a.shape],
+        })
+    return out
+
+
+def _spec_json(spec):
+    return [
+        {"name": n, "shape": list(s), "offset": o}
+        for n, s, o in M.spec_offsets(spec)
+    ]
+
+
+def write_f32(path, arr):
+    arr = np.asarray(arr, dtype=np.float32)
+    with open(path, "wb") as f:
+        f.write(arr.tobytes())
+
+
+def write_i32(path, arr):
+    arr = np.asarray(arr, dtype=np.int32)
+    with open(path, "wb") as f:
+        f.write(arr.tobytes())
+
+
+class Exporter:
+    def __init__(self, cfg: ModelConfig, out_dir: str, use_pallas: bool,
+                 seed: int = 1234):
+        self.cfg = cfg
+        self.out = out_dir
+        self.use_pallas = use_pallas
+        self.seed = seed
+        self.programs = {}
+        self.fns = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name, fn, example_args):
+        """Lower fn at example_args, write HLO text, record the signature."""
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example_args)
+        self.programs[name] = {
+            "file": fname,
+            "inputs": _sig(example_args),
+            "outputs": _sig(list(outs)),
+        }
+        self.fns[name] = fn
+        return lowered
+
+    # -- example input builders ------------------------------------------
+
+    def shape_f32(self, *shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    def shape_i32(self, *shape):
+        return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+    def run(self, cfg):
+        c = cfg
+        b, s, d = c.microbatch, c.seq_len, c.d_model
+        kinds = ["single"]
+        if c.pp_stages > 1:
+            kinds += ["first", "last"] + (["mid"] if c.pp_stages > 2 else [])
+        numel = {
+            k: M.spec_numel(M.stage_param_spec(c, k)) for k in kinds
+        }
+
+        fns = M.make_stage_fns(c, use_pallas=self.use_pallas)
+        sc = self.shape_f32()  # f32 scalar
+
+        # ---- stage programs
+        pn = numel["single"]
+        self.export("step_single", fns["step_single"],
+                    (self.shape_f32(pn), self.shape_i32(b, s),
+                     self.shape_i32(b, s)))
+        self.export("eval_single", fns["eval_single"],
+                    (self.shape_f32(pn), self.shape_i32(b, s),
+                     self.shape_i32(b, s)))
+        if c.pp_stages > 1:
+            acts = self.shape_f32(b, s, d)
+            self.export("fwd_first", fns["fwd_first"],
+                        (self.shape_f32(numel["first"]),
+                         self.shape_i32(b, s)))
+            self.export("bwd_first", fns["bwd_first"],
+                        (self.shape_f32(numel["first"]),
+                         self.shape_i32(b, s), acts))
+            if c.pp_stages > 2:
+                self.export("fwd_mid", fns["fwd_mid"],
+                            (self.shape_f32(numel["mid"]), acts))
+                self.export("bwd_mid", fns["bwd_mid"],
+                            (self.shape_f32(numel["mid"]), acts, acts))
+            self.export("fwd_last", fns["fwd_last"],
+                        (self.shape_f32(numel["last"]), acts,
+                         self.shape_i32(b, s)))
+            self.export("bwd_last", fns["bwd_last"],
+                        (self.shape_f32(numel["last"]), acts,
+                         self.shape_i32(b, s)))
+
+        # ---- optimizer programs, one per distinct flat size
+        for kind in kinds:
+            n = numel[kind]
+            self.export(f"adamw_{kind}", M.adamw_step,
+                        (self.shape_f32(n), self.shape_f32(n),
+                         self.shape_f32(n), self.shape_f32(n), sc, sc, sc))
+            self.export(f"nesterov_{kind}", M.nesterov_step,
+                        (self.shape_f32(n), self.shape_f32(n),
+                         self.shape_f32(n), sc, sc))
+
+        # ---- compression programs (pallas L1 lowered into HLO), proving
+        #      the L1->L2->L3 composition from rust (tiny/small scale).
+        if c.name in ("tiny", "small"):
+            from .kernels.lowrank import lowrank_iter_pallas
+            from .kernels.quantize import quantize_dequantize_pallas
+            rows, cols, r = d, 4 * d, 8
+            self.export(
+                "lowrank_iter",
+                lambda m, q: lowrank_iter_pallas(
+                    m, q, use_pallas=self.use_pallas),
+                (self.shape_f32(rows, cols), self.shape_f32(cols, r)))
+            self.export(
+                "quantize_q4",
+                lambda x: (quantize_dequantize_pallas(x, q_bits=4),),
+                (self.shape_f32(rows, cols),))
+
+        # ---- initial parameters
+        init_files = {}
+        stage_kinds = []
+        if c.pp_stages > 1:
+            stage_kinds = (["first"]
+                           + ["mid"] * (c.pp_stages - 2)
+                           + ["last"])
+        stage_inits = []
+        for idx, kind in enumerate(stage_kinds):
+            w = M.init_stage_params(c, kind, self.seed + idx)
+            fname = f"stage_{idx}.init.bin"
+            write_f32(os.path.join(self.out, fname), w)
+            init_files[f"stage_{idx}"] = {"kind": kind, "file": fname}
+            stage_inits.append(w)
+        if stage_inits:
+            single = np.concatenate(stage_inits)
+        else:
+            single = M.init_stage_params(c, "single", self.seed)
+        assert single.shape[0] == numel["single"], (
+            single.shape, numel["single"])
+        write_f32(os.path.join(self.out, "single.init.bin"), single)
+        init_files["single"] = {"kind": "single", "file": "single.init.bin"}
+
+        # ---- goldens (skip for the big preset: python-side fwd/bwd of
+        #      110M params is build-time-only pain with no extra signal)
+        goldens = {}
+        if c.name != "e2e100m":
+            goldens = self.write_goldens(c, single, numel, stage_inits)
+
+        manifest = {
+            "preset": c.name,
+            "format": "hlo-text-v1",
+            "use_pallas": self.use_pallas,
+            "config": c.to_dict(),
+            "param_count": int(numel["single"]),
+            "programs": self.programs,
+            "param_specs": {
+                k: _spec_json(M.stage_param_spec(c, k)) for k in kinds
+            },
+            "stage_numel": {k: int(v) for k, v in numel.items()},
+            "init": init_files,
+            "goldens": goldens,
+            "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        }
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        return manifest
+
+    def write_goldens(self, c, single_init, numel, stage_inits):
+        """Run each exported program once on deterministic inputs; save the
+        inputs and outputs for the rust cross-language numerics test."""
+        gdir = os.path.join(self.out, "goldens")
+        os.makedirs(gdir, exist_ok=True)
+        rng = np.random.RandomState(7)
+        b, s, d = c.microbatch, c.seq_len, c.d_model
+        tokens = rng.randint(0, c.vocab_size, size=(b, s)).astype(np.int32)
+        labels = rng.randint(0, c.vocab_size, size=(b, s)).astype(np.int32)
+        acts = (rng.normal(0, 1, size=(b, s, d)).astype(np.float32))
+
+        index = {}
+
+        def golden(name, arrays):
+            fn = self.fns[name]
+            outs = jax.jit(fn)(*[jnp.asarray(a) for a in arrays])
+            entry = {"inputs": [], "outputs": []}
+            for i, a in enumerate(arrays):
+                fname = f"{name}.in{i}.bin"
+                path = os.path.join(gdir, fname)
+                if a.dtype == np.int32:
+                    write_i32(path, a)
+                else:
+                    write_f32(path, a)
+                entry["inputs"].append(fname)
+            for i, o in enumerate(outs):
+                fname = f"{name}.out{i}.bin"
+                write_f32(os.path.join(gdir, fname), np.asarray(o))
+                entry["outputs"].append(fname)
+            index[name] = entry
+
+        golden("step_single", (single_init, tokens, labels))
+        golden("eval_single", (single_init, tokens, labels))
+        if c.pp_stages > 1:
+            golden("fwd_first", (stage_inits[0], tokens))
+            golden("bwd_first", (stage_inits[0], tokens, acts))
+            if c.pp_stages > 2:
+                golden("fwd_mid", (stage_inits[1], acts))
+                golden("bwd_mid", (stage_inits[1], acts, acts))
+            golden("fwd_last", (stage_inits[-1], acts, labels))
+            golden("bwd_last", (stage_inits[-1], acts, labels))
+        n = numel["single"]
+        g = rng.normal(0, 1e-2, size=(n,)).astype(np.float32)
+        m0 = np.zeros(n, np.float32)
+        golden("adamw_single",
+               (single_init, g, m0, m0,
+                np.float32(1.0), np.float32(1e-3), np.float32(0.01)))
+        golden("nesterov_single",
+               (single_init, g, m0, np.float32(0.7), np.float32(0.9)))
+        if f"lowrank_iter" in self.fns:
+            rows, cols, r = d, 4 * d, 8
+            mat = rng.normal(0, 1, size=(rows, cols)).astype(np.float32)
+            q0 = rng.normal(0, 1, size=(cols, r)).astype(np.float32)
+            golden("lowrank_iter", (mat, q0))
+            golden("quantize_q4", (mat,))
+        return index
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny")
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--pallas", action="store_true",
+                    help="route matmul/attention through the Pallas kernels "
+                         "(interpret=True) when lowering")
+    ap.add_argument("--seed", type=int, default=1234)
+    args = ap.parse_args()
+    cfg = PRESETS[args.preset]
+    out = args.out_dir or os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", args.preset)
+    out = os.path.abspath(out)
+    ex = Exporter(cfg, out, use_pallas=args.pallas, seed=args.seed)
+    man = ex.run(cfg)
+    total = sum(
+        os.path.getsize(os.path.join(out, f)) for f in os.listdir(out)
+        if os.path.isfile(os.path.join(out, f)))
+    print(f"[aot] preset={cfg.name} programs={len(man['programs'])} "
+          f"params={man['param_count']:,} bytes={total:,} -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""L1 Pallas kernel: fused causal attention (flash-style).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): instead of materializing the
+S x S score matrix in HBM (what a naive CUDA port would do with shared
+memory staging), the kernel streams KV blocks through VMEM and keeps a
+running max / running sum per query row — the classic flash recurrence.
+Grid = (batch*heads, S/bq); each step holds one (bq, hd) query tile plus a
+(bkv, hd) KV tile in VMEM.
+
+interpret=True: correctness path on CPU PJRT (Mosaic is TPU-only).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int, seq: int):
+    qi = pl.program_id(1)
+    hd = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    q = q_ref[0] * scale  # [bq, hd]
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+
+    def body(kv_i, carry):
+        acc, m_prev, l_prev = carry
+        k_blk = k_ref[0, pl.ds(kv_i * bkv, bkv), :]
+        v_blk = v_ref[0, pl.ds(kv_i * bkv, bkv), :]
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32)
+        kv_pos = kv_i * bkv + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bkv), 1
+        )
+        s = jnp.where(q_pos >= kv_pos, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        # Guard fully-masked rows (can only happen transiently).
+        alpha = jnp.exp(jnp.minimum(m_prev - m_cur, 0.0))
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return acc, m_cur, l_cur
+
+    # Causal: query block qi only attends to kv blocks <= qi.
+    n_kv = qi + 1 if bq == bkv else seq // bkv
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, n_kv, body, (acc0, m0, l0))
+    o_ref[0] = acc / jnp.maximum(l, 1e-30)[:, None]
+
+
+# Differentiable wrapper: forward runs the fused kernel; backward
+# rematerializes through the reference math (on a real TPU this would be a
+# dedicated flash-backward kernel — see DESIGN.md §Hardware-Adaptation).
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    return causal_attention_pallas(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return causal_attention_pallas(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, g):
+    from . import ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(ref.causal_attention, q, k, v)
+    return vjp(g)
+
+
+causal_attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv"))
+def causal_attention_pallas(q, k, v, bq: int = 32, bkv: int = 32):
+    """Fused causal attention.  q,k,v: [B, H, S, hd] -> [B, H, S, hd]."""
+    b, h, s, hd = q.shape
+    bq = min(bq, s)
+    bkv = min(bkv, s)
+    while s % bq:
+        bq //= 2
+    while s % bkv:
+        bkv //= 2
+    bh = b * h
+    qr = q.reshape(bh, s, hd)
+    kr = k.reshape(bh, s, hd)
+    vr = v.reshape(bh, s, hd)
+    kernel = functools.partial(_attn_kernel, bq=bq, bkv=bkv, seq=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, s // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bi, qi: (bi, qi, 0)),
+            pl.BlockSpec((1, s, hd), lambda bi, qi: (bi, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda bi, qi: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bi, qi: (bi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), jnp.float32),
+        interpret=True,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, hd)

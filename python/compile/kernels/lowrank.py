@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: PowerSGD-style low-rank power-iteration step.
+
+The paper's Algorithm 1 compresses pseudo-gradients as
+LOWRANK(delta, r) -> QUANTIZE(q).  The low-rank step is two matmuls
+(P = M Q, Q' = M^T P) around an orthonormalization — MXU work, tiled by the
+shared matmul kernel (DESIGN.md §Hardware-Adaptation).  Orthonormalization
+is an unrolled modified Gram-Schmidt (rank r is small and static) so the
+exported HLO contains no LAPACK custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import matmul as mm
+from . import ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def lowrank_iter_pallas(m, q, use_pallas: bool = True):
+    """One subspace iteration.  m: [rows, cols], q: [cols, r].
+
+    Returns (p, q_next); reconstruction is p @ q_next.T.
+    """
+    dot = mm.matmul_pallas if use_pallas else ref.matmul
+    p = dot(m, q)
+    p = ref.orthonormalize(p)
+    q_next = dot(m.T, p)
+    return p, q_next
+
+
+def lowrank_reconstruct_pallas(p, q_next, use_pallas: bool = True):
+    dot = mm.matmul_pallas if use_pallas else ref.matmul
+    return dot(p, jnp.transpose(q_next))
+
+
+def wire_floats(rows: int, cols: int, r: int) -> int:
+    """f32 elements on the wire for the rank-r factors of a rows x cols
+    matrix (P and Q'), before quantization."""
+    return r * (rows + cols)

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: tiled matmul.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks
+(M/bm, N/bn, K/bk) tiles; each (bm, bk) x (bk, bn) product targets the MXU
+systolic array, and the (bm, bn) accumulator lives in VMEM for the whole
+K sweep (revisiting semantics of the output BlockSpec).  Block shapes are
+chosen as 128-multiples when the operand allows, matching the 128x128 MXU
+tile; smaller operands fall back to full-dimension blocks.
+
+Runs with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is the correctness path here (DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (prefers 128-multiples)."""
+    if dim <= target:
+        return dim
+    for cand in (target, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and dim % cand == 0:
+            return cand
+    return dim
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # k is the innermost ("arbitrary"/sequential) grid axis: accumulate the
+    # partial product into the revisited output block.
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_pallas(a, b, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Tiled matmul  a[m,k] @ b[k,n] -> [m,n]  via pallas_call."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+# Differentiable wrapper: the VJP of a matmul is two more matmuls, so the
+# backward pass stays on the same tiled kernel (MXU work on real TPU).
+@jax.custom_vjp
+def matmul(a, b):
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return matmul_pallas(g, b.T), matmul_pallas(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set for one grid step (DESIGN.md §Perf)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of MXU lanes busy for a (bm,bk)x(bk,bn) tile (estimate)."""
+    eff_m = min(bm, mxu) / mxu
+    eff_n = min(bn, mxu) / mxu
+    eff_k = min(bk, mxu) / mxu
+    return eff_m * eff_n * eff_k

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: symmetric uniform q-bit quantize -> dequantize.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a pure VPU elementwise kernel
+(scale, round, clamp, rescale) tiled over VMEM-sized blocks.  The global
+abs-max reduction runs as a separate jnp reduction (XLA fuses it); the
+kernel consumes the resulting scalar via a (1,)-shaped operand so the whole
+pipeline stays AllReduce-compatible (values land back on the q-bit grid on
+every worker).
+
+interpret=True: correctness path on CPU PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, scale_ref, o_ref, *, levels: float):
+    scale = scale_ref[0]
+    xq = jnp.clip(jnp.round(x_ref[...] / scale), -levels, levels)
+    o_ref[...] = xq * scale
+
+
+@functools.partial(jax.jit, static_argnames=("q_bits", "block"))
+def quantize_dequantize_pallas(x, q_bits: int = 4, block: int = 1024):
+    """Round x onto the symmetric q-bit grid spanned by its abs-max."""
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    # Pad to a block multiple so the grid tiles exactly.
+    pad = (-n) % block if n > block else 0
+    if n <= block:
+        block = n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    levels = float(2 ** (q_bits - 1) - 1)
+    amax = jnp.max(jnp.abs(flat))
+    scale = jnp.where(amax > 0, amax / levels, 1.0).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_quant_kernel, levels=levels),
+        grid=(flat.shape[0] // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, scale)
+    if pad:
+        out = out[:n]
+    return out.reshape(orig_shape)
+
+
+def wire_bits(n_elems: int, q_bits: int) -> int:
+    """Bits on the wire for a quantized tensor: payload + one f32 scale."""
+    return n_elems * q_bits + 32

@@ -1,0 +1,84 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest (and hypothesis sweeps)
+assert the Pallas kernels match these to float32 tolerance, and the rust
+integration tests compare PJRT execution of the exported HLO against golden
+outputs produced by these functions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(a, b):
+    """Plain f32 matmul, the oracle for kernels.matmul.matmul_pallas."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def causal_attention(q, k, v):
+    """Causal multi-head attention oracle.
+
+    q, k, v: [B, H, S, hd] -> [B, H, S, hd]
+    """
+    s = q.shape[-2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def quantize_dequantize(x, q_bits: int):
+    """Symmetric uniform q-bit quantization, immediately dequantized.
+
+    This is the *value* effect of wire quantization: the byte accounting
+    (q bits/element + one f32 scale) lives in the rust compress module.
+    Zero tensors round-trip exactly.
+    """
+    levels = jnp.asarray(2.0 ** (q_bits - 1) - 1.0, jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / levels, 1.0)
+    xq = jnp.clip(jnp.round(x / scale), -levels, levels)
+    return xq * scale
+
+
+def orthonormalize(p):
+    """Modified Gram-Schmidt over columns of p [m, r] (r static, small).
+
+    Used instead of jnp.linalg.qr so the exported HLO contains no LAPACK
+    custom-calls (xla_extension 0.5.1 cannot resolve jax>=0.5's FFI names).
+    """
+    m, r = p.shape
+    cols = []
+    for i in range(r):
+        c = p[:, i]
+        for cprev in cols:
+            c = c - jnp.dot(cprev, c) * cprev
+        n = jnp.sqrt(jnp.sum(c * c))
+        c = c / jnp.maximum(n, 1e-8)
+        cols.append(c)
+    return jnp.stack(cols, axis=1)
+
+
+def lowrank_iter(m, q):
+    """One PowerSGD-style subspace (power) iteration.
+
+    m: [rows, cols] matrix to compress; q: [cols, r] current basis.
+    Returns (p, q_next) with p orthonormal [rows, r], q_next [cols, r].
+    The rank-r reconstruction is p @ q_next.T.
+    """
+    p = matmul(m, q)
+    p = orthonormalize(p)
+    q_next = matmul(m.T, p)
+    return p, q_next
+
+
+def lowrank_reconstruct(p, q_next):
+    return matmul(p, q_next.T)

@@ -1,0 +1,303 @@
+"""L2: the transformer model as *stage programs* over flat parameter vectors.
+
+Every function here is a pure jax function whose parameters arrive as a
+single flat f32 vector; the flat layout (name, shape, offset) is defined by
+`stage_param_spec` and exported verbatim into manifest.json so the rust
+coordinator can mirror it bit-for-bit.
+
+Stage kinds (pipeline parallelism, DESIGN.md):
+  first  — token+position embedding + K transformer layers
+  mid    — K transformer layers
+  last   — K transformer layers + final LN + LM head + cross-entropy loss
+  single — the whole model (M=1), used by the data-parallel-only paths
+
+Backward programs rematerialize the forward (jax.vjp over the stage fn), so
+no activation stash crosses the rust/HLO boundary — the standard
+pipeline-parallel recompute choice.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .presets import ModelConfig
+from .kernels import ref
+from .kernels.matmul import matmul as matmul_pallas
+from .kernels.attention import causal_attention as causal_attention_pallas
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+
+
+def layer_param_spec(cfg: ModelConfig, prefix: str):
+    d, f = cfg.d_model, cfg.d_ff
+    return [
+        (f"{prefix}.ln1_g", (d,)),
+        (f"{prefix}.ln1_b", (d,)),
+        (f"{prefix}.wq", (d, d)),
+        (f"{prefix}.bq", (d,)),
+        (f"{prefix}.wk", (d, d)),
+        (f"{prefix}.bk", (d,)),
+        (f"{prefix}.wv", (d, d)),
+        (f"{prefix}.bv", (d,)),
+        (f"{prefix}.wo", (d, d)),
+        (f"{prefix}.bo", (d,)),
+        (f"{prefix}.ln2_g", (d,)),
+        (f"{prefix}.ln2_b", (d,)),
+        (f"{prefix}.w1", (d, f)),
+        (f"{prefix}.b1", (f,)),
+        (f"{prefix}.w2", (f, d)),
+        (f"{prefix}.b2", (d,)),
+    ]
+
+
+def stage_param_spec(cfg: ModelConfig, kind: str):
+    """(name, shape) list for one stage kind; order == flat layout order."""
+    v, d, s = cfg.vocab_size, cfg.d_model, cfg.seq_len
+    k = cfg.n_layers if kind == "single" else cfg.layers_per_stage
+    spec = []
+    if kind in ("first", "single"):
+        spec += [("tok_emb", (v, d)), ("pos_emb", (s, d))]
+    for i in range(k):
+        spec += layer_param_spec(cfg, f"layer{i}")
+    if kind in ("last", "single"):
+        spec += [
+            ("lnf_g", (d,)),
+            ("lnf_b", (d,)),
+            ("head_w", (d, v)),
+            ("head_b", (v,)),
+        ]
+    return spec
+
+
+def spec_numel(spec) -> int:
+    n = 0
+    for _, shape in spec:
+        c = 1
+        for s in shape:
+            c *= s
+        n += c
+    return n
+
+
+def spec_offsets(spec):
+    """[(name, shape, offset)] with offsets in f32 elements."""
+    out, off = [], 0
+    for name, shape in spec:
+        c = 1
+        for s in shape:
+            c *= s
+        out.append((name, shape, off))
+        off += c
+    return out
+
+
+def unflatten(flat, spec):
+    params = {}
+    for name, shape, off in spec_offsets(spec):
+        c = 1
+        for s in shape:
+            c *= s
+        params[name] = jax.lax.dynamic_slice(flat, (off,), (c,)).reshape(shape)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Initialization (numpy side; also writes the .bin artifacts)
+# ---------------------------------------------------------------------------
+
+
+def init_stage_params(cfg: ModelConfig, kind: str, seed: int):
+    """Flat f32 numpy vector with GPT-2-style init (0.02 normal, residual
+    projections scaled by 1/sqrt(2L))."""
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    resid_scale = 1.0 / np.sqrt(2.0 * cfg.n_layers)
+    chunks = []
+    for name, shape in stage_param_spec(cfg, kind):
+        base = name.split(".")[-1]
+        if base in ("ln1_g", "ln2_g", "lnf_g"):
+            w = np.ones(shape, np.float32)
+        elif base in ("ln1_b", "ln2_b", "lnf_b", "bq", "bk", "bv", "bo",
+                      "b1", "b2", "head_b"):
+            w = np.zeros(shape, np.float32)
+        else:
+            w = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+            if base in ("wo", "w2"):
+                w *= resid_scale
+        chunks.append(w.reshape(-1))
+    return np.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Model math
+# ---------------------------------------------------------------------------
+
+
+def _attention(x, p, prefix, cfg: ModelConfig, use_pallas: bool):
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def proj(w, bias):
+        if use_pallas:
+            y = matmul_pallas(x.reshape(b * s, d), w)
+        else:
+            y = ref.matmul(x.reshape(b * s, d), w)
+        return (y + bias).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+
+    q = proj(p[f"{prefix}.wq"], p[f"{prefix}.bq"])
+    k = proj(p[f"{prefix}.wk"], p[f"{prefix}.bk"])
+    v = proj(p[f"{prefix}.wv"], p[f"{prefix}.bv"])
+    if use_pallas:
+        o = causal_attention_pallas(q, k, v)
+    else:
+        o = ref.causal_attention(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b * s, d)
+    if use_pallas:
+        o = matmul_pallas(o, p[f"{prefix}.wo"])
+    else:
+        o = ref.matmul(o, p[f"{prefix}.wo"])
+    return (o + p[f"{prefix}.bo"]).reshape(b, s, d)
+
+
+def _mlp(x, p, prefix, use_pallas: bool):
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    dot = matmul_pallas if use_pallas else ref.matmul
+    h = dot(xf, p[f"{prefix}.w1"]) + p[f"{prefix}.b1"]
+    h = jax.nn.gelu(h, approximate=True)
+    o = dot(h, p[f"{prefix}.w2"]) + p[f"{prefix}.b2"]
+    return o.reshape(b, s, d)
+
+
+def _layer(x, p, prefix, cfg, use_pallas):
+    x = x + _attention(
+        ref.layernorm(x, p[f"{prefix}.ln1_g"], p[f"{prefix}.ln1_b"]),
+        p, prefix, cfg, use_pallas,
+    )
+    x = x + _mlp(
+        ref.layernorm(x, p[f"{prefix}.ln2_g"], p[f"{prefix}.ln2_b"]),
+        p, prefix, use_pallas,
+    )
+    return x
+
+
+def _layers(x, p, n, cfg, use_pallas):
+    for i in range(n):
+        x = _layer(x, p, f"layer{i}", cfg, use_pallas)
+    return x
+
+
+def _embed(tokens, p):
+    return jnp.take(p["tok_emb"], tokens, axis=0) + p["pos_emb"][None, :, :]
+
+
+def _head_loss(x, p, labels, cfg, use_pallas):
+    b, s, d = x.shape
+    x = ref.layernorm(x, p["lnf_g"], p["lnf_b"])
+    dot = matmul_pallas if use_pallas else ref.matmul
+    logits = dot(x.reshape(b * s, d), p["head_w"]) + p["head_b"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(
+        logits, labels.reshape(b * s, 1), axis=-1
+    ).squeeze(-1)
+    return jnp.mean(lse - ll)
+
+
+# ---------------------------------------------------------------------------
+# Stage programs (the functions aot.py lowers to HLO)
+# ---------------------------------------------------------------------------
+
+
+def make_stage_fns(cfg: ModelConfig, use_pallas: bool = False):
+    """Returns dict of python callables keyed by program name."""
+    k = cfg.layers_per_stage
+    sp = {kind: stage_param_spec(cfg, kind)
+          for kind in ("first", "mid", "last", "single")}
+
+    def fwd_first(params, tokens):
+        p = unflatten(params, sp["first"])
+        return (_layers(_embed(tokens, p), p, k, cfg, use_pallas),)
+
+    def fwd_mid(params, acts):
+        p = unflatten(params, sp["mid"])
+        return (_layers(acts, p, k, cfg, use_pallas),)
+
+    def fwd_last(params, acts, labels):
+        p = unflatten(params, sp["last"])
+        x = _layers(acts, p, k, cfg, use_pallas)
+        return (_head_loss(x, p, labels, cfg, use_pallas),)
+
+    def fwd_single(params, tokens, labels):
+        p = unflatten(params, sp["single"])
+        x = _layers(_embed(tokens, p), p, cfg.n_layers, cfg, use_pallas)
+        return (_head_loss(x, p, labels, cfg, use_pallas),)
+
+    def bwd_first(params, tokens, g_out):
+        def f(pp):
+            return fwd_first(pp, tokens)[0]
+        _, vjp = jax.vjp(f, params)
+        return (vjp(g_out)[0],)
+
+    def bwd_mid(params, acts, g_out):
+        def f(pp, a):
+            return fwd_mid(pp, a)[0]
+        _, vjp = jax.vjp(f, params, acts)
+        gp, ga = vjp(g_out)
+        return (gp, ga)
+
+    def bwd_last(params, acts, labels):
+        def f(pp, a):
+            return fwd_last(pp, a, labels)[0]
+        loss, vjp = jax.vjp(f, params, acts)
+        gp, ga = vjp(jnp.float32(1.0))
+        return (loss, gp, ga)
+
+    def step_single(params, tokens, labels):
+        def f(pp):
+            return fwd_single(pp, tokens, labels)[0]
+        loss, vjp = jax.vjp(f, params)
+        return (loss, vjp(jnp.float32(1.0))[0])
+
+    def eval_single(params, tokens, labels):
+        return (fwd_single(params, tokens, labels)[0],)
+
+    return {
+        "fwd_first": fwd_first,
+        "fwd_mid": fwd_mid,
+        "fwd_last": fwd_last,
+        "bwd_first": bwd_first,
+        "bwd_mid": bwd_mid,
+        "bwd_last": bwd_last,
+        "step_single": step_single,
+        "eval_single": eval_single,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Optimizer programs (flat-vector AdamW inner / Nesterov outer)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adamw_step(p, g, m, v, t, lr, wd):
+    """One AdamW step on a flat vector.  t is the 1-based step as f32."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m / (1.0 - jnp.power(ADAM_B1, t))
+    vhat = v / (1.0 - jnp.power(ADAM_B2, t))
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * p)
+    return (p, m, v)
+
+
+def nesterov_step(p, delta, buf, lr, mu):
+    """DiLoCo outer update: SGD with Nesterov momentum applied to the
+    averaged pseudo-gradient delta = theta_old - theta_new."""
+    buf = mu * buf + delta
+    p = p - lr * (delta + mu * buf)
+    return (p, buf)

@@ -1,0 +1,79 @@
+"""Model presets shared by the L2 model, the AOT exporter, and (via
+manifest.json) the rust coordinator.
+
+Every preset fixes the transformer hyperparameters and the example-input
+shapes the HLO programs are lowered with.  The rust side never re-derives
+these: it reads them back from the manifest.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq_len: int
+    microbatch: int
+    # Pipeline degree the *pipeline-kind* programs are exported for.
+    # Single-stage (M=1) programs are always exported as well.
+    pp_stages: int
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def layers_per_stage(self) -> int:
+        assert self.n_layers % self.pp_stages == 0
+        return self.n_layers // self.pp_stages
+
+    def to_dict(self):
+        d = asdict(self)
+        d["d_ff"] = self.d_ff
+        d["head_dim"] = self.head_dim
+        d["layers_per_stage"] = self.layers_per_stage
+        return d
+
+
+PRESETS = {
+    # Unit/integration tests + the pallas-variant composition proof.
+    # pp_stages=4 with one layer per stage exercises every stage kind
+    # (first / mid / last) from rust.
+    "tiny": ModelConfig(
+        name="tiny", vocab_size=256, d_model=64, n_heads=2, n_layers=4,
+        seq_len=32, microbatch=2, pp_stages=4,
+    ),
+    # Convergence benches (Fig 3 proxy): ~1M params, fast enough to run
+    # thousands of inner steps on one CPU core.
+    "small": ModelConfig(
+        name="small", vocab_size=512, d_model=128, n_heads=4, n_layers=4,
+        seq_len=64, microbatch=4, pp_stages=2,
+    ),
+    # End-to-end example (~110M params with untied embeddings).
+    "e2e100m": ModelConfig(
+        name="e2e100m", vocab_size=16384, d_model=768, n_heads=12,
+        n_layers=12, seq_len=128, microbatch=2, pp_stages=4,
+    ),
+}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total parameter count (single-stage layout)."""
+    d, v, s, f = cfg.d_model, cfg.vocab_size, cfg.seq_len, cfg.d_ff
+    per_layer = (
+        2 * d            # ln1
+        + 4 * d * d + 4 * d  # wq wk wv wo + biases
+        + 2 * d          # ln2
+        + d * f + f      # w1 b1
+        + f * d + d      # w2 b2
+    )
+    return v * d + s * d + cfg.n_layers * per_layer + 2 * d + d * v + v

@@ -1,0 +1,19 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable regardless of pytest invocation directory.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def artifacts_dir():
+    return os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))

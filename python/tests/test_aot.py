@@ -1,0 +1,106 @@
+"""Artifact bundle integrity: manifests exist, signatures match presets,
+init bins have the right sizes, and goldens re-verify against live jax."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.presets import PRESETS
+
+BUNDLES = ["tiny", "small", "tiny-pallas", "e2e100m"]
+
+
+def _load(artifacts_dir, bundle):
+    path = os.path.join(artifacts_dir, bundle, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip(f"{bundle} not exported (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f), os.path.join(artifacts_dir, bundle)
+
+
+@pytest.mark.parametrize("bundle", BUNDLES)
+def test_manifest_programs_exist(artifacts_dir, bundle):
+    man, root = _load(artifacts_dir, bundle)
+    assert man["format"] == "hlo-text-v1"
+    for name, prog in man["programs"].items():
+        p = os.path.join(root, prog["file"])
+        assert os.path.exists(p), name
+        head = open(p).read(200)
+        assert "HloModule" in head, name
+
+
+@pytest.mark.parametrize("bundle", ["tiny", "small", "e2e100m"])
+def test_manifest_matches_preset(artifacts_dir, bundle):
+    man, _ = _load(artifacts_dir, bundle)
+    cfg = PRESETS[man["preset"]]
+    assert man["config"]["d_model"] == cfg.d_model
+    assert man["config"]["n_layers"] == cfg.n_layers
+    assert man["param_count"] == M.spec_numel(
+        M.stage_param_spec(cfg, "single"))
+
+
+@pytest.mark.parametrize("bundle", ["tiny", "small"])
+def test_init_bins_sizes(artifacts_dir, bundle):
+    man, root = _load(artifacts_dir, bundle)
+    for key, info in man["init"].items():
+        kind = info["kind"]
+        numel = man["stage_numel"][kind]
+        size = os.path.getsize(os.path.join(root, info["file"]))
+        assert size == 4 * numel, key
+
+
+def test_single_init_is_concat_of_stages(artifacts_dir):
+    man, root = _load(artifacts_dir, "tiny")
+    stages = sorted(k for k in man["init"] if k.startswith("stage_"))
+    parts = [
+        np.fromfile(os.path.join(root, man["init"][k]["file"]), np.float32)
+        for k in stages
+    ]
+    single = np.fromfile(
+        os.path.join(root, man["init"]["single"]["file"]), np.float32)
+    assert_allclose(np.concatenate(parts), single)
+
+
+def test_param_spec_offsets_match_model(artifacts_dir):
+    man, _ = _load(artifacts_dir, "tiny")
+    cfg = PRESETS["tiny"]
+    for kind, spec_json in man["param_specs"].items():
+        live = M.spec_offsets(M.stage_param_spec(cfg, kind))
+        assert len(live) == len(spec_json)
+        for (name, shape, off), ent in zip(live, spec_json):
+            assert ent["name"] == name
+            assert tuple(ent["shape"]) == tuple(shape)
+            assert ent["offset"] == off
+
+
+@pytest.mark.parametrize("bundle", ["tiny"])
+def test_goldens_reverify_against_live_jax(artifacts_dir, bundle):
+    """Re-run each goldened program with live jax on the stored inputs and
+    confirm the stored outputs — guards against layout or export drift."""
+    import jax.numpy as jnp
+
+    man, root = _load(artifacts_dir, bundle)
+    cfg = PRESETS[man["preset"]]
+    fns = M.make_stage_fns(cfg, use_pallas=man["use_pallas"])
+    fns["adamw_single"] = M.adamw_step
+    fns["nesterov_single"] = M.nesterov_step
+    gdir = os.path.join(root, "goldens")
+    for name, entry in man["goldens"].items():
+        if name not in fns:
+            continue
+        sig = man["programs"][name]["inputs"]
+        args = []
+        for fname, s in zip(entry["inputs"], sig):
+            dt = np.int32 if s["dtype"] == "int32" else np.float32
+            a = np.fromfile(os.path.join(gdir, fname), dt)
+            args.append(jnp.asarray(a.reshape(s["shape"])))
+        outs = fns[name](*args)
+        for fname, o in zip(entry["outputs"], outs):
+            want = np.fromfile(os.path.join(gdir, fname), np.float32)
+            assert_allclose(
+                np.asarray(o).reshape(-1), want, rtol=1e-4, atol=1e-5,
+                err_msg=f"{name}:{fname}")

@@ -1,0 +1,207 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes (and q-bit widths); fixed-seed numpy drives the
+values.  Tolerances are float32-accumulation level.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.matmul import (
+    matmul, matmul_pallas, vmem_bytes, mxu_utilization, _pick_block)
+from compile.kernels.attention import (
+    causal_attention, causal_attention_pallas)
+from compile.kernels.quantize import quantize_dequantize_pallas, wire_bits
+from compile.kernels.lowrank import lowrank_iter_pallas, wire_floats
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _arr(rng, *shape):
+    return rng.normal(0.0, 1.0, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 3, 16, 48, 128]),
+    k=st.sampled_from([2, 8, 64, 96, 256]),
+    n=st.sampled_from([1, 4, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    a, b = _arr(rng, m, k), _arr(rng, k, n)
+    got = np.asarray(matmul_pallas(a, b))
+    want = np.asarray(ref.matmul(a, b))
+    assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_vjp_matches_ref(m, seed):
+    import jax
+
+    rng = np.random.RandomState(seed)
+    a, b = _arr(rng, m, 2 * m), _arr(rng, 2 * m, m)
+
+    ga_p, gb_p = jax.grad(lambda a, b: matmul(a, b).sum(), argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(
+        lambda a, b: ref.matmul(a, b).sum(), argnums=(0, 1))(a, b)
+    assert_allclose(np.asarray(ga_p), np.asarray(ga_r), rtol=1e-5, atol=1e-4)
+    assert_allclose(np.asarray(gb_p), np.asarray(gb_r), rtol=1e-5, atol=1e-4)
+
+
+def test_pick_block_divides():
+    for dim in (1, 2, 48, 64, 100, 128, 384, 1000):
+        blk = _pick_block(dim, 128)
+        assert dim % blk == 0 and blk <= max(dim, 128)
+
+
+def test_vmem_estimates_monotone():
+    assert vmem_bytes(128, 128, 128) > vmem_bytes(64, 64, 64)
+    assert 0.0 < mxu_utilization(64, 64, 64) < mxu_utilization(128, 128, 128) <= 1.0
+
+
+# ------------------------------------------------------------- attention
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([8, 32, 64, 128]),
+    hd=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(b, h, s, hd, seed):
+    rng = np.random.RandomState(seed)
+    q, k, v = (_arr(rng, b, h, s, hd) for _ in range(3))
+    got = np.asarray(causal_attention_pallas(q, k, v))
+    want = np.asarray(ref.causal_attention(q, k, v))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_is_causal():
+    # Perturbing a future position must not change earlier outputs.
+    rng = np.random.RandomState(3)
+    q, k, v = (_arr(rng, 1, 1, 16, 8) for _ in range(3))
+    base = np.asarray(causal_attention_pallas(q, k, v))
+    k2, v2 = k.copy(), v.copy()
+    k2[0, 0, -1] += 10.0
+    v2[0, 0, -1] -= 5.0
+    pert = np.asarray(causal_attention_pallas(q, k2, v2))
+    assert_allclose(base[0, 0, :15], pert[0, 0, :15], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[0, 0, 15], pert[0, 0, 15])
+
+
+def test_attention_vjp_matches_ref():
+    import jax
+
+    rng = np.random.RandomState(11)
+    q, k, v = (_arr(rng, 1, 2, 16, 8) for _ in range(3))
+    g_p = jax.grad(lambda q: causal_attention(q, k, v).sum())(q)
+    g_r = jax.grad(lambda q: ref.causal_attention(q, k, v).sum())(q)
+    assert_allclose(np.asarray(g_p), np.asarray(g_r), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- quantize
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([7, 64, 1000, 4096]),
+    q=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_quantize_matches_ref(n, q, seed):
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, n)
+    got = np.asarray(quantize_dequantize_pallas(x, q_bits=q))
+    want = np.asarray(ref.quantize_dequantize(x, q))
+    assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(q=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16))
+def test_quantize_error_bounded_by_half_step(q, seed):
+    rng = np.random.RandomState(seed)
+    x = _arr(rng, 512)
+    y = np.asarray(quantize_dequantize_pallas(x, q_bits=q))
+    levels = 2 ** (q - 1) - 1
+    step = np.abs(x).max() / levels
+    assert np.abs(x - y).max() <= 0.5 * step + 1e-6
+
+
+def test_quantize_zero_roundtrip_exact():
+    x = np.zeros(33, np.float32)
+    assert np.abs(np.asarray(quantize_dequantize_pallas(x, 4))).max() == 0.0
+
+
+def test_wire_bits_accounting():
+    assert wire_bits(1000, 4) == 4 * 1000 + 32
+    assert wire_bits(0, 8) == 32
+
+
+# ---------------------------------------------------------------- lowrank
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([16, 64, 96]),
+    cols=st.sampled_from([16, 48, 128]),
+    r=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_lowrank_matches_ref(rows, cols, r, seed):
+    rng = np.random.RandomState(seed)
+    m = _arr(rng, rows, cols)
+    q0 = _arr(rng, cols, r)
+    p1, q1 = lowrank_iter_pallas(m, q0)
+    p2, q2 = ref.lowrank_iter(m, q0)
+    assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-3, atol=1e-3)
+
+
+def test_lowrank_p_is_orthonormal():
+    rng = np.random.RandomState(5)
+    m, q0 = _arr(rng, 64, 96), _arr(rng, 96, 8)
+    p, _ = lowrank_iter_pallas(m, q0)
+    gram = np.asarray(ref.matmul(np.asarray(p).T, np.asarray(p)))
+    assert_allclose(gram, np.eye(8), rtol=0, atol=1e-4)
+
+
+def test_lowrank_exact_for_lowrank_input():
+    # A rank-r matrix must be reconstructed (near) exactly at rank r.
+    rng = np.random.RandomState(9)
+    u, w = _arr(rng, 64, 4), _arr(rng, 4, 96)
+    m = u @ w
+    q0 = _arr(rng, 96, 4)
+    p, qn = ref.lowrank_iter(m, q0)
+    rec = np.asarray(ref.lowrank_reconstruct(p, qn))
+    assert_allclose(rec, m, rtol=1e-3, atol=1e-3)
+
+
+def test_lowrank_error_decreases_with_rank():
+    rng = np.random.RandomState(13)
+    m = _arr(rng, 64, 96)
+    errs = []
+    for r in (1, 4, 16, 64):
+        q0 = _arr(rng, 96, r)
+        p, qn = ref.lowrank_iter(m, q0)
+        rec = np.asarray(ref.lowrank_reconstruct(p, qn))
+        errs.append(np.linalg.norm(rec - m) / np.linalg.norm(m))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 1e-3  # full rank -> exact
+
+
+def test_wire_floats_accounting():
+    assert wire_floats(100, 50, 4) == 4 * 150

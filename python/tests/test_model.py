@@ -1,0 +1,168 @@
+"""L2 correctness: flat layout invariants, stage composition, training signal.
+
+The stage-composition tests are the load-bearing ones: the rust coordinator
+assumes (a) concat(stage params) == single params, and (b) chaining
+fwd_first -> fwd_mid* -> fwd_last reproduces fwd_single exactly.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.presets import PRESETS, param_count
+
+CFG = PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def fns():
+    return M.make_stage_fns(CFG, use_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def stage_inits():
+    kinds = ["first"] + ["mid"] * (CFG.pp_stages - 2) + ["last"]
+    return [M.init_stage_params(CFG, k, 1234 + i) for i, k in enumerate(kinds)]
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.RandomState(42)
+    tokens = rng.randint(0, CFG.vocab_size,
+                         size=(CFG.microbatch, CFG.seq_len)).astype(np.int32)
+    labels = rng.randint(0, CFG.vocab_size,
+                         size=(CFG.microbatch, CFG.seq_len)).astype(np.int32)
+    return tokens, labels
+
+
+# ----------------------------------------------------------- param layout
+
+
+def test_param_count_formula_matches_spec():
+    for cfg in PRESETS.values():
+        spec = M.stage_param_spec(cfg, "single")
+        assert M.spec_numel(spec) == param_count(cfg), cfg.name
+
+
+def test_stage_specs_concat_to_single():
+    for cfg in PRESETS.values():
+        kinds = ["first"] + ["mid"] * (cfg.pp_stages - 2) + ["last"]
+        total = sum(
+            M.spec_numel(M.stage_param_spec(cfg, k)) for k in kinds)
+        assert total == M.spec_numel(M.stage_param_spec(cfg, "single"))
+
+
+def test_offsets_are_contiguous():
+    spec = M.stage_param_spec(CFG, "single")
+    off = 0
+    for name, shape, o in M.spec_offsets(spec):
+        assert o == off
+        c = 1
+        for s in shape:
+            c *= s
+        off += c
+    assert off == M.spec_numel(spec)
+
+
+def test_unflatten_roundtrip():
+    spec = M.stage_param_spec(CFG, "mid")
+    n = M.spec_numel(spec)
+    flat = np.arange(n, dtype=np.float32)
+    params = M.unflatten(jnp.asarray(flat), spec)
+    rebuilt = np.concatenate(
+        [np.asarray(params[name]).reshape(-1) for name, _ in spec])
+    assert_allclose(rebuilt, flat)
+
+
+def test_init_deterministic_and_layernorm_ones():
+    a = M.init_stage_params(CFG, "single", 7)
+    b = M.init_stage_params(CFG, "single", 7)
+    assert_allclose(a, b)
+    params = M.unflatten(jnp.asarray(a), M.stage_param_spec(CFG, "single"))
+    assert_allclose(np.asarray(params["layer0.ln1_g"]), 1.0)
+    assert_allclose(np.asarray(params["layer0.bq"]), 0.0)
+
+
+# ------------------------------------------------------ stage composition
+
+
+def test_pipeline_fwd_equals_single(fns, stage_inits, batch):
+    tokens, labels = batch
+    single = jnp.asarray(np.concatenate(stage_inits))
+    loss_single = fns["eval_single"](single, tokens, labels)[0]
+
+    acts = fns["fwd_first"](jnp.asarray(stage_inits[0]), tokens)[0]
+    for mid in stage_inits[1:-1]:
+        acts = fns["fwd_mid"](jnp.asarray(mid), acts)[0]
+    loss_pipe = fns["fwd_last"](jnp.asarray(stage_inits[-1]), acts, labels)[0]
+    assert_allclose(float(loss_pipe), float(loss_single), rtol=1e-5)
+
+
+def test_pipeline_bwd_equals_single(fns, stage_inits, batch):
+    tokens, labels = batch
+    single = jnp.asarray(np.concatenate(stage_inits))
+    loss, g_single = fns["step_single"](single, tokens, labels)
+
+    # Forward chain, stashing stage inputs.
+    inputs = [tokens]
+    acts = fns["fwd_first"](jnp.asarray(stage_inits[0]), tokens)[0]
+    for mid in stage_inits[1:-1]:
+        inputs.append(acts)
+        acts = fns["fwd_mid"](jnp.asarray(mid), acts)[0]
+    inputs.append(acts)
+
+    # Backward chain.
+    grads = [None] * len(stage_inits)
+    loss_p, gp_last, ga = fns["bwd_last"](
+        jnp.asarray(stage_inits[-1]), inputs[-1], labels)
+    grads[-1] = gp_last
+    for i in range(len(stage_inits) - 2, 0, -1):
+        gp, ga = fns["bwd_mid"](jnp.asarray(stage_inits[i]), inputs[i], ga)
+        grads[i] = gp
+    grads[0] = fns["bwd_first"](jnp.asarray(stage_inits[0]), tokens, ga)[0]
+
+    g_pipe = np.concatenate([np.asarray(g).reshape(-1) for g in grads])
+    assert_allclose(float(loss_p), float(loss), rtol=1e-5)
+    assert_allclose(g_pipe, np.asarray(g_single), rtol=1e-3, atol=1e-5)
+
+
+def test_loss_is_lnV_at_init_scale(fns, stage_inits, batch):
+    # With near-zero logits the cross entropy starts near ln(vocab).
+    tokens, labels = batch
+    single = jnp.asarray(np.concatenate(stage_inits))
+    loss = float(fns["eval_single"](single, tokens, labels)[0])
+    assert abs(loss - np.log(CFG.vocab_size)) < 1.0
+
+
+# ------------------------------------------------------- training signal
+
+
+def test_adamw_steps_reduce_loss(fns, stage_inits, batch):
+    tokens, labels = batch
+    p = jnp.asarray(np.concatenate(stage_inits))
+    n = p.shape[0]
+    m = jnp.zeros(n)
+    v = jnp.zeros(n)
+    loss0 = None
+    for t in range(1, 9):
+        loss, g = fns["step_single"](p, tokens, labels)
+        if loss0 is None:
+            loss0 = float(loss)
+        p, m, v = M.adamw_step(p, g, m, v, jnp.float32(t),
+                               jnp.float32(3e-3), jnp.float32(0.0))
+    loss_end, _ = fns["step_single"](p, tokens, labels)
+    assert float(loss_end) < loss0 - 0.5
+
+
+def test_pallas_model_matches_ref_model(batch):
+    tokens, labels = batch
+    fns_ref = M.make_stage_fns(CFG, use_pallas=False)
+    fns_pl = M.make_stage_fns(CFG, use_pallas=True)
+    p = jnp.asarray(M.init_stage_params(CFG, "single", 99))
+    l_ref, g_ref = fns_ref["step_single"](p, tokens, labels)
+    l_pl, g_pl = fns_pl["step_single"](p, tokens, labels)
+    assert_allclose(float(l_pl), float(l_ref), rtol=1e-4)
+    assert_allclose(np.asarray(g_pl), np.asarray(g_ref),
+                    rtol=1e-3, atol=1e-4)

@@ -1,0 +1,76 @@
+"""Optimizer-program algebra: AdamW vs a literal numpy transcription, and
+the DiLoCo outer Nesterov update, including the dual-optimizer interplay
+the rust trainer relies on (outer step applied to the *delayed* delta)."""
+
+import numpy as np
+import jax.numpy as jnp
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+
+def _np_adamw(p, g, m, v, t, lr, wd, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** t)
+    vhat = v / (1 - b2 ** t)
+    p = p - lr * (mhat / (np.sqrt(vhat) + eps) + wd * p)
+    return p, m, v
+
+
+def test_adamw_matches_numpy():
+    rng = np.random.RandomState(0)
+    n = 257
+    p = rng.normal(size=n).astype(np.float32)
+    m = np.zeros(n, np.float32)
+    v = np.zeros(n, np.float32)
+    pj, mj, vj = jnp.asarray(p), jnp.asarray(m), jnp.asarray(v)
+    for t in range(1, 6):
+        g = rng.normal(size=n).astype(np.float32)
+        p, m, v = _np_adamw(p, g, m, v, t, 1e-3, 0.01)
+        pj, mj, vj = M.adamw_step(pj, jnp.asarray(g), mj, vj,
+                                  jnp.float32(t), jnp.float32(1e-3),
+                                  jnp.float32(0.01))
+        assert_allclose(np.asarray(pj), p, rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(vj), v, rtol=1e-5, atol=1e-7)
+
+
+def test_adamw_bias_correction_first_step():
+    # At t=1 with zero state, mhat == g exactly, so p' = p - lr*sign-ish(g).
+    p = jnp.zeros(4)
+    g = jnp.asarray(np.array([1.0, -1.0, 2.0, 0.0], np.float32))
+    p1, _, _ = M.adamw_step(p, g, jnp.zeros(4), jnp.zeros(4),
+                            jnp.float32(1.0), jnp.float32(0.1),
+                            jnp.float32(0.0))
+    # mhat/ (sqrt(vhat)+eps) == sign(g) for any nonzero g at t=1.
+    assert_allclose(np.asarray(p1), [-0.1, 0.1, -0.1, 0.0],
+                    rtol=1e-4, atol=1e-5)
+
+
+def test_nesterov_momentum_accumulates():
+    n = 8
+    p = jnp.zeros(n)
+    buf = jnp.zeros(n)
+    delta = jnp.ones(n)
+    lr, mu = jnp.float32(1.0), jnp.float32(0.9)
+    p1, buf1 = M.nesterov_step(p, delta, buf, lr, mu)
+    # buf' = mu*0 + 1 = 1 ; p' = 0 - 1*(1 + 0.9*1) = -1.9
+    assert_allclose(np.asarray(buf1), 1.0)
+    assert_allclose(np.asarray(p1), -1.9)
+    p2, buf2 = M.nesterov_step(p1, delta, buf1, lr, mu)
+    # buf'' = 0.9 + 1 = 1.9 ; p'' = -1.9 - (1 + 0.9*1.9) = -4.61
+    assert_allclose(np.asarray(buf2), 1.9)
+    assert_allclose(np.asarray(p2), -4.61, rtol=1e-6)
+
+
+def test_nesterov_applies_descent_direction():
+    # delta = theta_old - theta_new of a loss-reducing local run must move
+    # the outer params toward theta_new.
+    rng = np.random.RandomState(1)
+    p_old = rng.normal(size=16).astype(np.float32)
+    p_new = p_old - 0.1  # local training moved params down
+    delta = p_old - p_new  # = +0.1
+    p1, _ = M.nesterov_step(jnp.asarray(p_old), jnp.asarray(delta),
+                            jnp.zeros(16), jnp.float32(0.7),
+                            jnp.float32(0.9))
+    assert np.all(np.asarray(p1) < p_old)  # moved in the local direction

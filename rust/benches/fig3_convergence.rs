@@ -1,0 +1,214 @@
+//! Figure 3 reproduction: loss curves for AllReduce / DiLoCoX /
+//! OpenDiLoCo / CocktailSGD with the paper's hyperparameter *ratios* on
+//! the `small` preset (the 1.3B/107B substitution — DESIGN.md).
+//!
+//! Part (a) mirrors the OPT-1.3B setting (DiLoCoX = Int4 + H, OpenDiLoCo =
+//! fp16 + 4H, Cocktail = rand 0.1 / topk 0.08 / Int4).
+//! Part (b) mirrors the Qwen1.5-107B setting (DiLoCoX adds low-rank,
+//! Cocktail topk drops to 0.04; OpenDiLoCo is skipped = the paper's OOM).
+//!
+//! Scale knobs (defaults sized for a single CPU core):
+//!   DILOCOX_BENCH_OUTER   outer steps per algorithm   [default 12]
+//!   DILOCOX_BENCH_H       DiLoCoX local steps H₁      [default 10]
+//! Total inner steps = OUTER × H; the paper's 4000-step runs correspond
+//! to OUTER=32, H=125.
+
+use dilocox::config::{Algo, ExperimentConfig};
+use dilocox::metrics::Table;
+use dilocox::report::paper;
+use dilocox::runtime::Runtime;
+use dilocox::train::{run_with_runtime, RunOpts, TrainOutcome};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn base_cfg(algo: Algo, dir: &str, outer: usize, h: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default_for("small", algo);
+    cfg.artifacts_dir = dir.to_string();
+    cfg.train.inner_lr = 2e-3;
+    // Outer settings tuned for the short proxy horizon: the paper's
+    // 0.7/0.9 Nesterov assumes H=125 and thousands of steps; at a 120-step
+    // budget momentum 0.9 compounds over consistent early-training deltas
+    // and diverges (recorded in EXPERIMENTS.md §Notes).
+    cfg.train.outer_lr = 0.5;
+    cfg.train.outer_momentum = 0.5;
+    cfg.train.seed = 1234;
+    // Same total inner-step budget for every algorithm (paper: fixed
+    // 4000 steps).
+    match algo {
+        Algo::AllReduce | Algo::CocktailSgd => {
+            cfg.train.outer_steps = outer;
+            cfg.train.local_steps = h;
+        }
+        Algo::DiLoCoX => {
+            cfg.train.outer_steps = outer;
+            cfg.train.local_steps = h;
+        }
+        Algo::OpenDiLoCo => {
+            // Paper ratio: H_od = 4 × H_dx (500 vs 125) → 4x fewer syncs.
+            cfg.train.outer_steps = (outer / 4).max(1);
+            cfg.train.local_steps = h * 4;
+        }
+    }
+    cfg
+}
+
+fn run(cfg: &ExperimentConfig, rt: &Runtime) -> TrainOutcome {
+    run_with_runtime(cfg, &RunOpts { quiet: true, eval_batches: 4, ..Default::default() }, rt)
+        .expect("bench run failed")
+}
+
+fn curve_str(out: &TrainOutcome) -> String {
+    out.eval_curve
+        .iter()
+        .map(|(s, l)| format!("{s}:{l:.3}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+fn main() {
+    let dir = format!("{}/artifacts/small", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&dir).exists() {
+        eprintln!("artifacts/small missing — run `make artifacts`");
+        std::process::exit(1);
+    }
+    let outer = env_usize("DILOCOX_BENCH_OUTER", 12);
+    let h = env_usize("DILOCOX_BENCH_H", 10);
+    let rt = Runtime::load(&dir).unwrap();
+    rt.precompile(&["step_single", "eval_single"]).unwrap();
+    println!(
+        "fig3_convergence: small preset, {} total inner steps per algorithm\n",
+        outer * h
+    );
+
+    // ---------------- part (a): OPT-1.3B setting -------------------------
+    println!("== Figure 3(a) proxy — OPT-1.3B hyperparameter ratios ==");
+    let mut t = Table::new(&[
+        "algorithm",
+        "final eval loss",
+        "paper loss@4k",
+        "gap vs AllReduce (paper)",
+        "wire total",
+    ]);
+    let mut ar_loss = f32::NAN;
+    let mut results_a = Vec::new();
+    for algo in [Algo::AllReduce, Algo::DiLoCoX, Algo::OpenDiLoCo, Algo::CocktailSgd] {
+        let mut cfg = base_cfg(algo, &dir, outer, h);
+        if algo == Algo::DiLoCoX {
+            // 1.3B row: Int4 only, no low-rank, no adaptive.
+            cfg.compression.rank = 0;
+            cfg.compression.adaptive = false;
+        }
+        let out = run(&cfg, &rt);
+        let loss = out.metrics.final_eval_loss.unwrap();
+        if algo == Algo::AllReduce {
+            ar_loss = loss;
+        }
+        let paper_loss = paper::FIG3A_LOSS
+            .iter()
+            .find(|(n, _)| *n == algo.name())
+            .map(|(_, v)| *v)
+            .unwrap();
+        let paper_gap = paper_loss - paper::FIG3A_LOSS[0].1;
+        t.row(&[
+            algo.name().to_string(),
+            format!("{loss:.4}"),
+            format!("{paper_loss:.2}"),
+            format!("{:+.3} ({:+.2})", loss - ar_loss, paper_gap),
+            dilocox::util::fmt_bytes(out.metrics.total_wire_bytes()),
+        ]);
+        results_a.push((algo, out));
+    }
+    println!("{}", t.render());
+    println!("loss curves (inner step : eval loss)");
+    for (algo, out) in &results_a {
+        println!("  {:<11} {}", algo.name(), curve_str(out));
+    }
+
+    // ---------------- part (b): Qwen1.5-107B setting ----------------------
+    println!("\n== Figure 3(b) proxy — Qwen1.5-107B hyperparameter ratios ==");
+    println!("(OpenDiLoCo omitted: OOM at 107B, see fig4/memory)");
+    let mut t = Table::new(&[
+        "algorithm",
+        "final eval loss",
+        "paper loss@4k",
+        "gap vs AllReduce (paper)",
+        "compression",
+    ]);
+    let mut ar_loss = f32::NAN;
+    let mut results_b = Vec::new();
+    for algo in [Algo::AllReduce, Algo::DiLoCoX, Algo::CocktailSgd] {
+        let mut cfg = base_cfg(algo, &dir, outer, h);
+        if algo == Algo::DiLoCoX {
+            // 107B row: low-rank (≈2x on the proxy's width) + Int4 +
+            // adaptive controller with window c=5 (paper §4.1.3).
+            cfg.compression.rank = 64; // d_model/2 → the paper's "≈2x"
+            cfg.compression.adaptive = true;
+            cfg.compression.rank_window = 5;
+        }
+        if algo == Algo::CocktailSgd {
+            cfg.compression.topk_ratio = 0.04;
+        }
+        let out = run(&cfg, &rt);
+        let loss = out.metrics.final_eval_loss.unwrap();
+        if algo == Algo::AllReduce {
+            ar_loss = loss;
+        }
+        let paper_loss = paper::FIG3B_LOSS
+            .iter()
+            .find(|(n, _)| *n == algo.name())
+            .map(|(_, v)| *v)
+            .unwrap();
+        let paper_gap = paper_loss - paper::FIG3B_LOSS[0].1;
+        let ratio = out
+            .metrics
+            .records
+            .iter()
+            .rev()
+            .find(|r| r.wire_bytes > 0)
+            .map(|r| r.compression_ratio)
+            .unwrap_or(1.0);
+        t.row(&[
+            algo.name().to_string(),
+            format!("{loss:.4}"),
+            format!("{paper_loss:.2}"),
+            format!("{:+.3} ({:+.2})", loss - ar_loss, paper_gap),
+            format!("{ratio:.0}x/sync"),
+        ]);
+        results_b.push((algo, out));
+    }
+    println!("{}", t.render());
+    println!("loss curves (inner step : eval loss)");
+    for (algo, out) in &results_b {
+        println!("  {:<11} {}", algo.name(), curve_str(out));
+    }
+
+    // Shape verdicts (the reproduction claim).
+    let loss_of = |rs: &[(Algo, TrainOutcome)], a: Algo| {
+        rs.iter()
+            .find(|(x, _)| *x == a)
+            .unwrap()
+            .1
+            .metrics
+            .final_eval_loss
+            .unwrap()
+    };
+    let a_ar = loss_of(&results_a, Algo::AllReduce);
+    let a_dx = loss_of(&results_a, Algo::DiLoCoX);
+    let a_od = loss_of(&results_a, Algo::OpenDiLoCo);
+    let a_ck = loss_of(&results_a, Algo::CocktailSgd);
+    println!("\nshape checks (paper ordering: AR <= DX < OD, CK):");
+    println!(
+        "  [{}] DiLoCoX within 1.0 of AllReduce   ({a_dx:.3} vs {a_ar:.3})",
+        if a_dx <= a_ar + 1.0 { "ok" } else { "MISS" }
+    );
+    println!(
+        "  [{}] DiLoCoX within 1.0 of OpenDiLoCo  ({a_dx:.3} vs {a_od:.3})",
+        if a_dx <= a_od + 1.0 { "ok" } else { "MISS" }
+    );
+    println!(
+        "  [{}] DiLoCoX beats CocktailSGD         ({a_dx:.3} vs {a_ck:.3})",
+        if a_dx <= a_ck { "ok" } else { "MISS" }
+    );
+}

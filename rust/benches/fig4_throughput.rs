@@ -1,0 +1,85 @@
+//! Figure 4 reproduction: end-to-end throughput of AllReduce, OpenDiLoCo,
+//! CocktailSGD and DiLoCoX at OPT-1.3B and Qwen1.5-107B scale over a
+//! 1 Gbps WAN — DES simulation with the A800 compute model (DESIGN.md).
+//!
+//!     cargo bench --bench fig4_throughput
+
+use dilocox::config::Algo;
+use dilocox::report::{self, paper, rel_dev};
+use dilocox::sim::{self, ScaleConfig};
+
+fn main() {
+    let rounds = 16;
+    let mut misses = 0;
+
+    for scale in [ScaleConfig::opt_1_3b(), ScaleConfig::qwen_107b()] {
+        let rows = sim::figure4_row(&scale, rounds);
+        let paper_rows: &[(&str, f64)] = if scale.params > 10e9 {
+            &paper::FIG4_107B
+        } else {
+            &paper::FIG4_1_3B
+        };
+        println!("{}", report::figure4_table(&scale.name, paper_rows, &rows));
+
+        let get = |a: Algo| rows.iter().find(|r| r.algo == a).unwrap();
+        let ar = get(Algo::AllReduce);
+        let dx = get(Algo::DiLoCoX);
+        let ck = get(Algo::CocktailSgd);
+        let od = get(Algo::OpenDiLoCo);
+
+        let speedup = dx.tokens_per_sec / ar.tokens_per_sec;
+        let paper_speedup = paper_rows
+            .iter()
+            .find(|(n, _)| *n == "DiLoCoX")
+            .unwrap()
+            .1
+            / paper_rows.iter().find(|(n, _)| *n == "AllReduce").unwrap().1;
+        println!("shape checks:");
+        let mut check = |name: &str, ok: bool| {
+            println!("  [{}] {name}", if ok { "ok" } else { "MISS" });
+            if !ok {
+                misses += 1;
+            }
+        };
+        check(
+            &format!(
+                "DiLoCoX vs AllReduce speedup {speedup:.0}x (paper {paper_speedup:.0}x, within 2x band)"
+            ),
+            speedup > paper_speedup / 2.0 && speedup < paper_speedup * 2.0,
+        );
+        check(
+            &format!(
+                "DiLoCoX > CocktailSGD ({:.0} vs {:.0})",
+                dx.tokens_per_sec, ck.tokens_per_sec
+            ),
+            dx.tokens_per_sec > ck.tokens_per_sec,
+        );
+        if scale.params > 10e9 {
+            check("OpenDiLoCo OOMs at 107B", od.oom);
+            check(
+                &format!(
+                    "AllReduce ~10 tok/s (paper 10.4, got {:.1})",
+                    ar.tokens_per_sec
+                ),
+                rel_dev(ar.tokens_per_sec, 10.4) < 0.5,
+            );
+        } else {
+            check("OpenDiLoCo fits at 1.3B", !od.oom);
+        }
+        println!();
+    }
+
+    println!(
+        "headline: DiLoCoX @107B = {:.0}x AllReduce (paper claims 357x)",
+        {
+            let rows = sim::figure4_row(&ScaleConfig::qwen_107b(), rounds);
+            let ar = rows.iter().find(|r| r.algo == Algo::AllReduce).unwrap();
+            let dx = rows.iter().find(|r| r.algo == Algo::DiLoCoX).unwrap();
+            dx.tokens_per_sec / ar.tokens_per_sec
+        }
+    );
+    if misses > 0 {
+        eprintln!("{misses} shape check(s) missed");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,96 @@
+//! Perf probe (§Perf in EXPERIMENTS.md): micro-measurements of the three
+//! hot paths — PJRT step execution (L2 artifact through the L3 runtime),
+//! the compression reducer (L3-native PowerSGD), and the DES simulator.
+//!
+//!     cargo bench --bench perf_probe
+//!
+//! Iterations are small (one shared CPU core); numbers are for relative
+//! tracking between optimization steps, not absolute benchmarking.
+
+use dilocox::compress::{GroupReducer, Method};
+use dilocox::runtime::Runtime;
+use dilocox::sim::{self, ScaleConfig, SimAlgo};
+use dilocox::util::rng::Pcg32;
+use std::time::Instant;
+
+fn main() {
+    let dir = format!("{}/artifacts/small", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&dir).exists() {
+        eprintln!("artifacts/small missing — run `make artifacts`");
+        std::process::exit(1);
+    }
+
+    // ---- L2/L3: step_single execution ------------------------------------
+    let rt = Runtime::load(&dir).unwrap();
+    rt.precompile(&["step_single", "eval_single"]).unwrap();
+    let man = &rt.manifest;
+    let params = man.read_f32(&man.init["single"].file).unwrap();
+    let n_tok = man.dims.microbatch * man.dims.seq_len;
+    let tokens = vec![3i32; n_tok];
+    let labels = vec![4i32; n_tok];
+    // warmup
+    rt.step_single(&params, &tokens, &labels).unwrap();
+    let iters = 20;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        rt.step_single(&params, &tokens, &labels).unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let st = rt.stats();
+    let (execs, exec_secs) = st.per_program["step_single"];
+    println!(
+        "step_single (small, {} params): {:.2} ms/call wall, {:.2} ms/call in PJRT exec ({} calls), host overhead {:.1}%",
+        man.param_count,
+        1e3 * wall / iters as f64,
+        1e3 * exec_secs / execs as f64,
+        execs,
+        100.0 * (wall / iters as f64 - exec_secs / execs as f64)
+            / (wall / iters as f64)
+    );
+    println!(
+        "compile: {:.2} s total for {} programs",
+        st.compile_seconds,
+        st.per_program.len()
+    );
+
+    // ---- L3: compression reducer ------------------------------------------
+    let spec = man.param_specs["single"].clone();
+    let mut rng = Pcg32::seed_from(1);
+    let mk = |rng: &mut Pcg32| {
+        let mut v = vec![0.0f32; man.param_count];
+        rng.fill_normal(&mut v, 0.0, 1e-2);
+        v
+    };
+    let deltas = vec![mk(&mut rng), mk(&mut rng)];
+    for (label, method) in [
+        ("lowrank r=64 + int4", Method::LowRankQuant { rank: 64, q_bits: 4 }),
+        ("int4 quantize", Method::Quant { q_bits: 4 }),
+        ("cocktail 0.1/0.08/4", Method::Cocktail { random_ratio: 0.1, topk_ratio: 0.08, q_bits: 4 }),
+    ] {
+        let mut red = GroupReducer::new(method, 7);
+        red.reduce(&deltas, &spec, 0); // warm (basis init)
+        let iters = 5;
+        let t0 = Instant::now();
+        for s in 0..iters {
+            red.reduce(&deltas, &spec, s + 1);
+        }
+        println!(
+            "reduce[{label}] (D=2, {} params): {:.1} ms/sync",
+            man.param_count,
+            1e3 * t0.elapsed().as_secs_f64() / iters as f64
+        );
+    }
+
+    // ---- DES simulator ------------------------------------------------------
+    let scale = ScaleConfig::qwen_107b();
+    let algo = SimAlgo::paper_setting(dilocox::config::Algo::DiLoCoX, &scale);
+    let t0 = Instant::now();
+    let iters = 20;
+    for _ in 0..iters {
+        sim::simulate(&scale, &algo, 32);
+    }
+    println!(
+        "DES simulate (107B, 80 stages x 160 microbatches, 32 outer rounds): {:.1} ms/run",
+        1e3 * t0.elapsed().as_secs_f64() / iters as f64
+    );
+}

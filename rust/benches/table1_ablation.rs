@@ -1,0 +1,134 @@
+//! Table 1 reproduction — the DiLoCoX ablation at Qwen1.5-107B:
+//!   loss column      → real-numerics runs on the `small` preset with the
+//!                      107B hyperparameter ratios (same substitution as
+//!                      Fig 3(b); DESIGN.md),
+//!   throughput column → DES simulation at the true 107B scale.
+//!
+//! Scale knobs: DILOCOX_BENCH_OUTER [12], DILOCOX_BENCH_H [10].
+//!
+//!     cargo bench --bench table1_ablation
+
+use dilocox::config::{Algo, ExperimentConfig};
+use dilocox::metrics::Table;
+use dilocox::report::paper;
+use dilocox::runtime::Runtime;
+use dilocox::sim;
+use dilocox::train::{run_with_runtime, RunOpts};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let dir = format!("{}/artifacts/small", env!("CARGO_MANIFEST_DIR"));
+    if !std::path::Path::new(&dir).exists() {
+        eprintln!("artifacts/small missing — run `make artifacts`");
+        std::process::exit(1);
+    }
+    let outer = env_usize("DILOCOX_BENCH_OUTER", 12);
+    let h = env_usize("DILOCOX_BENCH_H", 10);
+    let rt = Runtime::load(&dir).unwrap();
+    rt.precompile(&["step_single", "eval_single"]).unwrap();
+
+    let mk = |name: &str| -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default_for("small", Algo::DiLoCoX);
+        cfg.artifacts_dir = dir.clone();
+        cfg.train.outer_steps = outer;
+        cfg.train.local_steps = h;
+        cfg.train.inner_lr = 2e-3;
+        cfg.train.outer_lr = 0.5;
+        cfg.train.outer_momentum = 0.5;
+        cfg.compression.rank = 64;
+        cfg.compression.adaptive = true;
+        cfg.compression.rank_window = 5;
+        match name {
+            "Full DiLoCoX" => {}
+            "w/o Overlap" => cfg.train.overlap = false,
+            "w/o Compression" => {
+                cfg.train.overlap = false;
+                cfg.compression.enabled = false;
+                cfg.compression.adaptive = false;
+            }
+            "AllReduce" => {
+                cfg.algo = Algo::AllReduce;
+                cfg.train.overlap = false;
+                cfg.compression = dilocox::config::CompressionConfig::none();
+                cfg.train.local_steps = h; // same inner budget
+            }
+            _ => unreachable!(),
+        }
+        cfg
+    };
+
+    // Throughput column from the 107B DES.
+    let sim_rows = sim::table1_throughput(16);
+
+    println!(
+        "Table 1 — Qwen1.5-107B ablation (loss: small-preset proxy, {} inner steps; throughput: 107B DES)\n",
+        outer * h
+    );
+    let mut t = Table::new(&[
+        "Configuration",
+        "loss (proxy)",
+        "paper loss",
+        "tok/s (sim)",
+        "paper tok/s",
+    ]);
+    let opts = RunOpts { quiet: true, eval_batches: 4, ..Default::default() };
+    let mut losses = Vec::new();
+    for (name, paper_loss, paper_tps) in paper::TABLE1.map(|(n, l, p)| (n, l, p)) {
+        let cfg = mk(name);
+        let out = run_with_runtime(&cfg, &opts, &rt).expect("run failed");
+        let loss = out.metrics.final_eval_loss.unwrap();
+        let sim_tps = sim_rows
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, r)| r.tokens_per_sec)
+            .unwrap();
+        t.row(&[
+            name.to_string(),
+            format!("{loss:.4}"),
+            format!("{paper_loss:.2}"),
+            dilocox::report::fmt_tps(sim_tps),
+            dilocox::report::fmt_tps(paper_tps),
+        ]);
+        losses.push((name, loss, sim_tps));
+    }
+    println!("{}", t.render());
+
+    // Shape checks: loss monotone ordering AllReduce <= w/o Comp <= DiLoCoX
+    // variants; throughput strictly the reverse.
+    let get = |n: &str| losses.iter().find(|(x, _, _)| *x == n).unwrap();
+    let full = get("Full DiLoCoX");
+    let noov = get("w/o Overlap");
+    let nocmp = get("w/o Compression");
+    let ar = get("AllReduce");
+    let mut misses = 0;
+    let mut check = |name: &str, ok: bool| {
+        println!("  [{}] {name}", if ok { "ok" } else { "MISS" });
+        if !ok {
+            misses += 1;
+        }
+    };
+    println!("shape checks (paper: 4.20/4.15/4.02/3.90 loss, 3728/2197/1168/10.4 tok/s):");
+    check(
+        &format!("AllReduce best loss ({:.3})", ar.1),
+        ar.1 <= full.1 + 0.05 && ar.1 <= nocmp.1 + 0.05,
+    );
+    check(
+        &format!("w/o Compression <= w/o Overlap + 0.2 ({:.3} vs {:.3})", nocmp.1, noov.1),
+        nocmp.1 <= noov.1 + 0.2,
+    );
+    check(
+        &format!("Full within 1.5 of AllReduce ({:.3} vs {:.3})", full.1, ar.1),
+        full.1 <= ar.1 + 1.5,
+    );
+    check(
+        "throughput strictly decreasing Full > w/o Ov > w/o Comp > AllReduce",
+        full.2 > noov.2 && noov.2 > nocmp.2 && nocmp.2 > ar.2,
+    );
+    if misses > 0 {
+        eprintln!("{misses} shape check(s) missed");
+        std::process::exit(1);
+    }
+}

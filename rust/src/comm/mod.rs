@@ -1,0 +1,83 @@
+//! Collective communication: the threaded chunked ring AllReduce
+//! ([`ring`]) used by the coordinator's worker processes, plus the wire
+//! cost model shared with the throughput simulator.
+
+pub mod ring;
+
+pub use ring::{build_ring, ring_wire_bytes_per_worker, ByteMeter, RingMember};
+
+use crate::config::NetworkConfig;
+
+/// Time for one ring all-reduce of `payload` bytes per worker across the
+/// WAN: each of the 2(C−1) hops moves payload/C bytes over the slowest
+/// inter-cluster link, plus per-hop latency.  (§2.4.1's model.)
+pub fn ring_allreduce_seconds(payload: u64, net: &NetworkConfig) -> f64 {
+    let c = net.clusters;
+    if c <= 1 {
+        return 0.0;
+    }
+    let hops = 2 * (c - 1);
+    let chunk = payload as f64 / c as f64;
+    let bw = net.inter_bw_gbps * 1e9 / 8.0;
+    hops as f64 * (chunk / bw + net.latency_ms * 1e-3)
+}
+
+/// Parameter-server exchange time (TopK/Cocktail path): every cluster
+/// pushes `up` bytes and pulls `down` bytes over its WAN link, serialized
+/// at the server's link.
+pub fn parameter_server_seconds(up: u64, down: u64, net: &NetworkConfig) -> f64 {
+    let c = net.clusters;
+    if c <= 1 {
+        return 0.0;
+    }
+    let bw = net.inter_bw_gbps * 1e9 / 8.0;
+    // server link carries (c-1) uploads then (c-1) downloads.
+    let xfer = ((c - 1) as f64) * (up as f64 + down as f64) / bw;
+    xfer + 2.0 * net.latency_ms * 1e-3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(c: usize, gbps: f64) -> NetworkConfig {
+        NetworkConfig {
+            clusters: c,
+            inter_bw_gbps: gbps,
+            intra_bw_gbps: 100.0,
+            latency_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn paper_2_4_1_time_reproduced() {
+        // 100B fp32 across 3 clusters at 1 Gbps ≈ 1.18 h.
+        let payload = 100_000_000_000u64 * 4;
+        let secs = ring_allreduce_seconds(payload, &net(3, 1.0));
+        let hours = secs / 3600.0;
+        assert!((hours - 1.185).abs() < 0.01, "hours={hours}");
+    }
+
+    #[test]
+    fn single_cluster_is_free() {
+        assert_eq!(ring_allreduce_seconds(1_000_000, &net(1, 1.0)), 0.0);
+        assert_eq!(parameter_server_seconds(10, 10, &net(1, 1.0)), 0.0);
+    }
+
+    #[test]
+    fn time_scales_inversely_with_bandwidth() {
+        let p = 1_000_000_000u64;
+        let t1 = ring_allreduce_seconds(p, &net(2, 1.0));
+        let t10 = ring_allreduce_seconds(p, &net(2, 10.0));
+        assert!((t1 / t10 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_adds_per_hop() {
+        let mut n = net(4, 1.0);
+        n.latency_ms = 50.0;
+        let t = ring_allreduce_seconds(0, &n);
+        // 2*(4-1) hops * 50 ms
+        assert!((t - 0.3).abs() < 1e-9, "t={t}");
+    }
+}

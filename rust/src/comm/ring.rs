@@ -1,0 +1,232 @@
+//! Chunked ring AllReduce over message channels (Baidu 2017): the actual
+//! collective the coordinator's worker threads run, with per-hop byte
+//! metering.  Reduce-scatter (C−1 hops) then all-gather (C−1 hops); each
+//! worker sends 2·(C−1)/C·payload bytes total — the §2.4.1 factor.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Byte meter shared by all ring members (one per "link budget").
+#[derive(Default, Debug)]
+pub struct ByteMeter {
+    pub sent: AtomicU64,
+    pub messages: AtomicU64,
+}
+
+impl ByteMeter {
+    pub fn add(&self, bytes: u64) {
+        self.sent.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+}
+
+/// One worker's view of the ring: a sender to its successor and a receiver
+/// from its predecessor.
+pub struct RingMember {
+    pub rank: usize,
+    pub size: usize,
+    pub tx_next: Sender<Vec<f32>>,
+    pub rx_prev: Receiver<Vec<f32>>,
+    pub meter: Arc<ByteMeter>,
+}
+
+/// Build a ring of `size` members (move each into its worker thread).
+pub fn build_ring(size: usize) -> Vec<RingMember> {
+    let meter = Arc::new(ByteMeter::default());
+    let mut txs = Vec::with_capacity(size);
+    let mut rxs = Vec::with_capacity(size);
+    for _ in 0..size {
+        let (tx, rx) = std::sync::mpsc::channel::<Vec<f32>>();
+        txs.push(tx);
+        rxs.push(Some(rx));
+    }
+    let mut members = Vec::with_capacity(size);
+    for rank in 0..size {
+        members.push(RingMember {
+            rank,
+            size,
+            // member r sends to r+1, so it holds tx of channel (r+1)'s rx.
+            tx_next: txs[(rank + 1) % size].clone(),
+            rx_prev: rxs[rank].take().unwrap(),
+            meter: Arc::clone(&meter),
+        });
+    }
+    members
+}
+
+impl RingMember {
+    /// In-place ring all-reduce (sum) of `buf` across all members.
+    /// Every member must call this with an equal-length buffer.
+    pub fn allreduce_sum(&self, buf: &mut [f32]) -> anyhow::Result<()> {
+        let c = self.size;
+        if c == 1 {
+            return Ok(());
+        }
+        let n = buf.len();
+        // Chunk boundaries (c chunks, last absorbs the remainder).
+        let bounds: Vec<(usize, usize)> = (0..c)
+            .map(|i| {
+                let lo = i * n / c;
+                let hi = (i + 1) * n / c;
+                (lo, hi)
+            })
+            .collect();
+
+        // Phase 1: reduce-scatter.  At step s, send chunk (rank - s) and
+        // accumulate incoming chunk (rank - s - 1).
+        for s in 0..c - 1 {
+            let send_idx = (self.rank + c - s) % c;
+            let (lo, hi) = bounds[send_idx];
+            let payload = buf[lo..hi].to_vec();
+            self.meter.add(4 * payload.len() as u64);
+            self.tx_next
+                .send(payload)
+                .map_err(|_| anyhow::anyhow!("ring peer hung up (send)"))?;
+            let recv_idx = (self.rank + c - s - 1) % c;
+            let incoming = self
+                .rx_prev
+                .recv()
+                .map_err(|_| anyhow::anyhow!("ring peer hung up (recv)"))?;
+            let (lo, hi) = bounds[recv_idx];
+            for (dst, src) in buf[lo..hi].iter_mut().zip(&incoming) {
+                *dst += src;
+            }
+        }
+        // Phase 2: all-gather.  Send the chunk just completed.
+        for s in 0..c - 1 {
+            let send_idx = (self.rank + 1 + c - s) % c;
+            let (lo, hi) = bounds[send_idx];
+            let payload = buf[lo..hi].to_vec();
+            self.meter.add(4 * payload.len() as u64);
+            self.tx_next
+                .send(payload)
+                .map_err(|_| anyhow::anyhow!("ring peer hung up (send)"))?;
+            let recv_idx = (self.rank + c - s) % c;
+            let incoming = self
+                .rx_prev
+                .recv()
+                .map_err(|_| anyhow::anyhow!("ring peer hung up (recv)"))?;
+            let (lo, hi) = bounds[recv_idx];
+            buf[lo..hi].copy_from_slice(&incoming);
+        }
+        Ok(())
+    }
+
+    /// Mean across members.
+    pub fn allreduce_mean(&self, buf: &mut [f32]) -> anyhow::Result<()> {
+        self.allreduce_sum(buf)?;
+        let inv = 1.0 / self.size as f32;
+        for v in buf.iter_mut() {
+            *v *= inv;
+        }
+        Ok(())
+    }
+}
+
+/// Wire bytes per worker for a ring all-reduce of `payload` bytes across
+/// `c` members: 2 · (c−1)/c · payload (paper §2.4.1).
+pub fn ring_wire_bytes_per_worker(payload: u64, c: usize) -> u64 {
+    if c <= 1 {
+        0
+    } else {
+        2 * (c as u64 - 1) * payload / c as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn run_ring(c: usize, n: usize) -> (Vec<Vec<f32>>, u64) {
+        let members = build_ring(c);
+        let mut inputs: Vec<Vec<f32>> = Vec::new();
+        let mut rng = Pcg32::seed_from(7);
+        for _ in 0..c {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            inputs.push(v);
+        }
+        let expected: Vec<f32> = (0..n)
+            .map(|i| inputs.iter().map(|v| v[i]).sum())
+            .collect();
+        let meter = Arc::clone(&members[0].meter);
+        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = members
+                .into_iter()
+                .zip(inputs.clone())
+                .map(|(m, mut buf)| {
+                    scope.spawn(move || {
+                        m.allreduce_sum(&mut buf).unwrap();
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for r in &results {
+            for (a, b) in r.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+            }
+        }
+        (results, meter.total())
+    }
+
+    #[test]
+    fn allreduce_sums_across_2_and_5_members() {
+        run_ring(2, 1000);
+        run_ring(5, 999); // non-divisible chunking
+    }
+
+    #[test]
+    fn wire_bytes_match_ring_formula() {
+        let n = 1000usize;
+        let c = 4usize;
+        let (_, bytes) = run_ring(c, n);
+        // Total across all workers = c * 2(c-1)/c * payload = 2(c-1)*payload.
+        let payload = 4 * n as u64;
+        assert_eq!(bytes, 2 * (c as u64 - 1) * payload);
+        assert_eq!(
+            ring_wire_bytes_per_worker(payload, c),
+            2 * (c as u64 - 1) * payload / c as u64
+        );
+    }
+
+    #[test]
+    fn single_member_is_noop() {
+        let members = build_ring(1);
+        let mut buf = vec![1.0f32, 2.0];
+        members[0].allreduce_sum(&mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0]);
+        assert_eq!(members[0].meter.total(), 0);
+    }
+
+    #[test]
+    fn mean_divides_by_size() {
+        let members = build_ring(2);
+        let bufs = vec![vec![2.0f32; 10], vec![4.0f32; 10]];
+        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            members
+                .into_iter()
+                .zip(bufs)
+                .map(|(m, mut b)| {
+                    scope.spawn(move || {
+                        m.allreduce_mean(&mut b).unwrap();
+                        b
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for r in results {
+            assert!(r.iter().all(|&v| (v - 3.0).abs() < 1e-6));
+        }
+    }
+}

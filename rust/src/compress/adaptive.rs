@@ -1,0 +1,242 @@
+//! Adaptive Gradient Compression (paper Algorithm 3).
+//!
+//! After each outer AllReduce the controller estimates the effective rank
+//! r'_t of the globally averaged pseudo-gradient, keeps a window of the
+//! last c estimates, and emits
+//!
+//!   r_t = mean(window),   α = (r₁ − r_t)/r₁,   H_t = H₁ · α
+//!
+//! exactly as written in the paper, with two practical floors the paper
+//! leaves implicit: r_t ≥ min_rank and H_t ≥ 1 (α = 0 in the warm-up
+//! window keeps H = H₁).  The paper does not specify the rank estimator;
+//! we use the *stable rank* ‖M‖²_F / σ²_max (σ_max via power iteration),
+//! averaged over the 2-D parameter matrices weighted by element count —
+//! documented in DESIGN.md as a substitution.
+
+use crate::linalg::Mat;
+use crate::runtime::manifest::ParamEntry;
+use std::collections::VecDeque;
+
+#[derive(Debug)]
+pub struct AdaptiveCompression {
+    /// r₁ — initial rank.
+    pub r1: usize,
+    /// H₁ — initial local steps.
+    pub h1: usize,
+    /// c — gradient-rank window.
+    pub c: usize,
+    pub min_rank: usize,
+    window: VecDeque<f64>,
+    t: usize,
+    last_rank: usize,
+    last_h: usize,
+}
+
+impl AdaptiveCompression {
+    pub fn new(r1: usize, h1: usize, c: usize, min_rank: usize) -> Self {
+        AdaptiveCompression {
+            r1,
+            h1,
+            c: c.max(1),
+            min_rank: min_rank.max(1),
+            window: VecDeque::new(),
+            t: 0,
+            last_rank: r1,
+            last_h: h1,
+        }
+    }
+
+    pub fn current(&self) -> (usize, usize) {
+        (self.last_rank, self.last_h)
+    }
+
+    /// Feed the globally averaged pseudo-gradient after an outer step;
+    /// returns (r_{t+1}, H_{t+1}).
+    pub fn observe(&mut self, avg: &[f32], spec: &[ParamEntry]) -> (usize, usize) {
+        let r_prime = effective_rank_estimate(avg, spec)
+            .clamp(self.min_rank as f64, self.r1 as f64);
+        self.window.push_back(r_prime);
+        while self.window.len() > self.c {
+            self.window.pop_front();
+        }
+        self.t += 1;
+
+        let (rank, h) = if self.t < self.c {
+            // Warm-up: r_t = r₁, α = 1 (paper), H = H₁.
+            (self.r1, self.h1)
+        } else {
+            let r_t = self.window.iter().sum::<f64>() / self.window.len() as f64;
+            let alpha = ((self.r1 as f64 - r_t) / self.r1 as f64).max(0.0);
+            let rank = (r_t.round() as usize)
+                .clamp(self.min_rank, self.r1);
+            let h = if alpha <= 0.0 {
+                self.h1
+            } else {
+                ((self.h1 as f64 * alpha).round() as usize).max(1)
+            };
+            (rank, h)
+        };
+        self.last_rank = rank;
+        self.last_h = h;
+        (rank, h)
+    }
+}
+
+/// Stable-rank estimate of the averaged pseudo-gradient: element-weighted
+/// mean over the 2-D matrices of ‖M‖²_F / σ²_max.
+pub fn effective_rank_estimate(avg: &[f32], spec: &[ParamEntry]) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for e in spec {
+        if e.shape.len() != 2 {
+            continue;
+        }
+        let m = Mat::from_slice(e.shape[0], e.shape[1], &avg[e.offset..e.offset + e.numel()]);
+        let sr = stable_rank(&m);
+        let w = e.numel() as f64;
+        num += sr * w;
+        den += w;
+    }
+    if den == 0.0 {
+        1.0
+    } else {
+        num / den
+    }
+}
+
+/// ‖M‖²_F / σ²_max with σ_max from a few power iterations on MᵀM.
+pub fn stable_rank(m: &Mat) -> f64 {
+    let fro2: f64 = m.data.iter().map(|&x| (x as f64).powi(2)).sum();
+    if fro2 == 0.0 {
+        return 0.0;
+    }
+    // Power iteration: v <- normalize(Mᵀ (M v)).
+    let mut v = vec![1.0f32; m.cols];
+    let mut sigma2 = 0.0f64;
+    for _ in 0..12 {
+        // u = M v
+        let mut u = vec![0.0f32; m.rows];
+        for i in 0..m.rows {
+            let row = &m.data[i * m.cols..(i + 1) * m.cols];
+            u[i] = crate::linalg::dot(row, &v);
+        }
+        // w = Mᵀ u
+        let mut w = vec![0.0f32; m.cols];
+        for i in 0..m.rows {
+            let row = &m.data[i * m.cols..(i + 1) * m.cols];
+            let ui = u[i];
+            for (wj, &rj) in w.iter_mut().zip(row) {
+                *wj += ui * rj;
+            }
+        }
+        let norm = crate::util::l2(&w);
+        if norm < 1e-30 {
+            return 1.0;
+        }
+        sigma2 = norm; // ||M^T M v|| -> sigma^2 as v converges
+        let inv = (1.0 / norm) as f32;
+        for (vi, &wi) in v.iter_mut().zip(&w) {
+            *vi = wi * inv;
+        }
+    }
+    (fro2 / sigma2).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn mat_spec(rows: usize, cols: usize) -> Vec<ParamEntry> {
+        vec![ParamEntry { name: "w".into(), shape: vec![rows, cols], offset: 0 }]
+    }
+
+    #[test]
+    fn stable_rank_of_rank1_is_1() {
+        let mut m = Mat::zeros(20, 30);
+        for i in 0..20 {
+            for j in 0..30 {
+                m.data[i * 30 + j] = (i as f32 + 1.0) * (j as f32 + 1.0);
+            }
+        }
+        let sr = stable_rank(&m);
+        assert!((sr - 1.0).abs() < 0.05, "sr={sr}");
+    }
+
+    #[test]
+    fn stable_rank_of_identity_is_n() {
+        let n = 16;
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        let sr = stable_rank(&m);
+        assert!((sr - n as f64).abs() < 0.5, "sr={sr}");
+    }
+
+    #[test]
+    fn random_matrix_has_high_stable_rank() {
+        let mut rng = Pcg32::seed_from(1);
+        let mut m = Mat::zeros(64, 64);
+        rng.fill_normal(&mut m.data, 0.0, 1.0);
+        assert!(stable_rank(&m) > 10.0);
+    }
+
+    #[test]
+    fn warmup_keeps_initial_settings() {
+        let mut ctl = AdaptiveCompression::new(32, 100, 5, 2);
+        let mut rng = Pcg32::seed_from(2);
+        let mut g = vec![0.0f32; 24 * 24];
+        rng.fill_normal(&mut g, 0.0, 1.0);
+        let spec = mat_spec(24, 24);
+        for _ in 0..4 {
+            let (r, h) = ctl.observe(&g, &spec);
+            assert_eq!((r, h), (32, 100));
+        }
+    }
+
+    #[test]
+    fn low_rank_gradients_shrink_rank_and_h_follows_alpha() {
+        // Rank-1 pseudo-gradients: r' ≈ 1, so after the window fills,
+        // r_t ≈ 1 and α ≈ (r1-1)/r1 → H_t ≈ H1·α.
+        let (r1, h1, c) = (32usize, 100usize, 3usize);
+        let mut ctl = AdaptiveCompression::new(r1, h1, c, 1);
+        let rows = 20;
+        let cols = 24;
+        let mut g = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                g[i * cols + j] = (i + 1) as f32 * 0.1 * (j + 1) as f32;
+            }
+        }
+        let spec = mat_spec(rows, cols);
+        let mut last = (0, 0);
+        for _ in 0..c + 2 {
+            last = ctl.observe(&g, &spec);
+        }
+        let (r, h) = last;
+        assert!(r <= 2, "rank should collapse, got {r}");
+        let alpha = (r1 as f64 - r as f64) / r1 as f64;
+        let expect_h = (h1 as f64 * alpha).round() as usize;
+        assert!(
+            (h as i64 - expect_h as i64).abs() <= 3,
+            "h={h} expect≈{expect_h}"
+        );
+    }
+
+    #[test]
+    fn full_rank_gradients_keep_h1() {
+        // α clamps to 0 when r_t ≈ r1 → H stays at H1 (documented floor).
+        let mut ctl = AdaptiveCompression::new(8, 50, 2, 1);
+        let mut rng = Pcg32::seed_from(5);
+        let mut g = vec![0.0f32; 40 * 40];
+        rng.fill_normal(&mut g, 0.0, 1.0);
+        let spec = mat_spec(40, 40);
+        let mut last = (0, 0);
+        for _ in 0..4 {
+            last = ctl.observe(&g, &spec);
+        }
+        assert_eq!(last.0, 8);
+        assert_eq!(last.1, 50);
+    }
+}

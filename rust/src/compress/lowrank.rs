@@ -1,0 +1,316 @@
+//! Low-rank pseudo-gradient compression (paper Algorithm 1, PowerSGD-style,
+//! AllReduce-compatible).
+//!
+//! Per 2-D parameter matrix M (rows x cols), with shared basis Q
+//! (cols x r, warm-started across outer steps, identical on every worker):
+//!
+//!   P_i   = M_i Q            (worker-local, MXU work)
+//!   P̄    = mean_i P_i       (AllReduce #1)   ← quantized on the wire
+//!   P̂    = orthonormalize(P̄)
+//!   Q'_i  = M_iᵀ P̂           (worker-local)
+//!   Q̄'   = mean_i Q'_i      (AllReduce #2)   ← quantized on the wire
+//!   M̂    = P̂ Q̄'ᵀ           (identical on every worker)
+//!
+//! 1-D parameters (biases, layernorms) are quantize-only: they are a tiny
+//! fraction of the volume and low-rank is meaningless for vectors.
+
+use crate::linalg::{matmul, matmul_at_b, matmul_bt, orthonormalize_columns, Mat};
+use crate::runtime::manifest::ParamEntry;
+use crate::util::rng::Pcg32;
+use std::collections::HashMap;
+
+use super::quantize;
+
+/// Warm-started Q bases keyed by parameter name (one per 2-D entry).
+#[derive(Default)]
+pub struct LowRankState {
+    bases: HashMap<String, Mat>,
+}
+
+pub struct LowRankConfig {
+    pub rank: usize,
+    /// Quantization applied to the P / Q' wire payloads (0 = fp32 wire).
+    pub q_bits: u32,
+    pub seed: u64,
+}
+
+pub struct LowRankOutcome {
+    /// Mean decompressed update (same flat layout as the inputs).
+    pub avg: Vec<f32>,
+    /// Payload bytes one worker puts on the wire per AllReduce round
+    /// (both P and Q' passes + the quantize-only 1-D segment).
+    pub payload_bytes: u64,
+}
+
+/// Effective rank to use for a rows x cols matrix: cannot exceed min dim.
+pub fn effective_rank(rank: usize, rows: usize, cols: usize) -> usize {
+    rank.max(1).min(rows).min(cols)
+}
+
+/// fp32 elements a rank-r factorization puts on the wire for one matrix.
+pub fn factor_elems(rows: usize, cols: usize, r: usize) -> usize {
+    r * (rows + cols)
+}
+
+/// Run the full AllReduce-compatible low-rank + quantize reduction over
+/// D workers' flat pseudo-gradients.  `spec` gives the 2-D/1-D split.
+pub fn reduce(
+    deltas: &[Vec<f32>],
+    spec: &[ParamEntry],
+    cfg: &LowRankConfig,
+    state: &mut LowRankState,
+    step: u64,
+) -> LowRankOutcome {
+    let d_workers = deltas.len();
+    assert!(d_workers > 0);
+    let n = deltas[0].len();
+    let mut avg = vec![0.0f32; n];
+    let mut payload_elems_q: usize = 0; // elements that travel quantized
+    let mut scales = 0usize; // per-tensor f32 scale overhead count
+
+    for entry in spec {
+        let lo = entry.offset;
+        let hi = entry.offset + entry.numel();
+        if entry.shape.len() == 2 {
+            let (rows, cols) = (entry.shape[0], entry.shape[1]);
+            let r = effective_rank(cfg.rank, rows, cols);
+            // Shared warm-started basis (deterministic seed on first use).
+            let q = state.bases.entry(entry.name.clone()).or_insert_with(|| {
+                let mut rng =
+                    Pcg32::new(cfg.seed ^ hash_name(&entry.name), step);
+                let mut m = Mat::zeros(cols, r);
+                rng.fill_normal(&mut m.data, 0.0, 1.0);
+                m
+            });
+            if q.cols != r {
+                // Adaptive rank changed: re-project the basis.
+                let mut rng =
+                    Pcg32::new(cfg.seed ^ hash_name(&entry.name), step);
+                let mut m = Mat::zeros(cols, r);
+                for i in 0..cols {
+                    for j in 0..r {
+                        m.data[i * r + j] = if j < q.cols {
+                            q.data[i * q.cols + j]
+                        } else {
+                            rng.normal()
+                        };
+                    }
+                }
+                *q = m;
+            }
+
+            // P_i = M_i Q ; P̄ = mean.
+            let mut p_bar = Mat::zeros(rows, r);
+            for delta in deltas {
+                let m = Mat::from_slice(rows, cols, &delta[lo..hi]);
+                let p = matmul(&m, q);
+                for (a, b) in p_bar.data.iter_mut().zip(&p.data) {
+                    *a += b / d_workers as f32;
+                }
+            }
+            // Wire pass 1: P (rows x r) per worker, quantized.
+            payload_elems_q += rows * r;
+            scales += 1;
+            if cfg.q_bits > 0 && cfg.q_bits < 32 {
+                quantize::quantize_dequantize(&mut p_bar.data, cfg.q_bits);
+            }
+            orthonormalize_columns(&mut p_bar);
+
+            // Q'_i = M_iᵀ P̂ ; Q̄' = mean.
+            let mut q_bar = Mat::zeros(cols, r);
+            for delta in deltas {
+                let m = Mat::from_slice(rows, cols, &delta[lo..hi]);
+                let qn = matmul_at_b(&m, &p_bar);
+                for (a, b) in q_bar.data.iter_mut().zip(&qn.data) {
+                    *a += b / d_workers as f32;
+                }
+            }
+            payload_elems_q += cols * r;
+            scales += 1;
+            if cfg.q_bits > 0 && cfg.q_bits < 32 {
+                quantize::quantize_dequantize(&mut q_bar.data, cfg.q_bits);
+            }
+
+            // Warm start for the next outer step.
+            state.bases.insert(entry.name.clone(), q_bar.clone());
+
+            // M̂ = P̂ Q̄'ᵀ
+            let rec = matmul_bt(&p_bar, &q_bar);
+            avg[lo..hi].copy_from_slice(&rec.data);
+        } else {
+            // 1-D segment: plain mean, quantized on the wire.
+            let mut seg = vec![0.0f32; hi - lo];
+            for delta in deltas {
+                for (a, b) in seg.iter_mut().zip(&delta[lo..hi]) {
+                    *a += b / d_workers as f32;
+                }
+            }
+            payload_elems_q += hi - lo;
+            scales += 1;
+            if cfg.q_bits > 0 && cfg.q_bits < 32 {
+                quantize::quantize_dequantize(&mut seg, cfg.q_bits);
+            }
+            avg[lo..hi].copy_from_slice(&seg);
+        }
+    }
+
+    let bits = if cfg.q_bits == 0 { 32 } else { cfg.q_bits } as u64;
+    let payload_bytes = (payload_elems_q as u64 * bits + 7) / 8
+        + 4 * scales as u64;
+    LowRankOutcome { avg, payload_bytes }
+}
+
+fn hash_name(s: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+    use crate::util::rng::Pcg32;
+
+    fn spec_2d(name: &str, rows: usize, cols: usize, off: usize) -> ParamEntry {
+        ParamEntry { name: name.into(), shape: vec![rows, cols], offset: off }
+    }
+
+    fn spec_1d(name: &str, n: usize, off: usize) -> ParamEntry {
+        ParamEntry { name: name.into(), shape: vec![n], offset: off }
+    }
+
+    #[test]
+    fn exact_at_full_rank_no_quant() {
+        let mut rng = Pcg32::seed_from(1);
+        let (rows, cols) = (24, 16);
+        let mut d0 = vec![0.0f32; rows * cols + 8];
+        let mut d1 = d0.clone();
+        rng.fill_normal(&mut d0, 0.0, 1.0);
+        rng.fill_normal(&mut d1, 0.0, 1.0);
+        let spec = vec![
+            spec_2d("w", rows, cols, 0),
+            spec_1d("b", 8, rows * cols),
+        ];
+        let cfg = LowRankConfig { rank: 16, q_bits: 0, seed: 3 };
+        let mut st = LowRankState::default();
+        let out = reduce(&[d0.clone(), d1.clone()], &spec, &cfg, &mut st, 0);
+        // Full rank reconstructs mean exactly (up to GS roundoff).
+        for i in 0..d0.len() {
+            let want = 0.5 * (d0[i] + d1[i]);
+            assert!(
+                (out.avg[i] - want).abs() < 1e-3,
+                "i={i}: {} vs {want}",
+                out.avg[i]
+            );
+        }
+    }
+
+    #[test]
+    fn lemma_3_6_error_bound_property() {
+        // E||C(x)-x||^2 <= (1 - (r/d) 2^{-q}) ||x||^2 for the combined
+        // low-rank + quantize compressor (single worker -> pure compression).
+        props(41).runs(25).check(|g| {
+            let rows = g.usize_in(8, 40);
+            let cols = g.usize_in(8, 40);
+            let r = g.usize_in(1, rows.min(cols));
+            let q_bits = *g.pick(&[4u32, 8]);
+            let x = g.vec_normal(rows * cols, 1.0);
+            let spec = vec![spec_2d("w", rows, cols, 0)];
+            let cfg = LowRankConfig { rank: r, q_bits, seed: 5 };
+            let mut st = LowRankState::default();
+            let out = reduce(&[x.clone()], &spec, &cfg, &mut st, 0);
+            let err2: f64 = x
+                .iter()
+                .zip(&out.avg)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            let norm2: f64 = x.iter().map(|a| (*a as f64).powi(2)).sum();
+            let d = rows.min(cols) as f64;
+            let omega2 =
+                1.0 - (r as f64 / d) * 2f64.powi(-(q_bits as i32));
+            if err2 <= omega2 * norm2 * 1.05 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!(
+                    "err2/norm2={} > omega2={omega2} (r={r} d={d} q={q_bits})",
+                    err2 / norm2
+                ))
+            }
+        });
+    }
+
+    #[test]
+    fn warm_start_improves_reconstruction() {
+        // Repeated reduction of the same matrix must not get worse: the
+        // warm-started basis converges to the top-r subspace.
+        let mut rng = Pcg32::seed_from(9);
+        let (rows, cols, r) = (32, 48, 4);
+        let x: Vec<f32> = {
+            // Construct a matrix with decaying spectrum.
+            let mut u = Mat::zeros(rows, 8);
+            let mut v = Mat::zeros(8, cols);
+            rng.fill_normal(&mut u.data, 0.0, 1.0);
+            rng.fill_normal(&mut v.data, 0.0, 1.0);
+            for k in 0..8 {
+                let s = 1.0 / (1 << k) as f32;
+                for i in 0..rows {
+                    u.data[i * 8 + k] *= s;
+                }
+            }
+            matmul(&u, &v).data
+        };
+        let spec = vec![spec_2d("w", rows, cols, 0)];
+        let cfg = LowRankConfig { rank: r, q_bits: 0, seed: 7 };
+        let mut st = LowRankState::default();
+        let err_at = |st: &mut LowRankState, step: u64| -> f64 {
+            let out = reduce(&[x.clone()], &spec, &cfg, st, step);
+            x.iter()
+                .zip(&out.avg)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+        };
+        let e0 = err_at(&mut st, 0);
+        let mut last = e0;
+        for t in 1..5 {
+            last = err_at(&mut st, t);
+        }
+        assert!(last <= e0 * 1.01, "e0={e0} last={last}");
+    }
+
+    #[test]
+    fn payload_accounting_matches_formula() {
+        let (rows, cols, r) = (100, 60, 8);
+        let spec = vec![spec_2d("w", rows, cols, 0), spec_1d("b", 10, 6000)];
+        let cfg = LowRankConfig { rank: r, q_bits: 4, seed: 1 };
+        let mut st = LowRankState::default();
+        let x = vec![0.5f32; rows * cols + 10];
+        let out = reduce(&[x], &spec, &cfg, &mut st, 0);
+        let elems = factor_elems(rows, cols, r) + 10;
+        assert_eq!(out.payload_bytes, (elems as u64 * 4 + 7) / 8 + 12);
+        // Compression ratio vs fp32 baseline is large.
+        let full = 4 * (rows * cols + 10) as u64;
+        assert!(full as f64 / out.payload_bytes as f64 > 15.0);
+    }
+
+    #[test]
+    fn adaptive_rank_change_reprojects_basis() {
+        let mut rng = Pcg32::seed_from(11);
+        let (rows, cols) = (16, 20);
+        let mut x = vec![0.0f32; rows * cols];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let spec = vec![spec_2d("w", rows, cols, 0)];
+        let mut st = LowRankState::default();
+        let c8 = LowRankConfig { rank: 8, q_bits: 0, seed: 2 };
+        reduce(&[x.clone()], &spec, &c8, &mut st, 0);
+        assert_eq!(st.bases["w"].cols, 8);
+        let c4 = LowRankConfig { rank: 4, q_bits: 0, seed: 2 };
+        let out = reduce(&[x.clone()], &spec, &c4, &mut st, 1);
+        assert_eq!(st.bases["w"].cols, 4);
+        assert!(out.avg.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,132 @@
+//! Sparsification compressors: Top-K (largest magnitude; needs index
+//! transport, not AllReduce-compatible — §2.4.2) and Random-K (shared-seed
+//! mask; only a seed + values travel).  Used by the CocktailSGD baseline
+//! and by ablation benches comparing against the paper's Low-Rank choice.
+
+use crate::util::rng::Pcg32;
+
+/// Keep the k largest-|.|, zero the rest; returns kept indices (sorted).
+pub fn top_k_mask(x: &mut [f32], k: usize) -> Vec<u32> {
+    let n = x.len();
+    if k >= n {
+        return (0..n as u32).collect();
+    }
+    if k == 0 {
+        x.iter_mut().for_each(|v| *v = 0.0);
+        return vec![];
+    }
+    // Select the k-th magnitude via select_nth on an index permutation.
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        x[b as usize]
+            .abs()
+            .partial_cmp(&x[a as usize].abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut kept: Vec<u32> = idx[..k].to_vec();
+    kept.sort_unstable();
+    let keep: std::collections::HashSet<u32> = kept.iter().copied().collect();
+    for (i, v) in x.iter_mut().enumerate() {
+        if !keep.contains(&(i as u32)) {
+            *v = 0.0;
+        }
+    }
+    kept
+}
+
+/// Zero all but a seed-derived fraction `ratio` of entries.  Every worker
+/// with the same (seed, step) derives the same mask — AllReduce friendly.
+pub fn random_k_mask(x: &mut [f32], ratio: f32, seed: u64, step: u64) {
+    assert!((0.0..=1.0).contains(&ratio));
+    let n = x.len();
+    let k = ((n as f64) * ratio as f64).round() as usize;
+    let mut rng = Pcg32::new(seed ^ 0x5eed, step);
+    let keep = rng.sample_indices(n, k.min(n));
+    let keep: std::collections::HashSet<usize> = keep.into_iter().collect();
+    for (i, v) in x.iter_mut().enumerate() {
+        if !keep.contains(&i) {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Wire bytes for a top-k payload: values (f32) + index list (u32) —
+/// the `K log2 d` cost §2.4.2 calls out.
+pub fn top_k_wire_bytes(k: usize) -> u64 {
+    (k as u64) * (4 + 4)
+}
+
+/// Wire bytes for a random-k payload: values only + the 8-byte seed.
+pub fn random_k_wire_bytes(k: usize) -> u64 {
+    (k as u64) * 4 + 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+
+    #[test]
+    fn top_k_keeps_largest_magnitudes() {
+        let mut x = vec![0.1f32, -5.0, 2.0, 0.01, 3.0];
+        let kept = top_k_mask(&mut x, 2);
+        assert_eq!(kept, vec![1, 4]);
+        assert_eq!(x, vec![0.0, -5.0, 0.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn top_k_error_leq_random_k_property() {
+        // §2.4.2: "top-k has fewer compression errors (l2) than random".
+        props(31).runs(40).check(|g| {
+            let n = g.usize_in(16, 1024);
+            let ratio = 0.1f32;
+            let k = ((n as f32) * ratio).round() as usize;
+            let x = g.vec_normal(n, 1.0);
+            let mut xt = x.clone();
+            top_k_mask(&mut xt, k);
+            let mut xr = x.clone();
+            random_k_mask(&mut xr, ratio, 7, g.rng.next_u64());
+            let err = |y: &[f32]| -> f64 {
+                x.iter()
+                    .zip(y)
+                    .map(|(a, b)| ((a - b) as f64).powi(2))
+                    .sum()
+            };
+            if err(&xt) <= err(&xr) + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("topk {} > randk {}", err(&xt), err(&xr)))
+            }
+        });
+    }
+
+    #[test]
+    fn top_k_edge_cases() {
+        let mut x = vec![1.0f32, 2.0];
+        assert_eq!(top_k_mask(&mut x, 5).len(), 2); // k > n keeps all
+        let mut y = vec![1.0f32, 2.0];
+        assert!(top_k_mask(&mut y, 0).is_empty());
+        assert_eq!(y, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn random_k_is_deterministic_per_seed_step() {
+        let base: Vec<f32> = (0..100).map(|i| i as f32 + 1.0).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        random_k_mask(&mut a, 0.3, 42, 5);
+        random_k_mask(&mut b, 0.3, 42, 5);
+        assert_eq!(a, b);
+        let mut c = base.clone();
+        random_k_mask(&mut c, 0.3, 42, 6);
+        assert_ne!(a, c);
+        let kept = a.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(kept, 30);
+    }
+
+    #[test]
+    fn wire_accounting() {
+        assert_eq!(top_k_wire_bytes(100), 800);
+        assert_eq!(random_k_wire_bytes(100), 408);
+    }
+}

@@ -1,0 +1,379 @@
+//! Typed experiment configuration: parsed from TOML launcher files or built
+//! programmatically by the benches.  Field names follow the paper (H local
+//! steps, T outer steps, D data parallelism, M pipeline stages, rank r,
+//! q-bit quantization, gradient-rank window c).
+
+pub mod toml;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Vanilla synchronous data parallelism (paper baseline 1).
+    AllReduce,
+    /// DiLoCo with H local steps, fp16-equivalent wire format, no overlap,
+    /// outer optimizer on worker 0 only (paper baseline 2).
+    OpenDiLoCo,
+    /// TopK + random sparsification + Int4 with local steps (baseline 3).
+    CocktailSgd,
+    /// The paper's system (Algorithm 2).
+    DiLoCoX,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "allreduce" | "all-reduce" => Algo::AllReduce,
+            "opendiloco" | "diloco" => Algo::OpenDiLoCo,
+            "cocktailsgd" | "cocktail" => Algo::CocktailSgd,
+            "dilocox" => Algo::DiLoCoX,
+            other => bail!("unknown algo '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::AllReduce => "AllReduce",
+            Algo::OpenDiLoCo => "OpenDiLoCo",
+            Algo::CocktailSgd => "CocktailSGD",
+            Algo::DiLoCoX => "DiLoCoX",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParallelConfig {
+    /// D — data-parallel replicas (one per decentralized cluster here:
+    /// the slow links are *between* replicas).
+    pub dp: usize,
+    /// M — pipeline stages inside each replica.
+    pub pp: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// T — outer optimizer steps.
+    pub outer_steps: usize,
+    /// H₁ — initial local (inner) steps per outer step.
+    pub local_steps: usize,
+    pub inner_lr: f32,
+    pub weight_decay: f32,
+    /// Outer Nesterov step size / momentum (DiLoCo defaults).
+    pub outer_lr: f32,
+    pub outer_momentum: f32,
+    /// One-step-delay overlap of communication and local training (§2.3).
+    pub overlap: bool,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CompressionConfig {
+    pub enabled: bool,
+    /// q — quantization bits (0 disables quantization).
+    pub q_bits: u32,
+    /// r₁ — initial low-rank (0 disables the low-rank factorization).
+    pub rank: usize,
+    /// Alg 3 adaptive rank/H controller.
+    pub adaptive: bool,
+    /// c — gradient-rank window.
+    pub rank_window: usize,
+    pub min_rank: usize,
+    /// Error feedback buffer (Algorithm 2's e_t).
+    pub error_feedback: bool,
+    /// CocktailSGD knobs (used only by that baseline).
+    pub random_ratio: f32,
+    pub topk_ratio: f32,
+}
+
+impl CompressionConfig {
+    pub fn none() -> Self {
+        CompressionConfig {
+            enabled: false,
+            q_bits: 0,
+            rank: 0,
+            adaptive: false,
+            rank_window: 5,
+            min_rank: 1,
+            error_feedback: false,
+            random_ratio: 0.0,
+            topk_ratio: 0.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct NetworkConfig {
+    /// C — number of decentralized clusters (== dp in our mapping).
+    pub clusters: usize,
+    /// Inter-cluster bandwidth in Gbit/s (the paper's 1 Gbps bottleneck).
+    pub inter_bw_gbps: f64,
+    /// Intra-cluster bandwidth in Gbit/s (NVLink/IB class).
+    pub intra_bw_gbps: f64,
+    /// One-way latency per inter-cluster message, milliseconds.
+    pub latency_ms: f64,
+}
+
+impl NetworkConfig {
+    pub fn paper_1gbps(clusters: usize) -> Self {
+        NetworkConfig {
+            clusters,
+            inter_bw_gbps: 1.0,
+            intra_bw_gbps: 100.0,
+            latency_ms: 30.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Artifact preset name (tiny | small | e2e100m) for real-numerics runs.
+    pub preset: String,
+    pub artifacts_dir: String,
+    pub algo: Algo,
+    pub parallel: ParallelConfig,
+    pub train: TrainConfig,
+    pub compression: CompressionConfig,
+    pub network: NetworkConfig,
+}
+
+impl ExperimentConfig {
+    /// Defaults mirror the paper's OPT-1.3B DiLoCoX row scaled to the
+    /// `small` preset: H₁=125, Int4, overlap on, error feedback on.
+    pub fn default_for(preset: &str, algo: Algo) -> Self {
+        let dp = 2;
+        let compression = match algo {
+            Algo::AllReduce => CompressionConfig::none(),
+            Algo::OpenDiLoCo => CompressionConfig {
+                // fp16 wire format == "16-bit quantization" accounting.
+                enabled: true,
+                q_bits: 16,
+                rank: 0,
+                adaptive: false,
+                rank_window: 5,
+                min_rank: 1,
+                error_feedback: false,
+                random_ratio: 0.0,
+                topk_ratio: 0.0,
+            },
+            Algo::CocktailSgd => CompressionConfig {
+                enabled: true,
+                q_bits: 4,
+                rank: 0,
+                adaptive: false,
+                rank_window: 5,
+                min_rank: 1,
+                error_feedback: true,
+                random_ratio: 0.1,
+                topk_ratio: 0.08,
+            },
+            Algo::DiLoCoX => CompressionConfig {
+                enabled: true,
+                q_bits: 4,
+                rank: 64,
+                adaptive: true,
+                rank_window: 5,
+                min_rank: 4,
+                error_feedback: true,
+                random_ratio: 0.0,
+                topk_ratio: 0.0,
+            },
+        };
+        let local_steps = match algo {
+            Algo::AllReduce => 1,
+            Algo::OpenDiLoCo => 500,
+            _ => 125,
+        };
+        ExperimentConfig {
+            preset: preset.to_string(),
+            artifacts_dir: format!("artifacts/{preset}"),
+            algo,
+            parallel: ParallelConfig { dp, pp: 1 },
+            train: TrainConfig {
+                outer_steps: 8,
+                local_steps,
+                inner_lr: 3e-3,
+                weight_decay: 0.01,
+                outer_lr: 0.7,
+                outer_momentum: 0.9,
+                overlap: algo == Algo::DiLoCoX,
+                seed: 1234,
+            },
+            compression,
+            network: NetworkConfig::paper_1gbps(dp),
+        }
+    }
+
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let v = toml::parse_file(path)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let preset = v
+            .path("model.preset")
+            .and_then(|j| j.as_str())
+            .unwrap_or("small");
+        let algo = Algo::parse(
+            v.get("algo").and_then(|j| j.as_str()).unwrap_or("dilocox"),
+        )?;
+        let mut cfg = Self::default_for(preset, algo);
+
+        if let Some(d) = v.path("model.artifacts_dir").and_then(|j| j.as_str()) {
+            cfg.artifacts_dir = d.to_string();
+        }
+        macro_rules! set_usize {
+            ($path:literal, $field:expr) => {
+                if let Some(x) = v.path($path).and_then(|j| j.as_usize()) {
+                    $field = x;
+                }
+            };
+        }
+        macro_rules! set_f32 {
+            ($path:literal, $field:expr) => {
+                if let Some(x) = v.path($path).and_then(|j| j.as_f64()) {
+                    $field = x as f32;
+                }
+            };
+        }
+        macro_rules! set_bool {
+            ($path:literal, $field:expr) => {
+                if let Some(x) = v.path($path).and_then(|j| j.as_bool()) {
+                    $field = x;
+                }
+            };
+        }
+        set_usize!("parallel.dp", cfg.parallel.dp);
+        set_usize!("parallel.pp", cfg.parallel.pp);
+        set_usize!("train.outer_steps", cfg.train.outer_steps);
+        set_usize!("train.local_steps", cfg.train.local_steps);
+        set_f32!("train.inner_lr", cfg.train.inner_lr);
+        set_f32!("train.weight_decay", cfg.train.weight_decay);
+        set_f32!("train.outer_lr", cfg.train.outer_lr);
+        set_f32!("train.outer_momentum", cfg.train.outer_momentum);
+        set_bool!("train.overlap", cfg.train.overlap);
+        if let Some(x) = v.path("train.seed").and_then(|j| j.as_usize()) {
+            cfg.train.seed = x as u64;
+        }
+        set_bool!("compression.enabled", cfg.compression.enabled);
+        if let Some(x) = v.path("compression.q_bits").and_then(|j| j.as_usize())
+        {
+            cfg.compression.q_bits = x as u32;
+        }
+        set_usize!("compression.rank", cfg.compression.rank);
+        set_bool!("compression.adaptive", cfg.compression.adaptive);
+        set_usize!("compression.rank_window", cfg.compression.rank_window);
+        set_usize!("compression.min_rank", cfg.compression.min_rank);
+        set_bool!("compression.error_feedback", cfg.compression.error_feedback);
+        set_f32!("compression.random_ratio", cfg.compression.random_ratio);
+        set_f32!("compression.topk_ratio", cfg.compression.topk_ratio);
+        set_usize!("network.clusters", cfg.network.clusters);
+        if let Some(x) = v.path("network.inter_bw_gbps").and_then(|j| j.as_f64())
+        {
+            cfg.network.inter_bw_gbps = x;
+        }
+        if let Some(x) = v.path("network.intra_bw_gbps").and_then(|j| j.as_f64())
+        {
+            cfg.network.intra_bw_gbps = x;
+        }
+        if let Some(x) = v.path("network.latency_ms").and_then(|j| j.as_f64()) {
+            cfg.network.latency_ms = x;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.parallel.dp == 0 || self.parallel.pp == 0 {
+            return Err(anyhow!("parallel degrees must be >= 1"));
+        }
+        if self.train.outer_steps == 0 || self.train.local_steps == 0 {
+            return Err(anyhow!("outer_steps and local_steps must be >= 1"));
+        }
+        if self.compression.q_bits > 32 {
+            return Err(anyhow!("q_bits must be <= 32"));
+        }
+        if self.compression.adaptive && self.compression.rank_window == 0 {
+            return Err(anyhow!("rank_window (c) must be >= 1 when adaptive"));
+        }
+        if self.algo == Algo::CocktailSgd
+            && self.compression.enabled
+            && (self.compression.random_ratio <= 0.0
+                || self.compression.topk_ratio <= 0.0)
+        {
+            return Err(anyhow!("cocktail needs random_ratio and topk_ratio"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_rows() {
+        let d = ExperimentConfig::default_for("small", Algo::DiLoCoX);
+        assert_eq!(d.train.local_steps, 125);
+        assert_eq!(d.compression.q_bits, 4);
+        assert!(d.train.overlap);
+        assert!(d.compression.error_feedback);
+
+        let o = ExperimentConfig::default_for("small", Algo::OpenDiLoCo);
+        assert_eq!(o.train.local_steps, 500);
+        assert!(!o.train.overlap);
+        assert_eq!(o.compression.q_bits, 16);
+
+        let a = ExperimentConfig::default_for("small", Algo::AllReduce);
+        assert_eq!(a.train.local_steps, 1);
+        assert!(!a.compression.enabled);
+    }
+
+    #[test]
+    fn toml_roundtrip_overrides() {
+        let src = r#"
+algo = "cocktail"
+[model]
+preset = "tiny"
+[parallel]
+dp = 4
+[train]
+outer_steps = 3
+local_steps = 10
+overlap = false
+[compression]
+random_ratio = 0.2
+topk_ratio = 0.05
+[network]
+inter_bw_gbps = 0.5
+"#;
+        let v = toml::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.algo, Algo::CocktailSgd);
+        assert_eq!(cfg.preset, "tiny");
+        assert_eq!(cfg.parallel.dp, 4);
+        assert_eq!(cfg.train.outer_steps, 3);
+        assert_eq!(cfg.train.local_steps, 10);
+        assert_eq!(cfg.compression.random_ratio, 0.2);
+        assert_eq!(cfg.network.inter_bw_gbps, 0.5);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.parallel.dp = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::CocktailSgd);
+        cfg.compression.topk_ratio = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn algo_parse_names() {
+        assert_eq!(Algo::parse("DiLoCoX").unwrap(), Algo::DiLoCoX);
+        assert_eq!(Algo::parse("diloco").unwrap(), Algo::OpenDiLoCo);
+        assert!(Algo::parse("sgd").is_err());
+        assert_eq!(Algo::DiLoCoX.name(), "DiLoCoX");
+    }
+}

@@ -1,0 +1,275 @@
+//! TOML-subset parser substrate (no `toml` crate offline).
+//!
+//! Supported grammar — everything the launcher configs need:
+//!   * `[table]` and `[dotted.table]` headers
+//!   * `key = value` with string / integer / float / bool / array values
+//!   * dotted keys (`train.steps = 4`), `#` comments, blank lines
+//!
+//! Values land in the same `Json` tree the rest of the codebase uses, so
+//! config handling and manifest handling share accessors.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root = BTreeMap::new();
+    let mut prefix: Vec<String> = vec![];
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| err(ln, "unterminated table header"))?;
+            if inner.is_empty() {
+                return Err(err(ln, "empty table header"));
+            }
+            prefix = inner.split('.').map(|s| s.trim().to_string()).collect();
+            ensure_table(&mut root, &prefix, ln)?;
+        } else {
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(ln, "expected key = value"))?;
+            let mut path = prefix.clone();
+            path.extend(k.trim().split('.').map(|s| s.trim().to_string()));
+            let val = parse_value(v.trim(), ln)?;
+            insert(&mut root, &path, val, ln)?;
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+pub fn parse_file(path: &str) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+fn err(ln: usize, msg: &str) -> TomlError {
+    TomlError { line: ln + 1, msg: msg.to_string() }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    ln: usize,
+) -> Result<(), TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(err(ln, "key redefined as table")),
+        }
+    }
+    Ok(())
+}
+
+fn insert(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    val: Json,
+    ln: usize,
+) -> Result<(), TomlError> {
+    let (last, dirs) = path.split_last().unwrap();
+    let mut cur = root;
+    for part in dirs {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        match entry {
+            Json::Obj(m) => cur = m,
+            _ => return Err(err(ln, "key redefined as table")),
+        }
+    }
+    if cur.contains_key(last) {
+        return Err(err(ln, &format!("duplicate key '{last}'")));
+    }
+    cur.insert(last.clone(), val);
+    Ok(())
+}
+
+fn parse_value(s: &str, ln: usize) -> Result<Json, TomlError> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| err(ln, "unterminated string"))?;
+        return Ok(Json::Str(unescape(body)));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err(ln, "unterminated array"))?;
+        let mut items = vec![];
+        for item in split_top_level(body) {
+            let item = item.trim();
+            if !item.is_empty() {
+                items.push(parse_value(item, ln)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Json::Num(i as f64));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(Json::Num(f));
+    }
+    Err(err(ln, &format!("cannot parse value '{s}'")))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = vec![];
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::new();
+    let mut it = s.chars();
+    while let Some(c) = it.next() {
+        if c == '\\' {
+            match it.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let src = r#"
+# experiment config
+algo = "dilocox"
+
+[model]
+preset = "small"
+
+[train]
+outer_steps = 8
+local_steps = 125
+inner_lr = 3e-3
+overlap = true
+
+[compression]
+q_bits = 4
+rank = 64
+schedule = [1.0, 0.5, 0.25]
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("algo").unwrap().as_str(), Some("dilocox"));
+        assert_eq!(v.path("model.preset").unwrap().as_str(), Some("small"));
+        assert_eq!(v.path("train.local_steps").unwrap().as_usize(), Some(125));
+        assert_eq!(v.path("train.inner_lr").unwrap().as_f64(), Some(3e-3));
+        assert_eq!(v.path("train.overlap").unwrap().as_bool(), Some(true));
+        let sched = v.path("compression.schedule").unwrap().as_arr().unwrap();
+        assert_eq!(sched.len(), 3);
+        assert_eq!(sched[1].as_f64(), Some(0.5));
+    }
+
+    #[test]
+    fn dotted_keys_and_underscored_ints() {
+        let v = parse("a.b.c = 1_000_000\n[x]\ny.z = \"w\"").unwrap();
+        assert_eq!(v.path("a.b.c").unwrap().as_usize(), Some(1_000_000));
+        assert_eq!(v.path("x.y.z").unwrap().as_str(), Some("w"));
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let v = parse("k = \"a # b\" # real comment").unwrap();
+        assert_eq!(v.get("k").unwrap().as_str(), Some("a # b"));
+    }
+
+    #[test]
+    fn rejects_errors() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = @@").is_err());
+        assert!(parse("k = 1\nk = 2").is_err());
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let rows = v.get("m").unwrap().as_arr().unwrap();
+        assert_eq!(rows[1].at(0).unwrap().as_f64(), Some(3.0));
+    }
+}

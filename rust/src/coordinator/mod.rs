@@ -1,0 +1,426 @@
+//! Threaded coordinator: the decentralized process structure of the paper
+//! run for real — one OS thread per DP replica ("cluster"), each owning
+//! its own PJRT runtime, data shard, and dual optimizer, synchronizing
+//! pseudo-gradients with the chunked ring AllReduce from [`crate::comm`].
+//!
+//! One-step-delay overlap (§2.3) is realized *structurally*: each worker
+//! hands its pseudo-gradient to a communication thread that runs the ring
+//! collective while the worker immediately starts the next H local steps;
+//! the outer update at the end of round t+1 joins the round-t collective.
+//!
+//! All compression here is AllReduce-compatible (the paper's requirement):
+//! quantize-only runs one ring pass; Low-Rank ∘ Quantize runs the PowerSGD
+//! two-pass algebra (allreduce P̄, orthonormalize, allreduce Q̄') — every
+//! worker derives identical bases from a shared seed, so no parameter
+//! server is needed.
+
+use crate::comm::ring::{build_ring, RingMember};
+use crate::compress::{lowrank, quantize, Method};
+use crate::config::{Algo, ExperimentConfig};
+use crate::data::{MarkovCorpus, ShardIter};
+use crate::linalg::{matmul, matmul_at_b, matmul_bt, orthonormalize_columns, Mat};
+use crate::optim::{AdamW, Nesterov};
+use crate::runtime::manifest::ParamEntry;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Per-round report a worker sends to the leader.
+#[derive(Clone, Debug)]
+pub struct RoundReport {
+    pub worker: usize,
+    pub round: usize,
+    pub mean_loss: f32,
+    pub wire_bytes: u64,
+    pub h_steps: usize,
+}
+
+#[derive(Debug)]
+pub struct CoordinatorOutcome {
+    pub reports: Vec<RoundReport>,
+    pub final_eval: f32,
+    pub final_params: Vec<f32>,
+    pub total_wire_bytes: u64,
+}
+
+/// AllReduce-compatible compression state for the threaded path.
+struct WireCompressor {
+    method: Method,
+    seed: u64,
+    bases: HashMap<String, Mat>,
+}
+
+impl WireCompressor {
+    fn new(method: Method, seed: u64) -> Self {
+        WireCompressor { method, seed, bases: HashMap::new() }
+    }
+
+    /// Reduce `delta` across the ring in place (result = global mean of
+    /// the compressed deltas); returns payload bytes this worker sent.
+    fn reduce(
+        &mut self,
+        member: &RingMember,
+        delta: &mut [f32],
+        spec: &[ParamEntry],
+        step: u64,
+    ) -> Result<u64> {
+        match self.method.clone() {
+            Method::None => {
+                let payload = 4 * delta.len() as u64;
+                member.allreduce_mean(delta)?;
+                Ok(payload)
+            }
+            Method::Quant { q_bits } => {
+                quantize::quantize_dequantize(delta, q_bits);
+                member.allreduce_mean(delta)?;
+                Ok(quantize::wire_bytes(delta.len(), q_bits))
+            }
+            Method::LowRankQuant { rank, q_bits } => {
+                self.lowrank_reduce(member, delta, spec, step, rank, q_bits)
+            }
+            other => Err(anyhow!(
+                "method {:?} is not AllReduce-compatible (threaded path)",
+                other.name()
+            )),
+        }
+    }
+
+    fn lowrank_reduce(
+        &mut self,
+        member: &RingMember,
+        delta: &mut [f32],
+        spec: &[ParamEntry],
+        step: u64,
+        rank: usize,
+        q_bits: u32,
+    ) -> Result<u64> {
+        let mut payload_elems = 0usize;
+        let mut scales = 0usize;
+        for entry in spec {
+            let lo = entry.offset;
+            let hi = entry.offset + entry.numel();
+            if entry.shape.len() == 2 {
+                let (rows, cols) = (entry.shape[0], entry.shape[1]);
+                let r = lowrank::effective_rank(rank, rows, cols);
+                let q = self.bases.entry(entry.name.clone()).or_insert_with(|| {
+                    // Same seeding rule as compress::lowrank → identical
+                    // bases on every worker.
+                    let mut rng =
+                        Pcg32::new(self.seed ^ fnv(&entry.name), step);
+                    let mut m = Mat::zeros(cols, r);
+                    rng.fill_normal(&mut m.data, 0.0, 1.0);
+                    m
+                });
+                if q.cols != r {
+                    let mut rng =
+                        Pcg32::new(self.seed ^ fnv(&entry.name), step);
+                    let mut m = Mat::zeros(cols, r);
+                    for i in 0..cols {
+                        for j in 0..r {
+                            m.data[i * r + j] = if j < q.cols {
+                                q.data[i * q.cols + j]
+                            } else {
+                                rng.normal()
+                            };
+                        }
+                    }
+                    *q = m;
+                }
+                let mslab = Mat::from_slice(rows, cols, &delta[lo..hi]);
+                // Pass 1: P = M Q, ring-mean, quantize, orthonormalize.
+                let mut p = matmul(&mslab, q);
+                member.allreduce_mean(&mut p.data)?;
+                payload_elems += rows * r;
+                scales += 1;
+                if q_bits > 0 && q_bits < 32 {
+                    quantize::quantize_dequantize(&mut p.data, q_bits);
+                }
+                orthonormalize_columns(&mut p);
+                // Pass 2: Q' = Mᵀ P̂, ring-mean, quantize.
+                let mut qn = matmul_at_b(&mslab, &p);
+                member.allreduce_mean(&mut qn.data)?;
+                payload_elems += cols * r;
+                scales += 1;
+                if q_bits > 0 && q_bits < 32 {
+                    quantize::quantize_dequantize(&mut qn.data, q_bits);
+                }
+                self.bases.insert(entry.name.clone(), qn.clone());
+                let rec = matmul_bt(&p, &qn);
+                delta[lo..hi].copy_from_slice(&rec.data);
+            } else {
+                // 1-D segment: ring-mean, then snap to the q-bit grid —
+                // the same order as compress::lowrank so the threaded and
+                // reference paths agree bit-for-bit (up to ring fp order).
+                let mut seg = delta[lo..hi].to_vec();
+                member.allreduce_mean(&mut seg)?;
+                if q_bits > 0 && q_bits < 32 {
+                    quantize::quantize_dequantize(&mut seg, q_bits);
+                }
+                payload_elems += hi - lo;
+                scales += 1;
+                delta[lo..hi].copy_from_slice(&seg);
+            }
+        }
+        let bits = if q_bits == 0 { 32 } else { q_bits } as u64;
+        Ok((payload_elems as u64 * bits + 7) / 8 + 4 * scales as u64)
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run the full threaded coordinator: D worker threads + leader aggregation.
+pub fn run_threaded(cfg: &ExperimentConfig, artifacts_dir: &str) -> Result<CoordinatorOutcome> {
+    cfg.validate()?;
+    if !matches!(cfg.algo, Algo::DiLoCoX | Algo::OpenDiLoCo) {
+        return Err(anyhow!("threaded coordinator runs local-SGD algorithms"));
+    }
+    let d = cfg.parallel.dp;
+    let members = build_ring(d);
+    let meter = Arc::clone(&members[0].meter);
+    let (report_tx, report_rx) = mpsc::channel::<RoundReport>();
+
+    let method = crate::train::method_for(cfg);
+    if !method.allreduce_compatible() {
+        return Err(anyhow!("threaded coordinator needs AllReduce-compatible compression"));
+    }
+
+    let results: Vec<Result<(Vec<f32>, f32)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = members
+            .into_iter()
+            .enumerate()
+            .map(|(w, member)| {
+                let tx = report_tx.clone();
+                let cfg = cfg.clone();
+                let dir = artifacts_dir.to_string();
+                let method = method.clone();
+                scope.spawn(move || -> Result<(Vec<f32>, f32)> {
+                    worker_main(w, member, &cfg, &dir, method, tx)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    drop(report_tx);
+
+    let mut reports: Vec<RoundReport> = report_rx.into_iter().collect();
+    reports.sort_by_key(|r| (r.round, r.worker));
+
+    let mut finals = Vec::new();
+    for r in results {
+        finals.push(r.context("worker thread failed")?);
+    }
+    // All workers must agree on the final parameters (ring algebra is
+    // symmetric); verify instead of trusting.
+    let (p0, eval0) = &finals[0];
+    for (pi, _) in &finals[1..] {
+        let max_dev = p0
+            .iter()
+            .zip(pi)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        if max_dev > 1e-4 {
+            return Err(anyhow!("workers diverged: max param dev {max_dev}"));
+        }
+    }
+
+    Ok(CoordinatorOutcome {
+        reports,
+        final_eval: *eval0,
+        final_params: p0.clone(),
+        total_wire_bytes: meter.total(),
+    })
+}
+
+fn worker_main(
+    w: usize,
+    member: RingMember,
+    cfg: &ExperimentConfig,
+    dir: &str,
+    method: Method,
+    tx: mpsc::Sender<RoundReport>,
+) -> Result<(Vec<f32>, f32)> {
+    let rt = Runtime::load(dir)?;
+    rt.precompile(&["step_single", "eval_single"])?;
+    let man = &rt.manifest;
+    let spec = man.param_specs["single"].clone();
+    let n = man.param_count;
+    let (b, s) = (man.dims.microbatch, man.dims.seq_len);
+
+    let corpus = Arc::new(MarkovCorpus::new(man.dims.vocab_size, cfg.train.seed));
+    let mut shard = ShardIter::new(Arc::clone(&corpus), w, cfg.train.seed, b, s);
+    let mut params = man.read_f32(&man.init["single"].file)?;
+    // Global parameter track: moves only by outer updates; every worker
+    // computes the identical sequence (ring algebra is symmetric).
+    let mut theta_g = params.clone();
+    let mut inner = AdamW::new(n, cfg.train.inner_lr, cfg.train.weight_decay);
+    let mut outer = Nesterov::new(n, cfg.train.outer_lr, cfg.train.outer_momentum);
+    let mut error = vec![0.0f32; n];
+    let compressor = WireCompressor::new(method, cfg.train.seed);
+    let h = cfg.train.local_steps;
+
+    // Comm-thread handle for the in-flight reduction (overlap).  The ring
+    // member travels to the comm thread and back.
+    type Flight = std::thread::JoinHandle<Result<(RingMember, WireCompressor, Vec<f32>, u64)>>;
+    let mut member = Some(member);
+    let mut compressor_slot: Option<WireCompressor> = Some(compressor);
+    let mut in_flight: Option<(Flight, Vec<f32>)> = None;
+
+    for round in 1..=cfg.train.outer_steps {
+        let anchor = params.clone();
+        let mut loss_acc = 0.0f64;
+        for _ in 0..h {
+            let (tok, lab) = shard.next_batch();
+            let (loss, grads) = rt.step_single(&params, &tok, &lab)?;
+            inner.step(&mut params, &grads);
+            loss_acc += loss as f64;
+        }
+
+        let mut wire = 0u64;
+        if cfg.train.overlap {
+            // Join the previous round's collective (one-step delay),
+            // refresh e^t, THEN form δ^t, THEN apply the delayed outer
+            // update and resync — the Algorithm 2 ordering.
+            let mut delayed_avg: Option<Vec<f32>> = None;
+            if let Some((handle, raw_prev)) = in_flight.take() {
+                let (m, c, avg, bytes) = handle
+                    .join()
+                    .map_err(|_| anyhow!("comm thread panicked"))??;
+                member = Some(m);
+                compressor_slot = Some(c);
+                wire = bytes;
+                if cfg.compression.error_feedback {
+                    for i in 0..n {
+                        error[i] = raw_prev[i] - avg[i];
+                    }
+                }
+                delayed_avg = Some(avg);
+            }
+            // δ for this round, measured against this round's anchor.
+            let mut delta = vec![0.0f32; n];
+            for i in 0..n {
+                delta[i] = (anchor[i] - params[i]) + error[i];
+            }
+            let raw = delta.clone();
+            let m = member.take().expect("ring member in flight twice");
+            let mut c = compressor_slot.take().expect("compressor in flight");
+            let spec_cl = spec.clone();
+            let handle = std::thread::spawn(move || {
+                let bytes = c.reduce(&m, &mut delta, &spec_cl, 0)?;
+                Ok((m, c, delta, bytes))
+            });
+            in_flight = Some((handle, raw));
+            if let Some(avg) = delayed_avg {
+                outer.step(&mut theta_g, &avg);
+                params.copy_from_slice(&theta_g);
+            }
+        } else {
+            let mut delta = vec![0.0f32; n];
+            for i in 0..n {
+                delta[i] = (anchor[i] - params[i]) + error[i];
+            }
+            let raw = delta.clone();
+            let m = member.as_ref().unwrap();
+            let c = compressor_slot.as_mut().unwrap();
+            wire = c.reduce(m, &mut delta, &spec, round as u64)?;
+            if cfg.compression.error_feedback {
+                for i in 0..n {
+                    error[i] = raw[i] - delta[i];
+                }
+            }
+            outer.step(&mut theta_g, &delta);
+            params.copy_from_slice(&theta_g);
+        }
+
+        tx.send(RoundReport {
+            worker: w,
+            round,
+            mean_loss: (loss_acc / h as f64) as f32,
+            wire_bytes: wire,
+            h_steps: h,
+        })
+        .ok();
+    }
+
+    // Drain a trailing in-flight reduction.
+    if let Some((handle, _)) = in_flight.take() {
+        let (m, _, avg, _) =
+            handle.join().map_err(|_| anyhow!("comm thread panicked"))??;
+        member = Some(m);
+        outer.step(&mut theta_g, &avg);
+        params.copy_from_slice(&theta_g);
+    }
+    let _ = member;
+
+    // Shared eval set (same construction as the reference trainer).
+    let mut eval_iter =
+        ShardIter::new(Arc::clone(&corpus), 9999, cfg.train.seed ^ 0xe7a1, b, s);
+    let mut acc = 0.0f32;
+    let eval_batches = 3;
+    for _ in 0..eval_batches {
+        let (t, l) = eval_iter.next_batch();
+        acc += rt.eval_single(&params, &t, &l)?;
+    }
+    Ok((params, acc / eval_batches as f32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
+        std::path::Path::new(dir).exists().then(|| dir.to_string())
+    }
+
+    fn cfg(overlap: bool) -> ExperimentConfig {
+        let mut c = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        c.train.outer_steps = 3;
+        c.train.local_steps = 4;
+        c.train.inner_lr = 3e-3;
+        c.train.outer_lr = 0.5;
+        c.train.overlap = overlap;
+        c.compression.rank = 8;
+        c.compression.adaptive = false;
+        c
+    }
+
+    #[test]
+    fn threaded_workers_agree_and_learn_sync() {
+        let Some(dir) = tiny_dir() else { return };
+        let out = run_threaded(&cfg(false), &dir).unwrap();
+        assert_eq!(out.reports.len(), 3 * 2);
+        assert!(out.final_eval.is_finite());
+        assert!(out.total_wire_bytes > 0);
+        // Loss at round 3 below round 1 (averaged over workers).
+        let r1: f32 = out.reports[..2].iter().map(|r| r.mean_loss).sum::<f32>() / 2.0;
+        let r3: f32 = out.reports[4..].iter().map(|r| r.mean_loss).sum::<f32>() / 2.0;
+        assert!(r3 < r1 + 0.1, "r1={r1} r3={r3}");
+    }
+
+    #[test]
+    fn threaded_overlap_runs_and_converges() {
+        let Some(dir) = tiny_dir() else { return };
+        let out = run_threaded(&cfg(true), &dir).unwrap();
+        assert_eq!(out.reports.len(), 6);
+        assert!(out.final_eval.is_finite());
+        assert!(out.final_eval < 6.0, "eval={}", out.final_eval);
+    }
+
+    #[test]
+    fn rejects_non_allreduce_methods() {
+        let Some(dir) = tiny_dir() else { return };
+        let mut c = ExperimentConfig::default_for("tiny", Algo::CocktailSgd);
+        c.train.outer_steps = 1;
+        assert!(run_threaded(&c, &dir).is_err());
+    }
+}

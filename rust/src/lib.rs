@@ -1,0 +1,29 @@
+//! # DiLoCoX — low-communication decentralized training (reproduction)
+//!
+//! Rust + JAX + Pallas three-layer reproduction of *"DiLoCoX: A
+//! Low-Communication Large-Scale Training Framework for Decentralized
+//! Cluster"* (Qi et al., 2025).  See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * L3 (this crate): coordinator, trainers, collectives, compression,
+//!   optimizers, pipeline schedules, DES throughput simulator.
+//! * L2/L1 (python/, build-time only): jax stage programs + pallas kernels,
+//!   AOT-lowered to `artifacts/<preset>/*.hlo.txt` consumed by [`runtime`].
+
+pub mod comm;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod optim;
+pub mod pipeline;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;

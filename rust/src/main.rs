@@ -1,0 +1,313 @@
+//! dilocox — launcher CLI for the DiLoCoX reproduction.
+//!
+//! Subcommands:
+//!   train        run a real-numerics experiment (single-process trainer)
+//!   coordinate   run the threaded leader/worker coordinator
+//!   simulate     DES throughput at paper scale (Fig 4 / Table 1)
+//!   analyze      §2.4.1 communication-overhead analysis
+//!   inspect      print an artifact bundle's manifest summary
+//!
+//! `dilocox <cmd> --help` lists options; configs can also come from a TOML
+//! file via `--config path.toml` (see configs/).
+
+use dilocox::config::{Algo, ExperimentConfig};
+use dilocox::metrics::Table;
+use dilocox::report;
+use dilocox::sim;
+use dilocox::train::{run_experiment, RunOpts};
+use dilocox::util::cli::CliSpec;
+use dilocox::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&argv[1..]),
+        Some("coordinate") => cmd_coordinate(&argv[1..]),
+        Some("simulate") => cmd_simulate(&argv[1..]),
+        Some("analyze") => cmd_analyze(&argv[1..]),
+        Some("inspect") => cmd_inspect(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            eprintln!("{}", toplevel_usage());
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n\n{}", toplevel_usage());
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn toplevel_usage() -> String {
+    "dilocox — DiLoCoX decentralized-training reproduction\n\n\
+     Usage: dilocox <subcommand> [options]\n\n\
+     Subcommands:\n\
+       train        real-numerics training run (PJRT artifacts)\n\
+       coordinate   threaded leader/worker coordinator run\n\
+       simulate     paper-scale DES throughput (Fig 4 / Table 1)\n\
+       analyze      §2.4.1 communication-overhead analysis\n\
+       inspect      summarize an artifact bundle\n"
+        .to_string()
+}
+
+fn build_cfg(args: &dilocox::util::cli::Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = if !args.get("config").is_empty() {
+        ExperimentConfig::from_toml_file(args.get("config"))
+            .map_err(|e| e.to_string())?
+    } else {
+        let algo = Algo::parse(args.get("algo")).map_err(|e| e.to_string())?;
+        ExperimentConfig::default_for(args.get("preset"), algo)
+    };
+    if !args.get("outer-steps").is_empty() {
+        cfg.train.outer_steps = args.get_usize("outer-steps")?;
+    }
+    if !args.get("local-steps").is_empty() {
+        cfg.train.local_steps = args.get_usize("local-steps")?;
+    }
+    if !args.get("dp").is_empty() {
+        cfg.parallel.dp = args.get_usize("dp")?;
+        cfg.network.clusters = cfg.parallel.dp;
+    }
+    if args.flag("no-overlap") {
+        cfg.train.overlap = false;
+    }
+    if args.flag("no-compression") {
+        cfg.compression.enabled = false;
+    }
+    if !args.get("artifacts").is_empty() {
+        cfg.artifacts_dir = args.get("artifacts").to_string();
+    }
+    cfg.validate().map_err(|e| e.to_string())?;
+    Ok(cfg)
+}
+
+fn train_spec(name: &str, about: &str) -> CliSpec {
+    CliSpec::new(name, about)
+        .opt("config", "", "TOML config file (configs/*.toml)")
+        .opt("preset", "small", "artifact preset: tiny | small | e2e100m")
+        .opt("algo", "dilocox", "dilocox | allreduce | opendiloco | cocktail")
+        .opt("outer-steps", "", "outer steps T")
+        .opt("local-steps", "", "local steps H₁")
+        .opt("dp", "", "data-parallel replicas D")
+        .opt("artifacts", "", "artifact dir override")
+        .opt("csv", "", "write per-step metrics CSV here")
+        .flag("no-overlap", "disable one-step-delay overlap (ablation)")
+        .flag("no-compression", "disable gradient compression (ablation)")
+        .flag("quiet", "suppress progress logs")
+}
+
+fn cmd_train(argv: &[String]) -> i32 {
+    let spec = train_spec("dilocox train", "real-numerics training run");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = match build_cfg(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let opts = RunOpts { quiet: args.flag("quiet"), ..Default::default() };
+    match run_experiment(&cfg, &opts) {
+        Ok(out) => {
+            let m = &out.metrics;
+            println!(
+                "{}: final eval loss {:.4} | {} tokens | wire {} | modeled {} | {:.1} tok/s",
+                cfg.algo.name(),
+                m.final_eval_loss.unwrap_or(f32::NAN),
+                m.total_tokens(),
+                fmt_bytes(m.total_wire_bytes()),
+                fmt_secs(m.total_elapsed()),
+                m.tokens_per_sec()
+            );
+            if !args.get("csv").is_empty() {
+                if let Err(e) = m.write_csv(args.get("csv")) {
+                    eprintln!("writing csv: {e}");
+                    return 1;
+                }
+                println!("wrote {}", args.get("csv"));
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_coordinate(argv: &[String]) -> i32 {
+    let spec = train_spec("dilocox coordinate", "threaded leader/worker run");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cfg = match build_cfg(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let dir = cfg.artifacts_dir.clone();
+    match dilocox::coordinator::run_threaded(&cfg, &dir) {
+        Ok(out) => {
+            let rounds = cfg.train.outer_steps;
+            for r in 1..=rounds {
+                let losses: Vec<f32> = out
+                    .reports
+                    .iter()
+                    .filter(|x| x.round == r)
+                    .map(|x| x.mean_loss)
+                    .collect();
+                println!(
+                    "round {r}: mean loss {:.4} over {} workers",
+                    dilocox::util::mean(&losses),
+                    losses.len()
+                );
+            }
+            println!(
+                "final eval {:.4}; ring traffic {}",
+                out.final_eval,
+                fmt_bytes(out.total_wire_bytes)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("coordinate failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_simulate(argv: &[String]) -> i32 {
+    let spec = CliSpec::new("dilocox simulate", "paper-scale DES throughput")
+        .opt("scale", "both", "1.3b | 107b | both")
+        .opt("rounds", "12", "outer rounds to simulate");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let rounds = args.get_usize("rounds").unwrap_or(12);
+    let scales: Vec<sim::ScaleConfig> = match args.get("scale") {
+        "1.3b" => vec![sim::ScaleConfig::opt_1_3b()],
+        "107b" => vec![sim::ScaleConfig::qwen_107b()],
+        _ => vec![sim::ScaleConfig::opt_1_3b(), sim::ScaleConfig::qwen_107b()],
+    };
+    for s in scales {
+        let rows = sim::figure4_row(&s, rounds);
+        let paper: &[(&str, f64)] = if s.params > 10e9 {
+            &report::paper::FIG4_107B
+        } else {
+            &report::paper::FIG4_1_3B
+        };
+        println!("{}", report::figure4_table(&s.name, paper, &rows));
+    }
+    0
+}
+
+fn cmd_analyze(argv: &[String]) -> i32 {
+    let spec = CliSpec::new("dilocox analyze", "§2.4.1 comm-overhead analysis")
+        .opt("params", "100e9", "model parameters θ")
+        .opt("clusters", "3", "clusters C")
+        .opt("gbps", "1.0", "inter-cluster bandwidth")
+        .opt("local-steps", "500", "H (1 s each, paper's example)");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let theta: f64 = args.get("params").parse().unwrap_or(100e9);
+    let c = args.get_usize("clusters").unwrap_or(3);
+    let gbps = args.get_f64("gbps").unwrap_or(1.0);
+    let h = args.get_usize("local-steps").unwrap_or(500);
+    let wire = 2.0 * (c as f64 - 1.0) / c as f64 * theta * 4.0;
+    let net = dilocox::config::NetworkConfig {
+        clusters: c,
+        inter_bw_gbps: gbps,
+        intra_bw_gbps: 100.0,
+        latency_ms: 0.0,
+    };
+    let secs = dilocox::comm::ring_allreduce_seconds((theta * 4.0) as u64, &net);
+    let local = h as f64 * 1.0;
+    let mut t = Table::new(&["quantity", "value", "paper (§2.4.1)"]);
+    t.row(&[
+        "ring wire between clusters".into(),
+        format!("{:.1} GB", wire / 1e9),
+        format!("{:.1} GB", report::paper::COMM_ANALYSIS_GB),
+    ]);
+    t.row(&[
+        "transfer time".into(),
+        format!("{:.2} h", secs / 3600.0),
+        format!("{:.2} h", report::paper::COMM_ANALYSIS_HOURS),
+    ]);
+    t.row(&[
+        format!("local training (H={h} x 1 s)"),
+        format!("{:.2} h", local / 3600.0),
+        "0.13 h".into(),
+    ]);
+    t.row(&[
+        "idle fraction without overlap/compression".into(),
+        format!("{:.0}%", 100.0 * (secs - local).max(0.0) / secs),
+        "~88%".into(),
+    ]);
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_inspect(argv: &[String]) -> i32 {
+    let spec = CliSpec::new("dilocox inspect", "summarize an artifact bundle")
+        .opt("artifacts", "artifacts/tiny", "bundle directory");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match dilocox::runtime::Manifest::load(args.get("artifacts")) {
+        Ok(m) => {
+            println!(
+                "preset {} | {} params | pallas={} | {} programs",
+                m.preset,
+                m.param_count,
+                m.use_pallas,
+                m.programs.len()
+            );
+            let mut t = Table::new(&["program", "inputs", "outputs", "file"]);
+            for (name, p) in &m.programs {
+                let sig = |ts: &[dilocox::runtime::TensorSig]| {
+                    ts.iter()
+                        .map(|t| format!("{:?}", t.shape))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                };
+                t.row(&[
+                    name.clone(),
+                    sig(&p.inputs),
+                    sig(&p.outputs),
+                    p.file.clone(),
+                ]);
+            }
+            println!("{}", t.render());
+            0
+        }
+        Err(e) => {
+            eprintln!("inspect failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Metrics: per-outer-step records from the trainers (loss, tokens, wire
+//! bytes, simulated comm/compute time) and CSV/JSON export consumed by the
+//! benches and EXPERIMENTS.md tables.
+
+use crate::util::json::{obj, Json};
+use std::io::Write;
+
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub outer_step: usize,
+    /// Mean training loss over this outer step's inner steps.
+    pub loss: f32,
+    /// Local (inner) steps executed in this outer step.
+    pub inner_steps: usize,
+    pub tokens: u64,
+    /// Bytes one worker put on the WAN for this outer step.
+    pub wire_bytes: u64,
+    /// Achieved compression ratio for this sync.
+    pub compression_ratio: f64,
+    /// Rank used by the adaptive controller (0 = n/a).
+    pub rank: usize,
+    /// Wall-clock seconds spent in compute for this outer step.
+    pub compute_secs: f64,
+    /// *Modeled* WAN communication seconds for this outer step
+    /// (ring/PS time at the configured bandwidth).
+    pub comm_secs: f64,
+    /// Modeled elapsed for the step after overlap policy is applied.
+    pub elapsed_secs: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub name: String,
+    pub records: Vec<StepRecord>,
+    pub final_eval_loss: Option<f32>,
+}
+
+impl RunMetrics {
+    pub fn new(name: impl Into<String>) -> Self {
+        RunMetrics { name: name.into(), ..Default::default() }
+    }
+
+    pub fn push(&mut self, r: StepRecord) {
+        self.records.push(r);
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.records.iter().map(|r| r.tokens).sum()
+    }
+
+    pub fn total_wire_bytes(&self) -> u64 {
+        self.records.iter().map(|r| r.wire_bytes).sum()
+    }
+
+    pub fn total_elapsed(&self) -> f64 {
+        self.records.iter().map(|r| r.elapsed_secs).sum()
+    }
+
+    /// Modeled throughput in tokens/s (the Fig. 4 metric).
+    pub fn tokens_per_sec(&self) -> f64 {
+        let t = self.total_elapsed();
+        if t > 0.0 {
+            self.total_tokens() as f64 / t
+        } else {
+            0.0
+        }
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.final_eval_loss
+            .or_else(|| self.records.last().map(|r| r.loss))
+    }
+
+    /// Loss curve as (cumulative inner step, loss) pairs.
+    pub fn loss_curve(&self) -> Vec<(usize, f32)> {
+        let mut out = Vec::with_capacity(self.records.len());
+        let mut steps = 0usize;
+        for r in &self.records {
+            steps += r.inner_steps;
+            out.push((steps, r.loss));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "outer_step,loss,inner_steps,tokens,wire_bytes,compression_ratio,rank,compute_secs,comm_secs,elapsed_secs\n",
+        );
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{},{},{:.3},{},{:.6},{:.6},{:.6}\n",
+                r.outer_step,
+                r.loss,
+                r.inner_steps,
+                r.tokens,
+                r.wire_bytes,
+                r.compression_ratio,
+                r.rank,
+                r.compute_secs,
+                r.comm_secs,
+                r.elapsed_secs
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            (
+                "final_loss",
+                self.last_loss().map(|l| Json::Num(l as f64)).unwrap_or(Json::Null),
+            ),
+            ("tokens", Json::from(self.total_tokens() as usize)),
+            ("wire_bytes", Json::from(self.total_wire_bytes() as usize)),
+            ("elapsed_secs", Json::Num(self.total_elapsed())),
+            ("tokens_per_sec", Json::Num(self.tokens_per_sec())),
+            (
+                "loss_curve",
+                Json::Arr(
+                    self.loss_curve()
+                        .into_iter()
+                        .map(|(s, l)| {
+                            Json::Arr(vec![Json::from(s), Json::Num(l as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn write_csv(&self, path: &str) -> anyhow::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Fixed-width table printer shared by the benches (paper-style rows).
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (c, cell) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}  ", cell, w = widths[c]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        out.push_str(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  "),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, loss: f32, tokens: u64, secs: f64) -> StepRecord {
+        StepRecord {
+            outer_step: step,
+            loss,
+            inner_steps: 10,
+            tokens,
+            wire_bytes: 100,
+            compression_ratio: 8.0,
+            rank: 4,
+            compute_secs: secs * 0.8,
+            comm_secs: secs * 0.2,
+            elapsed_secs: secs,
+        }
+    }
+
+    #[test]
+    fn throughput_and_totals() {
+        let mut m = RunMetrics::new("t");
+        m.push(rec(0, 5.0, 1000, 2.0));
+        m.push(rec(1, 4.0, 1000, 2.0));
+        assert_eq!(m.total_tokens(), 2000);
+        assert_eq!(m.tokens_per_sec(), 500.0);
+        assert_eq!(m.last_loss(), Some(4.0));
+        assert_eq!(m.loss_curve(), vec![(10, 5.0), (20, 4.0)]);
+    }
+
+    #[test]
+    fn csv_and_json_roundtrip() {
+        let mut m = RunMetrics::new("t");
+        m.push(rec(0, 5.0, 10, 1.0));
+        let csv = m.to_csv();
+        assert!(csv.lines().count() == 2);
+        assert!(csv.contains("outer_step"));
+        let j = m.to_json();
+        assert_eq!(j.get("tokens").unwrap().as_usize(), Some(10));
+        // JSON serializes and re-parses.
+        let re = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(re.get("name").unwrap().as_str(), Some("t"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Configuration", "Loss", "Throughput"]);
+        t.row(&["Full DiLoCoX".into(), "4.20".into(), "3728".into()]);
+        t.row(&["AllReduce".into(), "3.90".into(), "10.4".into()]);
+        let s = t.render();
+        assert!(s.contains("Full DiLoCoX"));
+        assert_eq!(s.lines().count(), 4);
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(widths[0] >= widths[2] - 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Host-side parameter store: flat f32 vectors laid out exactly as the
+//! manifest's param specs (which mirror python/compile/model.py).  The
+//! single-stage layout is the concatenation of the pipeline stage layouts —
+//! an invariant exported by aot.py and re-checked here.
+
+use crate::runtime::manifest::{Manifest, ParamEntry};
+use anyhow::{anyhow, Result};
+use std::ops::Range;
+
+/// Flat parameter vector + its layout.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub kind: String,
+    pub flat: Vec<f32>,
+    pub spec: Vec<ParamEntry>,
+}
+
+impl ParamStore {
+    pub fn from_manifest(man: &Manifest, init_key: &str) -> Result<ParamStore> {
+        let init = man
+            .init
+            .get(init_key)
+            .ok_or_else(|| anyhow!("no init entry '{init_key}'"))?;
+        let flat = man.read_f32(&init.file)?;
+        let spec = man
+            .param_specs
+            .get(&init.kind)
+            .ok_or_else(|| anyhow!("no param spec '{}'", init.kind))?
+            .clone();
+        let store = ParamStore { kind: init.kind.clone(), flat, spec };
+        store.validate()?;
+        Ok(store)
+    }
+
+    pub fn zeros_like(&self) -> Vec<f32> {
+        vec![0.0; self.flat.len()]
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let total: usize = self.spec.iter().map(|e| e.numel()).sum();
+        if total != self.flat.len() {
+            return Err(anyhow!(
+                "flat len {} != spec total {total}",
+                self.flat.len()
+            ));
+        }
+        let mut off = 0;
+        for e in &self.spec {
+            if e.offset != off {
+                return Err(anyhow!("non-contiguous spec at {}", e.name));
+            }
+            off += e.numel();
+        }
+        Ok(())
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ParamEntry> {
+        self.spec.iter().find(|e| e.name == name)
+    }
+
+    pub fn view(&self, name: &str) -> Option<&[f32]> {
+        self.entry(name)
+            .map(|e| &self.flat[e.offset..e.offset + e.numel()])
+    }
+
+    /// Entries that are 2-D matrices (the low-rank compressor targets
+    /// these; 1-D params are quantize-only, mirroring PowerSGD practice).
+    pub fn matrix_entries(spec: &[ParamEntry]) -> Vec<&ParamEntry> {
+        spec.iter().filter(|e| e.shape.len() == 2).collect()
+    }
+}
+
+/// Ranges of each pipeline stage's parameters inside the single flat
+/// layout (single == concat(stage layouts), validated by tests/aot).
+pub fn stage_ranges(man: &Manifest) -> Vec<Range<usize>> {
+    let kinds = man.stage_kinds();
+    let mut out = Vec::with_capacity(kinds.len());
+    let mut off = 0usize;
+    for kind in kinds {
+        let n = man.stage_numel[kind];
+        out.push(off..off + n);
+        off += n;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_man() -> Option<Manifest> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
+        std::path::Path::new(dir)
+            .exists()
+            .then(|| Manifest::load(dir).unwrap())
+    }
+
+    #[test]
+    fn loads_and_validates_single() {
+        let Some(man) = tiny_man() else { return };
+        let ps = ParamStore::from_manifest(&man, "single").unwrap();
+        assert_eq!(ps.flat.len(), man.param_count);
+        // LayerNorm gains are exported as ones.
+        let g = ps.view("layer0.ln1_g").unwrap();
+        assert!(g.iter().all(|&x| x == 1.0));
+        let bq = ps.view("layer0.bq").unwrap();
+        assert!(bq.iter().all(|&x| x == 0.0));
+        assert!(ps.view("nope").is_none());
+    }
+
+    #[test]
+    fn stage_ranges_tile_the_single_layout() {
+        let Some(man) = tiny_man() else { return };
+        let ranges = stage_ranges(&man);
+        assert_eq!(ranges.len(), man.dims.pp_stages);
+        assert_eq!(ranges[0].start, 0);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        assert_eq!(ranges.last().unwrap().end, man.param_count);
+    }
+
+    #[test]
+    fn stage_init_concat_equals_single_init() {
+        let Some(man) = tiny_man() else { return };
+        let single = ParamStore::from_manifest(&man, "single").unwrap();
+        let mut concat = Vec::new();
+        for i in 0..man.dims.pp_stages {
+            let s = ParamStore::from_manifest(&man, &format!("stage_{i}")).unwrap();
+            concat.extend_from_slice(&s.flat);
+        }
+        assert_eq!(concat, single.flat);
+    }
+
+    #[test]
+    fn matrix_entries_are_2d() {
+        let Some(man) = tiny_man() else { return };
+        let spec = &man.param_specs["single"];
+        let mats = ParamStore::matrix_entries(spec);
+        assert!(mats.iter().all(|e| e.shape.len() == 2));
+        // tok_emb, pos_emb, per-layer wq/wk/wv/wo/w1/w2, head_w
+        assert_eq!(mats.len(), 2 + 6 * man.dims.n_layers + 1);
+    }
+}

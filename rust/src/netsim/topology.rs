@@ -1,0 +1,153 @@
+//! Cluster topology for the decentralized-training simulation: C clusters
+//! (DP groups on opposite sides of slow WAN links), each with `pp` workers
+//! chained by fast intra-cluster links — the paper's Figure 1 layout.
+
+use super::{Link, Resource};
+use crate::config::NetworkConfig;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WorkerId {
+    pub cluster: usize,
+    pub stage: usize,
+}
+
+#[derive(Debug)]
+pub struct Topology {
+    pub clusters: usize,
+    pub stages: usize,
+    /// One compute resource per worker (GPU stream).
+    pub gpus: Vec<Resource>,
+    /// Dedicated comm engine per worker (NCCL-style: comm kernels run on
+    /// copy engines and genuinely overlap with compute).
+    pub comm_engines: Vec<Resource>,
+    /// Intra-cluster stage-to-stage links: index [cluster][stage] connects
+    /// stage -> stage+1.
+    pub intra: Vec<Vec<Link>>,
+    /// One shared WAN "bus" per ring direction between adjacent clusters:
+    /// inter[c] connects cluster c -> (c+1) % C.
+    pub inter: Vec<Link>,
+}
+
+impl Topology {
+    pub fn new(net: &NetworkConfig, stages: usize) -> Self {
+        let clusters = net.clusters;
+        let mut gpus = Vec::new();
+        let mut comm_engines = Vec::new();
+        let mut intra = Vec::new();
+        for c in 0..clusters {
+            let mut links = Vec::new();
+            for s in 0..stages {
+                gpus.push(Resource::new(format!("gpu[c{c},s{s}]")));
+                comm_engines.push(Resource::new(format!("nic[c{c},s{s}]")));
+                if s + 1 < stages {
+                    links.push(Link::new(
+                        format!("intra[c{c},{s}->{}]", s + 1),
+                        net.intra_bw_gbps,
+                        0.01, // 10 µs in-cluster latency
+                    ));
+                }
+            }
+            intra.push(links);
+        }
+        let inter = (0..clusters)
+            .map(|c| {
+                Link::new(
+                    format!("wan[{c}->{}]", (c + 1) % clusters),
+                    net.inter_bw_gbps,
+                    net.latency_ms,
+                )
+            })
+            .collect();
+        Topology { clusters, stages, gpus, comm_engines, intra, inter }
+    }
+
+    pub fn gpu_index(&self, w: WorkerId) -> usize {
+        w.cluster * self.stages + w.stage
+    }
+
+    pub fn gpu(&mut self, w: WorkerId) -> &mut Resource {
+        let i = self.gpu_index(w);
+        &mut self.gpus[i]
+    }
+
+    pub fn comm_engine(&mut self, w: WorkerId) -> &mut Resource {
+        let i = self.gpu_index(w);
+        &mut self.comm_engines[i]
+    }
+
+    /// Link used by stage s -> s+1 inside cluster c.
+    pub fn intra_link(&mut self, c: usize, s: usize) -> &mut Link {
+        &mut self.intra[c][s]
+    }
+
+    /// WAN link leaving cluster c toward (c+1) % C.
+    pub fn inter_link(&mut self, c: usize) -> &mut Link {
+        &mut self.inter[c]
+    }
+
+    /// Total bytes that crossed WAN links.
+    pub fn wan_bytes(&self) -> u64 {
+        self.inter.iter().map(|l| l.bytes_total).sum()
+    }
+
+    pub fn worker_ids(&self) -> Vec<WorkerId> {
+        let mut out = Vec::with_capacity(self.clusters * self.stages);
+        for cluster in 0..self.clusters {
+            for stage in 0..self.stages {
+                out.push(WorkerId { cluster, stage });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net(clusters: usize) -> NetworkConfig {
+        NetworkConfig {
+            clusters,
+            inter_bw_gbps: 1.0,
+            intra_bw_gbps: 100.0,
+            latency_ms: 30.0,
+        }
+    }
+
+    #[test]
+    fn builds_paper_figure1_layout() {
+        // 2 clusters x 8 stages = 16 workers (paper Fig. 1 example).
+        let t = Topology::new(&net(2), 8);
+        assert_eq!(t.gpus.len(), 16);
+        assert_eq!(t.intra[0].len(), 7);
+        assert_eq!(t.inter.len(), 2);
+        assert_eq!(t.worker_ids().len(), 16);
+    }
+
+    #[test]
+    fn gpu_indexing_is_bijective() {
+        let t = Topology::new(&net(3), 4);
+        let mut seen = std::collections::HashSet::new();
+        for w in t.worker_ids() {
+            assert!(seen.insert(t.gpu_index(w)));
+        }
+        assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn wan_byte_accounting() {
+        let mut t = Topology::new(&net(2), 1);
+        t.inter_link(0).transfer(0.0, 1000);
+        t.inter_link(1).transfer(0.0, 500);
+        assert_eq!(t.wan_bytes(), 1500);
+    }
+
+    #[test]
+    fn intra_much_faster_than_inter() {
+        let mut t = Topology::new(&net(2), 2);
+        let bytes = 100_000_000;
+        let (_, intra_end) = t.intra_link(0, 0).transfer(0.0, bytes);
+        let (_, inter_end) = t.inter_link(0).transfer(0.0, bytes);
+        assert!(inter_end > 50.0 * intra_end);
+    }
+}

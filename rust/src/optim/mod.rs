@@ -1,0 +1,179 @@
+//! Dual Optimizer Policy (paper §2.2): every worker holds a fraction of
+//! *both* optimizers — the inner AdamW driving the H local steps and the
+//! outer Nesterov applying averaged pseudo-gradients.
+//!
+//! Host implementations mirror the exported HLO programs bit-for-bit in
+//! algebra (see python/compile/model.py adamw_step / nesterov_step); the
+//! integration suite cross-checks them against the `adamw_single` /
+//! `nesterov_single` artifacts.  The trainer uses the host path on the hot
+//! loop (no Literal round-trip) and the HLO path in composition tests.
+
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+
+/// Inner optimizer state (AdamW) over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct AdamW {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: u64,
+    pub lr: f32,
+    pub weight_decay: f32,
+}
+
+impl AdamW {
+    pub fn new(n: usize, lr: f32, weight_decay: f32) -> Self {
+        AdamW { m: vec![0.0; n], v: vec![0.0; n], t: 0, lr, weight_decay }
+    }
+
+    /// One AdamW step: updates params in place.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let t = self.t as f32;
+        let bc1 = 1.0 - ADAM_B1.powf(t);
+        let bc2 = 1.0 - ADAM_B2.powf(t);
+        let lr = self.lr;
+        let wd = self.weight_decay;
+        for i in 0..params.len() {
+            let g = grads[i];
+            self.m[i] = ADAM_B1 * self.m[i] + (1.0 - ADAM_B1) * g;
+            self.v[i] = ADAM_B2 * self.v[i] + (1.0 - ADAM_B2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * (mhat / (vhat.sqrt() + ADAM_EPS) + wd * params[i]);
+        }
+    }
+
+    /// Reset step count and moments (outer-step boundary policies that
+    /// restart inner state — not used by default, exposed for ablations).
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+}
+
+/// Outer optimizer (SGD with Nesterov momentum, DiLoCo convention):
+/// delta = θ_old − θ_new (averaged pseudo-gradient).
+#[derive(Clone, Debug)]
+pub struct Nesterov {
+    pub buf: Vec<f32>,
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+impl Nesterov {
+    pub fn new(n: usize, lr: f32, momentum: f32) -> Self {
+        Nesterov { buf: vec![0.0; n], lr, momentum }
+    }
+
+    pub fn step(&mut self, params: &mut [f32], delta: &[f32]) {
+        assert_eq!(params.len(), self.buf.len());
+        assert_eq!(delta.len(), self.buf.len());
+        let mu = self.momentum;
+        let lr = self.lr;
+        for i in 0..params.len() {
+            self.buf[i] = mu * self.buf[i] + delta[i];
+            params[i] -= lr * (delta[i] + mu * self.buf[i]);
+        }
+    }
+}
+
+/// The paper's per-worker optimizer pair.
+#[derive(Clone, Debug)]
+pub struct DualOptimizer {
+    pub inner: AdamW,
+    pub outer: Nesterov,
+}
+
+impl DualOptimizer {
+    pub fn new(
+        n: usize,
+        inner_lr: f32,
+        weight_decay: f32,
+        outer_lr: f32,
+        outer_momentum: f32,
+    ) -> Self {
+        DualOptimizer {
+            inner: AdamW::new(n, inner_lr, weight_decay),
+            outer: Nesterov::new(n, outer_lr, outer_momentum),
+        }
+    }
+
+    /// Bytes of optimizer state this worker holds — the §2.2 VRAM
+    /// balance argument (AdamW m+v plus the outer momentum buffer).
+    pub fn state_bytes(&self) -> u64 {
+        4 * (self.inner.m.len() + self.inner.v.len() + self.outer.buf.len())
+            as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adamw_first_step_is_signed_lr() {
+        // t=1, zero state: mhat/(sqrt(vhat)+eps) == sign(g).
+        let mut p = vec![0.0f32; 4];
+        let g = vec![1.0f32, -1.0, 2.0, 0.0];
+        let mut opt = AdamW::new(4, 0.1, 0.0);
+        opt.step(&mut p, &g);
+        let want = [-0.1f32, 0.1, -0.1, 0.0];
+        for (a, b) in p.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn adamw_weight_decay_shrinks_params() {
+        let mut p = vec![1.0f32; 8];
+        let g = vec![0.0f32; 8];
+        let mut opt = AdamW::new(8, 0.01, 0.1);
+        opt.step(&mut p, &g);
+        assert!(p.iter().all(|&x| x < 1.0 && x > 0.99));
+    }
+
+    #[test]
+    fn nesterov_matches_python_reference_algebra() {
+        // Mirrors test_optim.py::test_nesterov_momentum_accumulates.
+        let mut p = vec![0.0f32; 8];
+        let delta = vec![1.0f32; 8];
+        let mut opt = Nesterov::new(8, 1.0, 0.9);
+        opt.step(&mut p, &delta);
+        assert!(p.iter().all(|&x| (x + 1.9).abs() < 1e-6));
+        opt.step(&mut p, &delta);
+        assert!(p.iter().all(|&x| (x + 4.61).abs() < 1e-5), "{p:?}");
+    }
+
+    #[test]
+    fn adamw_converges_on_quadratic() {
+        // min (x - 3)^2 — AdamW should get close in a few hundred steps.
+        let mut p = vec![0.0f32];
+        let mut opt = AdamW::new(1, 0.05, 0.0);
+        for _ in 0..400 {
+            let g = vec![2.0 * (p[0] - 3.0)];
+            opt.step(&mut p, &g);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "p={}", p[0]);
+    }
+
+    #[test]
+    fn dual_optimizer_state_accounting() {
+        let d = DualOptimizer::new(1000, 1e-3, 0.0, 0.7, 0.9);
+        assert_eq!(d.state_bytes(), 4 * 3000);
+    }
+
+    #[test]
+    fn reset_clears_moments() {
+        let mut opt = AdamW::new(2, 0.1, 0.0);
+        let mut p = vec![1.0f32, 2.0];
+        opt.step(&mut p, &[1.0, 1.0]);
+        assert!(opt.t == 1 && opt.m[0] != 0.0);
+        opt.reset();
+        assert!(opt.t == 0 && opt.m[0] == 0.0 && opt.v[1] == 0.0);
+    }
+}

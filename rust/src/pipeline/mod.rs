@@ -1,0 +1,206 @@
+//! Pipeline parallelism (paper §2.2): stage partitioning and microbatch
+//! schedules.  The schedule is expressed as an abstract op sequence that
+//! both the real executor (coordinator, running per-stage HLO programs)
+//! and the DES throughput simulator consume — one source of truth for the
+//! dependency structure and therefore for bubble fractions.
+
+/// One scheduled cell: stage `stage` runs a forward or backward for
+/// microbatch `micro`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cell {
+    pub stage: usize,
+    pub micro: usize,
+    pub is_forward: bool,
+}
+
+/// GPipe fill-drain: all forwards (in microbatch-major order), then all
+/// backwards (reverse).  Bubble fraction = (M−1)/(M−1+U) per phase.
+pub fn gpipe_schedule(stages: usize, micros: usize) -> Vec<Cell> {
+    let mut cells = Vec::with_capacity(2 * stages * micros);
+    for m in 0..micros {
+        for s in 0..stages {
+            cells.push(Cell { stage: s, micro: m, is_forward: true });
+        }
+    }
+    for m in (0..micros).rev() {
+        for s in (0..stages).rev() {
+            cells.push(Cell { stage: s, micro: m, is_forward: false });
+        }
+    }
+    cells
+}
+
+/// 1F1B (PipeDream-flush): warm-up forwards, steady-state alternation,
+/// drain backwards.  Same bubble as GPipe but bounded activation memory
+/// (≤ stages in flight instead of ≤ micros).
+pub fn one_f_one_b_schedule(stages: usize, micros: usize) -> Vec<Vec<Cell>> {
+    // Per-stage op streams (each stage executes its own stream in order).
+    let mut streams = vec![Vec::new(); stages];
+    for (s, stream) in streams.iter_mut().enumerate() {
+        let warmup = (stages - 1 - s).min(micros);
+        let mut next_f = 0usize;
+        let mut next_b = 0usize;
+        for _ in 0..warmup {
+            stream.push(Cell { stage: s, micro: next_f, is_forward: true });
+            next_f += 1;
+        }
+        while next_b < micros {
+            if next_f < micros {
+                stream.push(Cell { stage: s, micro: next_f, is_forward: true });
+                next_f += 1;
+            }
+            stream.push(Cell { stage: s, micro: next_b, is_forward: false });
+            next_b += 1;
+        }
+    }
+    streams
+}
+
+/// Validity check used by both executors and property tests: within each
+/// stage ops are ordered, forward of (s, m) precedes forward of (s+1, m),
+/// backward of (s, m) precedes backward of (s−1, m), and the backward of
+/// the last stage follows its forward.
+pub fn validate_schedule(streams: &[Vec<Cell>], micros: usize) -> Result<(), String> {
+    let stages = streams.len();
+    // Build a global happens-before by simulating stage streams with
+    // availability times.
+    // pos[s][m].0 = forward done flag, .1 backward done flag
+    let mut fwd_done = vec![vec![false; micros]; stages];
+    let mut bwd_done = vec![vec![false; micros]; stages];
+    let mut idx = vec![0usize; stages];
+    let total: usize = streams.iter().map(|s| s.len()).sum();
+    let mut executed = 0usize;
+    while executed < total {
+        let mut progressed = false;
+        for s in 0..stages {
+            while idx[s] < streams[s].len() {
+                let c = streams[s][idx[s]];
+                let ready = if c.is_forward {
+                    s == 0 || fwd_done[s - 1][c.micro]
+                } else if s == stages - 1 {
+                    fwd_done[s][c.micro]
+                } else {
+                    bwd_done[s + 1][c.micro] && fwd_done[s][c.micro]
+                };
+                if !ready {
+                    break;
+                }
+                if c.is_forward {
+                    fwd_done[s][c.micro] = true;
+                } else {
+                    bwd_done[s][c.micro] = true;
+                }
+                idx[s] += 1;
+                executed += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return Err(format!(
+                "schedule deadlock at {executed}/{total} ops"
+            ));
+        }
+    }
+    for s in 0..stages {
+        for m in 0..micros {
+            if !fwd_done[s][m] || !bwd_done[s][m] {
+                return Err(format!("missing op for stage {s} micro {m}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Partition L layers over M stages (equal split required, as in aot.py).
+pub fn layers_per_stage(n_layers: usize, stages: usize) -> Result<usize, String> {
+    if stages == 0 || n_layers % stages != 0 {
+        return Err(format!("{n_layers} layers not divisible by {stages} stages"));
+    }
+    Ok(n_layers / stages)
+}
+
+/// Ideal-pipeline bubble fraction for a fill-drain schedule.
+pub fn bubble_fraction(stages: usize, micros: usize) -> f64 {
+    let m = stages as f64;
+    let u = micros as f64;
+    (m - 1.0) / (m - 1.0 + u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::props;
+
+    #[test]
+    fn gpipe_has_all_cells_in_dependency_order() {
+        let cells = gpipe_schedule(4, 3);
+        assert_eq!(cells.len(), 2 * 4 * 3);
+        // Split into per-stage streams and validate.
+        let mut streams = vec![Vec::new(); 4];
+        for c in cells {
+            streams[c.stage].push(c);
+        }
+        validate_schedule(&streams, 3).unwrap();
+    }
+
+    #[test]
+    fn one_f_one_b_is_valid_property() {
+        props(61).runs(40).check(|g| {
+            let stages = g.usize_in(1, 8);
+            let micros = g.usize_in(1, 12);
+            let streams = one_f_one_b_schedule(stages, micros);
+            validate_schedule(&streams, micros).map_err(|e| e)
+        });
+    }
+
+    #[test]
+    fn one_f_one_b_bounds_in_flight_activations() {
+        let stages = 4;
+        let micros = 12;
+        let streams = one_f_one_b_schedule(stages, micros);
+        for (s, stream) in streams.iter().enumerate() {
+            let mut live: i64 = 0;
+            let mut peak: i64 = 0;
+            for c in stream {
+                live += if c.is_forward { 1 } else { -1 };
+                peak = peak.max(live);
+            }
+            let bound = (stages - s) as i64;
+            assert!(peak <= bound, "stage {s}: peak {peak} > {bound}");
+        }
+    }
+
+    #[test]
+    fn stage0_of_1f1b_interleaves() {
+        let streams = one_f_one_b_schedule(3, 6);
+        let s0: Vec<bool> = streams[0].iter().map(|c| c.is_forward).collect();
+        // warm-up of 2 forwards, then alternating, then drain.
+        assert_eq!(s0[0..2], [true, true]);
+        assert!(s0.windows(2).any(|w| w == [true, false]));
+        assert_eq!(s0.last(), Some(&false));
+    }
+
+    #[test]
+    fn bubble_shrinks_with_more_microbatches() {
+        assert!(bubble_fraction(8, 1) > bubble_fraction(8, 32));
+        assert!((bubble_fraction(8, 32) - 7.0 / 39.0).abs() < 1e-12);
+        assert_eq!(bubble_fraction(1, 4), 0.0);
+    }
+
+    #[test]
+    fn layer_partitioning() {
+        assert_eq!(layers_per_stage(12, 4).unwrap(), 3);
+        assert!(layers_per_stage(10, 4).is_err());
+        assert!(layers_per_stage(4, 0).is_err());
+    }
+
+    #[test]
+    fn deadlock_detection_catches_bad_schedule() {
+        // Backward before its forward on the last stage.
+        let streams = vec![vec![
+            Cell { stage: 0, micro: 0, is_forward: false },
+            Cell { stage: 0, micro: 0, is_forward: true },
+        ]];
+        assert!(validate_schedule(&streams, 1).is_err());
+    }
+}

@@ -1,0 +1,380 @@
+//! Typed view over `artifacts/<preset>/manifest.json` (written by
+//! python/compile/aot.py).  The manifest is the single source of truth for
+//! program signatures, flat parameter layouts, and initialization files —
+//! rust never re-derives shapes.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(anyhow!("unsupported dtype {other}")),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramSig {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub microbatch: usize,
+    pub pp_stages: usize,
+    pub layers_per_stage: usize,
+    pub d_ff: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct StageInit {
+    pub kind: String,
+    pub file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub preset: String,
+    pub use_pallas: bool,
+    pub param_count: usize,
+    pub dims: ModelDims,
+    pub programs: BTreeMap<String, ProgramSig>,
+    pub param_specs: BTreeMap<String, Vec<ParamEntry>>,
+    pub stage_numel: BTreeMap<String, usize>,
+    pub init: BTreeMap<String, StageInit>,
+    pub goldens: BTreeMap<String, (Vec<String>, Vec<String>)>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(root, &v)
+    }
+
+    pub fn from_json(root: PathBuf, v: &Json) -> Result<Manifest> {
+        let need = |p: &str| {
+            v.path(p).ok_or_else(|| anyhow!("manifest missing '{p}'"))
+        };
+        if need("format")?.as_str() != Some("hlo-text-v1") {
+            return Err(anyhow!("unsupported artifact format"));
+        }
+        let dims_j = need("config")?;
+        let d = |k: &str| -> Result<usize> {
+            dims_j
+                .get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("config missing '{k}'"))
+        };
+        let dims = ModelDims {
+            vocab_size: d("vocab_size")?,
+            d_model: d("d_model")?,
+            n_heads: d("n_heads")?,
+            n_layers: d("n_layers")?,
+            seq_len: d("seq_len")?,
+            microbatch: d("microbatch")?,
+            pp_stages: d("pp_stages")?,
+            layers_per_stage: d("layers_per_stage")?,
+            d_ff: d("d_ff")?,
+        };
+
+        let mut programs = BTreeMap::new();
+        for (name, pj) in need("programs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("programs not an object"))?
+        {
+            let sig = |key: &str| -> Result<Vec<TensorSig>> {
+                pj.get(key)
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("program {name} missing {key}"))?
+                    .iter()
+                    .map(|t| {
+                        Ok(TensorSig {
+                            dtype: DType::parse(
+                                t.get("dtype")
+                                    .and_then(|x| x.as_str())
+                                    .unwrap_or(""),
+                            )?,
+                            shape: t
+                                .get("shape")
+                                .and_then(|x| x.as_arr())
+                                .ok_or_else(|| anyhow!("bad shape"))?
+                                .iter()
+                                .map(|s| {
+                                    s.as_usize()
+                                        .ok_or_else(|| anyhow!("bad dim"))
+                                })
+                                .collect::<Result<Vec<_>>>()?,
+                        })
+                    })
+                    .collect()
+            };
+            programs.insert(
+                name.clone(),
+                ProgramSig {
+                    name: name.clone(),
+                    file: pj
+                        .get("file")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("program {name} missing file"))?
+                        .to_string(),
+                    inputs: sig("inputs")?,
+                    outputs: sig("outputs")?,
+                },
+            );
+        }
+
+        let mut param_specs = BTreeMap::new();
+        for (kind, arr) in need("param_specs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("param_specs not an object"))?
+        {
+            let entries = arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("param spec not an array"))?
+                .iter()
+                .map(|e| {
+                    Ok(ParamEntry {
+                        name: e
+                            .get("name")
+                            .and_then(|x| x.as_str())
+                            .ok_or_else(|| anyhow!("param missing name"))?
+                            .to_string(),
+                        shape: e
+                            .get("shape")
+                            .and_then(|x| x.as_arr())
+                            .ok_or_else(|| anyhow!("param missing shape"))?
+                            .iter()
+                            .map(|s| {
+                                s.as_usize().ok_or_else(|| anyhow!("bad dim"))
+                            })
+                            .collect::<Result<Vec<_>>>()?,
+                        offset: e
+                            .get("offset")
+                            .and_then(|x| x.as_usize())
+                            .ok_or_else(|| anyhow!("param missing offset"))?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            param_specs.insert(kind.clone(), entries);
+        }
+
+        let stage_numel = need("stage_numel")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("stage_numel not an object"))?
+            .iter()
+            .map(|(k, x)| (k.clone(), x.as_usize().unwrap_or(0)))
+            .collect();
+
+        let mut init = BTreeMap::new();
+        for (key, e) in need("init")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("init not an object"))?
+        {
+            init.insert(
+                key.clone(),
+                StageInit {
+                    kind: e
+                        .get("kind")
+                        .and_then(|x| x.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    file: e
+                        .get("file")
+                        .and_then(|x| x.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                },
+            );
+        }
+
+        let mut goldens = BTreeMap::new();
+        if let Some(g) = v.get("goldens").and_then(|x| x.as_obj()) {
+            for (name, e) in g {
+                let files = |key: &str| -> Vec<String> {
+                    e.get(key)
+                        .and_then(|x| x.as_arr())
+                        .map(|a| {
+                            a.iter()
+                                .filter_map(|s| s.as_str())
+                                .map(|s| s.to_string())
+                                .collect()
+                        })
+                        .unwrap_or_default()
+                };
+                goldens.insert(
+                    name.clone(),
+                    (files("inputs"), files("outputs")),
+                );
+            }
+        }
+
+        Ok(Manifest {
+            root,
+            preset: need("preset")?
+                .as_str()
+                .ok_or_else(|| anyhow!("preset not a string"))?
+                .to_string(),
+            use_pallas: v
+                .get("use_pallas")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
+            param_count: need("param_count")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("bad param_count"))?,
+            dims,
+            programs,
+            param_specs,
+            stage_numel,
+            init,
+            goldens,
+        })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSig> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact bundle has no program '{name}'"))
+    }
+
+    /// Stage kinds in pipeline order for the exported pp degree.
+    pub fn stage_kinds(&self) -> Vec<&'static str> {
+        let m = self.dims.pp_stages;
+        if m <= 1 {
+            return vec!["single"];
+        }
+        let mut kinds = vec!["first"];
+        for _ in 0..m.saturating_sub(2) {
+            kinds.push("mid");
+        }
+        kinds.push("last");
+        kinds
+    }
+
+    /// Load a little-endian f32 .bin artifact (init params, goldens).
+    pub fn read_f32(&self, rel: &str) -> Result<Vec<f32>> {
+        let path = self.root.join(rel);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % 4 != 0 {
+            return Err(anyhow!("{rel}: length not a multiple of 4"));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+
+    pub fn read_i32(&self, rel: &str) -> Result<Vec<i32>> {
+        let path = self.root.join(rel);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny"))
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        if !tiny_dir().exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(tiny_dir()).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.dims.d_model, 64);
+        assert_eq!(m.stage_kinds(), vec!["first", "mid", "mid", "last"]);
+        let prog = m.program("step_single").unwrap();
+        assert_eq!(prog.inputs.len(), 3);
+        assert_eq!(prog.inputs[0].dtype, DType::F32);
+        assert_eq!(prog.inputs[1].dtype, DType::I32);
+        assert_eq!(prog.inputs[0].numel(), m.param_count);
+        // single spec covers param_count contiguously
+        let spec = &m.param_specs["single"];
+        let last = spec.last().unwrap();
+        assert_eq!(last.offset + last.numel(), m.param_count);
+    }
+
+    #[test]
+    fn init_bins_match_numel() {
+        if !tiny_dir().exists() {
+            return;
+        }
+        let m = Manifest::load(tiny_dir()).unwrap();
+        for (key, init) in &m.init {
+            let data = m.read_f32(&init.file).unwrap();
+            assert_eq!(data.len(), m.stage_numel[&init.kind], "{key}");
+        }
+    }
+
+    #[test]
+    fn missing_program_is_error() {
+        if !tiny_dir().exists() {
+            return;
+        }
+        let m = Manifest::load(tiny_dir()).unwrap();
+        assert!(m.program("nope").is_err());
+    }
+}

@@ -1,0 +1,117 @@
+//! Per-GPU memory model (paper §2.2): reproduces the dual-optimizer VRAM
+//! balance argument and OpenDiLoCo's 107B OOM.
+//!
+//! Byte accounting per parameter held on a GPU (fp32 master weights,
+//! Adam m+v, gradients; the outer optimizer adds a momentum buffer and a
+//! parameter anchor):
+//!   inner-only worker:           4 (p) + 4 (g) + 8 (adam)       = 16 B
+//!   + outer state (DiLoCoX,      + 4 (nesterov buf) + 4 (anchor) =  8 B
+//!     sharded over the stage)
+//!   OpenDiLoCo worker 0 extra:   + 8 B for the WHOLE model (outer opt
+//!                                  lives unsharded on the first worker)
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemVerdict {
+    Fits,
+    Oom,
+}
+
+#[derive(Clone, Debug)]
+pub struct MemoryReport {
+    pub per_gpu_bytes: u64,
+    pub worst_gpu_bytes: u64,
+    pub hbm_bytes: u64,
+    pub verdict: MemVerdict,
+    pub detail: String,
+}
+
+pub const INNER_BYTES_PER_PARAM: f64 = 16.0;
+pub const OUTER_BYTES_PER_PARAM: f64 = 8.0;
+
+/// DiLoCoX / pipeline case: every worker holds θ/M params plus its shard
+/// of BOTH optimizers (balanced by construction).
+pub fn dilocox_memory(params: f64, stages: usize, hbm: u64) -> MemoryReport {
+    let per_stage = params / stages as f64;
+    let bytes = per_stage * (INNER_BYTES_PER_PARAM + OUTER_BYTES_PER_PARAM);
+    let b = bytes as u64;
+    MemoryReport {
+        per_gpu_bytes: b,
+        worst_gpu_bytes: b,
+        hbm_bytes: hbm,
+        verdict: if b <= hbm { MemVerdict::Fits } else { MemVerdict::Oom },
+        detail: format!(
+            "stage params {per_stage:.3e}, 24 B/param (dual optimizer, sharded)"
+        ),
+    }
+}
+
+/// OpenDiLoCo case: no model parallelism — every worker holds the WHOLE
+/// model + inner optimizer; worker 0 additionally holds the outer state
+/// (unbalanced, the §2.2 criticism).
+pub fn opendiloco_memory(params: f64, hbm: u64) -> MemoryReport {
+    let base = params * INNER_BYTES_PER_PARAM;
+    let worker0 = base + params * OUTER_BYTES_PER_PARAM;
+    MemoryReport {
+        per_gpu_bytes: base as u64,
+        worst_gpu_bytes: worker0 as u64,
+        hbm_bytes: hbm,
+        verdict: if worker0 as u64 <= hbm {
+            MemVerdict::Fits
+        } else {
+            MemVerdict::Oom
+        },
+        detail: format!(
+            "full replica {:.3e} params/GPU; worker0 carries the outer opt",
+            params
+        ),
+    }
+}
+
+/// AllReduce / CocktailSGD data-parallel case: full replica + inner
+/// optimizer on every GPU (no outer optimizer).
+pub fn dp_memory(params: f64, hbm: u64) -> MemoryReport {
+    let bytes = (params * INNER_BYTES_PER_PARAM) as u64;
+    MemoryReport {
+        per_gpu_bytes: bytes,
+        worst_gpu_bytes: bytes,
+        hbm_bytes: hbm,
+        verdict: if bytes <= hbm { MemVerdict::Fits } else { MemVerdict::Oom },
+        detail: "full replica, inner optimizer only".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    const HBM: u64 = 40_000_000_000;
+
+    #[test]
+    fn opendiloco_1_3b_fits_but_107b_ooms() {
+        // The paper's §4.2.1 observation.
+        assert_eq!(opendiloco_memory(1.3e9, HBM).verdict, MemVerdict::Fits);
+        assert_eq!(opendiloco_memory(107e9, HBM).verdict, MemVerdict::Oom);
+    }
+
+    #[test]
+    fn dilocox_107b_fits_with_80_stages() {
+        let r = dilocox_memory(107e9, 80, HBM);
+        assert_eq!(r.verdict, MemVerdict::Fits);
+        // ~32 GB — tight but under 40 GB, as the paper reports for A800-40G.
+        assert!(r.per_gpu_bytes > 30_000_000_000);
+        assert!(r.per_gpu_bytes < 40_000_000_000);
+    }
+
+    #[test]
+    fn dilocox_balance_vs_opendiloco_imbalance() {
+        let d = dilocox_memory(1.3e9, 8, HBM);
+        assert_eq!(d.per_gpu_bytes, d.worst_gpu_bytes); // balanced
+        let o = opendiloco_memory(1.3e9, HBM);
+        assert!(o.worst_gpu_bytes > o.per_gpu_bytes); // worker-0 heavy
+    }
+
+    #[test]
+    fn dp_107b_ooms_too() {
+        assert_eq!(dp_memory(107e9, HBM).verdict, MemVerdict::Oom);
+        assert_eq!(dp_memory(1.3e9, HBM).verdict, MemVerdict::Fits);
+    }
+}

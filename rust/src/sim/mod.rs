@@ -1,0 +1,501 @@
+//! Discrete-event throughput simulator for the paper-scale experiments
+//! (Fig. 4, Table 1 throughput column, §2.4.1 analysis): true model sizes
+//! (OPT-1.3B, Qwen1.5-107B), A800 compute model, 1 Gbps WAN.
+//!
+//! Mechanism, not curve-fitting: the inner step time comes from a DES run
+//! of the 1F1B pipeline schedule over per-stage GPU resources and
+//! intra-cluster activation links; the sync time comes from ring/PS
+//! transfers over the WAN links; overlap is modeled by scheduling comm on
+//! the NIC resource while the GPUs start the next local phase.  The only
+//! calibrated constant is the per-scale effective TFLOPs (see gpu.rs).
+
+pub mod gpu;
+pub mod memory;
+
+use crate::compress::Method;
+use crate::config::{Algo, NetworkConfig};
+use crate::netsim::{Topology, WorkerId};
+use crate::pipeline;
+use gpu::GpuModel;
+use memory::{MemVerdict, MemoryReport};
+
+#[derive(Clone, Debug)]
+pub struct ScaleConfig {
+    pub name: String,
+    /// Total parameters θ.
+    pub params: f64,
+    /// Hidden width (drives the low-rank factor shapes).
+    pub d_hidden: usize,
+    pub clusters: usize,
+    pub gpus_per_cluster: usize,
+    /// Pipeline stages inside a cluster (== gpus_per_cluster here).
+    pub pp_stages: usize,
+    /// In-flight microbatches per step.
+    pub microbatches: usize,
+    /// Tokens one cluster processes per local step.
+    pub tokens_per_cluster_step: f64,
+    pub gpu: GpuModel,
+    pub net: NetworkConfig,
+}
+
+impl ScaleConfig {
+    /// OPT-1.3B testbed: 2 nodes × 8 A800 (paper §4.1.2), 1 Gbps between.
+    pub fn opt_1_3b() -> Self {
+        ScaleConfig {
+            name: "OPT-1.3B".into(),
+            params: 1.3e9,
+            d_hidden: 2048,
+            clusters: 2,
+            gpus_per_cluster: 8,
+            pp_stages: 8,
+            microbatches: 16,
+            tokens_per_cluster_step: 16384.0,
+            // Calibrated against the paper's AllReduce row (745 tok/s):
+            // comm-dominated, so the row pins t_step only loosely; the
+            // same figure reproduces the DiLoCoX row within a few percent.
+            gpu: GpuModel::a800_40g(0.045),
+            net: NetworkConfig::paper_1gbps(2),
+        }
+    }
+
+    /// Qwen1.5-107B testbed: 20 nodes × 8 A800 = 160 GPUs, 2 clusters.
+    pub fn qwen_107b() -> Self {
+        ScaleConfig {
+            name: "Qwen1.5-107B".into(),
+            params: 107e9,
+            d_hidden: 8192,
+            clusters: 2,
+            gpus_per_cluster: 80,
+            pp_stages: 80,
+            microbatches: 160,
+            tokens_per_cluster_step: 16384.0,
+            gpu: GpuModel::a800_40g(0.055),
+            net: NetworkConfig::paper_1gbps(2),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SimAlgo {
+    pub algo: Algo,
+    pub local_steps: usize,
+    pub overlap: bool,
+    pub method: Method,
+}
+
+impl SimAlgo {
+    /// The paper's per-algorithm settings at each scale (§4.1.3).
+    pub fn paper_setting(algo: Algo, scale: &ScaleConfig) -> SimAlgo {
+        let big = scale.params > 10e9;
+        match algo {
+            Algo::AllReduce => SimAlgo {
+                algo,
+                local_steps: 1,
+                overlap: false,
+                method: Method::None,
+            },
+            Algo::OpenDiLoCo => SimAlgo {
+                algo,
+                local_steps: 500,
+                overlap: false,
+                method: Method::Quant { q_bits: 16 },
+            },
+            Algo::CocktailSgd => SimAlgo {
+                algo,
+                local_steps: 1,
+                overlap: false,
+                method: Method::Cocktail {
+                    random_ratio: 0.1,
+                    topk_ratio: if big { 0.04 } else { 0.08 },
+                    q_bits: 4,
+                },
+            },
+            Algo::DiLoCoX => SimAlgo {
+                algo,
+                local_steps: 125,
+                overlap: true,
+                method: if big {
+                    Method::LowRankQuant { rank: 2048, q_bits: 4 }
+                } else {
+                    Method::Quant { q_bits: 4 }
+                },
+            },
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub algo: Algo,
+    pub scale: String,
+    pub oom: bool,
+    pub memory: MemoryReport,
+    /// Seconds per cluster-local training step (from the pipeline DES).
+    pub step_secs: f64,
+    /// WAN seconds per pseudo-gradient sync.
+    pub comm_secs: f64,
+    /// Bytes per worker per sync on the WAN.
+    pub wire_bytes: u64,
+    pub compression_ratio: f64,
+    pub tokens_per_sec: f64,
+    /// GPU busy fraction over the simulated horizon.
+    pub gpu_utilization: f64,
+}
+
+/// Wire payload for one sync of a θ-parameter pseudo-gradient under a
+/// compression method, using the d_hidden shape model (θ treated as
+/// square d_h × d_h matrices — transformer weights are within 4× of
+/// square, and the factor-size formula is linear in rows+cols).
+pub fn sync_payload_bytes(params: f64, d_hidden: usize, method: &Method) -> u64 {
+    let full = 4.0 * params;
+    let bytes = match method {
+        Method::None => full,
+        Method::Quant { q_bits } => params * (*q_bits as f64) / 8.0,
+        Method::LowRankQuant { rank, q_bits } => {
+            let d = d_hidden as f64;
+            let n_mats = params / (d * d);
+            let factor_elems = n_mats * (*rank as f64) * 2.0 * d;
+            factor_elems * (*q_bits as f64) / 8.0
+        }
+        Method::TopK { ratio, q_bits } => {
+            let k = params * (*ratio as f64);
+            2.0 * k * ((*q_bits as f64) / 8.0 + 4.0)
+        }
+        Method::RandomK { ratio } => params * (*ratio as f64) * 4.0,
+        Method::Cocktail { random_ratio, topk_ratio, q_bits } => {
+            // Values-only accounting, up + down legs: positions are
+            // implicit in CocktailSGD's shared-seed mask encoding, which
+            // is how the paper's declared 500x (1.3B) / 1000x (107B)
+            // ratios come out: 2·k·q/8 = 4θ·rr·tr·q/16.
+            let k = params * (*random_ratio as f64) * (*topk_ratio as f64);
+            2.0 * k * (*q_bits as f64) / 8.0
+        }
+    };
+    bytes.max(1.0) as u64
+}
+
+/// One inner training step's makespan from a DES run of the 1F1B pipeline
+/// over per-stage GPU resources + intra-cluster activation links.
+pub fn pipeline_step_secs(scale: &ScaleConfig, topo: &mut Topology) -> f64 {
+    let m = scale.pp_stages;
+    let u = scale.microbatches;
+    let tok_micro = scale.tokens_per_cluster_step / u as f64;
+    // Per-stage, per-microbatch compute: fwd = 2θ_s·tok, bwd = 4θ_s·tok
+    // (bwd includes the rematerialized forward, matching the L2 export).
+    let theta_stage = scale.params / m as f64;
+    let eff = scale.gpu.effective_flops();
+    let fwd = 2.0 * theta_stage * tok_micro / eff;
+    let bwd = 4.0 * theta_stage * tok_micro / eff;
+    // Activation tensor crossing stage boundaries.
+    let act_bytes = (tok_micro * scale.d_hidden as f64 * 4.0) as u64;
+
+    let streams = pipeline::one_f_one_b_schedule(m, u);
+    // Event-graph execution for cluster 0 (all clusters identical).
+    let c = 0usize;
+    let mut fwd_done = vec![vec![f64::NAN; u]; m];
+    let mut bwd_done = vec![vec![f64::NAN; u]; m];
+    let mut idx = vec![0usize; m];
+    let total: usize = streams.iter().map(|s| s.len()).sum();
+    let mut executed = 0;
+    let mut makespan: f64 = 0.0;
+    while executed < total {
+        let mut progressed = false;
+        for s in 0..m {
+            while idx[s] < streams[s].len() {
+                let cell = streams[s][idx[s]];
+                // Readiness: dependency completion time (NaN = not done).
+                let dep_ready = if cell.is_forward {
+                    if s == 0 {
+                        Some(0.0)
+                    } else {
+                        let t = fwd_done[s - 1][cell.micro];
+                        if t.is_nan() {
+                            None
+                        } else {
+                            // activation transfer s-1 -> s
+                            let (_, end) = topo
+                                .intra_link(c, s - 1)
+                                .transfer(t, act_bytes);
+                            Some(end)
+                        }
+                    }
+                } else if s == m - 1 {
+                    let t = fwd_done[s][cell.micro];
+                    if t.is_nan() {
+                        None
+                    } else {
+                        Some(t)
+                    }
+                } else {
+                    let tb = bwd_done[s + 1][cell.micro];
+                    let tf = fwd_done[s][cell.micro];
+                    if tb.is_nan() || tf.is_nan() {
+                        None
+                    } else {
+                        let (_, end) =
+                            topo.intra_link(c, s).transfer(tb, act_bytes);
+                        Some(end.max(tf))
+                    }
+                };
+                let Some(ready) = dep_ready else { break };
+                let dur = if cell.is_forward { fwd } else { bwd };
+                let (_, end) = topo
+                    .gpu(WorkerId { cluster: c, stage: s })
+                    .acquire(ready, dur);
+                if cell.is_forward {
+                    fwd_done[s][cell.micro] = end;
+                } else {
+                    bwd_done[s][cell.micro] = end;
+                }
+                makespan = makespan.max(end);
+                idx[s] += 1;
+                executed += 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "pipeline DES deadlock");
+    }
+    makespan
+}
+
+/// Simulate `outer_rounds` outer steps and return throughput + breakdown.
+pub fn simulate(scale: &ScaleConfig, algo: &SimAlgo, outer_rounds: usize) -> SimResult {
+    // ---- memory verdict -------------------------------------------------
+    let hbm = scale.gpu.hbm_bytes;
+    let memory = match algo.algo {
+        Algo::OpenDiLoCo => memory::opendiloco_memory(scale.params, hbm),
+        Algo::DiLoCoX => {
+            memory::dilocox_memory(scale.params, scale.pp_stages, hbm)
+        }
+        _ => {
+            // AllReduce / Cocktail: Megatron-style PP shard, inner opt only.
+            let mut r =
+                memory::dilocox_memory(scale.params, scale.pp_stages, hbm);
+            r.per_gpu_bytes = (scale.params / scale.pp_stages as f64
+                * memory::INNER_BYTES_PER_PARAM) as u64;
+            r.worst_gpu_bytes = r.per_gpu_bytes;
+            r.verdict = if r.per_gpu_bytes <= hbm {
+                MemVerdict::Fits
+            } else {
+                MemVerdict::Oom
+            };
+            r
+        }
+    };
+    if memory.verdict == MemVerdict::Oom {
+        return SimResult {
+            algo: algo.algo,
+            scale: scale.name.clone(),
+            oom: true,
+            memory,
+            step_secs: 0.0,
+            comm_secs: 0.0,
+            wire_bytes: 0,
+            compression_ratio: 0.0,
+            tokens_per_sec: 0.0,
+            gpu_utilization: 0.0,
+        };
+    }
+
+    // ---- inner step time (pipeline DES) ---------------------------------
+    let mut topo = Topology::new(&scale.net, scale.pp_stages);
+    let step_secs = pipeline_step_secs(scale, &mut topo);
+
+    // ---- sync time over the WAN -----------------------------------------
+    let payload = sync_payload_bytes(scale.params, scale.d_hidden, &algo.method);
+    let comm_secs = if algo.method.allreduce_compatible() {
+        crate::comm::ring_allreduce_seconds(payload, &scale.net)
+    } else {
+        crate::comm::parameter_server_seconds(payload / 2, payload / 2, &scale.net)
+    };
+
+    // ---- outer loop over virtual time ------------------------------------
+    // GPUs and NIC are separate resources: with overlap the sync occupies
+    // the NIC while the next local phase runs on the GPUs; the outer
+    // update at the end of round t+1 must wait for sync_t to finish.
+    let local_phase = algo.local_steps as f64 * step_secs;
+    let mut gpu_free = 0.0f64;
+    let mut nic_free = 0.0f64;
+    let mut pending_sync_end: Option<f64> = None;
+    let mut clock = 0.0f64;
+    for _round in 0..outer_rounds {
+        // local training
+        let start = clock.max(gpu_free);
+        let local_end = start + local_phase;
+        gpu_free = local_end;
+        if algo.overlap {
+            // outer update waits for the PREVIOUS sync (one-step delay).
+            let wait = pending_sync_end.take().unwrap_or(local_end);
+            clock = local_end.max(wait);
+            // launch this round's sync on the NIC.
+            let s = clock.max(nic_free);
+            nic_free = s + comm_secs;
+            pending_sync_end = Some(nic_free);
+        } else {
+            // synchronous: GPUs idle during the sync.
+            let s = local_end.max(nic_free);
+            nic_free = s + comm_secs;
+            clock = nic_free;
+            gpu_free = clock;
+        }
+    }
+    // trailing sync drains (overlap) — count it in the horizon.
+    if let Some(end) = pending_sync_end {
+        clock = clock.max(end);
+    }
+
+    let total_tokens = scale.clusters as f64
+        * scale.tokens_per_cluster_step
+        * algo.local_steps as f64
+        * outer_rounds as f64;
+    let horizon = clock.max(1e-9);
+    let busy = local_phase * outer_rounds as f64;
+
+    SimResult {
+        algo: algo.algo,
+        scale: scale.name.clone(),
+        oom: false,
+        memory,
+        step_secs,
+        comm_secs,
+        wire_bytes: payload,
+        compression_ratio: 4.0 * scale.params / payload as f64,
+        tokens_per_sec: total_tokens / horizon,
+        gpu_utilization: (busy / horizon).min(1.0),
+    }
+}
+
+/// Paper Fig. 4: all four algorithms at one scale.
+pub fn figure4_row(scale: &ScaleConfig, outer_rounds: usize) -> Vec<SimResult> {
+    [Algo::AllReduce, Algo::OpenDiLoCo, Algo::CocktailSgd, Algo::DiLoCoX]
+        .iter()
+        .map(|&a| simulate(scale, &SimAlgo::paper_setting(a, scale), outer_rounds))
+        .collect()
+}
+
+/// Paper Table 1 (throughput column): DiLoCoX ablations at 107B.
+pub fn table1_throughput(outer_rounds: usize) -> Vec<(String, SimResult)> {
+    let scale = ScaleConfig::qwen_107b();
+    let full = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+    let mut no_overlap = full.clone();
+    no_overlap.overlap = false;
+    let mut no_comp = full.clone();
+    no_comp.method = Method::None;
+    let ar = SimAlgo::paper_setting(Algo::AllReduce, &scale);
+    vec![
+        ("Full DiLoCoX".to_string(), simulate(&scale, &full, outer_rounds)),
+        ("w/o Overlap".to_string(), simulate(&scale, &no_overlap, outer_rounds)),
+        ("w/o Compression".to_string(), simulate(&scale, &no_comp, outer_rounds)),
+        ("AllReduce".to_string(), simulate(&scale, &ar, outer_rounds)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_model_matches_paper_arithmetic() {
+        // 107B rank-2048 int4 on 8192-wide mats: "≈2x low-rank" × 8x int4.
+        let p = sync_payload_bytes(
+            107e9,
+            8192,
+            &Method::LowRankQuant { rank: 2048, q_bits: 4 },
+        );
+        let ratio = 4.0 * 107e9 / p as f64;
+        assert!((ratio - 16.0).abs() < 0.5, "ratio={ratio}");
+        // fp32 = θ·4.
+        assert_eq!(sync_payload_bytes(1e9, 2048, &Method::None), 4_000_000_000);
+    }
+
+    #[test]
+    fn fig4_107b_shape_matches_paper() {
+        let scale = ScaleConfig::qwen_107b();
+        let rows = figure4_row(&scale, 12);
+        let by = |a: Algo| rows.iter().find(|r| r.algo == a).unwrap().clone();
+        let ar = by(Algo::AllReduce);
+        let od = by(Algo::OpenDiLoCo);
+        let ck = by(Algo::CocktailSgd);
+        let dx = by(Algo::DiLoCoX);
+        // OpenDiLoCo OOMs at 107B (paper §4.2.1).
+        assert!(od.oom);
+        assert!(!ar.oom && !dx.oom);
+        // Paper: 10.4 / 2427 / 3728 tokens/s → shape: DiLoCoX > Cocktail
+        // >> AllReduce, speedup vs AllReduce in the hundreds.
+        assert!(dx.tokens_per_sec > ck.tokens_per_sec);
+        let speedup = dx.tokens_per_sec / ar.tokens_per_sec;
+        assert!(
+            speedup > 200.0 && speedup < 600.0,
+            "speedup={speedup} (paper: 357x)"
+        );
+        let vs_ck = dx.tokens_per_sec / ck.tokens_per_sec;
+        assert!(vs_ck > 1.1 && vs_ck < 2.0, "vs cocktail {vs_ck} (paper 1.35x)");
+        // Absolute order of magnitude sanity.
+        assert!(ar.tokens_per_sec > 4.0 && ar.tokens_per_sec < 25.0,
+                "AR={}", ar.tokens_per_sec);
+        assert!(dx.tokens_per_sec > 2500.0 && dx.tokens_per_sec < 5000.0,
+                "DX={}", dx.tokens_per_sec);
+    }
+
+    #[test]
+    fn fig4_1_3b_shape_matches_paper() {
+        let scale = ScaleConfig::opt_1_3b();
+        let rows = figure4_row(&scale, 12);
+        let by = |a: Algo| rows.iter().find(|r| r.algo == a).unwrap().clone();
+        let ar = by(Algo::AllReduce);
+        let dx = by(Algo::DiLoCoX);
+        let ck = by(Algo::CocktailSgd);
+        assert!(!by(Algo::OpenDiLoCo).oom); // 1.3B fits
+        // Paper: 745 / 16161 / 23880 → DiLoCoX ~32x AllReduce.
+        let speedup = dx.tokens_per_sec / ar.tokens_per_sec;
+        assert!(speedup > 15.0 && speedup < 60.0, "speedup={speedup}");
+        assert!(dx.tokens_per_sec > ck.tokens_per_sec);
+    }
+
+    #[test]
+    fn table1_ordering_matches_paper() {
+        let rows = table1_throughput(10);
+        let tps: Vec<f64> = rows.iter().map(|(_, r)| r.tokens_per_sec).collect();
+        // Full > w/o Overlap > w/o Compression > AllReduce (paper: 3728 >
+        // 2197 > 1168 > 10.4).
+        assert!(tps[0] > tps[1], "{tps:?}");
+        assert!(tps[1] > tps[2], "{tps:?}");
+        assert!(tps[2] > tps[3], "{tps:?}");
+        assert!(tps[0] / tps[3] > 100.0);
+    }
+
+    #[test]
+    fn overlap_hides_comm_when_local_phase_dominates() {
+        let scale = ScaleConfig::qwen_107b();
+        let mut a = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+        let with = simulate(&scale, &a, 10);
+        a.overlap = false;
+        let without = simulate(&scale, &a, 10);
+        // comm < local phase → overlap makes it (nearly) free.
+        assert!(with.comm_secs < with.step_secs * a.local_steps as f64);
+        assert!(with.tokens_per_sec > without.tokens_per_sec);
+        assert!(with.gpu_utilization > 0.95, "{}", with.gpu_utilization);
+    }
+
+    #[test]
+    fn des_pipeline_matches_bubble_formula() {
+        // With (near) free links the DES makespan must approach the
+        // analytic fill-drain bound: (U + M − 1) cell pairs.
+        let mut scale = ScaleConfig::opt_1_3b();
+        scale.net.latency_ms = 0.0;
+        scale.net.intra_bw_gbps = 1e9; // effectively infinite
+        let mut topo = Topology::new(&scale.net, scale.pp_stages);
+        let t = pipeline_step_secs(&scale, &mut topo);
+        let m = scale.pp_stages as f64;
+        let u = scale.microbatches as f64;
+        let theta_stage = scale.params / m;
+        let tok_micro = scale.tokens_per_cluster_step / u;
+        let eff = scale.gpu.effective_flops();
+        let cell = (2.0 + 4.0) * theta_stage * tok_micro / eff;
+        let ideal = (u + m - 1.0) * cell;
+        // 1F1B with uneven fwd/bwd cells runs within ~2x of the ideal
+        // fill-drain bound; it must never beat it.
+        assert!(t >= ideal * 0.999, "DES {t} < ideal {ideal}");
+        assert!(t <= ideal * 2.0, "DES {t} vs ideal {ideal}");
+    }
+}

@@ -1,0 +1,555 @@
+//! Trainers: DiLoCoX (paper Algorithm 2) and the three baselines
+//! (AllReduce, OpenDiLoCo, CocktailSGD), all running *real numerics*
+//! through the PJRT runtime on a small preset while metering wire bytes
+//! and modeling WAN time at the configured bandwidth.
+//!
+//! One-step-delay overlap (§2.3) is implemented as the paper's algebra:
+//! the pseudo-gradient δ^t starts its (compressed) AllReduce when outer
+//! step t ends, and the outer Nesterov update at the end of step t+1
+//! applies the *delayed* Δ^t.  With overlap disabled the same code path
+//! synchronizes immediately (the "w/o Overlap" ablation).
+//!
+//! Error feedback follows Algorithm 2: e^t = δ^{t-1} − Δ^{t-1}, added into
+//! the next pseudo-gradient before compression.
+
+use crate::comm::{parameter_server_seconds, ring_allreduce_seconds};
+use crate::compress::adaptive::AdaptiveCompression;
+use crate::compress::{GroupReducer, Method};
+use crate::config::{Algo, ExperimentConfig};
+use crate::data::{MarkovCorpus, ShardIter};
+use crate::metrics::{RunMetrics, StepRecord};
+use crate::optim::{AdamW, Nesterov};
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// Batches in the fixed held-out eval set.
+    pub eval_batches: usize,
+    /// Evaluate every k outer steps (0 = only at the end).
+    pub eval_every: usize,
+    pub log_every: usize,
+    /// Override artifacts dir (tests use the tiny bundle).
+    pub artifacts_dir: Option<String>,
+    pub quiet: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            eval_batches: 4,
+            eval_every: 1,
+            log_every: 1,
+            artifacts_dir: None,
+            quiet: false,
+        }
+    }
+}
+
+pub struct TrainOutcome {
+    pub metrics: RunMetrics,
+    /// Final global parameters (for checkpoint-style comparisons).
+    pub params: Vec<f32>,
+    pub eval_curve: Vec<(usize, f32)>,
+}
+
+struct Replica {
+    params: Vec<f32>,
+    inner: AdamW,
+    shard: ShardIter,
+    error: Vec<f32>,
+}
+
+/// Map an experiment config onto a compression method (paper table of
+/// per-algorithm settings).
+pub fn method_for(cfg: &ExperimentConfig) -> Method {
+    let c = &cfg.compression;
+    if !c.enabled {
+        return Method::None;
+    }
+    match cfg.algo {
+        Algo::AllReduce => Method::None,
+        Algo::OpenDiLoCo => Method::Quant { q_bits: c.q_bits.max(16) },
+        Algo::CocktailSgd => Method::Cocktail {
+            random_ratio: c.random_ratio,
+            topk_ratio: c.topk_ratio,
+            q_bits: c.q_bits,
+        },
+        Algo::DiLoCoX => {
+            if c.rank > 0 {
+                Method::LowRankQuant { rank: c.rank, q_bits: c.q_bits }
+            } else {
+                Method::Quant { q_bits: c.q_bits }
+            }
+        }
+    }
+}
+
+/// WAN seconds for one sync of `payload` bytes under this method.
+fn comm_seconds(method: &Method, payload: u64, cfg: &ExperimentConfig) -> f64 {
+    if method.allreduce_compatible() {
+        ring_allreduce_seconds(payload, &cfg.network)
+    } else {
+        parameter_server_seconds(payload / 2, payload / 2, &cfg.network)
+    }
+}
+
+pub fn run_experiment(cfg: &ExperimentConfig, opts: &RunOpts) -> Result<TrainOutcome> {
+    cfg.validate()?;
+    let dir = opts
+        .artifacts_dir
+        .clone()
+        .unwrap_or_else(|| cfg.artifacts_dir.clone());
+    let rt = Runtime::load(&dir)
+        .with_context(|| format!("loading artifacts from {dir}"))?;
+    rt.precompile(&["step_single", "eval_single"])?;
+    run_with_runtime(cfg, opts, &rt)
+}
+
+/// Core loop, reusing an already-loaded runtime (benches share one).
+pub fn run_with_runtime(
+    cfg: &ExperimentConfig,
+    opts: &RunOpts,
+    rt: &Runtime,
+) -> Result<TrainOutcome> {
+    let man = &rt.manifest;
+    let spec = man.param_specs["single"].clone();
+    let n = man.param_count;
+    let d = cfg.parallel.dp;
+    let (b, s) = (man.dims.microbatch, man.dims.seq_len);
+    let tokens_per_step = (b * s) as u64;
+
+    let corpus = Arc::new(MarkovCorpus::new(man.dims.vocab_size, cfg.train.seed));
+    let theta0 = man.read_f32(&man.init["single"].file)?;
+
+    let mut replicas: Vec<Replica> = (0..d)
+        .map(|i| Replica {
+            params: theta0.clone(),
+            inner: AdamW::new(n, cfg.train.inner_lr, cfg.train.weight_decay),
+            shard: ShardIter::new(
+                Arc::clone(&corpus),
+                i,
+                cfg.train.seed,
+                b,
+                s,
+            ),
+            error: vec![0.0; n],
+        })
+        .collect();
+
+    // Shared global anchor + outer optimizer (identical on all workers).
+    let mut theta_g = theta0.clone();
+    let mut outer = Nesterov::new(n, cfg.train.outer_lr, cfg.train.outer_momentum);
+
+    let method = method_for(cfg);
+    let mut reducer = GroupReducer::new(method.clone(), cfg.train.seed);
+    let mut adaptive = if cfg.compression.adaptive && cfg.compression.rank > 0 {
+        Some(AdaptiveCompression::new(
+            cfg.compression.rank,
+            cfg.train.local_steps,
+            cfg.compression.rank_window,
+            cfg.compression.min_rank,
+        ))
+    } else {
+        None
+    };
+
+    // Held-out eval set (shared across algorithms for comparability).
+    let mut eval_iter = ShardIter::new(Arc::clone(&corpus), 9999, cfg.train.seed ^ 0xe7a1, b, s);
+    let eval_set: Vec<(Vec<i32>, Vec<i32>)> =
+        (0..opts.eval_batches).map(|_| eval_iter.next_batch()).collect();
+    let eval = |params: &[f32]| -> Result<f32> {
+        let mut acc = 0.0f32;
+        for (t, l) in &eval_set {
+            acc += rt.eval_single(params, t, l)?;
+        }
+        Ok(acc / eval_set.len() as f32)
+    };
+
+    let mut metrics = RunMetrics::new(cfg.algo.name());
+    let mut eval_curve = Vec::new();
+    let mut inner_steps_done = 0usize;
+
+    // One-step-delay state: the previous step's pseudo-gradients,
+    // "in flight" while the current step trains.
+    let mut in_flight: Option<Vec<Vec<f32>>> = None;
+    let mut h_current = cfg.train.local_steps;
+
+    let is_local_sgd = matches!(cfg.algo, Algo::DiLoCoX | Algo::OpenDiLoCo);
+
+    for t in 1..=cfg.train.outer_steps {
+        let t0 = Instant::now();
+        let mut loss_acc = 0.0f64;
+        let mut loss_count = 0usize;
+
+        // Per-replica anchors: δ^t measures this round's local movement
+        // (Alg 2's θ^{t-1}_{i,j}), so in-flight progress is never counted
+        // twice when the outer update lags by one step.
+        let anchors: Vec<Vec<f32>> = if is_local_sgd {
+            replicas.iter().map(|r| r.params.clone()).collect()
+        } else {
+            Vec::new()
+        };
+
+        if is_local_sgd {
+            // H local AdamW steps per replica.
+            for rep in replicas.iter_mut() {
+                for _ in 0..h_current {
+                    let (tok, lab) = rep.shard.next_batch();
+                    let (loss, grads) = rt.step_single(&rep.params, &tok, &lab)?;
+                    rep.inner.step(&mut rep.params, &grads);
+                    loss_acc += loss as f64;
+                    loss_count += 1;
+                }
+            }
+        } else {
+            // AllReduce / CocktailSGD: every "outer step" here is
+            // h_current fully synchronous data-parallel steps.
+            for _ in 0..h_current {
+                let mut grads_all: Vec<Vec<f32>> = Vec::with_capacity(d);
+                for rep in replicas.iter_mut() {
+                    let (tok, lab) = rep.shard.next_batch();
+                    let (loss, mut grads) =
+                        rt.step_single(&rep.params, &tok, &lab)?;
+                    loss_acc += loss as f64;
+                    loss_count += 1;
+                    if cfg.algo == Algo::CocktailSgd {
+                        // Error feedback on the gradient itself.
+                        for (g, e) in grads.iter_mut().zip(&rep.error) {
+                            *g += e;
+                        }
+                    }
+                    grads_all.push(grads);
+                }
+                let out = reducer.reduce(&grads_all, &spec, inner_steps_done as u64);
+                if cfg.algo == Algo::CocktailSgd {
+                    for (rep, g) in replicas.iter_mut().zip(&grads_all) {
+                        for i in 0..n {
+                            rep.error[i] = g[i] - out.avg[i];
+                        }
+                    }
+                }
+                // Shared AdamW step on the averaged gradient: all replicas
+                // stay identical; step replica 0's optimizer and copy.
+                replicas[0].inner.step(&mut theta_g, &out.avg);
+                for rep in replicas.iter_mut() {
+                    rep.params.copy_from_slice(&theta_g);
+                }
+                inner_steps_done += 1;
+            }
+        }
+
+        let compute_secs = t0.elapsed().as_secs_f64();
+
+        // ---- synchronization phase -------------------------------------
+        let (wire_bytes, comm_secs, ratio, rank_used) = if is_local_sgd {
+            inner_steps_done += h_current * 1; // counted per replica-parallel step
+            // Complete the in-flight reduction (overlap) or reduce now.
+            let deltas_prev = if cfg.train.overlap {
+                in_flight.take()
+            } else {
+                None
+            };
+
+            // Pseudo-gradients for THIS step: δ_i = (anchor_i − θ_i) + e_i.
+            let make_deltas = |replicas: &[Replica]| -> Vec<Vec<f32>> {
+                replicas
+                    .iter()
+                    .zip(&anchors)
+                    .map(|(rep, anchor)| {
+                        let mut dlt = vec![0.0f32; n];
+                        for i in 0..n {
+                            dlt[i] = (anchor[i] - rep.params[i]) + rep.error[i];
+                        }
+                        dlt
+                    })
+                    .collect()
+            };
+
+            let rank_used = adaptive
+                .as_ref()
+                .map(|a| a.current().0)
+                .unwrap_or(cfg.compression.rank);
+
+            if cfg.train.overlap {
+                // Algorithm 2 ordering: finish the in-flight reduction of
+                // δ^{t-1} first, refresh the error buffers e^t, THEN form
+                // δ^t against the pre-update anchor, and finally apply the
+                // delayed outer update.
+                let mut stats = (0u64, 0.0f64, 1.0f64);
+                let mut delayed_avg: Option<Vec<f32>> = None;
+                if let Some(prev) = deltas_prev {
+                    let out = reducer.reduce(&prev, &spec, t as u64);
+                    for (rep, dp) in replicas.iter_mut().zip(&prev) {
+                        for i in 0..n {
+                            rep.error[i] = if cfg.compression.error_feedback {
+                                dp[i] - out.avg[i]
+                            } else {
+                                0.0
+                            };
+                        }
+                    }
+                    if let Some(ctl) = adaptive.as_mut() {
+                        let (r_next, h_next) = ctl.observe(&out.avg, &spec);
+                        reducer.set_rank(r_next);
+                        h_current = h_next;
+                    }
+                    let payload = out.payload_bytes;
+                    stats = (
+                        payload,
+                        comm_seconds(&method, payload, cfg),
+                        out.ratio,
+                    );
+                    delayed_avg = Some(out.avg);
+                }
+                // δ^t = (θ^{t-1}_anchor − θ^t_i) + e^t.
+                let deltas_now = make_deltas(&replicas);
+                in_flight = Some(deltas_now);
+                // Delayed outer update: θ^t = OuterOpt(θ^{t-1}, Δ^{t-1}).
+                if let Some(avg) = delayed_avg {
+                    outer.step(&mut theta_g, &avg);
+                    for rep in replicas.iter_mut() {
+                        rep.params.copy_from_slice(&theta_g);
+                    }
+                }
+                (stats.0, stats.1, stats.2, rank_used)
+            } else {
+                // Synchronous (the "w/o Overlap" ablation + OpenDiLoCo).
+                let deltas = make_deltas(&replicas);
+                let out = reducer.reduce(&deltas, &spec, t as u64);
+                for (rep, dp) in replicas.iter_mut().zip(&deltas) {
+                    for i in 0..n {
+                        rep.error[i] = if cfg.compression.error_feedback {
+                            dp[i] - out.avg[i]
+                        } else {
+                            0.0
+                        };
+                    }
+                }
+                outer.step(&mut theta_g, &out.avg);
+                for rep in replicas.iter_mut() {
+                    rep.params.copy_from_slice(&theta_g);
+                }
+                if let Some(ctl) = adaptive.as_mut() {
+                    let (r_next, h_next) = ctl.observe(&out.avg, &spec);
+                    reducer.set_rank(r_next);
+                    h_current = h_next;
+                }
+                (
+                    out.payload_bytes,
+                    comm_seconds(&method, out.payload_bytes, cfg),
+                    out.ratio,
+                    rank_used,
+                )
+            }
+        } else {
+            // AllReduce/Cocktail synced every inner step already; account
+            // the per-step payloads for this block of h_current steps.
+            let payload = match &method {
+                Method::None => 4 * n as u64,
+                Method::Cocktail { .. } => {
+                    // recompute the payload accounting from the reducer's
+                    // outcome ratio is noisy; derive from method directly.
+                    let k_rand = ((n as f64)
+                        * cfg.compression.random_ratio as f64)
+                        .round() as usize;
+                    let k_top = ((k_rand as f64)
+                        * cfg.compression.topk_ratio as f64)
+                        .round()
+                        .max(1.0) as usize;
+                    let q = cfg.compression.q_bits.max(1) as u64;
+                    2 * ((q * k_top as u64 + 7) / 8 + 4 + 4 * k_top as u64) + 8
+                }
+                _ => 4 * n as u64,
+            };
+            let per_step = comm_seconds(&method, payload, cfg);
+            (
+                payload * h_current as u64,
+                per_step * h_current as f64,
+                (4 * n as u64) as f64 / payload as f64,
+                0,
+            )
+        };
+
+        // Modeled elapsed: with overlap, WAN time hides behind compute.
+        let elapsed = if cfg.train.overlap && is_local_sgd {
+            compute_secs.max(comm_secs)
+        } else {
+            compute_secs + comm_secs
+        };
+
+        let mean_loss = if loss_count > 0 {
+            (loss_acc / loss_count as f64) as f32
+        } else {
+            f32::NAN
+        };
+
+        metrics.push(StepRecord {
+            outer_step: t,
+            loss: mean_loss,
+            inner_steps: h_current * if is_local_sgd { 1 } else { 1 },
+            tokens: tokens_per_step * h_current as u64 * d as u64,
+            wire_bytes,
+            compression_ratio: ratio,
+            rank: rank_used,
+            compute_secs,
+            comm_secs,
+            elapsed_secs: elapsed,
+        });
+
+        if opts.eval_every > 0 && t % opts.eval_every == 0 {
+            let el = eval(&theta_g)?;
+            eval_curve.push((t, el));
+            if !opts.quiet && t % opts.log_every.max(1) == 0 {
+                crate::info!(
+                    "train",
+                    "{} outer={t}/{} H={h_current} train_loss={mean_loss:.4} eval={el:.4} wire={} ratio={ratio:.0}x",
+                    cfg.algo.name(),
+                    cfg.train.outer_steps,
+                    crate::util::fmt_bytes(wire_bytes)
+                );
+            }
+        }
+    }
+
+    // Drain a trailing in-flight reduction so the final params include
+    // every replica's last contribution (flush at shutdown).
+    if let Some(prev) = in_flight.take() {
+        let out = reducer.reduce(&prev, &spec, (cfg.train.outer_steps + 1) as u64);
+        outer.step(&mut theta_g, &out.avg);
+    }
+
+    let final_eval = eval(&theta_g)?;
+    metrics.final_eval_loss = Some(final_eval);
+    eval_curve.push((cfg.train.outer_steps + 1, final_eval));
+
+    Ok(TrainOutcome { metrics, params: theta_g, eval_curve })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+
+    fn tiny_dir() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
+        std::path::Path::new(dir).exists().then(|| dir.to_string())
+    }
+
+    fn quick_cfg(algo: Algo) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default_for("tiny", algo);
+        cfg.train.outer_steps = 4;
+        cfg.train.local_steps = match algo {
+            Algo::AllReduce | Algo::CocktailSgd => 4,
+            _ => 8,
+        };
+        cfg.train.inner_lr = 3e-3;
+        cfg.train.outer_lr = 0.5;
+        cfg.compression.rank = 8;
+        cfg.compression.rank_window = 2;
+        cfg
+    }
+
+    fn opts() -> RunOpts {
+        RunOpts { eval_batches: 2, quiet: true, ..Default::default() }
+    }
+
+    #[test]
+    fn dilocox_loss_decreases_and_meters_bytes() {
+        let Some(dir) = tiny_dir() else { return };
+        let mut cfg = quick_cfg(Algo::DiLoCoX);
+        cfg.artifacts_dir = dir;
+        let out = run_experiment(&cfg, &opts()).unwrap();
+        let first = out.eval_curve.first().unwrap().1;
+        let last = out.eval_curve.last().unwrap().1;
+        assert!(last < first, "eval should improve: {first} -> {last}");
+        // Overlap: step 1 has nothing in flight → zero wire bytes; later
+        // steps meter the compressed payload.
+        assert_eq!(out.metrics.records[0].wire_bytes, 0);
+        assert!(out.metrics.records[1].wire_bytes > 0);
+        assert!(out.metrics.records[1].compression_ratio > 4.0);
+    }
+
+    #[test]
+    fn allreduce_replicas_stay_identical_and_learn() {
+        let Some(dir) = tiny_dir() else { return };
+        let mut cfg = quick_cfg(Algo::AllReduce);
+        cfg.artifacts_dir = dir;
+        let out = run_experiment(&cfg, &opts()).unwrap();
+        let first = out.eval_curve.first().unwrap().1;
+        let last = out.eval_curve.last().unwrap().1;
+        assert!(last < first);
+        // fp32 ring payload metered every inner step.
+        let n = out.params.len() as u64;
+        let rec = &out.metrics.records[0];
+        assert_eq!(rec.wire_bytes, 4 * n * cfg.train.local_steps as u64);
+    }
+
+    #[test]
+    fn overlap_defers_first_update() {
+        let Some(dir) = tiny_dir() else { return };
+        // With overlap, outer step 1 must leave global params unchanged
+        // (nothing has been reduced yet).
+        let mut cfg = quick_cfg(Algo::DiLoCoX);
+        cfg.artifacts_dir = dir.clone();
+        cfg.train.outer_steps = 1;
+        let out = run_experiment(&cfg, &opts()).unwrap();
+        // After the trailing flush the params DO move; but the recorded
+        // step-1 wire bytes stay zero (the sync ran after the step).
+        assert_eq!(out.metrics.records[0].wire_bytes, 0);
+
+        let mut cfg2 = quick_cfg(Algo::DiLoCoX);
+        cfg2.artifacts_dir = dir;
+        cfg2.train.outer_steps = 1;
+        cfg2.train.overlap = false;
+        let out2 = run_experiment(&cfg2, &opts()).unwrap();
+        assert!(out2.metrics.records[0].wire_bytes > 0);
+    }
+
+    #[test]
+    fn opendiloco_wire_is_fp16_equivalent() {
+        let Some(dir) = tiny_dir() else { return };
+        let mut cfg = quick_cfg(Algo::OpenDiLoCo);
+        cfg.artifacts_dir = dir;
+        let out = run_experiment(&cfg, &opts()).unwrap();
+        let n = out.params.len() as u64;
+        let rec = &out.metrics.records[0];
+        // fp16 = 2 bytes/elem + scale overhead.
+        assert!(rec.wire_bytes >= 2 * n && rec.wire_bytes < 2 * n + 64,
+                "wire={} n={n}", rec.wire_bytes);
+        assert!((rec.compression_ratio - 2.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn cocktail_compresses_aggressively() {
+        let Some(dir) = tiny_dir() else { return };
+        let mut cfg = quick_cfg(Algo::CocktailSgd);
+        cfg.artifacts_dir = dir;
+        let out = run_experiment(&cfg, &opts()).unwrap();
+        let rec = &out.metrics.records[0];
+        assert!(rec.compression_ratio > 30.0, "{}", rec.compression_ratio);
+        let first = out.eval_curve.first().unwrap().1;
+        let last = out.eval_curve.last().unwrap().1;
+        assert!(last < first + 0.5, "cocktail should still roughly learn");
+    }
+
+    #[test]
+    fn adaptive_controller_updates_rank_and_h() {
+        let Some(dir) = tiny_dir() else { return };
+        let mut cfg = quick_cfg(Algo::DiLoCoX);
+        cfg.artifacts_dir = dir;
+        cfg.train.outer_steps = 5;
+        cfg.train.overlap = false;
+        cfg.compression.adaptive = true;
+        cfg.compression.rank_window = 2;
+        let out = run_experiment(&cfg, &opts()).unwrap();
+        // After the window fills the recorded rank should track r_t (and
+        // usually drop below r1 on structured pseudo-gradients).
+        let ranks: Vec<usize> =
+            out.metrics.records.iter().map(|r| r.rank).collect();
+        assert_eq!(ranks[0], 8);
+        assert!(ranks.iter().all(|&r| r >= 1 && r <= 8));
+    }
+}

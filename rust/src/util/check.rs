@@ -1,0 +1,144 @@
+//! Mini property-testing framework (no proptest offline).
+//!
+//! `props(seed).runs(n).check(|g| { ... })` draws generator inputs from a
+//! deterministic PCG stream; on failure it reports the failing case index
+//! and re-runs with a fixed seed printed for reproduction.  Shrinking is
+//! size-biased generation (small cases are tried first) rather than
+//! post-hoc shrinking — adequate for the numeric invariants tested here.
+
+use super::rng::Pcg32;
+
+pub struct Gen {
+    pub rng: Pcg32,
+    /// Grows 0.0 -> 1.0 across the run so early cases are small.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        // Bias toward the low end early in the run.
+        let span = (hi - lo) as f64;
+        let cap = lo as f64 + 1.0 + span * self.size;
+        let hi_eff = (cap.min(hi as f64)) as usize;
+        if hi_eff <= lo {
+            return lo;
+        }
+        lo + self.rng.below((hi_eff - lo + 1) as u32) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f32()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, 0.0, std);
+        v
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u32) as usize]
+    }
+}
+
+pub struct Props {
+    seed: u64,
+    runs: usize,
+}
+
+pub fn props(seed: u64) -> Props {
+    Props { seed, runs: 64 }
+}
+
+impl Props {
+    pub fn runs(mut self, n: usize) -> Self {
+        self.runs = n;
+        self
+    }
+
+    /// Panics (failing the enclosing #[test]) on the first property
+    /// violation, reporting the case number and seed.
+    pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(self, mut f: F) {
+        for case in 0..self.runs {
+            let mut g = Gen {
+                rng: Pcg32::seed_from(self.seed).split(case as u64),
+                size: (case as f64 + 1.0) / self.runs as f64,
+            };
+            if let Err(msg) = f(&mut g) {
+                panic!(
+                    "property failed at case {case}/{} (seed {}): {msg}",
+                    self.runs, self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Helper: approximate equality with context for Result-style properties.
+pub fn close(a: f32, b: f32, tol: f32, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+pub fn close_slice(a: &[f32], b: &[f32], tol: f32, what: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{what}: length {} != {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > tol * (1.0 + x.abs().max(y.abs())) {
+            return Err(format!("{what}[{i}]: {x} != {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_a_true_property() {
+        props(1).runs(50).check(|g| {
+            let n = g.usize_in(1, 64);
+            let v = g.vec_f32(n, -1.0, 1.0);
+            let s: f32 = v.iter().sum();
+            let s2: f32 = v.iter().rev().sum();
+            close(s, s2, 1e-5, "sum commutes")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_a_false_property() {
+        props(2).runs(50).check(|g| {
+            let n = g.usize_in(1, 100);
+            if n > 50 {
+                Err(format!("found n={n}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn early_cases_are_small() {
+        let mut first_sizes = vec![];
+        props(3).runs(20).check(|g| {
+            first_sizes.push(g.usize_in(0, 1000));
+            Ok(())
+        });
+        assert!(first_sizes[0] <= 60, "{first_sizes:?}");
+    }
+}

@@ -1,0 +1,233 @@
+//! CLI argument parser substrate (no clap offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, repeated keys,
+//! positional args, and generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: String,
+    pub help: String,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, Default)]
+pub struct CliSpec {
+    pub name: String,
+    pub about: String,
+    specs: Vec<OptSpec>,
+}
+
+impl CliSpec {
+    pub fn new(name: &str, about: &str) -> Self {
+        CliSpec { name: name.into(), about: about.into(), specs: vec![] }
+    }
+
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.specs {
+            let head = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {}]", d),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{:<28}{}{}\n", head, o.help, def));
+        }
+        s
+    }
+
+    /// Parse; returns Err with a usage-style message on unknown options or
+    /// missing required values.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let known: BTreeMap<&str, &OptSpec> =
+            self.specs.iter().map(|s| (s.name.as_str(), s)).collect();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = known
+                    .get(key.as_str())
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag, takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    args.opts.entry(key).or_default().push(val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+        }
+        // Fill defaults, check required.
+        for spec in &self.specs {
+            if spec.is_flag {
+                continue;
+            }
+            if !args.opts.contains_key(&spec.name) {
+                match &spec.default {
+                    Some(d) => {
+                        args.opts
+                            .insert(spec.name.clone(), vec![d.clone()]);
+                    }
+                    None => {
+                        return Err(format!(
+                            "missing required option --{}\n\n{}",
+                            spec.name,
+                            self.usage()
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> &str {
+        self.opts
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+            .unwrap_or("")
+    }
+
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.opts
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize, String> {
+        self.get(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected integer, got '{}'", self.get(key)))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, String> {
+        self.get(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected number, got '{}'", self.get(key)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn spec() -> CliSpec {
+        CliSpec::new("t", "test")
+            .opt("preset", "tiny", "model preset")
+            .req("steps", "outer steps")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_forms() {
+        let a = spec()
+            .parse(&argv(&["--steps", "10", "--preset=small", "--verbose", "pos"]))
+            .unwrap();
+        assert_eq!(a.get("steps"), "10");
+        assert_eq!(a.get("preset"), "small");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos"]);
+        assert_eq!(a.get_usize("steps").unwrap(), 10);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = spec().parse(&argv(&["--steps", "5"])).unwrap();
+        assert_eq!(a.get("preset"), "tiny");
+        assert!(!a.flag("verbose"));
+        assert!(spec().parse(&argv(&[])).is_err()); // missing --steps
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(spec().parse(&argv(&["--steps", "1", "--nope", "x"])).is_err());
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = spec().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.contains("--preset"));
+        assert!(err.contains("default: tiny"));
+    }
+
+    #[test]
+    fn repeated_keys_keep_last_and_all() {
+        let a = spec()
+            .parse(&argv(&["--steps", "1", "--steps", "2"]))
+            .unwrap();
+        assert_eq!(a.get("steps"), "2");
+        assert_eq!(a.get_all("steps"), vec!["1", "2"]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny leveled logger with wall-clock timestamps, level filtering via the
+//! `DILOCOX_LOG` env var (error|warn|info|debug|trace), and a capture mode
+//! for tests.  All trainer/coordinator progress lines flow through this.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => " WARN",
+            Level::Info => " INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+fn max_level() -> u8 {
+    let v = MAX_LEVEL.load(Ordering::Relaxed);
+    if v != 255 {
+        return v;
+    }
+    let lvl = std::env::var("DILOCOX_LOG")
+        .map(|s| Level::parse(&s))
+        .unwrap_or(Level::Info) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_level(l: Level) {
+    MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Route log lines into a buffer (tests); returns previous buffer.
+pub fn capture(enable: bool) -> Vec<String> {
+    let mut g = CAPTURE.lock().unwrap();
+    let prev = g.take().unwrap_or_default();
+    *g = if enable { Some(Vec::new()) } else { None };
+    prev
+}
+
+pub fn log(level: Level, target: &str, msg: &str) {
+    if (level as u8) > max_level() {
+        return;
+    }
+    let now = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    let secs = now.as_secs();
+    let line = format!(
+        "[{}.{:03} {} {}] {}",
+        secs % 100_000,
+        now.subsec_millis(),
+        level.tag(),
+        target,
+        msg
+    );
+    let mut g = CAPTURE.lock().unwrap();
+    if let Some(buf) = g.as_mut() {
+        buf.push(line);
+    } else {
+        let _ = writeln!(std::io::stderr(), "{line}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target,
+                               &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnln {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target,
+                               &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debugln {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $target,
+                               &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filters_by_level_and_captures() {
+        set_level(Level::Info);
+        capture(true);
+        log(Level::Info, "t", "hello");
+        log(Level::Debug, "t", "hidden");
+        let lines = capture(false);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("hello"));
+        assert!(lines[0].contains("INFO"));
+    }
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("TRACE"), Level::Trace);
+        assert_eq!(Level::parse("bogus"), Level::Info);
+        assert!(Level::Error < Level::Trace);
+    }
+}

@@ -1,0 +1,79 @@
+//! Substrates implemented in-repo (offline crate policy, DESIGN.md):
+//! PRNG, JSON, CLI parsing, logging, property testing, and small helpers.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+
+/// Human-readable byte counts for logs and reports.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable durations (simulated or wall).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else if s < 7200.0 {
+        format!("{:.1} min", s / 60.0)
+    } else {
+        format!("{:.2} h", s / 3600.0)
+    }
+}
+
+/// Mean of an f32 slice (0.0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+    }
+}
+
+/// L2 norm.
+pub fn l2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(533_300_000_000), "496.67 GiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(0.5), "500.0 ms");
+        assert_eq!(fmt_secs(4248.0), "70.8 min");
+        assert_eq!(fmt_secs(7300.0), "2.03 h");
+    }
+
+    #[test]
+    fn mean_and_l2() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((l2(&[3.0, 4.0]) - 5.0).abs() < 1e-9);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Cross-language numerics: execute every goldened HLO program through the
+//! rust PJRT runtime on the inputs python saved, and compare against the
+//! outputs live jax produced.  This is the load-bearing L2↔L3 contract
+//! test: layout, dtype, tuple order, and numerics all have to line up.
+
+use dilocox::runtime::{DType, HostTensor, Runtime};
+
+fn bundle(name: &str) -> Option<Runtime> {
+    let dir = format!("{}/artifacts/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::path::Path::new(&dir)
+        .exists()
+        .then(|| Runtime::load(&dir).unwrap())
+}
+
+fn check_goldens(rt: &Runtime, rtol: f32, atol: f32) {
+    let man = &rt.manifest;
+    assert!(!man.goldens.is_empty(), "bundle has no goldens");
+    for (name, (inputs, outputs)) in &man.goldens {
+        let prog = man.program(name).unwrap();
+        let mut args = Vec::new();
+        for (file, sig) in inputs.iter().zip(&prog.inputs) {
+            let rel = format!("goldens/{file}");
+            let t = match sig.dtype {
+                DType::F32 => HostTensor::F32(man.read_f32(&rel).unwrap()),
+                DType::I32 => HostTensor::I32(man.read_i32(&rel).unwrap()),
+            };
+            args.push(t);
+        }
+        let got = rt.exec(name, &args).unwrap_or_else(|e| {
+            panic!("executing golden program {name}: {e:#}")
+        });
+        assert_eq!(got.len(), outputs.len(), "{name}: output arity");
+        for (i, (file, out)) in outputs.iter().zip(&got).enumerate() {
+            let want = man.read_f32(&format!("goldens/{file}")).unwrap();
+            let gotv = out.as_f32().unwrap();
+            assert_eq!(gotv.len(), want.len(), "{name} out{i} len");
+            let mut worst = 0.0f32;
+            for (a, b) in gotv.iter().zip(&want) {
+                let dev = (a - b).abs() / (1.0 + b.abs());
+                worst = worst.max(dev);
+                assert!(
+                    (a - b).abs() <= atol + rtol * b.abs().max(1.0),
+                    "{name} out{i}: {a} vs {b} (worst rel dev {worst})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_bundle_matches_jax_goldens() {
+    let Some(rt) = bundle("tiny") else {
+        eprintln!("skipping: tiny artifacts not built");
+        return;
+    };
+    check_goldens(&rt, 2e-4, 2e-5);
+}
+
+#[test]
+fn small_bundle_matches_jax_goldens() {
+    let Some(rt) = bundle("small") else {
+        eprintln!("skipping: small artifacts not built");
+        return;
+    };
+    check_goldens(&rt, 5e-4, 5e-5);
+}
+
+#[test]
+fn host_adamw_matches_hlo_adamw() {
+    // The trainer's host-side AdamW must be bit-compatible (to fp32
+    // accumulation tolerance) with the exported adamw_single program.
+    let Some(rt) = bundle("tiny") else { return };
+    let man = &rt.manifest;
+    let n = man.param_count;
+    let p0 = man.read_f32(&man.init["single"].file).unwrap();
+    let mut rngstate = 0x12345u64;
+    let mut grads = vec![0.0f32; n];
+    for g in grads.iter_mut() {
+        // xorshift for a cheap deterministic pattern
+        rngstate ^= rngstate << 13;
+        rngstate ^= rngstate >> 7;
+        rngstate ^= rngstate << 17;
+        *g = ((rngstate % 2000) as f32 / 1000.0 - 1.0) * 1e-2;
+    }
+    let (lr, wd, t) = (1e-3f32, 0.01f32, 1.0f32);
+
+    let out = rt
+        .exec(
+            "adamw_single",
+            &[
+                HostTensor::F32(p0.clone()),
+                HostTensor::F32(grads.clone()),
+                HostTensor::F32(vec![0.0; n]),
+                HostTensor::F32(vec![0.0; n]),
+                HostTensor::F32(vec![t]),
+                HostTensor::F32(vec![lr]),
+                HostTensor::F32(vec![wd]),
+            ],
+        )
+        .unwrap();
+    let hlo_p = out[0].as_f32().unwrap();
+
+    let mut host_p = p0.clone();
+    let mut opt = dilocox::optim::AdamW::new(n, lr, wd);
+    opt.step(&mut host_p, &grads);
+
+    for (a, b) in host_p.iter().zip(hlo_p) {
+        assert!((a - b).abs() < 1e-6 + 1e-5 * b.abs(), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn host_nesterov_matches_hlo_nesterov() {
+    let Some(rt) = bundle("tiny") else { return };
+    let man = &rt.manifest;
+    let n = man.param_count;
+    let p0 = man.read_f32(&man.init["single"].file).unwrap();
+    let delta: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 1e-3).collect();
+    let buf = vec![0.01f32; n];
+    let (lr, mu) = (0.7f32, 0.9f32);
+
+    let out = rt
+        .exec(
+            "nesterov_single",
+            &[
+                HostTensor::F32(p0.clone()),
+                HostTensor::F32(delta.clone()),
+                HostTensor::F32(buf.clone()),
+                HostTensor::F32(vec![lr]),
+                HostTensor::F32(vec![mu]),
+            ],
+        )
+        .unwrap();
+    let hlo_p = out[0].as_f32().unwrap();
+    let hlo_buf = out[1].as_f32().unwrap();
+
+    let mut host_p = p0.clone();
+    let mut opt = dilocox::optim::Nesterov::new(n, lr, mu);
+    opt.buf.copy_from_slice(&buf);
+    opt.step(&mut host_p, &delta);
+
+    for ((a, b), (c, d)) in
+        host_p.iter().zip(hlo_p).zip(opt.buf.iter().zip(hlo_buf))
+    {
+        assert!((a - b).abs() < 1e-6 + 1e-5 * b.abs(), "params {a} vs {b}");
+        assert!((c - d).abs() < 1e-6 + 1e-5 * d.abs(), "buf {c} vs {d}");
+    }
+}
+
+#[test]
+fn rust_lowrank_matches_hlo_lowrank_program() {
+    // The L3-native PowerSGD iteration must agree with the exported
+    // (pallas-lowered) lowrank_iter HLO on the same inputs.
+    let Some(rt) = bundle("tiny") else { return };
+    let man = &rt.manifest;
+    if !man.programs.contains_key("lowrank_iter") {
+        return;
+    }
+    let (inputs, _) = &man.goldens["lowrank_iter"];
+    let m = man.read_f32(&format!("goldens/{}", inputs[0])).unwrap();
+    let q = man.read_f32(&format!("goldens/{}", inputs[1])).unwrap();
+    let sig = &man.program("lowrank_iter").unwrap().inputs;
+    let (rows, cols) = (sig[0].shape[0], sig[0].shape[1]);
+    let r = sig[1].shape[1];
+
+    let out = rt
+        .exec(
+            "lowrank_iter",
+            &[HostTensor::F32(m.clone()), HostTensor::F32(q.clone())],
+        )
+        .unwrap();
+    let hlo_p = out[0].as_f32().unwrap();
+    let hlo_q = out[1].as_f32().unwrap();
+
+    use dilocox::linalg::{lowrank_iter, Mat};
+    let (p_host, q_host) = lowrank_iter(
+        &Mat::from_vec(rows, cols, m),
+        &Mat::from_vec(cols, r, q),
+    );
+    for (a, b) in p_host.data.iter().zip(hlo_p) {
+        assert!((a - b).abs() < 1e-3 + 1e-3 * b.abs(), "P: {a} vs {b}");
+    }
+    for (a, b) in q_host.data.iter().zip(hlo_q) {
+        assert!((a - b).abs() < 1e-2 + 1e-3 * b.abs(), "Q: {a} vs {b}");
+    }
+}

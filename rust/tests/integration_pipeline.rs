@@ -1,0 +1,311 @@
+//! Pipeline-parallel composition from rust: chaining the per-stage HLO
+//! programs (fwd_first → fwd_mid* → fwd_last, then the backward chain)
+//! must reproduce the monolithic step_single program — the §2.2 partition
+//! run through the real runtime, driven by the 1F1B schedule.
+
+use dilocox::model::{stage_ranges, ParamStore};
+use dilocox::pipeline;
+use dilocox::runtime::{HostTensor, Runtime};
+
+fn tiny() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/tiny");
+    std::path::Path::new(dir)
+        .exists()
+        .then(|| Runtime::load(dir).unwrap())
+}
+
+fn batch(man: &dilocox::runtime::Manifest) -> (Vec<i32>, Vec<i32>) {
+    let n = man.dims.microbatch * man.dims.seq_len;
+    let v = man.dims.vocab_size as i32;
+    let tokens: Vec<i32> = (0..n).map(|i| (i as i32 * 7 + 3) % v).collect();
+    let labels: Vec<i32> = (0..n).map(|i| (i as i32 * 11 + 5) % v).collect();
+    (tokens, labels)
+}
+
+#[test]
+fn stage_chain_forward_matches_single() {
+    let Some(rt) = tiny() else { return };
+    let man = &rt.manifest;
+    let (tokens, labels) = batch(man);
+
+    let single = ParamStore::from_manifest(man, "single").unwrap();
+    let loss_single = rt
+        .eval_single(&single.flat, &tokens, &labels)
+        .unwrap();
+
+    // Forward chain over stages.
+    let kinds = man.stage_kinds();
+    let mut acts: Option<Vec<f32>> = None;
+    let mut loss_pipe = f32::NAN;
+    for (i, kind) in kinds.iter().enumerate() {
+        let stage = ParamStore::from_manifest(man, &format!("stage_{i}")).unwrap();
+        match *kind {
+            "first" => {
+                let out = rt
+                    .exec(
+                        "fwd_first",
+                        &[
+                            HostTensor::F32(stage.flat.clone()),
+                            HostTensor::I32(tokens.clone()),
+                        ],
+                    )
+                    .unwrap();
+                acts = Some(out[0].clone().into_f32().unwrap());
+            }
+            "mid" => {
+                let out = rt
+                    .exec(
+                        "fwd_mid",
+                        &[
+                            HostTensor::F32(stage.flat.clone()),
+                            HostTensor::F32(acts.clone().unwrap()),
+                        ],
+                    )
+                    .unwrap();
+                acts = Some(out[0].clone().into_f32().unwrap());
+            }
+            "last" => {
+                let out = rt
+                    .exec(
+                        "fwd_last",
+                        &[
+                            HostTensor::F32(stage.flat.clone()),
+                            HostTensor::F32(acts.clone().unwrap()),
+                            HostTensor::I32(labels.clone()),
+                        ],
+                    )
+                    .unwrap();
+                loss_pipe = out[0].scalar_f32().unwrap();
+            }
+            other => panic!("unexpected stage kind {other}"),
+        }
+    }
+    assert!(
+        (loss_pipe - loss_single).abs() < 1e-4 * (1.0 + loss_single.abs()),
+        "pipeline fwd {loss_pipe} vs single {loss_single}"
+    );
+}
+
+#[test]
+fn stage_chain_backward_matches_single_grads() {
+    let Some(rt) = tiny() else { return };
+    let man = &rt.manifest;
+    let (tokens, labels) = batch(man);
+    let single = ParamStore::from_manifest(man, "single").unwrap();
+
+    let (loss_single, g_single) = rt
+        .step_single(&single.flat, &tokens, &labels)
+        .unwrap();
+
+    // Forward chain, stashing stage inputs.
+    let kinds = man.stage_kinds();
+    let stages: Vec<ParamStore> = (0..kinds.len())
+        .map(|i| ParamStore::from_manifest(man, &format!("stage_{i}")).unwrap())
+        .collect();
+    let mut stage_inputs: Vec<Vec<f32>> = Vec::new(); // acts entering stage i (i>=1)
+    let mut acts: Vec<f32> = {
+        let out = rt
+            .exec(
+                "fwd_first",
+                &[
+                    HostTensor::F32(stages[0].flat.clone()),
+                    HostTensor::I32(tokens.clone()),
+                ],
+            )
+            .unwrap();
+        out[0].clone().into_f32().unwrap()
+    };
+    for i in 1..kinds.len() - 1 {
+        stage_inputs.push(acts.clone());
+        let out = rt
+            .exec(
+                "fwd_mid",
+                &[
+                    HostTensor::F32(stages[i].flat.clone()),
+                    HostTensor::F32(acts.clone()),
+                ],
+            )
+            .unwrap();
+        acts = out[0].clone().into_f32().unwrap();
+    }
+    stage_inputs.push(acts.clone());
+
+    // Backward chain.
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); kinds.len()];
+    let last = kinds.len() - 1;
+    let out = rt
+        .exec(
+            "bwd_last",
+            &[
+                HostTensor::F32(stages[last].flat.clone()),
+                HostTensor::F32(stage_inputs[last - 1].clone()),
+                HostTensor::I32(labels.clone()),
+            ],
+        )
+        .unwrap();
+    let loss_pipe = out[0].scalar_f32().unwrap();
+    grads[last] = out[1].clone().into_f32().unwrap();
+    let mut g_acts = out[2].clone().into_f32().unwrap();
+    for i in (1..last).rev() {
+        let out = rt
+            .exec(
+                "bwd_mid",
+                &[
+                    HostTensor::F32(stages[i].flat.clone()),
+                    HostTensor::F32(stage_inputs[i - 1].clone()),
+                    HostTensor::F32(g_acts.clone()),
+                ],
+            )
+            .unwrap();
+        grads[i] = out[0].clone().into_f32().unwrap();
+        g_acts = out[1].clone().into_f32().unwrap();
+    }
+    let out = rt
+        .exec(
+            "bwd_first",
+            &[
+                HostTensor::F32(stages[0].flat.clone()),
+                HostTensor::I32(tokens.clone()),
+                HostTensor::F32(g_acts),
+            ],
+        )
+        .unwrap();
+    grads[0] = out[0].clone().into_f32().unwrap();
+
+    assert!(
+        (loss_pipe - loss_single).abs() < 1e-4 * (1.0 + loss_single.abs()),
+        "{loss_pipe} vs {loss_single}"
+    );
+    let g_pipe: Vec<f32> = grads.concat();
+    assert_eq!(g_pipe.len(), g_single.len());
+    // Validate against the manifest's stage ranges too.
+    let ranges = stage_ranges(man);
+    assert_eq!(ranges.last().unwrap().end, g_pipe.len());
+    let mut worst = 0.0f32;
+    for (a, b) in g_pipe.iter().zip(&g_single) {
+        worst = worst.max((a - b).abs() / (1e-3 + b.abs()));
+        assert!(
+            (a - b).abs() < 1e-4 + 2e-3 * b.abs(),
+            "grad mismatch {a} vs {b} (worst {worst})"
+        );
+    }
+}
+
+#[test]
+fn schedule_drives_real_stage_programs() {
+    // Execute a 2-microbatch 1F1B schedule with the real HLO programs:
+    // gradient accumulation over microbatches must equal the sum of
+    // per-microbatch step_single gradients.
+    let Some(rt) = tiny() else { return };
+    let man = &rt.manifest;
+    let m = man.dims.pp_stages;
+    let micros = 2usize;
+    let streams = pipeline::one_f_one_b_schedule(m, micros);
+    pipeline::validate_schedule(&streams, micros).unwrap();
+
+    let single = ParamStore::from_manifest(man, "single").unwrap();
+    let (t0, l0) = batch(man);
+    // Second microbatch: shifted pattern.
+    let v = man.dims.vocab_size as i32;
+    let t1: Vec<i32> = t0.iter().map(|x| (x + 1) % v).collect();
+    let l1: Vec<i32> = l0.iter().map(|x| (x + 1) % v).collect();
+
+    let (_, g0) = rt.step_single(&single.flat, &t0, &l0).unwrap();
+    let (_, g1) = rt.step_single(&single.flat, &t1, &l1).unwrap();
+    let want: Vec<f32> = g0.iter().zip(&g1).map(|(a, b)| a + b).collect();
+
+    // Accumulate via stage programs, microbatch by microbatch (the
+    // schedule's per-stage order is validated above; numerically the
+    // accumulation is order-independent).
+    let stages: Vec<ParamStore> = (0..m)
+        .map(|i| ParamStore::from_manifest(man, &format!("stage_{i}")).unwrap())
+        .collect();
+    let mut acc = vec![0.0f32; man.param_count];
+    for (tok, lab) in [(&t0, &l0), (&t1, &l1)] {
+        // fwd chain
+        let mut inputs: Vec<Vec<f32>> = Vec::new();
+        let out = rt
+            .exec(
+                "fwd_first",
+                &[
+                    HostTensor::F32(stages[0].flat.clone()),
+                    HostTensor::I32(tok.clone()),
+                ],
+            )
+            .unwrap();
+        let mut acts = out[0].clone().into_f32().unwrap();
+        for i in 1..m - 1 {
+            inputs.push(acts.clone());
+            let out = rt
+                .exec(
+                    "fwd_mid",
+                    &[
+                        HostTensor::F32(stages[i].flat.clone()),
+                        HostTensor::F32(acts),
+                    ],
+                )
+                .unwrap();
+            acts = out[0].clone().into_f32().unwrap();
+        }
+        inputs.push(acts);
+        // bwd chain
+        let out = rt
+            .exec(
+                "bwd_last",
+                &[
+                    HostTensor::F32(stages[m - 1].flat.clone()),
+                    HostTensor::F32(inputs[m - 2].clone()),
+                    HostTensor::I32(lab.clone()),
+                ],
+            )
+            .unwrap();
+        let mut off_end = man.param_count;
+        let ranges = stage_ranges(man);
+        let gp = out[1].as_f32().unwrap();
+        acc[ranges[m - 1].clone()]
+            .iter_mut()
+            .zip(gp)
+            .for_each(|(a, b)| *a += b);
+        let mut g_acts = out[2].clone().into_f32().unwrap();
+        for i in (1..m - 1).rev() {
+            let out = rt
+                .exec(
+                    "bwd_mid",
+                    &[
+                        HostTensor::F32(stages[i].flat.clone()),
+                        HostTensor::F32(inputs[i - 1].clone()),
+                        HostTensor::F32(g_acts),
+                    ],
+                )
+                .unwrap();
+            acc[ranges[i].clone()]
+                .iter_mut()
+                .zip(out[0].as_f32().unwrap())
+                .for_each(|(a, b)| *a += b);
+            g_acts = out[1].clone().into_f32().unwrap();
+        }
+        let out = rt
+            .exec(
+                "bwd_first",
+                &[
+                    HostTensor::F32(stages[0].flat.clone()),
+                    HostTensor::I32(tok.clone()),
+                    HostTensor::F32(g_acts),
+                ],
+            )
+            .unwrap();
+        acc[ranges[0].clone()]
+            .iter_mut()
+            .zip(out[0].as_f32().unwrap())
+            .for_each(|(a, b)| *a += b);
+        off_end -= 0; // silence unused warnings pattern
+        let _ = off_end;
+    }
+
+    for (a, b) in acc.iter().zip(&want) {
+        assert!(
+            (a - b).abs() < 2e-4 + 2e-3 * b.abs(),
+            "microbatch accumulation {a} vs {b}"
+        );
+    }
+}
