@@ -13,6 +13,8 @@
 
 use dilocox::config::{Algo, ExperimentConfig};
 use dilocox::coordinator::run_threaded;
+use dilocox::transport::elastic::{run_elastic, ElasticConfig, SpawnMode, Workload};
+use dilocox::transport::TransportBackend;
 use dilocox::util::cli::CliSpec;
 use dilocox::util::{fmt_bytes, fmt_secs};
 use std::time::Instant;
@@ -26,6 +28,9 @@ fn main() -> anyhow::Result<()> {
         .opt("rank", "128", "low-rank r₁")
         .opt("inner-lr", "6e-4", "inner AdamW lr")
         .opt("csv", "", "write per-round loss CSV here")
+        .opt("transport", "local", "local (threads) | tcp (worker processes)")
+        .opt("kill-round", "0", "tcp: kill --kill-rank at this round (churn demo)")
+        .opt("kill-rank", "1", "tcp: rank to kill at --kill-round")
         .flag("no-overlap", "disable one-step-delay overlap");
     let args = match spec.parse(&std::env::args().skip(1).collect::<Vec<_>>()) {
         Ok(a) => a,
@@ -55,13 +60,87 @@ fn main() -> anyhow::Result<()> {
     cfg.compression.adaptive = false; // fixed rank for the recorded run
 
     println!(
-        "pretrain_e2e: preset={preset} D={} T={} H={} rank={} overlap={}",
+        "pretrain_e2e: preset={preset} D={} T={} H={} rank={} overlap={} transport={}",
         cfg.parallel.dp,
         cfg.train.outer_steps,
         cfg.train.local_steps,
         cfg.compression.rank,
-        cfg.train.overlap
+        cfg.train.overlap,
+        args.get("transport")
     );
+
+    // ---- elastic multi-process path (churn-tolerant scenario) ------------
+    // One OS process per cluster over loopback TCP; optionally kill one
+    // worker mid-run and watch the ring re-form with the survivors.
+    let backend = TransportBackend::parse(args.get("transport"))
+        .map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    if backend == TransportBackend::Tcp {
+        let kill_round = args
+            .get_usize("kill-round")
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        if kill_round > 0 {
+            cfg.faults.enabled = true;
+            cfg.faults.kill_round = kill_round;
+            cfg.faults.kill_rank = args
+                .get_usize("kill-rank")
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+            // Range-checks kill_rank against dp — an out-of-range rank
+            // would otherwise make the churn demo a silent no-op.
+            cfg.validate()?;
+            println!(
+                "fault injection: kill rank {} at round {}",
+                cfg.faults.kill_rank, kill_round
+            );
+        }
+        let ecfg = ElasticConfig::from_experiment(
+            &cfg,
+            Workload::Runtime { artifacts_dir: artifacts.clone() },
+        );
+        let exe = std::env::current_exe()?;
+        // The example binary is not the CLI; workers come from the dilocox
+        // binary next to it (cargo puts examples in target/<p>/examples/).
+        let dilocox_bin = exe
+            .parent()
+            .and_then(|p| p.parent())
+            .map(|p| p.join("dilocox"))
+            .filter(|p| p.exists())
+            .ok_or_else(|| anyhow::anyhow!(
+                "dilocox binary not found next to the example; \
+                 run `cargo build --release` first"
+            ))?;
+        let t0 = Instant::now();
+        let out = run_elastic(
+            &ecfg,
+            &SpawnMode::Process { exe: dilocox_bin.to_string_lossy().to_string() },
+        )?;
+        println!("\nround  mean-loss (heartbeats)");
+        for (r, mean, n) in out.mean_loss_per_round() {
+            println!("{r:>5}  {mean:>9.4}  ({n} workers)");
+        }
+        println!(
+            "\nfinal eval {:.4} | survivors {:?} of {} | epochs {} | wall {} | ring traffic {}",
+            out.final_loss,
+            out.survivors,
+            out.started,
+            out.epochs,
+            fmt_secs(t0.elapsed().as_secs_f64()),
+            fmt_bytes(out.total_wire_bytes)
+        );
+        println!(
+            "note: the elastic tcp path ships raw fp32 pseudo-gradients \
+             (--rank / overlap do not apply)"
+        );
+        if !args.get("csv").is_empty() {
+            let mut csv = String::from("round,mean_loss,workers\n");
+            for (r, mean, n) in out.mean_loss_per_round() {
+                csv.push_str(&format!("{r},{mean},{n}\n"));
+            }
+            std::fs::write(args.get("csv"), csv)?;
+            println!("wrote {}", args.get("csv"));
+        }
+        return Ok(());
+    }
+
     println!("loading + compiling artifacts on {} worker threads ...", cfg.parallel.dp);
 
     let t0 = Instant::now();

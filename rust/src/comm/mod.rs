@@ -1,9 +1,11 @@
-//! Collective communication: the threaded chunked ring AllReduce
-//! ([`ring`]) used by the coordinator's worker processes, plus the wire
-//! cost model shared with the throughput simulator.
+//! Collective communication: the local (mpsc) ring backend ([`ring`])
+//! behind the [`crate::transport::RingTransport`] trait, plus the wire
+//! cost model shared with the throughput simulator.  The TCP multi-process
+//! backend and fault injection live in [`crate::transport`].
 
 pub mod ring;
 
+pub use crate::transport::RingTransport;
 pub use ring::{build_ring, ring_wire_bytes_per_worker, ByteMeter, RingMember};
 
 use crate::config::NetworkConfig;
@@ -24,7 +26,9 @@ pub fn ring_allreduce_seconds(payload: u64, net: &NetworkConfig) -> f64 {
 
 /// Parameter-server exchange time (TopK/Cocktail path): every cluster
 /// pushes `up` bytes and pulls `down` bytes over its WAN link, serialized
-/// at the server's link.
+/// at the server's link.  The server handles the (c−1) uploads and (c−1)
+/// downloads one message at a time, so each of the 2·(c−1) serialized
+/// messages pays the per-message WAN latency — not a flat 2·latency.
 pub fn parameter_server_seconds(up: u64, down: u64, net: &NetworkConfig) -> f64 {
     let c = net.clusters;
     if c <= 1 {
@@ -33,7 +37,7 @@ pub fn parameter_server_seconds(up: u64, down: u64, net: &NetworkConfig) -> f64 
     let bw = net.inter_bw_gbps * 1e9 / 8.0;
     // server link carries (c-1) uploads then (c-1) downloads.
     let xfer = ((c - 1) as f64) * (up as f64 + down as f64) / bw;
-    xfer + 2.0 * net.latency_ms * 1e-3
+    xfer + 2.0 * ((c - 1) as f64) * net.latency_ms * 1e-3
 }
 
 #[cfg(test)]
@@ -79,5 +83,25 @@ mod tests {
         let t = ring_allreduce_seconds(0, &n);
         // 2*(4-1) hops * 50 ms
         assert!((t - 0.3).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn parameter_server_latency_is_per_message() {
+        // Regression: the server serializes (c-1) uploads and (c-1)
+        // downloads, so latency scales with cluster count instead of the
+        // old flat 2·latency.
+        let mut n = net(4, 1e12); // effectively infinite bandwidth
+        n.latency_ms = 50.0;
+        let t = parameter_server_seconds(0, 0, &n);
+        // 2*(4-1) messages * 50 ms.
+        assert!((t - 0.3).abs() < 1e-9, "t={t}");
+
+        // Transfer term unchanged: (c-1)*(up+down)/bw on top of latency.
+        let mut n2 = net(3, 1.0);
+        n2.latency_ms = 10.0;
+        let t2 = parameter_server_seconds(1_000_000_000, 500_000_000, &n2);
+        let bw = 1e9 / 8.0;
+        let expect = 2.0 * 1.5e9 / bw + 2.0 * 2.0 * 0.010;
+        assert!((t2 - expect).abs() < 1e-9, "t2={t2} expect={expect}");
     }
 }

@@ -1,29 +1,20 @@
-//! Chunked ring AllReduce over message channels (Baidu 2017): the actual
-//! collective the coordinator's worker threads run, with per-hop byte
-//! metering.  Reduce-scatter (C−1 hops) then all-gather (C−1 hops); each
-//! worker sends 2·(C−1)/C·payload bytes total — the §2.4.1 factor.
+//! Local (in-memory) transport backend: the chunked ring AllReduce
+//! (Baidu 2017) over mpsc channels — one OS thread per "cluster".
+//!
+//! The collective algebra itself lives in
+//! [`crate::transport::RingTransport`] as a provided method; this module
+//! only supplies the wire (send to successor / receive from predecessor)
+//! so the threaded coordinator and the TCP multi-process path run the
+//! byte-identical schedule.  Reduce-scatter (C−1 hops) then all-gather
+//! (C−1 hops); each worker sends 2·(C−1)/C·payload bytes total — the
+//! §2.4.1 factor.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::transport::RingTransport;
+use anyhow::anyhow;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
-/// Byte meter shared by all ring members (one per "link budget").
-#[derive(Default, Debug)]
-pub struct ByteMeter {
-    pub sent: AtomicU64,
-    pub messages: AtomicU64,
-}
-
-impl ByteMeter {
-    pub fn add(&self, bytes: u64) {
-        self.sent.fetch_add(bytes, Ordering::Relaxed);
-        self.messages.fetch_add(1, Ordering::Relaxed);
-    }
-
-    pub fn total(&self) -> u64 {
-        self.sent.load(Ordering::Relaxed)
-    }
-}
+pub use crate::transport::ByteMeter;
 
 /// One worker's view of the ring: a sender to its successor and a receiver
 /// from its predecessor.
@@ -59,72 +50,29 @@ pub fn build_ring(size: usize) -> Vec<RingMember> {
     members
 }
 
-impl RingMember {
-    /// In-place ring all-reduce (sum) of `buf` across all members.
-    /// Every member must call this with an equal-length buffer.
-    pub fn allreduce_sum(&self, buf: &mut [f32]) -> anyhow::Result<()> {
-        let c = self.size;
-        if c == 1 {
-            return Ok(());
-        }
-        let n = buf.len();
-        // Chunk boundaries (c chunks, last absorbs the remainder).
-        let bounds: Vec<(usize, usize)> = (0..c)
-            .map(|i| {
-                let lo = i * n / c;
-                let hi = (i + 1) * n / c;
-                (lo, hi)
-            })
-            .collect();
-
-        // Phase 1: reduce-scatter.  At step s, send chunk (rank - s) and
-        // accumulate incoming chunk (rank - s - 1).
-        for s in 0..c - 1 {
-            let send_idx = (self.rank + c - s) % c;
-            let (lo, hi) = bounds[send_idx];
-            let payload = buf[lo..hi].to_vec();
-            self.meter.add(4 * payload.len() as u64);
-            self.tx_next
-                .send(payload)
-                .map_err(|_| anyhow::anyhow!("ring peer hung up (send)"))?;
-            let recv_idx = (self.rank + c - s - 1) % c;
-            let incoming = self
-                .rx_prev
-                .recv()
-                .map_err(|_| anyhow::anyhow!("ring peer hung up (recv)"))?;
-            let (lo, hi) = bounds[recv_idx];
-            for (dst, src) in buf[lo..hi].iter_mut().zip(&incoming) {
-                *dst += src;
-            }
-        }
-        // Phase 2: all-gather.  Send the chunk just completed.
-        for s in 0..c - 1 {
-            let send_idx = (self.rank + 1 + c - s) % c;
-            let (lo, hi) = bounds[send_idx];
-            let payload = buf[lo..hi].to_vec();
-            self.meter.add(4 * payload.len() as u64);
-            self.tx_next
-                .send(payload)
-                .map_err(|_| anyhow::anyhow!("ring peer hung up (send)"))?;
-            let recv_idx = (self.rank + c - s) % c;
-            let incoming = self
-                .rx_prev
-                .recv()
-                .map_err(|_| anyhow::anyhow!("ring peer hung up (recv)"))?;
-            let (lo, hi) = bounds[recv_idx];
-            buf[lo..hi].copy_from_slice(&incoming);
-        }
-        Ok(())
+impl RingTransport for RingMember {
+    fn rank(&self) -> usize {
+        self.rank
     }
 
-    /// Mean across members.
-    pub fn allreduce_mean(&self, buf: &mut [f32]) -> anyhow::Result<()> {
-        self.allreduce_sum(buf)?;
-        let inv = 1.0 / self.size as f32;
-        for v in buf.iter_mut() {
-            *v *= inv;
-        }
-        Ok(())
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send_next(&mut self, chunk: &[f32]) -> anyhow::Result<()> {
+        self.tx_next
+            .send(chunk.to_vec())
+            .map_err(|_| anyhow!("ring peer hung up (send)"))
+    }
+
+    fn recv_prev(&mut self) -> anyhow::Result<Vec<f32>> {
+        self.rx_prev
+            .recv()
+            .map_err(|_| anyhow!("ring peer hung up (recv)"))
+    }
+
+    fn meter(&self) -> &ByteMeter {
+        &self.meter
     }
 }
 
@@ -160,7 +108,7 @@ mod tests {
             let handles: Vec<_> = members
                 .into_iter()
                 .zip(inputs.clone())
-                .map(|(m, mut buf)| {
+                .map(|(mut m, mut buf)| {
                     scope.spawn(move || {
                         m.allreduce_sum(&mut buf).unwrap();
                         buf
@@ -200,10 +148,11 @@ mod tests {
     #[test]
     fn single_member_is_noop() {
         let members = build_ring(1);
+        let mut m = members.into_iter().next().unwrap();
         let mut buf = vec![1.0f32, 2.0];
-        members[0].allreduce_sum(&mut buf).unwrap();
+        m.allreduce_sum(&mut buf).unwrap();
         assert_eq!(buf, vec![1.0, 2.0]);
-        assert_eq!(members[0].meter.total(), 0);
+        assert_eq!(m.meter.total(), 0);
     }
 
     #[test]
@@ -214,7 +163,7 @@ mod tests {
             members
                 .into_iter()
                 .zip(bufs)
-                .map(|(m, mut b)| {
+                .map(|(mut m, mut b)| {
                     scope.spawn(move || {
                         m.allreduce_mean(&mut b).unwrap();
                         b

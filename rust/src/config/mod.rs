@@ -5,6 +5,7 @@
 
 pub mod toml;
 
+use crate::transport::TransportBackend;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
@@ -125,6 +126,61 @@ impl NetworkConfig {
     }
 }
 
+/// `[transport]` — which wire the coordinator runs the collective over
+/// and its socket timeouts (see [`crate::transport`]).
+#[derive(Clone, Debug)]
+pub struct TransportConfig {
+    pub backend: TransportBackend,
+    /// Ring socket read/write timeout (failure-detection latency), ms.
+    pub ring_timeout_ms: u64,
+    /// Dial/accept deadline during ring formation, ms.
+    pub connect_timeout_ms: u64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            backend: TransportBackend::Local,
+            ring_timeout_ms: 5000,
+            connect_timeout_ms: 5000,
+        }
+    }
+}
+
+/// `[faults]` — deterministic churn injection for the elastic path
+/// (see [`crate::transport::faulty`]).  Disabled by default.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    pub enabled: bool,
+    /// Seed for the per-worker delay streams.
+    pub seed: u64,
+    /// Probability each sent ring message is delayed.
+    pub delay_prob: f64,
+    /// Max injected delay per message, ms.
+    pub delay_ms: u64,
+    /// Kill `kill_rank` at the start of this round (0 = never).
+    pub kill_round: usize,
+    pub kill_rank: usize,
+    /// Fixed extra send latency for `straggler_rank` (0 ms = off).
+    pub straggler_rank: usize,
+    pub straggler_ms: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            seed: 7,
+            delay_prob: 0.0,
+            delay_ms: 0,
+            kill_round: 0,
+            kill_rank: 0,
+            straggler_rank: 0,
+            straggler_ms: 0,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Artifact preset name (tiny | small | e2e100m) for real-numerics runs.
@@ -135,6 +191,8 @@ pub struct ExperimentConfig {
     pub train: TrainConfig,
     pub compression: CompressionConfig,
     pub network: NetworkConfig,
+    pub transport: TransportConfig,
+    pub faults: FaultConfig,
 }
 
 impl ExperimentConfig {
@@ -201,6 +259,8 @@ impl ExperimentConfig {
             },
             compression,
             network: NetworkConfig::paper_1gbps(dp),
+            transport: TransportConfig::default(),
+            faults: FaultConfig::default(),
         }
     }
 
@@ -279,6 +339,36 @@ impl ExperimentConfig {
         if let Some(x) = v.path("network.latency_ms").and_then(|j| j.as_f64()) {
             cfg.network.latency_ms = x;
         }
+        if let Some(s) = v.path("transport.backend").and_then(|j| j.as_str()) {
+            cfg.transport.backend = TransportBackend::parse(s)?;
+        }
+        if let Some(x) =
+            v.path("transport.ring_timeout_ms").and_then(|j| j.as_usize())
+        {
+            cfg.transport.ring_timeout_ms = x as u64;
+        }
+        if let Some(x) =
+            v.path("transport.connect_timeout_ms").and_then(|j| j.as_usize())
+        {
+            cfg.transport.connect_timeout_ms = x as u64;
+        }
+        set_bool!("faults.enabled", cfg.faults.enabled);
+        if let Some(x) = v.path("faults.seed").and_then(|j| j.as_usize()) {
+            cfg.faults.seed = x as u64;
+        }
+        if let Some(x) = v.path("faults.delay_prob").and_then(|j| j.as_f64()) {
+            cfg.faults.delay_prob = x;
+        }
+        if let Some(x) = v.path("faults.delay_ms").and_then(|j| j.as_usize()) {
+            cfg.faults.delay_ms = x as u64;
+        }
+        set_usize!("faults.kill_round", cfg.faults.kill_round);
+        set_usize!("faults.kill_rank", cfg.faults.kill_rank);
+        set_usize!("faults.straggler_rank", cfg.faults.straggler_rank);
+        if let Some(x) = v.path("faults.straggler_ms").and_then(|j| j.as_usize())
+        {
+            cfg.faults.straggler_ms = x as u64;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -302,6 +392,23 @@ impl ExperimentConfig {
                 || self.compression.topk_ratio <= 0.0)
         {
             return Err(anyhow!("cocktail needs random_ratio and topk_ratio"));
+        }
+        if self.transport.ring_timeout_ms == 0 || self.transport.connect_timeout_ms == 0
+        {
+            return Err(anyhow!("transport timeouts must be >= 1 ms"));
+        }
+        if !(0.0..=1.0).contains(&self.faults.delay_prob) {
+            return Err(anyhow!("faults.delay_prob must be in [0, 1]"));
+        }
+        if self.faults.enabled
+            && self.faults.kill_round > 0
+            && self.faults.kill_rank >= self.parallel.dp
+        {
+            return Err(anyhow!(
+                "faults.kill_rank {} out of range for dp={}",
+                self.faults.kill_rank,
+                self.parallel.dp
+            ));
         }
         Ok(())
     }
@@ -366,6 +473,65 @@ inter_bw_gbps = 0.5
 
         let mut cfg = ExperimentConfig::default_for("tiny", Algo::CocktailSgd);
         cfg.compression.topk_ratio = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn transport_and_faults_sections_parse() {
+        let src = r#"
+algo = "dilocox"
+[model]
+preset = "tiny"
+[parallel]
+dp = 3
+[transport]
+backend = "tcp"
+ring_timeout_ms = 750
+connect_timeout_ms = 1500
+[faults]
+enabled = true
+seed = 42
+delay_prob = 0.25
+delay_ms = 20
+kill_round = 2
+kill_rank = 1
+straggler_rank = 2
+straggler_ms = 5
+"#;
+        let v = toml::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.transport.backend, TransportBackend::Tcp);
+        assert_eq!(cfg.transport.ring_timeout_ms, 750);
+        assert_eq!(cfg.transport.connect_timeout_ms, 1500);
+        assert!(cfg.faults.enabled);
+        assert_eq!(cfg.faults.seed, 42);
+        assert!((cfg.faults.delay_prob - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.faults.delay_ms, 20);
+        assert_eq!(cfg.faults.kill_round, 2);
+        assert_eq!(cfg.faults.kill_rank, 1);
+        assert_eq!(cfg.faults.straggler_rank, 2);
+        assert_eq!(cfg.faults.straggler_ms, 5);
+
+        // Defaults when the sections are absent.
+        let d = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        assert_eq!(d.transport.backend, TransportBackend::Local);
+        assert!(!d.faults.enabled);
+    }
+
+    #[test]
+    fn fault_validation_rejects_bad_values() {
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.faults.delay_prob = 1.5;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.faults.enabled = true;
+        cfg.faults.kill_round = 1;
+        cfg.faults.kill_rank = 99; // dp defaults to 2
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.transport.ring_timeout_ms = 0;
         assert!(cfg.validate().is_err());
     }
 

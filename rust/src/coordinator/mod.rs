@@ -16,6 +16,7 @@
 
 use crate::comm::ring::{build_ring, RingMember};
 use crate::compress::{lowrank, quantize, Method};
+use crate::transport::RingTransport;
 use crate::config::{Algo, ExperimentConfig};
 use crate::data::{MarkovCorpus, ShardIter};
 use crate::linalg::{matmul, matmul_at_b, matmul_bt, orthonormalize_columns, Mat};
@@ -60,9 +61,12 @@ impl WireCompressor {
 
     /// Reduce `delta` across the ring in place (result = global mean of
     /// the compressed deltas); returns payload bytes this worker sent.
+    /// Speaks only to the [`RingTransport`] trait, so the same compressor
+    /// runs over the local mpsc ring, loopback TCP, or a fault-injecting
+    /// wrapper.
     fn reduce(
         &mut self,
-        member: &RingMember,
+        member: &mut dyn RingTransport,
         delta: &mut [f32],
         spec: &[ParamEntry],
         step: u64,
@@ -90,7 +94,7 @@ impl WireCompressor {
 
     fn lowrank_reduce(
         &mut self,
-        member: &RingMember,
+        member: &mut dyn RingTransport,
         delta: &mut [f32],
         spec: &[ParamEntry],
         step: u64,
@@ -311,11 +315,11 @@ fn worker_main(
                 delta[i] = (anchor[i] - params[i]) + error[i];
             }
             let raw = delta.clone();
-            let m = member.take().expect("ring member in flight twice");
+            let mut m = member.take().expect("ring member in flight twice");
             let mut c = compressor_slot.take().expect("compressor in flight");
             let spec_cl = spec.clone();
             let handle = std::thread::spawn(move || {
-                let bytes = c.reduce(&m, &mut delta, &spec_cl, 0)?;
+                let bytes = c.reduce(&mut m, &mut delta, &spec_cl, 0)?;
                 Ok((m, c, delta, bytes))
             });
             in_flight = Some((handle, raw));
@@ -329,7 +333,7 @@ fn worker_main(
                 delta[i] = (anchor[i] - params[i]) + error[i];
             }
             let raw = delta.clone();
-            let m = member.as_ref().unwrap();
+            let m = member.as_mut().unwrap();
             let c = compressor_slot.as_mut().unwrap();
             wire = c.reduce(m, &mut delta, &spec, round as u64)?;
             if cfg.compression.error_feedback {

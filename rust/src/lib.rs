@@ -8,6 +8,14 @@
 //! Layer map:
 //! * L3 (this crate): coordinator, trainers, collectives, compression,
 //!   optimizers, pipeline schedules, DES throughput simulator.
+//! * L3 transport: the collective wire behind the
+//!   [`transport::RingTransport`] trait — `local` (in-memory mpsc ring,
+//!   worker threads), `tcp` (length-delimited frames over loopback TCP,
+//!   one `dilocox worker` OS process per cluster, spawned and supervised
+//!   by the elastic coordinator with 2PC membership epochs and ring
+//!   recovery), and `faulty` (deterministic seeded delay/straggler/kill
+//!   injection wrapping either wire).  See [`transport`] for the frame
+//!   format and the membership epoch protocol.
 //! * L2/L1 (python/, build-time only): jax stage programs + pallas kernels,
 //!   AOT-lowered to `artifacts/<preset>/*.hlo.txt` consumed by [`runtime`].
 
@@ -26,4 +34,5 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod train;
+pub mod transport;
 pub mod util;

@@ -2,19 +2,27 @@
 //!
 //! Subcommands:
 //!   train        run a real-numerics experiment (single-process trainer)
-//!   coordinate   run the threaded leader/worker coordinator
+//!   coordinate   run the coordinator (threaded local ring, or elastic
+//!                multi-process TCP ring with --transport tcp)
+//!   worker       one elastic TCP ring worker (spawned by `coordinate`)
 //!   simulate     DES throughput at paper scale (Fig 4 / Table 1)
 //!   analyze      §2.4.1 communication-overhead analysis
 //!   inspect      print an artifact bundle's manifest summary
 //!
 //! `dilocox <cmd> --help` lists options; configs can also come from a TOML
-//! file via `--config path.toml` (see configs/).
+//! file via `--config path.toml` (see configs/), including the
+//! `[transport]` and `[faults]` sections.
 
 use dilocox::config::{Algo, ExperimentConfig};
 use dilocox::metrics::Table;
 use dilocox::report;
 use dilocox::sim;
 use dilocox::train::{run_experiment, RunOpts};
+use dilocox::transport::elastic::{
+    run_elastic, run_worker, ElasticConfig, SpawnMode, WorkerOpts, Workload,
+};
+use dilocox::transport::faulty::FaultPlan;
+use dilocox::transport::TransportBackend;
 use dilocox::util::cli::CliSpec;
 use dilocox::util::{fmt_bytes, fmt_secs};
 
@@ -23,6 +31,7 @@ fn main() {
     let code = match argv.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&argv[1..]),
         Some("coordinate") => cmd_coordinate(&argv[1..]),
+        Some("worker") => cmd_worker(&argv[1..]),
         Some("simulate") => cmd_simulate(&argv[1..]),
         Some("analyze") => cmd_analyze(&argv[1..]),
         Some("inspect") => cmd_inspect(&argv[1..]),
@@ -43,7 +52,9 @@ fn toplevel_usage() -> String {
      Usage: dilocox <subcommand> [options]\n\n\
      Subcommands:\n\
        train        real-numerics training run (PJRT artifacts)\n\
-       coordinate   threaded leader/worker coordinator run\n\
+       coordinate   coordinator run (threaded local ring, or elastic\n\
+                    multi-process TCP ring via --transport tcp)\n\
+       worker       one elastic TCP ring worker (spawned by coordinate)\n\
        simulate     paper-scale DES throughput (Fig 4 / Table 1)\n\
        analyze      §2.4.1 communication-overhead analysis\n\
        inspect      summarize an artifact bundle\n"
@@ -142,7 +153,15 @@ fn cmd_train(argv: &[String]) -> i32 {
 }
 
 fn cmd_coordinate(argv: &[String]) -> i32 {
-    let spec = train_spec("dilocox coordinate", "threaded leader/worker run");
+    let spec = train_spec(
+        "dilocox coordinate",
+        "coordinator run (local threads or elastic TCP processes)",
+    )
+    .opt("transport", "", "local | tcp (default: config [transport])")
+    .opt("dim", "64", "synthetic workload dimension (tcp fallback)")
+    .opt("kill-round", "", "inject: kill --kill-rank at this round (tcp)")
+    .opt("kill-rank", "1", "inject: rank to kill at --kill-round (tcp)")
+    .flag("synthetic", "tcp: force the synthetic quadratic workload");
     let args = match spec.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -150,15 +169,60 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
             return 2;
         }
     };
-    let cfg = match build_cfg(&args) {
+    let mut cfg = match build_cfg(&args) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
+    if !args.get("transport").is_empty() {
+        cfg.transport.backend = match TransportBackend::parse(args.get("transport")) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 2;
+            }
+        };
+    }
+    if !args.get("kill-round").is_empty() {
+        cfg.faults.enabled = true;
+        cfg.faults.kill_round = match args.get_usize("kill-round") {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        cfg.faults.kill_rank = match args.get_usize("kill-rank") {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+    }
+    // Re-validate: the transport/fault overrides above landed after
+    // build_cfg's validation pass (e.g. --kill-rank out of range for dp).
+    if let Err(e) = cfg.validate() {
+        eprintln!("{e:#}");
+        return 2;
+    }
+    if cfg.transport.backend == TransportBackend::Local && cfg.faults.enabled {
+        eprintln!(
+            "warning: [faults] / --kill-round apply only to --transport tcp; \
+             the local threaded run ignores them"
+        );
+    }
+    match cfg.transport.backend {
+        TransportBackend::Tcp => cmd_coordinate_tcp(&cfg, &args),
+        TransportBackend::Local => cmd_coordinate_local(&cfg),
+    }
+}
+
+fn cmd_coordinate_local(cfg: &ExperimentConfig) -> i32 {
     let dir = cfg.artifacts_dir.clone();
-    match dilocox::coordinator::run_threaded(&cfg, &dir) {
+    match dilocox::coordinator::run_threaded(cfg, &dir) {
         Ok(out) => {
             let rounds = cfg.train.outer_steps;
             for r in 1..=rounds {
@@ -186,6 +250,153 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// Elastic multi-process path: spawn one `dilocox worker` per cluster
+/// over loopback TCP; survives injected/real worker death by re-forming
+/// the ring with the survivors.
+fn cmd_coordinate_tcp(cfg: &ExperimentConfig, args: &dilocox::util::cli::Args) -> i32 {
+    let have_artifacts = std::path::Path::new(&cfg.artifacts_dir).exists();
+    let workload = if args.flag("synthetic") || !have_artifacts {
+        if !have_artifacts && !args.flag("synthetic") {
+            eprintln!(
+                "artifacts {} missing — running the synthetic quadratic workload",
+                cfg.artifacts_dir
+            );
+        }
+        let dim = match args.get_usize("dim") {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        Workload::Quadratic { dim }
+    } else {
+        Workload::Runtime { artifacts_dir: cfg.artifacts_dir.clone() }
+    };
+    let mut ecfg = ElasticConfig::from_experiment(cfg, workload);
+    if matches!(ecfg.workload, Workload::Quadratic { .. }) {
+        // The transformer-tuned learning rates barely move the synthetic
+        // quadratic; use the quadratic-tuned defaults (same values as
+        // ElasticConfig::quadratic) so the demo shows decisive convergence.
+        ecfg.inner_lr = 0.25;
+        ecfg.weight_decay = 0.0;
+        ecfg.outer_lr = 0.5;
+        ecfg.outer_momentum = 0.6;
+    }
+    let exe = match std::env::current_exe() {
+        Ok(p) => p.to_string_lossy().to_string(),
+        Err(e) => {
+            eprintln!("cannot locate own binary for worker spawn: {e}");
+            return 1;
+        }
+    };
+    match run_elastic(&ecfg, &SpawnMode::Process { exe }) {
+        Ok(out) => {
+            for (r, mean, n) in out.mean_loss_per_round() {
+                println!("round {r}: mean loss {mean:.6} over {n} workers");
+            }
+            println!(
+                "final eval {:.6}; survivors {:?} of {}; membership epochs {}; ring traffic {}",
+                out.final_loss,
+                out.survivors,
+                out.started,
+                out.epochs,
+                fmt_bytes(out.total_wire_bytes)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("elastic coordinate failed: {e:#}");
+            1
+        }
+    }
+}
+
+/// Body of one elastic TCP worker process (spawned by `coordinate`).
+fn cmd_worker(argv: &[String]) -> i32 {
+    let spec = CliSpec::new(
+        "dilocox worker",
+        "elastic TCP ring worker (spawned by `dilocox coordinate --transport tcp`)",
+    )
+    .req("coord", "coordinator control address host:port")
+    .opt("rank", "0", "worker rank")
+    .opt("rounds", "8", "outer rounds T")
+    .opt("local-steps", "8", "inner steps H per round")
+    .opt("inner-lr", "0.25", "inner step size")
+    .opt("weight-decay", "0.0", "inner AdamW weight decay (runtime workload)")
+    .opt("outer-lr", "0.5", "outer Nesterov step size")
+    .opt("outer-momentum", "0.6", "outer Nesterov momentum")
+    .opt("seed", "1234", "experiment seed")
+    .opt("workload", "quad", "quad | runtime")
+    .opt("dim", "64", "quadratic workload dimension")
+    .opt("artifacts", "", "artifact dir (runtime workload)")
+    .opt("ring-timeout-ms", "5000", "ring socket timeout")
+    .opt("connect-timeout-ms", "5000", "ring formation deadline")
+    .opt("fault-seed", "7", "fault injection seed")
+    .opt("fault-delay-prob", "0", "probability a sent message is delayed")
+    .opt("fault-delay-ms", "0", "max injected delay per message, ms")
+    .opt("fault-kill-round", "0", "exit at this round (0 = never)")
+    .opt("fault-straggler-ms", "0", "fixed extra latency per send, ms");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let opts = match worker_opts_from_args(&args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match run_worker(&opts) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("worker {} failed: {e:#}", opts.rank);
+            1
+        }
+    }
+}
+
+fn worker_opts_from_args(args: &dilocox::util::cli::Args) -> Result<WorkerOpts, String> {
+    let workload = match args.get("workload") {
+        "quad" | "quadratic" => Workload::Quadratic { dim: args.get_usize("dim")? },
+        "runtime" => {
+            let dir = args.get("artifacts");
+            if dir.is_empty() {
+                return Err("--workload runtime needs --artifacts".to_string());
+            }
+            Workload::Runtime { artifacts_dir: dir.to_string() }
+        }
+        other => return Err(format!("unknown workload '{other}' (quad | runtime)")),
+    };
+    let plan = FaultPlan {
+        seed: args.get_u64("fault-seed")?,
+        delay_prob: args.get_f64("fault-delay-prob")?,
+        max_delay_ms: args.get_u64("fault-delay-ms")?,
+        kill_round: args.get_usize("fault-kill-round")?,
+        straggler_ms: args.get_u64("fault-straggler-ms")?,
+        exit_on_kill: true,
+    };
+    Ok(WorkerOpts {
+        coord: args.get("coord").to_string(),
+        rank: args.get_usize("rank")? as u32,
+        rounds: args.get_usize("rounds")?,
+        local_steps: args.get_usize("local-steps")?,
+        inner_lr: args.get_f64("inner-lr")? as f32,
+        weight_decay: args.get_f64("weight-decay")? as f32,
+        outer_lr: args.get_f64("outer-lr")? as f32,
+        outer_momentum: args.get_f64("outer-momentum")? as f32,
+        seed: args.get_u64("seed")?,
+        workload,
+        ring_timeout_ms: args.get_u64("ring-timeout-ms")?,
+        connect_timeout_ms: args.get_u64("connect-timeout-ms")?,
+        faults: if plan.is_quiet() { None } else { Some(plan) },
+    })
 }
 
 fn cmd_simulate(argv: &[String]) -> i32 {

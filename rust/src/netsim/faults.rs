@@ -1,0 +1,107 @@
+//! Fault-aware cost model hook for the DES substrate: deterministic
+//! (Pcg32-seeded) WAN churn applied to link transfers — stragglers that
+//! multiply a transfer's duration and drops that force a retransmission.
+//! The same seed reproduces the same perturbation schedule, so simulated
+//! churn scenarios (107B sync under packet loss, slow-cluster rounds) are
+//! replayable, mirroring the live fault injection in
+//! [`crate::transport::faulty`].
+
+use crate::util::rng::Pcg32;
+
+/// Per-link fault model; draw one [`factor`](LinkFaultModel::factor) per
+/// transfer (the draw order is the schedule, so keep one model per link).
+#[derive(Clone, Debug)]
+pub struct LinkFaultModel {
+    /// Probability a transfer hits a straggling path.
+    pub straggler_prob: f64,
+    /// Duration multiplier when straggling (e.g. 4.0 = 4× slower).
+    pub straggler_mult: f64,
+    /// Probability a transfer is dropped once and retransmitted (2×).
+    pub drop_prob: f64,
+    rng: Pcg32,
+}
+
+impl LinkFaultModel {
+    pub fn new(seed: u64, straggler_prob: f64, straggler_mult: f64, drop_prob: f64) -> Self {
+        LinkFaultModel {
+            straggler_prob,
+            straggler_mult,
+            drop_prob,
+            rng: Pcg32::new(seed, 0xfa17),
+        }
+    }
+
+    /// A model that never perturbs (factor always 1.0).
+    pub fn clean(seed: u64) -> Self {
+        Self::new(seed, 0.0, 1.0, 0.0)
+    }
+
+    /// Duration multiplier for the next transfer (≥ 1.0).
+    pub fn factor(&mut self) -> f64 {
+        let mut f = 1.0;
+        if self.rng.next_f64() < self.straggler_prob {
+            f *= self.straggler_mult.max(1.0);
+        }
+        if self.rng.next_f64() < self.drop_prob {
+            f *= 2.0; // one retransmission
+        }
+        f
+    }
+
+    /// Expected duration multiplier (for closed-form sanity checks).
+    pub fn expected_factor(&self) -> f64 {
+        let s = 1.0 + self.straggler_prob * (self.straggler_mult.max(1.0) - 1.0);
+        let d = 1.0 + self.drop_prob;
+        s * d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::Link;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mut a = LinkFaultModel::new(9, 0.3, 4.0, 0.1);
+        let mut b = LinkFaultModel::new(9, 0.3, 4.0, 0.1);
+        let fa: Vec<f64> = (0..64).map(|_| a.factor()).collect();
+        let fb: Vec<f64> = (0..64).map(|_| b.factor()).collect();
+        assert_eq!(fa, fb);
+        let mut c = LinkFaultModel::new(10, 0.3, 4.0, 0.1);
+        let fc: Vec<f64> = (0..64).map(|_| c.factor()).collect();
+        assert_ne!(fa, fc);
+    }
+
+    #[test]
+    fn clean_model_is_identity() {
+        let mut m = LinkFaultModel::clean(1);
+        for _ in 0..16 {
+            assert_eq!(m.factor(), 1.0);
+        }
+        assert_eq!(m.expected_factor(), 1.0);
+    }
+
+    #[test]
+    fn empirical_factor_tracks_expectation() {
+        let mut m = LinkFaultModel::new(123, 0.25, 3.0, 0.2);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| m.factor()).sum::<f64>() / n as f64;
+        let expect = m.expected_factor();
+        assert!(
+            (mean - expect).abs() < 0.05 * expect,
+            "mean={mean} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn faulty_transfer_inflates_duration() {
+        let mut link = Link::new("wan", 1.0, 0.0);
+        // Always-straggling model: every transfer takes 4x.
+        let mut m = LinkFaultModel::new(5, 1.0, 4.0, 0.0);
+        let (s, e) = link.transfer_with_faults(0.0, 1_000_000_000, &mut m);
+        assert_eq!(s, 0.0);
+        assert!((e - 32.0).abs() < 1e-9, "e={e}"); // 8 s clean, 4x
+        assert_eq!(link.bytes_total, 1_000_000_000);
+    }
+}

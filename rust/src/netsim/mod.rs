@@ -12,8 +12,10 @@
 //! same quantity the paper controls with `tc` on the 1 Gbps inter-cluster
 //! path.
 
+pub mod faults;
 pub mod topology;
 
+pub use faults::LinkFaultModel;
 pub use topology::{Topology, WorkerId};
 
 /// Virtual time in seconds.
@@ -87,6 +89,21 @@ impl Link {
     pub fn transfer(&mut self, ready: SimTime, bytes: u64) -> (SimTime, SimTime) {
         self.bytes_total += bytes;
         let dur = self.transfer_duration(bytes);
+        self.res.acquire(ready, dur)
+    }
+
+    /// Fault-aware transfer: like [`transfer`](Link::transfer) but the
+    /// duration is perturbed by the deterministic churn model (stragglers,
+    /// retransmissions) — the DES-side counterpart of the live fault
+    /// injection in [`crate::transport::faulty`].
+    pub fn transfer_with_faults(
+        &mut self,
+        ready: SimTime,
+        bytes: u64,
+        faults: &mut faults::LinkFaultModel,
+    ) -> (SimTime, SimTime) {
+        self.bytes_total += bytes;
+        let dur = self.transfer_duration(bytes) * faults.factor();
         self.res.acquire(ready, dur)
     }
 }

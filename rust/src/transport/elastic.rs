@@ -1,0 +1,1113 @@
+//! Elastic multi-process coordinator: spawns one `dilocox worker` OS
+//! process per cluster, runs DiLoCo-style outer rounds over the TCP ring,
+//! and survives worker death mid-round by re-forming the ring with the
+//! survivors (the membership epoch protocol documented in
+//! [`crate::transport`]).
+//!
+//! Recovery model: any ring failure (peer death, stall past the socket
+//! timeout) makes every survivor report `RingBroken{applied_rounds}` and
+//! park on its control socket; the coordinator bumps the epoch, runs the
+//! 2PC prepare/commit over the survivors, and the new ring opens with a
+//! consensus `allreduce_mean` over θ_g plus an outer-momentum restart, so
+//! survivors re-agree on the global parameters before training resumes at
+//! `max(applied)+1`.  The pseudo-gradient mean rescales automatically: the
+//! collective mean is over the *current* member count.
+//!
+//! Workloads: the real-numerics PJRT trainer (needs an artifact bundle),
+//! or a synthetic per-worker quadratic that exercises the full outer loop
+//! (H local steps, pseudo-gradient ring mean, Nesterov outer step) with no
+//! artifacts — what the churn integration tests and the zero-dependency
+//! demo path run.
+
+use crate::config::{ExperimentConfig, FaultConfig, TransportConfig};
+use crate::data::{MarkovCorpus, ShardIter};
+use crate::optim::{AdamW, Nesterov};
+use crate::runtime::Runtime;
+use crate::transport::faulty::{FaultPlan, FaultyRing};
+use crate::transport::frame::{read_msg, write_msg, Msg};
+use crate::transport::tcp;
+use crate::transport::RingTransport;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::process::{Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// What each worker trains between syncs.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    /// Synthetic: worker w owns f_w(θ) = ½·mean((θ − c_w)²) with
+    /// c_w = c_shared + 0.1·noise_w; the ring mean drives θ_g to the
+    /// member-average target, so convergence is observable without any
+    /// artifact bundle.
+    Quadratic { dim: usize },
+    /// Real numerics through the PJRT runtime (artifact bundle on disk).
+    Runtime { artifacts_dir: String },
+}
+
+/// Everything a worker process/thread needs (mirrors the CLI flags of
+/// `dilocox worker`).
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// Coordinator control address, e.g. "127.0.0.1:41234".
+    pub coord: String,
+    pub rank: u32,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub inner_lr: f32,
+    pub weight_decay: f32,
+    pub outer_lr: f32,
+    pub outer_momentum: f32,
+    pub seed: u64,
+    pub workload: Workload,
+    pub ring_timeout_ms: u64,
+    pub connect_timeout_ms: u64,
+    pub faults: Option<FaultPlan>,
+}
+
+/// Elastic run parameters (derived from [`ExperimentConfig`] or built
+/// directly by tests).
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    pub workers: usize,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub inner_lr: f32,
+    pub weight_decay: f32,
+    pub outer_lr: f32,
+    pub outer_momentum: f32,
+    pub seed: u64,
+    pub workload: Workload,
+    pub transport: TransportConfig,
+    pub faults: FaultConfig,
+    /// Hard wall-clock ceiling for the whole run (hang safety net).
+    pub wall_timeout_ms: u64,
+}
+
+impl ElasticConfig {
+    /// Synthetic-quadratic defaults tuned for fast, stable convergence.
+    pub fn quadratic(workers: usize, rounds: usize, dim: usize) -> ElasticConfig {
+        ElasticConfig {
+            workers,
+            rounds,
+            local_steps: 8,
+            inner_lr: 0.25,
+            weight_decay: 0.0,
+            outer_lr: 0.5,
+            outer_momentum: 0.6,
+            seed: 1234,
+            workload: Workload::Quadratic { dim },
+            transport: TransportConfig::default(),
+            faults: FaultConfig::default(),
+            wall_timeout_ms: 120_000,
+        }
+    }
+
+    /// Lift an experiment config onto the elastic runner.  Runtime
+    /// workloads pay per-process artifact load + H real training steps per
+    /// round, so the hang safety net scales with the schedule instead of
+    /// using the quick-test default.
+    pub fn from_experiment(cfg: &ExperimentConfig, workload: Workload) -> ElasticConfig {
+        let wall_timeout_ms = match &workload {
+            Workload::Quadratic { .. } => 120_000,
+            // Generous: artifact load/compile + T rounds of H steps.
+            Workload::Runtime { .. } => {
+                600_000 + 60_000 * cfg.train.outer_steps as u64
+            }
+        };
+        ElasticConfig {
+            workers: cfg.parallel.dp,
+            rounds: cfg.train.outer_steps,
+            local_steps: cfg.train.local_steps,
+            inner_lr: cfg.train.inner_lr,
+            weight_decay: cfg.train.weight_decay,
+            outer_lr: cfg.train.outer_lr,
+            outer_momentum: cfg.train.outer_momentum,
+            seed: cfg.train.seed,
+            workload,
+            transport: cfg.transport.clone(),
+            faults: cfg.faults.clone(),
+            wall_timeout_ms,
+        }
+    }
+}
+
+/// How the coordinator launches workers.
+#[derive(Clone, Debug)]
+pub enum SpawnMode {
+    /// `std::process::Command` on the given `dilocox` binary — the real
+    /// deployment shape: a crashed worker is an EOF, not a crashed run.
+    Process { exe: String },
+    /// In-process threads (unit tests; injected kills become error
+    /// returns instead of `process::exit`).
+    Thread,
+}
+
+#[derive(Debug)]
+pub struct ElasticOutcome {
+    pub rounds: usize,
+    /// Final committed membership epoch (1 = no churn happened).
+    pub epochs: u32,
+    pub started: usize,
+    pub survivors: Vec<u32>,
+    /// Mean of the survivors' final eval losses.
+    pub final_loss: f32,
+    /// First survivor's parameter digest (full vector up to
+    /// [`PARAMS_DIGEST_MAX`] elements, strided sample beyond — see
+    /// [`params_digest`]).
+    pub final_params: Vec<f32>,
+    pub total_wire_bytes: u64,
+    /// Heartbeat telemetry: (worker, round, loss).
+    pub round_losses: Vec<(u32, u32, f32)>,
+}
+
+impl ElasticOutcome {
+    /// Heartbeats aggregated per round: (round, mean loss, reporting
+    /// workers).  Rounds with no heartbeat (e.g. lost to churn) are
+    /// omitted.
+    pub fn mean_loss_per_round(&self) -> Vec<(u32, f32, usize)> {
+        let mut out = Vec::new();
+        for r in 1..=self.rounds as u32 {
+            let ls: Vec<f32> = self
+                .round_losses
+                .iter()
+                .filter(|(_, round, _)| *round == r)
+                .map(|(_, _, l)| *l)
+                .collect();
+            if !ls.is_empty() {
+                out.push((r, ls.iter().sum::<f32>() / ls.len() as f32, ls.len()));
+            }
+        }
+        out
+    }
+}
+
+/// Cap on the parameter digest a worker ships in its `Done` report.  The
+/// digest exists for the coordinator's cross-worker agreement check and
+/// telemetry, not for checkpointing — shipping a 100M-param vector over
+/// the control socket would be wasteful and anything over ~268M f32s
+/// would blow the 1 GiB frame guard.  Every worker samples the same
+/// strided indices, so elementwise comparison stays valid.
+pub const PARAMS_DIGEST_MAX: usize = 65_536;
+
+/// Full vector when small, deterministic strided sample when large.
+pub fn params_digest(params: &[f32]) -> Vec<f32> {
+    if params.len() <= PARAMS_DIGEST_MAX {
+        return params.to_vec();
+    }
+    let stride = params.len().div_ceil(PARAMS_DIGEST_MAX);
+    params.iter().step_by(stride).copied().collect()
+}
+
+/// Per-rank fault plan from the `[faults]` config section.
+pub fn fault_plan_for(
+    faults: &FaultConfig,
+    rank: u32,
+    exit_on_kill: bool,
+) -> Option<FaultPlan> {
+    if !faults.enabled {
+        return None;
+    }
+    let plan = FaultPlan {
+        seed: faults.seed,
+        delay_prob: faults.delay_prob,
+        max_delay_ms: faults.delay_ms,
+        kill_round: if rank as usize == faults.kill_rank { faults.kill_round } else { 0 },
+        straggler_ms: if rank as usize == faults.straggler_rank {
+            faults.straggler_ms
+        } else {
+            0
+        },
+        exit_on_kill,
+    };
+    if plan.is_quiet() {
+        None
+    } else {
+        Some(plan)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// What a worker trains between syncs (kept object-safe so the quadratic
+/// and PJRT paths share one outer loop).
+trait LocalTrainer {
+    fn dim(&self) -> usize;
+    fn params(&self) -> &[f32];
+    fn set_params(&mut self, p: &[f32]);
+    /// Run `h` inner steps from the current params; returns the mean loss.
+    fn local_round(&mut self, h: usize) -> Result<f32>;
+    fn eval(&mut self) -> Result<f32>;
+}
+
+struct QuadraticTrainer {
+    params: Vec<f32>,
+    target: Vec<f32>,
+    lr: f32,
+}
+
+impl QuadraticTrainer {
+    fn new(dim: usize, rank: u32, seed: u64, lr: f32) -> QuadraticTrainer {
+        // Shared optimum + small per-worker displacement: the member-mean
+        // target is near the shared component, so the global loss falls
+        // from ~0.5 to ~the displacement variance as θ_g converges.
+        let mut shared = vec![0.0f32; dim];
+        Pcg32::new(seed ^ 0x7a67, 0).fill_normal(&mut shared, 0.0, 1.0);
+        let mut noise = vec![0.0f32; dim];
+        Pcg32::new(seed ^ 0x7a67, 1 + rank as u64).fill_normal(&mut noise, 0.0, 1.0);
+        let target: Vec<f32> =
+            shared.iter().zip(&noise).map(|(s, n)| s + 0.1 * n).collect();
+        QuadraticTrainer { params: vec![0.0; dim], target, lr }
+    }
+
+    fn loss(&self) -> f32 {
+        let n = self.params.len() as f32;
+        0.5 * self
+            .params
+            .iter()
+            .zip(&self.target)
+            .map(|(p, t)| (p - t) * (p - t))
+            .sum::<f32>()
+            / n
+    }
+}
+
+impl LocalTrainer for QuadraticTrainer {
+    fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        self.params.copy_from_slice(p);
+    }
+
+    fn local_round(&mut self, h: usize) -> Result<f32> {
+        // Report the loss at entry (current θ_g) so the round curve is
+        // directly comparable to the final eval.
+        let loss = self.loss();
+        for _ in 0..h {
+            for (p, t) in self.params.iter_mut().zip(&self.target) {
+                let g = *p - *t;
+                *p -= self.lr * g;
+            }
+        }
+        Ok(loss)
+    }
+
+    fn eval(&mut self) -> Result<f32> {
+        Ok(self.loss())
+    }
+}
+
+struct RuntimeTrainer {
+    rt: Runtime,
+    params: Vec<f32>,
+    inner: AdamW,
+    shard: ShardIter,
+    corpus: std::sync::Arc<MarkovCorpus>,
+    seed: u64,
+    microbatch: usize,
+    seq_len: usize,
+}
+
+impl RuntimeTrainer {
+    fn new(dir: &str, rank: u32, opts: &WorkerOpts) -> Result<RuntimeTrainer> {
+        let rt = Runtime::load(dir)
+            .with_context(|| format!("loading artifacts from {dir}"))?;
+        rt.precompile(&["step_single", "eval_single"])?;
+        let man = &rt.manifest;
+        let (b, s) = (man.dims.microbatch, man.dims.seq_len);
+        let corpus =
+            std::sync::Arc::new(MarkovCorpus::new(man.dims.vocab_size, opts.seed));
+        let shard =
+            ShardIter::new(std::sync::Arc::clone(&corpus), rank as usize, opts.seed, b, s);
+        let params = man.read_f32(&man.init["single"].file)?;
+        let n = man.param_count;
+        Ok(RuntimeTrainer {
+            inner: AdamW::new(n, opts.inner_lr, opts.weight_decay),
+            params,
+            shard,
+            corpus,
+            seed: opts.seed,
+            microbatch: b,
+            seq_len: s,
+            rt,
+        })
+    }
+}
+
+impl LocalTrainer for RuntimeTrainer {
+    fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        self.params.copy_from_slice(p);
+    }
+
+    fn local_round(&mut self, h: usize) -> Result<f32> {
+        let mut acc = 0.0f64;
+        for _ in 0..h {
+            let (tok, lab) = self.shard.next_batch();
+            let (loss, grads) = self.rt.step_single(&self.params, &tok, &lab)?;
+            self.inner.step(&mut self.params, &grads);
+            acc += loss as f64;
+        }
+        Ok((acc / h.max(1) as f64) as f32)
+    }
+
+    fn eval(&mut self) -> Result<f32> {
+        let mut it = ShardIter::new(
+            std::sync::Arc::clone(&self.corpus),
+            9999,
+            self.seed ^ 0xe7a1,
+            self.microbatch,
+            self.seq_len,
+        );
+        let mut acc = 0.0f32;
+        let batches = 3;
+        for _ in 0..batches {
+            let (t, l) = it.next_batch();
+            acc += self.rt.eval_single(&self.params, &t, &l)?;
+        }
+        Ok(acc / batches as f32)
+    }
+}
+
+fn build_trainer(opts: &WorkerOpts) -> Result<Box<dyn LocalTrainer>> {
+    Ok(match &opts.workload {
+        Workload::Quadratic { dim } => Box::new(QuadraticTrainer::new(
+            *dim,
+            opts.rank,
+            opts.seed,
+            opts.inner_lr,
+        )),
+        Workload::Runtime { artifacts_dir } => {
+            Box::new(RuntimeTrainer::new(artifacts_dir, opts.rank, opts)?)
+        }
+    })
+}
+
+/// Block on the control socket until the coordinator commits a membership
+/// epoch newer than `after_epoch`; acks every Prepare seen on the way.
+fn wait_for_commit(
+    coord: &mut TcpStream,
+    after_epoch: u32,
+) -> Result<(u32, u32, Vec<(u32, u16)>)> {
+    coord
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .ok();
+    let mut prepared: Option<(u32, u32, Vec<(u32, u16)>)> = None;
+    loop {
+        match read_msg(coord) {
+            Ok(Msg::Prepare { epoch, resume_round, members }) if epoch > after_epoch => {
+                write_msg(coord, &Msg::PrepareAck { epoch })?;
+                prepared = Some((epoch, resume_round, members));
+            }
+            Ok(Msg::Commit { epoch }) => {
+                if let Some(p) = prepared.clone() {
+                    if p.0 == epoch {
+                        return Ok(p);
+                    }
+                }
+                // A commit for an epoch we never prepared (superseded) —
+                // keep waiting for the current one.
+            }
+            Ok(Msg::Shutdown) => {
+                return Err(anyhow!("coordinator shut down before commit"))
+            }
+            Ok(_) => { /* stale frame — ignore */ }
+            Err(e) => {
+                return Err(anyhow!("control channel lost waiting for commit: {e:#}"))
+            }
+        }
+    }
+}
+
+/// Worker entry point (the `dilocox worker` subcommand body).
+pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
+    let addr: SocketAddr = opts
+        .coord
+        .parse()
+        .map_err(|_| anyhow!("bad coordinator address '{}'", opts.coord))?;
+    let connect_timeout = Duration::from_millis(opts.connect_timeout_ms);
+    let ring_timeout = Duration::from_millis(opts.ring_timeout_ms);
+    let mut coord = TcpStream::connect_timeout(&addr, connect_timeout)
+        .with_context(|| format!("dialing coordinator {addr}"))?;
+    coord.set_nodelay(true).ok();
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding ring listener")?;
+    let ring_port = listener.local_addr()?.port();
+    write_msg(&mut coord, &Msg::Hello { rank: opts.rank, ring_port })?;
+
+    let mut trainer = build_trainer(opts)?;
+    let dim = trainer.dim();
+    let mut theta_g = trainer.params().to_vec();
+    let mut outer = Nesterov::new(dim, opts.outer_lr, opts.outer_momentum);
+    let mut applied: usize = 0;
+    let mut wire_total = 0u64;
+    let mut epoch = 0u32;
+
+    'epochs: loop {
+        let (e, resume_round, members) = wait_for_commit(&mut coord, epoch)?;
+        epoch = e;
+        let formed = tcp::form_ring(
+            opts.rank,
+            epoch,
+            &members,
+            &listener,
+            connect_timeout,
+            ring_timeout,
+        );
+        let raw = match formed {
+            Ok(r) => r,
+            Err(_) => {
+                let _ = write_msg(
+                    &mut coord,
+                    &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
+                );
+                continue 'epochs;
+            }
+        };
+        let mut ring: Box<dyn RingTransport> = match &opts.faults {
+            Some(plan) => Box::new(FaultyRing::new(raw, plan.clone())),
+            None => Box::new(raw),
+        };
+
+        // Consensus resync: survivors re-agree on θ_g (identical at epoch
+        // 1; a true mean after churn) and the outer momentum restarts.
+        if ring.allreduce_mean(&mut theta_g).is_err() {
+            let _ = write_msg(
+                &mut coord,
+                &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
+            );
+            continue 'epochs;
+        }
+        outer = Nesterov::new(dim, opts.outer_lr, opts.outer_momentum);
+        trainer.set_params(&theta_g);
+
+        let mut round = resume_round as usize;
+        while round <= opts.rounds {
+            // Fault hook: an injected kill exits here (process mode) or
+            // errors out (thread mode) — either way the control socket
+            // drops and the coordinator sees a dead member.
+            ring.begin_round(round)?;
+            let loss = trainer.local_round(opts.local_steps)?;
+            let mut delta: Vec<f32> = theta_g
+                .iter()
+                .zip(trainer.params())
+                .map(|(g, p)| g - p)
+                .collect();
+            let before = ring.meter().total();
+            if ring.allreduce_mean(&mut delta).is_err() {
+                let _ = write_msg(
+                    &mut coord,
+                    &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
+                );
+                continue 'epochs;
+            }
+            wire_total += ring.meter().total() - before;
+            outer.step(&mut theta_g, &delta);
+            trainer.set_params(&theta_g);
+            applied = round;
+            let _ = write_msg(&mut coord, &Msg::Heartbeat { round: round as u32, loss });
+            round += 1;
+        }
+        break;
+    }
+
+    let final_loss = trainer.eval()?;
+    write_msg(
+        &mut coord,
+        &Msg::Done {
+            rounds: applied as u32,
+            wire_bytes: wire_total,
+            final_loss,
+            params: params_digest(&theta_g),
+        },
+    )?;
+    // Park until Shutdown (or coordinator EOF).
+    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let _ = read_msg(&mut coord);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+struct WorkerHandle {
+    writer: TcpStream,
+    ring_port: u16,
+}
+
+enum Event {
+    Msg(u32, Msg),
+    Closed(u32),
+}
+
+struct DoneReport {
+    wire_bytes: u64,
+    final_loss: f32,
+    params: Vec<f32>,
+}
+
+fn spawn_workers(
+    cfg: &ElasticConfig,
+    mode: &SpawnMode,
+    coord_addr: &str,
+) -> Result<Vec<std::process::Child>> {
+    let mut children = Vec::new();
+    for rank in 0..cfg.workers as u32 {
+        let opts = worker_opts_for(cfg, rank, coord_addr, mode);
+        match mode {
+            SpawnMode::Process { exe } => {
+                let mut cmd = Command::new(exe);
+                cmd.arg("worker")
+                    .arg("--coord")
+                    .arg(&opts.coord)
+                    .arg("--rank")
+                    .arg(rank.to_string())
+                    .arg("--rounds")
+                    .arg(cfg.rounds.to_string())
+                    .arg("--local-steps")
+                    .arg(cfg.local_steps.to_string())
+                    .arg("--inner-lr")
+                    .arg(cfg.inner_lr.to_string())
+                    .arg("--weight-decay")
+                    .arg(cfg.weight_decay.to_string())
+                    .arg("--outer-lr")
+                    .arg(cfg.outer_lr.to_string())
+                    .arg("--outer-momentum")
+                    .arg(cfg.outer_momentum.to_string())
+                    .arg("--seed")
+                    .arg(cfg.seed.to_string())
+                    .arg("--ring-timeout-ms")
+                    .arg(cfg.transport.ring_timeout_ms.to_string())
+                    .arg("--connect-timeout-ms")
+                    .arg(cfg.transport.connect_timeout_ms.to_string());
+                match &cfg.workload {
+                    Workload::Quadratic { dim } => {
+                        cmd.arg("--workload").arg("quad");
+                        cmd.arg("--dim").arg(dim.to_string());
+                    }
+                    Workload::Runtime { artifacts_dir } => {
+                        cmd.arg("--workload").arg("runtime");
+                        cmd.arg("--artifacts").arg(artifacts_dir);
+                    }
+                }
+                if let Some(plan) = &opts.faults {
+                    cmd.arg("--fault-seed")
+                        .arg(plan.seed.to_string())
+                        .arg("--fault-delay-prob")
+                        .arg(plan.delay_prob.to_string())
+                        .arg("--fault-delay-ms")
+                        .arg(plan.max_delay_ms.to_string())
+                        .arg("--fault-kill-round")
+                        .arg(plan.kill_round.to_string())
+                        .arg("--fault-straggler-ms")
+                        .arg(plan.straggler_ms.to_string());
+                }
+                let child = cmd
+                    .stdout(Stdio::null())
+                    .stderr(Stdio::inherit())
+                    .spawn()
+                    .with_context(|| format!("spawning worker {rank} via {exe}"))?;
+                children.push(child);
+            }
+            SpawnMode::Thread => {
+                std::thread::spawn(move || {
+                    if let Err(e) = run_worker(&opts) {
+                        eprintln!("[worker {rank}] exited: {e:#}");
+                    }
+                });
+            }
+        }
+    }
+    Ok(children)
+}
+
+fn worker_opts_for(
+    cfg: &ElasticConfig,
+    rank: u32,
+    coord_addr: &str,
+    mode: &SpawnMode,
+) -> WorkerOpts {
+    let exit_on_kill = matches!(mode, SpawnMode::Process { .. });
+    WorkerOpts {
+        coord: coord_addr.to_string(),
+        rank,
+        rounds: cfg.rounds,
+        local_steps: cfg.local_steps,
+        inner_lr: cfg.inner_lr,
+        weight_decay: cfg.weight_decay,
+        outer_lr: cfg.outer_lr,
+        outer_momentum: cfg.outer_momentum,
+        seed: cfg.seed,
+        workload: cfg.workload.clone(),
+        ring_timeout_ms: cfg.transport.ring_timeout_ms,
+        connect_timeout_ms: cfg.transport.connect_timeout_ms,
+        faults: fault_plan_for(&cfg.faults, rank, exit_on_kill),
+    }
+}
+
+/// Accept one control connection per worker and read its `Hello`.
+fn accept_workers(
+    listener: &TcpListener,
+    expected: usize,
+    deadline: Instant,
+) -> Result<BTreeMap<u32, WorkerHandle>> {
+    listener.set_nonblocking(true).context("control listener nonblocking")?;
+    let mut map = BTreeMap::new();
+    while map.len() < expected {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                let mut stream = stream;
+                match read_msg(&mut stream) {
+                    Ok(Msg::Hello { rank, ring_port }) => {
+                        if map.contains_key(&rank) {
+                            return Err(anyhow!("duplicate worker rank {rank}"));
+                        }
+                        stream.set_write_timeout(Some(Duration::from_secs(10))).ok();
+                        map.insert(rank, WorkerHandle { writer: stream, ring_port });
+                    }
+                    _ => { /* not a worker — drop */ }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!(
+                        "only {}/{} workers connected before the deadline",
+                        map.len(),
+                        expected
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(anyhow!("control accept failed: {e}")),
+        }
+    }
+    Ok(map)
+}
+
+/// Reap spawned worker processes: give each a short grace window, then
+/// kill.  Runs on every exit path so a failed coordination can't leave
+/// orphaned workers training at full CPU.
+fn reap_children(children: &mut [std::process::Child]) {
+    let reap_deadline = Instant::now() + Duration::from_secs(5);
+    for child in children.iter_mut() {
+        loop {
+            match child.try_wait() {
+                Ok(Some(_)) => break,
+                Ok(None) => {
+                    if Instant::now() >= reap_deadline {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// Run the elastic coordinator to completion.
+pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutcome> {
+    if cfg.workers == 0 {
+        return Err(anyhow!("need at least one worker"));
+    }
+    let listener =
+        TcpListener::bind("127.0.0.1:0").context("binding coordinator socket")?;
+    let coord_addr = listener.local_addr()?.to_string();
+    let mut children = spawn_workers(cfg, mode, &coord_addr)?;
+
+    // Supervision can fail at many points (startup timeout, wall timeout,
+    // every worker dying); reap the children on ALL of them, then
+    // propagate the error.
+    let supervised = supervise(cfg, &listener);
+    reap_children(&mut children);
+    let (epoch, done, round_losses) = supervised?;
+
+    let survivors: Vec<u32> = done.keys().copied().collect();
+    if survivors.is_empty() {
+        return Err(anyhow!("no worker completed the run"));
+    }
+    let reports: Vec<&DoneReport> = done.values().collect();
+    let p0 = &reports[0].params;
+    let mut max_dev = 0.0f32;
+    for r in &reports[1..] {
+        let dev = p0
+            .iter()
+            .zip(&r.params)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        max_dev = max_dev.max(dev);
+    }
+    if max_dev > 1e-4 {
+        if epoch <= 1 {
+            // No churn happened: the ring algebra is symmetric, so any
+            // divergence is a real bug.
+            return Err(anyhow!("workers diverged: max param dev {max_dev}"));
+        }
+        // With churn, a worker that broke during the *final* round can
+        // legitimately miss the last outer update (its peers were already
+        // done, so there was no ring left to redo it with).  Bounded
+        // staleness, not corruption — report it instead of failing.
+        eprintln!(
+            "[elastic] survivors differ by max param dev {max_dev} after \
+             {epoch} membership epochs (final-round churn staleness)"
+        );
+    }
+    let final_loss =
+        reports.iter().map(|r| r.final_loss).sum::<f32>() / reports.len() as f32;
+    let total_wire_bytes = reports.iter().map(|r| r.wire_bytes).sum();
+    Ok(ElasticOutcome {
+        rounds: cfg.rounds,
+        epochs: epoch,
+        started: cfg.workers,
+        survivors,
+        final_loss,
+        final_params: p0.clone(),
+        total_wire_bytes,
+        round_losses,
+    })
+}
+
+/// Accept the fleet, run the 2PC epochs, and watch the run to completion;
+/// returns (final epoch, done reports, heartbeat telemetry).  Sends
+/// `Shutdown` to the fleet on success; error paths leave process cleanup
+/// to the caller's [`reap_children`].
+#[allow(clippy::type_complexity)]
+fn supervise(
+    cfg: &ElasticConfig,
+    listener: &TcpListener,
+) -> Result<(u32, BTreeMap<u32, DoneReport>, Vec<(u32, u32, f32)>)> {
+    let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
+    let startup_deadline = Instant::now()
+        + Duration::from_millis(cfg.transport.connect_timeout_ms)
+        + Duration::from_secs(10);
+    let mut live = accept_workers(listener, cfg.workers, startup_deadline)?;
+
+    // One reader thread per worker feeding a single event queue; the
+    // handles keep the write half.
+    let (tx, rx) = mpsc::channel::<Event>();
+    for (&rank, handle) in live.iter() {
+        let mut rs = handle.writer.try_clone().context("cloning control stream")?;
+        rs.set_read_timeout(None).ok();
+        let tx = tx.clone();
+        std::thread::spawn(move || loop {
+            match read_msg(&mut rs) {
+                Ok(m) => {
+                    if tx.send(Event::Msg(rank, m)).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    let _ = tx.send(Event::Closed(rank));
+                    break;
+                }
+            }
+        });
+    }
+    drop(tx);
+
+    let grace = Duration::from_millis(cfg.transport.ring_timeout_ms * 2 + 2000);
+    let mut epoch: u32 = 0;
+    let mut resume_round: u32 = 1;
+    let mut done: BTreeMap<u32, DoneReport> = BTreeMap::new();
+    let mut round_losses: Vec<(u32, u32, f32)> = Vec::new();
+
+    // Small helper applied to every event everywhere: telemetry +
+    // resume-round bookkeeping.
+    fn note_progress(
+        ev: &Event,
+        resume_round: &mut u32,
+        round_losses: &mut Vec<(u32, u32, f32)>,
+    ) {
+        if let Event::Msg(w, Msg::Heartbeat { round, loss }) = ev {
+            round_losses.push((*w, *round, *loss));
+            *resume_round = (*resume_round).max(round + 1);
+        }
+        if let Event::Msg(_, Msg::RingBroken { applied_rounds, .. }) = ev {
+            *resume_round = (*resume_round).max(applied_rounds + 1);
+        }
+    }
+
+    'epochs: loop {
+        if Instant::now() >= wall_deadline {
+            return Err(anyhow!("elastic run exceeded the wall timeout"));
+        }
+        if live.is_empty() {
+            return Err(anyhow!("all workers died"));
+        }
+        let pending: Vec<u32> =
+            live.keys().copied().filter(|r| !done.contains_key(r)).collect();
+        if pending.is_empty() {
+            break;
+        }
+
+        // -- 2PC prepare/commit over the pending members ------------------
+        epoch += 1;
+        let members: Vec<(u32, u16)> =
+            pending.iter().map(|r| (*r, live[r].ring_port)).collect();
+        let mut lost: Vec<u32> = Vec::new();
+        for &r in &pending {
+            let h = live.get_mut(&r).unwrap();
+            if write_msg(
+                &mut h.writer,
+                &Msg::Prepare { epoch, resume_round, members: members.clone() },
+            )
+            .is_err()
+            {
+                lost.push(r);
+            }
+        }
+        if !lost.is_empty() {
+            for r in lost {
+                live.remove(&r);
+            }
+            continue 'epochs;
+        }
+
+        let mut acked: BTreeSet<u32> = BTreeSet::new();
+        let ack_deadline = Instant::now() + grace;
+        while !pending
+            .iter()
+            .all(|r| acked.contains(r) || done.contains_key(r) || !live.contains_key(r))
+        {
+            let left = ack_deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                // Someone never acked (e.g. still stuck in an old ring's
+                // timeout window) — supersede with a fresh epoch.
+                continue 'epochs;
+            }
+            match rx.recv_timeout(left) {
+                Ok(ev) => {
+                    note_progress(&ev, &mut resume_round, &mut round_losses);
+                    match ev {
+                        Event::Msg(w, Msg::PrepareAck { epoch: e }) if e == epoch => {
+                            acked.insert(w);
+                        }
+                        // A worker can finish (its Done racing our
+                        // Prepare) — record it rather than dropping the
+                        // completion report; it leaves `pending` via the
+                        // loop condition and the next epoch's membership.
+                        Event::Msg(w, Msg::Done { wire_bytes, final_loss, params, .. }) => {
+                            done.insert(w, DoneReport { wire_bytes, final_loss, params });
+                        }
+                        Event::Closed(w) => {
+                            if !done.contains_key(&w) {
+                                live.remove(&w);
+                                continue 'epochs;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("all control channels lost"))
+                }
+            }
+        }
+
+        // A pending member that finished during the ack wait leaves the
+        // proposed membership stale — don't commit a ring containing a
+        // worker that will never join it; re-prepare without it.
+        if pending.iter().any(|r| done.contains_key(r)) {
+            continue 'epochs;
+        }
+
+        let mut lost: Vec<u32> = Vec::new();
+        for &r in &pending {
+            if let Some(h) = live.get_mut(&r) {
+                if write_msg(&mut h.writer, &Msg::Commit { epoch }).is_err() {
+                    lost.push(r);
+                }
+            }
+        }
+        if !lost.is_empty() {
+            for r in lost {
+                live.remove(&r);
+            }
+            continue 'epochs;
+        }
+
+        // -- committed: watch the epoch run -------------------------------
+        let mut broken: BTreeSet<u32> = BTreeSet::new();
+        loop {
+            if Instant::now() >= wall_deadline {
+                return Err(anyhow!("elastic run exceeded the wall timeout"));
+            }
+            let churn = match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(ev) => {
+                    note_progress(&ev, &mut resume_round, &mut round_losses);
+                    match ev {
+                        Event::Msg(w, Msg::Done { wire_bytes, final_loss, params, .. }) => {
+                            done.insert(w, DoneReport { wire_bytes, final_loss, params });
+                            false
+                        }
+                        Event::Msg(w, Msg::RingBroken { .. }) => {
+                            broken.insert(w);
+                            true
+                        }
+                        Event::Closed(w) => {
+                            if done.contains_key(&w) {
+                                false
+                            } else {
+                                live.remove(&w);
+                                true
+                            }
+                        }
+                        _ => false,
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => false,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("all control channels lost"))
+                }
+            };
+            if live.keys().all(|r| done.contains_key(r)) {
+                break 'epochs;
+            }
+            if !churn {
+                continue;
+            }
+            // Churn: drain until every live, not-done member has reported
+            // its break (or a grace period passes), then re-form.
+            let drain_deadline = Instant::now() + grace;
+            loop {
+                let outstanding = live
+                    .keys()
+                    .filter(|r| !done.contains_key(r) && !broken.contains(r))
+                    .count();
+                if outstanding == 0 || Instant::now() >= drain_deadline {
+                    break;
+                }
+                if let Ok(ev) = rx.recv_timeout(Duration::from_millis(100)) {
+                    note_progress(&ev, &mut resume_round, &mut round_losses);
+                    match ev {
+                        Event::Msg(w, Msg::RingBroken { .. }) => {
+                            broken.insert(w);
+                        }
+                        Event::Msg(w, Msg::Done { wire_bytes, final_loss, params, .. }) => {
+                            done.insert(w, DoneReport { wire_bytes, final_loss, params });
+                        }
+                        Event::Closed(w) => {
+                            if !done.contains_key(&w) {
+                                live.remove(&w);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            continue 'epochs;
+        }
+    }
+
+    // -- success: graceful shutdown (caller reaps the processes) ----------
+    for h in live.values_mut() {
+        let _ = write_msg(&mut h.writer, &Msg::Shutdown);
+    }
+    Ok((epoch, done, round_losses))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(workers: usize) -> ElasticConfig {
+        let mut c = ElasticConfig::quadratic(workers, 6, 32);
+        c.transport.ring_timeout_ms = 1000;
+        c.transport.connect_timeout_ms = 5000;
+        c.wall_timeout_ms = 60_000;
+        c
+    }
+
+    #[test]
+    fn thread_mode_three_workers_converge() {
+        let out = run_elastic(&quick_cfg(3), &SpawnMode::Thread).unwrap();
+        assert_eq!(out.epochs, 1, "no churn expected");
+        assert_eq!(out.survivors, vec![0, 1, 2]);
+        assert!(out.total_wire_bytes > 0);
+        // Round-1 mean loss should beat the final loss decisively.
+        let r1: Vec<f32> = out
+            .round_losses
+            .iter()
+            .filter(|(_, r, _)| *r == 1)
+            .map(|(_, _, l)| *l)
+            .collect();
+        assert!(!r1.is_empty());
+        let r1_mean = r1.iter().sum::<f32>() / r1.len() as f32;
+        assert!(
+            out.final_loss < r1_mean * 0.5,
+            "final {} vs round-1 {}",
+            out.final_loss,
+            r1_mean
+        );
+    }
+
+    #[test]
+    fn thread_mode_survives_injected_kill() {
+        let mut cfg = quick_cfg(3);
+        cfg.faults.enabled = true;
+        cfg.faults.kill_rank = 1;
+        cfg.faults.kill_round = 2;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 2]);
+        assert!(out.epochs >= 2, "expected a re-formed ring, got {}", out.epochs);
+        assert!(out.final_loss.is_finite());
+        // Survivors must have completed every round.
+        let max_round = out
+            .round_losses
+            .iter()
+            .map(|(_, r, _)| *r)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn params_digest_caps_large_vectors() {
+        let small = vec![1.0f32; 100];
+        assert_eq!(params_digest(&small), small);
+        let big: Vec<f32> = (0..200_000).map(|i| i as f32).collect();
+        let d = params_digest(&big);
+        assert!(d.len() <= PARAMS_DIGEST_MAX, "len={}", d.len());
+        assert_eq!(d[0], 0.0);
+        // Deterministic: identical vectors digest identically on every
+        // worker, so elementwise agreement checks stay valid.
+        assert_eq!(d, params_digest(&big));
+    }
+
+    #[test]
+    fn fault_plan_filtering_by_rank() {
+        let f = FaultConfig {
+            enabled: true,
+            kill_rank: 2,
+            kill_round: 3,
+            ..FaultConfig::default()
+        };
+        assert!(fault_plan_for(&f, 0, false).is_none());
+        let p = fault_plan_for(&f, 2, true).unwrap();
+        assert_eq!(p.kill_round, 3);
+        assert!(p.exit_on_kill);
+    }
+}

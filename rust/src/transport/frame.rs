@@ -1,0 +1,318 @@
+//! Length-delimited wire frames for the TCP transport (no serde offline).
+//!
+//! Layout: `u32 LE length(kind + body) | u8 kind | body`, all integers
+//! little-endian, f32 as LE bit patterns.  One [`Msg`] per frame.  The
+//! same framing carries the ring data plane ([`Msg::Data`]) and the
+//! membership/epoch control plane (see the module docs in
+//! [`crate::transport`]).
+
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+
+/// Refuse frames above this size (corrupt length prefix guard): 1 GiB.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Everything that crosses a transport socket.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// One ring chunk (data plane).
+    Data { payload: Vec<f32> },
+    /// Worker → coordinator, once at startup: where my ring listener is.
+    Hello { rank: u32, ring_port: u16 },
+    /// Coordinator → workers: proposed membership for `epoch`.
+    /// `members` is the ring order, `(rank, ring_port)` on 127.0.0.1.
+    Prepare { epoch: u32, resume_round: u32, members: Vec<(u32, u16)> },
+    /// Worker → coordinator: membership proposal accepted.
+    PrepareAck { epoch: u32 },
+    /// Coordinator → workers: every live member acked; form the ring.
+    Commit { epoch: u32 },
+    /// Worker → coordinator: my ring collective failed at this epoch;
+    /// `applied_rounds` outer updates are applied on my side.
+    RingBroken { epoch: u32, applied_rounds: u32 },
+    /// Worker → coordinator: round finished (liveness + loss telemetry).
+    Heartbeat { round: u32, loss: f32 },
+    /// Worker → coordinator: all rounds done.
+    Done { rounds: u32, wire_bytes: u64, final_loss: f32, params: Vec<f32> },
+    /// Coordinator → workers: exit cleanly.
+    Shutdown,
+    /// Ring-socket handshake: dialer identifies (rank, epoch); the
+    /// acceptor drops connections from the wrong predecessor or a stale
+    /// epoch.
+    RingHello { rank: u32, epoch: u32 },
+}
+
+impl Msg {
+    fn kind(&self) -> u8 {
+        match self {
+            Msg::Data { .. } => 0,
+            Msg::Hello { .. } => 1,
+            Msg::Prepare { .. } => 2,
+            Msg::PrepareAck { .. } => 3,
+            Msg::Commit { .. } => 4,
+            Msg::RingBroken { .. } => 5,
+            Msg::Heartbeat { .. } => 6,
+            Msg::Done { .. } => 7,
+            Msg::Shutdown => 8,
+            Msg::RingHello { .. } => 9,
+        }
+    }
+
+    /// Short name for error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Data { .. } => "Data",
+            Msg::Hello { .. } => "Hello",
+            Msg::Prepare { .. } => "Prepare",
+            Msg::PrepareAck { .. } => "PrepareAck",
+            Msg::Commit { .. } => "Commit",
+            Msg::RingBroken { .. } => "RingBroken",
+            Msg::Heartbeat { .. } => "Heartbeat",
+            Msg::Done { .. } => "Done",
+            Msg::Shutdown => "Shutdown",
+            Msg::RingHello { .. } => "RingHello",
+        }
+    }
+}
+
+// ---- encode helpers -------------------------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
+    put_u32(buf, vs.len() as u32);
+    buf.reserve(4 * vs.len());
+    for v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ---- decode helpers -------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(anyhow!("truncated frame body"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.take(4 * n)?;
+        let mut out = Vec::with_capacity(n);
+        for chunk in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+/// Serialize `msg` into `kind + body` bytes (without the length prefix).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut b = vec![msg.kind()];
+    match msg {
+        Msg::Data { payload } => put_f32s(&mut b, payload),
+        Msg::Hello { rank, ring_port } => {
+            put_u32(&mut b, *rank);
+            put_u16(&mut b, *ring_port);
+        }
+        Msg::Prepare { epoch, resume_round, members } => {
+            put_u32(&mut b, *epoch);
+            put_u32(&mut b, *resume_round);
+            put_u16(&mut b, members.len() as u16);
+            for (rank, port) in members {
+                put_u32(&mut b, *rank);
+                put_u16(&mut b, *port);
+            }
+        }
+        Msg::PrepareAck { epoch } => put_u32(&mut b, *epoch),
+        Msg::Commit { epoch } => put_u32(&mut b, *epoch),
+        Msg::RingBroken { epoch, applied_rounds } => {
+            put_u32(&mut b, *epoch);
+            put_u32(&mut b, *applied_rounds);
+        }
+        Msg::Heartbeat { round, loss } => {
+            put_u32(&mut b, *round);
+            put_f32(&mut b, *loss);
+        }
+        Msg::Done { rounds, wire_bytes, final_loss, params } => {
+            put_u32(&mut b, *rounds);
+            put_u64(&mut b, *wire_bytes);
+            put_f32(&mut b, *final_loss);
+            put_f32s(&mut b, params);
+        }
+        Msg::Shutdown => {}
+        Msg::RingHello { rank, epoch } => {
+            put_u32(&mut b, *rank);
+            put_u32(&mut b, *epoch);
+        }
+    }
+    b
+}
+
+/// Parse `kind + body` bytes back into a [`Msg`].
+pub fn decode(bytes: &[u8]) -> Result<Msg> {
+    if bytes.is_empty() {
+        return Err(anyhow!("empty frame"));
+    }
+    let mut c = Cursor { buf: bytes, pos: 1 };
+    let msg = match bytes[0] {
+        0 => Msg::Data { payload: c.f32s()? },
+        1 => Msg::Hello { rank: c.u32()?, ring_port: c.u16()? },
+        2 => {
+            let epoch = c.u32()?;
+            let resume_round = c.u32()?;
+            let n = c.u16()? as usize;
+            let mut members = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = c.u32()?;
+                let port = c.u16()?;
+                members.push((rank, port));
+            }
+            Msg::Prepare { epoch, resume_round, members }
+        }
+        3 => Msg::PrepareAck { epoch: c.u32()? },
+        4 => Msg::Commit { epoch: c.u32()? },
+        5 => Msg::RingBroken { epoch: c.u32()?, applied_rounds: c.u32()? },
+        6 => Msg::Heartbeat { round: c.u32()?, loss: c.f32()? },
+        7 => Msg::Done {
+            rounds: c.u32()?,
+            wire_bytes: c.u64()?,
+            final_loss: c.f32()?,
+            params: c.f32s()?,
+        },
+        8 => Msg::Shutdown,
+        9 => Msg::RingHello { rank: c.u32()?, epoch: c.u32()? },
+        k => return Err(anyhow!("unknown frame kind {k}")),
+    };
+    Ok(msg)
+}
+
+/// Write one length-delimited frame.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    let body = encode(msg);
+    if body.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(anyhow!("frame too large: {} bytes", body.len()));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-delimited frame (blocks per the stream's timeout).
+pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(anyhow!("bad frame length {len}"));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    decode(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let bytes = encode(&m);
+        assert_eq!(decode(&bytes).unwrap(), m);
+    }
+
+    #[test]
+    fn all_kinds_roundtrip() {
+        roundtrip(Msg::Data { payload: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE] });
+        roundtrip(Msg::Hello { rank: 3, ring_port: 40123 });
+        roundtrip(Msg::Prepare {
+            epoch: 7,
+            resume_round: 4,
+            members: vec![(0, 1111), (2, 2222), (5, 65535)],
+        });
+        roundtrip(Msg::PrepareAck { epoch: 7 });
+        roundtrip(Msg::Commit { epoch: 7 });
+        roundtrip(Msg::RingBroken { epoch: 7, applied_rounds: 3 });
+        roundtrip(Msg::Heartbeat { round: 9, loss: 0.125 });
+        roundtrip(Msg::Done {
+            rounds: 10,
+            wire_bytes: u64::MAX / 3,
+            final_loss: 1e-3,
+            params: vec![0.5; 17],
+        });
+        roundtrip(Msg::Shutdown);
+        roundtrip(Msg::RingHello { rank: 1, epoch: 2 });
+    }
+
+    #[test]
+    fn stream_roundtrip_over_a_pipe() {
+        let mut buf: Vec<u8> = Vec::new();
+        let msgs = vec![
+            Msg::Hello { rank: 0, ring_port: 9 },
+            Msg::Data { payload: vec![3.0; 5] },
+            Msg::Shutdown,
+        ];
+        for m in &msgs {
+            write_msg(&mut buf, m).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            assert_eq!(&read_msg(&mut r).unwrap(), m);
+        }
+        // Stream exhausted → io error surfaces as Err.
+        assert!(read_msg(&mut r).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(decode(&[]).is_err());
+        assert!(decode(&[42]).is_err());
+        // Truncated Data payload.
+        let mut b = encode(&Msg::Data { payload: vec![1.0; 8] });
+        b.truncate(b.len() - 3);
+        assert!(decode(&b).is_err());
+        // Oversized length prefix.
+        let mut s: Vec<u8> = Vec::new();
+        s.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        s.push(0);
+        assert!(read_msg(&mut &s[..]).is_err());
+    }
+}

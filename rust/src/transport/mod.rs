@@ -1,0 +1,222 @@
+//! Pluggable transport subsystem: the collective wire behind a trait.
+//!
+//! The coordinator's chunked ring AllReduce used to be welded to one
+//! process-local mpsc implementation; this module abstracts the wire so
+//! the same collective algebra runs over three backends:
+//!
+//! * **local** ([`crate::comm::ring::RingMember`]) — in-memory mpsc
+//!   channels, one OS thread per cluster.  Fast, zero-config, but no fault
+//!   isolation: a panicking worker takes the process down.
+//! * **tcp** ([`tcp::TcpRing`]) — length-delimited frames over loopback
+//!   TCP, one OS *process* per cluster (`dilocox worker`), spawned by the
+//!   elastic coordinator ([`elastic`]).  A crashed worker is just a closed
+//!   socket.
+//! * **faulty** ([`faulty::FaultyRing`]) — a deterministic, Pcg32-seeded
+//!   wrapper over any backend that injects message delays, stragglers, and
+//!   worker kills at configured rounds (WAN churn scenarios).
+//!
+//! # Frame format (tcp backend)
+//!
+//! Every message is one frame:
+//!
+//! ```text
+//! u32 LE  length of (kind + body) in bytes
+//! u8      kind tag (see frame::Msg)
+//! [u8]    body — fixed-width LE integers / f32 bit patterns
+//! ```
+//!
+//! Frames carry both the data plane (`Data` = one ring chunk of f32s) and
+//! the control plane (membership/epoch handshake below).  The format is
+//! hand-rolled little-endian (no serde offline) — see [`frame`].
+//!
+//! # Membership epoch protocol (elastic ring recovery)
+//!
+//! The elastic coordinator owns a monotonically increasing **epoch**; each
+//! epoch has a committed member list.  Membership changes are a 2PC-style
+//! prepare/commit over the per-worker control sockets:
+//!
+//! 1. worker → coordinator: `Hello{rank, ring_port}` once at startup.
+//! 2. coordinator → workers: `Prepare{epoch, resume_round, members}`.
+//!    Workers tear down any old ring and answer `PrepareAck{epoch}`.
+//! 3. coordinator → workers: `Commit{epoch}` once every live member acked.
+//!    Workers then re-dial the ring (each dials its successor, accepts its
+//!    predecessor, with an epoch-checked `RingHello` handshake so stale
+//!    connections from an older epoch are rejected).
+//! 4. After every (re)formation the members run one consensus
+//!    `allreduce_mean` over the global parameters and restart the outer
+//!    momentum — survivors of a churn event re-agree on θ before training
+//!    resumes, and the pseudo-gradient mean automatically rescales to the
+//!    new member count.
+//!
+//! Failure detection: ring sockets carry read/write timeouts, so a dead or
+//! stalled peer surfaces as an error mid-collective; the worker reports
+//! `RingBroken{epoch, applied_rounds}` on its control socket and waits for
+//! the next Prepare.  The coordinator additionally watches control sockets
+//! for EOF (process death).  `resume_round` is max(applied)+1 over the
+//! survivors, so no committed outer update is replayed.
+
+pub mod elastic;
+pub mod faulty;
+pub mod frame;
+pub mod tcp;
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Byte meter shared by all ring members (one per "link budget").
+#[derive(Default, Debug)]
+pub struct ByteMeter {
+    pub sent: AtomicU64,
+    pub messages: AtomicU64,
+}
+
+impl ByteMeter {
+    pub fn add(&self, bytes: u64) {
+        self.sent.fetch_add(bytes, Ordering::Relaxed);
+        self.messages.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed)
+    }
+}
+
+/// One member's view of a ring collective, independent of the wire.
+///
+/// Implementors provide point-to-point hops (send to successor, receive
+/// from predecessor) plus identity; the chunked ring AllReduce algebra is
+/// a provided method so every backend runs the *identical* floating-point
+/// schedule — `local` and `tcp` results agree bit-for-bit.
+pub trait RingTransport: Send {
+    /// This member's position in the ring (0-based, dense).
+    fn rank(&self) -> usize;
+    /// Number of ring members.
+    fn size(&self) -> usize;
+    /// Send one chunk to the successor (rank + 1 mod size).
+    fn send_next(&mut self, chunk: &[f32]) -> Result<()>;
+    /// Receive one chunk from the predecessor (rank − 1 mod size).
+    fn recv_prev(&mut self) -> Result<Vec<f32>>;
+    /// Payload byte meter (4 bytes per f32; framing overhead excluded so
+    /// backends stay comparable).
+    fn meter(&self) -> &ByteMeter;
+
+    /// Hook called at every outer-round boundary; fault-injecting wrappers
+    /// use it to kill or stall a worker at a configured round.
+    fn begin_round(&mut self, _round: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// In-place chunked ring all-reduce (sum) across all members
+    /// (Baidu 2017): reduce-scatter (C−1 hops) then all-gather (C−1 hops);
+    /// each member sends 2·(C−1)/C·payload bytes total — the §2.4.1
+    /// factor.  Every member must call this with an equal-length buffer.
+    fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        let c = self.size();
+        if c <= 1 {
+            return Ok(());
+        }
+        let rank = self.rank();
+        let n = buf.len();
+        // Chunk boundaries (c chunks, last absorbs the remainder).
+        let bounds: Vec<(usize, usize)> = (0..c)
+            .map(|i| (i * n / c, (i + 1) * n / c))
+            .collect();
+
+        // Phase 1: reduce-scatter.  At step s, send chunk (rank - s) and
+        // accumulate incoming chunk (rank - s - 1).
+        for s in 0..c - 1 {
+            let send_idx = (rank + c - s) % c;
+            let (lo, hi) = bounds[send_idx];
+            self.meter().add(4 * (hi - lo) as u64);
+            self.send_next(&buf[lo..hi])?;
+            let incoming = self.recv_prev()?;
+            let recv_idx = (rank + c - s - 1) % c;
+            let (lo, hi) = bounds[recv_idx];
+            if incoming.len() != hi - lo {
+                return Err(anyhow!(
+                    "ring chunk size mismatch: got {}, want {}",
+                    incoming.len(),
+                    hi - lo
+                ));
+            }
+            for (dst, src) in buf[lo..hi].iter_mut().zip(&incoming) {
+                *dst += src;
+            }
+        }
+        // Phase 2: all-gather.  Send the chunk just completed.
+        for s in 0..c - 1 {
+            let send_idx = (rank + 1 + c - s) % c;
+            let (lo, hi) = bounds[send_idx];
+            self.meter().add(4 * (hi - lo) as u64);
+            self.send_next(&buf[lo..hi])?;
+            let incoming = self.recv_prev()?;
+            let recv_idx = (rank + c - s) % c;
+            let (lo, hi) = bounds[recv_idx];
+            if incoming.len() != hi - lo {
+                return Err(anyhow!(
+                    "ring chunk size mismatch: got {}, want {}",
+                    incoming.len(),
+                    hi - lo
+                ));
+            }
+            buf[lo..hi].copy_from_slice(&incoming);
+        }
+        Ok(())
+    }
+
+    /// Mean across members.
+    fn allreduce_mean(&mut self, buf: &mut [f32]) -> Result<()> {
+        self.allreduce_sum(buf)?;
+        let inv = 1.0 / self.size() as f32;
+        for v in buf.iter_mut() {
+            *v *= inv;
+        }
+        Ok(())
+    }
+}
+
+/// Which wire the coordinator should run the collective over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportBackend {
+    /// In-memory mpsc ring, worker threads in one process.
+    Local,
+    /// Loopback TCP ring, one `dilocox worker` process per cluster.
+    Tcp,
+}
+
+impl TransportBackend {
+    pub fn parse(s: &str) -> Result<TransportBackend> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "local" | "mpsc" | "thread" => TransportBackend::Local,
+            "tcp" | "process" => TransportBackend::Tcp,
+            other => {
+                return Err(anyhow!(
+                    "unknown transport backend '{other}' (local | tcp)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportBackend::Local => "local",
+            TransportBackend::Tcp => "tcp",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_names() {
+        assert_eq!(TransportBackend::parse("tcp").unwrap(), TransportBackend::Tcp);
+        assert_eq!(
+            TransportBackend::parse("Local").unwrap(),
+            TransportBackend::Local
+        );
+        assert!(TransportBackend::parse("carrier-pigeon").is_err());
+        assert_eq!(TransportBackend::Tcp.name(), "tcp");
+    }
+}

@@ -1,0 +1,358 @@
+//! Loopback-TCP ring backend: one `dilocox worker` OS process per cluster,
+//! length-delimited [`frame`](crate::transport::frame) messages over
+//! 127.0.0.1 sockets.  Ring formation is dial-successor / accept-
+//! predecessor with an epoch-checked `RingHello` handshake; sockets carry
+//! read/write timeouts so a dead or stalled peer surfaces as an error
+//! mid-collective instead of a hang (the elastic coordinator's failure
+//! signal).
+
+use crate::transport::frame::{read_msg, write_msg, Msg};
+use crate::transport::{ByteMeter, RingTransport};
+use anyhow::{anyhow, Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One member's pair of ring links.  `None` links only for size-1 rings
+/// (a single survivor keeps training; its collectives are no-ops).
+///
+/// Sends are decoupled onto a writer thread: every member of a ring step
+/// sends *then* receives, so if all members blocked synchronously in
+/// `write` on chunks larger than the socket buffers, the cycle would
+/// deadlock until the write timeout.  Queueing the frame and returning
+/// keeps the caller free to reach its `recv` — the classic full-duplex
+/// requirement of ring collectives.  A dead peer still surfaces: the
+/// writer thread exits on a write error, the next `send_next` sees the
+/// hung-up queue, and `recv_prev` times out.
+pub struct TcpRing {
+    pos: usize,
+    size: usize,
+    tx_next: Option<mpsc::Sender<Vec<f32>>>,
+    rx_prev: Option<TcpStream>,
+    meter: ByteMeter,
+}
+
+impl RingTransport for TcpRing {
+    fn rank(&self) -> usize {
+        self.pos
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send_next(&mut self, chunk: &[f32]) -> Result<()> {
+        let tx = self
+            .tx_next
+            .as_ref()
+            .ok_or_else(|| anyhow!("size-1 ring has no successor link"))?;
+        tx.send(chunk.to_vec())
+            .map_err(|_| anyhow!("tcp ring send: successor link closed"))
+    }
+
+    fn recv_prev(&mut self) -> Result<Vec<f32>> {
+        let s = self
+            .rx_prev
+            .as_mut()
+            .ok_or_else(|| anyhow!("size-1 ring has no predecessor link"))?;
+        match read_msg(s).context("tcp ring recv")? {
+            Msg::Data { payload } => Ok(payload),
+            other => Err(anyhow!("expected Data frame, got {}", other.name())),
+        }
+    }
+
+    fn meter(&self) -> &ByteMeter {
+        &self.meter
+    }
+}
+
+/// Dial `127.0.0.1:port` until it accepts or `deadline` passes.
+fn dial_retry(port: u16, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(("127.0.0.1", port)) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!("dialing 127.0.0.1:{port} timed out: {e}"));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// Accept the predecessor's connection on `listener`, discarding
+/// connections whose `RingHello` names the wrong rank or a stale epoch.
+/// A valid predecessor gets a `RingHello` ack back (so the dialer can
+/// detect a wrong-epoch drop instead of sending into the void).
+fn accept_predecessor(
+    listener: TcpListener,
+    my_rank: u32,
+    expect_rank: u32,
+    expect_epoch: u32,
+    deadline: Instant,
+    ring_timeout: Duration,
+) -> Result<TcpStream> {
+    listener
+        .set_nonblocking(true)
+        .context("listener nonblocking")?;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                stream.set_read_timeout(Some(ring_timeout)).ok();
+                stream.set_write_timeout(Some(ring_timeout)).ok();
+                let mut stream = stream;
+                match read_msg(&mut stream) {
+                    Ok(Msg::RingHello { rank, epoch })
+                        if rank == expect_rank && epoch == expect_epoch =>
+                    {
+                        if write_msg(
+                            &mut stream,
+                            &Msg::RingHello { rank: my_rank, epoch: expect_epoch },
+                        )
+                        .is_ok()
+                        {
+                            return Ok(stream);
+                        }
+                        // Ack failed — predecessor is gone; keep accepting.
+                    }
+                    _ => { /* stale or foreign connection — drop it */ }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!(
+                        "timed out waiting for ring predecessor {expect_rank} \
+                         (epoch {expect_epoch})"
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(anyhow!("ring accept failed: {e}")),
+        }
+    }
+}
+
+/// Form this member's ring links for one committed epoch.
+///
+/// `members` is the committed ring order, `(rank, ring_port)` on
+/// 127.0.0.1; `my_rank` must appear in it.  Each member dials its
+/// successor and accepts its predecessor concurrently; both sides give up
+/// at `connect_timeout`.  The formed sockets carry `ring_timeout`
+/// read/write timeouts.
+pub fn form_ring(
+    my_rank: u32,
+    epoch: u32,
+    members: &[(u32, u16)],
+    listener: &TcpListener,
+    connect_timeout: Duration,
+    ring_timeout: Duration,
+) -> Result<TcpRing> {
+    let pos = members
+        .iter()
+        .position(|(r, _)| *r == my_rank)
+        .ok_or_else(|| anyhow!("rank {my_rank} not in committed member list"))?;
+    let c = members.len();
+    if c == 1 {
+        return Ok(TcpRing {
+            pos: 0,
+            size: 1,
+            tx_next: None,
+            rx_prev: None,
+            meter: ByteMeter::default(),
+        });
+    }
+    let (succ_rank, succ_port) = members[(pos + 1) % c];
+    let pred_rank = members[(pos + c - 1) % c].0;
+    let deadline = Instant::now() + connect_timeout;
+
+    let accept_listener = listener.try_clone().context("cloning ring listener")?;
+    let acceptor = std::thread::spawn(move || {
+        accept_predecessor(
+            accept_listener,
+            my_rank,
+            pred_rank,
+            epoch,
+            deadline,
+            ring_timeout,
+        )
+    });
+
+    let dial = (|| -> Result<TcpStream> {
+        loop {
+            let mut s = dial_retry(succ_port, deadline)?;
+            s.set_nodelay(true).ok();
+            s.set_write_timeout(Some(ring_timeout)).ok();
+            s.set_read_timeout(Some(ring_timeout)).ok();
+            // Handshake: identify ourselves, then require the successor's
+            // ack — a successor still on an older epoch silently drops us,
+            // which surfaces here as a failed ack read; retry until the
+            // deadline.
+            if write_msg(&mut s, &Msg::RingHello { rank: my_rank, epoch }).is_ok() {
+                if let Ok(Msg::RingHello { rank, epoch: e }) = read_msg(&mut s) {
+                    if rank == succ_rank && e == epoch {
+                        return Ok(s);
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                return Err(anyhow!("ring successor handshake timed out"));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    })();
+
+    let accepted = acceptor
+        .join()
+        .map_err(|_| anyhow!("ring accept thread panicked"))?;
+    let rx_prev = accepted?;
+    let mut tx_stream = dial?;
+    rx_prev.set_nodelay(true).ok();
+    rx_prev.set_read_timeout(Some(ring_timeout)).ok();
+
+    // Writer thread: drains queued chunks onto the successor socket (see
+    // the TcpRing docs for why sends must not block the caller).  The
+    // thread ends when the TcpRing (and so the queue sender) is dropped,
+    // or on a socket error.
+    let (tx, rx) = mpsc::channel::<Vec<f32>>();
+    std::thread::spawn(move || {
+        while let Ok(chunk) = rx.recv() {
+            if write_msg(&mut tx_stream, &Msg::Data { payload: chunk }).is_err() {
+                break;
+            }
+        }
+    });
+
+    Ok(TcpRing {
+        pos,
+        size: c,
+        tx_next: Some(tx),
+        rx_prev: Some(rx_prev),
+        meter: ByteMeter::default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ring::build_ring;
+    use crate::util::rng::Pcg32;
+
+    fn inputs(c: usize, n: usize) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seed_from(99);
+        (0..c)
+            .map(|_| {
+                let mut v = vec![0.0f32; n];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn run_local(bufs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let members = build_ring(bufs.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = members
+                .into_iter()
+                .zip(bufs.to_vec())
+                .map(|(mut m, mut b)| {
+                    scope.spawn(move || {
+                        m.allreduce_mean(&mut b).unwrap();
+                        b
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    fn run_tcp(bufs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let c = bufs.len();
+        let listeners: Vec<TcpListener> = (0..c)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let members: Vec<(u32, u16)> = listeners
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (i as u32, l.local_addr().unwrap().port()))
+            .collect();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = listeners
+                .iter()
+                .zip(bufs.to_vec())
+                .enumerate()
+                .map(|(i, (listener, mut b))| {
+                    let members = members.clone();
+                    scope.spawn(move || {
+                        let mut ring = form_ring(
+                            i as u32,
+                            1,
+                            &members,
+                            listener,
+                            Duration::from_secs(10),
+                            Duration::from_secs(10),
+                        )
+                        .unwrap();
+                        ring.allreduce_mean(&mut b).unwrap();
+                        b
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn tcp_allreduce_matches_local_bit_for_bit() {
+        let bufs = inputs(3, 257); // non-divisible chunking on purpose
+        let local = run_local(&bufs);
+        let tcp = run_tcp(&bufs);
+        // Identical schedule + identical fp order ⇒ exact equality.
+        assert_eq!(local, tcp);
+    }
+
+    #[test]
+    fn size_one_ring_is_noop() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let members = vec![(0u32, listener.local_addr().unwrap().port())];
+        let mut ring = form_ring(
+            0,
+            1,
+            &members,
+            &listener,
+            Duration::from_secs(1),
+            Duration::from_secs(1),
+        )
+        .unwrap();
+        let mut b = vec![4.0f32, 5.0];
+        ring.allreduce_mean(&mut b).unwrap();
+        assert_eq!(b, vec![4.0, 5.0]);
+        assert_eq!(ring.meter().total(), 0);
+    }
+
+    #[test]
+    fn wrong_epoch_dialer_is_rejected() {
+        // Acceptor expects epoch 2; a dialer on epoch 1 must be dropped and
+        // the accept must time out (no valid predecessor ever arrives).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let dialer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(("127.0.0.1", port)).unwrap();
+            write_msg(&mut s, &Msg::RingHello { rank: 0, epoch: 1 }).unwrap();
+            // Hold the socket open so the acceptor's verdict is about the
+            // handshake, not a racey disconnect.
+            std::thread::sleep(Duration::from_millis(400));
+        });
+        let got = accept_predecessor(
+            listener,
+            1,
+            0,
+            2,
+            Instant::now() + Duration::from_millis(300),
+            Duration::from_millis(200),
+        );
+        assert!(got.is_err());
+        dialer.join().unwrap();
+    }
+}

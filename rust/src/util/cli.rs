@@ -168,6 +168,12 @@ impl Args {
             .map_err(|_| format!("--{key}: expected integer, got '{}'", self.get(key)))
     }
 
+    pub fn get_u64(&self, key: &str) -> Result<u64, String> {
+        self.get(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected integer, got '{}'", self.get(key)))
+    }
+
     pub fn get_f64(&self, key: &str) -> Result<f64, String> {
         self.get(key)
             .parse()
@@ -200,6 +206,8 @@ mod tests {
         assert!(a.flag("verbose"));
         assert_eq!(a.positional, vec!["pos"]);
         assert_eq!(a.get_usize("steps").unwrap(), 10);
+        assert_eq!(a.get_u64("steps").unwrap(), 10);
+        assert!(a.get_u64("preset").is_err());
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Transport subsystem integration: the TCP multi-process ring is a
+//! drop-in for the local mpsc ring (bit-for-bit), the elastic coordinator
+//! runs a ≥3-process training round over loopback TCP via real
+//! `std::process::Command` spawns of the `dilocox worker` binary, and a
+//! seeded worker kill mid-run re-forms the ring with the survivors and
+//! still reports a final eval.
+
+use dilocox::comm::ring::build_ring;
+use dilocox::transport::elastic::{run_elastic, ElasticConfig, SpawnMode};
+use dilocox::transport::tcp::form_ring;
+use dilocox::transport::RingTransport;
+use dilocox::util::rng::Pcg32;
+use std::net::TcpListener;
+use std::time::Duration;
+
+fn dilocox_bin() -> String {
+    env!("CARGO_BIN_EXE_dilocox").to_string()
+}
+
+fn random_bufs(c: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seed_from(seed);
+    (0..c)
+        .map(|_| {
+            let mut v = vec![0.0f32; n];
+            rng.fill_normal(&mut v, 0.0, 1.0);
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn loopback_tcp_allreduce_matches_local_backend_bit_for_bit() {
+    let bufs = random_bufs(3, 1001, 31); // non-divisible chunking
+    // Local mpsc backend.
+    let local: Vec<Vec<f32>> = {
+        let members = build_ring(3);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = members
+                .into_iter()
+                .zip(bufs.clone())
+                .map(|(mut m, mut b)| {
+                    scope.spawn(move || {
+                        m.allreduce_mean(&mut b).unwrap();
+                        b
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    };
+    // TCP backend over real loopback sockets.
+    let listeners: Vec<TcpListener> =
+        (0..3).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let members: Vec<(u32, u16)> = listeners
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (i as u32, l.local_addr().unwrap().port()))
+        .collect();
+    let tcp: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = listeners
+            .iter()
+            .zip(bufs.clone())
+            .enumerate()
+            .map(|(i, (listener, mut b))| {
+                let members = members.clone();
+                scope.spawn(move || {
+                    let mut ring = form_ring(
+                        i as u32,
+                        1,
+                        &members,
+                        listener,
+                        Duration::from_secs(10),
+                        Duration::from_secs(10),
+                    )
+                    .unwrap();
+                    ring.allreduce_mean(&mut b).unwrap();
+                    b
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Same collective schedule + same fp order ⇒ exact equality.
+    assert_eq!(local, tcp);
+    // Payload metering matches the §2.4.1 per-worker ring factor too.
+    let payload = 4 * 1001u64;
+    let per_worker = dilocox::comm::ring_wire_bytes_per_worker(payload, 3);
+    assert!(per_worker > 0);
+}
+
+#[test]
+fn elastic_three_process_tcp_training_round() {
+    // The real deployment shape: the coordinator spawns three `dilocox
+    // worker` OS processes via std::process::Command and drives a full
+    // multi-round run over loopback TCP.
+    let mut cfg = ElasticConfig::quadratic(3, 4, 48);
+    cfg.transport.ring_timeout_ms = 2000;
+    cfg.wall_timeout_ms = 90_000;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.started, 3);
+    assert_eq!(out.survivors, vec![0, 1, 2]);
+    assert_eq!(out.epochs, 1, "no churn expected");
+    assert!(out.total_wire_bytes > 0);
+    assert!(out.final_loss.is_finite());
+    // Convergence: the final eval beats the round-1 loss decisively.
+    let r1: Vec<f32> = out
+        .round_losses
+        .iter()
+        .filter(|(_, r, _)| *r == 1)
+        .map(|(_, _, l)| *l)
+        .collect();
+    assert_eq!(r1.len(), 3, "all three processes heartbeat round 1");
+    let r1_mean = r1.iter().sum::<f32>() / r1.len() as f32;
+    assert!(
+        out.final_loss < r1_mean * 0.5,
+        "final {} vs round-1 {}",
+        out.final_loss,
+        r1_mean
+    );
+}
+
+#[test]
+fn elastic_survives_process_kill_at_round_2() {
+    // Seeded churn: rank 1 exits at the start of round 2; the survivors
+    // report the break, the coordinator re-forms the ring (epoch 2), and
+    // the run completes every round with a finite final eval — no panic.
+    let mut cfg = ElasticConfig::quadratic(3, 6, 48);
+    cfg.transport.ring_timeout_ms = 1500;
+    cfg.wall_timeout_ms = 90_000;
+    cfg.faults.enabled = true;
+    cfg.faults.kill_rank = 1;
+    cfg.faults.kill_round = 2;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 2], "rank 1 must be gone");
+    assert!(out.epochs >= 2, "ring must have re-formed, epochs={}", out.epochs);
+    assert!(out.final_loss.is_finite());
+    // Survivors completed the full schedule after recovery.
+    let max_round = out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap();
+    assert_eq!(max_round as usize, cfg.rounds);
+    // The survivor ring still converges (mean rescaled to 2 members).
+    let r1: Vec<f32> = out
+        .round_losses
+        .iter()
+        .filter(|(_, r, _)| *r == 1)
+        .map(|(_, _, l)| *l)
+        .collect();
+    let r1_mean = r1.iter().sum::<f32>() / r1.len() as f32;
+    assert!(
+        out.final_loss < r1_mean * 0.5,
+        "final {} vs round-1 {}",
+        out.final_loss,
+        r1_mean
+    );
+}
+
+#[test]
+fn elastic_rejects_zero_workers() {
+    let cfg = ElasticConfig::quadratic(0, 1, 8);
+    assert!(run_elastic(&cfg, &SpawnMode::Thread).is_err());
+}

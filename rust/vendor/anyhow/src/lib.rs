@@ -1,0 +1,163 @@
+//! Minimal offline reimplementation of the `anyhow` API surface that the
+//! dilocox crate uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Semantics mirror upstream closely enough for this workspace:
+//! * `Error` is a cheap string-chain (outermost context first).
+//! * `Display` prints the outermost message; `{:#}` prints the full chain
+//!   joined by `": "`; `Debug` prints the chain too (what `{:?}`/`{:#}` in
+//!   `main` error paths rely on).
+//! * Any `std::error::Error + Send + Sync + 'static` converts into `Error`
+//!   via `?`.
+//!
+//! Swap this path dependency for the real `anyhow = "1"` when offline
+//! builds are not a constraint — no call sites need to change.
+
+use std::fmt;
+
+/// String-chain error: `chain[0]` is the outermost context.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, msg: impl fmt::Display) -> Error {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The full cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std source chain as context entries.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = io_fail().context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: disk on fire");
+        assert_eq!(e.root_cause(), "disk on fire");
+    }
+
+    #[test]
+    fn with_context_and_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "missing x");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(3).is_err());
+        assert!(f(11).is_err());
+    }
+}
