@@ -25,6 +25,8 @@ fn main() -> anyhow::Result<()> {
         .opt("outer-steps", "10", "outer steps T")
         .opt("local-steps", "20", "local steps H")
         .opt("dp", "2", "decentralized clusters / replicas")
+        .opt("pp-stages", "1", "pipeline stages M: >1 runs the stage-parallel 1F1B executor (local transport)")
+        .opt("micros", "1", "in-flight microbatches U per inner step (with --pp-stages > 1)")
         .opt("rank", "128", "low-rank r₁")
         .opt("inner-lr", "6e-4", "inner AdamW lr")
         .opt("csv", "", "write per-round loss CSV here")
@@ -58,10 +60,25 @@ fn main() -> anyhow::Result<()> {
     cfg.train.overlap = !args.flag("no-overlap");
     cfg.compression.rank = args.get_usize("rank").unwrap();
     cfg.compression.adaptive = false; // fixed rank for the recorded run
+    cfg.parallel.pp = args
+        .get_usize("pp-stages")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    cfg.parallel.microbatches = args
+        .get_usize("micros")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // Record the transport in the config BEFORE validating, so the
+    // tcp+pp guard actually sees the requested backend (the elastic TCP
+    // fleet runs single-stage workers; --pp-stages applies to local).
+    let backend = TransportBackend::parse(args.get("transport"))
+        .map_err(|e| anyhow::anyhow!("{e:#}"))?;
+    cfg.transport.backend = backend;
+    cfg.validate()?;
 
     println!(
-        "pretrain_e2e: preset={preset} D={} T={} H={} rank={} overlap={} transport={}",
+        "pretrain_e2e: preset={preset} D={} M={} U={} T={} H={} rank={} overlap={} transport={}",
         cfg.parallel.dp,
+        cfg.parallel.pp,
+        cfg.parallel.microbatches,
         cfg.train.outer_steps,
         cfg.train.local_steps,
         cfg.compression.rank,
@@ -72,8 +89,6 @@ fn main() -> anyhow::Result<()> {
     // ---- elastic multi-process path (churn-tolerant scenario) ------------
     // One OS process per cluster over loopback TCP; optionally kill one
     // worker mid-run and watch the ring re-form with the survivors.
-    let backend = TransportBackend::parse(args.get("transport"))
-        .map_err(|e| anyhow::anyhow!("{e:#}"))?;
     if backend == TransportBackend::Tcp {
         let kill_round = args
             .get_usize("kill-round")
@@ -141,7 +156,14 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
 
-    println!("loading + compiling artifacts on {} worker threads ...", cfg.parallel.dp);
+    if cfg.parallel.pp > 1 {
+        println!(
+            "loading + compiling artifacts on {} workers × {} stage executor threads (1F1B, U={}) ...",
+            cfg.parallel.dp, cfg.parallel.pp, cfg.parallel.microbatches
+        );
+    } else {
+        println!("loading + compiling artifacts on {} worker threads ...", cfg.parallel.dp);
+    }
 
     let t0 = Instant::now();
     let out = run_threaded(&cfg, &artifacts)?;

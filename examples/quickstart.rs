@@ -6,17 +6,65 @@
 //!
 //! Prints loss curves and the wire-byte ledger — the paper's story in
 //! thirty seconds: same convergence, orders of magnitude less traffic.
+//!
+//! Without artifacts (e.g. a fresh checkout or CI) it falls back to the
+//! artifact-free stage-parallel demo: the real 1F1B executor over the
+//! synthetic multi-stage workload, with a quantized per-stage ring.
 
 use dilocox::config::{Algo, ExperimentConfig};
 use dilocox::metrics::Table;
 use dilocox::train::{run_experiment, RunOpts};
 use dilocox::util::fmt_bytes;
 
+/// Artifact-free path: D clusters × M stage executor threads on the 1F1B
+/// schedule, per-stage dual optimizers, int8 pseudo-gradient rings with
+/// one-step-delay overlap.
+fn synthetic_pipeline_demo() -> anyhow::Result<()> {
+    use dilocox::compress::Method;
+    use dilocox::pipeline::exec::{
+        local_stage_rings, run_pipeline, PipelineRunOpts, SyntheticPipeline,
+    };
+
+    let (dp, stages, micros, dim) = (2usize, 3usize, 4usize, 32usize);
+    let wl = SyntheticPipeline::new(stages, micros, dim, 1234);
+    let opts = PipelineRunOpts {
+        rounds: 6,
+        local_steps: 8,
+        inner_lr: 0.05,
+        weight_decay: 0.0,
+        // Gentle outer settings: one-step-delayed updates at the paper's
+        // transformer gains oscillate on this fast-converging toy chain.
+        outer_lr: 0.3,
+        outer_momentum: 0.3,
+        overlap: true,
+        error_feedback: false,
+        method: Method::Quant { q_bits: 8 },
+        seed: 1234,
+    };
+    let out = run_pipeline(&wl, dp, local_stage_rings(dp, stages), &opts)?;
+    println!(
+        "stage-parallel 1F1B demo: D={dp} clusters × M={stages} stages, \
+         U={micros} microbatches, int8 ring, overlap on"
+    );
+    for (r, loss) in out.mean_loss_per_round() {
+        println!("  round {r}: loss {loss:.4}");
+    }
+    println!(
+        "final eval {:.4} | ring traffic {}",
+        out.final_eval,
+        fmt_bytes(out.total_wire_bytes)
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let artifacts = format!("{}/artifacts/tiny", env!("CARGO_MANIFEST_DIR"));
     if !std::path::Path::new(&artifacts).exists() {
-        eprintln!("artifacts/tiny missing — run `make artifacts` first");
-        std::process::exit(1);
+        eprintln!(
+            "artifacts/tiny missing (run `make artifacts` for the PJRT \
+             path) — running the artifact-free stage-parallel demo"
+        );
+        return synthetic_pipeline_demo();
     }
 
     let opts = RunOpts { quiet: true, ..Default::default() };

@@ -48,8 +48,14 @@ pub struct ParallelConfig {
     /// D — data-parallel replicas (one per decentralized cluster here:
     /// the slow links are *between* replicas).
     pub dp: usize,
-    /// M — pipeline stages inside each replica.
+    /// M — pipeline stages inside each replica.  With `pp > 1` the
+    /// coordinator runs the stage-parallel 1F1B executor; the degree must
+    /// match the artifact manifest (see
+    /// [`ExperimentConfig::validate_with_manifest`]).
     pub pp: usize,
+    /// U — in-flight microbatches per inner step on the 1F1B schedule
+    /// (only meaningful with `pp > 1`; must be ≥ 1).
+    pub microbatches: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -246,7 +252,7 @@ impl ExperimentConfig {
             preset: preset.to_string(),
             artifacts_dir: format!("artifacts/{preset}"),
             algo,
-            parallel: ParallelConfig { dp, pp: 1 },
+            parallel: ParallelConfig { dp, pp: 1, microbatches: 1 },
             train: TrainConfig {
                 outer_steps: 8,
                 local_steps,
@@ -305,6 +311,7 @@ impl ExperimentConfig {
         }
         set_usize!("parallel.dp", cfg.parallel.dp);
         set_usize!("parallel.pp", cfg.parallel.pp);
+        set_usize!("parallel.microbatches", cfg.parallel.microbatches);
         set_usize!("train.outer_steps", cfg.train.outer_steps);
         set_usize!("train.local_steps", cfg.train.local_steps);
         set_f32!("train.inner_lr", cfg.train.inner_lr);
@@ -377,6 +384,12 @@ impl ExperimentConfig {
         if self.parallel.dp == 0 || self.parallel.pp == 0 {
             return Err(anyhow!("parallel degrees must be >= 1"));
         }
+        if self.parallel.microbatches == 0 {
+            return Err(anyhow!(
+                "parallel.microbatches must be >= 1 (the 1F1B schedule \
+                 needs at least one in-flight microbatch)"
+            ));
+        }
         if self.train.outer_steps == 0 || self.train.local_steps == 0 {
             return Err(anyhow!("outer_steps and local_steps must be >= 1"));
         }
@@ -400,6 +413,13 @@ impl ExperimentConfig {
         if !(0.0..=1.0).contains(&self.faults.delay_prob) {
             return Err(anyhow!("faults.delay_prob must be in [0, 1]"));
         }
+        if self.transport.backend == TransportBackend::Tcp && self.parallel.pp > 1 {
+            return Err(anyhow!(
+                "stage-parallel execution (parallel.pp > 1) currently runs \
+                 over the local threaded transport; use [transport] backend \
+                 = \"local\" or set parallel.pp = 1 for the tcp worker fleet"
+            ));
+        }
         if self.faults.enabled
             && self.faults.kill_round > 0
             && self.faults.kill_rank >= self.parallel.dp
@@ -409,6 +429,39 @@ impl ExperimentConfig {
                 self.faults.kill_rank,
                 self.parallel.dp
             ));
+        }
+        Ok(())
+    }
+
+    /// Validate pipeline settings against an artifact manifest — called
+    /// by every entry point that loads a bundle, so misconfigured PP
+    /// degrees fail at load time with actionable errors instead of deep
+    /// in stage execution.
+    pub fn validate_with_manifest(
+        &self,
+        man: &crate::runtime::Manifest,
+    ) -> Result<()> {
+        self.validate()?;
+        if self.parallel.pp > 1 {
+            if self.parallel.pp != man.dims.pp_stages {
+                return Err(anyhow!(
+                    "parallel.pp = {} but artifact bundle '{}' exports \
+                     pp_stages = {}; set parallel.pp = {} or re-export the \
+                     artifacts with the desired stage count",
+                    self.parallel.pp,
+                    man.preset,
+                    man.dims.pp_stages,
+                    man.dims.pp_stages
+                ));
+            }
+            crate::pipeline::layers_per_stage(man.dims.n_layers, self.parallel.pp)
+                .map_err(|e| {
+                    anyhow!(
+                        "invalid stage partition for bundle '{}': {e}; \
+                         parallel.pp must divide n_layers",
+                        man.preset
+                    )
+                })?;
         }
         Ok(())
     }
@@ -533,6 +586,67 @@ straggler_ms = 5
         let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
         cfg.transport.ring_timeout_ms = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn microbatches_parse_and_validate() {
+        let src = r#"
+algo = "dilocox"
+[model]
+preset = "tiny"
+[parallel]
+dp = 2
+pp = 4
+microbatches = 3
+"#;
+        let v = toml::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.parallel.pp, 4);
+        assert_eq!(cfg.parallel.microbatches, 3);
+
+        let mut bad = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        bad.parallel.microbatches = 0;
+        assert!(bad.validate().is_err());
+
+        let mut tcp_pp = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        tcp_pp.parallel.pp = 2;
+        tcp_pp.transport.backend = TransportBackend::Tcp;
+        assert!(tcp_pp.validate().is_err());
+    }
+
+    #[test]
+    fn manifest_validation_catches_pp_mismatch_at_load_time() {
+        use crate::runtime::Manifest;
+        use crate::util::json::Json;
+        use std::path::PathBuf;
+
+        let text = r#"{
+  "format": "hlo-text-v1",
+  "preset": "synthetic",
+  "param_count": 8,
+  "config": {"vocab_size": 64, "d_model": 8, "n_heads": 2, "n_layers": 4,
+             "seq_len": 16, "microbatch": 2, "pp_stages": 4,
+             "layers_per_stage": 1, "d_ff": 16},
+  "programs": {},
+  "param_specs": {},
+  "stage_numel": {},
+  "init": {}
+}"#;
+        let v = Json::parse(text).unwrap();
+        let man = Manifest::from_json(PathBuf::from("."), &v).unwrap();
+
+        let mut cfg = ExperimentConfig::default_for("synthetic", Algo::DiLoCoX);
+        cfg.parallel.pp = 4;
+        cfg.validate_with_manifest(&man).unwrap();
+
+        // pp = 1 never touches the stage programs — always fine.
+        cfg.parallel.pp = 1;
+        cfg.validate_with_manifest(&man).unwrap();
+
+        // Mismatched degree fails with an actionable message.
+        cfg.parallel.pp = 3;
+        let err = cfg.validate_with_manifest(&man).unwrap_err().to_string();
+        assert!(err.contains("pp_stages = 4"), "{err}");
     }
 
     #[test]

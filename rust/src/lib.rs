@@ -7,7 +7,21 @@
 //!
 //! Layer map:
 //! * L3 (this crate): coordinator, trainers, collectives, compression,
-//!   optimizers, pipeline schedules, DES throughput simulator.
+//!   optimizers, pipeline schedules + the stage-parallel 1F1B executor,
+//!   DES throughput simulator.
+//! * L3 rounds: the single outer-round engine ([`rounds::RoundEngine`])
+//!   owning Algorithm 2's delta/error-feedback/outer-step/overlap
+//!   ordering, plus the AllReduce-compatible wire compressor and the
+//!   comm-thread overlap lane.  Consumed by [`train`], [`coordinator`],
+//!   [`transport::elastic`], and [`pipeline::exec`] — the ordering exists
+//!   in exactly one place.
+//! * L3 pipeline: 1F1B/GPipe schedules as per-stage op streams with one
+//!   dependency oracle ([`pipeline::execute_streams`]) shared by the
+//!   validator and the DES, and the real stage-parallel executor
+//!   ([`pipeline::exec`]): one thread per stage per cluster, activations
+//!   and grad-activations over channels, per-stage dual optimizers,
+//!   per-stage DP rings (the §2.2 PP + Dual Optimizer Policy executed,
+//!   not simulated).
 //! * L3 transport: the collective wire behind the
 //!   [`transport::RingTransport`] trait — `local` (in-memory mpsc ring,
 //!   worker threads), `tcp` (length-delimited frames over loopback TCP,
@@ -17,7 +31,9 @@
 //!   injection wrapping either wire).  See [`transport`] for the frame
 //!   format and the membership epoch protocol.
 //! * L2/L1 (python/, build-time only): jax stage programs + pallas kernels,
-//!   AOT-lowered to `artifacts/<preset>/*.hlo.txt` consumed by [`runtime`].
+//!   AOT-lowered to `artifacts/<preset>/*.hlo.txt` consumed by [`runtime`]
+//!   — monolithic `step_single`/`eval_single` plus the per-stage
+//!   `fwd_*`/`bwd_*` programs the stage executor drives.
 
 pub mod comm;
 pub mod compress;
@@ -31,6 +47,7 @@ pub mod netsim;
 pub mod optim;
 pub mod pipeline;
 pub mod report;
+pub mod rounds;
 pub mod runtime;
 pub mod sim;
 pub mod train;

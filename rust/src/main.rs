@@ -79,6 +79,12 @@ fn build_cfg(args: &dilocox::util::cli::Args) -> Result<ExperimentConfig, String
         cfg.parallel.dp = args.get_usize("dp")?;
         cfg.network.clusters = cfg.parallel.dp;
     }
+    if !args.get("pp").is_empty() {
+        cfg.parallel.pp = args.get_usize("pp")?;
+    }
+    if !args.get("micros").is_empty() {
+        cfg.parallel.microbatches = args.get_usize("micros")?;
+    }
     if args.flag("no-overlap") {
         cfg.train.overlap = false;
     }
@@ -100,6 +106,8 @@ fn train_spec(name: &str, about: &str) -> CliSpec {
         .opt("outer-steps", "", "outer steps T")
         .opt("local-steps", "", "local steps H₁")
         .opt("dp", "", "data-parallel replicas D")
+        .opt("pp", "", "pipeline stages M (coordinate only: stage-parallel 1F1B)")
+        .opt("micros", "", "in-flight microbatches U (with --pp > 1)")
         .opt("artifacts", "", "artifact dir override")
         .opt("csv", "", "write per-step metrics CSV here")
         .flag("no-overlap", "disable one-step-delay overlap (ablation)")

@@ -1,8 +1,13 @@
-//! Pipeline parallelism (paper §2.2): stage partitioning and microbatch
-//! schedules.  The schedule is expressed as an abstract op sequence that
-//! both the real executor (coordinator, running per-stage HLO programs)
-//! and the DES throughput simulator consume — one source of truth for the
-//! dependency structure and therefore for bubble fractions.
+//! Pipeline parallelism (paper §2.2): stage partitioning, microbatch
+//! schedules, and the stage-parallel executor ([`exec`]).  The schedule is
+//! an abstract per-stage op-stream that three consumers share — the
+//! schedule validator and the DES throughput simulator interpret it
+//! through [`execute_streams`] (the single dependency oracle), and the
+//! real executor's stage threads run their streams in order with blocking
+//! channels realizing the same dependencies structurally — one source of
+//! truth for the dependency structure and therefore for bubble fractions.
+
+pub mod exec;
 
 /// One scheduled cell: stage `stage` runs a forward or backward for
 /// microbatch `micro`.
@@ -56,17 +61,41 @@ pub fn one_f_one_b_schedule(stages: usize, micros: usize) -> Vec<Vec<Cell>> {
     streams
 }
 
-/// Validity check used by both executors and property tests: within each
-/// stage ops are ordered, forward of (s, m) precedes forward of (s+1, m),
-/// backward of (s, m) precedes backward of (s−1, m), and the backward of
-/// the last stage follows its forward.
-pub fn validate_schedule(streams: &[Vec<Cell>], micros: usize) -> Result<(), String> {
+/// Per-(stage, micro) completion values from an interpretation of
+/// per-stage streams (see [`execute_streams`]).
+#[derive(Clone, Debug)]
+pub struct ScheduleTrace<T> {
+    pub fwd: Vec<Vec<T>>,
+    pub bwd: Vec<Vec<T>>,
+}
+
+/// Interpret per-stage streams against the pipeline dependency rules,
+/// calling `f(cell, fwd_dep, bwd_dep)` exactly once per cell when its
+/// dependencies have completed:
+///
+/// * forward at stage s: `fwd_dep` = completion of the forward of
+///   (s−1, micro) — `None` at stage 0; `bwd_dep` is `None`;
+/// * backward at stage s: `fwd_dep` = completion of this stage's own
+///   forward of (s, micro); `bwd_dep` = completion of the backward of
+///   (s+1, micro) — `None` at the last stage.
+///
+/// `f` returns the cell's own completion value (`()` for pure
+/// validation, a finish *time* for the DES).  Errors on deadlock or
+/// missing ops.  This is the single dependency oracle: the schedule
+/// validator and the DES simulator call it directly, and the real
+/// stage-parallel executor ([`exec`]) realizes the identical rules
+/// structurally (per-stage in-order streams + blocking channels).
+pub fn execute_streams<T: Clone, F>(
+    streams: &[Vec<Cell>],
+    micros: usize,
+    mut f: F,
+) -> Result<ScheduleTrace<T>, String>
+where
+    F: FnMut(Cell, Option<&T>, Option<&T>) -> T,
+{
     let stages = streams.len();
-    // Build a global happens-before by simulating stage streams with
-    // availability times.
-    // pos[s][m].0 = forward done flag, .1 backward done flag
-    let mut fwd_done = vec![vec![false; micros]; stages];
-    let mut bwd_done = vec![vec![false; micros]; stages];
+    let mut fwd: Vec<Vec<Option<T>>> = vec![vec![None; micros]; stages];
+    let mut bwd: Vec<Vec<Option<T>>> = vec![vec![None; micros]; stages];
     let mut idx = vec![0usize; stages];
     let total: usize = streams.iter().map(|s| s.len()).sum();
     let mut executed = 0usize;
@@ -75,20 +104,45 @@ pub fn validate_schedule(streams: &[Vec<Cell>], micros: usize) -> Result<(), Str
         for s in 0..stages {
             while idx[s] < streams[s].len() {
                 let c = streams[s][idx[s]];
-                let ready = if c.is_forward {
-                    s == 0 || fwd_done[s - 1][c.micro]
-                } else if s == stages - 1 {
-                    fwd_done[s][c.micro]
-                } else {
-                    bwd_done[s + 1][c.micro] && fwd_done[s][c.micro]
-                };
-                if !ready {
-                    break;
+                if c.stage != s {
+                    return Err(format!(
+                        "stream {s} carries a cell for stage {}",
+                        c.stage
+                    ));
                 }
-                if c.is_forward {
-                    fwd_done[s][c.micro] = true;
+                if c.micro >= micros {
+                    return Err(format!(
+                        "cell micro {} out of range (micros {micros})",
+                        c.micro
+                    ));
+                }
+                // Dependency completion values (None = not ready yet).
+                let deps: Option<(Option<T>, Option<T>)> = if c.is_forward {
+                    if s == 0 {
+                        Some((None, None))
+                    } else {
+                        fwd[s - 1][c.micro].clone().map(|t| (Some(t), None))
+                    }
                 } else {
-                    bwd_done[s][c.micro] = true;
+                    match fwd[s][c.micro].clone() {
+                        None => None,
+                        Some(own) => {
+                            if s == stages - 1 {
+                                Some((Some(own), None))
+                            } else {
+                                bwd[s + 1][c.micro]
+                                    .clone()
+                                    .map(|d| (Some(own), Some(d)))
+                            }
+                        }
+                    }
+                };
+                let Some((fdep, bdep)) = deps else { break };
+                let v = f(c, fdep.as_ref(), bdep.as_ref());
+                if c.is_forward {
+                    fwd[s][c.micro] = Some(v);
+                } else {
+                    bwd[s][c.micro] = Some(v);
                 }
                 idx[s] += 1;
                 executed += 1;
@@ -96,19 +150,39 @@ pub fn validate_schedule(streams: &[Vec<Cell>], micros: usize) -> Result<(), Str
             }
         }
         if !progressed {
-            return Err(format!(
-                "schedule deadlock at {executed}/{total} ops"
-            ));
+            return Err(format!("schedule deadlock at {executed}/{total} ops"));
         }
     }
-    for s in 0..stages {
-        for m in 0..micros {
-            if !fwd_done[s][m] || !bwd_done[s][m] {
-                return Err(format!("missing op for stage {s} micro {m}"));
+    let unwrap_all = |table: Vec<Vec<Option<T>>>, what: &str| {
+        let mut out = Vec::with_capacity(table.len());
+        for (s, row) in table.into_iter().enumerate() {
+            let mut r = Vec::with_capacity(row.len());
+            for (m, v) in row.into_iter().enumerate() {
+                match v {
+                    Some(v) => r.push(v),
+                    None => {
+                        return Err(format!(
+                            "missing {what} op for stage {s} micro {m}"
+                        ))
+                    }
+                }
             }
+            out.push(r);
         }
-    }
-    Ok(())
+        Ok(out)
+    };
+    Ok(ScheduleTrace {
+        fwd: unwrap_all(fwd, "forward")?,
+        bwd: unwrap_all(bwd, "backward")?,
+    })
+}
+
+/// Validity check used by executors and property tests: within each
+/// stage ops are ordered, forward of (s, m) precedes forward of (s+1, m),
+/// backward of (s, m) precedes backward of (s−1, m), and the backward of
+/// the last stage follows its forward.
+pub fn validate_schedule(streams: &[Vec<Cell>], micros: usize) -> Result<(), String> {
+    execute_streams(streams, micros, |_c, _f, _b| ()).map(|_| ())
 }
 
 /// Partition L layers over M stages (equal split required, as in aot.py).
@@ -192,6 +266,30 @@ mod tests {
         assert_eq!(layers_per_stage(12, 4).unwrap(), 3);
         assert!(layers_per_stage(10, 4).is_err());
         assert!(layers_per_stage(4, 0).is_err());
+    }
+
+    #[test]
+    fn execute_streams_yields_dependency_consistent_trace() {
+        let streams = one_f_one_b_schedule(3, 4);
+        let mut clock = 0usize;
+        let trace = execute_streams(&streams, 4, |_c, f, b| {
+            clock += 1;
+            assert!(f.map_or(true, |&x| x < clock));
+            assert!(b.map_or(true, |&x| x < clock));
+            clock
+        })
+        .unwrap();
+        for s in 0..3 {
+            for m in 0..4 {
+                assert!(trace.fwd[s][m] < trace.bwd[s][m]);
+                if s > 0 {
+                    assert!(trace.fwd[s - 1][m] < trace.fwd[s][m]);
+                }
+                if s < 2 {
+                    assert!(trace.bwd[s + 1][m] < trace.bwd[s][m]);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,706 @@
+//! Outer-round engine (paper Algorithm 2): the one place that owns the
+//! delta/error-feedback/outer-step/overlap ordering.
+//!
+//! Every execution path — the single-process reference trainer
+//! ([`crate::train`]), the threaded coordinator ([`crate::coordinator`]),
+//! the elastic multi-process workers ([`crate::transport::elastic`]), and
+//! the stage-parallel 1F1B executor ([`crate::pipeline::exec`]) — used to
+//! carry its own copy of the same delicate state machine; they now all
+//! drive a [`RoundEngine`] and differ only in *how* the pseudo-gradients
+//! get reduced to their global mean (the [`DeltaReducer`] they plug in).
+//!
+//! The invariant algebra, per outer round t:
+//!
+//! 1. (overlap only) **join** the in-flight reduction of δ^{t-1};
+//! 2. refresh the error buffer e^t = δ^{t-1} − Δ^{t-1} (error feedback);
+//! 3. form δ^t = (anchor^t − θ^t_local) + e^t against THIS round's anchor
+//!    — in-flight progress is never counted twice;
+//! 4. start reducing δ^t (a real comm thread with overlap, inline without);
+//! 5. apply the outer Nesterov update with the *delayed* mean Δ^{t-1}
+//!    (overlap) or the fresh mean Δ^t (sync), then resync local params to
+//!    the global track θ_g.
+//!
+//! [`WireCompressor`] (AllReduce-compatible compression over a
+//! [`RingTransport`]) and [`RingLane`] (the comm-thread overlap pattern)
+//! live here too so the per-stage executor and the per-worker coordinator
+//! share them.  The low-rank base seed is derived from the *round* in both
+//! the sync and the overlap path — the two paths produce bit-identical
+//! bases (regression-tested below).
+
+use crate::compress::{lowrank, quantize, Method};
+use crate::linalg::{matmul, matmul_at_b, matmul_bt, orthonormalize_columns, Mat};
+use crate::optim::Nesterov;
+use crate::runtime::manifest::ParamEntry;
+use crate::transport::RingTransport;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// How a round's pseudo-gradients become their global mean.
+///
+/// `begin` is called the moment δ^t is formed; `complete` when the mean is
+/// needed — immediately after `begin` in sync mode, one round later with
+/// overlap.  Implementations that reduce inline leave `begin` a no-op and
+/// do the work in `complete`; implementations that overlap launch a comm
+/// thread in `begin` and join it in `complete` (the `deltas` argument of a
+/// `complete` that joins an already-launched reduction may be ignored).
+pub trait DeltaReducer {
+    fn begin(&mut self, deltas: &[Vec<f32>], round: u64) -> Result<()>;
+    fn complete(&mut self, deltas: &[Vec<f32>], round: u64) -> Result<Vec<f32>>;
+}
+
+/// The Algorithm-2 outer-round state machine over a flat parameter track.
+///
+/// One engine per independent parameter shard: the whole model for the
+/// single-vector paths, one per pipeline stage for the stage-parallel
+/// path (the algebra is elementwise, so per-stage engines compose
+/// exactly).  `lanes` is the number of local pseudo-gradient sources the
+/// caller feeds per round: 1 for a real distributed worker (its peers are
+/// behind the reducer), D for the in-process reference trainer that holds
+/// every replica itself.
+pub struct RoundEngine {
+    theta_g: Vec<f32>,
+    outer: Nesterov,
+    error: Vec<Vec<f32>>,
+    in_flight: Option<(Vec<Vec<f32>>, u64)>,
+    overlap: bool,
+    error_feedback: bool,
+}
+
+impl RoundEngine {
+    pub fn new(
+        theta0: Vec<f32>,
+        lanes: usize,
+        outer: Nesterov,
+        overlap: bool,
+        error_feedback: bool,
+    ) -> RoundEngine {
+        let n = theta0.len();
+        assert!(lanes >= 1, "need at least one lane");
+        assert_eq!(outer.buf.len(), n, "outer optimizer size mismatch");
+        RoundEngine {
+            theta_g: theta0,
+            outer,
+            error: vec![vec![0.0; n]; lanes],
+            in_flight: None,
+            overlap,
+            error_feedback,
+        }
+    }
+
+    /// The global parameter track (moves only by outer updates).
+    pub fn theta(&self) -> &[f32] {
+        &self.theta_g
+    }
+
+    /// Overwrite the global track (elastic consensus resync after churn).
+    pub fn set_theta(&mut self, theta: &[f32]) {
+        self.theta_g.copy_from_slice(theta);
+    }
+
+    /// Restart the outer momentum (elastic ring re-formation policy).
+    pub fn reset_outer(&mut self) {
+        self.outer.buf.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.error.len()
+    }
+
+    pub fn has_in_flight(&self) -> bool {
+        self.in_flight.is_some()
+    }
+
+    fn add_error(&self, mut movement: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        for (lane, e) in movement.iter_mut().zip(&self.error) {
+            for (d, ei) in lane.iter_mut().zip(e) {
+                *d += ei;
+            }
+        }
+        movement
+    }
+
+    fn refresh_error(&mut self, raws: &[Vec<f32>], avg: &[f32]) {
+        if !self.error_feedback {
+            return;
+        }
+        for (e, raw) in self.error.iter_mut().zip(raws) {
+            for i in 0..e.len() {
+                e[i] = raw[i] - avg[i];
+            }
+        }
+    }
+
+    /// Finish round `round` given the per-lane local movement
+    /// (anchor − params, WITHOUT error feedback — the engine adds e^t).
+    ///
+    /// Returns the reduced mean applied to θ_g this round: `Some` means
+    /// the caller must resync its local params to [`Self::theta`];
+    /// `None` only on the first overlap round (nothing in flight yet).
+    pub fn finish_round(
+        &mut self,
+        movement: Vec<Vec<f32>>,
+        round: u64,
+        red: &mut dyn DeltaReducer,
+    ) -> Result<Option<Vec<f32>>> {
+        if movement.len() != self.error.len() {
+            return Err(anyhow!(
+                "engine has {} lanes, got {} movements",
+                self.error.len(),
+                movement.len()
+            ));
+        }
+        if self.overlap {
+            let prev = self.in_flight.take();
+            let avg_prev = match &prev {
+                Some((raws, r)) => Some(red.complete(raws, *r)?),
+                None => None,
+            };
+            if let (Some((raws, _)), Some(avg)) = (&prev, &avg_prev) {
+                self.refresh_error(raws, avg);
+            }
+            let deltas = self.add_error(movement);
+            red.begin(&deltas, round)?;
+            self.in_flight = Some((deltas, round));
+            Ok(match avg_prev {
+                Some(avg) => {
+                    self.outer.step(&mut self.theta_g, &avg);
+                    Some(avg)
+                }
+                None => None,
+            })
+        } else {
+            let deltas = self.add_error(movement);
+            red.begin(&deltas, round)?;
+            let avg = red.complete(&deltas, round)?;
+            self.refresh_error(&deltas, &avg);
+            self.outer.step(&mut self.theta_g, &avg);
+            Ok(Some(avg))
+        }
+    }
+
+    /// Flush a trailing in-flight reduction at shutdown so the final
+    /// params include every lane's last contribution.
+    pub fn drain(&mut self, red: &mut dyn DeltaReducer) -> Result<Option<Vec<f32>>> {
+        let Some((raws, r)) = self.in_flight.take() else {
+            return Ok(None);
+        };
+        let avg = red.complete(&raws, r)?;
+        self.outer.step(&mut self.theta_g, &avg);
+        Ok(Some(avg))
+    }
+}
+
+/// δ components: this round's local movement against its anchor.
+pub fn movement(anchor: &[f32], params: &[f32]) -> Vec<f32> {
+    anchor.iter().zip(params).map(|(a, p)| a - p).collect()
+}
+
+// ---------------------------------------------------------------------------
+// AllReduce-compatible wire compression
+// ---------------------------------------------------------------------------
+
+/// AllReduce-compatible compression state for ring-transport paths.
+///
+/// Quantize-only runs one ring pass; Low-Rank ∘ Quantize runs the PowerSGD
+/// two-pass algebra (allreduce P̄, orthonormalize, allreduce Q̄') — every
+/// worker derives identical bases from a shared seed + the round number,
+/// so no parameter server is needed.
+pub struct WireCompressor {
+    method: Method,
+    seed: u64,
+    bases: HashMap<String, Mat>,
+}
+
+impl WireCompressor {
+    pub fn new(method: Method, seed: u64) -> Self {
+        WireCompressor { method, seed, bases: HashMap::new() }
+    }
+
+    /// Cached low-rank base for a parameter (tests / inspection).
+    pub fn base(&self, name: &str) -> Option<&Mat> {
+        self.bases.get(name)
+    }
+
+    /// Reduce `delta` across the ring in place (result = global mean of
+    /// the compressed deltas); returns payload bytes this worker sent.
+    /// Speaks only to the [`RingTransport`] trait, so the same compressor
+    /// runs over the local mpsc ring, loopback TCP, or a fault-injecting
+    /// wrapper.  `step` seeds fresh low-rank bases; callers must pass the
+    /// round the delta belongs to — identically in sync and overlap mode.
+    pub fn reduce(
+        &mut self,
+        member: &mut dyn RingTransport,
+        delta: &mut [f32],
+        spec: &[ParamEntry],
+        step: u64,
+    ) -> Result<u64> {
+        match self.method.clone() {
+            Method::None => {
+                let payload = 4 * delta.len() as u64;
+                member.allreduce_mean(delta)?;
+                Ok(payload)
+            }
+            Method::Quant { q_bits } => {
+                quantize::quantize_dequantize(delta, q_bits);
+                member.allreduce_mean(delta)?;
+                Ok(quantize::wire_bytes(delta.len(), q_bits))
+            }
+            Method::LowRankQuant { rank, q_bits } => {
+                self.lowrank_reduce(member, delta, spec, step, rank, q_bits)
+            }
+            other => Err(anyhow!(
+                "method {:?} is not AllReduce-compatible (ring path)",
+                other.name()
+            )),
+        }
+    }
+
+    fn lowrank_reduce(
+        &mut self,
+        member: &mut dyn RingTransport,
+        delta: &mut [f32],
+        spec: &[ParamEntry],
+        step: u64,
+        rank: usize,
+        q_bits: u32,
+    ) -> Result<u64> {
+        let mut payload_elems = 0usize;
+        let mut scales = 0usize;
+        for entry in spec {
+            let lo = entry.offset;
+            let hi = entry.offset + entry.numel();
+            if entry.shape.len() == 2 {
+                let (rows, cols) = (entry.shape[0], entry.shape[1]);
+                let r = lowrank::effective_rank(rank, rows, cols);
+                let q = self.bases.entry(entry.name.clone()).or_insert_with(|| {
+                    // Same seeding rule as compress::lowrank → identical
+                    // bases on every worker.
+                    let mut rng =
+                        Pcg32::new(self.seed ^ fnv(&entry.name), step);
+                    let mut m = Mat::zeros(cols, r);
+                    rng.fill_normal(&mut m.data, 0.0, 1.0);
+                    m
+                });
+                if q.cols != r {
+                    let mut rng =
+                        Pcg32::new(self.seed ^ fnv(&entry.name), step);
+                    let mut m = Mat::zeros(cols, r);
+                    for i in 0..cols {
+                        for j in 0..r {
+                            m.data[i * r + j] = if j < q.cols {
+                                q.data[i * q.cols + j]
+                            } else {
+                                rng.normal()
+                            };
+                        }
+                    }
+                    *q = m;
+                }
+                let mslab = Mat::from_slice(rows, cols, &delta[lo..hi]);
+                // Pass 1: P = M Q, ring-mean, quantize, orthonormalize.
+                let mut p = matmul(&mslab, q);
+                member.allreduce_mean(&mut p.data)?;
+                payload_elems += rows * r;
+                scales += 1;
+                if q_bits > 0 && q_bits < 32 {
+                    quantize::quantize_dequantize(&mut p.data, q_bits);
+                }
+                orthonormalize_columns(&mut p);
+                // Pass 2: Q' = Mᵀ P̂, ring-mean, quantize.
+                let mut qn = matmul_at_b(&mslab, &p);
+                member.allreduce_mean(&mut qn.data)?;
+                payload_elems += cols * r;
+                scales += 1;
+                if q_bits > 0 && q_bits < 32 {
+                    quantize::quantize_dequantize(&mut qn.data, q_bits);
+                }
+                self.bases.insert(entry.name.clone(), qn.clone());
+                let rec = matmul_bt(&p, &qn);
+                delta[lo..hi].copy_from_slice(&rec.data);
+            } else {
+                // 1-D segment: ring-mean, then snap to the q-bit grid —
+                // the same order as compress::lowrank so the threaded and
+                // reference paths agree bit-for-bit (up to ring fp order).
+                let mut seg = delta[lo..hi].to_vec();
+                member.allreduce_mean(&mut seg)?;
+                if q_bits > 0 && q_bits < 32 {
+                    quantize::quantize_dequantize(&mut seg, q_bits);
+                }
+                payload_elems += hi - lo;
+                scales += 1;
+                delta[lo..hi].copy_from_slice(&seg);
+            }
+        }
+        let bits = if q_bits == 0 { 32 } else { q_bits } as u64;
+        Ok((payload_elems as u64 * bits + 7) / 8 + 4 * scales as u64)
+    }
+}
+
+pub(crate) fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// RingLane: a single-lane DeltaReducer over a ring transport
+// ---------------------------------------------------------------------------
+
+type Flight =
+    std::thread::JoinHandle<Result<(Box<dyn RingTransport>, WireCompressor, Vec<f32>, u64)>>;
+
+/// One worker's (or one stage executor's) reducing lane: owns the ring
+/// transport and the wire compressor, and realizes the engine's overlap
+/// contract *structurally* — `begin` hands the pseudo-gradient to a comm
+/// thread that runs the ring collective while the caller trains the next
+/// H local steps; `complete` joins it.  In sync mode `begin` is a no-op
+/// and `complete` reduces inline.
+pub struct RingLane {
+    member: Option<Box<dyn RingTransport>>,
+    compressor: Option<WireCompressor>,
+    spec: Vec<ParamEntry>,
+    overlap: bool,
+    in_flight: Option<Flight>,
+    /// Round hook deferred while the member is away on the comm thread
+    /// (overlap): delivered as soon as the member returns, so
+    /// round-indexed fault injection still fires.
+    pending_round: Option<usize>,
+    /// Payload bytes of the most recently completed reduction.
+    pub wire_last: u64,
+    /// Cumulative payload bytes over the lane's lifetime.
+    pub wire_total: u64,
+}
+
+impl RingLane {
+    pub fn new(
+        member: Box<dyn RingTransport>,
+        method: Method,
+        seed: u64,
+        spec: Vec<ParamEntry>,
+        overlap: bool,
+    ) -> RingLane {
+        RingLane {
+            member: Some(member),
+            compressor: Some(WireCompressor::new(method, seed)),
+            spec,
+            overlap,
+            in_flight: None,
+            pending_round: None,
+            wire_last: 0,
+            wire_total: 0,
+        }
+    }
+
+    /// Fault-injection round hook.  While the member is away on a comm
+    /// thread (overlap) the hook is deferred and delivered when the
+    /// member returns in [`DeltaReducer::complete`] — one join late, but
+    /// never silently dropped.
+    pub fn begin_round(&mut self, round: usize) -> Result<()> {
+        match self.member.as_mut() {
+            Some(m) => m.begin_round(round),
+            None => {
+                self.pending_round = Some(round);
+                Ok(())
+            }
+        }
+    }
+
+    /// The compressor, when not in flight (tests / inspection).
+    pub fn compressor(&self) -> Option<&WireCompressor> {
+        self.compressor.as_ref()
+    }
+
+    fn record(&mut self, bytes: u64) {
+        self.wire_last = bytes;
+        self.wire_total += bytes;
+    }
+}
+
+impl DeltaReducer for RingLane {
+    fn begin(&mut self, deltas: &[Vec<f32>], round: u64) -> Result<()> {
+        if !self.overlap {
+            return Ok(());
+        }
+        if deltas.len() != 1 {
+            return Err(anyhow!("RingLane reduces exactly one lane"));
+        }
+        let mut m = self
+            .member
+            .take()
+            .ok_or_else(|| anyhow!("ring member already in flight"))?;
+        let mut c = self
+            .compressor
+            .take()
+            .ok_or_else(|| anyhow!("compressor already in flight"))?;
+        let spec = self.spec.clone();
+        let mut delta = deltas[0].clone();
+        self.in_flight = Some(std::thread::spawn(move || {
+            let bytes = c.reduce(&mut *m, &mut delta, &spec, round)?;
+            Ok((m, c, delta, bytes))
+        }));
+        Ok(())
+    }
+
+    fn complete(&mut self, deltas: &[Vec<f32>], round: u64) -> Result<Vec<f32>> {
+        if let Some(handle) = self.in_flight.take() {
+            let (m, c, avg, bytes) = handle
+                .join()
+                .map_err(|_| anyhow!("comm thread panicked"))??;
+            self.member = Some(m);
+            self.compressor = Some(c);
+            self.record(bytes);
+            if let Some(r) = self.pending_round.take() {
+                self.member.as_mut().unwrap().begin_round(r)?;
+            }
+            return Ok(avg);
+        }
+        if deltas.len() != 1 {
+            return Err(anyhow!("RingLane reduces exactly one lane"));
+        }
+        let mut delta = deltas[0].clone();
+        let m = self
+            .member
+            .as_mut()
+            .ok_or_else(|| anyhow!("ring member missing"))?;
+        let c = self
+            .compressor
+            .as_mut()
+            .ok_or_else(|| anyhow!("compressor missing"))?;
+        let bytes = c.reduce(&mut **m, &mut delta, &self.spec, round)?;
+        self.record(bytes);
+        Ok(delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ring::build_ring;
+
+    /// Reducer that averages the lanes in process (no wire).
+    struct LocalMean;
+
+    impl DeltaReducer for LocalMean {
+        fn begin(&mut self, _d: &[Vec<f32>], _r: u64) -> Result<()> {
+            Ok(())
+        }
+
+        fn complete(&mut self, deltas: &[Vec<f32>], _r: u64) -> Result<Vec<f32>> {
+            let n = deltas[0].len();
+            let mut avg = vec![0.0f32; n];
+            for d in deltas {
+                for i in 0..n {
+                    avg[i] += d[i];
+                }
+            }
+            let inv = 1.0 / deltas.len() as f32;
+            avg.iter_mut().for_each(|x| *x *= inv);
+            Ok(avg)
+        }
+    }
+
+    /// Lossy reducer (halves the mean) to make error feedback observable.
+    struct HalfMean;
+
+    impl DeltaReducer for HalfMean {
+        fn begin(&mut self, _d: &[Vec<f32>], _r: u64) -> Result<()> {
+            Ok(())
+        }
+
+        fn complete(&mut self, deltas: &[Vec<f32>], _r: u64) -> Result<Vec<f32>> {
+            let mut avg = LocalMean.complete(deltas, 0)?;
+            avg.iter_mut().for_each(|x| *x *= 0.5);
+            Ok(avg)
+        }
+    }
+
+    #[test]
+    fn sync_round_matches_manual_nesterov() {
+        let n = 4;
+        let mut eng = RoundEngine::new(
+            vec![0.0; n],
+            2,
+            Nesterov::new(n, 0.5, 0.9),
+            false,
+            false,
+        );
+        let m0 = vec![1.0f32; n];
+        let m1 = vec![3.0f32; n];
+        let avg = eng
+            .finish_round(vec![m0, m1], 1, &mut LocalMean)
+            .unwrap()
+            .unwrap();
+        assert!(avg.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        // Manual Nesterov: buf = 2, θ -= 0.5·(2 + 0.9·2) = 1.9.
+        assert!(eng.theta().iter().all(|&x| (x + 1.9).abs() < 1e-6));
+    }
+
+    #[test]
+    fn overlap_defers_first_application_and_drains() {
+        let n = 3;
+        let mut eng = RoundEngine::new(
+            vec![0.0; n],
+            1,
+            Nesterov::new(n, 1.0, 0.0),
+            true,
+            false,
+        );
+        let r1 = eng
+            .finish_round(vec![vec![1.0; n]], 1, &mut LocalMean)
+            .unwrap();
+        assert!(r1.is_none(), "round 1 must defer");
+        assert_eq!(eng.theta(), &[0.0; 3][..]);
+        // Round 2 applies round 1's delta.
+        let r2 = eng
+            .finish_round(vec![vec![5.0; n]], 2, &mut LocalMean)
+            .unwrap()
+            .unwrap();
+        assert!(r2.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        assert!(eng.theta().iter().all(|&x| (x + 1.0).abs() < 1e-6));
+        // Drain applies round 2's delta.
+        let d = eng.drain(&mut LocalMean).unwrap().unwrap();
+        assert!(d.iter().all(|&x| (x - 5.0).abs() < 1e-6));
+        assert!(eng.theta().iter().all(|&x| (x + 6.0).abs() < 1e-6));
+        assert!(eng.drain(&mut LocalMean).unwrap().is_none());
+    }
+
+    #[test]
+    fn error_feedback_accumulates_the_lost_half() {
+        let n = 2;
+        let mut eng = RoundEngine::new(
+            vec![0.0; n],
+            1,
+            Nesterov::new(n, 1.0, 0.0),
+            false,
+            true,
+        );
+        let avg = eng
+            .finish_round(vec![vec![2.0; n]], 1, &mut HalfMean)
+            .unwrap()
+            .unwrap();
+        assert!(avg.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+        // e = raw − avg = 1; next round's δ = movement + 1.
+        let avg2 = eng
+            .finish_round(vec![vec![0.0; n]], 2, &mut HalfMean)
+            .unwrap()
+            .unwrap();
+        assert!(avg2.iter().all(|&x| (x - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn overlap_error_feedback_matches_algorithm2_ordering() {
+        // e^t must refresh from (δ^{t-1}, Δ^{t-1}) BEFORE δ^t forms.
+        let n = 1;
+        let mut eng = RoundEngine::new(
+            vec![0.0; n],
+            1,
+            Nesterov::new(n, 1.0, 0.0),
+            true,
+            true,
+        );
+        assert!(eng
+            .finish_round(vec![vec![4.0]], 1, &mut HalfMean)
+            .unwrap()
+            .is_none());
+        // Join reduces δ¹=4 → Δ¹=2, e²=2; δ²=1+2=3 goes in flight.
+        let a = eng
+            .finish_round(vec![vec![1.0]], 2, &mut HalfMean)
+            .unwrap()
+            .unwrap();
+        assert!((a[0] - 2.0).abs() < 1e-6);
+        let d = eng.drain(&mut HalfMean).unwrap().unwrap();
+        assert!((d[0] - 1.5).abs() < 1e-6, "Δ² = 3/2, got {}", d[0]);
+    }
+
+    #[test]
+    fn lane_count_mismatch_is_an_error() {
+        let mut eng = RoundEngine::new(
+            vec![0.0; 2],
+            2,
+            Nesterov::new(2, 1.0, 0.0),
+            false,
+            false,
+        );
+        assert!(eng
+            .finish_round(vec![vec![0.0; 2]], 1, &mut LocalMean)
+            .is_err());
+    }
+
+    #[test]
+    fn ring_lane_overlap_and_sync_seed_identical_bases() {
+        // Regression for the coordinator base-seeding bug: the overlap
+        // path used to reduce with step = 0 while the sync path passed
+        // the round, seeding different low-rank bases.  Both paths must
+        // thread the round through to the compressor.
+        let spec = vec![ParamEntry {
+            name: "w".to_string(),
+            shape: vec![8, 6],
+            offset: 0,
+        }];
+        let delta: Vec<f32> = (0..48).map(|i| (i as f32 * 0.37).sin()).collect();
+        let method = Method::LowRankQuant { rank: 2, q_bits: 0 };
+
+        let m_sync = build_ring(1).remove(0);
+        let mut sync = RingLane::new(
+            Box::new(m_sync),
+            method.clone(),
+            99,
+            spec.clone(),
+            false,
+        );
+        let avg_sync = sync.complete(&[delta.clone()], 3).unwrap();
+
+        let m_over = build_ring(1).remove(0);
+        let mut over =
+            RingLane::new(Box::new(m_over), method, 99, spec, true);
+        over.begin(&[delta.clone()], 3).unwrap();
+        let avg_over = over.complete(&[], 3).unwrap();
+
+        assert_eq!(avg_sync, avg_over, "reduced outputs diverged");
+        let b_sync = sync.compressor().unwrap().base("w").unwrap();
+        let b_over = over.compressor().unwrap().base("w").unwrap();
+        assert_eq!(b_sync.data, b_over.data, "base seeds diverged");
+        assert!(sync.wire_total > 0);
+        assert_eq!(sync.wire_total, over.wire_total);
+    }
+
+    #[test]
+    fn ring_lane_sync_reduces_mean_across_members() {
+        let members = build_ring(2);
+        let spec = vec![ParamEntry {
+            name: "b".to_string(),
+            shape: vec![4],
+            offset: 0,
+        }];
+        let inputs = [vec![1.0f32; 4], vec![3.0f32; 4]];
+        let outs: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            members
+                .into_iter()
+                .zip(inputs.clone())
+                .map(|(m, d)| {
+                    let spec = spec.clone();
+                    scope.spawn(move || {
+                        let mut lane = RingLane::new(
+                            Box::new(m),
+                            Method::None,
+                            7,
+                            spec,
+                            false,
+                        );
+                        lane.complete(&[d], 1).unwrap()
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for o in outs {
+            assert!(o.iter().all(|&x| (x - 2.0).abs() < 1e-6));
+        }
+    }
+}

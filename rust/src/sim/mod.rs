@@ -176,6 +176,11 @@ pub fn sync_payload_bytes(params: f64, d_hidden: usize, method: &Method) -> u64 
 
 /// One inner training step's makespan from a DES run of the 1F1B pipeline
 /// over per-stage GPU resources + intra-cluster activation links.
+///
+/// The dependency structure comes from [`pipeline::execute_streams`] —
+/// the same oracle the schedule validator uses and the same streams the
+/// real stage-parallel executor runs, so the simulated bubble structure
+/// can never drift from the executed one.
 pub fn pipeline_step_secs(scale: &ScaleConfig, topo: &mut Topology) -> f64 {
     let m = scale.pp_stages;
     let u = scale.microbatches;
@@ -190,70 +195,40 @@ pub fn pipeline_step_secs(scale: &ScaleConfig, topo: &mut Topology) -> f64 {
     let act_bytes = (tok_micro * scale.d_hidden as f64 * 4.0) as u64;
 
     let streams = pipeline::one_f_one_b_schedule(m, u);
-    // Event-graph execution for cluster 0 (all clusters identical).
+    // Event-graph execution for cluster 0 (all clusters identical):
+    // each cell's completion time = GPU acquire after its dependencies
+    // land, with activation/grad transfers on the intra-cluster links.
     let c = 0usize;
-    let mut fwd_done = vec![vec![f64::NAN; u]; m];
-    let mut bwd_done = vec![vec![f64::NAN; u]; m];
-    let mut idx = vec![0usize; m];
-    let total: usize = streams.iter().map(|s| s.len()).sum();
-    let mut executed = 0;
-    let mut makespan: f64 = 0.0;
-    while executed < total {
-        let mut progressed = false;
-        for s in 0..m {
-            while idx[s] < streams[s].len() {
-                let cell = streams[s][idx[s]];
-                // Readiness: dependency completion time (NaN = not done).
-                let dep_ready = if cell.is_forward {
-                    if s == 0 {
-                        Some(0.0)
-                    } else {
-                        let t = fwd_done[s - 1][cell.micro];
-                        if t.is_nan() {
-                            None
-                        } else {
-                            // activation transfer s-1 -> s
-                            let (_, end) = topo
-                                .intra_link(c, s - 1)
-                                .transfer(t, act_bytes);
-                            Some(end)
-                        }
-                    }
-                } else if s == m - 1 {
-                    let t = fwd_done[s][cell.micro];
-                    if t.is_nan() {
-                        None
-                    } else {
-                        Some(t)
-                    }
-                } else {
-                    let tb = bwd_done[s + 1][cell.micro];
-                    let tf = fwd_done[s][cell.micro];
-                    if tb.is_nan() || tf.is_nan() {
-                        None
-                    } else {
-                        let (_, end) =
-                            topo.intra_link(c, s).transfer(tb, act_bytes);
-                        Some(end.max(tf))
-                    }
-                };
-                let Some(ready) = dep_ready else { break };
-                let dur = if cell.is_forward { fwd } else { bwd };
-                let (_, end) = topo
-                    .gpu(WorkerId { cluster: c, stage: s })
-                    .acquire(ready, dur);
-                if cell.is_forward {
-                    fwd_done[s][cell.micro] = end;
-                } else {
-                    bwd_done[s][cell.micro] = end;
+    let trace = pipeline::execute_streams(&streams, u, |cell, fdep, bdep| {
+        let s = cell.stage;
+        let ready = if cell.is_forward {
+            match fdep {
+                None => 0.0, // stage 0 reads the microbatch locally
+                Some(&t) => {
+                    // activation transfer s-1 -> s
+                    topo.intra_link(c, s - 1).transfer(t, act_bytes).1
                 }
-                makespan = makespan.max(end);
-                idx[s] += 1;
-                executed += 1;
-                progressed = true;
             }
+        } else {
+            let own_fwd = *fdep.expect("backward depends on its forward");
+            match bdep {
+                None => own_fwd, // last stage: loss grad is local
+                Some(&tb) => {
+                    // grad-activation transfer s+1 -> s
+                    topo.intra_link(c, s).transfer(tb, act_bytes).1.max(own_fwd)
+                }
+            }
+        };
+        let dur = if cell.is_forward { fwd } else { bwd };
+        topo.gpu(WorkerId { cluster: c, stage: s }).acquire(ready, dur).1
+    })
+    .expect("1F1B schedule is valid");
+
+    let mut makespan = 0.0f64;
+    for row in trace.fwd.iter().chain(trace.bwd.iter()) {
+        for &t in row {
+            makespan = makespan.max(t);
         }
-        assert!(progressed, "pipeline DES deadlock");
     }
     makespan
 }

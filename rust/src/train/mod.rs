@@ -3,14 +3,15 @@
 //! through the PJRT runtime on a small preset while metering wire bytes
 //! and modeling WAN time at the configured bandwidth.
 //!
-//! One-step-delay overlap (§2.3) is implemented as the paper's algebra:
-//! the pseudo-gradient δ^t starts its (compressed) AllReduce when outer
-//! step t ends, and the outer Nesterov update at the end of step t+1
-//! applies the *delayed* Δ^t.  With overlap disabled the same code path
-//! synchronizes immediately (the "w/o Overlap" ablation).
-//!
-//! Error feedback follows Algorithm 2: e^t = δ^{t-1} − Δ^{t-1}, added into
-//! the next pseudo-gradient before compression.
+//! One-step-delay overlap (§2.3) and Algorithm 2's error feedback
+//! (e^t = δ^{t-1} − Δ^{t-1}) are NOT implemented here: the trainer drives
+//! the shared outer-round engine ([`crate::rounds::RoundEngine`]) — the
+//! same state machine the threaded coordinator, the elastic workers, and
+//! the stage-parallel executor consume — plugging in an in-process
+//! [`GroupReducer`]-backed [`DeltaReducer`] that reduces every replica
+//! lane at once and feeds the Alg-3 adaptive rank/H controller.  With
+//! overlap disabled the engine synchronizes immediately (the "w/o
+//! Overlap" ablation).
 
 use crate::comm::{parameter_server_seconds, ring_allreduce_seconds};
 use crate::compress::adaptive::AdaptiveCompression;
@@ -19,6 +20,8 @@ use crate::config::{Algo, ExperimentConfig};
 use crate::data::{MarkovCorpus, ShardIter};
 use crate::metrics::{RunMetrics, StepRecord};
 use crate::optim::{AdamW, Nesterov};
+use crate::rounds::{movement, DeltaReducer, RoundEngine};
+use crate::runtime::manifest::ParamEntry;
 use crate::runtime::Runtime;
 use anyhow::{Context, Result};
 use std::sync::Arc;
@@ -59,7 +62,40 @@ struct Replica {
     params: Vec<f32>,
     inner: AdamW,
     shard: ShardIter,
+    /// Per-inner-step error feedback (CocktailSGD only; local-SGD error
+    /// feedback lives in the round engine).
     error: Vec<f32>,
+}
+
+/// [`DeltaReducer`] over the in-process [`GroupReducer`]: reduces all
+/// replica lanes at once, meters the payload, and lets the adaptive
+/// controller observe each completed mean.
+struct TrainReducer<'a> {
+    reducer: &'a mut GroupReducer,
+    spec: &'a [ParamEntry],
+    adaptive: &'a mut Option<AdaptiveCompression>,
+    /// H for the next round, when the controller adjusted it.
+    h_next: Option<usize>,
+    payload: u64,
+    ratio: f64,
+}
+
+impl DeltaReducer for TrainReducer<'_> {
+    fn begin(&mut self, _deltas: &[Vec<f32>], _round: u64) -> Result<()> {
+        Ok(())
+    }
+
+    fn complete(&mut self, deltas: &[Vec<f32>], round: u64) -> Result<Vec<f32>> {
+        let out = self.reducer.reduce(deltas, self.spec, round);
+        if let Some(ctl) = self.adaptive.as_mut() {
+            let (r_next, h_next) = ctl.observe(&out.avg, self.spec);
+            self.reducer.set_rank(r_next);
+            self.h_next = Some(h_next);
+        }
+        self.payload = out.payload_bytes;
+        self.ratio = out.ratio;
+        Ok(out.avg)
+    }
 }
 
 /// Map an experiment config onto a compression method (paper table of
@@ -104,6 +140,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, opts: &RunOpts) -> Result<TrainOut
         .unwrap_or_else(|| cfg.artifacts_dir.clone());
     let rt = Runtime::load(&dir)
         .with_context(|| format!("loading artifacts from {dir}"))?;
+    cfg.validate_with_manifest(&rt.manifest)?;
     rt.precompile(&["step_single", "eval_single"])?;
     run_with_runtime(cfg, opts, &rt)
 }
@@ -114,6 +151,13 @@ pub fn run_with_runtime(
     opts: &RunOpts,
     rt: &Runtime,
 ) -> Result<TrainOutcome> {
+    if cfg.parallel.pp > 1 {
+        return Err(anyhow::anyhow!(
+            "the single-process trainer runs the monolithic model; \
+             stage-parallel execution (parallel.pp > 1) runs under \
+             `dilocox coordinate`"
+        ));
+    }
     let man = &rt.manifest;
     let spec = man.param_specs["single"].clone();
     let n = man.param_count;
@@ -139,9 +183,23 @@ pub fn run_with_runtime(
         })
         .collect();
 
-    // Shared global anchor + outer optimizer (identical on all workers).
+    let is_local_sgd = matches!(cfg.algo, Algo::DiLoCoX | Algo::OpenDiLoCo);
+
+    // Global parameter track.  Local-SGD algorithms drive the shared
+    // outer-round engine (D lanes, one per replica); AllReduce/Cocktail
+    // keep a plain synchronized vector stepped by the inner optimizer —
+    // the engine (θ copy + momentum + D error lanes) is only built when
+    // a path actually consumes it.
+    let mut engine = is_local_sgd.then(|| {
+        RoundEngine::new(
+            theta0.clone(),
+            d,
+            Nesterov::new(n, cfg.train.outer_lr, cfg.train.outer_momentum),
+            cfg.train.overlap,
+            cfg.compression.error_feedback,
+        )
+    });
     let mut theta_g = theta0.clone();
-    let mut outer = Nesterov::new(n, cfg.train.outer_lr, cfg.train.outer_momentum);
 
     let method = method_for(cfg);
     let mut reducer = GroupReducer::new(method.clone(), cfg.train.seed);
@@ -171,13 +229,7 @@ pub fn run_with_runtime(
     let mut metrics = RunMetrics::new(cfg.algo.name());
     let mut eval_curve = Vec::new();
     let mut inner_steps_done = 0usize;
-
-    // One-step-delay state: the previous step's pseudo-gradients,
-    // "in flight" while the current step trains.
-    let mut in_flight: Option<Vec<Vec<f32>>> = None;
     let mut h_current = cfg.train.local_steps;
-
-    let is_local_sgd = matches!(cfg.algo, Algo::DiLoCoX | Algo::OpenDiLoCo);
 
     for t in 1..=cfg.train.outer_steps {
         let t0 = Instant::now();
@@ -245,105 +297,45 @@ pub fn run_with_runtime(
 
         // ---- synchronization phase -------------------------------------
         let (wire_bytes, comm_secs, ratio, rank_used) = if is_local_sgd {
-            inner_steps_done += h_current * 1; // counted per replica-parallel step
-            // Complete the in-flight reduction (overlap) or reduce now.
-            let deltas_prev = if cfg.train.overlap {
-                in_flight.take()
-            } else {
-                None
-            };
-
-            // Pseudo-gradients for THIS step: δ_i = (anchor_i − θ_i) + e_i.
-            let make_deltas = |replicas: &[Replica]| -> Vec<Vec<f32>> {
-                replicas
-                    .iter()
-                    .zip(&anchors)
-                    .map(|(rep, anchor)| {
-                        let mut dlt = vec![0.0f32; n];
-                        for i in 0..n {
-                            dlt[i] = (anchor[i] - rep.params[i]) + rep.error[i];
-                        }
-                        dlt
-                    })
-                    .collect()
-            };
-
+            inner_steps_done += h_current;
             let rank_used = adaptive
                 .as_ref()
                 .map(|a| a.current().0)
                 .unwrap_or(cfg.compression.rank);
 
-            if cfg.train.overlap {
-                // Algorithm 2 ordering: finish the in-flight reduction of
-                // δ^{t-1} first, refresh the error buffers e^t, THEN form
-                // δ^t against the pre-update anchor, and finally apply the
-                // delayed outer update.
-                let mut stats = (0u64, 0.0f64, 1.0f64);
-                let mut delayed_avg: Option<Vec<f32>> = None;
-                if let Some(prev) = deltas_prev {
-                    let out = reducer.reduce(&prev, &spec, t as u64);
-                    for (rep, dp) in replicas.iter_mut().zip(&prev) {
-                        for i in 0..n {
-                            rep.error[i] = if cfg.compression.error_feedback {
-                                dp[i] - out.avg[i]
-                            } else {
-                                0.0
-                            };
-                        }
-                    }
-                    if let Some(ctl) = adaptive.as_mut() {
-                        let (r_next, h_next) = ctl.observe(&out.avg, &spec);
-                        reducer.set_rank(r_next);
-                        h_current = h_next;
-                    }
-                    let payload = out.payload_bytes;
-                    stats = (
-                        payload,
-                        comm_seconds(&method, payload, cfg),
-                        out.ratio,
-                    );
-                    delayed_avg = Some(out.avg);
-                }
-                // δ^t = (θ^{t-1}_anchor − θ^t_i) + e^t.
-                let deltas_now = make_deltas(&replicas);
-                in_flight = Some(deltas_now);
-                // Delayed outer update: θ^t = OuterOpt(θ^{t-1}, Δ^{t-1}).
-                if let Some(avg) = delayed_avg {
-                    outer.step(&mut theta_g, &avg);
-                    for rep in replicas.iter_mut() {
-                        rep.params.copy_from_slice(&theta_g);
-                    }
-                }
-                (stats.0, stats.1, stats.2, rank_used)
-            } else {
-                // Synchronous (the "w/o Overlap" ablation + OpenDiLoCo).
-                let deltas = make_deltas(&replicas);
-                let out = reducer.reduce(&deltas, &spec, t as u64);
-                for (rep, dp) in replicas.iter_mut().zip(&deltas) {
-                    for i in 0..n {
-                        rep.error[i] = if cfg.compression.error_feedback {
-                            dp[i] - out.avg[i]
-                        } else {
-                            0.0
-                        };
-                    }
-                }
-                outer.step(&mut theta_g, &out.avg);
-                for rep in replicas.iter_mut() {
-                    rep.params.copy_from_slice(&theta_g);
-                }
-                if let Some(ctl) = adaptive.as_mut() {
-                    let (r_next, h_next) = ctl.observe(&out.avg, &spec);
-                    reducer.set_rank(r_next);
-                    h_current = h_next;
-                }
-                (
-                    out.payload_bytes,
-                    comm_seconds(&method, out.payload_bytes, cfg),
-                    out.ratio,
-                    rank_used,
-                )
+            // This round's raw movement per replica; the engine owns the
+            // error feedback, the overlap join ordering, and the outer
+            // update (Algorithm 2 — see crate::rounds).
+            let movements: Vec<Vec<f32>> = replicas
+                .iter()
+                .zip(&anchors)
+                .map(|(rep, anchor)| movement(anchor, &rep.params))
+                .collect();
+            let mut red = TrainReducer {
+                reducer: &mut reducer,
+                spec: &spec,
+                adaptive: &mut adaptive,
+                h_next: None,
+                payload: 0,
+                ratio: 1.0,
+            };
+            let eng = engine.as_mut().expect("local-SGD engine");
+            let applied = eng.finish_round(movements, t as u64, &mut red)?;
+            if let Some(h) = red.h_next {
+                h_current = h;
             }
+            let (payload, ratio) = (red.payload, red.ratio);
+            if applied.is_some() {
+                for rep in replicas.iter_mut() {
+                    rep.params.copy_from_slice(eng.theta());
+                }
+            }
+            let comm = if payload > 0 {
+                comm_seconds(&method, payload, cfg)
+            } else {
+                0.0 // first overlap round: nothing was in flight
+            };
+            (payload, comm, ratio, rank_used)
         } else {
             // AllReduce/Cocktail synced every inner step already; account
             // the per-step payloads for this block of h_current steps.
@@ -400,7 +392,10 @@ pub fn run_with_runtime(
         });
 
         if opts.eval_every > 0 && t % opts.eval_every == 0 {
-            let el = eval(&theta_g)?;
+            let el = eval(match &engine {
+                Some(eng) => eng.theta(),
+                None => &theta_g,
+            })?;
             eval_curve.push((t, el));
             if !opts.quiet && t % opts.log_every.max(1) == 0 {
                 crate::info!(
@@ -416,16 +411,29 @@ pub fn run_with_runtime(
 
     // Drain a trailing in-flight reduction so the final params include
     // every replica's last contribution (flush at shutdown).
-    if let Some(prev) = in_flight.take() {
-        let out = reducer.reduce(&prev, &spec, (cfg.train.outer_steps + 1) as u64);
-        outer.step(&mut theta_g, &out.avg);
+    if let Some(eng) = engine.as_mut() {
+        if eng.has_in_flight() {
+            let mut red = TrainReducer {
+                reducer: &mut reducer,
+                spec: &spec,
+                adaptive: &mut adaptive,
+                h_next: None,
+                payload: 0,
+                ratio: 1.0,
+            };
+            eng.drain(&mut red)?;
+        }
     }
 
-    let final_eval = eval(&theta_g)?;
+    let final_params: Vec<f32> = match engine {
+        Some(eng) => eng.theta().to_vec(),
+        None => theta_g,
+    };
+    let final_eval = eval(&final_params)?;
     metrics.final_eval_loss = Some(final_eval);
     eval_curve.push((cfg.train.outer_steps + 1, final_eval));
 
-    Ok(TrainOutcome { metrics, params: theta_g, eval_curve })
+    Ok(TrainOutcome { metrics, params: final_params, eval_curve })
 }
 
 #[cfg(test)]

@@ -22,6 +22,7 @@
 use crate::config::{ExperimentConfig, FaultConfig, TransportConfig};
 use crate::data::{MarkovCorpus, ShardIter};
 use crate::optim::{AdamW, Nesterov};
+use crate::rounds::{movement, DeltaReducer, RoundEngine};
 use crate::runtime::Runtime;
 use crate::transport::faulty::{FaultPlan, FaultyRing};
 use crate::transport::frame::{read_msg, write_msg, Msg};
@@ -400,6 +401,28 @@ fn build_trainer(opts: &WorkerOpts) -> Result<Box<dyn LocalTrainer>> {
     })
 }
 
+/// Single-lane [`DeltaReducer`] over an already-formed ring: raw fp32
+/// pseudo-gradient mean, metering actual ring bytes (the elastic wire
+/// ships uncompressed; compression lives in the coordinator paths).
+struct RingMeanReducer<'a> {
+    ring: &'a mut dyn RingTransport,
+    wire: u64,
+}
+
+impl DeltaReducer for RingMeanReducer<'_> {
+    fn begin(&mut self, _deltas: &[Vec<f32>], _round: u64) -> Result<()> {
+        Ok(())
+    }
+
+    fn complete(&mut self, deltas: &[Vec<f32>], _round: u64) -> Result<Vec<f32>> {
+        let mut d = deltas[0].clone();
+        let before = self.ring.meter().total();
+        self.ring.allreduce_mean(&mut d)?;
+        self.wire += self.ring.meter().total() - before;
+        Ok(d)
+    }
+}
+
 /// Block on the control socket until the coordinator commits a membership
 /// epoch newer than `after_epoch`; acks every Prepare seen on the way.
 fn wait_for_commit(
@@ -453,8 +476,16 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
 
     let mut trainer = build_trainer(opts)?;
     let dim = trainer.dim();
-    let mut theta_g = trainer.params().to_vec();
-    let mut outer = Nesterov::new(dim, opts.outer_lr, opts.outer_momentum);
+    // Outer rounds run through the shared engine (sync mode): θ_g moves
+    // only by outer updates, and a failed collective leaves it untouched
+    // so the next epoch resumes from the last committed state.
+    let mut engine = RoundEngine::new(
+        trainer.params().to_vec(),
+        1,
+        Nesterov::new(dim, opts.outer_lr, opts.outer_momentum),
+        false,
+        false,
+    );
     let mut applied: usize = 0;
     let mut wire_total = 0u64;
     let mut epoch = 0u32;
@@ -487,15 +518,17 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
 
         // Consensus resync: survivors re-agree on θ_g (identical at epoch
         // 1; a true mean after churn) and the outer momentum restarts.
-        if ring.allreduce_mean(&mut theta_g).is_err() {
+        let mut theta = engine.theta().to_vec();
+        if ring.allreduce_mean(&mut theta).is_err() {
             let _ = write_msg(
                 &mut coord,
                 &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
             );
             continue 'epochs;
         }
-        outer = Nesterov::new(dim, opts.outer_lr, opts.outer_momentum);
-        trainer.set_params(&theta_g);
+        engine.set_theta(&theta);
+        engine.reset_outer();
+        trainer.set_params(engine.theta());
 
         let mut round = resume_round as usize;
         while round <= opts.rounds {
@@ -504,22 +537,17 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
             // drops and the coordinator sees a dead member.
             ring.begin_round(round)?;
             let loss = trainer.local_round(opts.local_steps)?;
-            let mut delta: Vec<f32> = theta_g
-                .iter()
-                .zip(trainer.params())
-                .map(|(g, p)| g - p)
-                .collect();
-            let before = ring.meter().total();
-            if ring.allreduce_mean(&mut delta).is_err() {
+            let mv = movement(engine.theta(), trainer.params());
+            let mut red = RingMeanReducer { ring: ring.as_mut(), wire: 0 };
+            if engine.finish_round(vec![mv], round as u64, &mut red).is_err() {
                 let _ = write_msg(
                     &mut coord,
                     &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
                 );
                 continue 'epochs;
             }
-            wire_total += ring.meter().total() - before;
-            outer.step(&mut theta_g, &delta);
-            trainer.set_params(&theta_g);
+            wire_total += red.wire;
+            trainer.set_params(engine.theta());
             applied = round;
             let _ = write_msg(&mut coord, &Msg::Heartbeat { round: round as u32, loss });
             round += 1;
@@ -534,7 +562,7 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
             rounds: applied as u32,
             wire_bytes: wire_total,
             final_loss,
-            params: params_digest(&theta_g),
+            params: params_digest(engine.theta()),
         },
     )?;
     // Park until Shutdown (or coordinator EOF).

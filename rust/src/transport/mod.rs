@@ -175,6 +175,44 @@ pub trait RingTransport: Send {
     }
 }
 
+/// Boxed transports are transports: delegate every method (including the
+/// provided ones — a wrapper like `faulty` may override `begin_round`) so
+/// composition layers such as the stage-parallel executor can wrap
+/// already-boxed backends.
+impl<T: RingTransport + ?Sized> RingTransport for Box<T> {
+    fn rank(&self) -> usize {
+        (**self).rank()
+    }
+
+    fn size(&self) -> usize {
+        (**self).size()
+    }
+
+    fn send_next(&mut self, chunk: &[f32]) -> Result<()> {
+        (**self).send_next(chunk)
+    }
+
+    fn recv_prev(&mut self) -> Result<Vec<f32>> {
+        (**self).recv_prev()
+    }
+
+    fn meter(&self) -> &ByteMeter {
+        (**self).meter()
+    }
+
+    fn begin_round(&mut self, round: usize) -> Result<()> {
+        (**self).begin_round(round)
+    }
+
+    fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        (**self).allreduce_sum(buf)
+    }
+
+    fn allreduce_mean(&mut self, buf: &mut [f32]) -> Result<()> {
+        (**self).allreduce_mean(buf)
+    }
+}
+
 /// Which wire the coordinator should run the collective over.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TransportBackend {
