@@ -136,4 +136,72 @@ fn main() {
                 * 125.0
         )
     );
+
+    // ---- measured vs modeled stage times (DES calibration hook) ----------
+    // The stage-parallel executor now measures real per-stage wall times
+    // per inner step (StageRoundReport::step_secs).  Here we drive a small
+    // artifact-free pipeline and print the measured numbers next to the
+    // modeled per-stage 1F1B step the DES assumes for the simulated scale
+    // — the two sides of the calibration loop.  (The measured column is a
+    // toy CPU chain, not an A800: compare *shapes* — per-stage balance and
+    // straggler spread — not magnitudes.)
+    measured_stage_times();
+}
+
+fn measured_stage_times() {
+    use dilocox::compress::Method;
+    use dilocox::pipeline::exec::{
+        local_stage_rings, run_pipeline, PipelineRunOpts, SyntheticPipeline,
+    };
+
+    let (dp, stages, micros, dim) = (2usize, 4usize, 4usize, 4096usize);
+    let wl = SyntheticPipeline::new(stages, micros, dim, 7);
+    let opts = PipelineRunOpts {
+        rounds: 3,
+        local_steps: 8,
+        inner_lr: 0.05,
+        weight_decay: 0.0,
+        outer_lr: 0.7,
+        outer_momentum: 0.6,
+        overlap: false,
+        error_feedback: false,
+        method: Method::None,
+        seed: 7,
+    };
+    let out = match run_pipeline(&wl, dp, local_stage_rings(dp, stages), &opts) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("measured stage-time run failed: {e:#}");
+            return;
+        }
+    };
+    let scale = ScaleConfig::qwen_107b();
+    let mut topo =
+        dilocox::netsim::Topology::new(&scale.net, scale.pp_stages);
+    let modeled_step = sim::pipeline_step_secs(&scale, &mut topo);
+    println!(
+        "Measured per-stage step times (synthetic M={stages} executor run) \
+         vs modeled 107B 1F1B step {}:",
+        fmt_secs(modeled_step)
+    );
+    let mut t = Table::new(&[
+        "stage",
+        "measured mean/step",
+        "measured max",
+        "samples",
+    ]);
+    for s in out.stage_time_summary() {
+        t.row(&[
+            s.stage.to_string(),
+            format!("{:.3} ms", 1e3 * s.mean_step_secs),
+            format!("{:.3} ms", 1e3 * s.max_step_secs),
+            s.samples.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "These measured step_secs feed back into the DES calibration \
+         (ROADMAP: replace the FLOP-model stage time with measured values \
+         from real runs)."
+    );
 }

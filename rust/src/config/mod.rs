@@ -141,6 +141,15 @@ pub struct TransportConfig {
     pub ring_timeout_ms: u64,
     /// Dial/accept deadline during ring formation, ms.
     pub connect_timeout_ms: u64,
+    /// Deterministic listener layout for the stage-parallel TCP fleet
+    /// (`pp > 1` with the tcp backend): process (cluster c, stage s)
+    /// binds its per-stage ring listener at `base + 2·(c·pp + s)` and its
+    /// stage-link listener one above (see
+    /// [`crate::transport::tcp::stage_ports`]).  0 (the default) =
+    /// ephemeral OS-assigned ports, advertised via `StageHello`.
+    /// Validation: when set, the base must be ≥ 1024 and the whole
+    /// `2·dp·pp` block must fit below 65536.
+    pub stage_listen_base_port: u16,
 }
 
 impl Default for TransportConfig {
@@ -149,6 +158,7 @@ impl Default for TransportConfig {
             backend: TransportBackend::Local,
             ring_timeout_ms: 5000,
             connect_timeout_ms: 5000,
+            stage_listen_base_port: 0,
         }
     }
 }
@@ -167,6 +177,9 @@ pub struct FaultConfig {
     /// Kill `kill_rank` at the start of this round (0 = never).
     pub kill_round: usize,
     pub kill_rank: usize,
+    /// Stage-parallel fleets only: which stage process of `kill_rank`
+    /// dies at `kill_round` (ignored when `pp = 1`; must be < pp).
+    pub kill_stage: usize,
     /// Fixed extra send latency for `straggler_rank` (0 ms = off).
     pub straggler_rank: usize,
     pub straggler_ms: u64,
@@ -181,6 +194,7 @@ impl Default for FaultConfig {
             delay_ms: 0,
             kill_round: 0,
             kill_rank: 0,
+            kill_stage: 0,
             straggler_rank: 0,
             straggler_ms: 0,
         }
@@ -359,6 +373,17 @@ impl ExperimentConfig {
         {
             cfg.transport.connect_timeout_ms = x as u64;
         }
+        if let Some(x) = v
+            .path("transport.stage_listen_base_port")
+            .and_then(|j| j.as_usize())
+        {
+            if x > u16::MAX as usize {
+                return Err(anyhow!(
+                    "transport.stage_listen_base_port {x} exceeds 65535"
+                ));
+            }
+            cfg.transport.stage_listen_base_port = x as u16;
+        }
         set_bool!("faults.enabled", cfg.faults.enabled);
         if let Some(x) = v.path("faults.seed").and_then(|j| j.as_usize()) {
             cfg.faults.seed = x as u64;
@@ -371,6 +396,7 @@ impl ExperimentConfig {
         }
         set_usize!("faults.kill_round", cfg.faults.kill_round);
         set_usize!("faults.kill_rank", cfg.faults.kill_rank);
+        set_usize!("faults.kill_stage", cfg.faults.kill_stage);
         set_usize!("faults.straggler_rank", cfg.faults.straggler_rank);
         if let Some(x) = v.path("faults.straggler_ms").and_then(|j| j.as_usize())
         {
@@ -413,12 +439,26 @@ impl ExperimentConfig {
         if !(0.0..=1.0).contains(&self.faults.delay_prob) {
             return Err(anyhow!("faults.delay_prob must be in [0, 1]"));
         }
-        if self.transport.backend == TransportBackend::Tcp && self.parallel.pp > 1 {
-            return Err(anyhow!(
-                "stage-parallel execution (parallel.pp > 1) currently runs \
-                 over the local threaded transport; use [transport] backend \
-                 = \"local\" or set parallel.pp = 1 for the tcp worker fleet"
-            ));
+        // Stage/ring address layout: when a deterministic listener base is
+        // set, the whole 2·dp·pp port block must be bindable.
+        let base = self.transport.stage_listen_base_port;
+        if base > 0 {
+            if base < 1024 {
+                return Err(anyhow!(
+                    "transport.stage_listen_base_port {base} is in the \
+                     privileged range; use a base >= 1024 (or 0 for \
+                     ephemeral ports)"
+                ));
+            }
+            let block = 2 * (self.parallel.dp as u64) * (self.parallel.pp as u64);
+            if base as u64 + block > 65536 {
+                return Err(anyhow!(
+                    "transport.stage_listen_base_port {base} + 2*dp*pp = \
+                     {} ports overflows the port space; lower the base or \
+                     the fleet size",
+                    base as u64 + block
+                ));
+            }
         }
         if self.faults.enabled
             && self.faults.kill_round > 0
@@ -428,6 +468,16 @@ impl ExperimentConfig {
                 "faults.kill_rank {} out of range for dp={}",
                 self.faults.kill_rank,
                 self.parallel.dp
+            ));
+        }
+        if self.faults.enabled
+            && self.faults.kill_round > 0
+            && self.faults.kill_stage >= self.parallel.pp
+        {
+            return Err(anyhow!(
+                "faults.kill_stage {} out of range for pp={}",
+                self.faults.kill_stage,
+                self.parallel.pp
             ));
         }
         Ok(())
@@ -608,10 +658,60 @@ microbatches = 3
         bad.parallel.microbatches = 0;
         assert!(bad.validate().is_err());
 
+        // PP over the TCP worker fleet is a supported composition now —
+        // one OS process per (cluster, stage).
         let mut tcp_pp = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
         tcp_pp.parallel.pp = 2;
         tcp_pp.transport.backend = TransportBackend::Tcp;
-        assert!(tcp_pp.validate().is_err());
+        tcp_pp.validate().unwrap();
+    }
+
+    #[test]
+    fn stage_listen_base_port_layout_validation() {
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.parallel.dp = 2;
+        cfg.parallel.pp = 2;
+        cfg.transport.stage_listen_base_port = 42000;
+        cfg.validate().unwrap();
+
+        // Privileged range rejected.
+        cfg.transport.stage_listen_base_port = 80;
+        assert!(cfg.validate().is_err());
+
+        // Port block overflowing 65535 rejected.
+        cfg.transport.stage_listen_base_port = 65530;
+        assert!(cfg.validate().is_err());
+
+        // 0 = ephemeral, always fine.
+        cfg.transport.stage_listen_base_port = 0;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn kill_stage_parses_and_validates() {
+        let src = r#"
+algo = "dilocox"
+[model]
+preset = "tiny"
+[parallel]
+dp = 2
+pp = 2
+[transport]
+stage_listen_base_port = 43000
+[faults]
+enabled = true
+kill_round = 2
+kill_rank = 1
+kill_stage = 1
+"#;
+        let v = toml::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.faults.kill_stage, 1);
+        assert_eq!(cfg.transport.stage_listen_base_port, 43000);
+
+        let mut bad = cfg.clone();
+        bad.faults.kill_stage = 5; // pp = 2
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -21,6 +21,25 @@
 //! compression is the AllReduce-compatible [`crate::rounds::WireCompressor`]
 //! (quantize = one ring pass; Low-Rank ∘ Quantize = the PowerSGD
 //! two-pass algebra with round-seeded shared bases — no parameter server).
+//!
+//! Invariants a new contributor should know before touching this module:
+//!
+//! * **Overlap join ordering** — a round's outer update must join the
+//!   *previous* round's collective before forming this round's delta
+//!   against this round's anchor; the engine owns that ordering and the
+//!   coordinator must never reduce a delta outside `finish_round` /
+//!   `drain` (the trailing drain at shutdown is part of the contract).
+//! * **Wire accounting** — `total_wire_bytes` sums compressed sync
+//!   payloads per worker (and per stage lane with `pp > 1`, where the
+//!   per-stage payloads add up to the same fp32 total as the flat
+//!   vector), so PP-on/PP-off and local/TCP ledgers compare directly.
+//! * **Final-params agreement** — the ring algebra is symmetric, so all
+//!   workers must land on identical parameters; both coordinators verify
+//!   this instead of trusting it.
+//!
+//! The multi-*process* deployment of the same structure (TCP transport,
+//! elastic membership, one OS process per cluster — or per (cluster,
+//! stage) with `pp > 1`) lives in [`crate::transport::elastic`].
 
 use crate::comm::ring::build_ring;
 use crate::compress::Method;
@@ -29,7 +48,7 @@ use crate::data::{MarkovCorpus, ShardIter};
 use crate::optim::{AdamW, Nesterov};
 use crate::pipeline::exec::{
     local_stage_rings, run_pipeline, PipelineRunOpts, PipelineWorkload,
-    StageCompute,
+    StageCompute, StageTimeSummary,
 };
 use crate::rounds::{movement, RingLane, RoundEngine};
 use crate::runtime::manifest::ParamEntry;
@@ -58,6 +77,9 @@ pub struct CoordinatorOutcome {
     /// overlap drains) — the same accounting in the single-stage and the
     /// stage-parallel arm, so PP-on/PP-off ledgers compare directly.
     pub total_wire_bytes: u64,
+    /// Measured per-stage wall times (empty when `pp = 1`); feeds the run
+    /// report JSON and the DES calibration.
+    pub stage_times: Vec<StageTimeSummary>,
 }
 
 /// Run the full threaded coordinator: D worker threads + leader
@@ -123,6 +145,7 @@ pub fn run_threaded(cfg: &ExperimentConfig, artifacts_dir: &str) -> Result<Coord
         final_eval: *eval0,
         final_params: p0.clone(),
         total_wire_bytes: finals.iter().map(|(_, _, w)| w).sum(),
+        stage_times: Vec::new(),
     })
 }
 
@@ -270,11 +293,13 @@ pub fn run_threaded_pp(
             });
         }
     }
+    let stage_times = out.stage_time_summary();
     Ok(CoordinatorOutcome {
         reports,
         final_eval: out.final_eval,
         final_params: out.final_params,
         total_wire_bytes: out.total_wire_bytes,
+        stage_times,
     })
 }
 

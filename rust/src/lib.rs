@@ -25,11 +25,15 @@
 //! * L3 transport: the collective wire behind the
 //!   [`transport::RingTransport`] trait — `local` (in-memory mpsc ring,
 //!   worker threads), `tcp` (length-delimited frames over loopback TCP,
-//!   one `dilocox worker` OS process per cluster, spawned and supervised
+//!   one `dilocox worker` OS process per cluster — or per (cluster,
+//!   stage) with `pp > 1`, where the 1F1B dataflow crosses processes as
+//!   Acts/Grads frames over [`transport::tcp::TcpStageLink`] and each
+//!   stage joins its own cross-cluster DP ring — spawned and supervised
 //!   by the elastic coordinator with 2PC membership epochs and ring
 //!   recovery), and `faulty` (deterministic seeded delay/straggler/kill
 //!   injection wrapping either wire).  See [`transport`] for the frame
-//!   format and the membership epoch protocol.
+//!   format and the membership epoch protocol, and README.md / CONFIG.md
+//!   for the operator-facing documentation.
 //! * L2/L1 (python/, build-time only): jax stage programs + pallas kernels,
 //!   AOT-lowered to `artifacts/<preset>/*.hlo.txt` consumed by [`runtime`]
 //!   — monolithic `step_single`/`eval_single` plus the per-stage

@@ -3,8 +3,11 @@
 //! Subcommands:
 //!   train        run a real-numerics experiment (single-process trainer)
 //!   coordinate   run the coordinator (threaded local ring, or elastic
-//!                multi-process TCP ring with --transport tcp)
-//!   worker       one elastic TCP ring worker (spawned by `coordinate`)
+//!                multi-process TCP ring with --transport tcp; with
+//!                --pp > 1 the TCP fleet runs one OS process per
+//!                (cluster, stage) with per-stage rings)
+//!   worker       one elastic TCP worker process (spawned by `coordinate`;
+//!                --stage/--stages make it a stage-fleet member)
 //!   simulate     DES throughput at paper scale (Fig 4 / Table 1)
 //!   analyze      §2.4.1 communication-overhead analysis
 //!   inspect      print an artifact bundle's manifest summary
@@ -15,15 +18,18 @@
 
 use dilocox::config::{Algo, ExperimentConfig};
 use dilocox::metrics::Table;
+use dilocox::pipeline::exec::{json_num_or_null, stage_times_json};
 use dilocox::report;
 use dilocox::sim;
 use dilocox::train::{run_experiment, RunOpts};
 use dilocox::transport::elastic::{
-    run_elastic, run_worker, ElasticConfig, SpawnMode, WorkerOpts, Workload,
+    run_elastic, run_stage_worker, run_worker, ElasticConfig, ElasticOutcome,
+    SpawnMode, StageWorkerOpts, WorkerOpts, Workload,
 };
 use dilocox::transport::faulty::FaultPlan;
 use dilocox::transport::TransportBackend;
 use dilocox::util::cli::CliSpec;
+use dilocox::util::json::{obj, Json};
 use dilocox::util::{fmt_bytes, fmt_secs};
 
 fn main() {
@@ -106,7 +112,7 @@ fn train_spec(name: &str, about: &str) -> CliSpec {
         .opt("outer-steps", "", "outer steps T")
         .opt("local-steps", "", "local steps H₁")
         .opt("dp", "", "data-parallel replicas D")
-        .opt("pp", "", "pipeline stages M (coordinate only: stage-parallel 1F1B)")
+        .opt("pp", "", "pipeline stages M (coordinate: stage-parallel 1F1B, local threads or tcp processes)")
         .opt("micros", "", "in-flight microbatches U (with --pp > 1)")
         .opt("artifacts", "", "artifact dir override")
         .opt("csv", "", "write per-step metrics CSV here")
@@ -169,7 +175,9 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
     .opt("dim", "64", "synthetic workload dimension (tcp fallback)")
     .opt("kill-round", "", "inject: kill --kill-rank at this round (tcp)")
     .opt("kill-rank", "1", "inject: rank to kill at --kill-round (tcp)")
-    .flag("synthetic", "tcp: force the synthetic quadratic workload");
+    .opt("kill-stage", "0", "inject: stage process to kill (tcp, --pp > 1)")
+    .opt("report", "", "write a run report JSON (incl. stage wall times) here")
+    .flag("synthetic", "tcp: force the synthetic workload (affine chain with --pp > 1)");
     let args = match spec.parse(argv) {
         Ok(a) => a,
         Err(e) => {
@@ -209,6 +217,13 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
                 return 2;
             }
         };
+        cfg.faults.kill_stage = match args.get_usize("kill-stage") {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
     }
     // Re-validate: the transport/fault overrides above landed after
     // build_cfg's validation pass (e.g. --kill-rank out of range for dp).
@@ -224,11 +239,56 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
     }
     match cfg.transport.backend {
         TransportBackend::Tcp => cmd_coordinate_tcp(&cfg, &args),
-        TransportBackend::Local => cmd_coordinate_local(&cfg),
+        TransportBackend::Local => cmd_coordinate_local(&cfg, &args),
     }
 }
 
-fn cmd_coordinate_local(cfg: &ExperimentConfig) -> i32 {
+/// Write a run report JSON (pretty-printed) to `path`.
+fn write_report(path: &str, json: &Json) -> Result<(), String> {
+    std::fs::write(path, format!("{}\n", json.to_string_pretty()))
+        .map_err(|e| format!("writing report {path}: {e}"))
+}
+
+fn elastic_report_json(cfg: &ExperimentConfig, out: &ElasticOutcome) -> Json {
+    let rounds = Json::Arr(
+        out.mean_loss_per_round()
+            .into_iter()
+            .map(|(r, mean, n)| {
+                obj(vec![
+                    ("round", Json::Num(r as f64)),
+                    ("mean_loss", json_num_or_null(mean as f64)),
+                    ("workers", Json::Num(n as f64)),
+                ])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("mode", Json::Str("elastic_tcp".to_string())),
+        ("algo", Json::Str(cfg.algo.name().to_string())),
+        ("dp", Json::Num(cfg.parallel.dp as f64)),
+        ("pp", Json::Num(cfg.parallel.pp as f64)),
+        ("epochs", Json::Num(out.epochs as f64)),
+        (
+            "survivors",
+            Json::Arr(
+                out.survivors
+                    .iter()
+                    .map(|s| Json::Num(*s as f64))
+                    .collect(),
+            ),
+        ),
+        // NaN (e.g. a skipped assembled eval) must not reach the writer —
+        // a bare NaN literal is invalid JSON.
+        ("final_eval", json_num_or_null(out.final_loss as f64)),
+        ("total_wire_bytes", Json::Num(out.total_wire_bytes as f64)),
+        ("rounds", rounds),
+    ])
+}
+
+fn cmd_coordinate_local(
+    cfg: &ExperimentConfig,
+    args: &dilocox::util::cli::Args,
+) -> i32 {
     let dir = cfg.artifacts_dir.clone();
     match dilocox::coordinator::run_threaded(cfg, &dir) {
         Ok(out) => {
@@ -251,6 +311,56 @@ fn cmd_coordinate_local(cfg: &ExperimentConfig) -> i32 {
                 out.final_eval,
                 fmt_bytes(out.total_wire_bytes)
             );
+            for t in &out.stage_times {
+                println!(
+                    "stage {}: mean {:.2} ms/step, max {:.2} ms ({} samples)",
+                    t.stage,
+                    1e3 * t.mean_step_secs,
+                    1e3 * t.max_step_secs,
+                    t.samples
+                );
+            }
+            if !args.get("report").is_empty() {
+                let rounds_json = Json::Arr(
+                    (1..=rounds)
+                        .map(|r| {
+                            let ls: Vec<f32> = out
+                                .reports
+                                .iter()
+                                .filter(|x| x.round == r && !x.mean_loss.is_nan())
+                                .map(|x| x.mean_loss)
+                                .collect();
+                            obj(vec![
+                                ("round", Json::Num(r as f64)),
+                                (
+                                    "mean_loss",
+                                    json_num_or_null(
+                                        dilocox::util::mean(&ls) as f64
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                );
+                let j = obj(vec![
+                    ("mode", Json::Str("threaded_local".to_string())),
+                    ("algo", Json::Str(cfg.algo.name().to_string())),
+                    ("dp", Json::Num(cfg.parallel.dp as f64)),
+                    ("pp", Json::Num(cfg.parallel.pp as f64)),
+                    ("final_eval", json_num_or_null(out.final_eval as f64)),
+                    (
+                        "total_wire_bytes",
+                        Json::Num(out.total_wire_bytes as f64),
+                    ),
+                    ("rounds", rounds_json),
+                    ("stage_times", stage_times_json(&out.stage_times)),
+                ]);
+                if let Err(e) = write_report(args.get("report"), &j) {
+                    eprintln!("{e}");
+                    return 1;
+                }
+                println!("wrote {}", args.get("report"));
+            }
             0
         }
         Err(e) => {
@@ -260,16 +370,22 @@ fn cmd_coordinate_local(cfg: &ExperimentConfig) -> i32 {
     }
 }
 
-/// Elastic multi-process path: spawn one `dilocox worker` per cluster
-/// over loopback TCP; survives injected/real worker death by re-forming
-/// the ring with the survivors.
+/// Elastic multi-process path: spawn one `dilocox worker` per cluster —
+/// or one per (cluster, stage) with `--pp > 1` — over loopback TCP;
+/// survives injected/real process death by re-forming the (per-stage)
+/// rings with the survivors.
 fn cmd_coordinate_tcp(cfg: &ExperimentConfig, args: &dilocox::util::cli::Args) -> i32 {
     let have_artifacts = std::path::Path::new(&cfg.artifacts_dir).exists();
     let workload = if args.flag("synthetic") || !have_artifacts {
         if !have_artifacts && !args.flag("synthetic") {
             eprintln!(
-                "artifacts {} missing — running the synthetic quadratic workload",
-                cfg.artifacts_dir
+                "artifacts {} missing — running the synthetic {} workload",
+                cfg.artifacts_dir,
+                if cfg.parallel.pp > 1 {
+                    "multi-stage affine chain"
+                } else {
+                    "quadratic"
+                }
             );
         }
         let dim = match args.get_usize("dim") {
@@ -281,17 +397,43 @@ fn cmd_coordinate_tcp(cfg: &ExperimentConfig, args: &dilocox::util::cli::Args) -
         };
         Workload::Quadratic { dim }
     } else {
+        // Stage fleets must match the bundle's exported stage count —
+        // fail at load time with an actionable message, not mid-run.
+        if cfg.parallel.pp > 1 {
+            match dilocox::runtime::Manifest::load(&cfg.artifacts_dir) {
+                Ok(man) => {
+                    if let Err(e) = cfg.validate_with_manifest(&man) {
+                        eprintln!("{e:#}");
+                        return 2;
+                    }
+                }
+                Err(e) => {
+                    eprintln!("loading {}: {e:#}", cfg.artifacts_dir);
+                    return 1;
+                }
+            }
+        }
         Workload::Runtime { artifacts_dir: cfg.artifacts_dir.clone() }
     };
     let mut ecfg = ElasticConfig::from_experiment(cfg, workload);
     if matches!(ecfg.workload, Workload::Quadratic { .. }) {
-        // The transformer-tuned learning rates barely move the synthetic
-        // quadratic; use the quadratic-tuned defaults (same values as
-        // ElasticConfig::quadratic) so the demo shows decisive convergence.
-        ecfg.inner_lr = 0.25;
-        ecfg.weight_decay = 0.0;
-        ecfg.outer_lr = 0.5;
-        ecfg.outer_momentum = 0.6;
+        if cfg.parallel.pp > 1 {
+            // SyntheticPipeline-tuned defaults (same as the executor
+            // tests): AdamW inner steps on the affine chain.
+            ecfg.inner_lr = 0.05;
+            ecfg.weight_decay = 0.0;
+            ecfg.outer_lr = 0.7;
+            ecfg.outer_momentum = 0.6;
+        } else {
+            // The transformer-tuned learning rates barely move the
+            // synthetic quadratic; use the quadratic-tuned defaults (same
+            // values as ElasticConfig::quadratic) so the demo shows
+            // decisive convergence.
+            ecfg.inner_lr = 0.25;
+            ecfg.weight_decay = 0.0;
+            ecfg.outer_lr = 0.5;
+            ecfg.outer_momentum = 0.6;
+        }
     }
     let exe = match std::env::current_exe() {
         Ok(p) => p.to_string_lossy().to_string(),
@@ -313,6 +455,20 @@ fn cmd_coordinate_tcp(cfg: &ExperimentConfig, args: &dilocox::util::cli::Args) -
                 out.epochs,
                 fmt_bytes(out.total_wire_bytes)
             );
+            if ecfg.pp_stages > 1 {
+                println!(
+                    "stage fleet: {} clusters x {} stage processes, per-stage rings",
+                    out.started, ecfg.pp_stages
+                );
+            }
+            if !args.get("report").is_empty() {
+                let j = elastic_report_json(cfg, &out);
+                if let Err(e) = write_report(args.get("report"), &j) {
+                    eprintln!("{e}");
+                    return 1;
+                }
+                println!("wrote {}", args.get("report"));
+            }
             0
         }
         Err(e) => {
@@ -329,7 +485,11 @@ fn cmd_worker(argv: &[String]) -> i32 {
         "elastic TCP ring worker (spawned by `dilocox coordinate --transport tcp`)",
     )
     .req("coord", "coordinator control address host:port")
-    .opt("rank", "0", "worker rank")
+    .opt("rank", "0", "worker rank (cluster id)")
+    .opt("stage", "0", "pipeline stage of this process (with --stages > 1)")
+    .opt("stages", "1", "pipeline stages M; > 1 joins the stage-parallel fleet")
+    .opt("micros", "1", "in-flight microbatches U (1F1B, with --stages > 1)")
+    .opt("listen-base", "0", "deterministic listener base port (0 = ephemeral)")
     .opt("rounds", "8", "outer rounds T")
     .opt("local-steps", "8", "inner steps H per round")
     .opt("inner-lr", "0.25", "inner step size")
@@ -361,6 +521,32 @@ fn cmd_worker(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    let stages = match args.get_usize("stages") {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    if stages > 1 {
+        let sopts = match stage_worker_opts_from_args(&args, opts, stages) {
+            Ok(o) => o,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        return match run_stage_worker(&sopts) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!(
+                    "stage worker {}.{} failed: {e:#}",
+                    sopts.base.rank, sopts.stage
+                );
+                1
+            }
+        };
+    }
     match run_worker(&opts) {
         Ok(()) => 0,
         Err(e) => {
@@ -368,6 +554,24 @@ fn cmd_worker(argv: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn stage_worker_opts_from_args(
+    args: &dilocox::util::cli::Args,
+    base: WorkerOpts,
+    stages: usize,
+) -> Result<StageWorkerOpts, String> {
+    let listen_base = args.get_usize("listen-base")?;
+    if listen_base > u16::MAX as usize {
+        return Err(format!("--listen-base {listen_base} exceeds 65535"));
+    }
+    Ok(StageWorkerOpts {
+        base,
+        stage: args.get_usize("stage")? as u32,
+        stages: stages as u32,
+        micros: args.get_usize("micros")?.max(1),
+        listen_base: listen_base as u16,
+    })
 }
 
 fn worker_opts_from_args(args: &dilocox::util::cli::Args) -> Result<WorkerOpts, String> {

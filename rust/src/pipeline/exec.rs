@@ -31,6 +31,37 @@
 //! lockstep (one draw per inner step), so the tokens consumed at stage 0
 //! and the labels consumed at the last stage always belong to the same
 //! microbatch.
+//!
+//! # The 1F1B stream format (executor contract)
+//!
+//! A stage executor consumes one `Vec<Cell>` — *its own* per-stage op
+//! stream from [`one_f_one_b_schedule`], validated up front by
+//! [`super::validate_schedule`] — strictly in order.  For every forward
+//! cell it first receives the upstream activations (unless it is stage
+//! 0), runs [`StageCompute::forward`], and ships the result downstream
+//! (unless it is the last stage); for every backward cell it first
+//! receives the downstream grad-activations (unless last), runs
+//! [`StageCompute::backward`], accumulates the parameter gradient, and
+//! ships grad-activations upstream (unless stage 0).  Each message
+//! carries its microbatch index and executors verify it against the
+//! cell's, so a mis-ordered wire is an error, never silent corruption.
+//! The blocking receive realizes exactly the dependency rules that
+//! [`super::execute_streams`] encodes for the validator and the DES.
+//!
+//! # StageLink: wire-agnostic activation transport
+//!
+//! The executor speaks to its pipeline neighbors only through the
+//! [`StageLink`] trait (send/recv of microbatch-indexed activations and
+//! grad-activations).  Two wires implement it: [`MpscStageLink`] —
+//! in-process blocking channels, used by [`run_pipeline`]'s one thread
+//! per (worker, stage) — and
+//! [`TcpStageLink`](crate::transport::tcp::TcpStageLink) —
+//! length-delimited [`Msg::Acts`](crate::transport::frame::Msg)/`Grads`
+//! frames between the one-OS-process-per-stage members of the elastic
+//! fleet ([`crate::transport::elastic`]).  [`run_stream_step`] is the
+//! shared inner-step driver, so both deployments execute the
+//! *identical* instruction sequence (bit-for-bit parity is
+//! integration-tested).
 
 use crate::comm::ring::build_ring;
 use crate::compress::Method;
@@ -39,10 +70,12 @@ use crate::pipeline::{one_f_one_b_schedule, validate_schedule, Cell};
 use crate::rounds::{movement, RoundEngine, RingLane};
 use crate::runtime::manifest::ParamEntry;
 use crate::transport::RingTransport;
+use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
+use std::time::Instant;
 
 /// One pipeline stage's compute, owned by its executor thread (built
 /// *inside* the thread via [`PipelineWorkload::make_stage`], so
@@ -137,6 +170,14 @@ pub struct StageRoundReport {
     /// Payload bytes of the reduction completed during this round (zero
     /// on the first overlap round — nothing was in flight yet).
     pub wire_bytes: u64,
+    /// Measured *compute* seconds per inner step this round: time spent
+    /// inside this stage's forward/backward kernels only — time blocked
+    /// waiting on neighbor dataflow, the optimizer, and the ring
+    /// collective are all excluded, so imbalanced stages show different
+    /// numbers instead of all converging to the pipeline critical path.
+    /// This is the number the DES calibration consumes — the real
+    /// counterpart of the simulator's modeled per-stage step time.
+    pub step_secs: f64,
 }
 
 #[derive(Debug)]
@@ -149,7 +190,106 @@ pub struct PipelineOutcome {
     pub total_wire_bytes: u64,
 }
 
+/// Aggregated per-stage wall-time measurement over a whole run.
+#[derive(Clone, Debug)]
+pub struct StageTimeSummary {
+    pub stage: usize,
+    /// Number of (worker, round) samples aggregated.
+    pub samples: usize,
+    /// Mean measured compute seconds per inner step (kernel time only;
+    /// see [`StageRoundReport::step_secs`]).
+    pub mean_step_secs: f64,
+    /// Slowest (worker, round) sample — the straggler bound the 1F1B
+    /// critical path actually saw.
+    pub max_step_secs: f64,
+}
+
+/// Serialize stage-time summaries for the run report JSON (the one
+/// serializer shared by [`PipelineOutcome::to_json`] and the CLI report
+/// writer).
+pub fn stage_times_json(times: &[StageTimeSummary]) -> Json {
+    Json::Arr(
+        times
+            .iter()
+            .map(|t| {
+                obj(vec![
+                    ("stage", Json::Num(t.stage as f64)),
+                    ("samples", Json::Num(t.samples as f64)),
+                    ("mean_step_secs", Json::Num(t.mean_step_secs)),
+                    ("max_step_secs", Json::Num(t.max_step_secs)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// `Json::Num` for finite values, `Json::Null` otherwise — the writer
+/// would emit a bare `NaN` literal (invalid JSON) for non-finite floats.
+pub fn json_num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
 impl PipelineOutcome {
+    /// Measured per-stage step times aggregated over workers and rounds
+    /// (the numbers the DES calibration consumes; see
+    /// [`crate::sim::pipeline_step_secs`] for the modeled counterpart).
+    pub fn stage_time_summary(&self) -> Vec<StageTimeSummary> {
+        let stages = self
+            .reports
+            .iter()
+            .map(|r| r.stage + 1)
+            .max()
+            .unwrap_or(0);
+        (0..stages)
+            .map(|s| {
+                let samples: Vec<f64> = self
+                    .reports
+                    .iter()
+                    .filter(|r| r.stage == s)
+                    .map(|r| r.step_secs)
+                    .collect();
+                let n = samples.len();
+                StageTimeSummary {
+                    stage: s,
+                    samples: n,
+                    mean_step_secs: if n > 0 {
+                        samples.iter().sum::<f64>() / n as f64
+                    } else {
+                        0.0
+                    },
+                    max_step_secs: samples.iter().cloned().fold(0.0, f64::max),
+                }
+            })
+            .collect()
+    }
+
+    /// Run report JSON: final eval, wire ledger, loss curve, and the
+    /// measured per-stage compute times.
+    pub fn to_json(&self) -> Json {
+        let stage_times = stage_times_json(&self.stage_time_summary());
+        let rounds = Json::Arr(
+            self.mean_loss_per_round()
+                .into_iter()
+                .map(|(r, l)| {
+                    obj(vec![
+                        ("round", Json::Num(r as f64)),
+                        ("mean_loss", json_num_or_null(l as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("final_eval", json_num_or_null(self.final_eval as f64)),
+            ("total_wire_bytes", Json::Num(self.total_wire_bytes as f64)),
+            ("rounds", rounds),
+            ("stage_times", stage_times),
+        ])
+    }
+
     /// Mean last-stage loss per round across workers.
     pub fn mean_loss_per_round(&self) -> Vec<(usize, f32)> {
         let rounds = self.reports.iter().map(|r| r.round).max().unwrap_or(0);
@@ -169,13 +309,175 @@ impl PipelineOutcome {
     }
 }
 
-/// Per-stage channel plumbing inside one worker.
+/// One stage executor's view of its pipeline neighbors, independent of
+/// the wire: microbatch-indexed activations flow downstream (stage s →
+/// s+1), grad-activations flow upstream (s+1 → s).  Implementations:
+/// [`MpscStageLink`] (in-process channels) and
+/// [`TcpStageLink`](crate::transport::tcp::TcpStageLink)
+/// (length-delimited frames between stage OS processes).
+///
+/// Contract: `has_upstream()` iff this is not stage 0, `has_downstream()`
+/// iff this is not the last stage; receives block until the neighbor
+/// delivers (or the wire errors — a dead neighbor must surface as `Err`,
+/// never a hang, so the elastic fleet can treat it as churn).
+pub trait StageLink: Send {
+    /// A stage s−1 exists (this executor receives acts, sends grads).
+    fn has_upstream(&self) -> bool;
+    /// A stage s+1 exists (this executor sends acts, receives grads).
+    fn has_downstream(&self) -> bool;
+    fn send_acts(&mut self, micro: usize, acts: Vec<f32>) -> Result<()>;
+    fn recv_acts(&mut self) -> Result<(usize, Vec<f32>)>;
+    fn send_grads(&mut self, micro: usize, grads: Vec<f32>) -> Result<()>;
+    fn recv_grads(&mut self) -> Result<(usize, Vec<f32>)>;
+}
+
+/// In-process [`StageLink`]: blocking mpsc channels between the stage
+/// threads of one worker.
 #[derive(Default)]
-struct Plumbing {
+pub struct MpscStageLink {
     acts_rx: Option<mpsc::Receiver<(usize, Vec<f32>)>>,
     acts_tx: Option<mpsc::Sender<(usize, Vec<f32>)>>,
     grads_rx: Option<mpsc::Receiver<(usize, Vec<f32>)>>,
     grads_tx: Option<mpsc::Sender<(usize, Vec<f32>)>>,
+}
+
+impl StageLink for MpscStageLink {
+    fn has_upstream(&self) -> bool {
+        self.acts_rx.is_some()
+    }
+
+    fn has_downstream(&self) -> bool {
+        self.acts_tx.is_some()
+    }
+
+    fn send_acts(&mut self, micro: usize, acts: Vec<f32>) -> Result<()> {
+        self.acts_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("last stage has no downstream link"))?
+            .send((micro, acts))
+            .map_err(|_| anyhow!("downstream stage hung up"))
+    }
+
+    fn recv_acts(&mut self) -> Result<(usize, Vec<f32>)> {
+        self.acts_rx
+            .as_ref()
+            .ok_or_else(|| anyhow!("first stage has no upstream link"))?
+            .recv()
+            .map_err(|_| anyhow!("upstream stage hung up"))
+    }
+
+    fn send_grads(&mut self, micro: usize, grads: Vec<f32>) -> Result<()> {
+        self.grads_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("first stage has no upstream link"))?
+            .send((micro, grads))
+            .map_err(|_| anyhow!("upstream stage hung up"))
+    }
+
+    fn recv_grads(&mut self) -> Result<(usize, Vec<f32>)> {
+        self.grads_rx
+            .as_ref()
+            .ok_or_else(|| anyhow!("last stage has no downstream link"))?
+            .recv()
+            .map_err(|_| anyhow!("downstream stage hung up"))
+    }
+}
+
+/// Build the intra-worker chain of [`MpscStageLink`]s: element s talks to
+/// s−1 and s+1.
+pub fn mpsc_stage_links(stages: usize) -> Vec<MpscStageLink> {
+    let mut links: Vec<MpscStageLink> =
+        (0..stages).map(|_| MpscStageLink::default()).collect();
+    for b in 0..stages.saturating_sub(1) {
+        let (ta, ra) = mpsc::channel();
+        links[b].acts_tx = Some(ta);
+        links[b + 1].acts_rx = Some(ra);
+        let (tg, rg) = mpsc::channel();
+        links[b + 1].grads_tx = Some(tg);
+        links[b].grads_rx = Some(rg);
+    }
+    links
+}
+
+/// Drive ONE inner step's 1F1B op stream over a stage link: receive and
+/// ship activations / grad-activations per the stream order, accumulate
+/// this stage's parameter gradient into `grad_acc` (summed over
+/// microbatches, *not* yet divided), and return the (loss sum, loss
+/// count, compute seconds) of the step — compute seconds covers only the
+/// time inside [`StageCompute::forward`]/[`StageCompute::backward`], so
+/// per-stage balance is visible instead of every stage reporting the
+/// pipeline critical path.  Shared by the local threaded executor and
+/// the elastic TCP stage workers so both run the identical instruction
+/// sequence.
+pub fn run_stream_step(
+    compute: &mut dyn StageCompute,
+    params: &[f32],
+    stream: &[Cell],
+    link: &mut dyn StageLink,
+    grad_acc: &mut [f32],
+) -> Result<(f64, usize, f64)> {
+    let n = grad_acc.len();
+    let mut loss_acc = 0.0f64;
+    let mut loss_n = 0usize;
+    let mut busy_secs = 0.0f64;
+    for cell in stream {
+        if cell.is_forward {
+            let acts_in = if link.has_upstream() {
+                let (mi, a) = link.recv_acts()?;
+                if mi != cell.micro {
+                    return Err(anyhow!(
+                        "acts for micro {mi}, expected {}",
+                        cell.micro
+                    ));
+                }
+                Some(a)
+            } else {
+                None
+            };
+            let t0 = Instant::now();
+            let out = compute.forward(params, cell.micro, acts_in)?;
+            busy_secs += t0.elapsed().as_secs_f64();
+            if link.has_downstream() {
+                let a = out.ok_or_else(|| {
+                    anyhow!("stage {} produced no activations", cell.stage)
+                })?;
+                link.send_acts(cell.micro, a)?;
+            }
+        } else {
+            let grad_in = if link.has_downstream() {
+                let (mi, g) = link.recv_grads()?;
+                if mi != cell.micro {
+                    return Err(anyhow!(
+                        "grads for micro {mi}, expected {}",
+                        cell.micro
+                    ));
+                }
+                Some(g)
+            } else {
+                None
+            };
+            let t0 = Instant::now();
+            let (gp, gout, loss) = compute.backward(params, cell.micro, grad_in)?;
+            busy_secs += t0.elapsed().as_secs_f64();
+            if gp.len() != n {
+                return Err(anyhow!("stage grad len {} != numel {n}", gp.len()));
+            }
+            for (a, b) in grad_acc.iter_mut().zip(&gp) {
+                *a += b;
+            }
+            if link.has_upstream() {
+                let g = gout.ok_or_else(|| {
+                    anyhow!("stage {} produced no upstream grads", cell.stage)
+                })?;
+                link.send_grads(cell.micro, g)?;
+            }
+            if let Some(l) = loss {
+                loss_acc += l as f64;
+                loss_n += 1;
+            }
+        }
+    }
+    Ok((loss_acc, loss_n, busy_secs))
 }
 
 /// Build the per-stage DP rings over the local mpsc backend:
@@ -226,25 +528,25 @@ pub fn run_pipeline(
     let results: Vec<Result<(Vec<f32>, u64)>> = std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(dp * m);
         for (w, worker_rings) in rings.into_iter().enumerate() {
-            // Intra-worker channels: acts flow s -> s+1, grads s+1 -> s.
-            let mut plumb: Vec<Plumbing> =
-                (0..m).map(|_| Plumbing::default()).collect();
-            for b in 0..m.saturating_sub(1) {
-                let (ta, ra) = mpsc::channel();
-                plumb[b].acts_tx = Some(ta);
-                plumb[b + 1].acts_rx = Some(ra);
-                let (tg, rg) = mpsc::channel();
-                plumb[b + 1].grads_tx = Some(tg);
-                plumb[b].grads_rx = Some(rg);
-            }
-            for (s, (pl, ring)) in
-                plumb.into_iter().zip(worker_rings).enumerate()
+            // Intra-worker links: acts flow s -> s+1, grads s+1 -> s.
+            let links = mpsc_stage_links(m);
+            for (s, (link, ring)) in
+                links.into_iter().zip(worker_rings).enumerate()
             {
                 let stream = streams[s].clone();
                 let tx = tx_report.clone();
                 handles.push(scope.spawn(move || {
-                    stage_main(workload, w, s, pl, ring, opts, stream, tx)
-                        .with_context(|| format!("worker {w} stage {s}"))
+                    stage_main(
+                        workload,
+                        w,
+                        s,
+                        Box::new(link),
+                        ring,
+                        opts,
+                        stream,
+                        tx,
+                    )
+                    .with_context(|| format!("worker {w} stage {s}"))
                 }));
             }
         }
@@ -301,7 +603,7 @@ fn stage_main(
     workload: &dyn PipelineWorkload,
     worker: usize,
     stage: usize,
-    plumb: Plumbing,
+    mut link: Box<dyn StageLink>,
     ring: Box<dyn RingTransport>,
     opts: &PipelineRunOpts,
     stream: Vec<Cell>,
@@ -348,81 +650,26 @@ fn stage_main(
         let anchor = params.clone();
         let mut loss_acc = 0.0f64;
         let mut loss_n = 0usize;
+        let mut busy_secs = 0.0f64;
         for _step in 0..opts.local_steps {
             compute.next_step()?;
             let mut grad_acc = vec![0.0f32; n];
-            for cell in &stream {
-                if cell.is_forward {
-                    let acts_in = match &plumb.acts_rx {
-                        Some(rx) => {
-                            let (mi, a) = rx.recv().map_err(|_| {
-                                anyhow!("upstream stage hung up")
-                            })?;
-                            if mi != cell.micro {
-                                return Err(anyhow!(
-                                    "acts for micro {mi}, expected {}",
-                                    cell.micro
-                                ));
-                            }
-                            Some(a)
-                        }
-                        None => None,
-                    };
-                    let out = compute.forward(&params, cell.micro, acts_in)?;
-                    if let Some(tx) = &plumb.acts_tx {
-                        let a = out.ok_or_else(|| {
-                            anyhow!("stage {stage} produced no activations")
-                        })?;
-                        tx.send((cell.micro, a)).map_err(|_| {
-                            anyhow!("downstream stage hung up")
-                        })?;
-                    }
-                } else {
-                    let grad_in = match &plumb.grads_rx {
-                        Some(rx) => {
-                            let (mi, g) = rx.recv().map_err(|_| {
-                                anyhow!("downstream stage hung up")
-                            })?;
-                            if mi != cell.micro {
-                                return Err(anyhow!(
-                                    "grads for micro {mi}, expected {}",
-                                    cell.micro
-                                ));
-                            }
-                            Some(g)
-                        }
-                        None => None,
-                    };
-                    let (gp, gout, loss) =
-                        compute.backward(&params, cell.micro, grad_in)?;
-                    if gp.len() != n {
-                        return Err(anyhow!(
-                            "stage grad len {} != numel {n}",
-                            gp.len()
-                        ));
-                    }
-                    for (a, b) in grad_acc.iter_mut().zip(&gp) {
-                        *a += b;
-                    }
-                    if let Some(tx) = &plumb.grads_tx {
-                        let g = gout.ok_or_else(|| {
-                            anyhow!("stage {stage} produced no upstream grads")
-                        })?;
-                        tx.send((cell.micro, g)).map_err(|_| {
-                            anyhow!("upstream stage hung up")
-                        })?;
-                    }
-                    if let Some(l) = loss {
-                        loss_acc += l as f64;
-                        loss_n += 1;
-                    }
-                }
-            }
+            let (ls, ln, busy) = run_stream_step(
+                compute.as_mut(),
+                &params,
+                &stream,
+                link.as_mut(),
+                &mut grad_acc,
+            )?;
+            loss_acc += ls;
+            loss_n += ln;
+            busy_secs += busy;
             // Mean gradient over microbatches, one inner AdamW step.
             let inv = 1.0 / micros as f32;
             grad_acc.iter_mut().for_each(|g| *g *= inv);
             inner.step(&mut params, &grad_acc);
         }
+        let step_secs = busy_secs / opts.local_steps.max(1) as f64;
 
         // Per-stage outer round through the shared engine.
         let mv = movement(&anchor, &params);
@@ -441,6 +688,7 @@ fn stage_main(
                     f32::NAN
                 },
                 wire_bytes: lane.wire_last,
+                step_secs,
             })
             .ok();
     }
@@ -773,6 +1021,24 @@ mod tests {
         assert_eq!(out.reports.len(), 2 * 3 * 5);
         assert_eq!(out.final_params.len(), 3 * 16);
         assert!(out.total_wire_bytes > 0);
+        // Per-stage wall-time telemetry: one summary per stage, fed by
+        // every (worker, round) sample, with sane mean ≤ max ordering.
+        let times = out.stage_time_summary();
+        assert_eq!(times.len(), 3);
+        for t in &times {
+            assert_eq!(t.samples, 2 * 5);
+            assert!(t.mean_step_secs >= 0.0);
+            assert!(t.max_step_secs >= t.mean_step_secs);
+        }
+        // The run report JSON round-trips through the parser.
+        let j = out.to_json();
+        let parsed =
+            crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.path("stage_times").unwrap().as_arr().unwrap().len(),
+            3
+        );
+        assert!(parsed.path("final_eval").unwrap().as_f64().is_some());
         let curve = out.mean_loss_per_round();
         assert_eq!(curve.len(), 5);
         let first = curve.first().unwrap().1;
@@ -867,6 +1133,22 @@ mod tests {
             .map(|r| r.wire_bytes)
             .sum();
         assert!(per_round < 2 * 2 * 16, "wire {per_round}");
+    }
+
+    #[test]
+    fn mpsc_links_route_acts_and_grads_by_micro() {
+        let mut links = mpsc_stage_links(2);
+        let mut l1 = links.pop().unwrap();
+        let mut l0 = links.pop().unwrap();
+        assert!(!l0.has_upstream() && l0.has_downstream());
+        assert!(l1.has_upstream() && !l1.has_downstream());
+        l0.send_acts(0, vec![1.0]).unwrap();
+        assert_eq!(l1.recv_acts().unwrap(), (0, vec![1.0]));
+        l1.send_grads(0, vec![2.0]).unwrap();
+        assert_eq!(l0.recv_grads().unwrap(), (0, vec![2.0]));
+        // Endpoint misuse is an error, not a hang.
+        assert!(l0.recv_acts().is_err());
+        assert!(l1.send_acts(0, vec![0.0]).is_err());
     }
 
     #[test]

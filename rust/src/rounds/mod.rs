@@ -26,6 +26,26 @@
 //! share them.  The low-rank base seed is derived from the *round* in both
 //! the sync and the overlap path — the two paths produce bit-identical
 //! bases (regression-tested below).
+//!
+//! Invariants to keep when changing this module:
+//!
+//! * **Overlap join ordering** — step 1 (join δ^{t-1}) must happen before
+//!   step 3 (form δ^t): the error buffer refresh in between is what keeps
+//!   in-flight progress from being counted twice.  The first overlap
+//!   round applies nothing (`finish_round` returns `None`) and a trailing
+//!   in-flight reduction must be [`RoundEngine::drain`]ed at shutdown or
+//!   the final parameters silently miss the last contribution.
+//! * **θ_g moves only by outer updates** — `set_theta` exists solely for
+//!   the elastic consensus resync after churn; anything else mutating the
+//!   global track breaks cross-worker agreement.
+//! * **Round-seeded bases** — `WireCompressor::reduce` must receive the
+//!   round the delta *belongs to* (not the wall-clock round), identically
+//!   in sync and overlap mode, or ring peers derive different low-rank
+//!   bases and the collective silently degrades.
+//! * **One engine per independent shard** — the stage-parallel paths run
+//!   one `RoundEngine` per stage; the algebra is elementwise, so engines
+//!   compose exactly and per-stage wire payloads sum to the flat-vector
+//!   total.
 
 use crate::compress::{lowrank, quantize, Method};
 use crate::linalg::{matmul, matmul_at_b, matmul_bt, orthonormalize_columns, Mat};

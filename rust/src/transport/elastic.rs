@@ -18,12 +18,49 @@
 //! (H local steps, pseudo-gradient ring mean, Nesterov outer step) with no
 //! artifacts — what the churn integration tests and the zero-dependency
 //! demo path run.
+//!
+//! # Stage-parallel fleet (`pp_stages > 1`)
+//!
+//! With pipeline parallelism the fleet is one OS process per **(cluster,
+//! stage)**: `dp × pp` `dilocox worker --stage s` processes.  Inside a
+//! cluster the 1F1B dataflow runs over TCP stage links
+//! ([`crate::transport::tcp::TcpStageLink`]: Acts frames down, Grads
+//! frames up); across clusters each stage joins its *own* per-stage DP
+//! ring, so per-stage pseudo-gradients reduce independently — the §2.2
+//! composition of PP with low-communication outer rounds, deployed.
+//!
+//! Membership is keyed by `(cluster, stage)` but committed at cluster
+//! granularity: a cluster is a member only while **all** of its stage
+//! processes are alive (a dead stage starves its siblings' dataflow, so
+//! the whole cluster is dropped and its orphans are shut down).  The 2PC
+//! prepare/commit sends each stage process a *tailored*
+//! `StagePrepare` — its own stage ring in committed order plus its
+//! downstream neighbor's link port — and every surviving stage ring
+//! re-forms on the bumped epoch while the 1F1B dataflow stalls (blocked
+//! on its timeouts) and resumes after the commit.  `resume_round` is
+//! shared across stages; a stage ring that already completed the final
+//! round before a late break simply finishes (bounded staleness, exactly
+//! like the single-vector fleet's final-round churn).
+//!
+//! Invariant worth knowing when reading the recovery code: within one
+//! *surviving* cluster every stage always completes the full H local
+//! steps of a round before any stage touches its ring (the dataflow is
+//! intra-cluster and intact), so the per-stage data streams stay in
+//! lockstep across churn — a re-run round re-draws the same number of
+//! batches on the first and last stage alike.
 
+use crate::compress::Method;
 use crate::config::{ExperimentConfig, FaultConfig, TransportConfig};
+use crate::coordinator::RuntimeStagePipeline;
 use crate::data::{MarkovCorpus, ShardIter};
-use crate::optim::{AdamW, Nesterov};
-use crate::rounds::{movement, DeltaReducer, RoundEngine};
-use crate::runtime::Runtime;
+use crate::optim::{AdamW, DualOptimizer, Nesterov};
+use crate::pipeline::exec::{
+    run_stream_step, MpscStageLink, PipelineWorkload, StageCompute, StageLink,
+    SyntheticPipeline,
+};
+use crate::pipeline::{one_f_one_b_schedule, validate_schedule};
+use crate::rounds::{movement, DeltaReducer, RingLane, RoundEngine};
+use crate::runtime::{Manifest, Runtime};
 use crate::transport::faulty::{FaultPlan, FaultyRing};
 use crate::transport::frame::{read_msg, write_msg, Msg};
 use crate::transport::tcp;
@@ -81,6 +118,12 @@ pub struct ElasticConfig {
     pub outer_momentum: f32,
     pub seed: u64,
     pub workload: Workload,
+    /// M — pipeline stages per cluster.  1 = the single-vector worker
+    /// fleet; > 1 spawns one OS process per (cluster, stage) and routes
+    /// the run through the stage-parallel supervisor.
+    pub pp_stages: usize,
+    /// U — in-flight microbatches per inner step (stage fleet only).
+    pub microbatches: usize,
     pub transport: TransportConfig,
     pub faults: FaultConfig,
     /// Hard wall-clock ceiling for the whole run (hang safety net).
@@ -100,10 +143,30 @@ impl ElasticConfig {
             outer_momentum: 0.6,
             seed: 1234,
             workload: Workload::Quadratic { dim },
+            pp_stages: 1,
+            microbatches: 1,
             transport: TransportConfig::default(),
             faults: FaultConfig::default(),
             wall_timeout_ms: 120_000,
         }
+    }
+
+    /// Stage-fleet defaults over the artifact-free [`SyntheticPipeline`]
+    /// (the depth-`stages` affine chain), tuned like the local executor
+    /// tests.
+    pub fn synthetic_pipeline(
+        clusters: usize,
+        stages: usize,
+        rounds: usize,
+        dim: usize,
+    ) -> ElasticConfig {
+        let mut c = ElasticConfig::quadratic(clusters, rounds, dim);
+        c.pp_stages = stages;
+        c.microbatches = 2;
+        c.inner_lr = 0.05;
+        c.outer_lr = 0.7;
+        c.outer_momentum = 0.6;
+        c
     }
 
     /// Lift an experiment config onto the elastic runner.  Runtime
@@ -128,6 +191,8 @@ impl ElasticConfig {
             outer_momentum: cfg.train.outer_momentum,
             seed: cfg.train.seed,
             workload,
+            pp_stages: cfg.parallel.pp,
+            microbatches: cfg.parallel.microbatches,
             transport: cfg.transport.clone(),
             faults: cfg.faults.clone(),
             wall_timeout_ms,
@@ -200,6 +265,40 @@ pub fn params_digest(params: &[f32]) -> Vec<f32> {
     }
     let stride = params.len().div_ceil(PARAMS_DIGEST_MAX);
     params.iter().step_by(stride).copied().collect()
+}
+
+/// Per-(cluster, stage) fault plan for the stage-parallel fleet: the
+/// seeded kill targets exactly one stage *process*
+/// (`kill_rank`/`kill_stage` at `kill_round`); delays and stragglers
+/// follow the cluster rank like the single-vector fleet.
+pub fn stage_fault_plan_for(
+    faults: &FaultConfig,
+    rank: u32,
+    stage: u32,
+    exit_on_kill: bool,
+) -> Option<FaultPlan> {
+    if !faults.enabled {
+        return None;
+    }
+    let kill_here = rank as usize == faults.kill_rank
+        && stage as usize == faults.kill_stage;
+    let plan = FaultPlan {
+        seed: faults.seed,
+        delay_prob: faults.delay_prob,
+        max_delay_ms: faults.delay_ms,
+        kill_round: if kill_here { faults.kill_round } else { 0 },
+        straggler_ms: if rank as usize == faults.straggler_rank {
+            faults.straggler_ms
+        } else {
+            0
+        },
+        exit_on_kill,
+    };
+    if plan.is_quiet() {
+        None
+    } else {
+        Some(plan)
+    }
 }
 
 /// Per-rank fault plan from the `[faults]` config section.
@@ -572,6 +671,375 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------------
+// Stage worker side (pp_stages > 1: one OS process per (cluster, stage))
+// ---------------------------------------------------------------------------
+
+/// Everything one stage process needs (mirrors `dilocox worker --stage`).
+#[derive(Clone, Debug)]
+pub struct StageWorkerOpts {
+    /// Cluster-level options: `rank` is the cluster id; `workload`
+    /// selects the pipeline ([`Workload::Quadratic`] =
+    /// [`SyntheticPipeline`], [`Workload::Runtime`] = the staged PJRT
+    /// bundle).
+    pub base: WorkerOpts,
+    pub stage: u32,
+    pub stages: u32,
+    /// U — in-flight microbatches per inner step on the 1F1B schedule.
+    pub micros: usize,
+    /// Deterministic listener layout base (0 = ephemeral OS ports); see
+    /// [`crate::transport::tcp::stage_ports`].
+    pub listen_base: u16,
+}
+
+/// Build the [`PipelineWorkload`] a stage fleet trains (shared by the
+/// stage workers and the coordinator's final assembled eval).
+fn build_stage_pipeline(
+    workload: &Workload,
+    stages: usize,
+    micros: usize,
+    seed: u64,
+) -> Result<Box<dyn PipelineWorkload>> {
+    match workload {
+        Workload::Quadratic { dim } => Ok(Box::new(SyntheticPipeline::new(
+            stages,
+            micros.max(1),
+            *dim,
+            seed,
+        ))),
+        Workload::Runtime { artifacts_dir } => {
+            let man = Manifest::load(artifacts_dir)
+                .with_context(|| format!("loading manifest from {artifacts_dir}"))?;
+            Ok(Box::new(RuntimeStagePipeline::new(
+                artifacts_dir,
+                &man,
+                micros.max(1),
+                seed,
+            )?))
+        }
+    }
+}
+
+/// Block on the control socket until the coordinator commits a membership
+/// epoch newer than `after_epoch`; acks every StagePrepare seen on the
+/// way.  `Ok(None)` = clean Shutdown (our cluster was dropped).
+#[allow(clippy::type_complexity)]
+fn wait_for_stage_commit(
+    coord: &mut TcpStream,
+    after_epoch: u32,
+) -> Result<Option<(u32, u32, Vec<(u32, u16)>, u16)>> {
+    coord
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .ok();
+    let mut prepared: Option<(u32, u32, Vec<(u32, u16)>, u16)> = None;
+    loop {
+        match read_msg(coord) {
+            Ok(Msg::StagePrepare {
+                epoch,
+                resume_round,
+                ring_members,
+                link_down_port,
+            }) if epoch > after_epoch => {
+                write_msg(coord, &Msg::PrepareAck { epoch })?;
+                prepared = Some((epoch, resume_round, ring_members, link_down_port));
+            }
+            Ok(Msg::Commit { epoch }) => {
+                if let Some(p) = prepared.clone() {
+                    if p.0 == epoch {
+                        return Ok(Some(p));
+                    }
+                }
+                // Commit for an epoch we never prepared (superseded).
+            }
+            Ok(Msg::Shutdown) => return Ok(None),
+            Ok(_) => { /* stale frame — ignore */ }
+            Err(e) => {
+                return Err(anyhow!(
+                    "control channel lost waiting for stage commit: {e:#}"
+                ))
+            }
+        }
+    }
+}
+
+/// Stage worker entry point (the `dilocox worker --stage` subcommand
+/// body): one pipeline stage of one DP cluster as its own OS process.
+///
+/// Per committed epoch it (re)forms its per-stage DP ring across
+/// clusters, its intra-cluster stage-link chain
+/// ([`crate::transport::tcp::TcpStageLink`]), resyncs this stage's θ_s
+/// by a consensus ring mean, and runs outer rounds through the shared
+/// [`RoundEngine`] with the identical inner-step driver
+/// ([`run_stream_step`]) as the local threaded executor — the two
+/// deployments are bit-for-bit comparable.  Any wire failure mid-round
+/// (a dead neighbor's socket timing out, a broken ring collective)
+/// reports `RingBroken` and parks for the next epoch.
+pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
+    let w = &opts.base;
+    let stages = opts.stages as usize;
+    if stages < 2 {
+        return Err(anyhow!(
+            "stage worker needs --stages >= 2 (the single-stage fleet runs \
+             the plain worker)"
+        ));
+    }
+    if opts.stage as usize >= stages {
+        return Err(anyhow!(
+            "stage {} out of range for {stages} stages",
+            opts.stage
+        ));
+    }
+    let addr: SocketAddr = w
+        .coord
+        .parse()
+        .map_err(|_| anyhow!("bad coordinator address '{}'", w.coord))?;
+    let connect_timeout = Duration::from_millis(w.connect_timeout_ms);
+    let ring_timeout = Duration::from_millis(w.ring_timeout_ms);
+    let mut coord = TcpStream::connect_timeout(&addr, connect_timeout)
+        .with_context(|| format!("dialing coordinator {addr}"))?;
+    coord.set_nodelay(true).ok();
+    let (ring_listener, link_listener) = if opts.listen_base > 0 {
+        // Validate the full deterministic layout before binding: a base
+        // close to 65535 would otherwise wrap in the u16 port arithmetic
+        // and bind some unrelated (possibly privileged) port.
+        let top = opts.listen_base as u64
+            + 2 * (w.rank as u64 * stages as u64 + opts.stage as u64)
+            + 1;
+        if top > 65535 {
+            return Err(anyhow!(
+                "--listen-base {} + 2*(rank*stages + stage) + 1 = {top} \
+                 overflows the port space (rank {}, stage {}, {stages} \
+                 stages); lower the base",
+                opts.listen_base,
+                w.rank,
+                opts.stage
+            ));
+        }
+        let (rp, lp) = tcp::stage_ports(
+            opts.listen_base,
+            w.rank as usize,
+            opts.stage as usize,
+            stages,
+        );
+        (
+            TcpListener::bind(("127.0.0.1", rp))
+                .with_context(|| format!("binding ring listener on port {rp}"))?,
+            TcpListener::bind(("127.0.0.1", lp))
+                .with_context(|| format!("binding link listener on port {lp}"))?,
+        )
+    } else {
+        (
+            TcpListener::bind("127.0.0.1:0").context("binding ring listener")?,
+            TcpListener::bind("127.0.0.1:0").context("binding link listener")?,
+        )
+    };
+    let ring_port = ring_listener.local_addr()?.port();
+    let link_port = link_listener.local_addr()?.port();
+    write_msg(
+        &mut coord,
+        &Msg::StageHello { cluster: w.rank, stage: opts.stage, ring_port, link_port },
+    )?;
+
+    let workload = build_stage_pipeline(&w.workload, stages, opts.micros, w.seed)?;
+    if workload.stages() != stages {
+        return Err(anyhow!(
+            "workload exports {} stages but the fleet runs {stages}",
+            workload.stages()
+        ));
+    }
+    let micros = workload.micros();
+    let streams = one_f_one_b_schedule(stages, micros);
+    validate_schedule(&streams, micros)
+        .map_err(|e| anyhow!("invalid 1F1B schedule: {e}"))?;
+    let stream = streams[opts.stage as usize].clone();
+
+    let mut compute = workload.make_stage(w.rank as usize, opts.stage as usize)?;
+    let n = compute.numel();
+    let mut params = compute.init()?;
+    if params.len() != n {
+        return Err(anyhow!("init len {} != numel {n}", params.len()));
+    }
+    let spec = compute.param_spec();
+    // §2.2: this process holds only this stage's optimizer pair.
+    let DualOptimizer { mut inner, outer } = DualOptimizer::new(
+        n,
+        w.inner_lr,
+        w.weight_decay,
+        w.outer_lr,
+        w.outer_momentum,
+    );
+    // Sync-mode engine: overlap stays a local-executor feature for now —
+    // the recovery protocol assumes no reduction is in flight across a
+    // round boundary.
+    let mut engine = RoundEngine::new(params.clone(), 1, outer, false, false);
+    // Same per-stage compressor seed derivation as the local executor
+    // (inert under Method::None, load-bearing once the fleet compresses).
+    let stage_seed =
+        w.seed ^ (opts.stage as u64).wrapping_mul(0x9e3779b97f4a7c15);
+
+    let mut applied = 0usize;
+    let mut wire_total = 0u64;
+    let mut epoch = 0u32;
+
+    'epochs: loop {
+        let Some((e, resume_round, ring_members, down_port)) =
+            wait_for_stage_commit(&mut coord, epoch)?
+        else {
+            // Dropped before completion (a sibling stage died and the
+            // coordinator removed our whole cluster): exit cleanly.
+            return Ok(());
+        };
+        epoch = e;
+        let finishing = resume_round as usize > w.rounds;
+        let raw = match tcp::form_ring(
+            w.rank,
+            epoch,
+            &ring_members,
+            &ring_listener,
+            connect_timeout,
+            ring_timeout,
+        ) {
+            Ok(r) => r,
+            Err(_) => {
+                let _ = write_msg(
+                    &mut coord,
+                    &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
+                );
+                continue 'epochs;
+            }
+        };
+        let mut ring: Box<dyn RingTransport> = match &w.faults {
+            Some(plan) => Box::new(FaultyRing::new(raw, plan.clone())),
+            None => Box::new(raw),
+        };
+        // Dataflow links (skipped in a finishing epoch: no rounds left to
+        // run, and neighbors that already completed form no links).
+        let mut link: Box<dyn StageLink> = if finishing {
+            Box::new(MpscStageLink::default())
+        } else {
+            match tcp::form_stage_links(
+                opts.stage,
+                epoch,
+                &link_listener,
+                if down_port == 0 { None } else { Some(down_port) },
+                connect_timeout,
+                ring_timeout,
+            ) {
+                Ok(l) => Box::new(l),
+                Err(_) => {
+                    let _ = write_msg(
+                        &mut coord,
+                        &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
+                    );
+                    continue 'epochs;
+                }
+            }
+        };
+
+        // Consensus resync on this stage's ring: survivors re-agree on
+        // θ_s (identical at epoch 1; a true mean after churn) and the
+        // outer momentum restarts.
+        let mut theta = engine.theta().to_vec();
+        if ring.allreduce_mean(&mut theta).is_err() {
+            let _ = write_msg(
+                &mut coord,
+                &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
+            );
+            continue 'epochs;
+        }
+        engine.set_theta(&theta);
+        engine.reset_outer();
+        params.copy_from_slice(engine.theta());
+
+        let mut lane =
+            RingLane::new(ring, Method::None, stage_seed, spec.clone(), false);
+        let mut round = resume_round as usize;
+        let mut broke = false;
+        while round <= w.rounds {
+            // Fault hook: an injected kill exits here (process mode) or
+            // errors out (thread mode) — either way the control socket
+            // drops and the coordinator sees a dead stage process.
+            lane.begin_round(round)?;
+            let anchor = params.clone();
+            let mut loss_acc = 0.0f64;
+            let mut loss_n = 0usize;
+            let mut step_err = false;
+            for _ in 0..w.local_steps {
+                compute.next_step()?;
+                let mut grad_acc = vec![0.0f32; n];
+                match run_stream_step(
+                    compute.as_mut(),
+                    &params,
+                    &stream,
+                    link.as_mut(),
+                    &mut grad_acc,
+                ) {
+                    Ok((ls, ln, _busy)) => {
+                        loss_acc += ls;
+                        loss_n += ln;
+                        let inv = 1.0 / micros as f32;
+                        grad_acc.iter_mut().for_each(|g| *g *= inv);
+                        inner.step(&mut params, &grad_acc);
+                    }
+                    Err(_) => {
+                        // A dead neighbor surfaces here (link timeout /
+                        // EOF): churn, not a fatal error.
+                        step_err = true;
+                        break;
+                    }
+                }
+            }
+            if step_err {
+                broke = true;
+                break;
+            }
+            let mv = movement(&anchor, &params);
+            if engine.finish_round(vec![mv], round as u64, &mut lane).is_err() {
+                broke = true;
+                break;
+            }
+            params.copy_from_slice(engine.theta());
+            applied = round;
+            // Loss telemetry is real only on the label-bearing stage.
+            let loss = if loss_n > 0 {
+                (loss_acc / loss_n as f64) as f32
+            } else {
+                f32::NAN
+            };
+            let _ = write_msg(
+                &mut coord,
+                &Msg::Heartbeat { round: round as u32, loss },
+            );
+            round += 1;
+        }
+        wire_total += lane.wire_total;
+        if broke {
+            let _ = write_msg(
+                &mut coord,
+                &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
+            );
+            continue 'epochs;
+        }
+        break;
+    }
+
+    write_msg(
+        &mut coord,
+        &Msg::Done {
+            rounds: applied as u32,
+            wire_bytes: wire_total,
+            // The final eval needs the *assembled* model; the coordinator
+            // computes it from the per-stage digests.
+            final_loss: f32::NAN,
+            params: params_digest(engine.theta()),
+        },
+    )?;
+    // Park until Shutdown (or coordinator EOF).
+    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
+    let _ = read_msg(&mut coord);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Coordinator side
 // ---------------------------------------------------------------------------
 
@@ -580,9 +1048,39 @@ struct WorkerHandle {
     ring_port: u16,
 }
 
-enum Event {
-    Msg(u32, Msg),
-    Closed(u32),
+/// One stage process's control handle (stage fleet).
+struct StageHandle {
+    writer: TcpStream,
+    ring_port: u16,
+    link_port: u16,
+}
+
+/// Control-plane event, keyed by worker rank (`u32`) or by
+/// `(cluster, stage)` in the stage fleet.
+enum Event<K> {
+    Msg(K, Msg),
+    Closed(K),
+}
+
+/// One reader thread per control socket feeding the supervisor's queue.
+fn spawn_reader<K: Copy + Send + 'static>(
+    key: K,
+    mut rs: TcpStream,
+    tx: mpsc::Sender<Event<K>>,
+) {
+    std::thread::spawn(move || loop {
+        match read_msg(&mut rs) {
+            Ok(m) => {
+                if tx.send(Event::Msg(key, m)).is_err() {
+                    break;
+                }
+            }
+            Err(_) => {
+                let _ = tx.send(Event::Closed(key));
+                break;
+            }
+        }
+    });
 }
 
 struct DoneReport {
@@ -755,8 +1253,13 @@ fn reap_children(children: &mut [std::process::Child]) {
     }
 }
 
-/// Run the elastic coordinator to completion.
+/// Run the elastic coordinator to completion.  Dispatches to the
+/// stage-parallel fleet supervisor when `pp_stages > 1` (one OS process
+/// per (cluster, stage), per-stage rings, intra-cluster TCP dataflow).
 pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutcome> {
+    if cfg.pp_stages > 1 {
+        return run_elastic_stages(cfg, mode);
+    }
     if cfg.workers == 0 {
         return Err(anyhow!("need at least one worker"));
     }
@@ -834,24 +1337,11 @@ fn supervise(
 
     // One reader thread per worker feeding a single event queue; the
     // handles keep the write half.
-    let (tx, rx) = mpsc::channel::<Event>();
+    let (tx, rx) = mpsc::channel::<Event<u32>>();
     for (&rank, handle) in live.iter() {
-        let mut rs = handle.writer.try_clone().context("cloning control stream")?;
+        let rs = handle.writer.try_clone().context("cloning control stream")?;
         rs.set_read_timeout(None).ok();
-        let tx = tx.clone();
-        std::thread::spawn(move || loop {
-            match read_msg(&mut rs) {
-                Ok(m) => {
-                    if tx.send(Event::Msg(rank, m)).is_err() {
-                        break;
-                    }
-                }
-                Err(_) => {
-                    let _ = tx.send(Event::Closed(rank));
-                    break;
-                }
-            }
-        });
+        spawn_reader(rank, rs, tx.clone());
     }
     drop(tx);
 
@@ -864,7 +1354,7 @@ fn supervise(
     // Small helper applied to every event everywhere: telemetry +
     // resume-round bookkeeping.
     fn note_progress(
-        ev: &Event,
+        ev: &Event<u32>,
         resume_round: &mut u32,
         round_losses: &mut Vec<(u32, u32, f32)>,
     ) {
@@ -1057,6 +1547,573 @@ fn supervise(
     Ok((epoch, done, round_losses))
 }
 
+// ---------------------------------------------------------------------------
+// Coordinator side: stage-parallel fleet (pp_stages > 1)
+// ---------------------------------------------------------------------------
+
+fn stage_worker_opts_for(
+    cfg: &ElasticConfig,
+    rank: u32,
+    stage: u32,
+    coord_addr: &str,
+    mode: &SpawnMode,
+) -> StageWorkerOpts {
+    let exit_on_kill = matches!(mode, SpawnMode::Process { .. });
+    let mut base = worker_opts_for(cfg, rank, coord_addr, mode);
+    base.faults = stage_fault_plan_for(&cfg.faults, rank, stage, exit_on_kill);
+    StageWorkerOpts {
+        base,
+        stage,
+        stages: cfg.pp_stages as u32,
+        micros: cfg.microbatches.max(1),
+        listen_base: cfg.transport.stage_listen_base_port,
+    }
+}
+
+fn spawn_stage_workers(
+    cfg: &ElasticConfig,
+    mode: &SpawnMode,
+    coord_addr: &str,
+) -> Result<Vec<std::process::Child>> {
+    let mut children = Vec::new();
+    for rank in 0..cfg.workers as u32 {
+        for stage in 0..cfg.pp_stages as u32 {
+            let opts = stage_worker_opts_for(cfg, rank, stage, coord_addr, mode);
+            match mode {
+                SpawnMode::Process { exe } => {
+                    let mut cmd = Command::new(exe);
+                    cmd.arg("worker")
+                        .arg("--coord")
+                        .arg(&opts.base.coord)
+                        .arg("--rank")
+                        .arg(rank.to_string())
+                        .arg("--stage")
+                        .arg(stage.to_string())
+                        .arg("--stages")
+                        .arg(cfg.pp_stages.to_string())
+                        .arg("--micros")
+                        .arg(opts.micros.to_string())
+                        .arg("--listen-base")
+                        .arg(opts.listen_base.to_string())
+                        .arg("--rounds")
+                        .arg(cfg.rounds.to_string())
+                        .arg("--local-steps")
+                        .arg(cfg.local_steps.to_string())
+                        .arg("--inner-lr")
+                        .arg(cfg.inner_lr.to_string())
+                        .arg("--weight-decay")
+                        .arg(cfg.weight_decay.to_string())
+                        .arg("--outer-lr")
+                        .arg(cfg.outer_lr.to_string())
+                        .arg("--outer-momentum")
+                        .arg(cfg.outer_momentum.to_string())
+                        .arg("--seed")
+                        .arg(cfg.seed.to_string())
+                        .arg("--ring-timeout-ms")
+                        .arg(cfg.transport.ring_timeout_ms.to_string())
+                        .arg("--connect-timeout-ms")
+                        .arg(cfg.transport.connect_timeout_ms.to_string());
+                    match &cfg.workload {
+                        Workload::Quadratic { dim } => {
+                            cmd.arg("--workload").arg("quad");
+                            cmd.arg("--dim").arg(dim.to_string());
+                        }
+                        Workload::Runtime { artifacts_dir } => {
+                            cmd.arg("--workload").arg("runtime");
+                            cmd.arg("--artifacts").arg(artifacts_dir);
+                        }
+                    }
+                    if let Some(plan) = &opts.base.faults {
+                        cmd.arg("--fault-seed")
+                            .arg(plan.seed.to_string())
+                            .arg("--fault-delay-prob")
+                            .arg(plan.delay_prob.to_string())
+                            .arg("--fault-delay-ms")
+                            .arg(plan.max_delay_ms.to_string())
+                            .arg("--fault-kill-round")
+                            .arg(plan.kill_round.to_string())
+                            .arg("--fault-straggler-ms")
+                            .arg(plan.straggler_ms.to_string());
+                    }
+                    let child = cmd
+                        .stdout(Stdio::null())
+                        .stderr(Stdio::inherit())
+                        .spawn()
+                        .with_context(|| {
+                            format!("spawning stage worker {rank}.{stage} via {exe}")
+                        })?;
+                    children.push(child);
+                }
+                SpawnMode::Thread => {
+                    std::thread::spawn(move || {
+                        if let Err(e) = run_stage_worker(&opts) {
+                            eprintln!(
+                                "[stage worker {rank}.{stage}] exited: {e:#}"
+                            );
+                        }
+                    });
+                }
+            }
+        }
+    }
+    Ok(children)
+}
+
+/// Accept one control connection per (cluster, stage) process and read
+/// its `StageHello`.
+fn accept_stage_workers(
+    listener: &TcpListener,
+    clusters: usize,
+    stages: usize,
+    deadline: Instant,
+) -> Result<BTreeMap<(u32, u32), StageHandle>> {
+    listener
+        .set_nonblocking(true)
+        .context("control listener nonblocking")?;
+    let expected = clusters * stages;
+    let mut map = BTreeMap::new();
+    while map.len() < expected {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).ok();
+                stream.set_nodelay(true).ok();
+                stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                let mut stream = stream;
+                match read_msg(&mut stream) {
+                    Ok(Msg::StageHello { cluster, stage, ring_port, link_port }) => {
+                        if cluster as usize >= clusters || stage as usize >= stages {
+                            return Err(anyhow!(
+                                "stage hello ({cluster}, {stage}) out of range"
+                            ));
+                        }
+                        if map.contains_key(&(cluster, stage)) {
+                            return Err(anyhow!(
+                                "duplicate stage worker ({cluster}, {stage})"
+                            ));
+                        }
+                        stream
+                            .set_write_timeout(Some(Duration::from_secs(10)))
+                            .ok();
+                        map.insert(
+                            (cluster, stage),
+                            StageHandle { writer: stream, ring_port, link_port },
+                        );
+                    }
+                    _ => { /* not a stage worker — drop */ }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(anyhow!(
+                        "only {}/{} stage workers connected before the deadline",
+                        map.len(),
+                        expected
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => return Err(anyhow!("control accept failed: {e}")),
+        }
+    }
+    Ok(map)
+}
+
+/// Drop every cluster missing any stage process: a dead stage starves its
+/// siblings' dataflow, so the whole cluster leaves the membership and the
+/// orphaned siblings are told to shut down.
+fn prune_partial_clusters(
+    live: &mut BTreeMap<(u32, u32), StageHandle>,
+    stages: u32,
+) {
+    let clusters: BTreeSet<u32> = live.keys().map(|(c, _)| *c).collect();
+    for c in clusters {
+        if (0..stages).all(|s| live.contains_key(&(c, s))) {
+            continue;
+        }
+        for s in 0..stages {
+            if let Some(mut h) = live.remove(&(c, s)) {
+                let _ = write_msg(&mut h.writer, &Msg::Shutdown);
+            }
+        }
+    }
+}
+
+/// Run the stage-parallel elastic coordinator to completion: spawn the
+/// `dp × pp` stage-process fleet, supervise the per-stage rings through
+/// membership epochs, and assemble + evaluate the final model from the
+/// survivors' per-stage parameter digests.
+fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutcome> {
+    if cfg.workers == 0 {
+        return Err(anyhow!("need at least one cluster"));
+    }
+    let stages = cfg.pp_stages;
+    let listener =
+        TcpListener::bind("127.0.0.1:0").context("binding coordinator socket")?;
+    let coord_addr = listener.local_addr()?.to_string();
+    let mut children = spawn_stage_workers(cfg, mode, &coord_addr)?;
+
+    let supervised = supervise_stages(cfg, &listener);
+    reap_children(&mut children);
+    let (epoch, done, round_losses) = supervised?;
+
+    // Survivor clusters: every stage process completed.
+    let clusters: BTreeSet<u32> = done.keys().map(|(c, _)| *c).collect();
+    let survivors: Vec<u32> = clusters
+        .into_iter()
+        .filter(|c| (0..stages as u32).all(|s| done.contains_key(&(*c, s))))
+        .collect();
+    if survivors.is_empty() {
+        return Err(anyhow!("no cluster completed the run"));
+    }
+
+    // Assemble per-cluster full vectors from the per-stage digests (stage
+    // concatenation == the single flat layout).
+    let assemble = |c: u32| -> Vec<f32> {
+        let mut full = Vec::new();
+        for s in 0..stages as u32 {
+            full.extend_from_slice(&done[&(c, s)].params);
+        }
+        full
+    };
+    let p0 = assemble(survivors[0]);
+    let mut max_dev = 0.0f32;
+    for &c in &survivors[1..] {
+        let pc = assemble(c);
+        let dev = p0
+            .iter()
+            .zip(&pc)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        max_dev = max_dev.max(dev);
+    }
+    if max_dev > 1e-4 {
+        if epoch <= 1 {
+            // No churn happened: per-stage ring algebra is symmetric, so
+            // any divergence is a real bug.
+            return Err(anyhow!(
+                "stage fleets diverged: max param dev {max_dev}"
+            ));
+        }
+        eprintln!(
+            "[elastic] surviving clusters differ by max param dev {max_dev} \
+             after {epoch} membership epochs (final-round churn staleness)"
+        );
+    }
+
+    // Final eval over the assembled model (each stage process holds only
+    // its shard, so the coordinator evaluates).  Digests are exact for
+    // per-stage shards up to PARAMS_DIGEST_MAX elements; beyond that the
+    // eval is skipped rather than run on a strided sample.
+    let workload =
+        build_stage_pipeline(&cfg.workload, stages, cfg.microbatches, cfg.seed)?;
+    let expected: usize = (0..stages).map(|s| workload.stage_numel(s)).sum();
+    let final_loss = if p0.len() == expected {
+        workload.eval(&p0)?
+    } else {
+        eprintln!(
+            "[elastic] stage param digests truncated ({} of {expected} \
+             elements) — skipping the assembled final eval",
+            p0.len()
+        );
+        f32::NAN
+    };
+    let total_wire_bytes = done.values().map(|r| r.wire_bytes).sum();
+    Ok(ElasticOutcome {
+        rounds: cfg.rounds,
+        epochs: epoch,
+        started: cfg.workers,
+        survivors,
+        final_loss,
+        final_params: p0,
+        total_wire_bytes,
+        round_losses,
+    })
+}
+
+/// Accept the stage fleet, run the (cluster, stage)-keyed 2PC epochs, and
+/// watch the run to completion; returns (final epoch, per-(cluster,
+/// stage) done reports, heartbeat telemetry keyed by cluster).
+#[allow(clippy::type_complexity)]
+fn supervise_stages(
+    cfg: &ElasticConfig,
+    listener: &TcpListener,
+) -> Result<(u32, BTreeMap<(u32, u32), DoneReport>, Vec<(u32, u32, f32)>)> {
+    let stages = cfg.pp_stages as u32;
+    let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
+    let startup_deadline = Instant::now()
+        + Duration::from_millis(cfg.transport.connect_timeout_ms)
+        + Duration::from_secs(10);
+    let mut live =
+        accept_stage_workers(listener, cfg.workers, cfg.pp_stages, startup_deadline)?;
+
+    let (tx, rx) = mpsc::channel::<Event<(u32, u32)>>();
+    for (&key, handle) in live.iter() {
+        let rs = handle.writer.try_clone().context("cloning control stream")?;
+        rs.set_read_timeout(None).ok();
+        spawn_reader(key, rs, tx.clone());
+    }
+    drop(tx);
+
+    let grace = Duration::from_millis(cfg.transport.ring_timeout_ms * 2 + 2000);
+    let mut epoch: u32 = 0;
+    let mut resume_round: u32 = 1;
+    let mut done: BTreeMap<(u32, u32), DoneReport> = BTreeMap::new();
+    let mut round_losses: Vec<(u32, u32, f32)> = Vec::new();
+
+    // Telemetry + resume-round bookkeeping, applied to every event from a
+    // still-live process (orphans of dropped clusters are ignored — their
+    // progress reports must not steer the survivors' resume point).
+    fn note(
+        ev: &Event<(u32, u32)>,
+        live: &BTreeMap<(u32, u32), StageHandle>,
+        resume_round: &mut u32,
+        round_losses: &mut Vec<(u32, u32, f32)>,
+    ) {
+        let key = match ev {
+            Event::Msg(k, _) => k,
+            Event::Closed(k) => k,
+        };
+        if !live.contains_key(key) {
+            return;
+        }
+        if let Event::Msg((c, _), Msg::Heartbeat { round, loss }) = ev {
+            if !loss.is_nan() {
+                round_losses.push((*c, *round, *loss));
+            }
+            *resume_round = (*resume_round).max(round + 1);
+        }
+        if let Event::Msg(_, Msg::RingBroken { applied_rounds, .. }) = ev {
+            *resume_round = (*resume_round).max(applied_rounds + 1);
+        }
+    }
+
+    'epochs: loop {
+        if Instant::now() >= wall_deadline {
+            return Err(anyhow!("elastic stage run exceeded the wall timeout"));
+        }
+        prune_partial_clusters(&mut live, stages);
+        if live.is_empty() {
+            return Err(anyhow!("all clusters died"));
+        }
+        let clusters: BTreeSet<u32> = live.keys().map(|(c, _)| *c).collect();
+        let pending: Vec<u32> = clusters
+            .into_iter()
+            .filter(|c| (0..stages).any(|s| !done.contains_key(&(*c, s))))
+            .collect();
+        if pending.is_empty() {
+            break;
+        }
+
+        // -- 2PC prepare/commit, tailored per stage process ---------------
+        epoch += 1;
+        // When the shared resume point is already past the schedule, the
+        // remaining processes have nothing left to run (their peers
+        // completed the final round before a late break): commit size-1
+        // rings and no dataflow so they finish immediately.
+        let finishing = resume_round as usize > cfg.rounds;
+        let recipients: Vec<(u32, u32)> = pending
+            .iter()
+            .flat_map(|&c| (0..stages).map(move |s| (c, s)))
+            .filter(|k| !done.contains_key(k))
+            .collect();
+        let mut lost: Vec<(u32, u32)> = Vec::new();
+        for &(c, s) in &recipients {
+            let ring_members: Vec<(u32, u16)> = if finishing {
+                vec![(c, live[&(c, s)].ring_port)]
+            } else {
+                pending
+                    .iter()
+                    .filter(|&&c2| !done.contains_key(&(c2, s)))
+                    .map(|&c2| (c2, live[&(c2, s)].ring_port))
+                    .collect()
+            };
+            let link_down_port = if !finishing
+                && s + 1 < stages
+                && !done.contains_key(&(c, s + 1))
+            {
+                live[&(c, s + 1)].link_port
+            } else {
+                0
+            };
+            let h = live.get_mut(&(c, s)).unwrap();
+            if write_msg(
+                &mut h.writer,
+                &Msg::StagePrepare {
+                    epoch,
+                    resume_round,
+                    ring_members,
+                    link_down_port,
+                },
+            )
+            .is_err()
+            {
+                lost.push((c, s));
+            }
+        }
+        if !lost.is_empty() {
+            for k in lost {
+                live.remove(&k);
+            }
+            continue 'epochs;
+        }
+
+        let mut acked: BTreeSet<(u32, u32)> = BTreeSet::new();
+        let ack_deadline = Instant::now() + grace;
+        while !recipients.iter().all(|k| {
+            acked.contains(k) || done.contains_key(k) || !live.contains_key(k)
+        }) {
+            let left = ack_deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                // Someone never acked — supersede with a fresh epoch.
+                continue 'epochs;
+            }
+            match rx.recv_timeout(left) {
+                Ok(ev) => {
+                    note(&ev, &live, &mut resume_round, &mut round_losses);
+                    match ev {
+                        Event::Msg(k, Msg::PrepareAck { epoch: e }) if e == epoch => {
+                            acked.insert(k);
+                        }
+                        Event::Msg(k, Msg::Done { wire_bytes, final_loss, params, .. }) => {
+                            if live.contains_key(&k) {
+                                done.insert(
+                                    k,
+                                    DoneReport { wire_bytes, final_loss, params },
+                                );
+                            }
+                        }
+                        Event::Closed(k) => {
+                            if live.contains_key(&k) && !done.contains_key(&k) {
+                                live.remove(&k);
+                                continue 'epochs;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("all control channels lost"))
+                }
+            }
+        }
+        // Membership changed during the ack wait → the proposal is stale.
+        if recipients
+            .iter()
+            .any(|k| done.contains_key(k) || !live.contains_key(k))
+        {
+            continue 'epochs;
+        }
+
+        let mut lost: Vec<(u32, u32)> = Vec::new();
+        for k in &recipients {
+            if let Some(h) = live.get_mut(k) {
+                if write_msg(&mut h.writer, &Msg::Commit { epoch }).is_err() {
+                    lost.push(*k);
+                }
+            }
+        }
+        if !lost.is_empty() {
+            for k in lost {
+                live.remove(&k);
+            }
+            continue 'epochs;
+        }
+
+        // -- committed: watch the epoch run -------------------------------
+        let mut broken: BTreeSet<(u32, u32)> = BTreeSet::new();
+        loop {
+            if Instant::now() >= wall_deadline {
+                return Err(anyhow!("elastic stage run exceeded the wall timeout"));
+            }
+            let churn = match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(ev) => {
+                    note(&ev, &live, &mut resume_round, &mut round_losses);
+                    match ev {
+                        Event::Msg(k, Msg::Done { wire_bytes, final_loss, params, .. }) => {
+                            if live.contains_key(&k) {
+                                done.insert(
+                                    k,
+                                    DoneReport { wire_bytes, final_loss, params },
+                                );
+                            }
+                            false
+                        }
+                        Event::Msg(k, Msg::RingBroken { .. }) => {
+                            if live.contains_key(&k) {
+                                broken.insert(k);
+                                true
+                            } else {
+                                false
+                            }
+                        }
+                        Event::Closed(k) => {
+                            if live.contains_key(&k) && !done.contains_key(&k) {
+                                live.remove(&k);
+                                true
+                            } else {
+                                false
+                            }
+                        }
+                        _ => false,
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => false,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("all control channels lost"))
+                }
+            };
+            if live.keys().all(|k| done.contains_key(k)) {
+                break 'epochs;
+            }
+            if !churn {
+                continue;
+            }
+            // Churn: drain until every live, not-done process has reported
+            // its break (or a grace period passes), then re-form.
+            let drain_deadline = Instant::now() + grace;
+            loop {
+                let outstanding = live
+                    .keys()
+                    .filter(|k| !done.contains_key(k) && !broken.contains(k))
+                    .count();
+                if outstanding == 0 || Instant::now() >= drain_deadline {
+                    break;
+                }
+                if let Ok(ev) = rx.recv_timeout(Duration::from_millis(100)) {
+                    note(&ev, &live, &mut resume_round, &mut round_losses);
+                    match ev {
+                        Event::Msg(k, Msg::RingBroken { .. }) => {
+                            broken.insert(k);
+                        }
+                        Event::Msg(k, Msg::Done { wire_bytes, final_loss, params, .. }) => {
+                            if live.contains_key(&k) {
+                                done.insert(
+                                    k,
+                                    DoneReport { wire_bytes, final_loss, params },
+                                );
+                            }
+                        }
+                        Event::Closed(k) => {
+                            if !done.contains_key(&k) {
+                                live.remove(&k);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            continue 'epochs;
+        }
+    }
+
+    // -- success: graceful shutdown (caller reaps the processes) ----------
+    for h in live.values_mut() {
+        let _ = write_msg(&mut h.writer, &Msg::Shutdown);
+    }
+    Ok((epoch, done, round_losses))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1110,6 +2167,83 @@ mod tests {
             .max()
             .unwrap_or(0);
         assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn thread_mode_stage_fleet_converges() {
+        // 2 clusters × 2 stage processes (threads here): per-stage rings
+        // reduce independently, the 1F1B dataflow runs over TCP stage
+        // links, and the assembled model converges.
+        let mut cfg = ElasticConfig::synthetic_pipeline(2, 2, 5, 16);
+        cfg.transport.ring_timeout_ms = 1000;
+        cfg.transport.connect_timeout_ms = 5000;
+        cfg.wall_timeout_ms = 60_000;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.epochs, 1, "no churn expected");
+        assert_eq!(out.survivors, vec![0, 1]);
+        assert!(out.total_wire_bytes > 0);
+        assert_eq!(out.final_params.len(), 2 * 16);
+        let r1: Vec<f32> = out
+            .round_losses
+            .iter()
+            .filter(|(_, r, _)| *r == 1)
+            .map(|(_, _, l)| *l)
+            .collect();
+        assert_eq!(r1.len(), 2, "one labels-bearing heartbeat per cluster");
+        let r1_mean = r1.iter().sum::<f32>() / r1.len() as f32;
+        assert!(
+            out.final_loss < r1_mean * 0.5,
+            "final {} vs round-1 {}",
+            out.final_loss,
+            r1_mean
+        );
+    }
+
+    #[test]
+    fn thread_mode_stage_fleet_survives_stage_kill() {
+        // Kill ONE stage process (cluster 1, stage 1) at round 2: its
+        // whole cluster drops out, the surviving clusters' per-stage
+        // rings re-form, and the run completes with a finite final eval.
+        let mut cfg = ElasticConfig::synthetic_pipeline(3, 2, 6, 16);
+        cfg.transport.ring_timeout_ms = 1000;
+        cfg.transport.connect_timeout_ms = 5000;
+        cfg.wall_timeout_ms = 90_000;
+        cfg.faults.enabled = true;
+        cfg.faults.kill_rank = 1;
+        cfg.faults.kill_stage = 1;
+        cfg.faults.kill_round = 2;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 2], "cluster 1 must be gone entirely");
+        assert!(
+            out.epochs >= 2,
+            "expected re-formed stage rings, got {}",
+            out.epochs
+        );
+        assert!(out.final_loss.is_finite());
+        // Survivors completed the full schedule after recovery.
+        let max_round = out
+            .round_losses
+            .iter()
+            .map(|(_, r, _)| *r)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn stage_fault_plan_targets_one_process() {
+        let f = FaultConfig {
+            enabled: true,
+            kill_rank: 1,
+            kill_stage: 2,
+            kill_round: 3,
+            ..FaultConfig::default()
+        };
+        assert!(stage_fault_plan_for(&f, 0, 2, false).is_none());
+        assert!(stage_fault_plan_for(&f, 1, 0, false).is_none());
+        let p = stage_fault_plan_for(&f, 1, 2, true).unwrap();
+        assert_eq!(p.kill_round, 3);
+        assert!(p.exit_on_kill);
     }
 
     #[test]

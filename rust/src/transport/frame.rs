@@ -37,8 +37,30 @@ pub enum Msg {
     Shutdown,
     /// Ring-socket handshake: dialer identifies (rank, epoch); the
     /// acceptor drops connections from the wrong predecessor or a stale
-    /// epoch.
+    /// epoch.  Also reused by the intra-cluster stage-link chain (`rank`
+    /// then carries the *stage* index).
     RingHello { rank: u32, epoch: u32 },
+    /// Stage-link data plane: activations for one microbatch flowing
+    /// stage s → s+1 inside one cluster (1F1B dataflow over TCP).
+    Acts { micro: u32, payload: Vec<f32> },
+    /// Stage-link data plane: grad-activations for one microbatch flowing
+    /// stage s+1 → s inside one cluster.
+    Grads { micro: u32, payload: Vec<f32> },
+    /// Stage worker → coordinator, once at startup: one frame per
+    /// (cluster, stage) OS process, advertising both of its listeners —
+    /// the per-stage DP ring port and the intra-cluster stage-link port.
+    StageHello { cluster: u32, stage: u32, ring_port: u16, link_port: u16 },
+    /// Coordinator → one stage worker: *tailored* membership proposal for
+    /// `epoch` — the recipient's own per-stage DP ring in committed order
+    /// (`(cluster, ring_port)` on 127.0.0.1) plus the stage-link port of
+    /// its downstream neighbor stage in the same cluster (0 = none: last
+    /// stage, or a finishing epoch that forms no dataflow).
+    StagePrepare {
+        epoch: u32,
+        resume_round: u32,
+        ring_members: Vec<(u32, u16)>,
+        link_down_port: u16,
+    },
 }
 
 impl Msg {
@@ -54,6 +76,10 @@ impl Msg {
             Msg::Done { .. } => 7,
             Msg::Shutdown => 8,
             Msg::RingHello { .. } => 9,
+            Msg::Acts { .. } => 10,
+            Msg::Grads { .. } => 11,
+            Msg::StageHello { .. } => 12,
+            Msg::StagePrepare { .. } => 13,
         }
     }
 
@@ -70,6 +96,10 @@ impl Msg {
             Msg::Done { .. } => "Done",
             Msg::Shutdown => "Shutdown",
             Msg::RingHello { .. } => "RingHello",
+            Msg::Acts { .. } => "Acts",
+            Msg::Grads { .. } => "Grads",
+            Msg::StageHello { .. } => "StageHello",
+            Msg::StagePrepare { .. } => "StagePrepare",
         }
     }
 }
@@ -183,6 +213,26 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_u32(&mut b, *rank);
             put_u32(&mut b, *epoch);
         }
+        Msg::Acts { micro, payload } | Msg::Grads { micro, payload } => {
+            put_u32(&mut b, *micro);
+            put_f32s(&mut b, payload);
+        }
+        Msg::StageHello { cluster, stage, ring_port, link_port } => {
+            put_u32(&mut b, *cluster);
+            put_u32(&mut b, *stage);
+            put_u16(&mut b, *ring_port);
+            put_u16(&mut b, *link_port);
+        }
+        Msg::StagePrepare { epoch, resume_round, ring_members, link_down_port } => {
+            put_u32(&mut b, *epoch);
+            put_u32(&mut b, *resume_round);
+            put_u16(&mut b, ring_members.len() as u16);
+            for (cluster, port) in ring_members {
+                put_u32(&mut b, *cluster);
+                put_u16(&mut b, *port);
+            }
+            put_u16(&mut b, *link_down_port);
+        }
     }
     b
 }
@@ -220,6 +270,31 @@ pub fn decode(bytes: &[u8]) -> Result<Msg> {
         },
         8 => Msg::Shutdown,
         9 => Msg::RingHello { rank: c.u32()?, epoch: c.u32()? },
+        10 => Msg::Acts { micro: c.u32()?, payload: c.f32s()? },
+        11 => Msg::Grads { micro: c.u32()?, payload: c.f32s()? },
+        12 => Msg::StageHello {
+            cluster: c.u32()?,
+            stage: c.u32()?,
+            ring_port: c.u16()?,
+            link_port: c.u16()?,
+        },
+        13 => {
+            let epoch = c.u32()?;
+            let resume_round = c.u32()?;
+            let n = c.u16()? as usize;
+            let mut ring_members = Vec::with_capacity(n);
+            for _ in 0..n {
+                let cluster = c.u32()?;
+                let port = c.u16()?;
+                ring_members.push((cluster, port));
+            }
+            Msg::StagePrepare {
+                epoch,
+                resume_round,
+                ring_members,
+                link_down_port: c.u16()?,
+            }
+        }
         k => return Err(anyhow!("unknown frame kind {k}")),
     };
     Ok(msg)
@@ -280,6 +355,26 @@ mod tests {
         });
         roundtrip(Msg::Shutdown);
         roundtrip(Msg::RingHello { rank: 1, epoch: 2 });
+        roundtrip(Msg::Acts { micro: 3, payload: vec![1.0, -0.5] });
+        roundtrip(Msg::Grads { micro: 0, payload: vec![0.25; 9] });
+        roundtrip(Msg::StageHello {
+            cluster: 2,
+            stage: 1,
+            ring_port: 40001,
+            link_port: 40002,
+        });
+        roundtrip(Msg::StagePrepare {
+            epoch: 5,
+            resume_round: 3,
+            ring_members: vec![(0, 1111), (2, 2222)],
+            link_down_port: 0,
+        });
+        roundtrip(Msg::StagePrepare {
+            epoch: 1,
+            resume_round: 1,
+            ring_members: vec![(7, 65535)],
+            link_down_port: 40100,
+        });
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //! * **tcp** ([`tcp::TcpRing`]) — length-delimited frames over loopback
 //!   TCP, one OS *process* per cluster (`dilocox worker`), spawned by the
 //!   elastic coordinator ([`elastic`]).  A crashed worker is just a closed
-//!   socket.
+//!   socket.  With pipeline parallelism the unit becomes one process per
+//!   *(cluster, stage)*: the 1F1B dataflow crosses processes as
+//!   `Acts`/`Grads` frames ([`tcp::TcpStageLink`]) and each stage joins
+//!   its own cross-cluster ring.
 //! * **faulty** ([`faulty::FaultyRing`]) — a deterministic, Pcg32-seeded
 //!   wrapper over any backend that injects message delays, stragglers, and
 //!   worker kills at configured rounds (WAN churn scenarios).

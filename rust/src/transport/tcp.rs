@@ -1,11 +1,21 @@
-//! Loopback-TCP ring backend: one `dilocox worker` OS process per cluster,
-//! length-delimited [`frame`](crate::transport::frame) messages over
-//! 127.0.0.1 sockets.  Ring formation is dial-successor / accept-
-//! predecessor with an epoch-checked `RingHello` handshake; sockets carry
-//! read/write timeouts so a dead or stalled peer surfaces as an error
-//! mid-collective instead of a hang (the elastic coordinator's failure
-//! signal).
+//! Loopback-TCP ring backend: one `dilocox worker` OS process per cluster
+//! (or per (cluster, stage) in the stage-parallel fleet), length-delimited
+//! [`frame`](crate::transport::frame) messages over 127.0.0.1 sockets.
+//! Ring formation is dial-successor / accept-predecessor with an
+//! epoch-checked `RingHello` handshake; sockets carry read/write timeouts
+//! so a dead or stalled peer surfaces as an error mid-collective instead
+//! of a hang (the elastic coordinator's failure signal).
+//!
+//! Besides the ring ([`TcpRing`]) this module provides the TCP side of
+//! the pipeline dataflow: [`TcpStageLink`] implements
+//! [`StageLink`](crate::pipeline::exec::StageLink) over two neighbor
+//! sockets (upstream carries Acts down / Grads up; downstream the
+//! mirror), formed per membership epoch by [`form_stage_links`] with the
+//! same epoch-checked handshake as the ring.  [`stage_ports`] defines the
+//! deterministic listener layout used when
+//! `[transport] stage_listen_base_port` is set.
 
+use crate::pipeline::exec::StageLink;
 use crate::transport::frame::{read_msg, write_msg, Msg};
 use crate::transport::{ByteMeter, RingTransport};
 use anyhow::{anyhow, Context, Result};
@@ -78,6 +88,40 @@ fn dial_retry(port: u16, deadline: Instant) -> Result<TcpStream> {
                 std::thread::sleep(Duration::from_millis(20));
             }
         }
+    }
+}
+
+/// Dial `port` and run the epoch-checked `RingHello` handshake until the
+/// peer acks as `expect_rank` on `epoch` (or `deadline` passes).  A peer
+/// still on an older epoch silently drops us, which surfaces as a failed
+/// ack read; we retry until the deadline.  Shared by ring-successor and
+/// stage-link formation.
+fn dial_handshake(
+    port: u16,
+    my_rank: u32,
+    expect_rank: u32,
+    epoch: u32,
+    deadline: Instant,
+    io_timeout: Duration,
+) -> Result<TcpStream> {
+    loop {
+        let mut s = dial_retry(port, deadline)?;
+        s.set_nodelay(true).ok();
+        s.set_write_timeout(Some(io_timeout)).ok();
+        s.set_read_timeout(Some(io_timeout)).ok();
+        if write_msg(&mut s, &Msg::RingHello { rank: my_rank, epoch }).is_ok() {
+            if let Ok(Msg::RingHello { rank, epoch: e }) = read_msg(&mut s) {
+                if rank == expect_rank && e == epoch {
+                    return Ok(s);
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            return Err(anyhow!(
+                "handshake with rank {expect_rank} (epoch {epoch}) timed out"
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(20));
     }
 }
 
@@ -179,29 +223,8 @@ pub fn form_ring(
         )
     });
 
-    let dial = (|| -> Result<TcpStream> {
-        loop {
-            let mut s = dial_retry(succ_port, deadline)?;
-            s.set_nodelay(true).ok();
-            s.set_write_timeout(Some(ring_timeout)).ok();
-            s.set_read_timeout(Some(ring_timeout)).ok();
-            // Handshake: identify ourselves, then require the successor's
-            // ack — a successor still on an older epoch silently drops us,
-            // which surfaces here as a failed ack read; retry until the
-            // deadline.
-            if write_msg(&mut s, &Msg::RingHello { rank: my_rank, epoch }).is_ok() {
-                if let Ok(Msg::RingHello { rank, epoch: e }) = read_msg(&mut s) {
-                    if rank == succ_rank && e == epoch {
-                        return Ok(s);
-                    }
-                }
-            }
-            if Instant::now() >= deadline {
-                return Err(anyhow!("ring successor handshake timed out"));
-            }
-            std::thread::sleep(Duration::from_millis(20));
-        }
-    })();
+    let dial =
+        dial_handshake(succ_port, my_rank, succ_rank, epoch, deadline, ring_timeout);
 
     let accepted = acceptor
         .join()
@@ -231,6 +254,143 @@ pub fn form_ring(
         rx_prev: Some(rx_prev),
         meter: ByteMeter::default(),
     })
+}
+
+// ---------------------------------------------------------------------------
+// Stage links: the 1F1B dataflow over TCP (one OS process per stage)
+// ---------------------------------------------------------------------------
+
+/// Deterministic listener layout for the stage-parallel fleet when
+/// `[transport] stage_listen_base_port` is set: process (cluster c,
+/// stage s) of an M-stage pipeline binds its per-stage DP ring listener
+/// at `base + 2·(c·M + s)` and its stage-link listener one port above.
+/// Config validation guarantees the whole `2·D·M` block fits below
+/// 65536.  With base = 0 every listener binds an ephemeral OS port and
+/// the layout is carried by `StageHello` instead.
+pub fn stage_ports(base: u16, cluster: usize, stage: usize, stages: usize) -> (u16, u16) {
+    let idx = 2 * (cluster * stages + stage) as u32;
+    let ring = base as u32 + idx;
+    (ring as u16, (ring + 1) as u16)
+}
+
+/// One direction-neighbor socket of a stage process.  Writes are
+/// decoupled onto a writer thread for the same reason as [`TcpRing`]:
+/// the 1F1B steady state has both neighbors sending into each other
+/// (acts down, grads up), and synchronous writes larger than the socket
+/// buffers would deadlock the pair.  A dead peer still surfaces: the
+/// writer thread exits on a write error, the next send sees the hung-up
+/// queue, and the next read times out.
+struct LinkHalf {
+    tx: mpsc::Sender<Msg>,
+    rx: TcpStream,
+}
+
+fn link_half(stream: TcpStream) -> Result<LinkHalf> {
+    let mut write_stream = stream.try_clone().context("cloning link stream")?;
+    let (tx, rx) = mpsc::channel::<Msg>();
+    std::thread::spawn(move || {
+        while let Ok(m) = rx.recv() {
+            if write_msg(&mut write_stream, &m).is_err() {
+                break;
+            }
+        }
+    });
+    Ok(LinkHalf { tx, rx: stream })
+}
+
+/// [`StageLink`] over loopback TCP: `up` talks to stage s−1 (receives
+/// Acts, sends Grads), `down` to stage s+1 (sends Acts, receives Grads).
+/// Stage 0 has no `up`; the last stage has no `down`.
+pub struct TcpStageLink {
+    up: Option<LinkHalf>,
+    down: Option<LinkHalf>,
+}
+
+impl StageLink for TcpStageLink {
+    fn has_upstream(&self) -> bool {
+        self.up.is_some()
+    }
+
+    fn has_downstream(&self) -> bool {
+        self.down.is_some()
+    }
+
+    fn send_acts(&mut self, micro: usize, acts: Vec<f32>) -> Result<()> {
+        let d = self
+            .down
+            .as_ref()
+            .ok_or_else(|| anyhow!("last stage has no downstream link"))?;
+        d.tx.send(Msg::Acts { micro: micro as u32, payload: acts })
+            .map_err(|_| anyhow!("downstream stage link closed"))
+    }
+
+    fn recv_acts(&mut self) -> Result<(usize, Vec<f32>)> {
+        let u = self
+            .up
+            .as_mut()
+            .ok_or_else(|| anyhow!("first stage has no upstream link"))?;
+        match read_msg(&mut u.rx).context("stage link recv acts")? {
+            Msg::Acts { micro, payload } => Ok((micro as usize, payload)),
+            other => Err(anyhow!("expected Acts frame, got {}", other.name())),
+        }
+    }
+
+    fn send_grads(&mut self, micro: usize, grads: Vec<f32>) -> Result<()> {
+        let u = self
+            .up
+            .as_ref()
+            .ok_or_else(|| anyhow!("first stage has no upstream link"))?;
+        u.tx.send(Msg::Grads { micro: micro as u32, payload: grads })
+            .map_err(|_| anyhow!("upstream stage link closed"))
+    }
+
+    fn recv_grads(&mut self) -> Result<(usize, Vec<f32>)> {
+        let d = self
+            .down
+            .as_mut()
+            .ok_or_else(|| anyhow!("last stage has no downstream link"))?;
+        match read_msg(&mut d.rx).context("stage link recv grads")? {
+            Msg::Grads { micro, payload } => Ok((micro as usize, payload)),
+            other => Err(anyhow!("expected Grads frame, got {}", other.name())),
+        }
+    }
+}
+
+/// Form one stage process's intra-cluster dataflow links for a committed
+/// membership epoch.
+///
+/// The chain forms upstream-first: stage s (s > 0) accepts stage s−1 on
+/// its own link listener (epoch-checked `RingHello` handshake, stale
+/// connections dropped), then dials `down_port` — the link listener of
+/// stage s+1 in the same cluster (`None` on the last stage, or in a
+/// finishing epoch that runs no dataflow).  The chain has no cycle, so
+/// the sequential accept-then-dial unwinds from stage 0.  All sockets
+/// carry `io_timeout` read/write timeouts so a dead neighbor surfaces
+/// mid-1F1B as an error (churn signal), never a hang.
+pub fn form_stage_links(
+    stage: u32,
+    epoch: u32,
+    link_listener: &TcpListener,
+    down_port: Option<u16>,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+) -> Result<TcpStageLink> {
+    let deadline = Instant::now() + connect_timeout;
+    let up = if stage > 0 {
+        let l = link_listener.try_clone().context("cloning link listener")?;
+        let s = accept_predecessor(l, stage, stage - 1, epoch, deadline, io_timeout)?;
+        Some(link_half(s)?)
+    } else {
+        None
+    };
+    let down = match down_port {
+        Some(port) => {
+            let s = dial_handshake(port, stage, stage + 1, epoch, deadline, io_timeout)?;
+            Some(link_half(s)?)
+        }
+        None => None,
+    };
+    Ok(TcpStageLink { up, down })
 }
 
 #[cfg(test)]
@@ -329,6 +489,52 @@ mod tests {
         ring.allreduce_mean(&mut b).unwrap();
         assert_eq!(b, vec![4.0, 5.0]);
         assert_eq!(ring.meter().total(), 0);
+    }
+
+    #[test]
+    fn stage_links_carry_acts_down_and_grads_up() {
+        // Two stage processes (threads here) of one cluster: stage 0 dials
+        // stage 1's link listener; acts flow down, grads flow up, each
+        // tagged with its microbatch index.
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let p1 = l1.local_addr().unwrap().port();
+        let t = Duration::from_secs(5);
+        let upstream = std::thread::spawn(move || {
+            let mut link =
+                form_stage_links(0, 1, &l0, Some(p1), t, t).unwrap();
+            assert!(!link.has_upstream() && link.has_downstream());
+            link.send_acts(0, vec![1.0, 2.0]).unwrap();
+            link.send_acts(1, vec![3.0]).unwrap();
+            let (mi, g) = link.recv_grads().unwrap();
+            assert_eq!((mi, g), (0, vec![-1.0]));
+            // Endpoint misuse errors instead of hanging.
+            assert!(link.recv_acts().is_err());
+        });
+        let mut link = form_stage_links(1, 1, &l1, None, t, t).unwrap();
+        assert!(link.has_upstream() && !link.has_downstream());
+        assert_eq!(link.recv_acts().unwrap(), (0, vec![1.0, 2.0]));
+        assert_eq!(link.recv_acts().unwrap(), (1, vec![3.0]));
+        link.send_grads(0, vec![-1.0]).unwrap();
+        assert!(link.send_acts(0, vec![0.0]).is_err());
+        upstream.join().unwrap();
+    }
+
+    #[test]
+    fn stage_port_layout_is_dense_and_disjoint() {
+        let (dp, m) = (3usize, 4usize);
+        let mut seen = std::collections::BTreeSet::new();
+        for c in 0..dp {
+            for s in 0..m {
+                let (rp, lp) = stage_ports(42000, c, s, m);
+                assert_eq!(lp, rp + 1);
+                assert!(seen.insert(rp), "ring port {rp} reused");
+                assert!(seen.insert(lp), "link port {lp} reused");
+            }
+        }
+        assert_eq!(seen.len(), 2 * dp * m);
+        assert_eq!(stage_ports(42000, 0, 0, m).0, 42000);
+        assert_eq!(stage_ports(42000, 1, 0, m).0, 42000 + 2 * m as u16);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Stage-parallel TCP fleet integration: a 2-cluster × 2-stage fleet of
+//! real `dilocox worker --stage` OS processes on loopback must be
+//! bit-for-bit identical to the local threaded stage-parallel executor
+//! (same schedule, same ring algebra, same engine), and a seeded kill of
+//! one stage process mid-round must re-form the surviving per-stage rings
+//! and still complete with a final eval.
+
+use dilocox::compress::Method;
+use dilocox::pipeline::exec::{
+    local_stage_rings, run_pipeline, PipelineRunOpts, SyntheticPipeline,
+};
+use dilocox::transport::elastic::{run_elastic, ElasticConfig, SpawnMode};
+
+fn dilocox_bin() -> String {
+    env!("CARGO_BIN_EXE_dilocox").to_string()
+}
+
+/// Shared hyperparameters: sync mode, uncompressed fp32 rings — every
+/// floating-point operation sequence must match between deployments.
+const ROUNDS: usize = 3;
+const LOCAL_STEPS: usize = 4;
+const DIM: usize = 16;
+const SEED: u64 = 4242;
+
+fn fleet_cfg(clusters: usize, stages: usize) -> ElasticConfig {
+    let mut cfg = ElasticConfig::synthetic_pipeline(clusters, stages, ROUNDS, DIM);
+    cfg.local_steps = LOCAL_STEPS;
+    cfg.seed = SEED;
+    cfg.transport.ring_timeout_ms = 2000;
+    cfg.transport.connect_timeout_ms = 8000;
+    cfg.wall_timeout_ms = 90_000;
+    cfg
+}
+
+fn local_opts() -> PipelineRunOpts {
+    PipelineRunOpts {
+        rounds: ROUNDS,
+        local_steps: LOCAL_STEPS,
+        inner_lr: 0.05,
+        weight_decay: 0.0,
+        outer_lr: 0.7,
+        outer_momentum: 0.6,
+        overlap: false,
+        error_feedback: false,
+        method: Method::None,
+        seed: SEED,
+    }
+}
+
+#[test]
+fn tcp_stage_fleet_matches_local_threaded_run_bit_for_bit() {
+    let (dp, stages, micros) = (2usize, 2usize, 2usize);
+    // Local: one thread per (worker, stage), mpsc links, mpsc rings.
+    let wl = SyntheticPipeline::new(stages, micros, DIM, SEED);
+    let local =
+        run_pipeline(&wl, dp, local_stage_rings(dp, stages), &local_opts())
+            .unwrap();
+
+    // TCP: one OS process per (cluster, stage), TCP stage links, per-stage
+    // loopback-TCP rings, spawned via std::process::Command.
+    let cfg = fleet_cfg(dp, stages);
+    assert_eq!(cfg.microbatches, micros, "test assumes U = 2");
+    let fleet =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+
+    assert_eq!(fleet.started, dp);
+    assert_eq!(fleet.survivors, vec![0, 1]);
+    assert_eq!(fleet.epochs, 1, "no churn expected");
+    // The headline guarantee: identical schedule + identical fp order on
+    // every wire ⇒ the assembled final parameters agree EXACTLY.
+    assert_eq!(local.final_params, fleet.final_params);
+    assert_eq!(local.final_eval, fleet.final_loss);
+    // Unified wire accounting: per-stage ring payloads sum identically.
+    assert_eq!(local.total_wire_bytes, fleet.total_wire_bytes);
+    assert!(fleet.total_wire_bytes > 0);
+}
+
+#[test]
+fn tcp_stage_fleet_survives_stage_process_kill_at_round_2() {
+    // Seeded churn: the stage-0 process of cluster 1 exits at the start
+    // of round 2.  Its whole cluster drops out (the sibling stage starves
+    // and is shut down), the surviving clusters' per-stage rings re-form
+    // on a bumped epoch, and the run completes every round with a finite
+    // assembled eval.
+    let mut cfg = fleet_cfg(3, 2);
+    cfg.rounds = 5;
+    cfg.faults.enabled = true;
+    cfg.faults.kill_rank = 1;
+    cfg.faults.kill_stage = 0;
+    cfg.faults.kill_round = 2;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 2], "cluster 1 must be gone entirely");
+    assert!(
+        out.epochs >= 2,
+        "per-stage rings must have re-formed, epochs={}",
+        out.epochs
+    );
+    assert!(out.final_loss.is_finite());
+    assert_eq!(out.final_params.len(), 2 * DIM);
+    // Survivors completed the full schedule after recovery.
+    let max_round = out
+        .round_losses
+        .iter()
+        .map(|(_, r, _)| *r)
+        .max()
+        .unwrap_or(0);
+    assert_eq!(max_round as usize, cfg.rounds);
+    // The survivor rings still converge (per-stage means rescaled to the
+    // two remaining clusters).
+    let r1: Vec<f32> = out
+        .round_losses
+        .iter()
+        .filter(|(_, r, _)| *r == 1)
+        .map(|(_, _, l)| *l)
+        .collect();
+    assert!(!r1.is_empty());
+    let r1_mean = r1.iter().sum::<f32>() / r1.len() as f32;
+    assert!(
+        out.final_loss < r1_mean,
+        "final {} vs round-1 {}",
+        out.final_loss,
+        r1_mean
+    );
+}
+
+#[test]
+fn deterministic_port_layout_fleet_runs() {
+    // stage_listen_base_port pins every listener to a computed port; the
+    // fleet must come up and converge on the fixed layout too.
+    let mut cfg = fleet_cfg(2, 2);
+    // Below the usual Linux ephemeral range (32768+) to avoid collisions
+    // with other tests' OS-assigned ports.
+    cfg.transport.stage_listen_base_port = 24310;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 1]);
+    assert!(out.final_loss.is_finite());
+}
