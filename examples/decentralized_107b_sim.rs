@@ -5,15 +5,35 @@
 //! becomes practical.
 //!
 //!     cargo run --release --example decentralized_107b_sim
+//!
+//! With `--calibrate-from run.json` (a `coordinate --report` JSON from
+//! either the threaded executor or the elastic TCP fleet — both ship
+//! measured per-stage `step_secs`), the DES tables are recomputed from
+//! the MEASURED step time instead of the FLOP model:
+//!
+//!     cargo run --release -- coordinate --transport tcp --pp 2 \
+//!         --synthetic --report run.json
+//!     cargo run --release --example decentralized_107b_sim -- \
+//!         --calibrate-from run.json
 
 use dilocox::config::Algo;
 use dilocox::metrics::Table;
 use dilocox::netsim::{Link, LinkFaultModel};
 use dilocox::report::{self, paper};
 use dilocox::sim::{self, ScaleConfig, SimAlgo};
+use dilocox::util::json::Json;
 use dilocox::util::{fmt_bytes, fmt_secs};
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(i) = argv.iter().position(|a| a == "--calibrate-from") {
+        let Some(path) = argv.get(i + 1) else {
+            eprintln!("--calibrate-from needs a run-report JSON path");
+            std::process::exit(2);
+        };
+        calibrate_from(path);
+        return;
+    }
     let rounds = 16;
 
     // ---- Figure 4 at both scales ---------------------------------------
@@ -146,6 +166,106 @@ fn main() {
     // toy CPU chain, not an A800: compare *shapes* — per-stage balance and
     // straggler spread — not magnitudes.)
     measured_stage_times();
+}
+
+/// `--calibrate-from run.json`: recompute the modeled tables from the
+/// measured per-stage step times a real run reported (the closing of the
+/// DES calibration loop — ROADMAP: "feed measured stage times back into
+/// the simulator").  The measured numbers come from whatever hardware
+/// produced the report (a laptop CPU for the synthetic chain, an A800
+/// node for a real bundle), so absolute throughput reflects THAT
+/// hardware; the point is that the sync-hiding structure (comm hidden
+/// behind H×step) is now computed from measurement, not a FLOP model.
+fn calibrate_from(path: &str) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading {path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let v = match Json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("parsing {path}: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let Some(arr) = v.path("stage_times").and_then(|j| j.as_arr()) else {
+        eprintln!(
+            "{path} has no stage_times — produce it with \
+             `dilocox coordinate --report {path}` (threaded or TCP fleet)"
+        );
+        std::process::exit(1);
+    };
+    let mut measured: Vec<(usize, f64, usize)> = Vec::new();
+    for e in arr {
+        let stage = e.path("stage").and_then(|j| j.as_usize()).unwrap_or(0);
+        let mean = e
+            .path("mean_step_secs")
+            .and_then(|j| j.as_f64())
+            .unwrap_or(0.0);
+        let samples =
+            e.path("samples").and_then(|j| j.as_usize()).unwrap_or(0);
+        measured.push((stage, mean, samples));
+    }
+    // The 1F1B steady state is bounded by the slowest stage: calibrate
+    // the per-step time to the worst measured stage mean.
+    let step = measured.iter().map(|&(_, m, _)| m).fold(0.0f64, f64::max);
+    if step <= 0.0 {
+        eprintln!("{path} carries no usable step_secs samples");
+        std::process::exit(1);
+    }
+    println!("Calibrating the DES from {path}:");
+    let mut t = Table::new(&["stage", "measured mean/step", "samples"]);
+    for (s, m, n) in &measured {
+        t.row(&[s.to_string(), format!("{:.3} ms", 1e3 * m), n.to_string()]);
+    }
+    println!("{}", t.render());
+    println!(
+        "calibrated 1F1B step = {:.3} ms (slowest measured stage mean)\n",
+        1e3 * step
+    );
+
+    // The H trade-off, recomputed from the measured step: where the sync
+    // hides behind local compute on the hardware that was measured.
+    let scale = ScaleConfig::qwen_107b();
+    println!(
+        "DiLoCoX H sweep with the MEASURED step (network: {} Gbps WAN):",
+        scale.net.inter_bw_gbps
+    );
+    let mut t = Table::new(&["H", "sync time", "local phase", "comm hidden?", "GPU util"]);
+    for h in [25, 50, 125, 250, 500] {
+        let mut algo = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+        algo.local_steps = h;
+        let r = sim::simulate_calibrated(&scale, &algo, 16, Some(step));
+        let local_phase = step * h as f64;
+        t.row(&[
+            h.to_string(),
+            fmt_secs(r.comm_secs),
+            fmt_secs(local_phase),
+            if r.comm_secs <= local_phase { "yes".into() } else { "NO".into() },
+            format!("{:.0}%", 100.0 * r.gpu_utilization),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Modeled-vs-calibrated side by side for the paper setting.
+    let algo = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+    let modeled = sim::simulate(&scale, &algo, 16);
+    let calibrated = sim::simulate_calibrated(&scale, &algo, 16, Some(step));
+    let mut t = Table::new(&["quantity", "FLOP model", "calibrated"]);
+    t.row(&[
+        "step time".into(),
+        fmt_secs(modeled.step_secs),
+        fmt_secs(calibrated.step_secs),
+    ]);
+    t.row(&[
+        "GPU utilization".into(),
+        format!("{:.0}%", 100.0 * modeled.gpu_utilization),
+        format!("{:.0}%", 100.0 * calibrated.gpu_utilization),
+    ]);
+    println!("{}", t.render());
 }
 
 fn measured_stage_times() {

@@ -143,7 +143,8 @@ fn main() -> anyhow::Result<()> {
         );
         println!(
             "note: the elastic tcp path ships raw fp32 pseudo-gradients \
-             (--rank / overlap do not apply)"
+             (--rank does not apply; one-step-delay overlap does — churn \
+             mid-reduction recovers via drain-or-discard)"
         );
         if !args.get("csv").is_empty() {
             let mut csv = String::from("round,mean_loss,workers\n");

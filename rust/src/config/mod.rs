@@ -180,6 +180,14 @@ pub struct FaultConfig {
     /// Stage-parallel fleets only: which stage process of `kill_rank`
     /// dies at `kill_round` (ignored when `pp = 1`; must be < pp).
     pub kill_stage: usize,
+    /// Soft churn: `break_rank` reports a broken ring at the start of
+    /// this round (0 = never) without dying, then rejoins at the next
+    /// membership epoch.  In a stage fleet the break applies to EVERY
+    /// stage process of the cluster at once, so the intra-cluster data
+    /// streams stay aligned.  Deterministically exercises the *discard*
+    /// branch of in-flight overlap recovery.
+    pub break_round: usize,
+    pub break_rank: usize,
     /// Fixed extra send latency for `straggler_rank` (0 ms = off).
     pub straggler_rank: usize,
     pub straggler_ms: u64,
@@ -195,6 +203,8 @@ impl Default for FaultConfig {
             kill_round: 0,
             kill_rank: 0,
             kill_stage: 0,
+            break_round: 0,
+            break_rank: 0,
             straggler_rank: 0,
             straggler_ms: 0,
         }
@@ -397,6 +407,8 @@ impl ExperimentConfig {
         set_usize!("faults.kill_round", cfg.faults.kill_round);
         set_usize!("faults.kill_rank", cfg.faults.kill_rank);
         set_usize!("faults.kill_stage", cfg.faults.kill_stage);
+        set_usize!("faults.break_round", cfg.faults.break_round);
+        set_usize!("faults.break_rank", cfg.faults.break_rank);
         set_usize!("faults.straggler_rank", cfg.faults.straggler_rank);
         if let Some(x) = v.path("faults.straggler_ms").and_then(|j| j.as_usize())
         {
@@ -478,6 +490,16 @@ impl ExperimentConfig {
                 "faults.kill_stage {} out of range for pp={}",
                 self.faults.kill_stage,
                 self.parallel.pp
+            ));
+        }
+        if self.faults.enabled
+            && self.faults.break_round > 0
+            && self.faults.break_rank >= self.parallel.dp
+        {
+            return Err(anyhow!(
+                "faults.break_rank {} out of range for dp={}",
+                self.faults.break_rank,
+                self.parallel.dp
             ));
         }
         Ok(())
@@ -747,6 +769,29 @@ kill_stage = 1
         cfg.parallel.pp = 3;
         let err = cfg.validate_with_manifest(&man).unwrap_err().to_string();
         assert!(err.contains("pp_stages = 4"), "{err}");
+    }
+
+    #[test]
+    fn break_round_parses_and_validates() {
+        let src = r#"
+algo = "dilocox"
+[model]
+preset = "tiny"
+[parallel]
+dp = 3
+[faults]
+enabled = true
+break_round = 3
+break_rank = 1
+"#;
+        let v = toml::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.faults.break_round, 3);
+        assert_eq!(cfg.faults.break_rank, 1);
+
+        let mut bad = cfg.clone();
+        bad.faults.break_rank = 7; // dp = 3
+        assert!(bad.validate().is_err());
     }
 
     #[test]

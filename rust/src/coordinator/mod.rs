@@ -50,13 +50,15 @@ use crate::pipeline::exec::{
     local_stage_rings, run_pipeline, PipelineRunOpts, PipelineWorkload,
     StageCompute, StageTimeSummary,
 };
-use crate::rounds::{movement, RingLane, RoundEngine};
+use crate::rounds::driver::{EpochEnd, RoundDriver, RoundWork};
+use crate::rounds::{RingLane, RoundEngine};
 use crate::runtime::manifest::ParamEntry;
 use crate::runtime::{HostArg, Manifest, Runtime};
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Per-round report a worker sends to the leader.
 #[derive(Clone, Debug)]
@@ -149,6 +151,96 @@ pub fn run_threaded(cfg: &ExperimentConfig, artifacts_dir: &str) -> Result<Coord
     })
 }
 
+/// One worker's real-numerics local work: H `step_single` steps through
+/// the PJRT runtime + inner AdamW per round, plus the shared held-out
+/// eval.  The ONE copy of the single-program inner loop, used by both
+/// the threaded coordinator (`worker_main`) and the elastic fleet's
+/// runtime workload ([`crate::transport::elastic`]) — keep it that way.
+pub(crate) struct RuntimeStepWork {
+    pub(crate) rt: Runtime,
+    shard: ShardIter,
+    inner: AdamW,
+    params: Vec<f32>,
+    corpus: Arc<MarkovCorpus>,
+    seed: u64,
+    microbatch: usize,
+    seq_len: usize,
+}
+
+impl RuntimeStepWork {
+    /// Load the bundle, precompile the single-program pair, and shard
+    /// the corpus for `rank`.
+    pub(crate) fn new(
+        dir: &str,
+        rank: usize,
+        seed: u64,
+        inner_lr: f32,
+        weight_decay: f32,
+    ) -> Result<RuntimeStepWork> {
+        let rt = Runtime::load(dir)
+            .with_context(|| format!("loading artifacts from {dir}"))?;
+        rt.precompile(&["step_single", "eval_single"])?;
+        let man = &rt.manifest;
+        let (b, s) = (man.dims.microbatch, man.dims.seq_len);
+        let corpus = Arc::new(MarkovCorpus::new(man.dims.vocab_size, seed));
+        let shard = ShardIter::new(Arc::clone(&corpus), rank, seed, b, s);
+        let params = man.read_f32(&man.init["single"].file)?;
+        let inner = AdamW::new(man.param_count, inner_lr, weight_decay);
+        Ok(RuntimeStepWork {
+            shard,
+            inner,
+            params,
+            corpus,
+            seed,
+            microbatch: b,
+            seq_len: s,
+            rt,
+        })
+    }
+
+    /// Shared eval set (same construction as the reference trainer).
+    pub(crate) fn eval_loss(&mut self) -> Result<f32> {
+        let mut it = ShardIter::new(
+            Arc::clone(&self.corpus),
+            9999,
+            self.seed ^ 0xe7a1,
+            self.microbatch,
+            self.seq_len,
+        );
+        let mut acc = 0.0f32;
+        let batches = 3;
+        for _ in 0..batches {
+            let (t, l) = it.next_batch();
+            acc += self.rt.eval_single(&self.params, &t, &l)?;
+        }
+        Ok(acc / batches as f32)
+    }
+}
+
+impl RoundWork for RuntimeStepWork {
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        self.params.copy_from_slice(p);
+    }
+
+    fn local_round(&mut self, h: usize) -> Result<(f32, f64)> {
+        let mut loss_acc = 0.0f64;
+        let mut busy = 0.0f64;
+        for _ in 0..h {
+            let (tok, lab) = self.shard.next_batch();
+            let t0 = Instant::now();
+            let (loss, grads) = self.rt.step_single(&self.params, &tok, &lab)?;
+            self.inner.step(&mut self.params, &grads);
+            busy += t0.elapsed().as_secs_f64();
+            loss_acc += loss as f64;
+        }
+        Ok(((loss_acc / h.max(1) as f64) as f32, busy / h.max(1) as f64))
+    }
+}
+
 fn worker_main(
     w: usize,
     member: Box<dyn crate::transport::RingTransport>,
@@ -157,70 +249,51 @@ fn worker_main(
     method: Method,
     tx: mpsc::Sender<RoundReport>,
 ) -> Result<(Vec<f32>, f32, u64)> {
-    let rt = Runtime::load(dir)?;
-    rt.precompile(&["step_single", "eval_single"])?;
-    let man = &rt.manifest;
-    let spec = man.param_specs["single"].clone();
-    let n = man.param_count;
-    let (b, s) = (man.dims.microbatch, man.dims.seq_len);
+    let mut work = RuntimeStepWork::new(
+        dir,
+        w,
+        cfg.train.seed,
+        cfg.train.inner_lr,
+        cfg.train.weight_decay,
+    )?;
+    let spec = work.rt.manifest.param_specs["single"].clone();
+    let n = work.rt.manifest.param_count;
 
-    let corpus = Arc::new(MarkovCorpus::new(man.dims.vocab_size, cfg.train.seed));
-    let mut shard = ShardIter::new(Arc::clone(&corpus), w, cfg.train.seed, b, s);
-    let mut params = man.read_f32(&man.init["single"].file)?;
-    let mut inner = AdamW::new(n, cfg.train.inner_lr, cfg.train.weight_decay);
     // Shared outer-round engine: the global track θ_g moves only by outer
-    // updates; every worker computes the identical sequence.
-    let mut engine = RoundEngine::new(
-        params.clone(),
+    // updates; every worker computes the identical sequence.  The round
+    // loop itself is the one epoch-aware driver (single epoch here: the
+    // threaded coordinator has no membership churn).
+    let engine = RoundEngine::new(
+        work.params.clone(),
         1,
         Nesterov::new(n, cfg.train.outer_lr, cfg.train.outer_momentum),
         cfg.train.overlap,
         cfg.compression.error_feedback,
     );
-    let mut lane =
+    let lane =
         RingLane::new(member, method, cfg.train.seed, spec, cfg.train.overlap);
     let h = cfg.train.local_steps;
 
-    for round in 1..=cfg.train.outer_steps {
-        let anchor = params.clone();
-        let mut loss_acc = 0.0f64;
-        for _ in 0..h {
-            let (tok, lab) = shard.next_batch();
-            let (loss, grads) = rt.step_single(&params, &tok, &lab)?;
-            inner.step(&mut params, &grads);
-            loss_acc += loss as f64;
-        }
-
-        let mv = movement(&anchor, &params);
-        if engine.finish_round(vec![mv], round as u64, &mut lane)?.is_some() {
-            params.copy_from_slice(engine.theta());
-        }
-
+    let mut driver =
+        RoundDriver::new(engine, lane, cfg.train.outer_steps, h);
+    let end = driver.run_rounds(1, &mut work, &mut |t| {
         tx.send(RoundReport {
             worker: w,
-            round,
-            mean_loss: (loss_acc / h as f64) as f32,
-            wire_bytes: lane.wire_last,
+            round: t.round,
+            mean_loss: t.loss,
+            wire_bytes: t.wire_bytes,
             h_steps: h,
         })
         .ok();
+    })?;
+    if let EpochEnd::Broken(e) = end {
+        return Err(e.context("ring broke in the threaded coordinator"));
     }
-
     // Drain a trailing in-flight reduction.
-    if engine.drain(&mut lane)?.is_some() {
-        params.copy_from_slice(engine.theta());
-    }
+    driver.finish(&mut work)?;
 
-    // Shared eval set (same construction as the reference trainer).
-    let mut eval_iter =
-        ShardIter::new(Arc::clone(&corpus), 9999, cfg.train.seed ^ 0xe7a1, b, s);
-    let mut acc = 0.0f32;
-    let eval_batches = 3;
-    for _ in 0..eval_batches {
-        let (t, l) = eval_iter.next_batch();
-        acc += rt.eval_single(&params, &t, &l)?;
-    }
-    Ok((params, acc / eval_batches as f32, lane.wire_total))
+    let eval = work.eval_loss()?;
+    Ok((work.params, eval, driver.wire_total()))
 }
 
 // ---------------------------------------------------------------------------
@@ -415,6 +488,11 @@ impl PipelineWorkload for RuntimeStagePipeline {
             params0,
             spec,
             micros: self.micros,
+            worker,
+            seed: self.seed,
+            vocab: self.vocab,
+            microbatch: self.microbatch,
+            seq_len: self.seq_len,
             shard,
             tokens: Vec::new(),
             labels: Vec::new(),
@@ -449,6 +527,11 @@ struct RuntimeStageCompute {
     params0: Vec<f32>,
     spec: Vec<ParamEntry>,
     micros: usize,
+    worker: usize,
+    seed: u64,
+    vocab: usize,
+    microbatch: usize,
+    seq_len: usize,
     shard: Option<ShardIter>,
     /// This inner step's microbatch tokens (first & last stages).
     tokens: Vec<Vec<i32>>,
@@ -482,6 +565,27 @@ impl StageCompute for RuntimeStageCompute {
                 self.labels.push(l);
             }
         }
+        Ok(())
+    }
+
+    fn reset_data(&mut self, round: usize) -> Result<()> {
+        // Elastic churn recovery: re-derive the shard stream as a pure
+        // function of (seed, worker, round) so the first and last stage
+        // of one cluster re-align no matter where the break caught each
+        // of them (see `StageCompute::reset_data`).
+        if self.shard.is_some() {
+            let corpus = Arc::new(MarkovCorpus::new(self.vocab, self.seed));
+            self.shard = Some(ShardIter::new(
+                corpus,
+                self.worker,
+                self.seed ^ (round as u64).wrapping_mul(0x9e3779b97f4a7c15),
+                self.microbatch,
+                self.seq_len,
+            ));
+        }
+        self.tokens.clear();
+        self.labels.clear();
+        self.stash.clear();
         Ok(())
     }
 

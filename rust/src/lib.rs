@@ -11,10 +11,13 @@
 //!   DES throughput simulator.
 //! * L3 rounds: the single outer-round engine ([`rounds::RoundEngine`])
 //!   owning Algorithm 2's delta/error-feedback/outer-step/overlap
-//!   ordering, plus the AllReduce-compatible wire compressor and the
-//!   comm-thread overlap lane.  Consumed by [`train`], [`coordinator`],
-//!   [`transport::elastic`], and [`pipeline::exec`] — the ordering exists
-//!   in exactly one place.
+//!   ordering, plus the AllReduce-compatible wire compressor, the
+//!   comm-thread overlap lane (reseedable across membership epochs), and
+//!   the ONE epoch-aware worker round loop ([`rounds::driver`]) — the
+//!   drain-or-discard recovery of in-flight overlapped reductions lives
+//!   there.  Consumed by [`train`], [`coordinator`],
+//!   [`transport::elastic`], and [`pipeline::exec`] — the ordering and
+//!   the round loop exist in exactly one place.
 //! * L3 pipeline: 1F1B/GPipe schedules as per-stage op streams with one
 //!   dependency oracle ([`pipeline::execute_streams`]) shared by the
 //!   validator and the DES, and the real stage-parallel executor

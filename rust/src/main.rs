@@ -282,6 +282,10 @@ fn elastic_report_json(cfg: &ExperimentConfig, out: &ElasticOutcome) -> Json {
         ("final_eval", json_num_or_null(out.final_loss as f64)),
         ("total_wire_bytes", Json::Num(out.total_wire_bytes as f64)),
         ("rounds", rounds),
+        // Measured per-stage step times from the fleet's heartbeats —
+        // same shape as the threaded report, so the DES calibration
+        // (`--calibrate-from`) consumes either.
+        ("stage_times", stage_times_json(&out.stage_times)),
     ])
 }
 
@@ -502,10 +506,12 @@ fn cmd_worker(argv: &[String]) -> i32 {
     .opt("artifacts", "", "artifact dir (runtime workload)")
     .opt("ring-timeout-ms", "5000", "ring socket timeout")
     .opt("connect-timeout-ms", "5000", "ring formation deadline")
+    .flag("overlap", "one-step-delay overlap of comm and local training (§2.3)")
     .opt("fault-seed", "7", "fault injection seed")
     .opt("fault-delay-prob", "0", "probability a sent message is delayed")
     .opt("fault-delay-ms", "0", "max injected delay per message, ms")
     .opt("fault-kill-round", "0", "exit at this round (0 = never)")
+    .opt("fault-break-round", "0", "soft ring break at this round (0 = never)")
     .opt("fault-straggler-ms", "0", "fixed extra latency per send, ms");
     let args = match spec.parse(argv) {
         Ok(a) => a,
@@ -591,6 +597,7 @@ fn worker_opts_from_args(args: &dilocox::util::cli::Args) -> Result<WorkerOpts, 
         delay_prob: args.get_f64("fault-delay-prob")?,
         max_delay_ms: args.get_u64("fault-delay-ms")?,
         kill_round: args.get_usize("fault-kill-round")?,
+        break_round: args.get_usize("fault-break-round")?,
         straggler_ms: args.get_u64("fault-straggler-ms")?,
         exit_on_kill: true,
     };
@@ -605,6 +612,7 @@ fn worker_opts_from_args(args: &dilocox::util::cli::Args) -> Result<WorkerOpts, 
         outer_momentum: args.get_f64("outer-momentum")? as f32,
         seed: args.get_u64("seed")?,
         workload,
+        overlap: args.flag("overlap"),
         ring_timeout_ms: args.get_u64("ring-timeout-ms")?,
         connect_timeout_ms: args.get_u64("connect-timeout-ms")?,
         faults: if plan.is_quiet() { None } else { Some(plan) },

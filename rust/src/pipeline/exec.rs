@@ -65,9 +65,10 @@
 
 use crate::comm::ring::build_ring;
 use crate::compress::Method;
-use crate::optim::DualOptimizer;
+use crate::optim::{AdamW, DualOptimizer};
 use crate::pipeline::{one_f_one_b_schedule, validate_schedule, Cell};
-use crate::rounds::{movement, RoundEngine, RingLane};
+use crate::rounds::driver::{EpochEnd, RoundDriver, RoundTelemetry, RoundWork};
+use crate::rounds::{RingLane, RoundEngine};
 use crate::runtime::manifest::ParamEntry;
 use crate::transport::RingTransport;
 use crate::util::json::{obj, Json};
@@ -91,6 +92,17 @@ pub trait StageCompute {
     /// Advance to the next inner step's data (called once per inner
     /// step, before the microbatch schedule runs).
     fn next_step(&mut self) -> Result<()>;
+    /// Deterministically re-align this stage's data stream to resume at
+    /// `round` (elastic churn recovery).  Under one-step-delay overlap a
+    /// break can catch sibling stages a partial round apart, so
+    /// data-bearing stages must re-derive their stream as a pure
+    /// function of (seed, worker, round) or the first and last stage
+    /// would consume mismatched microbatches after recovery.  Default:
+    /// no-op (stateless stages).  Never called on the un-churned path,
+    /// so threaded-vs-fleet bit parity is unaffected.
+    fn reset_data(&mut self, _round: usize) -> Result<()> {
+        Ok(())
+    }
     /// Forward one microbatch.  `acts_in` is `None` on stage 0.  Returns
     /// the activations to ship downstream (`None` on the last stage).
     /// Implementations stash whatever their backward needs.
@@ -204,6 +216,40 @@ pub struct StageTimeSummary {
     pub max_step_secs: f64,
 }
 
+/// Aggregate raw `(stage, measured step secs)` samples into per-stage
+/// summaries — shared by [`PipelineOutcome::stage_time_summary`] (local
+/// threaded runs) and the elastic coordinator's heartbeat telemetry
+/// (TCP fleet runs), so `coordinate --report` covers both deployments
+/// with one shape.  Non-finite samples (e.g. a worker that measured
+/// nothing) are dropped.
+pub fn summarize_step_samples(samples: &[(u32, f64)]) -> Vec<StageTimeSummary> {
+    let stages = samples
+        .iter()
+        .map(|&(s, _)| s as usize + 1)
+        .max()
+        .unwrap_or(0);
+    (0..stages)
+        .map(|s| {
+            let vals: Vec<f64> = samples
+                .iter()
+                .filter(|&&(st, v)| st as usize == s && v.is_finite())
+                .map(|&(_, v)| v)
+                .collect();
+            let n = vals.len();
+            StageTimeSummary {
+                stage: s,
+                samples: n,
+                mean_step_secs: if n > 0 {
+                    vals.iter().sum::<f64>() / n as f64
+                } else {
+                    0.0
+                },
+                max_step_secs: vals.iter().cloned().fold(0.0, f64::max),
+            }
+        })
+        .collect()
+}
+
 /// Serialize stage-time summaries for the run report JSON (the one
 /// serializer shared by [`PipelineOutcome::to_json`] and the CLI report
 /// writer).
@@ -238,33 +284,12 @@ impl PipelineOutcome {
     /// (the numbers the DES calibration consumes; see
     /// [`crate::sim::pipeline_step_secs`] for the modeled counterpart).
     pub fn stage_time_summary(&self) -> Vec<StageTimeSummary> {
-        let stages = self
+        let samples: Vec<(u32, f64)> = self
             .reports
             .iter()
-            .map(|r| r.stage + 1)
-            .max()
-            .unwrap_or(0);
-        (0..stages)
-            .map(|s| {
-                let samples: Vec<f64> = self
-                    .reports
-                    .iter()
-                    .filter(|r| r.stage == s)
-                    .map(|r| r.step_secs)
-                    .collect();
-                let n = samples.len();
-                StageTimeSummary {
-                    stage: s,
-                    samples: n,
-                    mean_step_secs: if n > 0 {
-                        samples.iter().sum::<f64>() / n as f64
-                    } else {
-                        0.0
-                    },
-                    max_step_secs: samples.iter().cloned().fold(0.0, f64::max),
-                }
-            })
-            .collect()
+            .map(|r| (r.stage as u32, r.step_secs))
+            .collect();
+        summarize_step_samples(&samples)
     }
 
     /// Run report JSON: final eval, wire ledger, loss curve, and the
@@ -480,6 +505,66 @@ pub fn run_stream_step(
     Ok((loss_acc, loss_n, busy_secs))
 }
 
+/// One stage executor's local work for the shared round driver
+/// ([`crate::rounds::driver::RoundDriver`]): H inner steps of this
+/// stage's 1F1B stream over a [`StageLink`], each followed by one
+/// per-stage inner AdamW step.  Used by BOTH the threaded executor
+/// (`stage_main`) and the elastic stage fleet
+/// ([`crate::transport::elastic::run_stage_worker`]) so the two
+/// deployments execute the identical instruction sequence — the fleet
+/// swaps `link` per membership epoch, the threaded path never does.
+pub struct StageStepWork {
+    pub compute: Box<dyn StageCompute>,
+    pub stream: Vec<Cell>,
+    pub link: Box<dyn StageLink>,
+    pub params: Vec<f32>,
+    pub inner: AdamW,
+    pub micros: usize,
+}
+
+impl RoundWork for StageStepWork {
+    fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    fn set_params(&mut self, p: &[f32]) {
+        self.params.copy_from_slice(p);
+    }
+
+    fn local_round(&mut self, h: usize) -> Result<(f32, f64)> {
+        let n = self.params.len();
+        let mut loss_acc = 0.0f64;
+        let mut loss_n = 0usize;
+        let mut busy_secs = 0.0f64;
+        for _ in 0..h {
+            self.compute.next_step()?;
+            let mut grad_acc = vec![0.0f32; n];
+            // A dead neighbor surfaces here (link timeout / EOF): churn
+            // for the elastic fleet, a hard error for the threaded path.
+            let (ls, ln, busy) = run_stream_step(
+                self.compute.as_mut(),
+                &self.params,
+                &self.stream,
+                self.link.as_mut(),
+                &mut grad_acc,
+            )?;
+            loss_acc += ls;
+            loss_n += ln;
+            busy_secs += busy;
+            // Mean gradient over microbatches, one inner AdamW step.
+            let inv = 1.0 / self.micros as f32;
+            grad_acc.iter_mut().for_each(|g| *g *= inv);
+            self.inner.step(&mut self.params, &grad_acc);
+        }
+        let loss = if loss_n > 0 {
+            (loss_acc / loss_n as f64) as f32
+        } else {
+            f32::NAN
+        };
+        Ok((loss, busy_secs / h.max(1) as f64))
+    }
+}
+
 /// Build the per-stage DP rings over the local mpsc backend:
 /// `rings[worker][stage]` — stage s of every worker shares one ring.
 pub fn local_stage_rings(dp: usize, stages: usize) -> Vec<Vec<Box<dyn RingTransport>>> {
@@ -597,35 +682,37 @@ pub fn run_pipeline(
 
 /// One stage executor thread: run the 1F1B stream for H inner steps per
 /// round, step the per-stage dual optimizer, and close each round through
-/// the shared outer-round engine over this stage's DP ring.
+/// the shared outer-round engine over this stage's DP ring — all via the
+/// single epoch-aware [`RoundDriver`] (one epoch here: the threaded
+/// executor has no membership churn, so a broken wire is a hard error).
 #[allow(clippy::too_many_arguments)]
 fn stage_main(
     workload: &dyn PipelineWorkload,
     worker: usize,
     stage: usize,
-    mut link: Box<dyn StageLink>,
+    link: Box<dyn StageLink>,
     ring: Box<dyn RingTransport>,
     opts: &PipelineRunOpts,
     stream: Vec<Cell>,
     tx_report: mpsc::Sender<StageRoundReport>,
 ) -> Result<(Vec<f32>, u64)> {
-    let mut compute = workload.make_stage(worker, stage)?;
+    let compute = workload.make_stage(worker, stage)?;
     let n = compute.numel();
-    let mut params = compute.init()?;
+    let params = compute.init()?;
     if params.len() != n {
         return Err(anyhow!("init len {} != numel {n}", params.len()));
     }
     let micros = workload.micros();
 
     // §2.2: this thread holds only this stage's optimizer pair.
-    let DualOptimizer { mut inner, outer } = DualOptimizer::new(
+    let DualOptimizer { inner, outer } = DualOptimizer::new(
         n,
         opts.inner_lr,
         opts.weight_decay,
         opts.outer_lr,
         opts.outer_momentum,
     );
-    let mut engine = RoundEngine::new(
+    let engine = RoundEngine::new(
         params.clone(),
         1,
         outer,
@@ -637,66 +724,31 @@ fn stage_main(
     // stages; stage 0 reduces exactly like the single-stage path.
     let stage_seed =
         opts.seed ^ (stage as u64).wrapping_mul(0x9e3779b97f4a7c15);
-    let mut lane = RingLane::new(
-        ring,
-        opts.method.clone(),
-        stage_seed,
-        compute.param_spec(),
-        opts.overlap,
-    );
+    let spec = compute.param_spec();
+    let lane =
+        RingLane::new(ring, opts.method.clone(), stage_seed, spec, opts.overlap);
 
-    for round in 1..=opts.rounds {
-        lane.begin_round(round)?; // fault-injection hook
-        let anchor = params.clone();
-        let mut loss_acc = 0.0f64;
-        let mut loss_n = 0usize;
-        let mut busy_secs = 0.0f64;
-        for _step in 0..opts.local_steps {
-            compute.next_step()?;
-            let mut grad_acc = vec![0.0f32; n];
-            let (ls, ln, busy) = run_stream_step(
-                compute.as_mut(),
-                &params,
-                &stream,
-                link.as_mut(),
-                &mut grad_acc,
-            )?;
-            loss_acc += ls;
-            loss_n += ln;
-            busy_secs += busy;
-            // Mean gradient over microbatches, one inner AdamW step.
-            let inv = 1.0 / micros as f32;
-            grad_acc.iter_mut().for_each(|g| *g *= inv);
-            inner.step(&mut params, &grad_acc);
-        }
-        let step_secs = busy_secs / opts.local_steps.max(1) as f64;
-
-        // Per-stage outer round through the shared engine.
-        let mv = movement(&anchor, &params);
-        if engine.finish_round(vec![mv], round as u64, &mut lane)?.is_some()
-        {
-            params.copy_from_slice(engine.theta());
-        }
+    let mut work =
+        StageStepWork { compute, stream, link, params, inner, micros };
+    let mut driver = RoundDriver::new(engine, lane, opts.rounds, opts.local_steps);
+    let end = driver.run_rounds(1, &mut work, &mut |t: RoundTelemetry| {
         tx_report
             .send(StageRoundReport {
                 worker,
                 stage,
-                round,
-                mean_loss: if loss_n > 0 {
-                    (loss_acc / loss_n as f64) as f32
-                } else {
-                    f32::NAN
-                },
-                wire_bytes: lane.wire_last,
-                step_secs,
+                round: t.round,
+                mean_loss: t.loss,
+                wire_bytes: t.wire_bytes,
+                step_secs: t.step_secs,
             })
             .ok();
+    })?;
+    if let EpochEnd::Broken(e) = end {
+        return Err(e.context("stage ring broke in the threaded executor"));
     }
     // Trailing in-flight reduction (overlap flush at shutdown).
-    if engine.drain(&mut lane)?.is_some() {
-        params.copy_from_slice(engine.theta());
-    }
-    Ok((params, lane.wire_total))
+    driver.finish(&mut work)?;
+    Ok((work.params, driver.wire_total()))
 }
 
 // ---------------------------------------------------------------------------
@@ -787,6 +839,7 @@ impl PipelineWorkload for SyntheticPipeline {
         Ok(Box::new(SyntheticStage {
             cfg: self.clone(),
             stage,
+            worker,
             // First and last stage draw the IDENTICAL input stream.
             data_rng: Pcg32::new(self.seed ^ 0xda7a, worker as u64),
             xs: Vec::new(),
@@ -823,6 +876,7 @@ impl PipelineWorkload for SyntheticPipeline {
 struct SyntheticStage {
     cfg: SyntheticPipeline,
     stage: usize,
+    worker: usize,
     data_rng: Pcg32,
     /// This inner step's microbatch inputs (first & last stages only).
     xs: Vec<Vec<f32>>,
@@ -869,6 +923,21 @@ impl StageCompute for SyntheticStage {
                 })
                 .collect();
         }
+        Ok(())
+    }
+
+    fn reset_data(&mut self, round: usize) -> Result<()> {
+        // Pure function of (seed, worker, round): the first and last
+        // stage of one cluster re-derive the IDENTICAL stream no matter
+        // where churn caught each of them mid-round.
+        self.data_rng = Pcg32::new(
+            self.cfg.seed
+                ^ 0xda7a
+                ^ (round as u64).wrapping_mul(0x9e3779b97f4a7c15),
+            self.worker as u64,
+        );
+        self.xs.clear();
+        self.stash.clear();
         Ok(())
     }
 
@@ -1095,6 +1164,7 @@ mod tests {
             delay_prob: 0.5,
             max_delay_ms: 2,
             kill_round: 0,
+            break_round: 0,
             straggler_ms: 0,
             exit_on_kill: false,
         };

@@ -1,0 +1,513 @@
+//! The epoch-aware worker round loop: ONE implementation of "train H
+//! local steps, close the round through the [`RoundEngine`], survive
+//! membership churn" shared by every deployment shape —
+//!
+//! * the elastic DP fleet worker ([`crate::transport::elastic::run_worker`]),
+//! * the elastic stage fleet worker
+//!   ([`crate::transport::elastic::run_stage_worker`]),
+//! * the threaded stage executor ([`crate::pipeline::exec`]'s
+//!   `stage_main`), and
+//! * the threaded coordinator worker ([`crate::coordinator`]'s
+//!   `worker_main`),
+//!
+//! which differ only in what a "local round" is (the [`RoundWork`] they
+//! plug in) and in whether epochs can turn (the elastic paths call
+//! [`RoundDriver::begin_epoch`] per committed membership epoch; the
+//! threaded paths run a single epoch on a pre-seeded lane).
+//!
+//! # Drain-or-discard (in-flight overlap recovery)
+//!
+//! With one-step-delay overlap a worker holds one δ-reduction in flight
+//! across every round boundary, so ring churn catches it mid-reduction.
+//! The module invariant, split between this driver and the elastic 2PC
+//! protocol:
+//!
+//! * every churn survivor reports `(applied_rounds, in_flight_round)`
+//!   with its `RingBroken`;
+//! * the coordinator's commit carries ONE decision per re-formed ring —
+//!   **drain** (every member of the proposed ring reported the *same*
+//!   in-flight round t: the new ring finishes the reduction of δ^t, the
+//!   collective mean rescaling to the survivor count automatically, and
+//!   applies its outer update exactly once) or **discard** (mixed or
+//!   absent in-flight rounds: each survivor folds its own in-flight
+//!   delta back into the engine's error buffer, where it re-enters the
+//!   next round's δ and is consumed exactly once) — a *partial* drain
+//!   collective would stall on the members with nothing to reduce, so
+//!   unanimity is the precondition;
+//! * a third, local case: an abandoned flight that COMPLETED before the
+//!   epoch turned late-joins at [`RoundDriver::begin_epoch`] (peers
+//!   already applied that mean; see
+//!   [`RoundEngine::complete_in_flight_with`]);
+//! * so no gradient signal is silently dropped and no outer update is
+//!   applied twice ([`RoundEngine`] restores the in-flight delta on a
+//!   failed join, so the delta survives until exactly one of the
+//!   branches consumes it) — with one bounded-staleness carve-out: a
+//!   delta discarded in a *finishing* epoch (no rounds left to run, the
+//!   peers already done) has no next δ to re-enter and is dropped, the
+//!   same tail a sync-mode final-round break has always had.
+//!
+//! Error channels are deliberately split: [`RingLane::begin_round`]
+//! errors are FATAL transport faults (injected kills) and propagate out
+//! of [`RoundDriver::run_rounds`]; everything else mid-round (a broken
+//! collective, a dead dataflow neighbor) is CHURN and returns
+//! [`EpochEnd::Broken`] so the caller can report `RingBroken` and park
+//! for the next epoch.
+
+use super::{movement, RingLane, RoundEngine};
+use crate::transport::RingTransport;
+use anyhow::Result;
+
+/// What one worker trains between outer syncs, as seen by the driver:
+/// the driver owns the engine/lane algebra, the work owns the local
+/// parameters and the inner optimizer.
+pub trait RoundWork {
+    /// Current local parameters (flat).
+    fn params(&self) -> &[f32];
+    /// Resync local parameters to the global track.
+    fn set_params(&mut self, p: &[f32]);
+    /// Run `h` inner steps from the current params.  Returns (loss
+    /// telemetry — NaN when this work never sees the labels, and
+    /// measured compute seconds per inner step).  An `Err` is CHURN
+    /// (broken dataflow), not a fatal fault.
+    fn local_round(&mut self, h: usize) -> Result<(f32, f64)>;
+}
+
+/// The committed per-ring recovery decision (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Recovery {
+    /// Fold any in-flight delta into the error buffer (also the benign
+    /// epoch-1 case: nothing in flight, nothing to do).
+    Discard,
+    /// Finish the in-flight reduction of this round on the re-formed
+    /// ring and apply its outer update.
+    Drain { round: u64 },
+}
+
+impl Recovery {
+    /// Wire encoding: `drain_round` field of Prepare/StagePrepare
+    /// (0 = discard).
+    pub fn from_wire(drain_round: u32) -> Recovery {
+        if drain_round == 0 {
+            Recovery::Discard
+        } else {
+            Recovery::Drain { round: drain_round as u64 }
+        }
+    }
+
+    pub fn to_wire(&self) -> u32 {
+        match self {
+            Recovery::Discard => 0,
+            Recovery::Drain { round } => *round as u32,
+        }
+    }
+}
+
+/// Per-completed-round telemetry handed to the caller's sink (heartbeats
+/// on the fleet, `StageRoundReport`s in the threaded executor).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundTelemetry {
+    pub round: usize,
+    /// Loss over the round's inner steps (NaN on label-less stages).
+    pub loss: f32,
+    /// Measured compute seconds per inner step.
+    pub step_secs: f64,
+    /// Payload bytes of the reduction completed during this round (0 on
+    /// the first overlap round — the wire ledger's overlap signature).
+    pub wire_bytes: u64,
+}
+
+/// How one epoch's round loop ended.
+#[derive(Debug)]
+pub enum EpochEnd {
+    /// Every scheduled round ran.
+    Completed,
+    /// The wire broke mid-round (churn): report `RingBroken` with
+    /// [`RoundDriver::applied`] / [`RoundDriver::in_flight_round`] and
+    /// park for the next committed epoch.  Carries the underlying cause
+    /// for callers without a recovery path (the threaded executor).
+    Broken(anyhow::Error),
+}
+
+/// The shared epoch-aware round loop (see module docs).
+pub struct RoundDriver {
+    engine: RoundEngine,
+    lane: RingLane,
+    rounds: usize,
+    local_steps: usize,
+    /// Soft fault injection: report churn at the start of this round
+    /// (once) without dying — see
+    /// [`FaultPlan::break_round`](crate::transport::faulty::FaultPlan).
+    break_round: usize,
+    applied: usize,
+}
+
+impl RoundDriver {
+    pub fn new(
+        engine: RoundEngine,
+        lane: RingLane,
+        rounds: usize,
+        local_steps: usize,
+    ) -> RoundDriver {
+        RoundDriver { engine, lane, rounds, local_steps, break_round: 0, applied: 0 }
+    }
+
+    /// Arm the soft-churn injection (0 = never).
+    pub fn set_break_round(&mut self, round: usize) {
+        self.break_round = round;
+    }
+
+    pub fn engine(&self) -> &RoundEngine {
+        &self.engine
+    }
+
+    /// Highest round whose outer update is applied to θ_g (what
+    /// `RingBroken.applied_rounds` reports; with overlap this trails the
+    /// last heartbeat by one until the trailing drain).
+    pub fn applied(&self) -> usize {
+        self.applied
+    }
+
+    /// Wire encoding of the held in-flight round (0 = none) for
+    /// `RingBroken.in_flight_round`.
+    pub fn in_flight_round(&self) -> u32 {
+        self.engine.in_flight_round().unwrap_or(0) as u32
+    }
+
+    /// Cumulative reduction payload bytes across all epochs.
+    pub fn wire_total(&self) -> u64 {
+        self.lane.wire_total
+    }
+
+    /// Enter a committed membership epoch: install the fresh ring
+    /// (joining/aborting any in-flight reduction), consensus-resync θ_g
+    /// over the survivors, restart the outer momentum, then apply the
+    /// committed drain-or-discard decision.  `Err` means the fresh ring
+    /// broke already — report `RingBroken` and park; the engine state
+    /// (incl. any undrained in-flight delta) is preserved for the next
+    /// epoch.
+    ///
+    /// An abandoned flight that COMPLETED before the epoch turned is a
+    /// special case: the collective finished, so the peers already
+    /// applied its mean at their own joins — the driver *late-joins* it
+    /// (same error-refresh + outer-step as an in-band join, with the
+    /// pre-restart momentum) so the delta is counted exactly once
+    /// fleet-wide instead of being re-injected by the discard fold.  A
+    /// committed drain takes precedence (the collective re-reduction on
+    /// the fresh ring must have every member).
+    pub fn begin_epoch(
+        &mut self,
+        ring: Box<dyn RingTransport>,
+        recovery: Recovery,
+    ) -> Result<()> {
+        let late = self.lane.reseed(ring);
+        let drain_here = matches!(
+            recovery,
+            Recovery::Drain { round }
+                if self.engine.in_flight_round() == Some(round)
+        );
+        if !drain_here {
+            if let Some(avg) = late {
+                if let Some(r) = self.engine.complete_in_flight_with(&avg) {
+                    self.applied = self.applied.max(r as usize);
+                }
+            }
+        }
+        let mut theta = self.engine.theta().to_vec();
+        self.lane.consensus_mean(&mut theta)?;
+        self.engine.set_theta(&theta);
+        self.engine.reset_outer();
+        if drain_here {
+            self.engine.drain(&mut self.lane)?;
+            if let Recovery::Drain { round } = recovery {
+                self.applied = self.applied.max(round as usize);
+            }
+        } else {
+            // Discard (or nothing left after the late join): any delta
+            // still in flight folds into the error buffer.  When rounds
+            // remain it re-enters the next δ exactly once; in a
+            // finishing epoch (no rounds left, peers already done) it is
+            // bounded staleness — the same tail a sync-mode final-round
+            // break has always had.
+            self.engine.discard_in_flight();
+        }
+        Ok(())
+    }
+
+    /// Run rounds `start..=rounds` (resyncing the work's params to θ_g
+    /// first), emitting telemetry per completed round.  `Err` is a fatal
+    /// transport fault; [`EpochEnd::Broken`] is churn.
+    pub fn run_rounds(
+        &mut self,
+        start: usize,
+        work: &mut dyn RoundWork,
+        telemetry: &mut dyn FnMut(RoundTelemetry),
+    ) -> Result<EpochEnd> {
+        work.set_params(self.engine.theta());
+        for round in start..=self.rounds {
+            if self.break_round != 0 && round == self.break_round {
+                self.break_round = 0;
+                return Ok(EpochEnd::Broken(anyhow::anyhow!(
+                    "fault injection: soft ring break at round {round}"
+                )));
+            }
+            // Fatal fault hook (injected kills surface here; a deferred
+            // overlap hook's fault is delivered by the next call).
+            self.lane.begin_round(round)?;
+            // The round's anchor is the STARTING local params — under
+            // overlap these trail θ_g by one join, so θ_g is not a
+            // substitute.
+            let anchor = work.params().to_vec();
+            let (loss, step_secs) = match work.local_round(self.local_steps) {
+                Ok(x) => x,
+                Err(e) => return Ok(EpochEnd::Broken(e)),
+            };
+            let mv = movement(&anchor, work.params());
+            match self.engine.finish_round(vec![mv], round as u64, &mut self.lane)
+            {
+                Ok(Some(_)) => {
+                    self.applied =
+                        if self.engine.overlap() { round - 1 } else { round };
+                    work.set_params(self.engine.theta());
+                }
+                Ok(None) => {} // first overlap round: nothing applied yet
+                Err(e) => return Ok(EpochEnd::Broken(e)),
+            }
+            telemetry(RoundTelemetry {
+                round,
+                loss,
+                step_secs,
+                wire_bytes: self.lane.wire_last,
+            });
+        }
+        Ok(EpochEnd::Completed)
+    }
+
+    /// Flush the trailing in-flight reduction after the last round so
+    /// the final parameters include every worker's last contribution.
+    /// `Err` is churn (a peer died during the final collective): report
+    /// `RingBroken` — the delta is preserved and the next epoch's drain
+    /// decision finishes it.
+    pub fn finish(&mut self, work: &mut dyn RoundWork) -> Result<()> {
+        if self.engine.drain(&mut self.lane)?.is_some() {
+            self.applied = self.rounds;
+            work.set_params(self.engine.theta());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ring::build_ring;
+    use crate::compress::Method;
+    use crate::optim::Nesterov;
+    use crate::runtime::manifest::ParamEntry;
+
+    /// Gradient descent toward a fixed target — the minimal RoundWork.
+    struct ToyWork {
+        params: Vec<f32>,
+        target: Vec<f32>,
+        lr: f32,
+    }
+
+    impl RoundWork for ToyWork {
+        fn params(&self) -> &[f32] {
+            &self.params
+        }
+
+        fn set_params(&mut self, p: &[f32]) {
+            self.params.copy_from_slice(p);
+        }
+
+        fn local_round(&mut self, h: usize) -> Result<(f32, f64)> {
+            for _ in 0..h {
+                for (p, t) in self.params.iter_mut().zip(&self.target) {
+                    *p -= self.lr * (*p - *t);
+                }
+            }
+            Ok((0.0, 0.0))
+        }
+    }
+
+    fn flat_spec(n: usize) -> Vec<ParamEntry> {
+        vec![ParamEntry { name: "flat".into(), shape: vec![n], offset: 0 }]
+    }
+
+    fn driver(n: usize, rounds: usize, overlap: bool) -> RoundDriver {
+        let engine = RoundEngine::new(
+            vec![0.0; n],
+            1,
+            Nesterov::new(n, 0.5, 0.0),
+            overlap,
+            false,
+        );
+        let lane = RingLane::unseeded(Method::None, 7, flat_spec(n), overlap);
+        RoundDriver::new(engine, lane, rounds, 4)
+    }
+
+    #[test]
+    fn single_member_epoch_runs_to_completion_sync_and_overlap() {
+        for overlap in [false, true] {
+            let mut d = driver(4, 3, overlap);
+            let member = build_ring(1).remove(0);
+            d.begin_epoch(Box::new(member), Recovery::Discard).unwrap();
+            let mut work =
+                ToyWork { params: vec![0.0; 4], target: vec![1.0; 4], lr: 0.5 };
+            let mut rounds_seen = Vec::new();
+            let end = d
+                .run_rounds(1, &mut work, &mut |t| rounds_seen.push(t.round))
+                .unwrap();
+            assert!(matches!(end, EpochEnd::Completed));
+            d.finish(&mut work).unwrap();
+            assert_eq!(rounds_seen, vec![1, 2, 3]);
+            assert_eq!(d.applied(), 3, "overlap={overlap}");
+            assert_eq!(d.in_flight_round(), 0);
+            // θ moved toward the target and work resynced to it.
+            assert!(d.engine().theta()[0] > 0.0);
+            assert_eq!(work.params(), d.engine().theta());
+        }
+    }
+
+    #[test]
+    fn overlap_wire_ledger_defers_one_round() {
+        let mut d = driver(4, 3, true);
+        let member = build_ring(1).remove(0);
+        d.begin_epoch(Box::new(member), Recovery::Discard).unwrap();
+        let mut work =
+            ToyWork { params: vec![0.0; 4], target: vec![1.0; 4], lr: 0.5 };
+        let mut wire = Vec::new();
+        d.run_rounds(1, &mut work, &mut |t| wire.push((t.round, t.wire_bytes)))
+            .unwrap();
+        // Round 1 completes no reduction; rounds 2..T complete the
+        // previous round's — the ledger signature of the one-step delay.
+        assert_eq!(wire[0], (1, 0));
+        assert!(wire[1..].iter().all(|&(_, b)| b > 0), "{wire:?}");
+        d.finish(&mut work).unwrap();
+    }
+
+    #[test]
+    fn soft_break_fires_once_and_preserves_in_flight() {
+        let mut d = driver(2, 4, true);
+        let member = build_ring(1).remove(0);
+        d.begin_epoch(Box::new(member), Recovery::Discard).unwrap();
+        d.set_break_round(3);
+        let mut work =
+            ToyWork { params: vec![0.0; 2], target: vec![1.0; 2], lr: 0.5 };
+        let end = d.run_rounds(1, &mut work, &mut |_| {}).unwrap();
+        assert!(matches!(end, EpochEnd::Broken(_)));
+        // δ² went in flight at the end of round 2 and survives the break.
+        assert_eq!(d.in_flight_round(), 2);
+        assert_eq!(d.applied(), 1);
+        // Next epoch: drain the held round on the fresh ring, resume, and
+        // the break does not re-fire.
+        let member = build_ring(1).remove(0);
+        d.begin_epoch(Box::new(member), Recovery::Drain { round: 2 }).unwrap();
+        assert_eq!(d.in_flight_round(), 0);
+        assert_eq!(d.applied(), 2);
+        let end = d.run_rounds(3, &mut work, &mut |_| {}).unwrap();
+        assert!(matches!(end, EpochEnd::Completed));
+        d.finish(&mut work).unwrap();
+        assert_eq!(d.applied(), 4);
+    }
+
+    #[test]
+    fn completed_flight_late_joins_instead_of_double_counting() {
+        // Accounting check for the late-join rule: a soft-breaker's
+        // in-flight reduction COMPLETES (its comm thread kept relaying),
+        // so the peers applied that mean — the breaker must apply it
+        // exactly once at reseed, not re-inject it via the discard fold.
+        // With a size-1 ring the reduced mean equals the submitted delta,
+        // so θ's trajectory exposes exactly which deltas were applied.
+        let n = 1;
+        let mut d = driver(n, 3, true);
+        let member = build_ring(1).remove(0);
+        d.begin_epoch(Box::new(member), Recovery::Discard).unwrap();
+        // lr chosen so each 4-step local round moves params fully to the
+        // target: movement per round is (target − θ).
+        let mut work =
+            ToyWork { params: vec![0.0; n], target: vec![8.0; n], lr: 1.0 };
+        d.set_break_round(2);
+        let end = d.run_rounds(1, &mut work, &mut |_| {}).unwrap();
+        assert!(matches!(end, EpochEnd::Broken(_)));
+        // δ¹ = −8 (movement = anchor − params) is in flight — and its
+        // size-1 collective has already completed.
+        assert_eq!(d.in_flight_round(), 1);
+        let member = build_ring(1).remove(0);
+        d.begin_epoch(Box::new(member), Recovery::Discard).unwrap();
+        assert_eq!(d.in_flight_round(), 0, "late-joined at reseed");
+        assert_eq!(d.applied(), 1, "the completed round counts as applied");
+        // Δ¹ = −8 applied once with outer lr 0.5: θ = 4.
+        assert!(
+            (d.engine().theta()[0] - 4.0).abs() < 1e-5,
+            "late join applied Δ¹ exactly once: θ = {}",
+            d.engine().theta()[0]
+        );
+        // Resume at round 2: params resync to 4, local moves to 8
+        // (δ² = −4, NOT −12 — no re-injected remnant of δ¹), round 3
+        // joins it: θ = 4 + 0.5·4 = 6; round 3 moves nothing.
+        let end = d.run_rounds(2, &mut work, &mut |_| {}).unwrap();
+        assert!(matches!(end, EpochEnd::Completed));
+        d.finish(&mut work).unwrap();
+        assert!(
+            (d.engine().theta()[0] - 6.0).abs() < 1e-5,
+            "every delta applied exactly once: θ = {}",
+            d.engine().theta()[0]
+        );
+    }
+
+    #[test]
+    fn recovery_wire_roundtrip() {
+        assert_eq!(Recovery::from_wire(0), Recovery::Discard);
+        assert_eq!(Recovery::from_wire(5), Recovery::Drain { round: 5 });
+        assert_eq!(Recovery::Drain { round: 5 }.to_wire(), 5);
+        assert_eq!(Recovery::Discard.to_wire(), 0);
+    }
+
+    #[test]
+    fn two_member_drain_rescales_to_survivors() {
+        // Two members run one overlap round each on a shared ring, then
+        // "churn" hands each a fresh size-1 ring with a Drain decision:
+        // each finishes its own δ¹ alone (the degenerate rescale) and θ
+        // moves by exactly its own delta — no signal lost, none doubled.
+        let members = build_ring(2);
+        let outs: Vec<f32> = std::thread::scope(|scope| {
+            members
+                .into_iter()
+                .enumerate()
+                .map(|(i, m)| {
+                    scope.spawn(move || {
+                        let mut d = driver(1, 1, true);
+                        d.begin_epoch(Box::new(m), Recovery::Discard).unwrap();
+                        let target = if i == 0 { 2.0 } else { 6.0 };
+                        let mut work = ToyWork {
+                            params: vec![0.0],
+                            target: vec![target],
+                            lr: 1.0,
+                        };
+                        // Round 1 launches δ¹ = −target and defers.
+                        let end =
+                            d.run_rounds(1, &mut work, &mut |_| {}).unwrap();
+                        assert!(matches!(end, EpochEnd::Completed));
+                        assert_eq!(d.in_flight_round(), 1);
+                        let solo = build_ring(1).remove(0);
+                        d.begin_epoch(
+                            Box::new(solo),
+                            Recovery::Drain { round: 1 },
+                        )
+                        .unwrap();
+                        d.engine().theta()[0]
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        // Outer lr 0.5: θ = 0 − 0.5·(−target)… except round 1's launch
+        // happened on the SHARED ring in overlap mode, so the drain on
+        // the size-1 ring reduces the raw per-member delta.
+        assert!((outs[0] - 1.0).abs() < 1e-6, "{outs:?}");
+        assert!((outs[1] - 3.0).abs() < 1e-6, "{outs:?}");
+    }
+}

@@ -35,6 +35,17 @@
 //!   round applies nothing (`finish_round` returns `None`) and a trailing
 //!   in-flight reduction must be [`RoundEngine::drain`]ed at shutdown or
 //!   the final parameters silently miss the last contribution.
+//! * **Drain-or-discard (the in-flight churn rule)** — a failed join
+//!   RESTORES the in-flight delta instead of dropping it, so after ring
+//!   churn exactly one of two things happens to δ^t: the re-formed ring
+//!   *drains* it ([`RoundEngine::drain`] — finish the reduction with
+//!   survivor-rescaled means and apply its outer update once), or the
+//!   engine *discards* it ([`RoundEngine::discard_in_flight`] — the
+//!   delta becomes the error buffer, re-entering the next round's δ and
+//!   consumed exactly once even with error feedback disabled).  Either
+//!   way no gradient signal is silently dropped and none is applied
+//!   twice.  The epoch-aware loop that wires this to the elastic 2PC
+//!   protocol lives in [`driver`].
 //! * **θ_g moves only by outer updates** — `set_theta` exists solely for
 //!   the elastic consensus resync after churn; anything else mutating the
 //!   global track breaks cross-worker agreement.
@@ -46,6 +57,8 @@
 //!   one `RoundEngine` per stage; the algebra is elementwise, so engines
 //!   compose exactly and per-stage wire payloads sum to the flat-vector
 //!   total.
+
+pub mod driver;
 
 use crate::compress::{lowrank, quantize, Method};
 use crate::linalg::{matmul, matmul_at_b, matmul_bt, orthonormalize_columns, Mat};
@@ -131,10 +144,58 @@ impl RoundEngine {
         self.in_flight.is_some()
     }
 
-    fn add_error(&self, mut movement: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
-        for (lane, e) in movement.iter_mut().zip(&self.error) {
-            for (d, ei) in lane.iter_mut().zip(e) {
-                *d += ei;
+    /// One-step-delay overlap enabled?
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
+    /// The round of the in-flight δ-reduction, if any (what a churn
+    /// survivor reports so the coordinator can decide drain vs discard).
+    pub fn in_flight_round(&self) -> Option<u64> {
+        self.in_flight.as_ref().map(|(_, r)| *r)
+    }
+
+    /// Join an in-flight reduction OUT OF BAND: the abandoned comm thread
+    /// had already completed the collective when the membership epoch
+    /// turned, so `avg` is the same mean the surviving peers applied at
+    /// their own in-band joins.  Applying it here — error refresh + outer
+    /// step, exactly like [`Self::finish_round`]'s join — keeps this
+    /// worker's accounting aligned with its peers: the delta is neither
+    /// dropped nor re-injected for a second application.  Returns the
+    /// joined round.
+    pub fn complete_in_flight_with(&mut self, avg: &[f32]) -> Option<u64> {
+        let (raws, r) = self.in_flight.take()?;
+        self.refresh_error(&raws, avg);
+        self.outer.step(&mut self.theta_g, avg);
+        Some(r)
+    }
+
+    /// The *discard* branch of in-flight churn recovery: the reduction of
+    /// δ^t cannot be finished (survivors hold mixed in-flight rounds), so
+    /// the delta becomes the error buffer — δ^t already subsumes the old
+    /// error term (it was formed as movement + e), so this is an
+    /// overwrite, not an add.  The signal re-enters the next round's δ
+    /// via `add_error` and is consumed exactly once (the buffer is zeroed
+    /// on consumption when error feedback is off, and refreshed from the
+    /// next reduction when it is on).  Returns the discarded round.
+    pub fn discard_in_flight(&mut self) -> Option<u64> {
+        let (raws, r) = self.in_flight.take()?;
+        for (e, raw) in self.error.iter_mut().zip(&raws) {
+            e.copy_from_slice(raw);
+        }
+        Some(r)
+    }
+
+    fn add_error(&mut self, mut movement: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        for (lane, e) in movement.iter_mut().zip(self.error.iter_mut()) {
+            for (d, ei) in lane.iter_mut().zip(e.iter_mut()) {
+                *d += *ei;
+                // Without error feedback the buffer is only ever
+                // populated by a churn discard; consume it exactly once
+                // so a discarded delta cannot be re-counted every round.
+                if !self.error_feedback {
+                    *ei = 0.0;
+                }
             }
         }
         movement
@@ -172,8 +233,17 @@ impl RoundEngine {
         }
         if self.overlap {
             let prev = self.in_flight.take();
+            // A failed join restores the in-flight delta: churn recovery
+            // (drain-or-discard) needs it — dropping it here would lose a
+            // whole round of local training.
             let avg_prev = match &prev {
-                Some((raws, r)) => Some(red.complete(raws, *r)?),
+                Some((raws, r)) => match red.complete(raws, *r) {
+                    Ok(avg) => Some(avg),
+                    Err(e) => {
+                        self.in_flight = prev;
+                        return Err(e);
+                    }
+                },
                 None => None,
             };
             if let (Some((raws, _)), Some(avg)) = (&prev, &avg_prev) {
@@ -199,13 +269,24 @@ impl RoundEngine {
         }
     }
 
-    /// Flush a trailing in-flight reduction at shutdown so the final
-    /// params include every lane's last contribution.
+    /// Flush a trailing in-flight reduction: at shutdown so the final
+    /// params include every lane's last contribution, and as the *drain*
+    /// branch of churn recovery (the re-formed ring finishes the
+    /// reduction — the collective mean rescales to the survivor count
+    /// automatically — and the outer update applies exactly once).  A
+    /// failed reduction restores the in-flight delta, like
+    /// [`Self::finish_round`].
     pub fn drain(&mut self, red: &mut dyn DeltaReducer) -> Result<Option<Vec<f32>>> {
         let Some((raws, r)) = self.in_flight.take() else {
             return Ok(None);
         };
-        let avg = red.complete(&raws, r)?;
+        let avg = match red.complete(&raws, r) {
+            Ok(avg) => avg,
+            Err(e) => {
+                self.in_flight = Some((raws, r));
+                return Err(e);
+            }
+        };
         self.outer.step(&mut self.theta_g, &avg);
         Ok(Some(avg))
     }
@@ -379,9 +460,19 @@ type Flight =
 /// thread that runs the ring collective while the caller trains the next
 /// H local steps; `complete` joins it.  In sync mode `begin` is a no-op
 /// and `complete` reduces inline.
+///
+/// The lane survives membership churn: [`Self::reseed`] aborts any
+/// in-flight reduction (its result is discarded — the raw delta stays
+/// with the engine for the drain-or-discard decision) and installs the
+/// new epoch's ring.  Compressor state resets on reseed so every
+/// survivor re-derives low-rank bases identically from the shared
+/// seed+round rule, whether or not it lost its bases to a dead comm
+/// thread.
 pub struct RingLane {
     member: Option<Box<dyn RingTransport>>,
     compressor: Option<WireCompressor>,
+    method: Method,
+    seed: u64,
     spec: Vec<ParamEntry>,
     overlap: bool,
     in_flight: Option<Flight>,
@@ -389,6 +480,12 @@ pub struct RingLane {
     /// (overlap): delivered as soon as the member returns, so
     /// round-indexed fault injection still fires.
     pending_round: Option<usize>,
+    /// Fatal transport fault raised by a *deferred* round hook (e.g. an
+    /// injected kill that fired while the member was away on the comm
+    /// thread): delivered by the next [`Self::begin_round`] call, so
+    /// fault-injection failures stay distinguishable from churn (reduce
+    /// errors surface from `complete`, fatal faults from `begin_round`).
+    pending_fault: Option<anyhow::Error>,
     /// Payload bytes of the most recently completed reduction.
     pub wire_last: u64,
     /// Cumulative payload bytes over the lane's lifetime.
@@ -405,21 +502,87 @@ impl RingLane {
     ) -> RingLane {
         RingLane {
             member: Some(member),
-            compressor: Some(WireCompressor::new(method, seed)),
+            compressor: Some(WireCompressor::new(method.clone(), seed)),
+            method,
+            seed,
             spec,
             overlap,
             in_flight: None,
             pending_round: None,
+            pending_fault: None,
             wire_last: 0,
             wire_total: 0,
         }
     }
 
+    /// A lane with no ring yet (elastic workers: the ring arrives with
+    /// the first committed membership epoch via [`Self::reseed`]).
+    pub fn unseeded(
+        method: Method,
+        seed: u64,
+        spec: Vec<ParamEntry>,
+        overlap: bool,
+    ) -> RingLane {
+        RingLane {
+            member: None,
+            compressor: None,
+            method,
+            seed,
+            spec,
+            overlap,
+            in_flight: None,
+            pending_round: None,
+            pending_fault: None,
+            wire_last: 0,
+            wire_total: 0,
+        }
+    }
+
+    /// Install a fresh ring for a new membership epoch, joining any
+    /// never-joined in-flight reduction first.  Returns `Some(mean)` when
+    /// that abandoned flight had actually COMPLETED before the epoch
+    /// turned — the collective finished, so surviving peers already
+    /// applied this very mean at their own joins; the caller must treat
+    /// it as a late in-band join ([`RoundEngine::complete_in_flight_with`])
+    /// rather than letting drain/discard re-count the delta.  A failed
+    /// flight returns `None` (the engine still holds the raw delta for
+    /// the drain-or-discard decision).  The compressor is recreated so
+    /// all survivors re-derive identical low-rank bases.
+    pub fn reseed(&mut self, member: Box<dyn RingTransport>) -> Option<Vec<f32>> {
+        let mut completed = None;
+        if let Some(handle) = self.in_flight.take() {
+            if let Ok(Ok((_, _, avg, bytes))) = handle.join() {
+                self.wire_total += bytes;
+                completed = Some(avg);
+            }
+        }
+        self.member = Some(member);
+        self.compressor =
+            Some(WireCompressor::new(self.method.clone(), self.seed));
+        self.pending_round = None;
+        self.wire_last = 0;
+        completed
+    }
+
+    /// Raw (uncompressed, unmetered-by-the-ledger) ring mean over the
+    /// current member — the elastic consensus resync after churn.
+    pub fn consensus_mean(&mut self, buf: &mut [f32]) -> Result<()> {
+        self.member
+            .as_mut()
+            .ok_or_else(|| anyhow!("lane has no ring member"))?
+            .allreduce_mean(buf)
+    }
+
     /// Fault-injection round hook.  While the member is away on a comm
     /// thread (overlap) the hook is deferred and delivered when the
-    /// member returns in [`DeltaReducer::complete`] — one join late, but
-    /// never silently dropped.
+    /// member returns in [`DeltaReducer::complete`]; a fatal fault raised
+    /// by that deferred delivery surfaces from the NEXT `begin_round`
+    /// call — one round late, but never silently dropped and never
+    /// conflated with a churn error.
     pub fn begin_round(&mut self, round: usize) -> Result<()> {
+        if let Some(e) = self.pending_fault.take() {
+            return Err(e);
+        }
         match self.member.as_mut() {
             Some(m) => m.begin_round(round),
             None => {
@@ -474,7 +637,11 @@ impl DeltaReducer for RingLane {
             self.compressor = Some(c);
             self.record(bytes);
             if let Some(r) = self.pending_round.take() {
-                self.member.as_mut().unwrap().begin_round(r)?;
+                // A fatal fault here (injected kill) must not masquerade
+                // as a churn error: stash it for the next begin_round.
+                if let Err(e) = self.member.as_mut().unwrap().begin_round(r) {
+                    self.pending_fault = Some(e);
+                }
             }
             return Ok(avg);
         }
@@ -632,6 +799,71 @@ mod tests {
             .unwrap()
             .unwrap();
         assert!((a[0] - 2.0).abs() < 1e-6);
+        let d = eng.drain(&mut HalfMean).unwrap().unwrap();
+        assert!((d[0] - 1.5).abs() < 1e-6, "Δ² = 3/2, got {}", d[0]);
+    }
+
+    #[test]
+    fn discard_in_flight_folds_delta_and_consumes_it_once() {
+        // The discard branch of churn recovery, error feedback OFF: the
+        // in-flight delta becomes the error buffer, re-enters the next
+        // round's δ exactly once, and is never re-counted.
+        let mut eng = RoundEngine::new(
+            vec![0.0; 1],
+            1,
+            Nesterov::new(1, 1.0, 0.0),
+            true,
+            false,
+        );
+        assert!(eng
+            .finish_round(vec![vec![3.0]], 1, &mut LocalMean)
+            .unwrap()
+            .is_none());
+        assert_eq!(eng.in_flight_round(), Some(1));
+        assert_eq!(eng.discard_in_flight(), Some(1));
+        assert_eq!(eng.in_flight_round(), None);
+        // δ² = movement 2 + folded 3 = 5 goes in flight …
+        assert!(eng
+            .finish_round(vec![vec![2.0]], 2, &mut LocalMean)
+            .unwrap()
+            .is_none());
+        let a = eng
+            .finish_round(vec![vec![0.0]], 3, &mut LocalMean)
+            .unwrap()
+            .unwrap();
+        assert!((a[0] - 5.0).abs() < 1e-6, "folded exactly once: {}", a[0]);
+        // … and the buffer was consumed: δ³ carries nothing extra.
+        let d = eng.drain(&mut LocalMean).unwrap().unwrap();
+        assert!(d[0].abs() < 1e-6, "no re-count after the fold: {}", d[0]);
+    }
+
+    #[test]
+    fn complete_in_flight_with_applies_like_an_in_band_join() {
+        // The late-join rule (a churn-abandoned reduction that actually
+        // completed): error refresh + outer step must match what an
+        // in-band join would have done, with nothing left in flight.
+        let mut eng = RoundEngine::new(
+            vec![0.0; 1],
+            1,
+            Nesterov::new(1, 1.0, 0.0),
+            true,
+            true,
+        );
+        assert!(eng
+            .finish_round(vec![vec![4.0]], 1, &mut HalfMean)
+            .unwrap()
+            .is_none());
+        // The collective completed elsewhere with mean 2 (HalfMean of 4).
+        assert_eq!(eng.complete_in_flight_with(&[2.0]), Some(1));
+        assert_eq!(eng.in_flight_round(), None);
+        // θ = 0 − 1.0·2 = −2, and e = δ¹ − Δ¹ = 2 (error feedback on).
+        assert!((eng.theta()[0] + 2.0).abs() < 1e-6);
+        // The next round behaves like a first overlap round (nothing in
+        // flight) with δ² = 1 + e 2 = 3 → Δ² = 1.5 at the drain.
+        assert!(eng
+            .finish_round(vec![vec![1.0]], 2, &mut HalfMean)
+            .unwrap()
+            .is_none());
         let d = eng.drain(&mut HalfMean).unwrap().unwrap();
         assert!((d[0] - 1.5).abs() < 1e-6, "Δ² = 3/2, got {}", d[0]);
     }

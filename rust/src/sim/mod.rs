@@ -235,6 +235,20 @@ pub fn pipeline_step_secs(scale: &ScaleConfig, topo: &mut Topology) -> f64 {
 
 /// Simulate `outer_rounds` outer steps and return throughput + breakdown.
 pub fn simulate(scale: &ScaleConfig, algo: &SimAlgo, outer_rounds: usize) -> SimResult {
+    simulate_calibrated(scale, algo, outer_rounds, None)
+}
+
+/// Like [`simulate`], but with an optional *measured* per-stage 1F1B
+/// step time replacing the FLOP-model DES step — the calibration loop:
+/// real runs measure `step_secs` (threaded `StageRoundReport`s or fleet
+/// heartbeats, shipped in the `coordinate --report` JSON) and feed it
+/// back so the modeled table reflects the hardware actually measured.
+pub fn simulate_calibrated(
+    scale: &ScaleConfig,
+    algo: &SimAlgo,
+    outer_rounds: usize,
+    step_secs_override: Option<f64>,
+) -> SimResult {
     // ---- memory verdict -------------------------------------------------
     let hbm = scale.gpu.hbm_bytes;
     let memory = match algo.algo {
@@ -272,9 +286,14 @@ pub fn simulate(scale: &ScaleConfig, algo: &SimAlgo, outer_rounds: usize) -> Sim
         };
     }
 
-    // ---- inner step time (pipeline DES) ---------------------------------
-    let mut topo = Topology::new(&scale.net, scale.pp_stages);
-    let step_secs = pipeline_step_secs(scale, &mut topo);
+    // ---- inner step time (pipeline DES, or a measured calibration) ------
+    let step_secs = match step_secs_override {
+        Some(measured) => measured,
+        None => {
+            let mut topo = Topology::new(&scale.net, scale.pp_stages);
+            pipeline_step_secs(scale, &mut topo)
+        }
+    };
 
     // ---- sync time over the WAN -----------------------------------------
     let payload = sync_payload_bytes(scale.params, scale.d_hidden, &algo.method);

@@ -5,13 +5,31 @@
 //! [`crate::transport`]).
 //!
 //! Recovery model: any ring failure (peer death, stall past the socket
-//! timeout) makes every survivor report `RingBroken{applied_rounds}` and
-//! park on its control socket; the coordinator bumps the epoch, runs the
-//! 2PC prepare/commit over the survivors, and the new ring opens with a
-//! consensus `allreduce_mean` over θ_g plus an outer-momentum restart, so
-//! survivors re-agree on the global parameters before training resumes at
+//! timeout) makes every survivor report
+//! `RingBroken{applied_rounds, in_flight_round}` and park on its control
+//! socket; the coordinator bumps the epoch, runs the 2PC prepare/commit
+//! over the survivors, and the new ring opens with a consensus
+//! `allreduce_mean` over θ_g plus an outer-momentum restart, so survivors
+//! re-agree on the global parameters before training resumes at
 //! `max(applied)+1`.  The pseudo-gradient mean rescales automatically: the
 //! collective mean is over the *current* member count.
+//!
+//! # One-step-delay overlap on the fleet (drain-or-discard)
+//!
+//! With `overlap = true` every worker holds one δ-reduction in flight
+//! across each round boundary (the §2.3 comm/compute overlap), so churn
+//! catches reductions mid-flight.  Survivors report the round of their
+//! held in-flight delta with `RingBroken`; the coordinator's `Prepare`
+//! carries ONE decision per re-formed ring: **drain** — every member of
+//! the proposed ring reported the *same* in-flight round t, so the new
+//! ring finishes the reduction of δ^t (survivor-rescaled mean) and
+//! applies its outer update exactly once — or **discard** — mixed or
+//! absent in-flight rounds, so each survivor folds its delta back into
+//! the engine's error feedback, where it re-enters the next round's δ.
+//! Either way no gradient signal is silently dropped and none is applied
+//! twice; the worker-side state machine lives in
+//! [`crate::rounds::driver`].  In the stage fleet the decision is
+//! per-stage-ring (stage rings can break one round apart under overlap).
 //!
 //! Workloads: the real-numerics PJRT trainer (needs an artifact bundle),
 //! or a synthetic per-worker quadratic that exercises the full outer loop
@@ -42,25 +60,34 @@
 //! round before a late break simply finishes (bounded staleness, exactly
 //! like the single-vector fleet's final-round churn).
 //!
-//! Invariant worth knowing when reading the recovery code: within one
-//! *surviving* cluster every stage always completes the full H local
-//! steps of a round before any stage touches its ring (the dataflow is
-//! intra-cluster and intact), so the per-stage data streams stay in
-//! lockstep across churn — a re-run round re-draws the same number of
-//! batches on the first and last stage alike.
+//! Invariant worth knowing when reading the recovery code: under
+//! overlap, churn can catch the stages of one surviving cluster a
+//! partial round apart (one stage's join succeeds while its sibling's
+//! stalls), so the per-stage data streams cannot rely on lockstep across
+//! churn.  Every epoch re-entry therefore calls
+//! [`crate::pipeline::exec::StageCompute::reset_data`] with the resume
+//! round: data-bearing
+//! stages re-derive their stream as a pure function of (seed, worker,
+//! round), and the first and last stage re-align no matter where the
+//! break caught each of them.  The un-churned path never resets, so
+//! threaded-vs-fleet bit parity is unaffected.
 
+use crate::comm::ring::build_ring;
 use crate::compress::Method;
 use crate::config::{ExperimentConfig, FaultConfig, TransportConfig};
-use crate::coordinator::RuntimeStagePipeline;
-use crate::data::{MarkovCorpus, ShardIter};
-use crate::optim::{AdamW, DualOptimizer, Nesterov};
+use crate::coordinator::{RuntimeStagePipeline, RuntimeStepWork};
+use crate::optim::{DualOptimizer, Nesterov};
 use crate::pipeline::exec::{
-    run_stream_step, MpscStageLink, PipelineWorkload, StageCompute, StageLink,
-    SyntheticPipeline,
+    summarize_step_samples, MpscStageLink, PipelineWorkload, StageStepWork,
+    StageTimeSummary, SyntheticPipeline,
 };
 use crate::pipeline::{one_f_one_b_schedule, validate_schedule};
-use crate::rounds::{movement, DeltaReducer, RingLane, RoundEngine};
-use crate::runtime::{Manifest, Runtime};
+use crate::rounds::driver::{
+    EpochEnd, Recovery, RoundDriver, RoundTelemetry, RoundWork,
+};
+use crate::rounds::{RingLane, RoundEngine};
+use crate::runtime::manifest::ParamEntry;
+use crate::runtime::Manifest;
 use crate::transport::faulty::{FaultPlan, FaultyRing};
 use crate::transport::frame::{read_msg, write_msg, Msg};
 use crate::transport::tcp;
@@ -100,6 +127,10 @@ pub struct WorkerOpts {
     pub outer_momentum: f32,
     pub seed: u64,
     pub workload: Workload,
+    /// One-step-delay overlap of communication and local training (§2.3)
+    /// — works across OS processes via the drain-or-discard recovery
+    /// protocol (see the module docs).
+    pub overlap: bool,
     pub ring_timeout_ms: u64,
     pub connect_timeout_ms: u64,
     pub faults: Option<FaultPlan>,
@@ -118,6 +149,10 @@ pub struct ElasticConfig {
     pub outer_momentum: f32,
     pub seed: u64,
     pub workload: Workload,
+    /// One-step-delay overlap (§2.3) on the fleet: each worker's
+    /// δ-reduction runs on a comm thread while it trains the next H
+    /// local steps; churn recovers via drain-or-discard.
+    pub overlap: bool,
     /// M — pipeline stages per cluster.  1 = the single-vector worker
     /// fleet; > 1 spawns one OS process per (cluster, stage) and routes
     /// the run through the stage-parallel supervisor.
@@ -143,6 +178,7 @@ impl ElasticConfig {
             outer_momentum: 0.6,
             seed: 1234,
             workload: Workload::Quadratic { dim },
+            overlap: false,
             pp_stages: 1,
             microbatches: 1,
             transport: TransportConfig::default(),
@@ -191,6 +227,10 @@ impl ElasticConfig {
             outer_momentum: cfg.train.outer_momentum,
             seed: cfg.train.seed,
             workload,
+            // No silent overlap→sync downgrade: the fleet honors the
+            // config's §2.3 overlap flag (regression-tested via the wire
+            // ledger — round-t compute overlaps round-(t−1) reduce).
+            overlap: cfg.train.overlap,
             pp_stages: cfg.parallel.pp,
             microbatches: cfg.parallel.microbatches,
             transport: cfg.transport.clone(),
@@ -227,6 +267,20 @@ pub struct ElasticOutcome {
     pub total_wire_bytes: u64,
     /// Heartbeat telemetry: (worker, round, loss).
     pub round_losses: Vec<(u32, u32, f32)>,
+    /// Heartbeat wire ledger: (worker/cluster, round, payload bytes of
+    /// the reduction completed during that round).  With overlap, every
+    /// round-1 entry is 0 and round-2 entries are positive — the ledger
+    /// evidence that round-t compute overlapped round-(t−1) reduce.
+    pub round_wire: Vec<(u32, u32, u64)>,
+    /// Measured per-stage compute times aggregated from heartbeats (the
+    /// TCP-fleet counterpart of the threaded executor's
+    /// `StageRoundReport::step_secs`; stage 0 for the single-vector
+    /// fleet) — what `coordinate --report` ships to the DES calibration.
+    pub stage_times: Vec<StageTimeSummary>,
+    /// Committed per-epoch recovery decisions: (epoch, stage,
+    /// drain_round); drain_round = 0 is a discard/no-op commit.  Tests
+    /// assert the drain and discard branches from this ledger.
+    pub recoveries: Vec<(u32, u32, u32)>,
 }
 
 impl ElasticOutcome {
@@ -287,6 +341,13 @@ pub fn stage_fault_plan_for(
         delay_prob: faults.delay_prob,
         max_delay_ms: faults.delay_ms,
         kill_round: if kill_here { faults.kill_round } else { 0 },
+        // The soft break applies to EVERY stage process of the cluster
+        // at once, so the intra-cluster data streams stay aligned.
+        break_round: if rank as usize == faults.break_rank {
+            faults.break_round
+        } else {
+            0
+        },
         straggler_ms: if rank as usize == faults.straggler_rank {
             faults.straggler_ms
         } else {
@@ -315,6 +376,11 @@ pub fn fault_plan_for(
         delay_prob: faults.delay_prob,
         max_delay_ms: faults.delay_ms,
         kill_round: if rank as usize == faults.kill_rank { faults.kill_round } else { 0 },
+        break_round: if rank as usize == faults.break_rank {
+            faults.break_round
+        } else {
+            0
+        },
         straggler_ms: if rank as usize == faults.straggler_rank {
             faults.straggler_ms
         } else {
@@ -333,15 +399,14 @@ pub fn fault_plan_for(
 // Worker side
 // ---------------------------------------------------------------------------
 
-/// What a worker trains between syncs (kept object-safe so the quadratic
-/// and PJRT paths share one outer loop).
-trait LocalTrainer {
+/// What a worker trains between syncs: the driver's [`RoundWork`] view
+/// plus eval + sizing (kept object-safe so the quadratic and PJRT paths
+/// share one outer loop).  `as_work` is the manual upcast to the driver
+/// trait (no reliance on dyn trait upcasting).
+trait LocalTrainer: RoundWork {
     fn dim(&self) -> usize;
-    fn params(&self) -> &[f32];
-    fn set_params(&mut self, p: &[f32]);
-    /// Run `h` inner steps from the current params; returns the mean loss.
-    fn local_round(&mut self, h: usize) -> Result<f32>;
     fn eval(&mut self) -> Result<f32>;
+    fn as_work(&mut self) -> &mut dyn RoundWork;
 }
 
 struct QuadraticTrainer {
@@ -376,11 +441,7 @@ impl QuadraticTrainer {
     }
 }
 
-impl LocalTrainer for QuadraticTrainer {
-    fn dim(&self) -> usize {
-        self.params.len()
-    }
-
+impl RoundWork for QuadraticTrainer {
     fn params(&self) -> &[f32] {
         &self.params
     }
@@ -389,100 +450,49 @@ impl LocalTrainer for QuadraticTrainer {
         self.params.copy_from_slice(p);
     }
 
-    fn local_round(&mut self, h: usize) -> Result<f32> {
+    fn local_round(&mut self, h: usize) -> Result<(f32, f64)> {
         // Report the loss at entry (current θ_g) so the round curve is
         // directly comparable to the final eval.
         let loss = self.loss();
+        let t0 = Instant::now();
         for _ in 0..h {
             for (p, t) in self.params.iter_mut().zip(&self.target) {
                 let g = *p - *t;
                 *p -= self.lr * g;
             }
         }
-        Ok(loss)
+        Ok((loss, t0.elapsed().as_secs_f64() / h.max(1) as f64))
+    }
+}
+
+impl LocalTrainer for QuadraticTrainer {
+    fn dim(&self) -> usize {
+        self.params.len()
     }
 
     fn eval(&mut self) -> Result<f32> {
         Ok(self.loss())
     }
-}
 
-struct RuntimeTrainer {
-    rt: Runtime,
-    params: Vec<f32>,
-    inner: AdamW,
-    shard: ShardIter,
-    corpus: std::sync::Arc<MarkovCorpus>,
-    seed: u64,
-    microbatch: usize,
-    seq_len: usize,
-}
-
-impl RuntimeTrainer {
-    fn new(dir: &str, rank: u32, opts: &WorkerOpts) -> Result<RuntimeTrainer> {
-        let rt = Runtime::load(dir)
-            .with_context(|| format!("loading artifacts from {dir}"))?;
-        rt.precompile(&["step_single", "eval_single"])?;
-        let man = &rt.manifest;
-        let (b, s) = (man.dims.microbatch, man.dims.seq_len);
-        let corpus =
-            std::sync::Arc::new(MarkovCorpus::new(man.dims.vocab_size, opts.seed));
-        let shard =
-            ShardIter::new(std::sync::Arc::clone(&corpus), rank as usize, opts.seed, b, s);
-        let params = man.read_f32(&man.init["single"].file)?;
-        let n = man.param_count;
-        Ok(RuntimeTrainer {
-            inner: AdamW::new(n, opts.inner_lr, opts.weight_decay),
-            params,
-            shard,
-            corpus,
-            seed: opts.seed,
-            microbatch: b,
-            seq_len: s,
-            rt,
-        })
+    fn as_work(&mut self) -> &mut dyn RoundWork {
+        self
     }
 }
 
-impl LocalTrainer for RuntimeTrainer {
+/// The real-numerics trainer is the coordinator's [`RuntimeStepWork`] —
+/// ONE copy of the PJRT single-program inner loop, shared with the
+/// threaded coordinator; the fleet only adds its eval/sizing view.
+impl LocalTrainer for RuntimeStepWork {
     fn dim(&self) -> usize {
-        self.params.len()
+        self.params().len()
     }
 
-    fn params(&self) -> &[f32] {
-        &self.params
-    }
-
-    fn set_params(&mut self, p: &[f32]) {
-        self.params.copy_from_slice(p);
-    }
-
-    fn local_round(&mut self, h: usize) -> Result<f32> {
-        let mut acc = 0.0f64;
-        for _ in 0..h {
-            let (tok, lab) = self.shard.next_batch();
-            let (loss, grads) = self.rt.step_single(&self.params, &tok, &lab)?;
-            self.inner.step(&mut self.params, &grads);
-            acc += loss as f64;
-        }
-        Ok((acc / h.max(1) as f64) as f32)
+    fn as_work(&mut self) -> &mut dyn RoundWork {
+        self
     }
 
     fn eval(&mut self) -> Result<f32> {
-        let mut it = ShardIter::new(
-            std::sync::Arc::clone(&self.corpus),
-            9999,
-            self.seed ^ 0xe7a1,
-            self.microbatch,
-            self.seq_len,
-        );
-        let mut acc = 0.0f32;
-        let batches = 3;
-        for _ in 0..batches {
-            let (t, l) = it.next_batch();
-            acc += self.rt.eval_single(&self.params, &t, &l)?;
-        }
-        Ok(acc / batches as f32)
+        self.eval_loss()
     }
 }
 
@@ -494,49 +504,62 @@ fn build_trainer(opts: &WorkerOpts) -> Result<Box<dyn LocalTrainer>> {
             opts.seed,
             opts.inner_lr,
         )),
-        Workload::Runtime { artifacts_dir } => {
-            Box::new(RuntimeTrainer::new(artifacts_dir, opts.rank, opts)?)
-        }
+        Workload::Runtime { artifacts_dir } => Box::new(RuntimeStepWork::new(
+            artifacts_dir,
+            opts.rank as usize,
+            opts.seed,
+            opts.inner_lr,
+            opts.weight_decay,
+        )?),
     })
 }
 
-/// Single-lane [`DeltaReducer`] over an already-formed ring: raw fp32
-/// pseudo-gradient mean, metering actual ring bytes (the elastic wire
-/// ships uncompressed; compression lives in the coordinator paths).
-struct RingMeanReducer<'a> {
-    ring: &'a mut dyn RingTransport,
-    wire: u64,
+/// Flat parameter spec for the single-vector fleet wire (inert under
+/// `Method::None`, the elastic fleet's uncompressed fp32 wire).
+fn flat_spec(dim: usize) -> Vec<ParamEntry> {
+    vec![ParamEntry { name: "flat".to_string(), shape: vec![dim], offset: 0 }]
 }
 
-impl DeltaReducer for RingMeanReducer<'_> {
-    fn begin(&mut self, _deltas: &[Vec<f32>], _round: u64) -> Result<()> {
-        Ok(())
+/// The per-worker epoch-aware driver for the single-vector fleet:
+/// overlap/sync selection, fault hooks, and drain-or-discard state all
+/// live in [`RoundDriver`]; the fleet only supplies rings per epoch.
+fn build_fleet_driver(opts: &WorkerOpts, theta0: Vec<f32>) -> RoundDriver {
+    let dim = theta0.len();
+    let engine = RoundEngine::new(
+        theta0,
+        1,
+        Nesterov::new(dim, opts.outer_lr, opts.outer_momentum),
+        opts.overlap,
+        false,
+    );
+    let lane =
+        RingLane::unseeded(Method::None, opts.seed, flat_spec(dim), opts.overlap);
+    let mut driver = RoundDriver::new(engine, lane, opts.rounds, opts.local_steps);
+    if let Some(plan) = &opts.faults {
+        driver.set_break_round(plan.break_round);
     }
-
-    fn complete(&mut self, deltas: &[Vec<f32>], _round: u64) -> Result<Vec<f32>> {
-        let mut d = deltas[0].clone();
-        let before = self.ring.meter().total();
-        self.ring.allreduce_mean(&mut d)?;
-        self.wire += self.ring.meter().total() - before;
-        Ok(d)
-    }
+    driver
 }
 
 /// Block on the control socket until the coordinator commits a membership
 /// epoch newer than `after_epoch`; acks every Prepare seen on the way.
+/// Returns (epoch, resume_round, members, drain_round).
+#[allow(clippy::type_complexity)]
 fn wait_for_commit(
     coord: &mut TcpStream,
     after_epoch: u32,
-) -> Result<(u32, u32, Vec<(u32, u16)>)> {
+) -> Result<(u32, u32, Vec<(u32, u16)>, u32)> {
     coord
         .set_read_timeout(Some(Duration::from_secs(120)))
         .ok();
-    let mut prepared: Option<(u32, u32, Vec<(u32, u16)>)> = None;
+    let mut prepared: Option<(u32, u32, Vec<(u32, u16)>, u32)> = None;
     loop {
         match read_msg(coord) {
-            Ok(Msg::Prepare { epoch, resume_round, members }) if epoch > after_epoch => {
+            Ok(Msg::Prepare { epoch, resume_round, members, drain_round })
+                if epoch > after_epoch =>
+            {
                 write_msg(coord, &Msg::PrepareAck { epoch })?;
-                prepared = Some((epoch, resume_round, members));
+                prepared = Some((epoch, resume_round, members, drain_round));
             }
             Ok(Msg::Commit { epoch }) => {
                 if let Some(p) = prepared.clone() {
@@ -574,24 +597,21 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     write_msg(&mut coord, &Msg::Hello { rank: opts.rank, ring_port })?;
 
     let mut trainer = build_trainer(opts)?;
-    let dim = trainer.dim();
-    // Outer rounds run through the shared engine (sync mode): θ_g moves
-    // only by outer updates, and a failed collective leaves it untouched
-    // so the next epoch resumes from the last committed state.
-    let mut engine = RoundEngine::new(
-        trainer.params().to_vec(),
-        1,
-        Nesterov::new(dim, opts.outer_lr, opts.outer_momentum),
-        false,
-        false,
-    );
-    let mut applied: usize = 0;
-    let mut wire_total = 0u64;
+    // Outer rounds run through the shared epoch-aware driver: θ_g moves
+    // only by outer updates, a failed collective leaves it untouched, and
+    // any in-flight overlap delta survives churn for drain-or-discard.
+    let mut driver = build_fleet_driver(opts, trainer.params().to_vec());
     let mut epoch = 0u32;
 
     'epochs: loop {
-        let (e, resume_round, members) = wait_for_commit(&mut coord, epoch)?;
+        let (e, resume_round, members, drain_round) =
+            wait_for_commit(&mut coord, epoch)?;
         epoch = e;
+        let broken = |d: &RoundDriver| Msg::RingBroken {
+            epoch,
+            applied_rounds: d.applied() as u32,
+            in_flight_round: d.in_flight_round(),
+        };
         let formed = tcp::form_ring(
             opts.rank,
             epoch,
@@ -603,71 +623,143 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
         let raw = match formed {
             Ok(r) => r,
             Err(_) => {
-                let _ = write_msg(
-                    &mut coord,
-                    &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
-                );
+                let _ = write_msg(&mut coord, &broken(&driver));
                 continue 'epochs;
             }
         };
-        let mut ring: Box<dyn RingTransport> = match &opts.faults {
+        let ring: Box<dyn RingTransport> = match &opts.faults {
             Some(plan) => Box::new(FaultyRing::new(raw, plan.clone())),
             None => Box::new(raw),
         };
 
-        // Consensus resync: survivors re-agree on θ_g (identical at epoch
-        // 1; a true mean after churn) and the outer momentum restarts.
-        let mut theta = engine.theta().to_vec();
-        if ring.allreduce_mean(&mut theta).is_err() {
-            let _ = write_msg(
-                &mut coord,
-                &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
-            );
+        // Consensus resync + the committed drain-or-discard decision;
+        // a failure here is churn on the fresh ring (state preserved).
+        if driver
+            .begin_epoch(ring, Recovery::from_wire(drain_round))
+            .is_err()
+        {
+            let _ = write_msg(&mut coord, &broken(&driver));
             continue 'epochs;
         }
-        engine.set_theta(&theta);
-        engine.reset_outer();
-        trainer.set_params(engine.theta());
 
-        let mut round = resume_round as usize;
-        while round <= opts.rounds {
-            // Fault hook: an injected kill exits here (process mode) or
-            // errors out (thread mode) — either way the control socket
-            // drops and the coordinator sees a dead member.
-            ring.begin_round(round)?;
-            let loss = trainer.local_round(opts.local_steps)?;
-            let mv = movement(engine.theta(), trainer.params());
-            let mut red = RingMeanReducer { ring: ring.as_mut(), wire: 0 };
-            if engine.finish_round(vec![mv], round as u64, &mut red).is_err() {
-                let _ = write_msg(
-                    &mut coord,
-                    &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
-                );
+        let end = {
+            let coord = &mut coord;
+            driver.run_rounds(
+                resume_round as usize,
+                trainer.as_work(),
+                &mut |t: RoundTelemetry| {
+                    let _ = write_msg(
+                        coord,
+                        &Msg::Heartbeat {
+                            round: t.round as u32,
+                            loss: t.loss,
+                            step_secs: t.step_secs as f32,
+                            wire_bytes: t.wire_bytes,
+                        },
+                    );
+                },
+            )?
+        };
+        match end {
+            EpochEnd::Completed => {
+                // Trailing in-flight reduction: a peer dying during the
+                // final collective is churn like any other — the next
+                // epoch's drain decision finishes the held delta.
+                if driver.finish(trainer.as_work()).is_err() {
+                    let _ = write_msg(&mut coord, &broken(&driver));
+                    continue 'epochs;
+                }
+                break;
+            }
+            EpochEnd::Broken(_) => {
+                let _ = write_msg(&mut coord, &broken(&driver));
                 continue 'epochs;
             }
-            wire_total += red.wire;
-            trainer.set_params(engine.theta());
-            applied = round;
-            let _ = write_msg(&mut coord, &Msg::Heartbeat { round: round as u32, loss });
-            round += 1;
         }
-        break;
     }
 
     let final_loss = trainer.eval()?;
     write_msg(
         &mut coord,
         &Msg::Done {
-            rounds: applied as u32,
-            wire_bytes: wire_total,
+            rounds: driver.applied() as u32,
+            wire_bytes: driver.wire_total(),
             final_loss,
-            params: params_digest(engine.theta()),
+            params: params_digest(driver.engine().theta()),
         },
     )?;
     // Park until Shutdown (or coordinator EOF).
     coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
     let _ = read_msg(&mut coord);
     Ok(())
+}
+
+/// In-process reference for the single-vector fleet: the same trainers
+/// and the same epoch-aware driver over the **local mpsc ring** — what
+/// the loopback-TCP fleet must match bit-for-bit (the TCP ring
+/// collective is itself bit-identical to the local ring, and both
+/// deployments execute the identical driver sequence, including the
+/// epoch-1 consensus resync).  Returns (final params, mean final loss,
+/// total reduction payload bytes).
+pub fn run_local_reference(cfg: &ElasticConfig) -> Result<(Vec<f32>, f32, u64)> {
+    if cfg.pp_stages > 1 {
+        return Err(anyhow!(
+            "the stage-parallel reference is the threaded executor \
+             (pipeline::exec::run_pipeline)"
+        ));
+    }
+    if cfg.workers == 0 {
+        return Err(anyhow!("need at least one worker"));
+    }
+    let members = build_ring(cfg.workers);
+    let outs: Vec<Result<(Vec<f32>, f32, u64)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = members
+            .into_iter()
+            .enumerate()
+            .map(|(rank, member)| {
+                let mut opts =
+                    worker_opts_for(cfg, rank as u32, "", &SpawnMode::Thread);
+                // The reference is the clean-room baseline: no faults.
+                opts.faults = None;
+                scope.spawn(move || -> Result<(Vec<f32>, f32, u64)> {
+                    let mut trainer = build_trainer(&opts)?;
+                    let mut driver =
+                        build_fleet_driver(&opts, trainer.params().to_vec());
+                    driver.begin_epoch(Box::new(member), Recovery::Discard)?;
+                    match driver.run_rounds(1, trainer.as_work(), &mut |_| {})? {
+                        EpochEnd::Completed => {}
+                        EpochEnd::Broken(e) => {
+                            return Err(
+                                e.context("local reference ring broke")
+                            )
+                        }
+                    }
+                    driver.finish(trainer.as_work())?;
+                    let loss = trainer.eval()?;
+                    Ok((
+                        driver.engine().theta().to_vec(),
+                        loss,
+                        driver.wire_total(),
+                    ))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut finals = Vec::new();
+    for o in outs {
+        finals.push(o?);
+    }
+    let p0 = finals[0].0.clone();
+    for (pi, _, _) in &finals[1..] {
+        if p0 != *pi {
+            return Err(anyhow!("reference workers diverged"));
+        }
+    }
+    let losses: Vec<f32> = finals.iter().map(|(_, l, _)| *l).collect();
+    let mean_loss = losses.iter().sum::<f32>() / losses.len() as f32;
+    let wire = finals.iter().map(|(_, _, w)| w).sum();
+    Ok((params_digest(&p0), mean_loss, wire))
 }
 
 // ---------------------------------------------------------------------------
@@ -722,15 +814,17 @@ fn build_stage_pipeline(
 /// Block on the control socket until the coordinator commits a membership
 /// epoch newer than `after_epoch`; acks every StagePrepare seen on the
 /// way.  `Ok(None)` = clean Shutdown (our cluster was dropped).
+/// Returns (epoch, resume_round, ring_members, link_down_port,
+/// drain_round).
 #[allow(clippy::type_complexity)]
 fn wait_for_stage_commit(
     coord: &mut TcpStream,
     after_epoch: u32,
-) -> Result<Option<(u32, u32, Vec<(u32, u16)>, u16)>> {
+) -> Result<Option<(u32, u32, Vec<(u32, u16)>, u16, u32)>> {
     coord
         .set_read_timeout(Some(Duration::from_secs(120)))
         .ok();
-    let mut prepared: Option<(u32, u32, Vec<(u32, u16)>, u16)> = None;
+    let mut prepared: Option<(u32, u32, Vec<(u32, u16)>, u16, u32)> = None;
     loop {
         match read_msg(coord) {
             Ok(Msg::StagePrepare {
@@ -738,9 +832,16 @@ fn wait_for_stage_commit(
                 resume_round,
                 ring_members,
                 link_down_port,
+                drain_round,
             }) if epoch > after_epoch => {
                 write_msg(coord, &Msg::PrepareAck { epoch })?;
-                prepared = Some((epoch, resume_round, ring_members, link_down_port));
+                prepared = Some((
+                    epoch,
+                    resume_round,
+                    ring_members,
+                    link_down_port,
+                    drain_round,
+                ));
             }
             Ok(Msg::Commit { epoch }) => {
                 if let Some(p) = prepared.clone() {
@@ -766,13 +867,14 @@ fn wait_for_stage_commit(
 ///
 /// Per committed epoch it (re)forms its per-stage DP ring across
 /// clusters, its intra-cluster stage-link chain
-/// ([`crate::transport::tcp::TcpStageLink`]), resyncs this stage's θ_s
-/// by a consensus ring mean, and runs outer rounds through the shared
-/// [`RoundEngine`] with the identical inner-step driver
-/// ([`run_stream_step`]) as the local threaded executor — the two
-/// deployments are bit-for-bit comparable.  Any wire failure mid-round
-/// (a dead neighbor's socket timing out, a broken ring collective)
-/// reports `RingBroken` and parks for the next epoch.
+/// ([`crate::transport::tcp::TcpStageLink`]), then enters the SAME
+/// epoch-aware driver ([`RoundDriver`]) and inner-round work
+/// ([`StageStepWork`]) as the local threaded executor — the two
+/// deployments are bit-for-bit comparable, in sync and overlap mode
+/// alike.  Any wire failure mid-round (a dead neighbor's socket timing
+/// out, a broken ring collective, a reduction caught in flight) reports
+/// `RingBroken` with the held in-flight round and parks for the next
+/// epoch's drain-or-discard decision.
 pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
     let w = &opts.base;
     let stages = opts.stages as usize;
@@ -852,36 +954,46 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
         .map_err(|e| anyhow!("invalid 1F1B schedule: {e}"))?;
     let stream = streams[opts.stage as usize].clone();
 
-    let mut compute = workload.make_stage(w.rank as usize, opts.stage as usize)?;
+    let compute = workload.make_stage(w.rank as usize, opts.stage as usize)?;
     let n = compute.numel();
-    let mut params = compute.init()?;
+    let params = compute.init()?;
     if params.len() != n {
         return Err(anyhow!("init len {} != numel {n}", params.len()));
     }
     let spec = compute.param_spec();
     // §2.2: this process holds only this stage's optimizer pair.
-    let DualOptimizer { mut inner, outer } = DualOptimizer::new(
+    let DualOptimizer { inner, outer } = DualOptimizer::new(
         n,
         w.inner_lr,
         w.weight_decay,
         w.outer_lr,
         w.outer_momentum,
     );
-    // Sync-mode engine: overlap stays a local-executor feature for now —
-    // the recovery protocol assumes no reduction is in flight across a
-    // round boundary.
-    let mut engine = RoundEngine::new(params.clone(), 1, outer, false, false);
+    // The identical engine/lane/driver stack as the threaded stage
+    // executor — including one-step-delay overlap: the drain-or-discard
+    // protocol handles reductions caught in flight by churn.
+    let engine = RoundEngine::new(params.clone(), 1, outer, w.overlap, false);
     // Same per-stage compressor seed derivation as the local executor
     // (inert under Method::None, load-bearing once the fleet compresses).
     let stage_seed =
         w.seed ^ (opts.stage as u64).wrapping_mul(0x9e3779b97f4a7c15);
-
-    let mut applied = 0usize;
-    let mut wire_total = 0u64;
+    let lane = RingLane::unseeded(Method::None, stage_seed, spec, w.overlap);
+    let mut work = StageStepWork {
+        compute,
+        stream,
+        link: Box::new(MpscStageLink::default()),
+        params,
+        inner,
+        micros,
+    };
+    let mut driver = RoundDriver::new(engine, lane, w.rounds, w.local_steps);
+    if let Some(plan) = &w.faults {
+        driver.set_break_round(plan.break_round);
+    }
     let mut epoch = 0u32;
 
     'epochs: loop {
-        let Some((e, resume_round, ring_members, down_port)) =
+        let Some((e, resume_round, ring_members, down_port, drain_round)) =
             wait_for_stage_commit(&mut coord, epoch)?
         else {
             // Dropped before completion (a sibling stage died and the
@@ -889,6 +1001,11 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
             return Ok(());
         };
         epoch = e;
+        let broken = |d: &RoundDriver| Msg::RingBroken {
+            epoch,
+            applied_rounds: d.applied() as u32,
+            in_flight_round: d.in_flight_round(),
+        };
         let finishing = resume_round as usize > w.rounds;
         let raw = match tcp::form_ring(
             w.rank,
@@ -900,20 +1017,18 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
         ) {
             Ok(r) => r,
             Err(_) => {
-                let _ = write_msg(
-                    &mut coord,
-                    &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
-                );
+                let _ = write_msg(&mut coord, &broken(&driver));
                 continue 'epochs;
             }
         };
-        let mut ring: Box<dyn RingTransport> = match &w.faults {
+        let ring: Box<dyn RingTransport> = match &w.faults {
             Some(plan) => Box::new(FaultyRing::new(raw, plan.clone())),
             None => Box::new(raw),
         };
         // Dataflow links (skipped in a finishing epoch: no rounds left to
-        // run, and neighbors that already completed form no links).
-        let mut link: Box<dyn StageLink> = if finishing {
+        // run — a pending drain needs only the ring — and neighbors that
+        // already completed form no links).
+        work.link = if finishing {
             Box::new(MpscStageLink::default())
         } else {
             match tcp::form_stage_links(
@@ -926,111 +1041,73 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
             ) {
                 Ok(l) => Box::new(l),
                 Err(_) => {
-                    let _ = write_msg(
-                        &mut coord,
-                        &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
-                    );
+                    let _ = write_msg(&mut coord, &broken(&driver));
                     continue 'epochs;
                 }
             }
         };
 
-        // Consensus resync on this stage's ring: survivors re-agree on
-        // θ_s (identical at epoch 1; a true mean after churn) and the
-        // outer momentum restarts.
-        let mut theta = engine.theta().to_vec();
-        if ring.allreduce_mean(&mut theta).is_err() {
-            let _ = write_msg(
-                &mut coord,
-                &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
-            );
+        // Consensus resync on this stage's ring + this ring's committed
+        // drain-or-discard decision.
+        if driver
+            .begin_epoch(ring, Recovery::from_wire(drain_round))
+            .is_err()
+        {
+            let _ = write_msg(&mut coord, &broken(&driver));
             continue 'epochs;
         }
-        engine.set_theta(&theta);
-        engine.reset_outer();
-        params.copy_from_slice(engine.theta());
+        // Re-align the data stream to the resume round after churn
+        // (overlap can catch sibling stages a partial round apart; the
+        // un-churned path never resets, preserving threaded-vs-fleet
+        // bit parity).
+        if epoch > 1 {
+            work.compute.reset_data(resume_round as usize)?;
+        }
 
-        let mut lane =
-            RingLane::new(ring, Method::None, stage_seed, spec.clone(), false);
-        let mut round = resume_round as usize;
-        let mut broke = false;
-        while round <= w.rounds {
-            // Fault hook: an injected kill exits here (process mode) or
-            // errors out (thread mode) — either way the control socket
-            // drops and the coordinator sees a dead stage process.
-            lane.begin_round(round)?;
-            let anchor = params.clone();
-            let mut loss_acc = 0.0f64;
-            let mut loss_n = 0usize;
-            let mut step_err = false;
-            for _ in 0..w.local_steps {
-                compute.next_step()?;
-                let mut grad_acc = vec![0.0f32; n];
-                match run_stream_step(
-                    compute.as_mut(),
-                    &params,
-                    &stream,
-                    link.as_mut(),
-                    &mut grad_acc,
-                ) {
-                    Ok((ls, ln, _busy)) => {
-                        loss_acc += ls;
-                        loss_n += ln;
-                        let inv = 1.0 / micros as f32;
-                        grad_acc.iter_mut().for_each(|g| *g *= inv);
-                        inner.step(&mut params, &grad_acc);
-                    }
-                    Err(_) => {
-                        // A dead neighbor surfaces here (link timeout /
-                        // EOF): churn, not a fatal error.
-                        step_err = true;
-                        break;
-                    }
+        let end = {
+            let coord = &mut coord;
+            driver.run_rounds(
+                resume_round as usize,
+                &mut work,
+                &mut |t: RoundTelemetry| {
+                    // Loss telemetry is real only on the label-bearing
+                    // stage (NaN elsewhere); step_secs is per-stage.
+                    let _ = write_msg(
+                        coord,
+                        &Msg::Heartbeat {
+                            round: t.round as u32,
+                            loss: t.loss,
+                            step_secs: t.step_secs as f32,
+                            wire_bytes: t.wire_bytes,
+                        },
+                    );
+                },
+            )?
+        };
+        match end {
+            EpochEnd::Completed => {
+                if driver.finish(&mut work).is_err() {
+                    let _ = write_msg(&mut coord, &broken(&driver));
+                    continue 'epochs;
                 }
-            }
-            if step_err {
-                broke = true;
                 break;
             }
-            let mv = movement(&anchor, &params);
-            if engine.finish_round(vec![mv], round as u64, &mut lane).is_err() {
-                broke = true;
-                break;
+            EpochEnd::Broken(_) => {
+                let _ = write_msg(&mut coord, &broken(&driver));
+                continue 'epochs;
             }
-            params.copy_from_slice(engine.theta());
-            applied = round;
-            // Loss telemetry is real only on the label-bearing stage.
-            let loss = if loss_n > 0 {
-                (loss_acc / loss_n as f64) as f32
-            } else {
-                f32::NAN
-            };
-            let _ = write_msg(
-                &mut coord,
-                &Msg::Heartbeat { round: round as u32, loss },
-            );
-            round += 1;
         }
-        wire_total += lane.wire_total;
-        if broke {
-            let _ = write_msg(
-                &mut coord,
-                &Msg::RingBroken { epoch, applied_rounds: applied as u32 },
-            );
-            continue 'epochs;
-        }
-        break;
     }
 
     write_msg(
         &mut coord,
         &Msg::Done {
-            rounds: applied as u32,
-            wire_bytes: wire_total,
+            rounds: driver.applied() as u32,
+            wire_bytes: driver.wire_total(),
             // The final eval needs the *assembled* model; the coordinator
             // computes it from the per-stage digests.
             final_loss: f32::NAN,
-            params: params_digest(engine.theta()),
+            params: params_digest(driver.engine().theta()),
         },
     )?;
     // Park until Shutdown (or coordinator EOF).
@@ -1089,6 +1166,45 @@ struct DoneReport {
     params: Vec<f32>,
 }
 
+/// Fleet telemetry accumulated by the supervisors from heartbeats and
+/// recovery commits (maps onto [`ElasticOutcome`]).
+#[derive(Default)]
+struct Telemetry {
+    /// (worker/cluster, round, loss) — NaN losses filtered at ingest.
+    round_losses: Vec<(u32, u32, f32)>,
+    /// (worker/cluster, round, reduction payload bytes).
+    round_wire: Vec<(u32, u32, u64)>,
+    /// (stage, measured compute secs per inner step) samples.
+    step_samples: Vec<(u32, f64)>,
+    /// Committed recovery decisions: (epoch, stage, drain_round).
+    recoveries: Vec<(u32, u32, u32)>,
+}
+
+/// The commit-time drain-or-discard rule: finish (drain) an in-flight
+/// δ-reduction only when EVERY member of the proposed ring reported the
+/// SAME in-flight round; anything else — mixed rounds, a member that
+/// never reported, nothing in flight — must discard, because a partial
+/// drain collective would stall on the members with nothing to reduce.
+/// Returns the drain round (0 = discard).
+fn drain_decision(reported: impl Iterator<Item = Option<u32>>) -> u32 {
+    let mut agreed = 0u32;
+    let mut any = false;
+    for r in reported {
+        any = true;
+        match r {
+            None | Some(0) => return 0,
+            Some(v) if agreed == 0 => agreed = v,
+            Some(v) if v != agreed => return 0,
+            _ => {}
+        }
+    }
+    if any {
+        agreed
+    } else {
+        0
+    }
+}
+
 fn spawn_workers(
     cfg: &ElasticConfig,
     mode: &SpawnMode,
@@ -1123,6 +1239,9 @@ fn spawn_workers(
                     .arg(cfg.transport.ring_timeout_ms.to_string())
                     .arg("--connect-timeout-ms")
                     .arg(cfg.transport.connect_timeout_ms.to_string());
+                if cfg.overlap {
+                    cmd.arg("--overlap");
+                }
                 match &cfg.workload {
                     Workload::Quadratic { dim } => {
                         cmd.arg("--workload").arg("quad");
@@ -1142,6 +1261,8 @@ fn spawn_workers(
                         .arg(plan.max_delay_ms.to_string())
                         .arg("--fault-kill-round")
                         .arg(plan.kill_round.to_string())
+                        .arg("--fault-break-round")
+                        .arg(plan.break_round.to_string())
                         .arg("--fault-straggler-ms")
                         .arg(plan.straggler_ms.to_string());
                 }
@@ -1182,6 +1303,7 @@ fn worker_opts_for(
         outer_momentum: cfg.outer_momentum,
         seed: cfg.seed,
         workload: cfg.workload.clone(),
+        overlap: cfg.overlap,
         ring_timeout_ms: cfg.transport.ring_timeout_ms,
         connect_timeout_ms: cfg.transport.connect_timeout_ms,
         faults: fault_plan_for(&cfg.faults, rank, exit_on_kill),
@@ -1273,7 +1395,7 @@ pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutco
     // propagate the error.
     let supervised = supervise(cfg, &listener);
     reap_children(&mut children);
-    let (epoch, done, round_losses) = supervised?;
+    let (epoch, done, telem) = supervised?;
 
     let survivors: Vec<u32> = done.keys().copied().collect();
     if survivors.is_empty() {
@@ -1316,7 +1438,10 @@ pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutco
         final_loss,
         final_params: p0.clone(),
         total_wire_bytes,
-        round_losses,
+        round_losses: telem.round_losses,
+        round_wire: telem.round_wire,
+        stage_times: summarize_step_samples(&telem.step_samples),
+        recoveries: telem.recoveries,
     })
 }
 
@@ -1328,7 +1453,7 @@ pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutco
 fn supervise(
     cfg: &ElasticConfig,
     listener: &TcpListener,
-) -> Result<(u32, BTreeMap<u32, DoneReport>, Vec<(u32, u32, f32)>)> {
+) -> Result<(u32, BTreeMap<u32, DoneReport>, Telemetry)> {
     let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
     let startup_deadline = Instant::now()
         + Duration::from_millis(cfg.transport.connect_timeout_ms)
@@ -1349,21 +1474,34 @@ fn supervise(
     let mut epoch: u32 = 0;
     let mut resume_round: u32 = 1;
     let mut done: BTreeMap<u32, DoneReport> = BTreeMap::new();
-    let mut round_losses: Vec<(u32, u32, f32)> = Vec::new();
+    let mut telem = Telemetry::default();
+    // Latest reported in-flight round per live worker (the
+    // drain-or-discard evidence; cleared on every successful commit).
+    let mut inflight: BTreeMap<u32, u32> = BTreeMap::new();
 
     // Small helper applied to every event everywhere: telemetry +
-    // resume-round bookkeeping.
+    // resume-round + in-flight bookkeeping.
     fn note_progress(
         ev: &Event<u32>,
         resume_round: &mut u32,
-        round_losses: &mut Vec<(u32, u32, f32)>,
+        telem: &mut Telemetry,
+        inflight: &mut BTreeMap<u32, u32>,
     ) {
-        if let Event::Msg(w, Msg::Heartbeat { round, loss }) = ev {
-            round_losses.push((*w, *round, *loss));
+        if let Event::Msg(w, Msg::Heartbeat { round, loss, step_secs, wire_bytes }) =
+            ev
+        {
+            if !loss.is_nan() {
+                telem.round_losses.push((*w, *round, *loss));
+            }
+            telem.round_wire.push((*w, *round, *wire_bytes));
+            telem.step_samples.push((0, *step_secs as f64));
             *resume_round = (*resume_round).max(round + 1);
         }
-        if let Event::Msg(_, Msg::RingBroken { applied_rounds, .. }) = ev {
+        if let Event::Msg(w, Msg::RingBroken { applied_rounds, in_flight_round, .. }) =
+            ev
+        {
             *resume_round = (*resume_round).max(applied_rounds + 1);
+            inflight.insert(*w, *in_flight_round);
         }
     }
 
@@ -1382,6 +1520,15 @@ fn supervise(
 
         // -- 2PC prepare/commit over the pending members ------------------
         epoch += 1;
+        // Drain-or-discard: drain only if every proposed member reported
+        // the same in-flight round (see `drain_decision`); a drain pushes
+        // the resume point past the drained round.
+        let drain_round = drain_decision(
+            pending.iter().map(|r| inflight.get(r).copied()),
+        );
+        if drain_round > 0 {
+            resume_round = resume_round.max(drain_round + 1);
+        }
         let members: Vec<(u32, u16)> =
             pending.iter().map(|r| (*r, live[r].ring_port)).collect();
         let mut lost: Vec<u32> = Vec::new();
@@ -1389,7 +1536,12 @@ fn supervise(
             let h = live.get_mut(&r).unwrap();
             if write_msg(
                 &mut h.writer,
-                &Msg::Prepare { epoch, resume_round, members: members.clone() },
+                &Msg::Prepare {
+                    epoch,
+                    resume_round,
+                    members: members.clone(),
+                    drain_round,
+                },
             )
             .is_err()
             {
@@ -1417,7 +1569,7 @@ fn supervise(
             }
             match rx.recv_timeout(left) {
                 Ok(ev) => {
-                    note_progress(&ev, &mut resume_round, &mut round_losses);
+                    note_progress(&ev, &mut resume_round, &mut telem, &mut inflight);
                     match ev {
                         Event::Msg(w, Msg::PrepareAck { epoch: e }) if e == epoch => {
                             acked.insert(w);
@@ -1466,6 +1618,12 @@ fn supervise(
             }
             continue 'epochs;
         }
+        // Committed: the members act on the decision now; their in-flight
+        // state is consumed (a failed recovery re-reports it).
+        telem.recoveries.push((epoch, 0, drain_round));
+        for r in &pending {
+            inflight.remove(r);
+        }
 
         // -- committed: watch the epoch run -------------------------------
         let mut broken: BTreeSet<u32> = BTreeSet::new();
@@ -1475,7 +1633,7 @@ fn supervise(
             }
             let churn = match rx.recv_timeout(Duration::from_millis(200)) {
                 Ok(ev) => {
-                    note_progress(&ev, &mut resume_round, &mut round_losses);
+                    note_progress(&ev, &mut resume_round, &mut telem, &mut inflight);
                     match ev {
                         Event::Msg(w, Msg::Done { wire_bytes, final_loss, params, .. }) => {
                             done.insert(w, DoneReport { wire_bytes, final_loss, params });
@@ -1519,7 +1677,7 @@ fn supervise(
                     break;
                 }
                 if let Ok(ev) = rx.recv_timeout(Duration::from_millis(100)) {
-                    note_progress(&ev, &mut resume_round, &mut round_losses);
+                    note_progress(&ev, &mut resume_round, &mut telem, &mut inflight);
                     match ev {
                         Event::Msg(w, Msg::RingBroken { .. }) => {
                             broken.insert(w);
@@ -1544,7 +1702,7 @@ fn supervise(
     for h in live.values_mut() {
         let _ = write_msg(&mut h.writer, &Msg::Shutdown);
     }
-    Ok((epoch, done, round_losses))
+    Ok((epoch, done, telem))
 }
 
 // ---------------------------------------------------------------------------
@@ -1613,6 +1771,9 @@ fn spawn_stage_workers(
                         .arg(cfg.transport.ring_timeout_ms.to_string())
                         .arg("--connect-timeout-ms")
                         .arg(cfg.transport.connect_timeout_ms.to_string());
+                    if cfg.overlap {
+                        cmd.arg("--overlap");
+                    }
                     match &cfg.workload {
                         Workload::Quadratic { dim } => {
                             cmd.arg("--workload").arg("quad");
@@ -1632,6 +1793,8 @@ fn spawn_stage_workers(
                             .arg(plan.max_delay_ms.to_string())
                             .arg("--fault-kill-round")
                             .arg(plan.kill_round.to_string())
+                            .arg("--fault-break-round")
+                            .arg(plan.break_round.to_string())
                             .arg("--fault-straggler-ms")
                             .arg(plan.straggler_ms.to_string());
                     }
@@ -1754,7 +1917,7 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
 
     let supervised = supervise_stages(cfg, &listener);
     reap_children(&mut children);
-    let (epoch, done, round_losses) = supervised?;
+    let (epoch, done, telem) = supervised?;
 
     // Survivor clusters: every stage process completed.
     let clusters: BTreeSet<u32> = done.keys().map(|(c, _)| *c).collect();
@@ -1826,7 +1989,10 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
         final_loss,
         final_params: p0,
         total_wire_bytes,
-        round_losses,
+        round_losses: telem.round_losses,
+        round_wire: telem.round_wire,
+        stage_times: summarize_step_samples(&telem.step_samples),
+        recoveries: telem.recoveries,
     })
 }
 
@@ -1837,7 +2003,7 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
 fn supervise_stages(
     cfg: &ElasticConfig,
     listener: &TcpListener,
-) -> Result<(u32, BTreeMap<(u32, u32), DoneReport>, Vec<(u32, u32, f32)>)> {
+) -> Result<(u32, BTreeMap<(u32, u32), DoneReport>, Telemetry)> {
     let stages = cfg.pp_stages as u32;
     let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
     let startup_deadline = Instant::now()
@@ -1858,16 +2024,21 @@ fn supervise_stages(
     let mut epoch: u32 = 0;
     let mut resume_round: u32 = 1;
     let mut done: BTreeMap<(u32, u32), DoneReport> = BTreeMap::new();
-    let mut round_losses: Vec<(u32, u32, f32)> = Vec::new();
+    let mut telem = Telemetry::default();
+    // Latest reported in-flight round per live (cluster, stage) process
+    // (per-stage drain-or-discard evidence; cleared on commit).
+    let mut inflight: BTreeMap<(u32, u32), u32> = BTreeMap::new();
 
-    // Telemetry + resume-round bookkeeping, applied to every event from a
-    // still-live process (orphans of dropped clusters are ignored — their
-    // progress reports must not steer the survivors' resume point).
+    // Telemetry + resume-round + in-flight bookkeeping, applied to every
+    // event from a still-live process (orphans of dropped clusters are
+    // ignored — their progress reports must not steer the survivors'
+    // resume point).
     fn note(
         ev: &Event<(u32, u32)>,
         live: &BTreeMap<(u32, u32), StageHandle>,
         resume_round: &mut u32,
-        round_losses: &mut Vec<(u32, u32, f32)>,
+        telem: &mut Telemetry,
+        inflight: &mut BTreeMap<(u32, u32), u32>,
     ) {
         let key = match ev {
             Event::Msg(k, _) => k,
@@ -1876,14 +2047,23 @@ fn supervise_stages(
         if !live.contains_key(key) {
             return;
         }
-        if let Event::Msg((c, _), Msg::Heartbeat { round, loss }) = ev {
+        if let Event::Msg(
+            (c, s),
+            Msg::Heartbeat { round, loss, step_secs, wire_bytes },
+        ) = ev
+        {
             if !loss.is_nan() {
-                round_losses.push((*c, *round, *loss));
+                telem.round_losses.push((*c, *round, *loss));
             }
+            telem.round_wire.push((*c, *round, *wire_bytes));
+            telem.step_samples.push((*s, *step_secs as f64));
             *resume_round = (*resume_round).max(round + 1);
         }
-        if let Event::Msg(_, Msg::RingBroken { applied_rounds, .. }) = ev {
+        if let Event::Msg(k, Msg::RingBroken { applied_rounds, in_flight_round, .. }) =
+            ev
+        {
             *resume_round = (*resume_round).max(applied_rounds + 1);
+            inflight.insert(*k, *in_flight_round);
         }
     }
 
@@ -1906,19 +2086,42 @@ fn supervise_stages(
 
         // -- 2PC prepare/commit, tailored per stage process ---------------
         epoch += 1;
-        // When the shared resume point is already past the schedule, the
-        // remaining processes have nothing left to run (their peers
-        // completed the final round before a late break): commit size-1
-        // rings and no dataflow so they finish immediately.
-        let finishing = resume_round as usize > cfg.rounds;
         let recipients: Vec<(u32, u32)> = pending
             .iter()
             .flat_map(|&c| (0..stages).map(move |s| (c, s)))
             .filter(|k| !done.contains_key(k))
             .collect();
+        // Per-stage-ring drain-or-discard: under overlap, stage rings can
+        // break one round apart (one stage's join succeeds while its
+        // sibling's stalls), so each stage ring gets its own decision.
+        let stage_drain: Vec<u32> = (0..stages)
+            .map(|s| {
+                drain_decision(
+                    recipients
+                        .iter()
+                        .filter(|&&(_, s2)| s2 == s)
+                        .map(|k| inflight.get(k).copied()),
+                )
+            })
+            .collect();
+        for &d in &stage_drain {
+            if d > 0 {
+                resume_round = resume_round.max(d + 1);
+            }
+        }
+        // When the shared resume point is already past the schedule, the
+        // remaining processes have nothing left to run (their peers
+        // completed the final round before a late break): no dataflow
+        // forms, and a stage ring with no pending drain commits as a
+        // size-1 ring so late-break stragglers finish immediately.  A
+        // stage ring WITH a pending drain stays full so the survivors
+        // finish the held reduction collectively.
+        let finishing = resume_round as usize > cfg.rounds;
         let mut lost: Vec<(u32, u32)> = Vec::new();
         for &(c, s) in &recipients {
-            let ring_members: Vec<(u32, u16)> = if finishing {
+            let drain_round = stage_drain[s as usize];
+            let ring_members: Vec<(u32, u16)> = if finishing && drain_round == 0
+            {
                 vec![(c, live[&(c, s)].ring_port)]
             } else {
                 pending
@@ -1943,6 +2146,7 @@ fn supervise_stages(
                     resume_round,
                     ring_members,
                     link_down_port,
+                    drain_round,
                 },
             )
             .is_err()
@@ -1969,7 +2173,7 @@ fn supervise_stages(
             }
             match rx.recv_timeout(left) {
                 Ok(ev) => {
-                    note(&ev, &live, &mut resume_round, &mut round_losses);
+                    note(&ev, &live, &mut resume_round, &mut telem, &mut inflight);
                     match ev {
                         Event::Msg(k, Msg::PrepareAck { epoch: e }) if e == epoch => {
                             acked.insert(k);
@@ -2019,6 +2223,14 @@ fn supervise_stages(
             }
             continue 'epochs;
         }
+        // Committed: the stage rings act on their decisions now; consumed
+        // in-flight evidence clears (a failed recovery re-reports it).
+        for (s, &d) in stage_drain.iter().enumerate() {
+            telem.recoveries.push((epoch, s as u32, d));
+        }
+        for k in &recipients {
+            inflight.remove(k);
+        }
 
         // -- committed: watch the epoch run -------------------------------
         let mut broken: BTreeSet<(u32, u32)> = BTreeSet::new();
@@ -2028,7 +2240,7 @@ fn supervise_stages(
             }
             let churn = match rx.recv_timeout(Duration::from_millis(200)) {
                 Ok(ev) => {
-                    note(&ev, &live, &mut resume_round, &mut round_losses);
+                    note(&ev, &live, &mut resume_round, &mut telem, &mut inflight);
                     match ev {
                         Event::Msg(k, Msg::Done { wire_bytes, final_loss, params, .. }) => {
                             if live.contains_key(&k) {
@@ -2081,7 +2293,7 @@ fn supervise_stages(
                     break;
                 }
                 if let Ok(ev) = rx.recv_timeout(Duration::from_millis(100)) {
-                    note(&ev, &live, &mut resume_round, &mut round_losses);
+                    note(&ev, &live, &mut resume_round, &mut telem, &mut inflight);
                     match ev {
                         Event::Msg(k, Msg::RingBroken { .. }) => {
                             broken.insert(k);
@@ -2111,7 +2323,7 @@ fn supervise_stages(
     for h in live.values_mut() {
         let _ = write_msg(&mut h.writer, &Msg::Shutdown);
     }
-    Ok((epoch, done, round_losses))
+    Ok((epoch, done, telem))
 }
 
 #[cfg(test)]
@@ -2147,6 +2359,167 @@ mod tests {
             out.final_loss,
             r1_mean
         );
+    }
+
+    #[test]
+    fn thread_mode_overlap_converges_and_wire_ledger_defers() {
+        // The §2.3 overlap on the fleet: the wire ledger must show the
+        // one-step delay — round-1 heartbeats completed no reduction,
+        // round-2 heartbeats completed round 1's.  (The regression for
+        // the old silent overlap→sync downgrade: a downgraded fleet
+        // would ship in round 1.)
+        let mut cfg = quick_cfg(3);
+        cfg.overlap = true;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.epochs, 1, "no churn expected");
+        assert_eq!(out.survivors, vec![0, 1, 2]);
+        assert!(out.final_loss.is_finite());
+        let wire_at = |round: u32| -> Vec<u64> {
+            out.round_wire
+                .iter()
+                .filter(|(_, r, _)| *r == round)
+                .map(|(_, _, b)| *b)
+                .collect()
+        };
+        assert_eq!(wire_at(1).len(), 3);
+        assert!(wire_at(1).iter().all(|&b| b == 0), "{:?}", out.round_wire);
+        assert!(wire_at(2).iter().all(|&b| b > 0), "{:?}", out.round_wire);
+        // Convergence still decisive despite the one-round delay.
+        let r1: Vec<f32> = out
+            .round_losses
+            .iter()
+            .filter(|(_, r, _)| *r == 1)
+            .map(|(_, _, l)| *l)
+            .collect();
+        let r1_mean = r1.iter().sum::<f32>() / r1.len() as f32;
+        assert!(out.final_loss < r1_mean * 0.5);
+        // Heartbeats carried measured step times (stage 0 for the DP
+        // fleet) — the TCP-fleet side of the DES calibration loop.
+        assert_eq!(out.stage_times.len(), 1);
+        assert!(out.stage_times[0].samples > 0);
+
+        // Control: the sync fleet ships in round 1.
+        let sync = run_elastic(&quick_cfg(2), &SpawnMode::Thread).unwrap();
+        assert!(sync
+            .round_wire
+            .iter()
+            .filter(|(_, r, _)| *r == 1)
+            .all(|(_, _, b)| *b > 0));
+    }
+
+    #[test]
+    fn thread_mode_overlap_kill_recovers_via_drain() {
+        // Kill one worker mid-run under overlap: the survivors both
+        // stall joining the same in-flight round, so the coordinator
+        // commits a DRAIN — the re-formed ring finishes that reduction
+        // with survivor-rescaled means and the run completes.
+        let mut cfg = quick_cfg(3);
+        cfg.overlap = true;
+        cfg.faults.enabled = true;
+        cfg.faults.kill_rank = 1;
+        cfg.faults.kill_round = 2;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 2]);
+        assert!(out.epochs >= 2, "epochs={}", out.epochs);
+        assert!(
+            out.recoveries.iter().any(|&(_, _, d)| d > 0),
+            "expected a drain commit, got {:?}",
+            out.recoveries
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round = out
+            .round_losses
+            .iter()
+            .map(|(_, r, _)| *r)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn thread_mode_overlap_soft_break_recovers_via_discard() {
+        // A soft break (worker parks without dying) leaves the breaker
+        // one in-flight round behind its peers — mixed evidence, so the
+        // coordinator must DISCARD (each survivor folds its delta into
+        // error feedback) and everyone — breaker included — completes.
+        let mut cfg = quick_cfg(3);
+        cfg.overlap = true;
+        cfg.faults.enabled = true;
+        cfg.faults.break_rank = 1;
+        cfg.faults.break_round = 3;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 1, 2], "nobody died");
+        assert!(out.epochs >= 2, "epochs={}", out.epochs);
+        assert!(
+            out.recoveries.iter().all(|&(_, _, d)| d == 0),
+            "mixed in-flight must discard, got {:?}",
+            out.recoveries
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round = out
+            .round_losses
+            .iter()
+            .map(|(_, r, _)| *r)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn thread_mode_stage_fleet_overlap_converges() {
+        // Overlap on the stage fleet: per-stage reductions run on comm
+        // threads while the 1F1B dataflow trains the next H steps.
+        let mut cfg = ElasticConfig::synthetic_pipeline(2, 2, 6, 16);
+        cfg.overlap = true;
+        // One-step-delayed outer updates oscillate at high gain on the
+        // fast-converging affine chain (see the executor's overlap test).
+        cfg.outer_lr = 0.3;
+        cfg.outer_momentum = 0.3;
+        cfg.transport.ring_timeout_ms = 1000;
+        cfg.transport.connect_timeout_ms = 5000;
+        cfg.wall_timeout_ms = 60_000;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.epochs, 1, "no churn expected");
+        assert_eq!(out.survivors, vec![0, 1]);
+        // Wire ledger: every stage process defers its first reduction.
+        assert!(out
+            .round_wire
+            .iter()
+            .filter(|(_, r, _)| *r == 1)
+            .all(|(_, _, b)| *b == 0));
+        assert!(out
+            .round_wire
+            .iter()
+            .filter(|(_, r, _)| *r == 2)
+            .all(|(_, _, b)| *b > 0));
+        // Per-stage step telemetry covers both stages.
+        assert_eq!(out.stage_times.len(), 2);
+        assert!(out.stage_times.iter().all(|t| t.samples > 0));
+        let r1: Vec<f32> = out
+            .round_losses
+            .iter()
+            .filter(|(_, r, _)| *r == 1)
+            .map(|(_, _, l)| *l)
+            .collect();
+        let r1_mean = r1.iter().sum::<f32>() / r1.len() as f32;
+        assert!(
+            out.final_loss < r1_mean,
+            "final {} vs round-1 {}",
+            out.final_loss,
+            r1_mean
+        );
+    }
+
+    #[test]
+    fn drain_decision_requires_unanimous_in_flight() {
+        // Unanimous, same round → drain it.
+        assert_eq!(drain_decision([Some(3), Some(3)].into_iter()), 3);
+        // Mixed rounds, an absent report, or nothing in flight → discard.
+        assert_eq!(drain_decision([Some(3), Some(2)].into_iter()), 0);
+        assert_eq!(drain_decision([Some(3), None].into_iter()), 0);
+        assert_eq!(drain_decision([Some(0), Some(3)].into_iter()), 0);
+        assert_eq!(drain_decision(std::iter::empty()), 0);
+        assert_eq!(drain_decision([Some(7)].into_iter()), 7);
     }
 
     #[test]

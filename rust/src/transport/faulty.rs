@@ -21,6 +21,15 @@ pub struct FaultPlan {
     pub max_delay_ms: u64,
     /// Kill this worker at the start of this round (0 = never).
     pub kill_round: usize,
+    /// Soft churn: report a broken ring at the start of this round (0 =
+    /// never) WITHOUT dying — the worker parks for the next membership
+    /// epoch while its peers time out mid-collective.  Consumed by the
+    /// epoch-aware round driver ([`crate::rounds::driver`]), not by this
+    /// wrapper: a soft break is a worker-loop event, not a wire fault.
+    /// Deterministically exercises the *discard* branch of overlap
+    /// recovery (the breaker holds an older in-flight round than its
+    /// peers, so the coordinator cannot drain).
+    pub break_round: usize,
     /// Fixed extra latency on every send (a persistent straggler), ms.
     pub straggler_ms: u64,
     /// Process mode: kill = `std::process::exit`; thread mode (tests):
@@ -36,13 +45,17 @@ impl FaultPlan {
             delay_prob: 0.0,
             max_delay_ms: 0,
             kill_round: 0,
+            break_round: 0,
             straggler_ms: 0,
             exit_on_kill: false,
         }
     }
 
     pub fn is_quiet(&self) -> bool {
-        self.delay_prob <= 0.0 && self.kill_round == 0 && self.straggler_ms == 0
+        self.delay_prob <= 0.0
+            && self.kill_round == 0
+            && self.break_round == 0
+            && self.straggler_ms == 0
     }
 }
 

@@ -21,16 +21,33 @@ pub enum Msg {
     Hello { rank: u32, ring_port: u16 },
     /// Coordinator → workers: proposed membership for `epoch`.
     /// `members` is the ring order, `(rank, ring_port)` on 127.0.0.1.
-    Prepare { epoch: u32, resume_round: u32, members: Vec<(u32, u16)> },
+    /// `drain_round` is the committed drain-or-discard decision for
+    /// one-step-delay overlap recovery: non-zero means every member of
+    /// this epoch reported the SAME in-flight round, so the re-formed
+    /// ring finishes that reduction (survivor-rescaled mean) before
+    /// training resumes; zero means any in-flight delta is discarded
+    /// back into error feedback (see [`crate::rounds::driver`]).
+    Prepare {
+        epoch: u32,
+        resume_round: u32,
+        members: Vec<(u32, u16)>,
+        drain_round: u32,
+    },
     /// Worker → coordinator: membership proposal accepted.
     PrepareAck { epoch: u32 },
     /// Coordinator → workers: every live member acked; form the ring.
     Commit { epoch: u32 },
     /// Worker → coordinator: my ring collective failed at this epoch;
-    /// `applied_rounds` outer updates are applied on my side.
-    RingBroken { epoch: u32, applied_rounds: u32 },
-    /// Worker → coordinator: round finished (liveness + loss telemetry).
-    Heartbeat { round: u32, loss: f32 },
+    /// `applied_rounds` outer updates are applied on my side, and
+    /// `in_flight_round` is the round of the δ-reduction I still hold in
+    /// flight (0 = none) — the coordinator's commit decides drain vs
+    /// discard from the survivors' reports.
+    RingBroken { epoch: u32, applied_rounds: u32, in_flight_round: u32 },
+    /// Worker → coordinator: round finished (liveness + telemetry:
+    /// loss, measured compute seconds per inner step, and the payload
+    /// bytes of the reduction completed during this round — 0 on the
+    /// first overlap round, so the wire ledger shows the one-step delay).
+    Heartbeat { round: u32, loss: f32, step_secs: f32, wire_bytes: u64 },
     /// Worker → coordinator: all rounds done.
     Done { rounds: u32, wire_bytes: u64, final_loss: f32, params: Vec<f32> },
     /// Coordinator → workers: exit cleanly.
@@ -55,11 +72,15 @@ pub enum Msg {
     /// (`(cluster, ring_port)` on 127.0.0.1) plus the stage-link port of
     /// its downstream neighbor stage in the same cluster (0 = none: last
     /// stage, or a finishing epoch that forms no dataflow).
+    /// `drain_round` is this *stage ring's* drain-or-discard decision
+    /// (rings recover independently — stage rings can break one round
+    /// apart under overlap, so the decision is per stage).
     StagePrepare {
         epoch: u32,
         resume_round: u32,
         ring_members: Vec<(u32, u16)>,
         link_down_port: u16,
+        drain_round: u32,
     },
 }
 
@@ -183,7 +204,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_u32(&mut b, *rank);
             put_u16(&mut b, *ring_port);
         }
-        Msg::Prepare { epoch, resume_round, members } => {
+        Msg::Prepare { epoch, resume_round, members, drain_round } => {
             put_u32(&mut b, *epoch);
             put_u32(&mut b, *resume_round);
             put_u16(&mut b, members.len() as u16);
@@ -191,16 +212,20 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
                 put_u32(&mut b, *rank);
                 put_u16(&mut b, *port);
             }
+            put_u32(&mut b, *drain_round);
         }
         Msg::PrepareAck { epoch } => put_u32(&mut b, *epoch),
         Msg::Commit { epoch } => put_u32(&mut b, *epoch),
-        Msg::RingBroken { epoch, applied_rounds } => {
+        Msg::RingBroken { epoch, applied_rounds, in_flight_round } => {
             put_u32(&mut b, *epoch);
             put_u32(&mut b, *applied_rounds);
+            put_u32(&mut b, *in_flight_round);
         }
-        Msg::Heartbeat { round, loss } => {
+        Msg::Heartbeat { round, loss, step_secs, wire_bytes } => {
             put_u32(&mut b, *round);
             put_f32(&mut b, *loss);
+            put_f32(&mut b, *step_secs);
+            put_u64(&mut b, *wire_bytes);
         }
         Msg::Done { rounds, wire_bytes, final_loss, params } => {
             put_u32(&mut b, *rounds);
@@ -223,7 +248,13 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_u16(&mut b, *ring_port);
             put_u16(&mut b, *link_port);
         }
-        Msg::StagePrepare { epoch, resume_round, ring_members, link_down_port } => {
+        Msg::StagePrepare {
+            epoch,
+            resume_round,
+            ring_members,
+            link_down_port,
+            drain_round,
+        } => {
             put_u32(&mut b, *epoch);
             put_u32(&mut b, *resume_round);
             put_u16(&mut b, ring_members.len() as u16);
@@ -232,6 +263,7 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
                 put_u16(&mut b, *port);
             }
             put_u16(&mut b, *link_down_port);
+            put_u32(&mut b, *drain_round);
         }
     }
     b
@@ -256,12 +288,21 @@ pub fn decode(bytes: &[u8]) -> Result<Msg> {
                 let port = c.u16()?;
                 members.push((rank, port));
             }
-            Msg::Prepare { epoch, resume_round, members }
+            Msg::Prepare { epoch, resume_round, members, drain_round: c.u32()? }
         }
         3 => Msg::PrepareAck { epoch: c.u32()? },
         4 => Msg::Commit { epoch: c.u32()? },
-        5 => Msg::RingBroken { epoch: c.u32()?, applied_rounds: c.u32()? },
-        6 => Msg::Heartbeat { round: c.u32()?, loss: c.f32()? },
+        5 => Msg::RingBroken {
+            epoch: c.u32()?,
+            applied_rounds: c.u32()?,
+            in_flight_round: c.u32()?,
+        },
+        6 => Msg::Heartbeat {
+            round: c.u32()?,
+            loss: c.f32()?,
+            step_secs: c.f32()?,
+            wire_bytes: c.u64()?,
+        },
         7 => Msg::Done {
             rounds: c.u32()?,
             wire_bytes: c.u64()?,
@@ -293,6 +334,7 @@ pub fn decode(bytes: &[u8]) -> Result<Msg> {
                 resume_round,
                 ring_members,
                 link_down_port: c.u16()?,
+                drain_round: c.u32()?,
             }
         }
         k => return Err(anyhow!("unknown frame kind {k}")),
@@ -342,11 +384,27 @@ mod tests {
             epoch: 7,
             resume_round: 4,
             members: vec![(0, 1111), (2, 2222), (5, 65535)],
+            drain_round: 0,
+        });
+        roundtrip(Msg::Prepare {
+            epoch: 8,
+            resume_round: 5,
+            members: vec![(0, 1111)],
+            drain_round: 4,
         });
         roundtrip(Msg::PrepareAck { epoch: 7 });
         roundtrip(Msg::Commit { epoch: 7 });
-        roundtrip(Msg::RingBroken { epoch: 7, applied_rounds: 3 });
-        roundtrip(Msg::Heartbeat { round: 9, loss: 0.125 });
+        roundtrip(Msg::RingBroken {
+            epoch: 7,
+            applied_rounds: 3,
+            in_flight_round: 4,
+        });
+        roundtrip(Msg::Heartbeat {
+            round: 9,
+            loss: 0.125,
+            step_secs: 0.25,
+            wire_bytes: 4096,
+        });
         roundtrip(Msg::Done {
             rounds: 10,
             wire_bytes: u64::MAX / 3,
@@ -368,12 +426,14 @@ mod tests {
             resume_round: 3,
             ring_members: vec![(0, 1111), (2, 2222)],
             link_down_port: 0,
+            drain_round: 2,
         });
         roundtrip(Msg::StagePrepare {
             epoch: 1,
             resume_round: 1,
             ring_members: vec![(7, 65535)],
             link_down_port: 40100,
+            drain_round: 0,
         });
     }
 

@@ -39,8 +39,9 @@
 //! prepare/commit over the per-worker control sockets:
 //!
 //! 1. worker → coordinator: `Hello{rank, ring_port}` once at startup.
-//! 2. coordinator → workers: `Prepare{epoch, resume_round, members}`.
-//!    Workers tear down any old ring and answer `PrepareAck{epoch}`.
+//! 2. coordinator → workers: `Prepare{epoch, resume_round, members,
+//!    drain_round}`.  Workers tear down any old ring and answer
+//!    `PrepareAck{epoch}`.
 //! 3. coordinator → workers: `Commit{epoch}` once every live member acked.
 //!    Workers then re-dial the ring (each dials its successor, accepts its
 //!    predecessor, with an epoch-checked `RingHello` handshake so stale
@@ -49,14 +50,21 @@
 //!    `allreduce_mean` over the global parameters and restart the outer
 //!    momentum — survivors of a churn event re-agree on θ before training
 //!    resumes, and the pseudo-gradient mean automatically rescales to the
-//!    new member count.
+//!    new member count — then act on the committed **drain-or-discard**
+//!    decision for any δ-reduction that was in flight under one-step-delay
+//!    overlap: `drain_round > 0` means every member of this epoch reported
+//!    the SAME in-flight round, so the fresh ring finishes that reduction
+//!    and applies its outer update once; `drain_round = 0` means each
+//!    survivor folds its own in-flight delta back into error feedback
+//!    (see [`crate::rounds::driver`]).
 //!
 //! Failure detection: ring sockets carry read/write timeouts, so a dead or
 //! stalled peer surfaces as an error mid-collective; the worker reports
-//! `RingBroken{epoch, applied_rounds}` on its control socket and waits for
-//! the next Prepare.  The coordinator additionally watches control sockets
-//! for EOF (process death).  `resume_round` is max(applied)+1 over the
-//! survivors, so no committed outer update is replayed.
+//! `RingBroken{epoch, applied_rounds, in_flight_round}` on its control
+//! socket and waits for the next Prepare.  The coordinator additionally
+//! watches control sockets for EOF (process death).  `resume_round` is
+//! max(applied)+1 over the survivors (max(drained)+1 after a drain), so no
+//! committed outer update is replayed.
 
 pub mod elastic;
 pub mod faulty;

@@ -48,6 +48,128 @@ fn local_opts() -> PipelineRunOpts {
 }
 
 #[test]
+fn tcp_stage_fleet_overlap_matches_local_threaded_run_bit_for_bit() {
+    // One-step-delay overlap, stage-parallel, across OS processes: the
+    // fleet must execute the identical instruction sequence as the local
+    // threaded executor (both run the shared RoundDriver + StageStepWork)
+    // — final params, eval, and wire ledger all agree exactly.  2
+    // clusters keep the fleet's epoch-1 consensus resync bit-exact
+    // ((x+x)·0.5 == x), matching the resync-free threaded path.
+    let (dp, stages, micros) = (2usize, 2usize, 2usize);
+    let wl = SyntheticPipeline::new(stages, micros, DIM, SEED);
+    // Gentle outer settings for overlap on the fast affine chain (see
+    // the executor's overlap test).
+    let mut o = local_opts();
+    o.overlap = true;
+    o.outer_lr = 0.3;
+    o.outer_momentum = 0.3;
+    let local =
+        run_pipeline(&wl, dp, local_stage_rings(dp, stages), &o).unwrap();
+
+    let mut cfg = fleet_cfg(dp, stages);
+    cfg.overlap = true;
+    cfg.outer_lr = 0.3;
+    cfg.outer_momentum = 0.3;
+    assert_eq!(cfg.microbatches, micros, "test assumes U = 2");
+    let fleet =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+
+    assert_eq!(fleet.epochs, 1, "no churn expected");
+    assert_eq!(local.final_params, fleet.final_params);
+    assert_eq!(local.final_eval, fleet.final_loss);
+    assert_eq!(local.total_wire_bytes, fleet.total_wire_bytes);
+    assert!(fleet.total_wire_bytes > 0);
+    // Both ledgers show the one-step delay: nothing ships in round 1.
+    assert!(local
+        .reports
+        .iter()
+        .filter(|r| r.round == 1)
+        .all(|r| r.wire_bytes == 0));
+    assert!(fleet
+        .round_wire
+        .iter()
+        .filter(|(_, r, _)| *r == 1)
+        .all(|(_, _, b)| *b == 0));
+    assert!(fleet
+        .round_wire
+        .iter()
+        .filter(|(_, r, _)| *r == 2)
+        .all(|(_, _, b)| *b > 0));
+}
+
+#[test]
+fn tcp_stage_fleet_overlap_kill_drains_per_stage_and_completes() {
+    // Kill one stage process mid-run under overlap.  Stage rings break
+    // one round apart (the dead process's own ring stalls a round before
+    // its downstream neighbors'), so the per-stage drain decisions fire
+    // independently — the survivors finish each stage ring's held
+    // reduction and the run completes every round with a finite
+    // assembled eval.
+    let mut cfg = fleet_cfg(3, 2);
+    cfg.rounds = 5;
+    cfg.overlap = true;
+    cfg.outer_lr = 0.3;
+    cfg.outer_momentum = 0.3;
+    cfg.faults.enabled = true;
+    cfg.faults.kill_rank = 1;
+    cfg.faults.kill_stage = 0;
+    cfg.faults.kill_round = 2;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 2], "cluster 1 must be gone entirely");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().any(|&(_, _, d)| d > 0),
+        "expected at least one per-stage drain commit, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    assert_eq!(out.final_params.len(), 2 * DIM);
+    let max_round = out
+        .round_losses
+        .iter()
+        .map(|(_, r, _)| *r)
+        .max()
+        .unwrap_or(0);
+    assert_eq!(max_round as usize, cfg.rounds);
+}
+
+#[test]
+fn tcp_stage_fleet_overlap_soft_break_discards_and_everyone_survives() {
+    // A soft cluster-wide break under overlap: every stage process of
+    // cluster 1 parks at round 3 holding round-2 deltas while the other
+    // clusters run ahead to round-3 deltas — mixed in-flight evidence on
+    // every stage ring, so the coordinator must DISCARD (fold into error
+    // feedback).  Nobody dies; the breaker rejoins and the whole fleet
+    // completes.
+    let mut cfg = fleet_cfg(3, 2);
+    cfg.rounds = 6;
+    cfg.overlap = true;
+    cfg.outer_lr = 0.3;
+    cfg.outer_momentum = 0.3;
+    cfg.faults.enabled = true;
+    cfg.faults.break_rank = 1;
+    cfg.faults.break_round = 3;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 1, 2], "nobody died");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().all(|&(_, _, d)| d == 0),
+        "mixed in-flight must discard, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    let max_round = out
+        .round_losses
+        .iter()
+        .map(|(_, r, _)| *r)
+        .max()
+        .unwrap_or(0);
+    assert_eq!(max_round as usize, cfg.rounds);
+}
+
+#[test]
 fn tcp_stage_fleet_matches_local_threaded_run_bit_for_bit() {
     let (dp, stages, micros) = (2usize, 2usize, 2usize);
     // Local: one thread per (worker, stage), mpsc links, mpsc rings.

@@ -6,7 +6,9 @@
 //! still reports a final eval.
 
 use dilocox::comm::ring::build_ring;
-use dilocox::transport::elastic::{run_elastic, ElasticConfig, SpawnMode};
+use dilocox::transport::elastic::{
+    run_elastic, run_local_reference, ElasticConfig, SpawnMode,
+};
 use dilocox::transport::tcp::form_ring;
 use dilocox::transport::RingTransport;
 use dilocox::util::rng::Pcg32;
@@ -159,4 +161,65 @@ fn elastic_survives_process_kill_at_round_2() {
 fn elastic_rejects_zero_workers() {
     let cfg = ElasticConfig::quadratic(0, 1, 8);
     assert!(run_elastic(&cfg, &SpawnMode::Thread).is_err());
+}
+
+#[test]
+fn tcp_overlap_fleet_matches_local_reference_bit_for_bit() {
+    // One-step-delay overlap across OS processes: the loopback-TCP fleet
+    // must be bit-for-bit identical to the in-process reference (same
+    // trainers, same epoch-aware driver, local mpsc ring) — final params,
+    // mean final loss, AND the wire ledger.
+    let mut cfg = ElasticConfig::quadratic(3, 4, 48);
+    cfg.overlap = true;
+    cfg.transport.ring_timeout_ms = 2000;
+    cfg.wall_timeout_ms = 90_000;
+    let (ref_params, ref_loss, ref_wire) = run_local_reference(&cfg).unwrap();
+    let fleet =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(fleet.epochs, 1, "no churn expected");
+    assert_eq!(fleet.survivors, vec![0, 1, 2]);
+    assert_eq!(ref_params, fleet.final_params);
+    assert_eq!(ref_loss, fleet.final_loss);
+    assert_eq!(ref_wire, fleet.total_wire_bytes);
+    assert!(fleet.total_wire_bytes > 0);
+    // The ledger proves the overlap really overlapped over TCP: round-1
+    // heartbeats completed no reduction.
+    assert!(fleet
+        .round_wire
+        .iter()
+        .filter(|(_, r, _)| *r == 1)
+        .all(|(_, _, b)| *b == 0));
+    assert!(fleet
+        .round_wire
+        .iter()
+        .filter(|(_, r, _)| *r == 2)
+        .all(|(_, _, b)| *b > 0));
+}
+
+#[test]
+fn elastic_overlap_process_kill_drains_in_flight_and_completes() {
+    // Kill a worker process mid-run under overlap: the survivors both
+    // stall joining the same in-flight round, the coordinator commits a
+    // DRAIN, the re-formed ring finishes that reduction with
+    // survivor-rescaled means, and every round completes with a final
+    // eval.
+    let mut cfg = ElasticConfig::quadratic(3, 6, 48);
+    cfg.overlap = true;
+    cfg.transport.ring_timeout_ms = 1500;
+    cfg.wall_timeout_ms = 90_000;
+    cfg.faults.enabled = true;
+    cfg.faults.kill_rank = 1;
+    cfg.faults.kill_round = 2;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 2], "rank 1 must be gone");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().any(|&(_, _, d)| d > 0),
+        "expected a drain commit, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    let max_round = out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap();
+    assert_eq!(max_round as usize, cfg.rounds);
 }
