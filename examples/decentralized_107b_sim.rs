@@ -191,10 +191,37 @@ fn calibrate_from(path: &str) {
             std::process::exit(1);
         }
     };
+    // A `coordinate --trace` export is a superset of the `--report` JSON:
+    // when the per-round accounting rides along, show where the measured
+    // wall time actually went before calibrating from the step times.
+    if let Some(rounds) = v.path("dilocox.rounds").and_then(|j| j.as_arr()) {
+        println!("Measured round accounting from {path}:");
+        let mut t = Table::new(&[
+            "round",
+            "compute s",
+            "wire s",
+            "barrier s",
+            "recovery s",
+            "hiding",
+        ]);
+        for r in rounds {
+            let f = |k: &str| r.path(k).and_then(|j| j.as_f64()).unwrap_or(0.0);
+            t.row(&[
+                format!("{}", f("round") as u64),
+                format!("{:.3}", f("compute_secs")),
+                format!("{:.3}", f("wire_secs")),
+                format!("{:.3}", f("barrier_secs")),
+                format!("{:.3}", f("recovery_secs")),
+                format!("{:.0}%", 100.0 * f("hiding_ratio")),
+            ]);
+        }
+        println!("{}", t.render());
+    }
     let Some(arr) = v.path("stage_times").and_then(|j| j.as_arr()) else {
         eprintln!(
             "{path} has no stage_times — produce it with \
-             `dilocox coordinate --report {path}` (threaded or TCP fleet)"
+             `dilocox coordinate --report {path}` (threaded or TCP fleet, \
+             or the richer `--trace` export)"
         );
         std::process::exit(1);
     };

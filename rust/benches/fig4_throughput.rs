@@ -2,15 +2,26 @@
 //! CocktailSGD and DiLoCoX at OPT-1.3B and Qwen1.5-107B scale over a
 //! 1 Gbps WAN — DES simulation with the A800 compute model (DESIGN.md).
 //!
-//!     cargo bench --bench fig4_throughput
+//!     cargo bench --bench fig4_throughput -- --json fig4.json
+//!
+//! `--json path` additionally writes the measured rows as machine-readable
+//! JSON (same row schema as perf_probe's `des.fig4` section).
 
 use dilocox::config::Algo;
 use dilocox::report::{self, paper, rel_dev};
 use dilocox::sim::{self, ScaleConfig};
+use dilocox::util::json::{obj, Json};
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
     let rounds = 16;
     let mut misses = 0;
+    let mut json_rows = Vec::new();
 
     for scale in [ScaleConfig::opt_1_3b(), ScaleConfig::qwen_107b()] {
         let rows = sim::figure4_row(&scale, rounds);
@@ -20,6 +31,14 @@ fn main() {
             &paper::FIG4_1_3B
         };
         println!("{}", report::figure4_table(&scale.name, paper_rows, &rows));
+        for r in &rows {
+            json_rows.push(obj(vec![
+                ("scale", Json::Str(scale.name.clone())),
+                ("algo", Json::Str(r.algo.name().to_string())),
+                ("tokens_per_sec", Json::Num(r.tokens_per_sec)),
+                ("oom", Json::Bool(r.oom)),
+            ]));
+        }
 
         let get = |a: Algo| rows.iter().find(|r| r.algo == a).unwrap();
         let ar = get(Algo::AllReduce);
@@ -78,6 +97,21 @@ fn main() {
             dx.tokens_per_sec / ar.tokens_per_sec
         }
     );
+    if let Some(path) = json_path {
+        let doc = obj(vec![
+            ("schema", Json::Str("dilocox-bench/v1".to_string())),
+            ("bench", Json::Str("fig4_throughput".to_string())),
+            ("rows", Json::Arr(json_rows)),
+            ("shape_check_misses", Json::Num(misses as f64)),
+        ]);
+        match std::fs::write(&path, doc.to_string_pretty() + "\n") {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
     if misses > 0 {
         eprintln!("{misses} shape check(s) missed");
         std::process::exit(1);

@@ -211,6 +211,21 @@ impl Default for FaultConfig {
     }
 }
 
+/// `[trace]` — structured tracing of the elastic TCP fleet (see
+/// [`crate::obs`]).  Off by default; `coordinate --trace out.json` turns
+/// it on for one run without touching the config file.
+#[derive(Clone, Debug, Default)]
+pub struct TraceConfig {
+    /// Record spans fleet-wide; workers ship batches to the coordinator
+    /// over their control sockets.  Bit-for-bit inert on the numerics
+    /// and the wire ledger.
+    pub enabled: bool,
+    /// When non-empty, each traced process also tees its drained batches
+    /// to `<dir>/<role>.jsonl` (e.g. `c1.jsonl`, `c0.s1.jsonl`,
+    /// `coord.jsonl`); "" = journal off.
+    pub dir: String,
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Artifact preset name (tiny | small | e2e100m) for real-numerics runs.
@@ -223,6 +238,7 @@ pub struct ExperimentConfig {
     pub network: NetworkConfig,
     pub transport: TransportConfig,
     pub faults: FaultConfig,
+    pub trace: TraceConfig,
 }
 
 impl ExperimentConfig {
@@ -291,6 +307,7 @@ impl ExperimentConfig {
             network: NetworkConfig::paper_1gbps(dp),
             transport: TransportConfig::default(),
             faults: FaultConfig::default(),
+            trace: TraceConfig::default(),
         }
     }
 
@@ -413,6 +430,10 @@ impl ExperimentConfig {
         if let Some(x) = v.path("faults.straggler_ms").and_then(|j| j.as_usize())
         {
             cfg.faults.straggler_ms = x as u64;
+        }
+        set_bool!("trace.enabled", cfg.trace.enabled);
+        if let Some(s) = v.path("trace.dir").and_then(|j| j.as_str()) {
+            cfg.trace.dir = s.to_string();
         }
         cfg.validate()?;
         Ok(cfg)
@@ -641,6 +662,27 @@ straggler_ms = 5
         let d = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
         assert_eq!(d.transport.backend, TransportBackend::Local);
         assert!(!d.faults.enabled);
+    }
+
+    #[test]
+    fn trace_section_parses() {
+        let src = r#"
+algo = "dilocox"
+[model]
+preset = "tiny"
+[trace]
+enabled = true
+dir = "traces/run1"
+"#;
+        let v = toml::parse(src).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert!(cfg.trace.enabled);
+        assert_eq!(cfg.trace.dir, "traces/run1");
+
+        // Off by default when the section is absent.
+        let d = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        assert!(!d.trace.enabled);
+        assert!(d.trace.dir.is_empty());
     }
 
     #[test]

@@ -37,6 +37,15 @@
 //!   injection wrapping either wire).  See [`transport`] for the frame
 //!   format and the membership epoch protocol, and README.md / CONFIG.md
 //!   for the operator-facing documentation.
+//! * L3 observability: always-compiled structured tracing ([`obs`]) —
+//!   RAII spans with self-carried (cluster, stage, epoch, round)
+//!   attribution recorded on every hot-path layer, shipped to the
+//!   elastic coordinator as `TraceEvents` control frames, and merged
+//!   into a per-round accounting table plus a Chrome-trace export
+//!   ([`obs::report`], `coordinate --trace`).  Disabled it is one
+//!   relaxed atomic load per span; enabled it never touches the wire
+//!   ledger or the data plane, so traced runs stay bit-for-bit
+//!   identical to untraced ones.
 //! * L2/L1 (python/, build-time only): jax stage programs + pallas kernels,
 //!   AOT-lowered to `artifacts/<preset>/*.hlo.txt` consumed by [`runtime`]
 //!   — monolithic `step_single`/`eval_single` plus the per-stage
@@ -51,6 +60,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod netsim;
+pub mod obs;
 pub mod optim;
 pub mod pipeline;
 pub mod report;

@@ -11,6 +11,8 @@
 //!   simulate     DES throughput at paper scale (Fig 4 / Table 1)
 //!   analyze      §2.4.1 communication-overhead analysis
 //!   inspect      print an artifact bundle's manifest summary
+//!   trace-check  validate a `coordinate --trace` export (schema,
+//!                span nesting, round monotonicity, recovery spans)
 //!
 //! `dilocox <cmd> --help` lists options; configs can also come from a TOML
 //! file via `--config path.toml` (see configs/), including the
@@ -18,6 +20,11 @@
 
 use dilocox::config::{Algo, ExperimentConfig};
 use dilocox::metrics::Table;
+use dilocox::obs;
+use dilocox::obs::report::{
+    accounting_json, accounting_table, chrome_trace_events, round_accounting,
+    validate_chrome_trace,
+};
 use dilocox::pipeline::exec::{json_num_or_null, stage_times_json};
 use dilocox::report;
 use dilocox::sim;
@@ -41,6 +48,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&argv[1..]),
         Some("analyze") => cmd_analyze(&argv[1..]),
         Some("inspect") => cmd_inspect(&argv[1..]),
+        Some("trace-check") => cmd_trace_check(&argv[1..]),
         Some("--help") | Some("-h") | None => {
             eprintln!("{}", toplevel_usage());
             0
@@ -63,7 +71,8 @@ fn toplevel_usage() -> String {
        worker       one elastic TCP ring worker (spawned by coordinate)\n\
        simulate     paper-scale DES throughput (Fig 4 / Table 1)\n\
        analyze      §2.4.1 communication-overhead analysis\n\
-       inspect      summarize an artifact bundle\n"
+       inspect      summarize an artifact bundle\n\
+       trace-check  validate a coordinate --trace export\n"
         .to_string()
 }
 
@@ -177,6 +186,7 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
     .opt("kill-rank", "1", "inject: rank to kill at --kill-round (tcp)")
     .opt("kill-stage", "0", "inject: stage process to kill (tcp, --pp > 1)")
     .opt("report", "", "write a run report JSON (incl. stage wall times) here")
+    .opt("trace", "", "enable tracing and write the merged Chrome-trace JSON here (tcp)")
     .flag("synthetic", "tcp: force the synthetic workload (affine chain with --pp > 1)");
     let args = match spec.parse(argv) {
         Ok(a) => a,
@@ -236,6 +246,15 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
             "warning: [faults] / --kill-round apply only to --transport tcp; \
              the local threaded run ignores them"
         );
+    }
+    if !args.get("trace").is_empty() {
+        cfg.trace.enabled = true;
+        if cfg.transport.backend == TransportBackend::Local {
+            eprintln!(
+                "warning: --trace applies only to --transport tcp; the \
+                 local threaded run ignores it"
+            );
+        }
     }
     match cfg.transport.backend {
         TransportBackend::Tcp => cmd_coordinate_tcp(&cfg, &args),
@@ -473,6 +492,31 @@ fn cmd_coordinate_tcp(cfg: &ExperimentConfig, args: &dilocox::util::cli::Args) -
                 }
                 println!("wrote {}", args.get("report"));
             }
+            if !args.get("trace").is_empty() {
+                let accounts = round_accounting(&out.trace_events);
+                println!("{}", accounting_table(&accounts));
+                // One file, two consumers: Perfetto/chrome://tracing load
+                // the top-level `traceEvents` array and ignore the extra
+                // keys; `--calibrate-from` reads `stage_times`; the
+                // per-round accounting lives under `dilocox`.
+                let doc = obj(vec![
+                    ("traceEvents", chrome_trace_events(&out.trace_events)),
+                    ("stage_times", stage_times_json(&out.stage_times)),
+                    (
+                        "dilocox",
+                        obj(vec![("rounds", accounting_json(&accounts))]),
+                    ),
+                ]);
+                if let Err(e) = write_report(args.get("trace"), &doc) {
+                    eprintln!("{e}");
+                    return 1;
+                }
+                println!(
+                    "wrote {} ({} trace events)",
+                    args.get("trace"),
+                    out.trace_events.len()
+                );
+            }
             0
         }
         Err(e) => {
@@ -507,6 +551,8 @@ fn cmd_worker(argv: &[String]) -> i32 {
     .opt("ring-timeout-ms", "5000", "ring socket timeout")
     .opt("connect-timeout-ms", "5000", "ring formation deadline")
     .flag("overlap", "one-step-delay overlap of comm and local training (§2.3)")
+    .flag("trace", "record trace spans and ship them to the coordinator")
+    .opt("trace-dir", "", "also tee trace batches to <dir>/<role>.jsonl")
     .opt("fault-seed", "7", "fault injection seed")
     .opt("fault-delay-prob", "0", "probability a sent message is delayed")
     .opt("fault-delay-ms", "0", "max injected delay per message, ms")
@@ -534,6 +580,23 @@ fn cmd_worker(argv: &[String]) -> i32 {
             return 2;
         }
     };
+    // Role tag (`c3` / `c3.s1`) prefixes every log line this process
+    // emits — the interleaved stderr of a fleet stays attributable.
+    let role = if stages > 1 {
+        format!("c{}.s{}", opts.rank, args.get_usize("stage").unwrap_or(0))
+    } else {
+        format!("c{}", opts.rank)
+    };
+    dilocox::util::log::set_role(&role);
+    if args.flag("trace") {
+        obs::set_enabled(true);
+        let dir = args.get("trace-dir");
+        if !dir.is_empty() {
+            obs::set_journal(Some(
+                std::path::Path::new(dir).join(format!("{role}.jsonl")),
+            ));
+        }
+    }
     if stages > 1 {
         let sopts = match stage_worker_opts_from_args(&args, opts, stages) {
             Ok(o) => o,
@@ -697,6 +760,51 @@ fn cmd_analyze(argv: &[String]) -> i32 {
     ]);
     println!("{}", t.render());
     0
+}
+
+/// Validate a `coordinate --trace` export: required fields per event,
+/// spans well-nested within each thread track, `round` markers monotone,
+/// and (with --expect-recovery) at least one recovery span — what CI
+/// runs against the churn fleet's trace.
+fn cmd_trace_check(argv: &[String]) -> i32 {
+    let spec = CliSpec::new(
+        "dilocox trace-check",
+        "validate a coordinate --trace export",
+    )
+    .req("input", "trace JSON written by coordinate --trace")
+    .flag("expect-recovery", "require recovery.* spans (churn runs)");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let path = args.get("input");
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("reading {path}: {e}");
+            return 1;
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("parsing {path}: {e}");
+            return 1;
+        }
+    };
+    match validate_chrome_trace(&doc, args.flag("expect-recovery")) {
+        Ok(n) => {
+            println!("{path}: ok — {n} events, well-nested, rounds monotone");
+            0
+        }
+        Err(e) => {
+            eprintln!("{path}: INVALID — {e:#}");
+            1
+        }
+    }
 }
 
 fn cmd_inspect(argv: &[String]) -> i32 {

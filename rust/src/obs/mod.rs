@@ -1,0 +1,473 @@
+//! Structured tracing for the fleet's hot path (the observability layer).
+//!
+//! Cheap, always-compiled span/counter primitives: [`span`] records a
+//! monotonic start/stop pair into a per-thread buffer, flushed to a
+//! process-wide sink, optionally teed to a per-process JSONL journal,
+//! and drained in batches — elastic workers ship drained batches to the
+//! coordinator over their control sockets
+//! ([`crate::transport::frame::Msg::TraceEvents`]), which merges them
+//! into one fleet-wide timeline keyed by (cluster, stage, round, epoch).
+//! [`report`] turns a merged timeline into the per-round accounting
+//! table, the Chrome-trace/Perfetto export, and the schema validation
+//! behind `dilocox trace-check`.
+//!
+//! Invariants the instrumentation relies on:
+//!
+//! * **Zero overhead when disabled** — every primitive starts with one
+//!   relaxed atomic load and returns immediately when tracing is off;
+//!   nothing allocates, locks, or reads the clock.  A span created while
+//!   disabled stays dead even if tracing is enabled before it drops.
+//! * **Bit-for-bit determinism** — tracing only *observes* wall time; it
+//!   never touches RNG state, the numerics, or the ring's payload byte
+//!   meter (trace batches ride the control sockets, not the data plane),
+//!   so a traced run is bit-identical to an untraced one — the
+//!   `integration_trace` suite asserts params, losses, and the wire
+//!   ledger.
+//! * **Self-carried attribution** — every event snapshots the recording
+//!   thread's (cluster, stage, epoch, round) context at record time, so
+//!   attribution survives no matter which thread later drains or ships
+//!   the batch (thread-mode fleets share one process-wide sink).
+//!
+//! Timestamps are unix-anchored monotonic microseconds: the first clock
+//! read anchors `Instant::now()` to wall time once per process, so the
+//! loopback processes of one fleet land on a roughly aligned shared
+//! timeline while spans within any one thread stay strictly monotonic
+//! (which is what makes the well-nestedness validation sound).
+
+pub mod report;
+
+use crate::util::json::{obj, Json};
+use std::cell::{Cell, RefCell};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Cluster id used for coordinator-side spans (no worker owns it).
+pub const COORD: u32 = u32::MAX;
+
+/// Per-thread buffer capacity before an automatic flush to the sink.
+const FLUSH_AT: usize = 512;
+
+/// One recorded span or instant (`dur_us == 0`).  Events self-carry
+/// their full attribution so any thread may ship them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub cluster: u32,
+    pub stage: u32,
+    pub epoch: u32,
+    pub round: u32,
+    /// Recording thread (process-locally unique, dense from 1).
+    pub tid: u32,
+    /// Unix-anchored monotonic microseconds at span start.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Payload bytes attributed to the span (0 when not a wire span).
+    pub bytes: u64,
+    /// Subsystem, e.g. "driver", "wire", "pipeline".
+    pub target: String,
+    /// Phase within the subsystem, e.g. "compute", "allreduce".
+    pub phase: String,
+}
+
+impl TraceEvent {
+    /// JSON object form (the JSONL journal line).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("cluster", Json::Num(self.cluster as f64)),
+            ("stage", Json::Num(self.stage as f64)),
+            ("epoch", Json::Num(self.epoch as f64)),
+            ("round", Json::Num(self.round as f64)),
+            ("tid", Json::Num(self.tid as f64)),
+            ("start_us", Json::Num(self.start_us as f64)),
+            ("dur_us", Json::Num(self.dur_us as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+            ("target", Json::Str(self.target.clone())),
+            ("phase", Json::Str(self.phase.clone())),
+        ])
+    }
+}
+
+/// The thread-local attribution context events snapshot at record time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Ctx {
+    pub cluster: u32,
+    pub stage: u32,
+    pub epoch: u32,
+    pub round: u32,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static JOURNAL: Mutex<Option<PathBuf>> = Mutex::new(None);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+/// Per-thread event buffer; the `Drop` impl flushes whatever a dying
+/// thread still holds (overlap comm threads end mid-epoch).
+struct LocalBuf {
+    events: RefCell<Vec<TraceEvent>>,
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        let ev = std::mem::take(self.events.get_mut());
+        if !ev.is_empty() {
+            if let Ok(mut g) = SINK.lock() {
+                g.extend(ev);
+            }
+        }
+    }
+}
+
+thread_local! {
+    static CTX: Cell<Ctx> = const {
+        Cell::new(Ctx { cluster: 0, stage: 0, epoch: 0, round: 0 })
+    };
+    static TID: Cell<u32> = const { Cell::new(0) };
+    static BUF: LocalBuf = const {
+        LocalBuf { events: RefCell::new(Vec::new()) }
+    };
+}
+
+fn anchor() -> &'static (Instant, u64) {
+    static ANCHOR: OnceLock<(Instant, u64)> = OnceLock::new();
+    ANCHOR.get_or_init(|| {
+        let unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default();
+        (Instant::now(), unix.as_micros() as u64)
+    })
+}
+
+/// Unix-anchored monotonic microseconds (see the module docs).
+pub fn now_us() -> u64 {
+    let a = anchor();
+    a.1 + a.0.elapsed().as_micros() as u64
+}
+
+/// Turn tracing on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The one cost every primitive pays when tracing is off.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Set this thread's (cluster, stage) attribution; call once per worker
+/// thread/process at startup.  Epoch and round are preserved.
+pub fn set_scope(cluster: u32, stage: u32) {
+    CTX.with(|c| {
+        let mut ctx = c.get();
+        ctx.cluster = cluster;
+        ctx.stage = stage;
+        c.set(ctx);
+    });
+}
+
+/// Update this thread's membership-epoch attribution.
+pub fn set_epoch(epoch: u32) {
+    CTX.with(|c| {
+        let mut ctx = c.get();
+        ctx.epoch = epoch;
+        c.set(ctx);
+    });
+}
+
+/// Update this thread's outer-round attribution.
+pub fn set_round(round: u32) {
+    CTX.with(|c| {
+        let mut ctx = c.get();
+        ctx.round = round;
+        c.set(ctx);
+    });
+}
+
+/// This thread's full context — capture before spawning a helper thread
+/// (e.g. the overlap comm thread) and [`set_ctx`] it inside.
+pub fn scope() -> Ctx {
+    CTX.with(|c| c.get())
+}
+
+/// Replace this thread's full context (comm-thread inheritance).
+pub fn set_ctx(ctx: Ctx) {
+    CTX.with(|c| c.set(ctx));
+}
+
+/// Tee every drained batch to a JSONL journal at `path` (append mode);
+/// `None` turns the journal off.  Journal IO failures are swallowed —
+/// observability must never take the training run down.
+pub fn set_journal(path: Option<PathBuf>) {
+    if let Ok(mut g) = JOURNAL.lock() {
+        *g = path;
+    }
+}
+
+fn tid() -> u32 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+fn push(ev: TraceEvent) {
+    let full = BUF.with(|b| {
+        let mut v = b.events.borrow_mut();
+        v.push(ev);
+        v.len() >= FLUSH_AT
+    });
+    if full {
+        flush_local();
+    }
+}
+
+fn flush_local() {
+    let ev = BUF.with(|b| std::mem::take(&mut *b.events.borrow_mut()));
+    if !ev.is_empty() {
+        if let Ok(mut g) = SINK.lock() {
+            g.extend(ev);
+        }
+    }
+}
+
+fn tee_journal(events: &[TraceEvent]) {
+    let path = match JOURNAL.lock() {
+        Ok(g) => g.clone(),
+        Err(_) => None,
+    };
+    let Some(path) = path else { return };
+    use std::io::Write as _;
+    if let Ok(mut f) =
+        std::fs::OpenOptions::new().create(true).append(true).open(&path)
+    {
+        let mut out = String::new();
+        for e in events {
+            out.push_str(&e.to_json().to_string_compact());
+            out.push('\n');
+        }
+        let _ = f.write_all(out.as_bytes());
+    }
+}
+
+/// Take everything recorded so far (this thread's buffer + the shared
+/// sink), tee it to the journal, and return it for shipping.  Draining
+/// removes: an event is shipped exactly once.
+pub fn drain() -> Vec<TraceEvent> {
+    flush_local();
+    let ev = match SINK.lock() {
+        Ok(mut g) => std::mem::take(&mut *g),
+        Err(_) => Vec::new(),
+    };
+    if !ev.is_empty() {
+        tee_journal(&ev);
+    }
+    ev
+}
+
+/// An in-progress span; records one [`TraceEvent`] when dropped (RAII,
+/// so spans within a thread are always strictly nested).
+#[must_use = "a span records on drop — bind it for the region's lifetime"]
+pub struct Span {
+    target: &'static str,
+    phase: &'static str,
+    ctx: Ctx,
+    start_us: u64,
+    bytes: u64,
+    live: bool,
+}
+
+impl Span {
+    /// Attribute wire payload bytes to the span (builder form).
+    pub fn bytes(mut self, bytes: u64) -> Span {
+        self.bytes = bytes;
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        // End from the same truncated clock as the start: truncation is
+        // then monotone, so a child's integer end never exceeds its
+        // enclosing span's (the well-nestedness check is exact).
+        push(TraceEvent {
+            cluster: self.ctx.cluster,
+            stage: self.ctx.stage,
+            epoch: self.ctx.epoch,
+            round: self.ctx.round,
+            tid: tid(),
+            start_us: self.start_us,
+            dur_us: now_us().saturating_sub(self.start_us),
+            bytes: self.bytes,
+            target: self.target.to_string(),
+            phase: self.phase.to_string(),
+        });
+    }
+}
+
+fn dead(target: &'static str, phase: &'static str) -> Span {
+    Span {
+        target,
+        phase,
+        ctx: Ctx::default(),
+        start_us: 0,
+        bytes: 0,
+        live: false,
+    }
+}
+
+/// Open a span under this thread's current context.
+pub fn span(target: &'static str, phase: &'static str) -> Span {
+    if !enabled() {
+        return dead(target, phase);
+    }
+    span_live(target, phase, scope())
+}
+
+/// Open a span attributed to an explicit `round` (recovery spans name
+/// the round being drained, not the thread's current one).
+pub fn span_at(target: &'static str, phase: &'static str, round: u32) -> Span {
+    if !enabled() {
+        return dead(target, phase);
+    }
+    let mut ctx = scope();
+    ctx.round = round;
+    span_live(target, phase, ctx)
+}
+
+fn span_live(target: &'static str, phase: &'static str, ctx: Ctx) -> Span {
+    Span {
+        target,
+        phase,
+        ctx,
+        start_us: now_us(),
+        bytes: 0,
+        live: true,
+    }
+}
+
+/// Record an instant event (zero duration) under the current context.
+pub fn event(target: &'static str, phase: &'static str, bytes: u64) {
+    if !enabled() {
+        return;
+    }
+    let ctx = scope();
+    push(TraceEvent {
+        cluster: ctx.cluster,
+        stage: ctx.stage,
+        epoch: ctx.epoch,
+        round: ctx.round,
+        tid: tid(),
+        start_us: now_us(),
+        dur_us: 0,
+        bytes,
+        target: target.to_string(),
+        phase: phase.to_string(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ENABLED and SINK are process-global; serialize the tests that
+    // toggle them so parallel `cargo test` stays deterministic.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn span_records_context_and_drains_once() {
+        let _g = LOCK.lock().unwrap();
+        drain();
+        set_enabled(true);
+        set_scope(9, 2);
+        set_epoch(3);
+        set_round(7);
+        {
+            let _s = span("obs.test", "alpha").bytes(40);
+        }
+        event("obs.test", "beta", 8);
+        set_enabled(false);
+        let ev = drain();
+        let alpha = ev
+            .iter()
+            .find(|e| e.target == "obs.test" && e.phase == "alpha")
+            .expect("span recorded");
+        assert_eq!(
+            (alpha.cluster, alpha.stage, alpha.epoch, alpha.round),
+            (9, 2, 3, 7)
+        );
+        assert_eq!(alpha.bytes, 40);
+        assert!(alpha.start_us > 0);
+        let beta = ev
+            .iter()
+            .find(|e| e.target == "obs.test" && e.phase == "beta")
+            .expect("event recorded");
+        assert_eq!(beta.dur_us, 0);
+        assert_eq!(beta.bytes, 8);
+        // Drained once: a second drain has nothing of ours left.
+        assert!(!drain().iter().any(|e| e.target == "obs.test"));
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = LOCK.lock().unwrap();
+        drain();
+        set_enabled(false);
+        {
+            let _s = span("obs.test", "off");
+        }
+        event("obs.test", "off", 1);
+        assert!(!drain().iter().any(|e| e.target == "obs.test"));
+    }
+
+    #[test]
+    fn explicit_round_overrides_thread_round() {
+        let _g = LOCK.lock().unwrap();
+        drain();
+        set_enabled(true);
+        set_scope(1, 0);
+        set_round(5);
+        {
+            let _s = span_at("obs.test", "drained", 3);
+        }
+        set_enabled(false);
+        let ev = drain();
+        let e = ev
+            .iter()
+            .find(|e| e.phase == "drained")
+            .expect("span recorded");
+        assert_eq!(e.round, 3);
+    }
+
+    #[test]
+    fn helper_thread_inherits_captured_ctx() {
+        let _g = LOCK.lock().unwrap();
+        drain();
+        set_enabled(true);
+        set_scope(4, 1);
+        set_epoch(2);
+        set_round(6);
+        let ctx = scope();
+        std::thread::spawn(move || {
+            set_ctx(ctx);
+            let _s = span("obs.test", "inherited");
+        })
+        .join()
+        .unwrap();
+        set_enabled(false);
+        let ev = drain();
+        let e = ev
+            .iter()
+            .find(|e| e.phase == "inherited")
+            .expect("comm-thread span flushed on thread exit");
+        assert_eq!((e.cluster, e.stage, e.epoch, e.round), (4, 1, 2, 6));
+    }
+}

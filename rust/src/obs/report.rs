@@ -1,0 +1,416 @@
+//! Merged-timeline reports: the Chrome-trace/Perfetto export, the
+//! per-round phase accounting (compute / compress / wire / barrier /
+//! recovery seconds plus the §2.3 overlap hiding ratio), and the schema
+//! validator behind `dilocox trace-check`.
+//!
+//! Phase classification is by event `phase`, matching what the
+//! instrumentation records:
+//!
+//! * **compute** — the driver's `"compute"` span (H inner steps; the
+//!   finer `fwd`/`bwd` pipeline spans nest *inside* it and are detail,
+//!   not accounting, to avoid double counting);
+//! * **compress** — `"compress.*"` (projection/quantization passes);
+//! * **wire** — `"allreduce"` (one span per collective, carrying the
+//!   compressed payload bytes; the per-hop `"hop"` spans nest inside);
+//! * **barrier** — epoch machinery: `"epoch.wait"`, `"ring.form"`,
+//!   `"consensus"`, `"epoch.prepare"`, `"epoch.commit"`;
+//! * **recovery** — `"recovery.drain"` / `"recovery.discard"`.
+//!
+//! The hiding ratio of round t is the fraction of its wire time that
+//! overlapped *any* compute interval of the same cluster — 0 in sync
+//! mode, approaching 1 when one-step-delay overlap fully hides the
+//! reduction of round t under the compute of round t+1.
+
+use super::TraceEvent;
+use crate::metrics::Table;
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+const BARRIER_PHASES: [&str; 5] =
+    ["epoch.wait", "ring.form", "consensus", "epoch.prepare", "epoch.commit"];
+
+/// Per-round phase accounting over a merged fleet timeline.
+#[derive(Clone, Debug, Default)]
+pub struct RoundAccount {
+    pub round: u32,
+    pub compute_secs: f64,
+    pub compress_secs: f64,
+    pub wire_secs: f64,
+    pub barrier_secs: f64,
+    pub recovery_secs: f64,
+    /// Compressed payload bytes of the round's collectives.
+    pub wire_bytes: u64,
+    /// Fraction of wire time overlapped by same-cluster compute.
+    pub hiding_ratio: f64,
+}
+
+fn secs(e: &TraceEvent) -> f64 {
+    e.dur_us as f64 / 1e6
+}
+
+/// Merge possibly-overlapping `(start, end)` intervals in place.
+fn merge_intervals(iv: &mut Vec<(u64, u64)>) {
+    iv.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(iv.len());
+    for &(s, e) in iv.iter() {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    *iv = out;
+}
+
+/// Microseconds of `(s, e)` covered by the merged interval set.
+fn covered_us(iv: &[(u64, u64)], s: u64, e: u64) -> u64 {
+    iv.iter()
+        .map(|&(a, b)| b.min(e).saturating_sub(a.max(s)))
+        .sum()
+}
+
+/// Aggregate a merged timeline into per-round phase accounting, sorted
+/// by round.  Rounds are the events' self-carried attribution, so the
+/// sums cover every worker of the fleet.
+pub fn round_accounting(events: &[TraceEvent]) -> Vec<RoundAccount> {
+    // Merged compute intervals per cluster: the §2.3 question is whether
+    // wire time hid under ANY compute of the same cluster (under overlap
+    // that compute belongs to the next round).
+    let mut compute: BTreeMap<u32, Vec<(u64, u64)>> = BTreeMap::new();
+    for e in events {
+        if e.phase == "compute" {
+            compute
+                .entry(e.cluster)
+                .or_default()
+                .push((e.start_us, e.start_us + e.dur_us));
+        }
+    }
+    for iv in compute.values_mut() {
+        merge_intervals(iv);
+    }
+
+    let mut acct: BTreeMap<u32, RoundAccount> = BTreeMap::new();
+    let mut wire_us: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut hidden_us: BTreeMap<u32, u64> = BTreeMap::new();
+    for e in events {
+        let a = acct.entry(e.round).or_insert_with(|| RoundAccount {
+            round: e.round,
+            ..RoundAccount::default()
+        });
+        if e.phase == "compute" {
+            a.compute_secs += secs(e);
+        } else if e.phase.starts_with("compress.") {
+            a.compress_secs += secs(e);
+        } else if e.phase == "allreduce" {
+            a.wire_secs += secs(e);
+            a.wire_bytes += e.bytes;
+            *wire_us.entry(e.round).or_default() += e.dur_us;
+            if let Some(iv) = compute.get(&e.cluster) {
+                *hidden_us.entry(e.round).or_default() +=
+                    covered_us(iv, e.start_us, e.start_us + e.dur_us);
+            }
+        } else if BARRIER_PHASES.contains(&e.phase.as_str()) {
+            a.barrier_secs += secs(e);
+        } else if e.phase.starts_with("recovery.") {
+            a.recovery_secs += secs(e);
+        }
+    }
+    for (round, a) in acct.iter_mut() {
+        let w = wire_us.get(round).copied().unwrap_or(0);
+        if w > 0 {
+            a.hiding_ratio =
+                hidden_us.get(round).copied().unwrap_or(0) as f64 / w as f64;
+        }
+    }
+    acct.into_values().collect()
+}
+
+/// Render the accounting as a table (what `coordinate --trace` prints).
+pub fn accounting_table(accounts: &[RoundAccount]) -> String {
+    let mut t = Table::new(&[
+        "round", "compute s", "compress s", "wire s", "barrier s",
+        "recovery s", "wire bytes", "hiding",
+    ]);
+    for a in accounts {
+        t.row(&[
+            a.round.to_string(),
+            format!("{:.3}", a.compute_secs),
+            format!("{:.3}", a.compress_secs),
+            format!("{:.3}", a.wire_secs),
+            format!("{:.3}", a.barrier_secs),
+            format!("{:.3}", a.recovery_secs),
+            a.wire_bytes.to_string(),
+            format!("{:.2}", a.hiding_ratio),
+        ]);
+    }
+    t.render()
+}
+
+/// The accounting as JSON (the report's `dilocox.rounds` array).
+pub fn accounting_json(accounts: &[RoundAccount]) -> Json {
+    Json::Arr(
+        accounts
+            .iter()
+            .map(|a| {
+                obj(vec![
+                    ("round", Json::Num(a.round as f64)),
+                    ("compute_secs", Json::Num(a.compute_secs)),
+                    ("compress_secs", Json::Num(a.compress_secs)),
+                    ("wire_secs", Json::Num(a.wire_secs)),
+                    ("barrier_secs", Json::Num(a.barrier_secs)),
+                    ("recovery_secs", Json::Num(a.recovery_secs)),
+                    ("wire_bytes", Json::Num(a.wire_bytes as f64)),
+                    ("hiding_ratio", Json::Num(a.hiding_ratio)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// The merged timeline as a Chrome-trace `traceEvents` array (complete
+/// "X" events): pid = cluster, tid = stage·10⁶ + thread, so Perfetto
+/// groups tracks by cluster and keeps stages apart within one.
+pub fn chrome_trace_events(events: &[TraceEvent]) -> Json {
+    Json::Arr(
+        events
+            .iter()
+            .map(|e| {
+                obj(vec![
+                    ("name", Json::Str(e.phase.clone())),
+                    ("cat", Json::Str(e.target.clone())),
+                    ("ph", Json::Str("X".to_string())),
+                    ("ts", Json::Num(e.start_us as f64)),
+                    ("dur", Json::Num(e.dur_us as f64)),
+                    ("pid", Json::Num(e.cluster as f64)),
+                    (
+                        "tid",
+                        Json::Num(
+                            (e.stage as u64 * 1_000_000 + e.tid as u64) as f64,
+                        ),
+                    ),
+                    (
+                        "args",
+                        obj(vec![
+                            ("round", Json::Num(e.round as f64)),
+                            ("epoch", Json::Num(e.epoch as f64)),
+                            ("bytes", Json::Num(e.bytes as f64)),
+                        ]),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+struct CheckEvent {
+    ts: u64,
+    dur: u64,
+    name: String,
+    round: u64,
+}
+
+/// Validate a `--trace` report against the schema `dilocox trace-check`
+/// enforces in CI: a non-empty Chrome-trace `traceEvents` array of
+/// complete events with all required keys, spans well-nested within
+/// every (pid, tid) track (RAII guarantees this for an honest trace),
+/// `"round"` spans nondecreasing per track, and — with
+/// `expect_recovery` — at least one `recovery.*` event.  Returns the
+/// validated event count.
+pub fn validate_chrome_trace(doc: &Json, expect_recovery: bool) -> Result<usize> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("report has no traceEvents array"))?;
+    if events.is_empty() {
+        return Err(anyhow!("traceEvents is empty"));
+    }
+    let mut tracks: BTreeMap<(u64, u64), Vec<CheckEvent>> = BTreeMap::new();
+    let mut saw_recovery = false;
+    for (i, e) in events.iter().enumerate() {
+        let num = |key: &str| {
+            e.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("event {i}: missing numeric '{key}'"))
+        };
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event {i}: missing 'name'"))?
+            .to_string();
+        e.get("cat")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event {i}: missing 'cat'"))?;
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("event {i}: missing 'ph'"))?;
+        if ph != "X" {
+            return Err(anyhow!("event {i}: ph '{ph}' != complete event 'X'"));
+        }
+        let round = e
+            .path("args.round")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("event {i}: missing 'args.round'"))?;
+        if name.starts_with("recovery.") {
+            saw_recovery = true;
+        }
+        tracks
+            .entry((num("pid")? as u64, num("tid")? as u64))
+            .or_default()
+            .push(CheckEvent {
+                ts: num("ts")? as u64,
+                dur: num("dur")? as u64,
+                name,
+                round: round as u64,
+            });
+    }
+    for ((pid, tid), track) in tracks.iter_mut() {
+        // Start ascending, then duration descending: at equal start
+        // timestamps (microsecond resolution) the enclosing span sorts
+        // first, which is exactly the nesting order.
+        track.sort_by(|a, b| a.ts.cmp(&b.ts).then(b.dur.cmp(&a.dur)));
+        let mut stack: Vec<u64> = Vec::new();
+        let mut last_round: u64 = 0;
+        for e in track.iter() {
+            let end = e.ts + e.dur;
+            while stack.last().is_some_and(|&top| top <= e.ts) {
+                stack.pop();
+            }
+            if let Some(&top) = stack.last() {
+                if end > top {
+                    return Err(anyhow!(
+                        "track ({pid}, {tid}): span '{}' [{}..{end}] \
+                         partially overlaps an enclosing span ending at \
+                         {top} — not well-nested",
+                        e.name,
+                        e.ts
+                    ));
+                }
+            }
+            stack.push(end);
+            if e.name == "round" {
+                if e.round < last_round {
+                    return Err(anyhow!(
+                        "track ({pid}, {tid}): round went backwards \
+                         ({} after {last_round})",
+                        e.round
+                    ));
+                }
+                last_round = e.round;
+            }
+        }
+    }
+    if expect_recovery && !saw_recovery {
+        return Err(anyhow!(
+            "expected recovery events (recovery.drain / recovery.discard) \
+             but the trace has none"
+        ));
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        cluster: u32,
+        round: u32,
+        phase: &str,
+        start_us: u64,
+        dur_us: u64,
+        bytes: u64,
+    ) -> TraceEvent {
+        TraceEvent {
+            cluster,
+            stage: 0,
+            epoch: 1,
+            round,
+            tid: 1,
+            start_us,
+            dur_us,
+            bytes,
+            target: "t".to_string(),
+            phase: phase.to_string(),
+        }
+    }
+
+    #[test]
+    fn accounting_classifies_and_sums_phases() {
+        let events = vec![
+            ev(0, 1, "round", 0, 1000, 0),
+            ev(0, 1, "compute", 0, 600, 0),
+            ev(0, 1, "compress.quant", 600, 100, 0),
+            ev(0, 1, "allreduce", 700, 200, 512),
+            ev(0, 1, "consensus", 900, 100, 0),
+            ev(0, 2, "recovery.drain", 1000, 50, 0),
+        ];
+        let acct = round_accounting(&events);
+        assert_eq!(acct.len(), 2);
+        let r1 = &acct[0];
+        assert_eq!(r1.round, 1);
+        assert!((r1.compute_secs - 6e-4).abs() < 1e-9);
+        assert!((r1.compress_secs - 1e-4).abs() < 1e-9);
+        assert!((r1.wire_secs - 2e-4).abs() < 1e-9);
+        assert!((r1.barrier_secs - 1e-4).abs() < 1e-9);
+        assert_eq!(r1.wire_bytes, 512);
+        let r2 = &acct[1];
+        assert!((r2.recovery_secs - 5e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hiding_ratio_is_compute_overlap_fraction() {
+        // Round-1 wire [0..100] fully under compute; round-2 wire
+        // [200..300] half-covered by compute ending at 250.
+        let events = vec![
+            ev(0, 2, "compute", 0, 250, 0),
+            ev(0, 1, "allreduce", 0, 100, 64),
+            ev(0, 2, "allreduce", 200, 100, 64),
+        ];
+        let acct = round_accounting(&events);
+        assert!((acct[0].hiding_ratio - 1.0).abs() < 1e-9);
+        assert!((acct[1].hiding_ratio - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validator_accepts_a_nested_trace_and_counts() {
+        let events = vec![
+            ev(0, 1, "round", 0, 1000, 0),
+            ev(0, 1, "compute", 100, 400, 0),
+            ev(0, 1, "allreduce", 500, 400, 64),
+            ev(0, 2, "round", 1000, 500, 0),
+            ev(0, 2, "recovery.drain", 1100, 50, 0),
+        ];
+        let doc = obj(vec![("traceEvents", chrome_trace_events(&events))]);
+        assert_eq!(validate_chrome_trace(&doc, true).unwrap(), 5);
+    }
+
+    #[test]
+    fn validator_rejects_partial_overlap_and_round_regression() {
+        let overlap = vec![
+            ev(0, 1, "round", 0, 100, 0),
+            // Starts inside the round span but ends beyond it.
+            ev(0, 1, "compute", 50, 100, 0),
+        ];
+        let doc = obj(vec![("traceEvents", chrome_trace_events(&overlap))]);
+        assert!(validate_chrome_trace(&doc, false).is_err());
+
+        let regress = vec![
+            ev(0, 5, "round", 0, 100, 0),
+            ev(0, 4, "round", 200, 100, 0),
+        ];
+        let doc = obj(vec![("traceEvents", chrome_trace_events(&regress))]);
+        assert!(validate_chrome_trace(&doc, false).is_err());
+
+        let empty = obj(vec![("traceEvents", Json::Arr(Vec::new()))]);
+        assert!(validate_chrome_trace(&empty, false).is_err());
+    }
+
+    #[test]
+    fn validator_demands_recovery_when_expected() {
+        let events = vec![ev(0, 1, "round", 0, 100, 0)];
+        let doc = obj(vec![("traceEvents", chrome_trace_events(&events))]);
+        assert!(validate_chrome_trace(&doc, false).is_ok());
+        assert!(validate_chrome_trace(&doc, true).is_err());
+    }
+}

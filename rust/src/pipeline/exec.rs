@@ -448,6 +448,7 @@ pub fn run_stream_step(
     for cell in stream {
         if cell.is_forward {
             let acts_in = if link.has_upstream() {
+                let _s = crate::obs::span("pipeline", "link.acts");
                 let (mi, a) = link.recv_acts()?;
                 if mi != cell.micro {
                     return Err(anyhow!(
@@ -460,7 +461,10 @@ pub fn run_stream_step(
                 None
             };
             let t0 = Instant::now();
-            let out = compute.forward(params, cell.micro, acts_in)?;
+            let out = {
+                let _s = crate::obs::span("pipeline", "fwd");
+                compute.forward(params, cell.micro, acts_in)?
+            };
             busy_secs += t0.elapsed().as_secs_f64();
             if link.has_downstream() {
                 let a = out.ok_or_else(|| {
@@ -470,6 +474,7 @@ pub fn run_stream_step(
             }
         } else {
             let grad_in = if link.has_downstream() {
+                let _s = crate::obs::span("pipeline", "link.grads");
                 let (mi, g) = link.recv_grads()?;
                 if mi != cell.micro {
                     return Err(anyhow!(
@@ -482,7 +487,10 @@ pub fn run_stream_step(
                 None
             };
             let t0 = Instant::now();
-            let (gp, gout, loss) = compute.backward(params, cell.micro, grad_in)?;
+            let (gp, gout, loss) = {
+                let _s = crate::obs::span("pipeline", "bwd");
+                compute.backward(params, cell.micro, grad_in)?
+            };
             busy_secs += t0.elapsed().as_secs_f64();
             if gp.len() != n {
                 return Err(anyhow!("stage grad len {} != numel {n}", gp.len()));
@@ -696,6 +704,7 @@ fn stage_main(
     stream: Vec<Cell>,
     tx_report: mpsc::Sender<StageRoundReport>,
 ) -> Result<(Vec<f32>, u64)> {
+    crate::obs::set_scope(worker as u32, stage as u32);
     let compute = workload.make_stage(worker, stage)?;
     let n = compute.numel();
     let params = compute.init()?;

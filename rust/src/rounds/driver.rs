@@ -212,13 +212,18 @@ impl RoundDriver {
                 }
             }
         }
-        let mut theta = self.engine.theta().to_vec();
-        self.lane.consensus_mean(&mut theta)?;
-        self.engine.set_theta(&theta);
+        {
+            let _s = crate::obs::span("driver", "consensus");
+            let mut theta = self.engine.theta().to_vec();
+            self.lane.consensus_mean(&mut theta)?;
+            self.engine.set_theta(&theta);
+        }
         self.engine.reset_outer();
         if drain_here {
-            self.engine.drain(&mut self.lane)?;
             if let Recovery::Drain { round } = recovery {
+                let _s =
+                    crate::obs::span_at("driver", "recovery.drain", round as u32);
+                self.engine.drain(&mut self.lane)?;
                 self.applied = self.applied.max(round as usize);
             }
         } else {
@@ -228,7 +233,11 @@ impl RoundDriver {
             // finishing epoch (no rounds left, peers already done) it is
             // bounded staleness — the same tail a sync-mode final-round
             // break has always had.
-            self.engine.discard_in_flight();
+            if let Some(r) = self.engine.in_flight_round() {
+                let _s =
+                    crate::obs::span_at("driver", "recovery.discard", r as u32);
+                self.engine.discard_in_flight();
+            }
         }
         Ok(())
     }
@@ -244,6 +253,8 @@ impl RoundDriver {
     ) -> Result<EpochEnd> {
         work.set_params(self.engine.theta());
         for round in start..=self.rounds {
+            crate::obs::set_round(round as u32);
+            let _round_span = crate::obs::span("driver", "round");
             if self.break_round != 0 && round == self.break_round {
                 self.break_round = 0;
                 return Ok(EpochEnd::Broken(anyhow::anyhow!(
@@ -257,9 +268,12 @@ impl RoundDriver {
             // overlap these trail θ_g by one join, so θ_g is not a
             // substitute.
             let anchor = work.params().to_vec();
-            let (loss, step_secs) = match work.local_round(self.local_steps) {
-                Ok(x) => x,
-                Err(e) => return Ok(EpochEnd::Broken(e)),
+            let (loss, step_secs) = {
+                let _s = crate::obs::span("driver", "compute");
+                match work.local_round(self.local_steps) {
+                    Ok(x) => x,
+                    Err(e) => return Ok(EpochEnd::Broken(e)),
+                }
             };
             let mv = movement(&anchor, work.params());
             match self.engine.finish_round(vec![mv], round as u64, &mut self.lane)

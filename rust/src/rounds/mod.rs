@@ -339,13 +339,19 @@ impl WireCompressor {
         match self.method.clone() {
             Method::None => {
                 let payload = 4 * delta.len() as u64;
+                let _w = crate::obs::span("wire", "allreduce").bytes(payload);
                 member.allreduce_mean(delta)?;
                 Ok(payload)
             }
             Method::Quant { q_bits } => {
-                quantize::quantize_dequantize(delta, q_bits);
+                {
+                    let _c = crate::obs::span("compress", "compress.quant");
+                    quantize::quantize_dequantize(delta, q_bits);
+                }
+                let payload = quantize::wire_bytes(delta.len(), q_bits);
+                let _w = crate::obs::span("wire", "allreduce").bytes(payload);
                 member.allreduce_mean(delta)?;
-                Ok(quantize::wire_bytes(delta.len(), q_bits))
+                Ok(payload)
             }
             Method::LowRankQuant { rank, q_bits } => {
                 self.lowrank_reduce(member, delta, spec, step, rank, q_bits)
@@ -368,6 +374,8 @@ impl WireCompressor {
     ) -> Result<u64> {
         let mut payload_elems = 0usize;
         let mut scales = 0usize;
+        let bits = if q_bits == 0 { 32 } else { q_bits } as u64;
+        let pass_bytes = |elems: usize| (elems as u64 * bits + 7) / 8 + 4;
         for entry in spec {
             let lo = entry.offset;
             let hi = entry.offset + entry.numel();
@@ -400,32 +408,58 @@ impl WireCompressor {
                 }
                 let mslab = Mat::from_slice(rows, cols, &delta[lo..hi]);
                 // Pass 1: P = M Q, ring-mean, quantize, orthonormalize.
-                let mut p = matmul(&mslab, q);
-                member.allreduce_mean(&mut p.data)?;
+                let mut p = {
+                    let _c = crate::obs::span("compress", "compress.project");
+                    matmul(&mslab, q)
+                };
+                {
+                    let _w = crate::obs::span("wire", "allreduce")
+                        .bytes(pass_bytes(rows * r));
+                    member.allreduce_mean(&mut p.data)?;
+                }
                 payload_elems += rows * r;
                 scales += 1;
-                if q_bits > 0 && q_bits < 32 {
-                    quantize::quantize_dequantize(&mut p.data, q_bits);
+                {
+                    let _c = crate::obs::span("compress", "compress.quant");
+                    if q_bits > 0 && q_bits < 32 {
+                        quantize::quantize_dequantize(&mut p.data, q_bits);
+                    }
+                    orthonormalize_columns(&mut p);
                 }
-                orthonormalize_columns(&mut p);
                 // Pass 2: Q' = Mᵀ P̂, ring-mean, quantize.
-                let mut qn = matmul_at_b(&mslab, &p);
-                member.allreduce_mean(&mut qn.data)?;
+                let mut qn = {
+                    let _c = crate::obs::span("compress", "compress.project");
+                    matmul_at_b(&mslab, &p)
+                };
+                {
+                    let _w = crate::obs::span("wire", "allreduce")
+                        .bytes(pass_bytes(cols * r));
+                    member.allreduce_mean(&mut qn.data)?;
+                }
                 payload_elems += cols * r;
                 scales += 1;
                 if q_bits > 0 && q_bits < 32 {
+                    let _c = crate::obs::span("compress", "compress.quant");
                     quantize::quantize_dequantize(&mut qn.data, q_bits);
                 }
                 self.bases.insert(entry.name.clone(), qn.clone());
-                let rec = matmul_bt(&p, &qn);
+                let rec = {
+                    let _c = crate::obs::span("compress", "compress.project");
+                    matmul_bt(&p, &qn)
+                };
                 delta[lo..hi].copy_from_slice(&rec.data);
             } else {
                 // 1-D segment: ring-mean, then snap to the q-bit grid —
                 // the same order as compress::lowrank so the threaded and
                 // reference paths agree bit-for-bit (up to ring fp order).
                 let mut seg = delta[lo..hi].to_vec();
-                member.allreduce_mean(&mut seg)?;
+                {
+                    let _w = crate::obs::span("wire", "allreduce")
+                        .bytes(pass_bytes(hi - lo));
+                    member.allreduce_mean(&mut seg)?;
+                }
                 if q_bits > 0 && q_bits < 32 {
+                    let _c = crate::obs::span("compress", "compress.quant");
                     quantize::quantize_dequantize(&mut seg, q_bits);
                 }
                 payload_elems += hi - lo;
@@ -433,7 +467,6 @@ impl WireCompressor {
                 delta[lo..hi].copy_from_slice(&seg);
             }
         }
-        let bits = if q_bits == 0 { 32 } else { q_bits } as u64;
         Ok((payload_elems as u64 * bits + 7) / 8 + 4 * scales as u64)
     }
 }
@@ -621,7 +654,14 @@ impl DeltaReducer for RingLane {
             .ok_or_else(|| anyhow!("compressor already in flight"))?;
         let spec = self.spec.clone();
         let mut delta = deltas[0].clone();
+        // The comm thread inherits the launching worker's trace context:
+        // its spans must attribute to the round the delta belongs to,
+        // not whatever round the worker has advanced to by join time.
+        let ctx = crate::obs::scope();
         self.in_flight = Some(std::thread::spawn(move || {
+            crate::obs::set_ctx(ctx);
+            crate::obs::set_round(round as u32);
+            let _s = crate::obs::span("lane", "reduce");
             let bytes = c.reduce(&mut *m, &mut delta, &spec, round)?;
             Ok((m, c, delta, bytes))
         }));
@@ -657,7 +697,10 @@ impl DeltaReducer for RingLane {
             .compressor
             .as_mut()
             .ok_or_else(|| anyhow!("compressor missing"))?;
-        let bytes = c.reduce(&mut **m, &mut delta, &self.spec, round)?;
+        let bytes = {
+            let _s = crate::obs::span_at("lane", "reduce", round as u32);
+            c.reduce(&mut **m, &mut delta, &self.spec, round)?
+        };
         self.record(bytes);
         Ok(delta)
     }

@@ -88,6 +88,7 @@ use crate::rounds::driver::{
 use crate::rounds::{RingLane, RoundEngine};
 use crate::runtime::manifest::ParamEntry;
 use crate::runtime::Manifest;
+use crate::obs::{self, TraceEvent};
 use crate::transport::faulty::{FaultPlan, FaultyRing};
 use crate::transport::frame::{read_msg, write_msg, Msg};
 use crate::transport::tcp;
@@ -163,6 +164,14 @@ pub struct ElasticConfig {
     pub faults: FaultConfig,
     /// Hard wall-clock ceiling for the whole run (hang safety net).
     pub wall_timeout_ms: u64,
+    /// Structured tracing ([`crate::obs`]): workers record spans and ship
+    /// them over their control sockets; the coordinator merges them into
+    /// [`ElasticOutcome::trace_events`].  Bit-for-bit inert — trace
+    /// batches never touch the data plane or the payload byte meter.
+    pub trace: bool,
+    /// When non-empty, each traced process also tees its drained batches
+    /// to `<trace_dir>/<role>.jsonl` (debugging aid; "" = off).
+    pub trace_dir: String,
 }
 
 impl ElasticConfig {
@@ -184,6 +193,8 @@ impl ElasticConfig {
             transport: TransportConfig::default(),
             faults: FaultConfig::default(),
             wall_timeout_ms: 120_000,
+            trace: false,
+            trace_dir: String::new(),
         }
     }
 
@@ -236,6 +247,8 @@ impl ElasticConfig {
             transport: cfg.transport.clone(),
             faults: cfg.faults.clone(),
             wall_timeout_ms,
+            trace: cfg.trace.enabled,
+            trace_dir: cfg.trace.dir.clone(),
         }
     }
 }
@@ -281,6 +294,11 @@ pub struct ElasticOutcome {
     /// drain_round); drain_round = 0 is a discard/no-op commit.  Tests
     /// assert the drain and discard branches from this ledger.
     pub recoveries: Vec<(u32, u32, u32)>,
+    /// The merged fleet-wide timeline (empty unless
+    /// [`ElasticConfig::trace`]): every span each worker shipped over its
+    /// control socket plus the coordinator's own 2PC spans, self-keyed by
+    /// (cluster, stage, epoch, round) — feed to [`crate::obs::report`].
+    pub trace_events: Vec<TraceEvent>,
 }
 
 impl ElasticOutcome {
@@ -581,8 +599,22 @@ fn wait_for_commit(
     }
 }
 
+/// Ship everything this process has recorded so far to the coordinator
+/// as one [`Msg::TraceEvents`] control frame.  Best-effort: a worker
+/// must never fail a round because a trace batch did.
+fn ship_trace(coord: &mut TcpStream) {
+    if !obs::enabled() {
+        return;
+    }
+    let events = obs::drain();
+    if !events.is_empty() {
+        let _ = write_msg(coord, &Msg::TraceEvents { events });
+    }
+}
+
 /// Worker entry point (the `dilocox worker` subcommand body).
 pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
+    obs::set_scope(opts.rank, 0);
     let addr: SocketAddr = opts
         .coord
         .parse()
@@ -604,22 +636,28 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     let mut epoch = 0u32;
 
     'epochs: loop {
-        let (e, resume_round, members, drain_round) =
-            wait_for_commit(&mut coord, epoch)?;
+        let (e, resume_round, members, drain_round) = {
+            let _s = obs::span("elastic", "epoch.wait");
+            wait_for_commit(&mut coord, epoch)?
+        };
         epoch = e;
+        obs::set_epoch(epoch);
         let broken = |d: &RoundDriver| Msg::RingBroken {
             epoch,
             applied_rounds: d.applied() as u32,
             in_flight_round: d.in_flight_round(),
         };
-        let formed = tcp::form_ring(
-            opts.rank,
-            epoch,
-            &members,
-            &listener,
-            connect_timeout,
-            ring_timeout,
-        );
+        let formed = {
+            let _s = obs::span("elastic", "ring.form");
+            tcp::form_ring(
+                opts.rank,
+                epoch,
+                &members,
+                &listener,
+                connect_timeout,
+                ring_timeout,
+            )
+        };
         let raw = match formed {
             Ok(r) => r,
             Err(_) => {
@@ -657,6 +695,9 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
                             wire_bytes: t.wire_bytes,
                         },
                     );
+                    // Piggyback this round's trace batch on the heartbeat
+                    // (same control socket, so ordering is preserved).
+                    ship_trace(coord);
                 },
             )?
         };
@@ -679,6 +720,9 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     }
 
     let final_loss = trainer.eval()?;
+    // Final trace batch (finish()'s drained reduction, recovery spans)
+    // BEFORE Done: the coordinator stops reading after the last Done.
+    ship_trace(&mut coord);
     write_msg(
         &mut coord,
         &Msg::Done {
@@ -876,6 +920,7 @@ fn wait_for_stage_commit(
 /// `RingBroken` with the held in-flight round and parks for the next
 /// epoch's drain-or-discard decision.
 pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
+    obs::set_scope(opts.base.rank, opts.stage);
     let w = &opts.base;
     let stages = opts.stages as usize;
     if stages < 2 {
@@ -993,28 +1038,36 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
     let mut epoch = 0u32;
 
     'epochs: loop {
-        let Some((e, resume_round, ring_members, down_port, drain_round)) =
+        let waited = {
+            let _s = obs::span("elastic", "epoch.wait");
             wait_for_stage_commit(&mut coord, epoch)?
+        };
+        let Some((e, resume_round, ring_members, down_port, drain_round)) = waited
         else {
             // Dropped before completion (a sibling stage died and the
             // coordinator removed our whole cluster): exit cleanly.
             return Ok(());
         };
         epoch = e;
+        obs::set_epoch(epoch);
         let broken = |d: &RoundDriver| Msg::RingBroken {
             epoch,
             applied_rounds: d.applied() as u32,
             in_flight_round: d.in_flight_round(),
         };
         let finishing = resume_round as usize > w.rounds;
-        let raw = match tcp::form_ring(
-            w.rank,
-            epoch,
-            &ring_members,
-            &ring_listener,
-            connect_timeout,
-            ring_timeout,
-        ) {
+        let formed = {
+            let _s = obs::span("elastic", "ring.form");
+            tcp::form_ring(
+                w.rank,
+                epoch,
+                &ring_members,
+                &ring_listener,
+                connect_timeout,
+                ring_timeout,
+            )
+        };
+        let raw = match formed {
             Ok(r) => r,
             Err(_) => {
                 let _ = write_msg(&mut coord, &broken(&driver));
@@ -1031,14 +1084,18 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
         work.link = if finishing {
             Box::new(MpscStageLink::default())
         } else {
-            match tcp::form_stage_links(
-                opts.stage,
-                epoch,
-                &link_listener,
-                if down_port == 0 { None } else { Some(down_port) },
-                connect_timeout,
-                ring_timeout,
-            ) {
+            let linked = {
+                let _s = obs::span("elastic", "ring.form");
+                tcp::form_stage_links(
+                    opts.stage,
+                    epoch,
+                    &link_listener,
+                    if down_port == 0 { None } else { Some(down_port) },
+                    connect_timeout,
+                    ring_timeout,
+                )
+            };
+            match linked {
                 Ok(l) => Box::new(l),
                 Err(_) => {
                     let _ = write_msg(&mut coord, &broken(&driver));
@@ -1081,6 +1138,7 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
                             wire_bytes: t.wire_bytes,
                         },
                     );
+                    ship_trace(coord);
                 },
             )?
         };
@@ -1099,6 +1157,7 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
         }
     }
 
+    ship_trace(&mut coord);
     write_msg(
         &mut coord,
         &Msg::Done {
@@ -1178,6 +1237,8 @@ struct Telemetry {
     step_samples: Vec<(u32, f64)>,
     /// Committed recovery decisions: (epoch, stage, drain_round).
     recoveries: Vec<(u32, u32, u32)>,
+    /// Trace batches shipped by the workers (merged fleet timeline).
+    trace_events: Vec<TraceEvent>,
 }
 
 /// The commit-time drain-or-discard rule: finish (drain) an in-flight
@@ -1241,6 +1302,12 @@ fn spawn_workers(
                     .arg(cfg.transport.connect_timeout_ms.to_string());
                 if cfg.overlap {
                     cmd.arg("--overlap");
+                }
+                if cfg.trace {
+                    cmd.arg("--trace");
+                    if !cfg.trace_dir.is_empty() {
+                        cmd.arg("--trace-dir").arg(&cfg.trace_dir);
+                    }
                 }
                 match &cfg.workload {
                     Workload::Quadratic { dim } => {
@@ -1379,6 +1446,14 @@ fn reap_children(children: &mut [std::process::Child]) {
 /// stage-parallel fleet supervisor when `pp_stages > 1` (one OS process
 /// per (cluster, stage), per-stage rings, intra-cluster TCP dataflow).
 pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutcome> {
+    if cfg.trace {
+        obs::set_enabled(true);
+        if !cfg.trace_dir.is_empty() {
+            obs::set_journal(Some(
+                std::path::Path::new(&cfg.trace_dir).join("coord.jsonl"),
+            ));
+        }
+    }
     if cfg.pp_stages > 1 {
         return run_elastic_stages(cfg, mode);
     }
@@ -1430,6 +1505,13 @@ pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutco
     let final_loss =
         reports.iter().map(|r| r.final_loss).sum::<f32>() / reports.len() as f32;
     let total_wire_bytes = reports.iter().map(|r| r.wire_bytes).sum();
+    // Close the timeline with whatever this process still holds — the
+    // coordinator's own 2PC spans, plus (thread mode) any worker batch
+    // that flushed after its final ship.
+    let mut trace_events = telem.trace_events;
+    if cfg.trace {
+        trace_events.extend(obs::drain());
+    }
     Ok(ElasticOutcome {
         rounds: cfg.rounds,
         epochs: epoch,
@@ -1442,6 +1524,7 @@ pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutco
         round_wire: telem.round_wire,
         stage_times: summarize_step_samples(&telem.step_samples),
         recoveries: telem.recoveries,
+        trace_events,
     })
 }
 
@@ -1454,6 +1537,7 @@ fn supervise(
     cfg: &ElasticConfig,
     listener: &TcpListener,
 ) -> Result<(u32, BTreeMap<u32, DoneReport>, Telemetry)> {
+    obs::set_scope(obs::COORD, 0);
     let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
     let startup_deadline = Instant::now()
         + Duration::from_millis(cfg.transport.connect_timeout_ms)
@@ -1503,6 +1587,9 @@ fn supervise(
             *resume_round = (*resume_round).max(applied_rounds + 1);
             inflight.insert(*w, *in_flight_round);
         }
+        if let Event::Msg(_, Msg::TraceEvents { events }) = ev {
+            telem.trace_events.extend(events.iter().cloned());
+        }
     }
 
     'epochs: loop {
@@ -1520,6 +1607,9 @@ fn supervise(
 
         // -- 2PC prepare/commit over the pending members ------------------
         epoch += 1;
+        obs::set_epoch(epoch);
+        obs::set_round(resume_round);
+        let prepare_span = obs::span("elastic", "epoch.prepare");
         // Drain-or-discard: drain only if every proposed member reported
         // the same in-flight round (see `drain_decision`); a drain pushes
         // the resume point past the drained round.
@@ -1597,6 +1687,7 @@ fn supervise(
             }
         }
 
+        drop(prepare_span);
         // A pending member that finished during the ack wait leaves the
         // proposed membership stale — don't commit a ring containing a
         // worker that will never join it; re-prepare without it.
@@ -1604,6 +1695,7 @@ fn supervise(
             continue 'epochs;
         }
 
+        let commit_span = obs::span("elastic", "epoch.commit");
         let mut lost: Vec<u32> = Vec::new();
         for &r in &pending {
             if let Some(h) = live.get_mut(&r) {
@@ -1612,6 +1704,7 @@ fn supervise(
                 }
             }
         }
+        drop(commit_span);
         if !lost.is_empty() {
             for r in lost {
                 live.remove(&r);
@@ -1773,6 +1866,12 @@ fn spawn_stage_workers(
                         .arg(cfg.transport.connect_timeout_ms.to_string());
                     if cfg.overlap {
                         cmd.arg("--overlap");
+                    }
+                    if cfg.trace {
+                        cmd.arg("--trace");
+                        if !cfg.trace_dir.is_empty() {
+                            cmd.arg("--trace-dir").arg(&cfg.trace_dir);
+                        }
                     }
                     match &cfg.workload {
                         Workload::Quadratic { dim } => {
@@ -1981,6 +2080,10 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
         f32::NAN
     };
     let total_wire_bytes = done.values().map(|r| r.wire_bytes).sum();
+    let mut trace_events = telem.trace_events;
+    if cfg.trace {
+        trace_events.extend(obs::drain());
+    }
     Ok(ElasticOutcome {
         rounds: cfg.rounds,
         epochs: epoch,
@@ -1993,6 +2096,7 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
         round_wire: telem.round_wire,
         stage_times: summarize_step_samples(&telem.step_samples),
         recoveries: telem.recoveries,
+        trace_events,
     })
 }
 
@@ -2004,6 +2108,7 @@ fn supervise_stages(
     cfg: &ElasticConfig,
     listener: &TcpListener,
 ) -> Result<(u32, BTreeMap<(u32, u32), DoneReport>, Telemetry)> {
+    obs::set_scope(obs::COORD, 0);
     let stages = cfg.pp_stages as u32;
     let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
     let startup_deadline = Instant::now()
@@ -2065,6 +2170,9 @@ fn supervise_stages(
             *resume_round = (*resume_round).max(applied_rounds + 1);
             inflight.insert(*k, *in_flight_round);
         }
+        if let Event::Msg(_, Msg::TraceEvents { events }) = ev {
+            telem.trace_events.extend(events.iter().cloned());
+        }
     }
 
     'epochs: loop {
@@ -2086,6 +2194,9 @@ fn supervise_stages(
 
         // -- 2PC prepare/commit, tailored per stage process ---------------
         epoch += 1;
+        obs::set_epoch(epoch);
+        obs::set_round(resume_round);
+        let prepare_span = obs::span("elastic", "epoch.prepare");
         let recipients: Vec<(u32, u32)> = pending
             .iter()
             .flat_map(|&c| (0..stages).map(move |s| (c, s)))
@@ -2201,6 +2312,7 @@ fn supervise_stages(
                 }
             }
         }
+        drop(prepare_span);
         // Membership changed during the ack wait → the proposal is stale.
         if recipients
             .iter()
@@ -2209,6 +2321,7 @@ fn supervise_stages(
             continue 'epochs;
         }
 
+        let commit_span = obs::span("elastic", "epoch.commit");
         let mut lost: Vec<(u32, u32)> = Vec::new();
         for k in &recipients {
             if let Some(h) = live.get_mut(k) {
@@ -2217,6 +2330,7 @@ fn supervise_stages(
                 }
             }
         }
+        drop(commit_span);
         if !lost.is_empty() {
             for k in lost {
                 live.remove(&k);

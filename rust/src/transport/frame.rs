@@ -6,6 +6,7 @@
 //! membership/epoch control plane (see the module docs in
 //! [`crate::transport`]).
 
+use crate::obs::TraceEvent;
 use anyhow::{anyhow, Result};
 use std::io::{Read, Write};
 
@@ -82,6 +83,12 @@ pub enum Msg {
         link_down_port: u16,
         drain_round: u32,
     },
+    /// Worker → coordinator: a drained batch of structured trace events
+    /// (see [`crate::obs`]) riding the control socket, so the
+    /// coordinator can merge a fleet-wide timeline.  Control plane only
+    /// — never crosses a ring socket, never metered, so tracing leaves
+    /// the wire ledger bit-for-bit unchanged.
+    TraceEvents { events: Vec<TraceEvent> },
 }
 
 impl Msg {
@@ -101,6 +108,7 @@ impl Msg {
             Msg::Grads { .. } => 11,
             Msg::StageHello { .. } => 12,
             Msg::StagePrepare { .. } => 13,
+            Msg::TraceEvents { .. } => 14,
         }
     }
 
@@ -121,6 +129,7 @@ impl Msg {
             Msg::Grads { .. } => "Grads",
             Msg::StageHello { .. } => "StageHello",
             Msg::StagePrepare { .. } => "StagePrepare",
+            Msg::TraceEvents { .. } => "TraceEvents",
         }
     }
 }
@@ -149,6 +158,11 @@ fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
     for v in vs {
         buf.extend_from_slice(&v.to_le_bytes());
     }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u16(buf, s.len() as u16);
+    buf.extend_from_slice(s.as_bytes());
 }
 
 // ---- decode helpers -------------------------------------------------------
@@ -192,6 +206,14 @@ impl<'a> Cursor<'a> {
             out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
         }
         Ok(out)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        Ok(std::str::from_utf8(raw)
+            .map_err(|_| anyhow!("non-utf8 string in frame"))?
+            .to_string())
     }
 }
 
@@ -265,6 +287,21 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             put_u16(&mut b, *link_down_port);
             put_u32(&mut b, *drain_round);
         }
+        Msg::TraceEvents { events } => {
+            put_u32(&mut b, events.len() as u32);
+            for e in events {
+                put_u32(&mut b, e.cluster);
+                put_u32(&mut b, e.stage);
+                put_u32(&mut b, e.epoch);
+                put_u32(&mut b, e.round);
+                put_u32(&mut b, e.tid);
+                put_u64(&mut b, e.start_us);
+                put_u64(&mut b, e.dur_us);
+                put_u64(&mut b, e.bytes);
+                put_str(&mut b, &e.target);
+                put_str(&mut b, &e.phase);
+            }
+        }
     }
     b
 }
@@ -336,6 +373,25 @@ pub fn decode(bytes: &[u8]) -> Result<Msg> {
                 link_down_port: c.u16()?,
                 drain_round: c.u32()?,
             }
+        }
+        14 => {
+            let n = c.u32()? as usize;
+            let mut events = Vec::with_capacity(n.min(65536));
+            for _ in 0..n {
+                events.push(TraceEvent {
+                    cluster: c.u32()?,
+                    stage: c.u32()?,
+                    epoch: c.u32()?,
+                    round: c.u32()?,
+                    tid: c.u32()?,
+                    start_us: c.u64()?,
+                    dur_us: c.u64()?,
+                    bytes: c.u64()?,
+                    target: c.str()?,
+                    phase: c.str()?,
+                });
+            }
+            Msg::TraceEvents { events }
         }
         k => return Err(anyhow!("unknown frame kind {k}")),
     };
@@ -434,6 +490,35 @@ mod tests {
             ring_members: vec![(7, 65535)],
             link_down_port: 40100,
             drain_round: 0,
+        });
+        roundtrip(Msg::TraceEvents { events: Vec::new() });
+        roundtrip(Msg::TraceEvents {
+            events: vec![
+                TraceEvent {
+                    cluster: 2,
+                    stage: 1,
+                    epoch: 3,
+                    round: 17,
+                    tid: 5,
+                    start_us: u64::MAX / 7,
+                    dur_us: 1234,
+                    bytes: 1 << 40,
+                    target: "wire".to_string(),
+                    phase: "allreduce".to_string(),
+                },
+                TraceEvent {
+                    cluster: 0,
+                    stage: 0,
+                    epoch: 1,
+                    round: 1,
+                    tid: 0,
+                    start_us: 0,
+                    dur_us: 0,
+                    bytes: 0,
+                    target: "driver".to_string(),
+                    phase: "recovery.discard".to_string(),
+                },
+            ],
         });
     }
 

@@ -138,9 +138,11 @@ pub trait RingTransport: Send {
         for s in 0..c - 1 {
             let send_idx = (rank + c - s) % c;
             let (lo, hi) = bounds[send_idx];
+            let hop = crate::obs::span("ring", "hop").bytes(4 * (hi - lo) as u64);
             self.meter().add(4 * (hi - lo) as u64);
             self.send_next(&buf[lo..hi])?;
             let incoming = self.recv_prev()?;
+            drop(hop);
             let recv_idx = (rank + c - s - 1) % c;
             let (lo, hi) = bounds[recv_idx];
             if incoming.len() != hi - lo {
@@ -158,9 +160,11 @@ pub trait RingTransport: Send {
         for s in 0..c - 1 {
             let send_idx = (rank + 1 + c - s) % c;
             let (lo, hi) = bounds[send_idx];
+            let hop = crate::obs::span("ring", "hop").bytes(4 * (hi - lo) as u64);
             self.meter().add(4 * (hi - lo) as u64);
             self.send_next(&buf[lo..hi])?;
             let incoming = self.recv_prev()?;
+            drop(hop);
             let recv_idx = (rank + c - s) % c;
             let (lo, hi) = bounds[recv_idx];
             if incoming.len() != hi - lo {

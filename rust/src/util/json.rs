@@ -116,6 +116,13 @@ impl Json {
         s
     }
 
+    /// Single-line form (no newlines) — one JSONL record per value.
+    pub fn to_string_compact(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0, false);
+        s
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),
@@ -445,6 +452,15 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let re = Json::parse(&v.to_string_pretty()).unwrap();
         assert_eq!(v, re);
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let src = r#"{"a": [1, {"b": "c\nd"}], "e": null}"#;
+        let v = Json::parse(src).unwrap();
+        let compact = v.to_string_compact();
+        assert!(!compact.contains('\n'));
+        assert_eq!(Json::parse(&compact).unwrap(), v);
     }
 
     #[test]

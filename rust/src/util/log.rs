@@ -1,10 +1,19 @@
 //! Tiny leveled logger with wall-clock timestamps, level filtering via the
 //! `DILOCOX_LOG` env var (error|warn|info|debug|trace), and a capture mode
 //! for tests.  All trainer/coordinator progress lines flow through this.
+//!
+//! Multi-process fleets interleave every worker's stderr on the
+//! coordinator's terminal, so each process may stamp a **role tag**
+//! (`c3` / `c3.s1`-style, set once at worker startup via [`set_role`])
+//! that is printed on every line between the level and the target.
+//! Capture is **thread-local**: a test sees exactly the lines logged on
+//! its own thread, so `cargo test`'s parallel test threads never steal
+//! each other's output (the old single global buffer did).
 
+use std::cell::RefCell;
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Mutex;
+use std::sync::OnceLock;
 use std::time::{SystemTime, UNIX_EPOCH};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -39,7 +48,11 @@ impl Level {
 }
 
 static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
-static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+static ROLE: OnceLock<String> = OnceLock::new();
+
+thread_local! {
+    static CAPTURE: RefCell<Option<Vec<String>>> = const { RefCell::new(None) };
+}
 
 fn max_level() -> u8 {
     let v = MAX_LEVEL.load(Ordering::Relaxed);
@@ -57,12 +70,21 @@ pub fn set_level(l: Level) {
     MAX_LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
-/// Route log lines into a buffer (tests); returns previous buffer.
+/// Stamp this process's fleet role (`c3` or `c3.s1`) onto every log line.
+/// First call wins; meant to be called exactly once at worker startup.
+pub fn set_role(tag: &str) {
+    let _ = ROLE.set(tag.to_string());
+}
+
+/// Route this thread's log lines into a buffer (tests); returns the
+/// previous buffer.  Thread-local, so parallel tests don't interfere.
 pub fn capture(enable: bool) -> Vec<String> {
-    let mut g = CAPTURE.lock().unwrap();
-    let prev = g.take().unwrap_or_default();
-    *g = if enable { Some(Vec::new()) } else { None };
-    prev
+    CAPTURE.with(|c| {
+        let mut g = c.borrow_mut();
+        let prev = g.take().unwrap_or_default();
+        *g = if enable { Some(Vec::new()) } else { None };
+        prev
+    })
 }
 
 pub fn log(level: Level, target: &str, msg: &str) {
@@ -73,18 +95,36 @@ pub fn log(level: Level, target: &str, msg: &str) {
         .duration_since(UNIX_EPOCH)
         .unwrap_or_default();
     let secs = now.as_secs();
-    let line = format!(
-        "[{}.{:03} {} {}] {}",
-        secs % 100_000,
-        now.subsec_millis(),
-        level.tag(),
-        target,
-        msg
-    );
-    let mut g = CAPTURE.lock().unwrap();
-    if let Some(buf) = g.as_mut() {
-        buf.push(line);
-    } else {
+    let line = match ROLE.get() {
+        Some(role) => format!(
+            "[{}.{:03} {} {} {}] {}",
+            secs % 100_000,
+            now.subsec_millis(),
+            level.tag(),
+            role,
+            target,
+            msg
+        ),
+        None => format!(
+            "[{}.{:03} {} {}] {}",
+            secs % 100_000,
+            now.subsec_millis(),
+            level.tag(),
+            target,
+            msg
+        ),
+    };
+    let captured = CAPTURE.with(|c| {
+        let mut g = c.borrow_mut();
+        match g.as_mut() {
+            Some(buf) => {
+                buf.push(line.clone());
+                true
+            }
+            None => false,
+        }
+    });
+    if !captured {
         let _ = writeln!(std::io::stderr(), "{line}");
     }
 }
@@ -134,5 +174,21 @@ mod tests {
         assert_eq!(Level::parse("TRACE"), Level::Trace);
         assert_eq!(Level::parse("bogus"), Level::Info);
         assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn capture_is_thread_local() {
+        set_level(Level::Info);
+        capture(true);
+        log(Level::Info, "t", "mine");
+        std::thread::spawn(|| {
+            // Uncaptured on this thread: goes to stderr, not our buffer.
+            log(Level::Info, "t", "other-thread");
+        })
+        .join()
+        .unwrap();
+        let lines = capture(false);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("mine"));
     }
 }

@@ -1,0 +1,212 @@
+//! Observability integration: tracing is bit-for-bit inert on the elastic
+//! fleet, span sums account for measured wall time, both churn-recovery
+//! branches leave `recovery.*` evidence in the merged timeline, and the
+//! real (not hand-built) timelines pass the `trace-check` validator.
+//!
+//! Every test here mutates the process-wide [`dilocox::obs`] switches, so
+//! they serialize on one lock and restore the disabled state on the way
+//! out — the rest of this binary's tests never see tracing enabled.
+
+use dilocox::obs;
+use dilocox::obs::report::{
+    chrome_trace_events, round_accounting, validate_chrome_trace,
+};
+use dilocox::obs::TraceEvent;
+use dilocox::transport::elastic::{
+    run_elastic, ElasticConfig, ElasticOutcome, SpawnMode,
+};
+use dilocox::util::json::obj;
+use std::collections::BTreeSet;
+use std::sync::Mutex;
+use std::time::Instant;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn quick_cfg(workers: usize, rounds: usize, dim: usize) -> ElasticConfig {
+    let mut cfg = ElasticConfig::quadratic(workers, rounds, dim);
+    cfg.transport.ring_timeout_ms = 1000;
+    cfg.transport.connect_timeout_ms = 5000;
+    cfg.wall_timeout_ms = 60_000;
+    cfg
+}
+
+/// Order-independent view of the per-round heartbeat telemetry (worker
+/// arrival order at the coordinator is nondeterministic).
+fn loss_set(out: &ElasticOutcome) -> BTreeSet<(u32, u32, u32)> {
+    out.round_losses
+        .iter()
+        .map(|&(w, r, l)| (w, r, l.to_bits()))
+        .collect()
+}
+
+fn reset_obs() {
+    obs::set_enabled(false);
+    obs::drain();
+}
+
+#[test]
+fn traced_run_is_bit_identical_to_untraced() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    reset_obs();
+    let mut cfg = quick_cfg(3, 4, 48);
+    let off = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+    assert!(off.trace_events.is_empty(), "untraced run must ship no events");
+
+    cfg.trace = true;
+    let on = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+    reset_obs();
+
+    // Zero-overhead-when-disabled has a stronger sibling: enabled tracing
+    // must not perturb the numerics, the telemetry, or the wire ledger.
+    assert_eq!(off.final_params, on.final_params);
+    assert_eq!(off.final_loss.to_bits(), on.final_loss.to_bits());
+    assert_eq!(off.total_wire_bytes, on.total_wire_bytes);
+    assert_eq!(loss_set(&off), loss_set(&on));
+
+    // And the traced run actually produced a validating timeline.
+    assert!(!on.trace_events.is_empty());
+    let doc = obj(vec![("traceEvents", chrome_trace_events(&on.trace_events))]);
+    let n = validate_chrome_trace(&doc, false).unwrap();
+    assert_eq!(n, on.trace_events.len());
+    // Per-round accounting covers every training round with nonzero
+    // compute (round 0 additionally holds the pre-round barrier spans).
+    let accounts = round_accounting(&on.trace_events);
+    for r in 1..=cfg.rounds as u32 {
+        assert!(
+            accounts.iter().any(|a| a.round == r),
+            "round {r} missing from accounting"
+        );
+    }
+}
+
+#[test]
+fn span_sums_account_for_wall_time() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    reset_obs();
+    let mut cfg = quick_cfg(2, 3, 48);
+    cfg.trace = true;
+    let t0 = Instant::now();
+    let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+    let wall_us = t0.elapsed().as_micros() as u64;
+    reset_obs();
+
+    // Round spans on one (cluster, stage, tid) track are sequential in
+    // real time, so their durations can never sum past the measured wall
+    // clock (generous slack for the µs truncation at both ends).
+    let mut tracks: BTreeSet<(u32, u32, u32)> = BTreeSet::new();
+    for e in &out.trace_events {
+        if e.phase == "round" {
+            tracks.insert((e.cluster, e.stage, e.tid));
+        }
+    }
+    assert!(!tracks.is_empty(), "no round spans recorded");
+    for (cluster, stage, tid) in tracks {
+        let on_track = |e: &&TraceEvent| {
+            e.cluster == cluster && e.stage == stage && e.tid == tid
+        };
+        let rounds: Vec<&TraceEvent> = out
+            .trace_events
+            .iter()
+            .filter(on_track)
+            .filter(|e| e.phase == "round")
+            .collect();
+        assert_eq!(rounds.len(), cfg.rounds, "one round span per round");
+        let round_sum: u64 = rounds.iter().map(|e| e.dur_us).sum();
+        assert!(
+            round_sum <= wall_us + 100_000,
+            "round spans ({round_sum} us) exceed wall ({wall_us} us)"
+        );
+        // Every compute span nests inside its round span, so per-round
+        // child sums are bounded by the parent duration.
+        for r in &rounds {
+            let child_sum: u64 = out
+                .trace_events
+                .iter()
+                .filter(on_track)
+                .filter(|e| {
+                    e.phase != "round"
+                        && e.start_us >= r.start_us
+                        && e.start_us + e.dur_us <= r.start_us + r.dur_us
+                })
+                .filter(|e| e.phase == "compute" || e.phase == "consensus")
+                .map(|e| e.dur_us)
+                .sum();
+            assert!(
+                child_sum <= r.dur_us,
+                "children ({child_sum} us) exceed round span ({} us)",
+                r.dur_us
+            );
+        }
+    }
+    // The fleet did measurable compute somewhere.
+    let compute_us: u64 = out
+        .trace_events
+        .iter()
+        .filter(|e| e.phase == "compute")
+        .map(|e| e.dur_us)
+        .sum();
+    let computes = out
+        .trace_events
+        .iter()
+        .filter(|e| e.phase == "compute")
+        .count();
+    assert_eq!(computes, cfg.workers * cfg.rounds, "one compute span per (worker, round)");
+    assert!(compute_us <= wall_us + 100_000);
+}
+
+#[test]
+fn kill_under_overlap_records_drain_recovery_spans() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    reset_obs();
+    let mut cfg = quick_cfg(3, 6, 32);
+    cfg.overlap = true;
+    cfg.trace = true;
+    cfg.faults.enabled = true;
+    cfg.faults.kill_rank = 1;
+    cfg.faults.kill_round = 2;
+    let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+    reset_obs();
+
+    assert_eq!(out.survivors, vec![0, 2]);
+    assert!(
+        out.recoveries.iter().any(|&(_, _, d)| d > 0),
+        "expected a drain commit, got {:?}",
+        out.recoveries
+    );
+    assert!(
+        out.trace_events.iter().any(|e| e.phase == "recovery.drain"),
+        "drain branch must leave a recovery.drain span"
+    );
+    // The coordinator's own 2PC spans made it into the merged timeline.
+    assert!(out
+        .trace_events
+        .iter()
+        .any(|e| e.cluster == obs::COORD && e.phase == "epoch.commit"));
+    // A churn timeline passes the validator WITH the recovery demand.
+    let doc = obj(vec![("traceEvents", chrome_trace_events(&out.trace_events))]);
+    validate_chrome_trace(&doc, true).unwrap();
+}
+
+#[test]
+fn soft_break_under_overlap_records_discard_spans() {
+    let _g = OBS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    reset_obs();
+    let mut cfg = quick_cfg(3, 6, 32);
+    cfg.overlap = true;
+    cfg.trace = true;
+    cfg.faults.enabled = true;
+    cfg.faults.break_rank = 1;
+    cfg.faults.break_round = 3;
+    let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+    reset_obs();
+
+    // A soft break keeps all members; recovery commits are discards.
+    assert_eq!(out.survivors, vec![0, 1, 2]);
+    assert!(out.recoveries.iter().all(|&(_, _, d)| d == 0));
+    assert!(
+        out.trace_events.iter().any(|e| e.phase == "recovery.discard"),
+        "discard branch must leave a recovery.discard span"
+    );
+    let doc = obj(vec![("traceEvents", chrome_trace_events(&out.trace_events))]);
+    validate_chrome_trace(&doc, true).unwrap();
+}
