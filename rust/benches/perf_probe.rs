@@ -5,7 +5,7 @@
 //! is on disk, and the tracing-overhead probe (a thread-mode elastic
 //! fleet run twice, traced off and on, asserting bit-identical results).
 //!
-//!     cargo bench --bench perf_probe -- --out BENCH_6.json
+//!     cargo bench --bench perf_probe -- --out BENCH_7.json --name BENCH_7
 //!
 //! Prints human-readable lines AND (with `--out`) writes one
 //! machine-readable JSON document (`schema: "dilocox-bench/v1"`) so CI
@@ -13,6 +13,17 @@
 //! timings vary with the machine, shapes and byte counts do not.
 //! Iterations are small (one shared CPU core); numbers are for relative
 //! tracking between optimization steps, not absolute benchmarking.
+//!
+//! Two diff modes over committed baselines (no benches run):
+//!
+//!     cargo bench --bench perf_probe -- --compare BENCH_6.json BENCH_7.json
+//!     cargo bench --bench perf_probe -- --check   BENCH_7.json BENCH_7.ci.json
+//!
+//! `--compare A B` prints per-section speedup ratios (A_ms / B_ms, so
+//! > 1.0x means B is faster).  `--check A B` is the CI regression gate:
+//! it exits 1 only when a *guarded* row (the ring and reducer timings —
+//! the hot paths this repo optimizes) regressed by more than 2x, so
+//! shared-runner noise on the unguarded rows never fails a build.
 
 use dilocox::comm::ring::build_ring;
 use dilocox::compress::{GroupReducer, Method};
@@ -33,11 +44,34 @@ fn main() {
     // Manual flag scan: cargo-bench appends its own arguments
     // (`--bench`), so tolerate anything we don't recognize.
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    let two_paths = |i: usize, flag: &str| -> (String, String) {
+        match (argv.get(i + 1), argv.get(i + 2)) {
+            (Some(a), Some(b)) => (a.clone(), b.clone()),
+            _ => {
+                eprintln!("{flag} needs two baseline paths: {flag} A.json B.json");
+                std::process::exit(2);
+            }
+        }
+    };
+    if let Some(i) = argv.iter().position(|a| a == "--compare") {
+        let (a, b) = two_paths(i, "--compare");
+        std::process::exit(compare_baselines(&a, &b, f64::INFINITY));
+    }
+    if let Some(i) = argv.iter().position(|a| a == "--check") {
+        let (a, b) = two_paths(i, "--check");
+        std::process::exit(compare_baselines(&a, &b, 2.0));
+    }
     let out_path = argv
         .iter()
         .position(|a| a == "--out")
         .and_then(|i| argv.get(i + 1))
         .cloned();
+    let name = argv
+        .iter()
+        .position(|a| a == "--name")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_7".to_string());
 
     let mut sections: Vec<(&str, Json)> = Vec::new();
     sections.push(("ring_allreduce", bench_ring()));
@@ -49,7 +83,7 @@ fn main() {
     if let Some(path) = out_path {
         let doc = obj(vec![
             ("schema", Json::Str("dilocox-bench/v1".to_string())),
-            ("bench", Json::Str("BENCH_6".to_string())),
+            ("bench", Json::Str(name)),
             ("seed", Json::Num(SEED as f64)),
             ("sections", Json::Obj(
                 sections
@@ -65,6 +99,135 @@ fn main() {
                 std::process::exit(1);
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline diffing (--compare / --check)
+// ---------------------------------------------------------------------------
+
+fn load_baseline(path: &str) -> Json {
+    let s = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("reading {path}: {e}");
+        std::process::exit(2);
+    });
+    let doc = Json::parse(&s).unwrap_or_else(|e| {
+        eprintln!("parsing {path}: {e}");
+        std::process::exit(2);
+    });
+    match doc.get("schema").and_then(Json::as_str) {
+        Some("dilocox-bench/v1") => doc,
+        other => {
+            eprintln!("{path}: not a dilocox-bench/v1 document ({other:?})");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Flatten a baseline into `(row key, milliseconds, guarded)` — guarded
+/// rows (ring + reducer, the optimized hot paths) are the only ones the
+/// `--check` gate fails on.
+fn baseline_metrics(doc: &Json) -> Vec<(String, f64, bool)> {
+    let mut out = Vec::new();
+    if let Some(rows) = doc.path("sections.ring_allreduce").and_then(Json::as_arr) {
+        for r in rows {
+            if let (Some(c), Some(e), Some(ms)) = (
+                r.get("members").and_then(Json::as_usize),
+                r.get("elems").and_then(Json::as_usize),
+                r.get("ms_per_op").and_then(Json::as_f64),
+            ) {
+                out.push((format!("ring_allreduce[C={c},{e}].ms_per_op"), ms, true));
+            }
+        }
+    }
+    if let Some(rows) = doc.path("sections.reduce").and_then(Json::as_arr) {
+        for r in rows {
+            if let (Some(m), Some(ms)) = (
+                r.get("method").and_then(Json::as_str),
+                r.get("ms_per_sync").and_then(Json::as_f64),
+            ) {
+                out.push((format!("reduce[{m}].ms_per_sync"), ms, true));
+            }
+        }
+    }
+    if let Some(ms) = doc.path("sections.des.ms_per_run").and_then(Json::as_f64) {
+        out.push(("des.ms_per_run".to_string(), ms, false));
+    }
+    if let Some(ms) = doc
+        .path("sections.step_single.ms_wall_per_call")
+        .and_then(Json::as_f64)
+    {
+        out.push(("step_single.ms_wall_per_call".to_string(), ms, false));
+    }
+    for k in ["off_secs", "on_secs"] {
+        if let Some(s) = doc
+            .path(&format!("sections.traced_overhead.{k}"))
+            .and_then(Json::as_f64)
+        {
+            out.push((format!("traced_overhead.{k}_ms"), s * 1e3, false));
+        }
+    }
+    out
+}
+
+/// Print the A-vs-B speedup table; with a finite `tolerance`, exit
+/// nonzero when any guarded row of B is more than `tolerance`x slower
+/// than A.
+fn compare_baselines(a_path: &str, b_path: &str, tolerance: f64) -> i32 {
+    let (a_doc, b_doc) = (load_baseline(a_path), load_baseline(b_path));
+    let a_name = a_doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .unwrap_or(a_path)
+        .to_string();
+    let b_name = b_doc
+        .get("bench")
+        .and_then(Json::as_str)
+        .unwrap_or(b_path)
+        .to_string();
+    let a = baseline_metrics(&a_doc);
+    let b = baseline_metrics(&b_doc);
+    println!(
+        "{:<44} {:>12} {:>12} {:>9}",
+        "section (ms)", a_name, b_name, "speedup"
+    );
+    let mut regressed: Vec<String> = Vec::new();
+    for (key, av, guarded) in &a {
+        let Some((_, bv, _)) = b.iter().find(|(k, _, _)| k == key) else {
+            println!("{key:<44} {av:>12.2} {:>12} {:>9}", "-", "-");
+            continue;
+        };
+        let speedup = av / bv; // > 1 ⇒ B is faster than A
+        let flag = if *guarded && *bv > av * tolerance {
+            regressed.push(key.clone());
+            "  REGRESSED"
+        } else {
+            ""
+        };
+        println!("{key:<44} {av:>12.2} {bv:>12.2} {speedup:>8.2}x{flag}");
+    }
+    for (key, bv, _) in &b {
+        if !a.iter().any(|(k, _, _)| k == key) {
+            println!("{key:<44} {:>12} {bv:>12.2} {:>9}", "-", "-");
+        }
+    }
+    if tolerance.is_finite() {
+        if regressed.is_empty() {
+            println!(
+                "check OK: no guarded section regressed past {tolerance:.1}x"
+            );
+            0
+        } else {
+            eprintln!(
+                "check FAILED: {} guarded section(s) regressed past \
+                 {tolerance:.1}x: {}",
+                regressed.len(),
+                regressed.join(", ")
+            );
+            1
+        }
+    } else {
+        0
     }
 }
 

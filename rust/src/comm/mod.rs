@@ -3,6 +3,7 @@
 //! cost model shared with the throughput simulator.  The TCP multi-process
 //! backend and fault injection live in [`crate::transport`].
 
+pub mod pool;
 pub mod ring;
 
 pub use crate::transport::RingTransport;

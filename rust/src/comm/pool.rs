@@ -1,0 +1,306 @@
+//! Persistent comm-thread pool: parked push-workers for the reduce hot
+//! path.
+//!
+//! Every overlapped round used to pay a `std::thread::spawn` (runtime
+//! stack setup + teardown) per reduction, and the TCP transport spawned a
+//! fresh writer thread per connection event.  This pool keeps those
+//! threads **parked between jobs**: a worker finishes a job, registers
+//! itself on the idle list, and blocks on its own channel until the next
+//! `submit` hands it work — the push-worker shape, with `mpsc::recv` as
+//! the parking primitive.
+//!
+//! Shape and guarantees:
+//!
+//! * **Cached, not fixed.** `submit` never queues behind a busy worker:
+//!   if no idle worker exists one is spawned.  Long-lived jobs (the TCP
+//!   writer loops park a worker for a whole connection) therefore cannot
+//!   deadlock short jobs.  The `cap` only bounds how many *idle* workers
+//!   stay parked — a worker that finishes when the parking lot is full
+//!   retires, so the pool converges back to `cap` threads after a burst.
+//! * **Blocking joins stay sound.** The pool itself never holds results;
+//!   callers pair a job with their own completion channel (see
+//!   `rounds::RingLane`), so "join the in-flight reduction" remains a
+//!   blocking `recv` with exactly the semantics of `JoinHandle::join` —
+//!   a parked pool thread never holds lane state past the join, and a
+//!   job that panics drops its sender, surfacing as the same error a
+//!   panicked comm thread would.
+//! * **Observable.** Each job carries its enqueue timestamp; the worker
+//!   records a detail-only `pool/queue.wait` trace event on pickup, so
+//!   `--trace` shows dispatch latency without perturbing the round
+//!   accounting (which only sums the well-known phases).
+//!
+//! The process-wide [`shared`] pool is what the fleet paths use; it is
+//! off (`enabled() == false`) until a worker's config asks for
+//! `transport.comm_pool_size ≥ 2`, so defaults preserve the historical
+//! spawn-per-round behavior.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex, OnceLock};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// What travels to a worker: the job plus its enqueue timestamp, so the
+/// worker can record the queue wait on its own trace track (clamped to
+/// its park time — events on one track must stay well-nested).
+type Dispatch = (u64, Job);
+
+struct Inner {
+    /// Parked workers, each reachable over its own job channel.
+    idle: Mutex<Vec<Sender<Dispatch>>>,
+    /// Max workers kept parked; excess workers retire on completion.
+    cap: AtomicUsize,
+    /// Threads currently alive (working or parked).
+    live: AtomicUsize,
+    /// Threads currently parked on their channel.
+    parked: AtomicUsize,
+    /// Threads ever spawned — a non-growing total across steady-state
+    /// epochs is the "no thread churn" probe the tests assert.
+    spawned_total: AtomicUsize,
+}
+
+/// A cached pool of parked comm worker threads.  See the module docs.
+pub struct CommPool {
+    inner: Arc<Inner>,
+}
+
+impl CommPool {
+    /// A pool keeping at most `cap` workers parked (min 1).
+    pub fn new(cap: usize) -> CommPool {
+        CommPool {
+            inner: Arc::new(Inner {
+                idle: Mutex::new(Vec::new()),
+                cap: AtomicUsize::new(cap.max(1)),
+                live: AtomicUsize::new(0),
+                parked: AtomicUsize::new(0),
+                spawned_total: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// Raise/lower the parked-worker cap (monotonic growth is typical:
+    /// every fleet worker calls [`configure`] with its own knob).
+    pub fn set_cap(&self, cap: usize) {
+        self.inner.cap.store(cap.max(1), Ordering::SeqCst);
+    }
+
+    /// Run `f` on a pool worker: an idle worker is woken, or a new one
+    /// spawned — `submit` never queues behind a busy worker.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let enqueued = crate::obs::now_us();
+        let job: Job = Box::new(f);
+        let slot = self.inner.idle.lock().unwrap().pop();
+        match slot {
+            Some(tx) => {
+                self.inner.parked.fetch_sub(1, Ordering::SeqCst);
+                if let Err(e) = tx.send((enqueued, job)) {
+                    // The worker died between parking and dispatch
+                    // (defensive — the loop below never does): recover
+                    // the job and run it on a fresh worker.
+                    self.spawn_worker(e.0);
+                }
+            }
+            None => self.spawn_worker((enqueued, job)),
+        }
+    }
+
+    /// Threads currently alive (working or parked).
+    pub fn live_threads(&self) -> usize {
+        self.inner.live.load(Ordering::SeqCst)
+    }
+
+    /// Threads currently parked waiting for work.
+    pub fn parked_threads(&self) -> usize {
+        self.inner.parked.load(Ordering::SeqCst)
+    }
+
+    /// Threads ever spawned by this pool.
+    pub fn spawned_total(&self) -> usize {
+        self.inner.spawned_total.load(Ordering::SeqCst)
+    }
+
+    /// Drop every parked worker's channel so they retire (tests; the
+    /// shared pool lives for the process).
+    pub fn drain_idle(&self) {
+        self.inner.idle.lock().unwrap().clear();
+    }
+
+    fn spawn_worker(&self, first: Dispatch) {
+        let inner = Arc::clone(&self.inner);
+        inner.live.fetch_add(1, Ordering::SeqCst);
+        inner.spawned_total.fetch_add(1, Ordering::SeqCst);
+        std::thread::spawn(move || {
+            // Decrement `live` even if a job panics and unwinds us.
+            struct LiveGuard(Arc<Inner>);
+            impl Drop for LiveGuard {
+                fn drop(&mut self) {
+                    self.0.live.fetch_sub(1, Ordering::SeqCst);
+                }
+            }
+            let guard = LiveGuard(inner);
+            let inner = &guard.0;
+            let (tx, rx) = channel::<Dispatch>();
+            let mut dispatch = Some(first);
+            // When this worker last became able to take work — clamps
+            // the queue-wait event so it can never overlap the previous
+            // job's spans on this thread's trace track.  0 for the first
+            // dispatch: a fresh thread has no prior spans, so the full
+            // enqueue→pickup wait (including spawn latency) is safe.
+            let mut ready_at = 0u64;
+            loop {
+                if let Some((enqueued, job)) = dispatch.take() {
+                    crate::obs::event_since(
+                        "pool",
+                        "queue.wait",
+                        enqueued.max(ready_at),
+                        0,
+                    );
+                    job();
+                }
+                {
+                    let mut idle = inner.idle.lock().unwrap();
+                    if idle.len() >= inner.cap.load(Ordering::SeqCst) {
+                        break; // parking lot full — retire
+                    }
+                    idle.push(tx.clone());
+                }
+                ready_at = crate::obs::now_us();
+                inner.parked.fetch_add(1, Ordering::SeqCst);
+                match rx.recv() {
+                    // A successful dispatch already un-counted us.
+                    Ok(d) => dispatch = Some(d),
+                    Err(_) => {
+                        // drain_idle dropped our channel: retire.
+                        inner.parked.fetch_sub(1, Ordering::SeqCst);
+                        break;
+                    }
+                }
+            }
+        });
+    }
+}
+
+static SHARED: OnceLock<CommPool> = OnceLock::new();
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+/// The process-wide pool used by the fleet paths (RingLane flights, TCP
+/// writer loops).  Always constructible; whether hot paths *route* onto
+/// it is gated by [`enabled`].
+pub fn shared() -> &'static CommPool {
+    SHARED.get_or_init(|| CommPool::new(2))
+}
+
+/// Record a worker's `transport.comm_pool_size` knob.  Monotonic max
+/// across callers (thread-mode fleets share the process); a size ≥ 2
+/// turns [`enabled`] on for pool-gated paths like the TCP writers.
+pub fn configure(size: usize) {
+    CONFIGURED.fetch_max(size, Ordering::SeqCst);
+    let cap = CONFIGURED.load(Ordering::SeqCst).max(2);
+    shared().set_cap(cap);
+}
+
+/// Has any worker in this process asked for the pool (size ≥ 2)?
+pub fn enabled() -> bool {
+    CONFIGURED.load(Ordering::SeqCst) >= 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+
+    fn spin_until(what: &str, f: impl Fn() -> bool) {
+        let t0 = Instant::now();
+        while !f() {
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "timed out waiting for {what}"
+            );
+            std::thread::yield_now();
+        }
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_one_parked_thread() {
+        // The whole point of the pool: a round-per-round cadence (submit,
+        // join, train, submit …) must not spawn a thread per round.
+        let pool = CommPool::new(2);
+        for i in 0..10u32 {
+            let (tx, rx) = mpsc::channel();
+            pool.submit(move || tx.send(i).unwrap());
+            assert_eq!(rx.recv().unwrap(), i);
+            // Wait for the worker to park again before the next round —
+            // exactly the lane's join-then-begin cadence.
+            spin_until("worker parked", || pool.parked_threads() == 1);
+        }
+        assert_eq!(pool.spawned_total(), 1, "thread churn across rounds");
+        assert_eq!(pool.live_threads(), 1);
+    }
+
+    #[test]
+    fn queue_contention_burst_converges_back_to_cap() {
+        // Many small concurrent jobs: everything runs (nothing queues
+        // behind a busy worker), and after the burst the pool retires
+        // down to `cap` parked threads — no leak across "epochs".
+        let pool = CommPool::new(3);
+        let ran = Arc::new(AtomicUsize::new(0));
+        for _epoch in 0..4 {
+            let (tx, rx) = mpsc::channel();
+            for _ in 0..32 {
+                let ran = Arc::clone(&ran);
+                let tx = tx.clone();
+                pool.submit(move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                    tx.send(()).unwrap();
+                });
+            }
+            drop(tx);
+            for _ in 0..32 {
+                rx.recv().unwrap();
+            }
+            // Excess workers retire once the parking lot is full.
+            spin_until("pool quiesced to cap", || {
+                pool.live_threads() <= 3 && pool.parked_threads() <= 3
+            });
+        }
+        assert_eq!(ran.load(Ordering::SeqCst), 4 * 32);
+        // Steady state after epoch 1: bursts reuse the parked cap
+        // workers plus at most (burst − cap) fresh ones per burst; the
+        // leak signature this guards against is live_threads growing
+        // per epoch, checked by the quiesce above.
+        assert!(pool.live_threads() >= 1);
+    }
+
+    #[test]
+    fn drain_idle_retires_parked_workers() {
+        let pool = CommPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        pool.submit(move || tx.send(()).unwrap());
+        rx.recv().unwrap();
+        spin_until("worker parked", || pool.parked_threads() == 1);
+        pool.drain_idle();
+        spin_until("workers retired", || pool.live_threads() == 0);
+        assert_eq!(pool.parked_threads(), 0);
+    }
+
+    #[test]
+    fn panicked_job_does_not_leak_live_count() {
+        let pool = CommPool::new(1);
+        pool.submit(|| panic!("job panic"));
+        spin_until("panicked worker reaped", || pool.live_threads() == 0);
+        // The pool recovers: the next job spawns a fresh worker.
+        let (tx, rx) = mpsc::channel();
+        pool.submit(move || tx.send(7u8).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn shared_pool_configure_is_monotonic() {
+        assert!(shared().live_threads() < 10_000); // constructible
+        configure(1);
+        configure(3);
+        configure(2); // must not shrink below 3
+        assert!(enabled());
+    }
+}

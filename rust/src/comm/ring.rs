@@ -24,6 +24,9 @@ pub struct RingMember {
     pub tx_next: Sender<Vec<f32>>,
     pub rx_prev: Receiver<Vec<f32>>,
     pub meter: Arc<ByteMeter>,
+    /// Spent chunk buffers handed back by the collective via `recycle`;
+    /// `send_next` drains this instead of allocating per hop.
+    pool: Vec<Vec<f32>>,
 }
 
 /// Build a ring of `size` members (move each into its worker thread).
@@ -45,6 +48,7 @@ pub fn build_ring(size: usize) -> Vec<RingMember> {
             tx_next: txs[(rank + 1) % size].clone(),
             rx_prev: rxs[rank].take().unwrap(),
             meter: Arc::clone(&meter),
+            pool: Vec::new(),
         });
     }
     members
@@ -60,8 +64,14 @@ impl RingTransport for RingMember {
     }
 
     fn send_next(&mut self, chunk: &[f32]) -> anyhow::Result<()> {
+        // Reuse a recycled buffer when one is available: the ring hot
+        // path then circulates a fixed set of chunk buffers instead of
+        // allocating one per hop.
+        let mut buf = self.pool.pop().unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(chunk);
         self.tx_next
-            .send(chunk.to_vec())
+            .send(buf)
             .map_err(|_| anyhow!("ring peer hung up (send)"))
     }
 
@@ -69,6 +79,12 @@ impl RingTransport for RingMember {
         self.rx_prev
             .recv()
             .map_err(|_| anyhow!("ring peer hung up (recv)"))
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        if self.pool.len() < 4 {
+            self.pool.push(buf);
+        }
     }
 
     fn meter(&self) -> &ByteMeter {

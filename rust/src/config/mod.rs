@@ -150,6 +150,17 @@ pub struct TransportConfig {
     /// Validation: when set, the base must be ≥ 1024 and the whole
     /// `2·dp·pp` block must fit below 65536.
     pub stage_listen_base_port: u16,
+    /// Persistent comm-thread pool size (see [`crate::comm::pool`]).
+    /// 1 (the default) keeps the historical spawn-per-round comm threads;
+    /// ≥ 2 parks overlapped-reduce flights and TCP writer loops on the
+    /// shared pool instead.  Must be ≥ 1.
+    pub comm_pool_size: usize,
+    /// Reduce-pipeline depth (see
+    /// [`crate::rounds::WireCompressor::set_pipeline_depth`]).  1 (the
+    /// default) runs the sequential per-entry reduce; ≥ 2 projects and
+    /// quantizes entry k+1 while entry k's ring passes are on the wire.
+    /// Results stay bit-for-bit identical at any depth.  Must be ≥ 1.
+    pub pipeline_depth: usize,
 }
 
 impl Default for TransportConfig {
@@ -159,6 +170,8 @@ impl Default for TransportConfig {
             ring_timeout_ms: 5000,
             connect_timeout_ms: 5000,
             stage_listen_base_port: 0,
+            comm_pool_size: 1,
+            pipeline_depth: 1,
         }
     }
 }
@@ -411,6 +424,8 @@ impl ExperimentConfig {
             }
             cfg.transport.stage_listen_base_port = x as u16;
         }
+        set_usize!("transport.comm_pool_size", cfg.transport.comm_pool_size);
+        set_usize!("transport.pipeline_depth", cfg.transport.pipeline_depth);
         set_bool!("faults.enabled", cfg.faults.enabled);
         if let Some(x) = v.path("faults.seed").and_then(|j| j.as_usize()) {
             cfg.faults.seed = x as u64;
@@ -468,6 +483,16 @@ impl ExperimentConfig {
         if self.transport.ring_timeout_ms == 0 || self.transport.connect_timeout_ms == 0
         {
             return Err(anyhow!("transport timeouts must be >= 1 ms"));
+        }
+        if self.transport.comm_pool_size == 0 {
+            return Err(anyhow!(
+                "transport.comm_pool_size must be >= 1 (1 = pool off)"
+            ));
+        }
+        if self.transport.pipeline_depth == 0 {
+            return Err(anyhow!(
+                "transport.pipeline_depth must be >= 1 (1 = sequential reduce)"
+            ));
         }
         if !(0.0..=1.0).contains(&self.faults.delay_prob) {
             return Err(anyhow!("faults.delay_prob must be in [0, 1]"));
@@ -634,6 +659,8 @@ dp = 3
 backend = "tcp"
 ring_timeout_ms = 750
 connect_timeout_ms = 1500
+comm_pool_size = 4
+pipeline_depth = 3
 [faults]
 enabled = true
 seed = 42
@@ -649,6 +676,8 @@ straggler_ms = 5
         assert_eq!(cfg.transport.backend, TransportBackend::Tcp);
         assert_eq!(cfg.transport.ring_timeout_ms, 750);
         assert_eq!(cfg.transport.connect_timeout_ms, 1500);
+        assert_eq!(cfg.transport.comm_pool_size, 4);
+        assert_eq!(cfg.transport.pipeline_depth, 3);
         assert!(cfg.faults.enabled);
         assert_eq!(cfg.faults.seed, 42);
         assert!((cfg.faults.delay_prob - 0.25).abs() < 1e-12);
@@ -658,9 +687,12 @@ straggler_ms = 5
         assert_eq!(cfg.faults.straggler_rank, 2);
         assert_eq!(cfg.faults.straggler_ms, 5);
 
-        // Defaults when the sections are absent.
+        // Defaults when the sections are absent: pool and pipeline off
+        // (historical behavior preserved).
         let d = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
         assert_eq!(d.transport.backend, TransportBackend::Local);
+        assert_eq!(d.transport.comm_pool_size, 1);
+        assert_eq!(d.transport.pipeline_depth, 1);
         assert!(!d.faults.enabled);
     }
 
@@ -699,6 +731,14 @@ dir = "traces/run1"
 
         let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
         cfg.transport.ring_timeout_ms = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.transport.comm_pool_size = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.transport.pipeline_depth = 0;
         assert!(cfg.validate().is_err());
     }
 

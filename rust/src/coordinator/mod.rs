@@ -270,8 +270,11 @@ fn worker_main(
         cfg.train.overlap,
         cfg.compression.error_feedback,
     );
-    let lane =
+    crate::comm::pool::configure(cfg.transport.comm_pool_size);
+    let mut lane =
         RingLane::new(member, method, cfg.train.seed, spec, cfg.train.overlap);
+    lane.set_pipeline_depth(cfg.transport.pipeline_depth);
+    lane.set_use_pool(cfg.transport.comm_pool_size >= 2);
     let h = cfg.train.local_steps;
 
     let mut driver =
@@ -338,6 +341,8 @@ pub fn run_threaded_pp(
         error_feedback: cfg.compression.error_feedback,
         method,
         seed: cfg.train.seed,
+        comm_pool_size: cfg.transport.comm_pool_size,
+        pipeline_depth: cfg.transport.pipeline_depth,
     };
     let out = run_pipeline(&workload, dp, rings, &opts)?;
 

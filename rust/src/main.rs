@@ -550,6 +550,8 @@ fn cmd_worker(argv: &[String]) -> i32 {
     .opt("artifacts", "", "artifact dir (runtime workload)")
     .opt("ring-timeout-ms", "5000", "ring socket timeout")
     .opt("connect-timeout-ms", "5000", "ring formation deadline")
+    .opt("comm-pool", "1", "persistent comm-thread pool size (1 = off)")
+    .opt("pipeline-depth", "1", "reduce pipeline depth (1 = sequential)")
     .flag("overlap", "one-step-delay overlap of comm and local training (§2.3)")
     .flag("trace", "record trace spans and ship them to the coordinator")
     .opt("trace-dir", "", "also tee trace batches to <dir>/<role>.jsonl")
@@ -678,6 +680,8 @@ fn worker_opts_from_args(args: &dilocox::util::cli::Args) -> Result<WorkerOpts, 
         overlap: args.flag("overlap"),
         ring_timeout_ms: args.get_u64("ring-timeout-ms")?,
         connect_timeout_ms: args.get_u64("connect-timeout-ms")?,
+        comm_pool_size: args.get_usize("comm-pool")?.max(1),
+        pipeline_depth: args.get_usize("pipeline-depth")?.max(1),
         faults: if plan.is_quiet() { None } else { Some(plan) },
     })
 }

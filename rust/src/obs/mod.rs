@@ -354,6 +354,37 @@ fn span_live(target: &'static str, phase: &'static str, ctx: Ctx) -> Span {
     }
 }
 
+/// Record a completed event whose start was captured earlier with
+/// [`now_us`] — for waits that straddle a thread boundary (e.g. the comm
+/// pool's queue wait: enqueue happens on the submitter, pickup on the
+/// worker), where no RAII [`Span`] can live on one thread.  The event is
+/// recorded on the *calling* thread's track under its current context.
+/// Detail-only phases (anything outside the accounting set) are safe
+/// here; their durations never enter the round accounting sums.
+pub fn event_since(
+    target: &'static str,
+    phase: &'static str,
+    start_us: u64,
+    bytes: u64,
+) {
+    if !enabled() {
+        return;
+    }
+    let ctx = scope();
+    push(TraceEvent {
+        cluster: ctx.cluster,
+        stage: ctx.stage,
+        epoch: ctx.epoch,
+        round: ctx.round,
+        tid: tid(),
+        start_us,
+        dur_us: now_us().saturating_sub(start_us),
+        bytes,
+        target: target.to_string(),
+        phase: phase.to_string(),
+    });
+}
+
 /// Record an instant event (zero duration) under the current context.
 pub fn event(target: &'static str, phase: &'static str, bytes: u64) {
     if !enabled() {

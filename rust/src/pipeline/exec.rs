@@ -151,6 +151,12 @@ pub struct PipelineRunOpts {
     /// AllReduce-compatible wire compression for the per-stage rings.
     pub method: Method,
     pub seed: u64,
+    /// Persistent comm-thread pool size (1 = spawn-per-round, the
+    /// historical behavior).  See [`crate::comm::pool`].
+    pub comm_pool_size: usize,
+    /// Reduce pipeline depth (1 = sequential per-entry reduce).  See
+    /// [`crate::rounds::WireCompressor::set_pipeline_depth`].
+    pub pipeline_depth: usize,
 }
 
 impl Default for PipelineRunOpts {
@@ -166,6 +172,8 @@ impl Default for PipelineRunOpts {
             error_feedback: false,
             method: Method::None,
             seed: 1234,
+            comm_pool_size: 1,
+            pipeline_depth: 1,
         }
     }
 }
@@ -734,8 +742,11 @@ fn stage_main(
     let stage_seed =
         opts.seed ^ (stage as u64).wrapping_mul(0x9e3779b97f4a7c15);
     let spec = compute.param_spec();
-    let lane =
+    crate::comm::pool::configure(opts.comm_pool_size);
+    let mut lane =
         RingLane::new(ring, opts.method.clone(), stage_seed, spec, opts.overlap);
+    lane.set_pipeline_depth(opts.pipeline_depth);
+    lane.set_use_pool(opts.comm_pool_size >= 2);
 
     let mut work =
         StageStepWork { compute, stream, link, params, inner, micros };
@@ -1040,6 +1051,8 @@ mod tests {
             error_feedback: false,
             method: Method::None,
             seed: 1234,
+            comm_pool_size: 1,
+            pipeline_depth: 1,
         }
     }
 

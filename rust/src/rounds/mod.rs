@@ -311,16 +311,52 @@ pub struct WireCompressor {
     method: Method,
     seed: u64,
     bases: HashMap<String, Mat>,
+    /// Software-pipeline depth for the low-rank path: ≤ 1 reduces each
+    /// ring pass strictly in sequence (the historical behavior), ≥ 2
+    /// projects/quantizes entry k+1 on the caller's thread while entry
+    /// k's ring pass is on the wire.  Must be identical on every ring
+    /// member — the wire-op order is a pure function of (spec, depth).
+    pipeline_depth: usize,
+    /// Reusable scratch for the 1-D segment path (and recycled wire
+    /// buffers in the pipelined path) — kills a per-entry-per-round
+    /// allocation on the hot path.
+    scratch: Vec<Vec<f32>>,
 }
 
 impl WireCompressor {
     pub fn new(method: Method, seed: u64) -> Self {
-        WireCompressor { method, seed, bases: HashMap::new() }
+        WireCompressor {
+            method,
+            seed,
+            bases: HashMap::new(),
+            pipeline_depth: 1,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Set the low-rank software-pipeline depth (see
+    /// [`Self::lowrank_reduce`]); ≤ 1 preserves the sequential behavior.
+    pub fn set_pipeline_depth(&mut self, depth: usize) {
+        self.pipeline_depth = depth;
     }
 
     /// Cached low-rank base for a parameter (tests / inspection).
     pub fn base(&self, name: &str) -> Option<&Mat> {
         self.bases.get(name)
+    }
+
+    /// Pop a recycled buffer (cleared) or allocate a fresh one.
+    fn take_scratch(&mut self) -> Vec<f32> {
+        let mut b = self.scratch.pop().unwrap_or_default();
+        b.clear();
+        b
+    }
+
+    /// Return a spent buffer to the scratch pool (bounded).
+    fn put_scratch(&mut self, buf: Vec<f32>) {
+        if self.scratch.len() < 8 {
+            self.scratch.push(buf);
+        }
     }
 
     /// Reduce `delta` across the ring in place (result = global mean of
@@ -336,7 +372,9 @@ impl WireCompressor {
         spec: &[ParamEntry],
         step: u64,
     ) -> Result<u64> {
-        match self.method.clone() {
+        // Match on a reference — the method is only read, never consumed,
+        // and this runs once per ring pass on the hot path.
+        match &self.method {
             Method::None => {
                 let payload = 4 * delta.len() as u64;
                 let _w = crate::obs::span("wire", "allreduce").bytes(payload);
@@ -344,6 +382,7 @@ impl WireCompressor {
                 Ok(payload)
             }
             Method::Quant { q_bits } => {
+                let q_bits = *q_bits;
                 {
                     let _c = crate::obs::span("compress", "compress.quant");
                     quantize::quantize_dequantize(delta, q_bits);
@@ -354,7 +393,14 @@ impl WireCompressor {
                 Ok(payload)
             }
             Method::LowRankQuant { rank, q_bits } => {
-                self.lowrank_reduce(member, delta, spec, step, rank, q_bits)
+                let (rank, q_bits) = (*rank, *q_bits);
+                if self.pipeline_depth > 1 && spec.len() > 1 {
+                    self.lowrank_reduce_pipelined(
+                        member, delta, spec, step, rank, q_bits,
+                    )
+                } else {
+                    self.lowrank_reduce(member, delta, spec, step, rank, q_bits)
+                }
             }
             other => Err(anyhow!(
                 "method {:?} is not AllReduce-compatible (ring path)",
@@ -442,17 +488,22 @@ impl WireCompressor {
                     let _c = crate::obs::span("compress", "compress.quant");
                     quantize::quantize_dequantize(&mut qn.data, q_bits);
                 }
-                self.bases.insert(entry.name.clone(), qn.clone());
                 let rec = {
                     let _c = crate::obs::span("compress", "compress.project");
                     matmul_bt(&p, &qn)
                 };
+                // The reconstruction is done with qn, so the base cache
+                // takes it by move — no clone on the hot path.
+                self.bases.insert(entry.name.clone(), qn);
                 delta[lo..hi].copy_from_slice(&rec.data);
             } else {
                 // 1-D segment: ring-mean, then snap to the q-bit grid —
                 // the same order as compress::lowrank so the threaded and
                 // reference paths agree bit-for-bit (up to ring fp order).
-                let mut seg = delta[lo..hi].to_vec();
+                // The staging buffer is recycled across entries and
+                // rounds instead of reallocated per segment.
+                let mut seg = self.take_scratch();
+                seg.extend_from_slice(&delta[lo..hi]);
                 {
                     let _w = crate::obs::span("wire", "allreduce")
                         .bytes(pass_bytes(hi - lo));
@@ -465,8 +516,267 @@ impl WireCompressor {
                 payload_elems += hi - lo;
                 scales += 1;
                 delta[lo..hi].copy_from_slice(&seg);
+                self.put_scratch(seg);
             }
         }
+        Ok((payload_elems as u64 * bits + 7) / 8 + 4 * scales as u64)
+    }
+
+    /// The two-lane software pipeline behind `pipeline_depth ≥ 2`: the
+    /// caller's thread (the compute lane) projects/quantizes parameter
+    /// entry k+1 while entry k's ring pass is on the wire, connected by a
+    /// bounded channel to a scoped wire thread that runs the collectives
+    /// strictly in submission order.
+    ///
+    /// Correctness: entries are mutually independent (per-entry bases,
+    /// per-entry seeding), so per-entry numerics are byte-identical to
+    /// the sequential path; the wire-op *order* differs from sequential
+    /// at depth ≥ 2 but is a pure deterministic function of
+    /// (spec, depth), so every ring member — which shares both via
+    /// config — lines its collectives up.  Results, payload bytes, and
+    /// the per-member wire ledger are bit-for-bit equal to the
+    /// sequential reference (regression-tested on all three backends).
+    #[allow(clippy::too_many_arguments)]
+    fn lowrank_reduce_pipelined(
+        &mut self,
+        member: &mut dyn RingTransport,
+        delta: &mut [f32],
+        spec: &[ParamEntry],
+        step: u64,
+        rank: usize,
+        q_bits: u32,
+    ) -> Result<u64> {
+        struct WireJob {
+            buf: Vec<f32>,
+            bytes: u64,
+        }
+        /// An op whose ring pass is in flight, FIFO with the channel.
+        enum Op {
+            /// P = M·Q on the wire; completion quantizes/orthonormalizes
+            /// P̂ and submits pass 2.
+            Pass1 { idx: usize, mslab: Mat, r: usize },
+            /// Q' = Mᵀ·P̂ on the wire; completion reconstructs the entry.
+            Pass2 { idx: usize, p: Mat, r: usize },
+            /// A 1-D segment mean on the wire.
+            Seg { idx: usize },
+        }
+
+        let depth = self.pipeline_depth;
+        let bits = if q_bits == 0 { 32 } else { q_bits } as u64;
+        let pass_bytes = |elems: usize| (elems as u64 * bits + 7) / 8 + 4;
+        let (op_tx, op_rx) = std::sync::mpsc::sync_channel::<WireJob>(depth);
+        let (res_tx, res_rx) = std::sync::mpsc::channel::<Result<Vec<f32>>>();
+        let ctx = crate::obs::scope();
+
+        let (payload_elems, scales) =
+            std::thread::scope(|s| -> Result<(usize, usize)> {
+                s.spawn(move || {
+                    // The wire lane inherits the compute lane's trace
+                    // context so its allreduce spans attribute to the
+                    // right (cluster, stage, epoch, round).
+                    crate::obs::set_ctx(ctx);
+                    while let Ok(mut job) = op_rx.recv() {
+                        let res = {
+                            let _w = crate::obs::span("wire", "allreduce")
+                                .bytes(job.bytes);
+                            member.allreduce_mean(&mut job.buf)
+                        };
+                        match res {
+                            Ok(()) => {
+                                if res_tx.send(Ok(job.buf)).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(e) => {
+                                let _ = res_tx.send(Err(e));
+                                break;
+                            }
+                        }
+                    }
+                });
+
+                let submit = |job: WireJob| -> Result<()> {
+                    if op_tx.send(job).is_err() {
+                        // The wire lane died; surface its error.
+                        return Err(match res_rx.recv() {
+                            Ok(Err(e)) => e,
+                            _ => anyhow!("reduce wire lane hung up"),
+                        });
+                    }
+                    Ok(())
+                };
+
+                let mut queue: std::collections::VecDeque<Op> =
+                    std::collections::VecDeque::new();
+                let mut next = 0usize;
+                let mut payload_elems = 0usize;
+                let mut scales = 0usize;
+                loop {
+                    // Fill: submit the first ring pass of upcoming
+                    // entries until the pipeline is `depth` deep.  The
+                    // submission sequence is a pure function of
+                    // (spec, depth) — no timing-dependent choices.
+                    while queue.len() < depth && next < spec.len() {
+                        let entry = &spec[next];
+                        let lo = entry.offset;
+                        let hi = entry.offset + entry.numel();
+                        if entry.shape.len() == 2 {
+                            let (rows, cols) = (entry.shape[0], entry.shape[1]);
+                            let r = lowrank::effective_rank(rank, rows, cols);
+                            let q = self
+                                .bases
+                                .entry(entry.name.clone())
+                                .or_insert_with(|| {
+                                    let mut rng = Pcg32::new(
+                                        self.seed ^ fnv(&entry.name),
+                                        step,
+                                    );
+                                    let mut m = Mat::zeros(cols, r);
+                                    rng.fill_normal(&mut m.data, 0.0, 1.0);
+                                    m
+                                });
+                            if q.cols != r {
+                                let mut rng = Pcg32::new(
+                                    self.seed ^ fnv(&entry.name),
+                                    step,
+                                );
+                                let mut m = Mat::zeros(cols, r);
+                                for i in 0..cols {
+                                    for j in 0..r {
+                                        m.data[i * r + j] = if j < q.cols {
+                                            q.data[i * q.cols + j]
+                                        } else {
+                                            rng.normal()
+                                        };
+                                    }
+                                }
+                                *q = m;
+                            }
+                            let mslab =
+                                Mat::from_slice(rows, cols, &delta[lo..hi]);
+                            let p = {
+                                let _c = crate::obs::span(
+                                    "compress",
+                                    "compress.project",
+                                );
+                                matmul(&mslab, q)
+                            };
+                            submit(WireJob {
+                                buf: p.data,
+                                bytes: pass_bytes(rows * r),
+                            })?;
+                            queue.push_back(Op::Pass1 { idx: next, mslab, r });
+                        } else {
+                            let mut seg = self.take_scratch();
+                            seg.extend_from_slice(&delta[lo..hi]);
+                            submit(WireJob {
+                                buf: seg,
+                                bytes: pass_bytes(hi - lo),
+                            })?;
+                            queue.push_back(Op::Seg { idx: next });
+                        }
+                        next += 1;
+                    }
+                    // Drain: results arrive in submission order.
+                    let Some(op) = queue.pop_front() else { break };
+                    let buf = match res_rx.recv() {
+                        Ok(Ok(b)) => b,
+                        Ok(Err(e)) => return Err(e),
+                        Err(_) => {
+                            return Err(anyhow!("reduce wire lane hung up"))
+                        }
+                    };
+                    match op {
+                        Op::Pass1 { idx, mslab, r } => {
+                            let entry = &spec[idx];
+                            let (rows, cols) =
+                                (entry.shape[0], entry.shape[1]);
+                            payload_elems += rows * r;
+                            scales += 1;
+                            let mut p = Mat { rows, cols: r, data: buf };
+                            {
+                                let _c = crate::obs::span(
+                                    "compress",
+                                    "compress.quant",
+                                );
+                                if q_bits > 0 && q_bits < 32 {
+                                    quantize::quantize_dequantize(
+                                        &mut p.data,
+                                        q_bits,
+                                    );
+                                }
+                                orthonormalize_columns(&mut p);
+                            }
+                            let qn = {
+                                let _c = crate::obs::span(
+                                    "compress",
+                                    "compress.project",
+                                );
+                                matmul_at_b(&mslab, &p)
+                            };
+                            submit(WireJob {
+                                buf: qn.data,
+                                bytes: pass_bytes(cols * r),
+                            })?;
+                            self.put_scratch(mslab.data);
+                            queue.push_back(Op::Pass2 { idx, p, r });
+                        }
+                        Op::Pass2 { idx, p, r } => {
+                            let entry = &spec[idx];
+                            let cols = entry.shape[1];
+                            payload_elems += cols * r;
+                            scales += 1;
+                            let mut qn =
+                                Mat { rows: cols, cols: r, data: buf };
+                            if q_bits > 0 && q_bits < 32 {
+                                let _c = crate::obs::span(
+                                    "compress",
+                                    "compress.quant",
+                                );
+                                quantize::quantize_dequantize(
+                                    &mut qn.data,
+                                    q_bits,
+                                );
+                            }
+                            let rec = {
+                                let _c = crate::obs::span(
+                                    "compress",
+                                    "compress.project",
+                                );
+                                matmul_bt(&p, &qn)
+                            };
+                            let lo = entry.offset;
+                            let hi = entry.offset + entry.numel();
+                            delta[lo..hi].copy_from_slice(&rec.data);
+                            self.bases.insert(entry.name.clone(), qn);
+                            self.put_scratch(p.data);
+                            self.put_scratch(rec.data);
+                        }
+                        Op::Seg { idx } => {
+                            let entry = &spec[idx];
+                            let lo = entry.offset;
+                            let hi = entry.offset + entry.numel();
+                            let mut seg = buf;
+                            if q_bits > 0 && q_bits < 32 {
+                                let _c = crate::obs::span(
+                                    "compress",
+                                    "compress.quant",
+                                );
+                                quantize::quantize_dequantize(
+                                    &mut seg, q_bits,
+                                );
+                            }
+                            payload_elems += hi - lo;
+                            scales += 1;
+                            delta[lo..hi].copy_from_slice(&seg);
+                            self.put_scratch(seg);
+                        }
+                    }
+                }
+                drop(submit);
+                drop(op_tx); // wire lane exits; the scope joins it
+                Ok((payload_elems, scales))
+            })?;
         Ok((payload_elems as u64 * bits + 7) / 8 + 4 * scales as u64)
     }
 }
@@ -484,8 +794,29 @@ pub(crate) fn fnv(s: &str) -> u64 {
 // RingLane: a single-lane DeltaReducer over a ring transport
 // ---------------------------------------------------------------------------
 
-type Flight =
-    std::thread::JoinHandle<Result<(Box<dyn RingTransport>, WireCompressor, Vec<f32>, u64)>>;
+type FlightResult =
+    Result<(Box<dyn RingTransport>, WireCompressor, Vec<f32>, u64)>;
+
+/// An overlapped reduction in flight: either its own spawned comm thread
+/// (the historical shape) or a job on the persistent comm pool, joined
+/// through a completion channel.  Both joins are blocking and total — a
+/// parked pool thread never holds lane state past the join.
+enum Flight {
+    Thread(std::thread::JoinHandle<FlightResult>),
+    Pooled(std::sync::mpsc::Receiver<FlightResult>),
+}
+
+impl Flight {
+    /// Block until the reduction finishes; `None` means the comm thread
+    /// panicked (or the pool worker died), which callers treat exactly
+    /// like a failed reduction.
+    fn join(self) -> Option<FlightResult> {
+        match self {
+            Flight::Thread(h) => h.join().ok(),
+            Flight::Pooled(rx) => rx.recv().ok(),
+        }
+    }
+}
 
 /// One worker's (or one stage executor's) reducing lane: owns the ring
 /// transport and the wire compressor, and realizes the engine's overlap
@@ -523,6 +854,12 @@ pub struct RingLane {
     pub wire_last: u64,
     /// Cumulative payload bytes over the lane's lifetime.
     pub wire_total: u64,
+    /// Low-rank software-pipeline depth applied to the compressor
+    /// (1 = sequential; survives reseeds).
+    pipeline_depth: usize,
+    /// Run overlapped reductions on the persistent comm pool instead of
+    /// spawning a thread per round.
+    use_pool: bool,
 }
 
 impl RingLane {
@@ -545,6 +882,8 @@ impl RingLane {
             pending_fault: None,
             wire_last: 0,
             wire_total: 0,
+            pipeline_depth: 1,
+            use_pool: false,
         }
     }
 
@@ -568,7 +907,27 @@ impl RingLane {
             pending_fault: None,
             wire_last: 0,
             wire_total: 0,
+            pipeline_depth: 1,
+            use_pool: false,
         }
+    }
+
+    /// Set the compressor's low-rank pipeline depth (≤ 1 = sequential).
+    /// Must be set identically on every ring member; sticks across
+    /// [`Self::reseed`].
+    pub fn set_pipeline_depth(&mut self, depth: usize) {
+        self.pipeline_depth = depth.max(1);
+        if let Some(c) = self.compressor.as_mut() {
+            c.set_pipeline_depth(self.pipeline_depth);
+        }
+    }
+
+    /// Run overlapped reductions on the persistent comm pool
+    /// ([`crate::comm::pool`]) instead of spawning one thread per round.
+    /// Joins stay blocking, so a parked pool thread never outlives
+    /// [`Self::reseed`]'s takeover of the lane state.
+    pub fn set_use_pool(&mut self, on: bool) {
+        self.use_pool = on;
     }
 
     /// Install a fresh ring for a new membership epoch, joining any
@@ -584,14 +943,15 @@ impl RingLane {
     pub fn reseed(&mut self, member: Box<dyn RingTransport>) -> Option<Vec<f32>> {
         let mut completed = None;
         if let Some(handle) = self.in_flight.take() {
-            if let Ok(Ok((_, _, avg, bytes))) = handle.join() {
+            if let Some(Ok((_, _, avg, bytes))) = handle.join() {
                 self.wire_total += bytes;
                 completed = Some(avg);
             }
         }
         self.member = Some(member);
-        self.compressor =
-            Some(WireCompressor::new(self.method.clone(), self.seed));
+        let mut c = WireCompressor::new(self.method.clone(), self.seed);
+        c.set_pipeline_depth(self.pipeline_depth);
+        self.compressor = Some(c);
         self.pending_round = None;
         self.wire_last = 0;
         completed
@@ -658,13 +1018,22 @@ impl DeltaReducer for RingLane {
         // its spans must attribute to the round the delta belongs to,
         // not whatever round the worker has advanced to by join time.
         let ctx = crate::obs::scope();
-        self.in_flight = Some(std::thread::spawn(move || {
+        let job = move || -> FlightResult {
             crate::obs::set_ctx(ctx);
             crate::obs::set_round(round as u32);
             let _s = crate::obs::span("lane", "reduce");
             let bytes = c.reduce(&mut *m, &mut delta, &spec, round)?;
             Ok((m, c, delta, bytes))
-        }));
+        };
+        self.in_flight = Some(if self.use_pool {
+            let (tx, rx) = std::sync::mpsc::channel();
+            crate::comm::pool::shared().submit(move || {
+                let _ = tx.send(job());
+            });
+            Flight::Pooled(rx)
+        } else {
+            Flight::Thread(std::thread::spawn(job))
+        });
         Ok(())
     }
 
@@ -672,7 +1041,7 @@ impl DeltaReducer for RingLane {
         if let Some(handle) = self.in_flight.take() {
             let (m, c, avg, bytes) = handle
                 .join()
-                .map_err(|_| anyhow!("comm thread panicked"))??;
+                .ok_or_else(|| anyhow!("comm thread panicked"))??;
             self.member = Some(m);
             self.compressor = Some(c);
             self.record(bytes);
@@ -997,5 +1366,215 @@ mod tests {
         for o in outs {
             assert!(o.iter().all(|&x| (x - 2.0).abs() < 1e-6));
         }
+    }
+
+    // -- pipelined low-rank reduce: bit-for-bit vs the sequential path --
+
+    /// A multi-entry spec mixing 2-D and 1-D entries — the pipelined path
+    /// only engages with more than one entry, and the mix exercises every
+    /// `Op` variant (Pass1, Pass2, Seg) in flight together.
+    fn pipelined_spec() -> (Vec<ParamEntry>, usize) {
+        let shapes: &[(&str, &[usize])] = &[
+            ("w0", &[8, 6]),
+            ("b0", &[10]),
+            ("w1", &[5, 4]),
+            ("b1", &[7]),
+            ("w2", &[6, 6]),
+        ];
+        let mut spec = Vec::new();
+        let mut off = 0usize;
+        for (name, shape) in shapes {
+            let numel: usize = shape.iter().product();
+            spec.push(ParamEntry {
+                name: name.to_string(),
+                shape: shape.to_vec(),
+                offset: off,
+            });
+            off += numel;
+        }
+        (spec, off)
+    }
+
+    /// Reduce one deterministic per-rank delta on every member
+    /// concurrently; returns `(reduced delta, payload bytes, meter
+    /// total)` per rank.
+    fn reduce_all(
+        members: Vec<Box<dyn RingTransport>>,
+        depth: usize,
+    ) -> Vec<(Vec<f32>, u64, u64)> {
+        let (spec, n) = pipelined_spec();
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = members
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut m)| {
+                    let spec = spec.clone();
+                    scope.spawn(move || {
+                        let mut c = WireCompressor::new(
+                            Method::LowRankQuant { rank: 2, q_bits: 4 },
+                            42,
+                        );
+                        c.set_pipeline_depth(depth);
+                        let mut delta: Vec<f32> = (0..n)
+                            .map(|i| {
+                                ((i + 1) as f32 * 0.13 + rank as f32).sin()
+                            })
+                            .collect();
+                        let bytes =
+                            c.reduce(&mut *m, &mut delta, &spec, 5).unwrap();
+                        (delta, bytes, m.meter().total())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    fn assert_bit_for_bit(
+        seq: &[(Vec<f32>, u64, u64)],
+        pip: &[(Vec<f32>, u64, u64)],
+    ) {
+        for (rank, (s, p)) in seq.iter().zip(pip).enumerate() {
+            assert_eq!(s.0, p.0, "rank {rank}: reduced deltas diverged");
+            assert_eq!(s.1, p.1, "rank {rank}: payload bytes diverged");
+            assert_eq!(s.2, p.2, "rank {rank}: wire ledger diverged");
+        }
+    }
+
+    #[test]
+    fn pipelined_reduce_is_bit_for_bit_on_local_ring() {
+        let seq = reduce_all(
+            build_ring(2).into_iter().map(|m| Box::new(m) as _).collect(),
+            1,
+        );
+        let pip = reduce_all(
+            build_ring(2).into_iter().map(|m| Box::new(m) as _).collect(),
+            3,
+        );
+        assert!(seq[0].1 > 0 && seq[0].2 > 0);
+        assert_bit_for_bit(&seq, &pip);
+    }
+
+    #[test]
+    fn pipelined_reduce_is_bit_for_bit_under_fault_wrapper() {
+        use crate::transport::faulty::{FaultPlan, FaultyRing};
+        let wrap = || -> Vec<Box<dyn RingTransport>> {
+            build_ring(2)
+                .into_iter()
+                .map(|m| {
+                    Box::new(FaultyRing::new(m, FaultPlan::quiet(9))) as _
+                })
+                .collect()
+        };
+        assert_bit_for_bit(&reduce_all(wrap(), 1), &reduce_all(wrap(), 3));
+    }
+
+    #[test]
+    fn pipelined_reduce_is_bit_for_bit_on_loopback_tcp() {
+        use crate::transport::tcp::form_ring;
+        use std::net::TcpListener;
+        use std::time::Duration;
+        // Each member forms its TCP ring and runs the sequential and the
+        // pipelined reduction back to back over the same sockets — the
+        // collectives act as barriers, so the two runs stay in lockstep
+        // across the ring.
+        let (spec, n) = pipelined_spec();
+        let listeners: Vec<TcpListener> = (0..2)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let members: Vec<(u32, u16)> = listeners
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (i as u32, l.local_addr().unwrap().port()))
+            .collect();
+        let per_rank: Vec<((Vec<f32>, u64, u64), (Vec<f32>, u64, u64))> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = listeners
+                    .iter()
+                    .enumerate()
+                    .map(|(rank, listener)| {
+                        let members = members.clone();
+                        let spec = spec.clone();
+                        scope.spawn(move || {
+                            let mut ring = form_ring(
+                                rank as u32,
+                                1,
+                                &members,
+                                listener,
+                                Duration::from_secs(10),
+                                Duration::from_secs(10),
+                            )
+                            .unwrap();
+                            let delta0: Vec<f32> = (0..n)
+                                .map(|i| {
+                                    ((i + 1) as f32 * 0.13 + rank as f32)
+                                        .sin()
+                                })
+                                .collect();
+                            let mut run = |depth: usize, base: u64| {
+                                let mut c = WireCompressor::new(
+                                    Method::LowRankQuant {
+                                        rank: 2,
+                                        q_bits: 4,
+                                    },
+                                    42,
+                                );
+                                c.set_pipeline_depth(depth);
+                                let mut d = delta0.clone();
+                                let bytes = c
+                                    .reduce(&mut ring, &mut d, &spec, 5)
+                                    .unwrap();
+                                (d, bytes, ring.meter().total() - base)
+                            };
+                            let seq = run(1, 0);
+                            let wire_after_seq = seq.2;
+                            let pip = run(3, wire_after_seq);
+                            (seq, pip)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+        for (rank, (seq, pip)) in per_rank.iter().enumerate() {
+            assert!(seq.2 > 0, "rank {rank}: nothing crossed the wire");
+            assert_eq!(seq.0, pip.0, "rank {rank}: deltas diverged over TCP");
+            assert_eq!(seq.1, pip.1, "rank {rank}: payload bytes diverged");
+            assert_eq!(seq.2, pip.2, "rank {rank}: wire ledger diverged");
+        }
+    }
+
+    #[test]
+    fn pooled_lane_flight_joins_and_survives_reseed() {
+        // Overlapped flights on the persistent comm pool: the join-then-
+        // begin cadence reuses a parked worker round after round, and
+        // `reseed` joins an abandoned completed flight so no pool thread
+        // holds lane state past the epoch turn.
+        crate::comm::pool::configure(2);
+        let spec = vec![ParamEntry {
+            name: "b".to_string(),
+            shape: vec![4],
+            offset: 0,
+        }];
+        let m = build_ring(1).remove(0);
+        let mut lane =
+            RingLane::new(Box::new(m), Method::None, 7, spec, true);
+        lane.set_use_pool(true);
+        for round in 1..=10u64 {
+            let d = vec![round as f32; 4];
+            lane.begin(&[d.clone()], round).unwrap();
+            // Size-1 ring: the mean is the member's own delta.
+            assert_eq!(lane.complete(&[], round).unwrap(), d);
+        }
+        let wire_before = lane.wire_total;
+        assert!(wire_before > 0);
+
+        // Abandon a completed pooled flight, then turn the epoch: reseed
+        // must join it and hand back the mean (the late-join rule), with
+        // the lane immediately usable on the new ring.
+        lane.begin(&[vec![6.0; 4]], 11).unwrap();
+        let late = lane.reseed(Box::new(build_ring(1).remove(0)));
+        assert_eq!(late, Some(vec![6.0; 4]));
+        assert!(lane.wire_total > wire_before, "abandoned flight unmetered");
+        assert_eq!(lane.complete(&[vec![1.5; 4]], 12).unwrap(), vec![1.5; 4]);
     }
 }

@@ -134,6 +134,12 @@ pub struct WorkerOpts {
     pub overlap: bool,
     pub ring_timeout_ms: u64,
     pub connect_timeout_ms: u64,
+    /// Persistent comm-thread pool size (1 = spawn-per-round, the
+    /// default; ≥ 2 parks reduce flights and TCP writers on the shared
+    /// [`crate::comm::pool`]).
+    pub comm_pool_size: usize,
+    /// Reduce-pipeline depth for the wire compressor (1 = sequential).
+    pub pipeline_depth: usize,
     pub faults: Option<FaultPlan>,
 }
 
@@ -550,8 +556,11 @@ fn build_fleet_driver(opts: &WorkerOpts, theta0: Vec<f32>) -> RoundDriver {
         opts.overlap,
         false,
     );
-    let lane =
+    crate::comm::pool::configure(opts.comm_pool_size);
+    let mut lane =
         RingLane::unseeded(Method::None, opts.seed, flat_spec(dim), opts.overlap);
+    lane.set_pipeline_depth(opts.pipeline_depth);
+    lane.set_use_pool(opts.comm_pool_size >= 2);
     let mut driver = RoundDriver::new(engine, lane, opts.rounds, opts.local_steps);
     if let Some(plan) = &opts.faults {
         driver.set_break_round(plan.break_round);
@@ -1022,7 +1031,10 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
     // (inert under Method::None, load-bearing once the fleet compresses).
     let stage_seed =
         w.seed ^ (opts.stage as u64).wrapping_mul(0x9e3779b97f4a7c15);
-    let lane = RingLane::unseeded(Method::None, stage_seed, spec, w.overlap);
+    crate::comm::pool::configure(w.comm_pool_size);
+    let mut lane = RingLane::unseeded(Method::None, stage_seed, spec, w.overlap);
+    lane.set_pipeline_depth(w.pipeline_depth);
+    lane.set_use_pool(w.comm_pool_size >= 2);
     let mut work = StageStepWork {
         compute,
         stream,
@@ -1299,7 +1311,11 @@ fn spawn_workers(
                     .arg("--ring-timeout-ms")
                     .arg(cfg.transport.ring_timeout_ms.to_string())
                     .arg("--connect-timeout-ms")
-                    .arg(cfg.transport.connect_timeout_ms.to_string());
+                    .arg(cfg.transport.connect_timeout_ms.to_string())
+                    .arg("--comm-pool")
+                    .arg(cfg.transport.comm_pool_size.to_string())
+                    .arg("--pipeline-depth")
+                    .arg(cfg.transport.pipeline_depth.to_string());
                 if cfg.overlap {
                     cmd.arg("--overlap");
                 }
@@ -1373,6 +1389,8 @@ fn worker_opts_for(
         overlap: cfg.overlap,
         ring_timeout_ms: cfg.transport.ring_timeout_ms,
         connect_timeout_ms: cfg.transport.connect_timeout_ms,
+        comm_pool_size: cfg.transport.comm_pool_size,
+        pipeline_depth: cfg.transport.pipeline_depth,
         faults: fault_plan_for(&cfg.faults, rank, exit_on_kill),
     }
 }
@@ -1863,7 +1881,11 @@ fn spawn_stage_workers(
                         .arg("--ring-timeout-ms")
                         .arg(cfg.transport.ring_timeout_ms.to_string())
                         .arg("--connect-timeout-ms")
-                        .arg(cfg.transport.connect_timeout_ms.to_string());
+                        .arg(cfg.transport.connect_timeout_ms.to_string())
+                        .arg("--comm-pool")
+                        .arg(cfg.transport.comm_pool_size.to_string())
+                        .arg("--pipeline-depth")
+                        .arg(cfg.transport.pipeline_depth.to_string());
                     if cfg.overlap {
                         cmd.arg("--overlap");
                     }
@@ -2558,6 +2580,72 @@ mod tests {
         // error feedback) and everyone — breaker included — completes.
         let mut cfg = quick_cfg(3);
         cfg.overlap = true;
+        cfg.faults.enabled = true;
+        cfg.faults.break_rank = 1;
+        cfg.faults.break_round = 3;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 1, 2], "nobody died");
+        assert!(out.epochs >= 2, "epochs={}", out.epochs);
+        assert!(
+            out.recoveries.iter().all(|&(_, _, d)| d == 0),
+            "mixed in-flight must discard, got {:?}",
+            out.recoveries
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round = out
+            .round_losses
+            .iter()
+            .map(|(_, r, _)| *r)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn thread_mode_overlap_kill_drains_with_pool_and_pipeline() {
+        // Same drain scenario as above, but with the persistent comm pool
+        // and the pipelined reducer enabled: a parked pool thread must not
+        // outlive `RingLane::reseed`, and the drain branch must still
+        // finish the in-flight reduction on the re-formed ring.
+        let mut cfg = quick_cfg(3);
+        cfg.overlap = true;
+        cfg.transport.comm_pool_size = 2;
+        cfg.transport.pipeline_depth = 2;
+        cfg.faults.enabled = true;
+        cfg.faults.kill_rank = 1;
+        cfg.faults.kill_round = 2;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 2]);
+        assert!(out.epochs >= 2, "epochs={}", out.epochs);
+        assert!(
+            out.recoveries.iter().any(|&(_, _, d)| d > 0),
+            "expected a drain commit, got {:?}",
+            out.recoveries
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round = out
+            .round_losses
+            .iter()
+            .map(|(_, r, _)| *r)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+        // Thread-count convergence (no leak across epochs) is asserted on
+        // private pools in `comm::pool::tests`; the shared pool's counters
+        // are cross-test global, so here the probe is behavioral: every
+        // pooled flight was joined (the run completed) and the re-formed
+        // ring produced the full schedule.
+    }
+
+    #[test]
+    fn thread_mode_overlap_soft_break_discards_with_pool_and_pipeline() {
+        // The discard branch under pool + pipelined reduce: the breaker's
+        // stale in-flight flight is joined and thrown away, and its pooled
+        // comm thread parks instead of leaking.
+        let mut cfg = quick_cfg(3);
+        cfg.overlap = true;
+        cfg.transport.comm_pool_size = 2;
+        cfg.transport.pipeline_depth = 2;
         cfg.faults.enabled = true;
         cfg.faults.break_rank = 1;
         cfg.faults.break_round = 3;

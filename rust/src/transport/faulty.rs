@@ -108,6 +108,12 @@ impl<T: RingTransport> RingTransport for FaultyRing<T> {
         self.inner.meter()
     }
 
+    fn recycle(&mut self, buf: Vec<f32>) {
+        // Delegate so the inner backend's buffer pool keeps circulating;
+        // the default no-op would silently starve it back to allocating.
+        self.inner.recycle(buf)
+    }
+
     fn begin_round(&mut self, round: usize) -> Result<()> {
         self.inner.begin_round(round)?;
         if self.plan.kill_round != 0 && round == self.plan.kill_round {

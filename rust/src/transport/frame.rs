@@ -219,7 +219,16 @@ impl<'a> Cursor<'a> {
 
 /// Serialize `msg` into `kind + body` bytes (without the length prefix).
 pub fn encode(msg: &Msg) -> Vec<u8> {
-    let mut b = vec![msg.kind()];
+    let mut b = Vec::new();
+    encode_into(&mut b, msg);
+    b
+}
+
+/// Serialize `msg` into a caller-owned scratch buffer (appended; callers
+/// `clear()` between frames).  The hot TCP send paths reuse one pre-sized
+/// scratch per connection so steady-state framing allocates nothing.
+pub fn encode_into(b: &mut Vec<u8>, msg: &Msg) {
+    b.push(msg.kind());
     match msg {
         Msg::Data { payload } => put_f32s(&mut b, payload),
         Msg::Hello { rank, ring_port } => {
@@ -303,7 +312,6 @@ pub fn encode(msg: &Msg) -> Vec<u8> {
             }
         }
     }
-    b
 }
 
 /// Parse `kind + body` bytes back into a [`Msg`].
@@ -400,12 +408,26 @@ pub fn decode(bytes: &[u8]) -> Result<Msg> {
 
 /// Write one length-delimited frame.
 pub fn write_msg(w: &mut impl Write, msg: &Msg) -> Result<()> {
-    let body = encode(msg);
-    if body.len() as u64 > MAX_FRAME_BYTES as u64 {
-        return Err(anyhow!("frame too large: {} bytes", body.len()));
+    let mut scratch = Vec::new();
+    write_msg_with(w, &mut scratch, msg)
+}
+
+/// Write one length-delimited frame, encoding through a caller-owned
+/// scratch buffer.  Persistent send paths (TCP ring hops, stage-link
+/// writers) keep one scratch per connection so the per-frame `Vec`
+/// allocation disappears from the hot path.
+pub fn write_msg_with(
+    w: &mut impl Write,
+    scratch: &mut Vec<u8>,
+    msg: &Msg,
+) -> Result<()> {
+    scratch.clear();
+    encode_into(scratch, msg);
+    if scratch.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(anyhow!("frame too large: {} bytes", scratch.len()));
     }
-    w.write_all(&(body.len() as u32).to_le_bytes())?;
-    w.write_all(&body)?;
+    w.write_all(&(scratch.len() as u32).to_le_bytes())?;
+    w.write_all(scratch)?;
     w.flush()?;
     Ok(())
 }

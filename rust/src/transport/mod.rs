@@ -117,6 +117,14 @@ pub trait RingTransport: Send {
         Ok(())
     }
 
+    /// Hand a spent receive buffer back to the transport for reuse.  The
+    /// ring collective returns every chunk it consumed; backends with a
+    /// buffer pool (local mpsc, TCP) feed them back into `send_next` so
+    /// the hot path stops allocating per hop.  Default: drop it.
+    /// Wrappers (`Box`, `faulty`) must delegate or the inner pool
+    /// starves back to allocating.
+    fn recycle(&mut self, _buf: Vec<f32>) {}
+
     /// In-place chunked ring all-reduce (sum) across all members
     /// (Baidu 2017): reduce-scatter (C−1 hops) then all-gather (C−1 hops);
     /// each member sends 2·(C−1)/C·payload bytes total — the §2.4.1
@@ -155,6 +163,7 @@ pub trait RingTransport: Send {
             for (dst, src) in buf[lo..hi].iter_mut().zip(&incoming) {
                 *dst += src;
             }
+            self.recycle(incoming);
         }
         // Phase 2: all-gather.  Send the chunk just completed.
         for s in 0..c - 1 {
@@ -175,6 +184,7 @@ pub trait RingTransport: Send {
                 ));
             }
             buf[lo..hi].copy_from_slice(&incoming);
+            self.recycle(incoming);
         }
         Ok(())
     }
@@ -217,6 +227,10 @@ impl<T: RingTransport + ?Sized> RingTransport for Box<T> {
 
     fn begin_round(&mut self, round: usize) -> Result<()> {
         (**self).begin_round(round)
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        (**self).recycle(buf)
     }
 
     fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {

@@ -16,7 +16,7 @@
 //! `[transport] stage_listen_base_port` is set.
 
 use crate::pipeline::exec::StageLink;
-use crate::transport::frame::{read_msg, write_msg, Msg};
+use crate::transport::frame::{read_msg, write_msg, write_msg_with, Msg};
 use crate::transport::{ByteMeter, RingTransport};
 use anyhow::{anyhow, Context, Result};
 use std::net::{TcpListener, TcpStream};
@@ -40,6 +40,11 @@ pub struct TcpRing {
     tx_next: Option<mpsc::Sender<Vec<f32>>>,
     rx_prev: Option<TcpStream>,
     meter: ByteMeter,
+    /// Payload buffers the writer has finished encoding, handed back so
+    /// `send_next` reuses them instead of allocating per hop.
+    spent_rx: Option<mpsc::Receiver<Vec<f32>>>,
+    /// Spent receive buffers from the collective (via `recycle`).
+    pool: Vec<Vec<f32>>,
 }
 
 impl RingTransport for TcpRing {
@@ -56,7 +61,16 @@ impl RingTransport for TcpRing {
             .tx_next
             .as_ref()
             .ok_or_else(|| anyhow!("size-1 ring has no successor link"))?;
-        tx.send(chunk.to_vec())
+        // Prefer a recycled receive buffer, then a payload the writer has
+        // already put on the wire; allocate only while the pool warms up.
+        let mut buf = self
+            .pool
+            .pop()
+            .or_else(|| self.spent_rx.as_ref().and_then(|rx| rx.try_recv().ok()))
+            .unwrap_or_default();
+        buf.clear();
+        buf.extend_from_slice(chunk);
+        tx.send(buf)
             .map_err(|_| anyhow!("tcp ring send: successor link closed"))
     }
 
@@ -73,6 +87,12 @@ impl RingTransport for TcpRing {
 
     fn meter(&self) -> &ByteMeter {
         &self.meter
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        if self.pool.len() < 4 {
+            self.pool.push(buf);
+        }
     }
 }
 
@@ -205,6 +225,8 @@ pub fn form_ring(
             tx_next: None,
             rx_prev: None,
             meter: ByteMeter::default(),
+            spent_rx: None,
+            pool: Vec::new(),
         });
     }
     let (succ_rank, succ_port) = members[(pos + 1) % c];
@@ -234,18 +256,34 @@ pub fn form_ring(
     rx_prev.set_nodelay(true).ok();
     rx_prev.set_read_timeout(Some(ring_timeout)).ok();
 
-    // Writer thread: drains queued chunks onto the successor socket (see
-    // the TcpRing docs for why sends must not block the caller).  The
-    // thread ends when the TcpRing (and so the queue sender) is dropped,
-    // or on a socket error.
+    // Writer: drains queued chunks onto the successor socket (see the
+    // TcpRing docs for why sends must not block the caller).  The loop
+    // ends when the TcpRing (and so the queue sender) is dropped, or on
+    // a socket error.  Encoding goes through one persistent scratch
+    // buffer, and each payload is handed back over the spent channel so
+    // `send_next` recirculates it instead of allocating.  With the comm
+    // pool enabled the loop parks a pool worker for the connection's
+    // lifetime instead of owning a fresh OS thread.
     let (tx, rx) = mpsc::channel::<Vec<f32>>();
-    std::thread::spawn(move || {
+    let (spent_tx, spent_rx) = mpsc::channel::<Vec<f32>>();
+    let writer = move || {
+        let mut scratch: Vec<u8> = Vec::new();
         while let Ok(chunk) = rx.recv() {
-            if write_msg(&mut tx_stream, &Msg::Data { payload: chunk }).is_err() {
+            let msg = Msg::Data { payload: chunk };
+            let ok = write_msg_with(&mut tx_stream, &mut scratch, &msg).is_ok();
+            if !ok {
                 break;
             }
+            if let Msg::Data { payload } = msg {
+                let _ = spent_tx.send(payload);
+            }
         }
-    });
+    };
+    if crate::comm::pool::enabled() {
+        crate::comm::pool::shared().submit(writer);
+    } else {
+        std::thread::spawn(writer);
+    }
 
     Ok(TcpRing {
         pos,
@@ -253,6 +291,8 @@ pub fn form_ring(
         tx_next: Some(tx),
         rx_prev: Some(rx_prev),
         meter: ByteMeter::default(),
+        spent_rx: Some(spent_rx),
+        pool: Vec::new(),
     })
 }
 
@@ -288,13 +328,22 @@ struct LinkHalf {
 fn link_half(stream: TcpStream) -> Result<LinkHalf> {
     let mut write_stream = stream.try_clone().context("cloning link stream")?;
     let (tx, rx) = mpsc::channel::<Msg>();
-    std::thread::spawn(move || {
+    // Same persistent-scratch + pool routing as the ring writer: with the
+    // comm pool enabled the drain loop parks a pool worker instead of
+    // holding a dedicated OS thread per neighbor socket.
+    let writer = move || {
+        let mut scratch: Vec<u8> = Vec::new();
         while let Ok(m) = rx.recv() {
-            if write_msg(&mut write_stream, &m).is_err() {
+            if write_msg_with(&mut write_stream, &mut scratch, &m).is_err() {
                 break;
             }
         }
-    });
+    };
+    if crate::comm::pool::enabled() {
+        crate::comm::pool::shared().submit(writer);
+    } else {
+        std::thread::spawn(writer);
+    }
     Ok(LinkHalf { tx, rx: stream })
 }
 

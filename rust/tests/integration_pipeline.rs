@@ -344,6 +344,8 @@ fn synthetic_multi_stage_executor_converges_without_artifacts() {
         error_feedback: true,
         method: Method::Quant { q_bits: 8 },
         seed: 2024,
+        comm_pool_size: 1,
+        pipeline_depth: 1,
     };
     let out = run_pipeline(&wl, 3, local_stage_rings(3, 4), &opts).unwrap();
     assert_eq!(out.final_params.len(), 4 * 24);

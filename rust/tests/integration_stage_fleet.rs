@@ -44,6 +44,8 @@ fn local_opts() -> PipelineRunOpts {
         error_feedback: false,
         method: Method::None,
         seed: SEED,
+        comm_pool_size: 1,
+        pipeline_depth: 1,
     }
 }
 

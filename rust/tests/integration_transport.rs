@@ -223,3 +223,86 @@ fn elastic_overlap_process_kill_drains_in_flight_and_completes() {
     let max_round = out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap();
     assert_eq!(max_round as usize, cfg.rounds);
 }
+
+#[test]
+fn tcp_overlap_fleet_with_pool_matches_local_reference_bit_for_bit() {
+    // The perf knobs must be invisible to the numerics: with the
+    // persistent comm pool and the reduce pipeline enabled (flowing to
+    // the worker processes via --comm-pool/--pipeline-depth), the fleet
+    // still matches the in-process reference exactly — params, loss, and
+    // the wire ledger.
+    let mut cfg = ElasticConfig::quadratic(3, 4, 48);
+    cfg.overlap = true;
+    cfg.transport.ring_timeout_ms = 2000;
+    cfg.wall_timeout_ms = 90_000;
+    cfg.transport.comm_pool_size = 2;
+    cfg.transport.pipeline_depth = 2;
+    let (ref_params, ref_loss, ref_wire) = run_local_reference(&cfg).unwrap();
+    let fleet =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(fleet.epochs, 1, "no churn expected");
+    assert_eq!(fleet.survivors, vec![0, 1, 2]);
+    assert_eq!(ref_params, fleet.final_params);
+    assert_eq!(ref_loss, fleet.final_loss);
+    assert_eq!(ref_wire, fleet.total_wire_bytes);
+    assert!(fleet.total_wire_bytes > 0);
+}
+
+#[test]
+fn elastic_overlap_process_kill_drains_with_pool_and_pipeline() {
+    // The drain branch of churn recovery across real OS processes with
+    // the comm pool and pipelined reduce enabled: a parked pool thread in
+    // the dying worker dies with its process; the survivors' pooled
+    // flights are joined by reseed and the re-formed ring drains the
+    // in-flight round.
+    let mut cfg = ElasticConfig::quadratic(3, 6, 48);
+    cfg.overlap = true;
+    cfg.transport.ring_timeout_ms = 1500;
+    cfg.wall_timeout_ms = 90_000;
+    cfg.transport.comm_pool_size = 2;
+    cfg.transport.pipeline_depth = 2;
+    cfg.faults.enabled = true;
+    cfg.faults.kill_rank = 1;
+    cfg.faults.kill_round = 2;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 2], "rank 1 must be gone");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().any(|&(_, _, d)| d > 0),
+        "expected a drain commit, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    let max_round = out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap();
+    assert_eq!(max_round as usize, cfg.rounds);
+}
+
+#[test]
+fn elastic_overlap_process_soft_break_discards_with_pool_and_pipeline() {
+    // The discard branch with the same knobs on: the breaker parks
+    // without dying (its pooled flight is stale), survivors hold mixed
+    // in-flight rounds, and the coordinator must discard — everyone,
+    // breaker included, completes the schedule.
+    let mut cfg = ElasticConfig::quadratic(3, 6, 48);
+    cfg.overlap = true;
+    cfg.transport.ring_timeout_ms = 1500;
+    cfg.wall_timeout_ms = 90_000;
+    cfg.transport.comm_pool_size = 2;
+    cfg.transport.pipeline_depth = 2;
+    cfg.faults.enabled = true;
+    cfg.faults.break_rank = 1;
+    cfg.faults.break_round = 3;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 1, 2], "nobody died");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().all(|&(_, _, d)| d == 0),
+        "mixed in-flight must discard, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    let max_round = out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap();
+    assert_eq!(max_round as usize, cfg.rounds);
+}
