@@ -139,7 +139,6 @@ impl CommPool {
             }
             let guard = LiveGuard(inner);
             let inner = &guard.0;
-            let (tx, rx) = channel::<Dispatch>();
             let mut dispatch = Some(first);
             // When this worker last became able to take work — clamps
             // the queue-wait event so it can never overlap the previous
@@ -157,16 +156,24 @@ impl CommPool {
                     );
                     job();
                 }
+                // Park on a fresh channel each time, moving its only
+                // Sender into the idle list: dropping that entry (a
+                // `drain_idle`, or the pool itself dropping) hangs up
+                // `prx.recv()` and the worker retires.  `parked` is
+                // bumped in the same critical section as the push, so a
+                // concurrent `submit`'s pop + `fetch_sub` can never
+                // precede the matching `fetch_add` and underflow.
+                let (ptx, prx) = channel::<Dispatch>();
                 {
                     let mut idle = inner.idle.lock().unwrap();
                     if idle.len() >= inner.cap.load(Ordering::SeqCst) {
                         break; // parking lot full — retire
                     }
-                    idle.push(tx.clone());
+                    idle.push(ptx);
+                    inner.parked.fetch_add(1, Ordering::SeqCst);
                 }
                 ready_at = crate::obs::now_us();
-                inner.parked.fetch_add(1, Ordering::SeqCst);
-                match rx.recv() {
+                match prx.recv() {
                     // A successful dispatch already un-counted us.
                     Ok(d) => dispatch = Some(d),
                     Err(_) => {

@@ -597,11 +597,21 @@ impl WireCompressor {
 
                 let submit = |job: WireJob| -> Result<()> {
                     if op_tx.send(job).is_err() {
-                        // The wire lane died; surface its error.
-                        return Err(match res_rx.recv() {
-                            Ok(Err(e)) => e,
-                            _ => anyhow!("reduce wire lane hung up"),
-                        });
+                        // The wire lane died; drain any queued Ok
+                        // results from earlier ops so the lane's actual
+                        // transport error surfaces, not a generic
+                        // hang-up.
+                        loop {
+                            match res_rx.recv() {
+                                Ok(Ok(_)) => continue,
+                                Ok(Err(e)) => return Err(e),
+                                Err(_) => {
+                                    return Err(anyhow!(
+                                        "reduce wire lane hung up"
+                                    ))
+                                }
+                            }
+                        }
                     }
                     Ok(())
                 };
