@@ -37,6 +37,15 @@
 //!   injection wrapping either wire).  See [`transport`] for the frame
 //!   format and the membership epoch protocol, and README.md / CONFIG.md
 //!   for the operator-facing documentation.
+//! * L3 protocol: the elastic membership protocol as pure, I/O-free
+//!   state machines ([`protocol::CoordinatorSm`], [`protocol::WorkerSm`])
+//!   — 2PC epoch formation, membership pruning, the drain-or-discard
+//!   ruling, and fleet completion, consumed by the
+//!   [`transport::elastic`] shell over real sockets and by the
+//!   deterministic simulator ([`protocol::sim`]): a virtual-time
+//!   harness with a seeded fuzzer, minimized repros, and a bounded
+//!   exhaustive interleaving explorer asserting the safety and
+//!   liveness invariants (`protocol-verify` in CI).
 //! * L3 observability: always-compiled structured tracing ([`obs`]) —
 //!   RAII spans with self-carried (cluster, stage, epoch, round)
 //!   attribution recorded on every hot-path layer, shipped to the
@@ -63,6 +72,7 @@ pub mod netsim;
 pub mod obs;
 pub mod optim;
 pub mod pipeline;
+pub mod protocol;
 pub mod report;
 pub mod rounds;
 pub mod runtime;

@@ -13,6 +13,11 @@
 //!   inspect      print an artifact bundle's manifest summary
 //!   trace-check  validate a `coordinate --trace` export (schema,
 //!                span nesting, round monotonicity, recovery spans)
+//!   protocol-verify  model-check the elastic membership protocol: the
+//!                bounded exhaustive interleaving explorer plus the
+//!                seeded schedule fuzzer over the pure state machines
+//!                (crash/soft-break injection, safety + liveness
+//!                invariants, minimized repro on failure)
 //!
 //! `dilocox <cmd> --help` lists options; configs can also come from a TOML
 //! file via `--config path.toml` (see configs/), including the
@@ -26,6 +31,7 @@ use dilocox::obs::report::{
     validate_chrome_trace,
 };
 use dilocox::pipeline::exec::{json_num_or_null, stage_times_json};
+use dilocox::protocol::sim as proto_sim;
 use dilocox::report;
 use dilocox::sim;
 use dilocox::train::{run_experiment, RunOpts};
@@ -49,6 +55,7 @@ fn main() {
         Some("analyze") => cmd_analyze(&argv[1..]),
         Some("inspect") => cmd_inspect(&argv[1..]),
         Some("trace-check") => cmd_trace_check(&argv[1..]),
+        Some("protocol-verify") => cmd_protocol_verify(&argv[1..]),
         Some("--help") | Some("-h") | None => {
             eprintln!("{}", toplevel_usage());
             0
@@ -72,7 +79,8 @@ fn toplevel_usage() -> String {
        simulate     paper-scale DES throughput (Fig 4 / Table 1)\n\
        analyze      §2.4.1 communication-overhead analysis\n\
        inspect      summarize an artifact bundle\n\
-       trace-check  validate a coordinate --trace export\n"
+       trace-check  validate a coordinate --trace export\n\
+       protocol-verify  model-check the elastic membership protocol\n"
         .to_string()
 }
 
@@ -808,6 +816,114 @@ fn cmd_trace_check(argv: &[String]) -> i32 {
             eprintln!("{path}: INVALID — {e:#}");
             1
         }
+    }
+}
+
+fn cmd_protocol_verify(argv: &[String]) -> i32 {
+    let spec = CliSpec::new(
+        "dilocox protocol-verify",
+        "model-check the elastic membership protocol (explorer + fuzzer)",
+    )
+    .opt("workers", "3", "fleet size")
+    .opt("rounds", "2", "scheduled outer rounds")
+    .opt("crashes", "1", "crash injections allowed per execution")
+    .opt("breaks", "1", "soft-break injections allowed per execution")
+    .opt("preemptions", "2", "explorer schedule-deviation budget")
+    .opt("max-execs", "200000", "explorer execution cap")
+    .opt("min-execs", "1000", "fail if the explorer covers fewer executions")
+    .opt("fuzz-seeds", "500", "random schedules to fuzz")
+    .opt("fuzz-base-seed", "1234", "base seed for the fuzz schedules")
+    .opt("repro-out", "", "write the minimized repro here on failure")
+    .flag("sync", "disable one-step-delay overlap (no in-flight deltas)");
+    let args = match spec.parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match run_protocol_verify(&args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+fn run_protocol_verify(args: &dilocox::util::cli::Args) -> Result<i32, String> {
+    let cfg = proto_sim::SimConfig {
+        workers: args.get_usize("workers")? as u32,
+        rounds: args.get_usize("rounds")? as u32,
+        overlap: !args.flag("sync"),
+        crashes: args.get_usize("crashes")? as u32,
+        breaks: args.get_usize("breaks")? as u32,
+    };
+    let preemptions = args.get_usize("preemptions")? as u32;
+    let max_execs = args.get_u64("max-execs")?;
+    let min_execs = args.get_u64("min-execs")?;
+    let fuzz_seeds = args.get_usize("fuzz-seeds")? as u32;
+    let base_seed = args.get_u64("fuzz-base-seed")?;
+    let repro_out = args.get("repro-out");
+
+    println!(
+        "protocol-verify: {} workers, {} rounds, overlap={}, \
+         crashes={}, breaks={}",
+        cfg.workers, cfg.rounds, cfg.overlap, cfg.crashes, cfg.breaks
+    );
+    match proto_sim::explore(cfg, preemptions, max_execs) {
+        Ok(stats) => {
+            println!(
+                "explore: {} executions, max {} steps, {} preemptions{}",
+                stats.executions,
+                stats.max_steps,
+                preemptions,
+                if stats.capped { " (capped)" } else { "" }
+            );
+            if stats.executions < min_execs {
+                eprintln!(
+                    "explore: only {} executions covered (< {min_execs}); \
+                     raise --preemptions or the fault budgets",
+                    stats.executions
+                );
+                return Ok(1);
+            }
+        }
+        Err(v) => {
+            report_violation("explore", &cfg, &v, repro_out);
+            return Ok(1);
+        }
+    }
+    match proto_sim::fuzz(cfg, fuzz_seeds, base_seed) {
+        Ok(n) => {
+            println!("fuzz: {n} seeded schedules clean (base seed {base_seed})")
+        }
+        Err(v) => {
+            report_violation("fuzz", &cfg, &v, repro_out);
+            return Ok(1);
+        }
+    }
+    println!("protocol-verify: ok");
+    Ok(0)
+}
+
+/// Print a protocol violation and (when requested) persist the minimized
+/// repro — the `SimConfig` plus the deviation list that
+/// `protocol::sim::replay` re-executes deterministically.
+fn report_violation(
+    phase: &str,
+    cfg: &proto_sim::SimConfig,
+    v: &proto_sim::Violation,
+    out: &str,
+) {
+    eprintln!("{phase}: {v}");
+    if out.is_empty() {
+        return;
+    }
+    let body = format!("phase: {phase}\nconfig: {cfg:?}\n{v}\n");
+    match std::fs::write(out, body) {
+        Ok(()) => eprintln!("minimized repro written to {out}"),
+        Err(e) => eprintln!("writing repro to {out}: {e}"),
     }
 }
 

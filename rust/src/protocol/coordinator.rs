@@ -1,0 +1,722 @@
+//! The coordinator side of the elastic 2PC epoch protocol as a pure
+//! state machine.
+//!
+//! [`CoordinatorSm`] owns every membership decision the fleet makes —
+//! epoch formation, ack collection, the drain-or-discard ruling, grace
+//! draining after churn, and fleet completion — but performs no I/O:
+//! wire frames, timer expiries and closed control channels arrive as
+//! [`CoordIn`] events and every externally visible effect leaves as a
+//! [`CoordOut`].  The TCP shell in [`crate::transport::elastic`] and
+//! the deterministic simulator in [`super::sim`] drive the same
+//! machine, which is what makes the simulator's verdicts transfer to
+//! the deployed fleet.
+//!
+//! One machine covers both fleet shapes: `stages == 1` is the
+//! single-vector DP fleet (keys are `(rank, 0)`), `stages > 1` the
+//! pipeline-stage fleet with `(cluster, stage)` keys, whole-cluster
+//! pruning, per-stage drain decisions and finishing epochs.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{drain_decision, Key};
+
+/// Everything the outside world can tell the coordinator machine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CoordIn {
+    /// Kick off the first epoch (all members registered).
+    Start,
+    /// A (re)connecting worker announced itself.  Membership is fixed
+    /// at registration time, so a Hello from a stale generation is
+    /// deliberately inert — the machine ignores it.
+    Hello { key: Key },
+    /// 2PC ack for a proposed epoch.
+    PrepareAck { key: Key, epoch: u32 },
+    /// A member's ring failed; it reports how far it got so the fleet
+    /// can pick the resume round and rule drain-vs-discard.
+    RingBroken { key: Key, applied_rounds: u32, in_flight_round: u32 },
+    /// Per-round progress report (drives resume-round bookkeeping).
+    Heartbeat { key: Key, round: u32 },
+    /// A member completed all of its rounds.
+    Done { key: Key },
+    /// Failure detector: the member's control channel is gone.  The
+    /// shell orders this after everything the member actually sent
+    /// (reader-thread EOF semantics), and the simulator preserves that
+    /// ordering in its queues.
+    Closed { key: Key },
+    /// A previously armed timer fired.  Stale tokens (anything but the
+    /// most recently armed) are ignored.
+    Timer { token: u64 },
+}
+
+/// Everything the coordinator machine can ask the outside world to do.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CoordOut {
+    /// Propose epoch membership to one member (2PC phase one).  `ring`
+    /// is the member's reduce ring for the epoch; `link_down` the next
+    /// pipeline stage to dial, if any.
+    Prepare {
+        to: Key,
+        epoch: u32,
+        resume_round: u32,
+        ring: Vec<Key>,
+        link_down: Option<Key>,
+        drain_round: u32,
+    },
+    /// All recipients acked: commit the epoch (2PC phase two).
+    Commit { to: Key, epoch: u32 },
+    /// Tell a member the run is over (or its cluster was pruned).
+    Shutdown { to: Key },
+    /// Arm the single coordinator timer with a fresh token; a later
+    /// `ArmTimer` supersedes any earlier one.
+    ArmTimer { token: u64 },
+    /// Record keeping: an epoch committed with this per-stage drain
+    /// ruling (0 = discard).  The shell turns these into telemetry.
+    Committed { epoch: u32, stage: u32, drain_round: u32 },
+    /// Every live member finished its rounds; `Shutdown`s were issued.
+    Finished,
+    /// No members remain; the run cannot complete.
+    Failed { reason: String },
+}
+
+#[derive(Clone, Debug)]
+enum Phase {
+    /// Constructed but not started.
+    Idle,
+    /// 2PC phase one: waiting for every recipient to ack `epoch`.
+    Preparing { recipients: Vec<Key>, drains: Vec<u32>, acked: BTreeSet<Key> },
+    /// An epoch is committed and rings are running rounds.
+    Running,
+    /// Churn detected: waiting (bounded by the grace timer) for every
+    /// not-yet-broken member to report in before re-preparing.
+    Draining { broken: BTreeSet<Key> },
+    Finished,
+    Failed,
+}
+
+/// What a dispatched input asks the machine to do next.  Computed
+/// first, performed second, so phase payloads and the membership sets
+/// never need to be borrowed at the same time.
+enum Act {
+    None,
+    StartEpoch,
+    Commit,
+    Finish,
+    EnterDrain(BTreeSet<Key>),
+}
+
+/// Pure coordinator machine for the elastic membership protocol.
+#[derive(Clone, Debug)]
+pub struct CoordinatorSm {
+    stages: u32,
+    rounds: u32,
+    live: BTreeSet<Key>,
+    done: BTreeSet<Key>,
+    /// Last reported in-flight round per member, cleared on commit —
+    /// the input vector of [`drain_decision`].
+    inflight: BTreeMap<Key, u32>,
+    epoch: u32,
+    resume_round: u32,
+    timer_token: u64,
+    phase: Phase,
+}
+
+impl CoordinatorSm {
+    /// A machine over a registered fleet.  `stages == 1` selects
+    /// single-fleet semantics; `rounds` is the configured outer-round
+    /// count (used only to detect finishing epochs in stage fleets).
+    pub fn new(members: impl IntoIterator<Item = Key>, stages: u32, rounds: u32) -> CoordinatorSm {
+        CoordinatorSm {
+            stages: stages.max(1),
+            rounds,
+            live: members.into_iter().collect(),
+            done: BTreeSet::new(),
+            inflight: BTreeMap::new(),
+            epoch: 0,
+            resume_round: 1,
+            timer_token: 0,
+            phase: Phase::Idle,
+        }
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    pub fn resume_round(&self) -> u32 {
+        self.resume_round
+    }
+
+    pub fn live(&self) -> &BTreeSet<Key> {
+        &self.live
+    }
+
+    pub fn done(&self) -> &BTreeSet<Key> {
+        &self.done
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.phase, Phase::Finished)
+    }
+
+    pub fn is_failed(&self) -> bool {
+        matches!(self.phase, Phase::Failed)
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.is_finished() || self.is_failed()
+    }
+
+    /// Feed one event; returns every effect it causes, in order.
+    pub fn handle(&mut self, input: CoordIn) -> Vec<CoordOut> {
+        let mut out = Vec::new();
+        if self.is_terminal() {
+            return out;
+        }
+        // Stage fleets key everything by (cluster, stage) and prune
+        // whole clusters, so traffic from orphaned members of a pruned
+        // cluster must not perturb the survivors.  The single fleet
+        // keeps the historical behavior of counting progress from any
+        // reporter.
+        if self.stages > 1 {
+            if let Some(k) = input_key(&input) {
+                if !self.live.contains(&k) {
+                    return out;
+                }
+            }
+        }
+        // Progress bookkeeping applies in every phase, exactly like the
+        // shell's event loop noted progress on every received frame.
+        match &input {
+            CoordIn::Heartbeat { round, .. } => {
+                self.resume_round = self.resume_round.max(round + 1);
+            }
+            CoordIn::RingBroken { key, applied_rounds, in_flight_round } => {
+                self.resume_round = self.resume_round.max(applied_rounds + 1);
+                self.inflight.insert(*key, *in_flight_round);
+            }
+            CoordIn::Done { key } => {
+                self.done.insert(*key);
+            }
+            _ => {}
+        }
+        let act = self.dispatch(&input);
+        match act {
+            Act::None => {}
+            Act::StartEpoch => self.start_epoch(&mut out),
+            Act::Commit => self.commit(&mut out),
+            Act::Finish => self.finish(&mut out),
+            Act::EnterDrain(broken) => self.enter_drain(broken, &mut out),
+        }
+        out
+    }
+
+    fn dispatch(&mut self, input: &CoordIn) -> Act {
+        match &mut self.phase {
+            Phase::Idle => match input {
+                CoordIn::Start => Act::StartEpoch,
+                _ => Act::None,
+            },
+            Phase::Preparing { recipients, acked, .. } => match input {
+                CoordIn::PrepareAck { key, epoch } if *epoch == self.epoch => {
+                    acked.insert(*key);
+                    ready_act(recipients, acked, &self.done, &self.live)
+                }
+                CoordIn::Done { .. } => ready_act(recipients, acked, &self.done, &self.live),
+                CoordIn::Closed { key } => {
+                    if self.live.contains(key) && !self.done.contains(key) {
+                        self.live.remove(key);
+                        Act::StartEpoch
+                    } else {
+                        Act::None
+                    }
+                }
+                CoordIn::Timer { token } if *token == self.timer_token => Act::StartEpoch,
+                _ => Act::None,
+            },
+            Phase::Running => match input {
+                CoordIn::Done { .. } => {
+                    if self.all_live_done() {
+                        Act::Finish
+                    } else {
+                        Act::None
+                    }
+                }
+                CoordIn::RingBroken { key, .. } => Act::EnterDrain(BTreeSet::from([*key])),
+                CoordIn::Closed { key } => {
+                    if self.done.contains(key) {
+                        Act::None
+                    } else {
+                        self.live.remove(key);
+                        if self.all_live_done() {
+                            Act::Finish
+                        } else {
+                            Act::EnterDrain(BTreeSet::new())
+                        }
+                    }
+                }
+                _ => Act::None,
+            },
+            Phase::Draining { broken } => match input {
+                CoordIn::RingBroken { key, .. } => {
+                    broken.insert(*key);
+                    drained_act(&self.live, &self.done, broken)
+                }
+                CoordIn::Done { .. } => drained_act(&self.live, &self.done, broken),
+                CoordIn::Closed { key } => {
+                    if !self.done.contains(key) {
+                        self.live.remove(key);
+                    }
+                    drained_act(&self.live, &self.done, broken)
+                }
+                CoordIn::Timer { token } if *token == self.timer_token => Act::StartEpoch,
+                _ => Act::None,
+            },
+            Phase::Finished | Phase::Failed => Act::None,
+        }
+    }
+
+    fn all_live_done(&self) -> bool {
+        self.live.iter().all(|k| self.done.contains(k))
+    }
+
+    /// Open the next 2PC generation: prune, pick recipients, rule
+    /// drain-vs-discard per stage, and send `Prepare`s.
+    fn start_epoch(&mut self, out: &mut Vec<CoordOut>) {
+        self.timer_token += 1; // any armed timer is now stale
+        if self.stages > 1 {
+            self.prune_partial_clusters(out);
+        }
+        if self.live.is_empty() {
+            let reason = if self.stages > 1 { "all clusters died" } else { "all workers died" };
+            self.phase = Phase::Failed;
+            out.push(CoordOut::Failed { reason: reason.to_string() });
+            return;
+        }
+        let clusters: BTreeSet<u32> = self.live.iter().map(|&(c, _)| c).collect();
+        let pending: Vec<u32> = clusters
+            .into_iter()
+            .filter(|&c| (0..self.stages).any(|s| !self.done.contains(&(c, s))))
+            .collect();
+        if pending.is_empty() {
+            self.finish(out);
+            return;
+        }
+        self.epoch += 1;
+        let recipients: Vec<Key> = pending
+            .iter()
+            .flat_map(|&c| (0..self.stages).map(move |s| (c, s)))
+            .filter(|k| !self.done.contains(k))
+            .collect();
+        let drains: Vec<u32> = (0..self.stages)
+            .map(|s| {
+                drain_decision(
+                    recipients
+                        .iter()
+                        .filter(|&&(_, s2)| s2 == s)
+                        .map(|k| self.inflight.get(k).copied()),
+                )
+            })
+            .collect();
+        for &d in &drains {
+            if d > 0 {
+                self.resume_round = self.resume_round.max(d + 1);
+            }
+        }
+        // A finishing epoch (stage fleets only): every remaining round
+        // is already applied, the fleet only has trailing drains and
+        // Done reports left.  Stages with no drain pending form solo
+        // rings so nobody waits on a peer with nothing to reduce.
+        let finishing = self.stages > 1 && self.resume_round > self.rounds;
+        for &(c, s) in &recipients {
+            let d = drains[s as usize];
+            let ring: Vec<Key> = if finishing && d == 0 {
+                vec![(c, s)]
+            } else {
+                pending
+                    .iter()
+                    .filter(|&&c2| !self.done.contains(&(c2, s)))
+                    .map(|&c2| (c2, s))
+                    .collect()
+            };
+            let link_down = if self.stages > 1
+                && !finishing
+                && s + 1 < self.stages
+                && !self.done.contains(&(c, s + 1))
+            {
+                Some((c, s + 1))
+            } else {
+                None
+            };
+            out.push(CoordOut::Prepare {
+                to: (c, s),
+                epoch: self.epoch,
+                resume_round: self.resume_round,
+                ring,
+                link_down,
+                drain_round: d,
+            });
+        }
+        out.push(CoordOut::ArmTimer { token: self.timer_token });
+        self.phase = Phase::Preparing { recipients, drains, acked: BTreeSet::new() };
+    }
+
+    /// Drop clusters that lost any stage; their surviving members get a
+    /// `Shutdown` (they cannot contribute a partial pipeline).
+    fn prune_partial_clusters(&mut self, out: &mut Vec<CoordOut>) {
+        let clusters: BTreeSet<u32> = self.live.iter().map(|&(c, _)| c).collect();
+        for c in clusters {
+            if (0..self.stages).all(|s| self.live.contains(&(c, s))) {
+                continue;
+            }
+            for s in 0..self.stages {
+                if self.live.remove(&(c, s)) {
+                    out.push(CoordOut::Shutdown { to: (c, s) });
+                }
+            }
+        }
+    }
+
+    /// 2PC phase two: every recipient acked and none went stale.
+    fn commit(&mut self, out: &mut Vec<CoordOut>) {
+        let prev = std::mem::replace(&mut self.phase, Phase::Running);
+        let Phase::Preparing { recipients, drains, .. } = prev else {
+            unreachable!("commit outside of Preparing");
+        };
+        for &k in &recipients {
+            out.push(CoordOut::Commit { to: k, epoch: self.epoch });
+        }
+        for (s, &d) in drains.iter().enumerate() {
+            out.push(CoordOut::Committed { epoch: self.epoch, stage: s as u32, drain_round: d });
+        }
+        // The committed decision consumed these reports; the next
+        // ruling must come from fresh RingBroken evidence.
+        for k in &recipients {
+            self.inflight.remove(k);
+        }
+    }
+
+    /// Churn observed while running: collect reports from everyone not
+    /// yet accounted for (bounded by the grace timer), then re-prepare.
+    fn enter_drain(&mut self, broken: BTreeSet<Key>, out: &mut Vec<CoordOut>) {
+        if outstanding(&self.live, &self.done, &broken) == 0 {
+            self.start_epoch(out);
+        } else {
+            self.timer_token += 1;
+            out.push(CoordOut::ArmTimer { token: self.timer_token });
+            self.phase = Phase::Draining { broken };
+        }
+    }
+
+    fn finish(&mut self, out: &mut Vec<CoordOut>) {
+        for &k in &self.live {
+            out.push(CoordOut::Shutdown { to: k });
+        }
+        self.phase = Phase::Finished;
+        out.push(CoordOut::Finished);
+    }
+}
+
+/// The member a received event is attributed to, if any.
+fn input_key(input: &CoordIn) -> Option<Key> {
+    match input {
+        CoordIn::Hello { key }
+        | CoordIn::PrepareAck { key, .. }
+        | CoordIn::RingBroken { key, .. }
+        | CoordIn::Heartbeat { key, .. }
+        | CoordIn::Done { key }
+        | CoordIn::Closed { key } => Some(*key),
+        CoordIn::Start | CoordIn::Timer { .. } => None,
+    }
+}
+
+/// Ack-wait resolution: once every recipient is accounted for, commit —
+/// unless any recipient finished or vanished mid-prepare, which makes
+/// the proposal stale and forces a fresh epoch.
+fn ready_act(
+    recipients: &[Key],
+    acked: &BTreeSet<Key>,
+    done: &BTreeSet<Key>,
+    live: &BTreeSet<Key>,
+) -> Act {
+    let ready = recipients
+        .iter()
+        .all(|k| acked.contains(k) || done.contains(k) || !live.contains(k));
+    if !ready {
+        return Act::None;
+    }
+    if recipients.iter().any(|k| done.contains(k) || !live.contains(k)) {
+        Act::StartEpoch
+    } else {
+        Act::Commit
+    }
+}
+
+fn outstanding(live: &BTreeSet<Key>, done: &BTreeSet<Key>, broken: &BTreeSet<Key>) -> usize {
+    live.iter().filter(|k| !done.contains(k) && !broken.contains(k)).count()
+}
+
+/// Re-prepare as soon as every live member is done or accounted broken.
+fn drained_act(live: &BTreeSet<Key>, done: &BTreeSet<Key>, broken: &BTreeSet<Key>) -> Act {
+    if outstanding(live, done, broken) == 0 {
+        Act::StartEpoch
+    } else {
+        Act::None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(ranks: &[u32]) -> Vec<Key> {
+        ranks.iter().map(|&r| (r, 0)).collect()
+    }
+
+    fn start(sm: &mut CoordinatorSm) -> Vec<CoordOut> {
+        sm.handle(CoordIn::Start)
+    }
+
+    fn prepares(out: &[CoordOut]) -> Vec<Key> {
+        out.iter()
+            .filter_map(|o| match o {
+                CoordOut::Prepare { to, .. } => Some(*to),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn commits(out: &[CoordOut]) -> Vec<Key> {
+        out.iter()
+            .filter_map(|o| match o {
+                CoordOut::Commit { to, .. } => Some(*to),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn happy_path_commits_then_finishes() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1, 2]), 1, 4);
+        let out = start(&mut sm);
+        assert_eq!(prepares(&out), keys(&[0, 1, 2]));
+        assert_eq!(sm.epoch(), 1);
+        // Two acks: not ready yet.
+        assert!(sm.handle(CoordIn::PrepareAck { key: (0, 0), epoch: 1 }).is_empty());
+        assert!(sm.handle(CoordIn::PrepareAck { key: (1, 0), epoch: 1 }).is_empty());
+        // Third ack commits.
+        let out = sm.handle(CoordIn::PrepareAck { key: (2, 0), epoch: 1 });
+        assert_eq!(commits(&out), keys(&[0, 1, 2]));
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, CoordOut::Committed { epoch: 1, stage: 0, drain_round: 0 })));
+        // All done → shutdown + finished.
+        assert!(sm.handle(CoordIn::Done { key: (0, 0) }).is_empty());
+        assert!(sm.handle(CoordIn::Done { key: (1, 0) }).is_empty());
+        let out = sm.handle(CoordIn::Done { key: (2, 0) });
+        assert_eq!(out.iter().filter(|o| matches!(o, CoordOut::Shutdown { .. })).count(), 3);
+        assert!(matches!(out.last(), Some(CoordOut::Finished)));
+        assert!(sm.is_finished());
+    }
+
+    /// Satellite edge case: a worker dies *between* its PrepareAck and
+    /// the Commit.  The proposal must be superseded by a fresh epoch
+    /// that excludes the dead member — never committed as-is.
+    #[test]
+    fn death_between_ack_and_commit_supersedes_epoch() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1]), 1, 4);
+        start(&mut sm);
+        assert!(sm.handle(CoordIn::PrepareAck { key: (0, 0), epoch: 1 }).is_empty());
+        // Worker 0 dies before worker 1's ack lands.
+        let out = sm.handle(CoordIn::Closed { key: (0, 0) });
+        assert!(commits(&out).is_empty(), "must not commit a dead member");
+        assert_eq!(sm.epoch(), 2, "proposal superseded");
+        assert_eq!(prepares(&out), keys(&[1]));
+        // The stale ack for epoch 1 is ignored; the fresh one commits.
+        assert!(sm.handle(CoordIn::PrepareAck { key: (1, 0), epoch: 1 }).is_empty());
+        let out = sm.handle(CoordIn::PrepareAck { key: (1, 0), epoch: 2 });
+        assert_eq!(commits(&out), keys(&[1]));
+    }
+
+    /// Satellite edge case: the ack arrives, then the member's channel
+    /// closes moments before Commit would have been sent (i.e. the ack
+    /// completed the wait but a Done/closure made the proposal stale).
+    #[test]
+    fn recipient_finishing_mid_prepare_forces_fresh_epoch() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1]), 1, 4);
+        start(&mut sm);
+        assert!(sm.handle(CoordIn::PrepareAck { key: (0, 0), epoch: 1 }).is_empty());
+        // Worker 1 reports Done instead of acking: the wait completes
+        // but the membership proposal is stale → re-prepare without it.
+        let out = sm.handle(CoordIn::Done { key: (1, 0) });
+        assert!(commits(&out).is_empty());
+        assert_eq!(sm.epoch(), 2);
+        assert_eq!(prepares(&out), keys(&[0]));
+    }
+
+    /// Satellite edge case: a Hello from a stale generation (a worker
+    /// re-announcing itself after churn) is inert — no outputs, no
+    /// state change.
+    #[test]
+    fn stale_hello_is_ignored() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1]), 1, 4);
+        start(&mut sm);
+        let before_epoch = sm.epoch();
+        assert!(sm.handle(CoordIn::Hello { key: (0, 0) }).is_empty());
+        assert!(sm.handle(CoordIn::Hello { key: (9, 0) }).is_empty());
+        assert_eq!(sm.epoch(), before_epoch);
+        assert_eq!(sm.live().len(), 2);
+    }
+
+    #[test]
+    fn ack_timeout_reprepares() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1]), 1, 4);
+        let out = start(&mut sm);
+        let token = out
+            .iter()
+            .find_map(|o| match o {
+                CoordOut::ArmTimer { token } => Some(*token),
+                _ => None,
+            })
+            .unwrap();
+        assert!(sm.handle(CoordIn::PrepareAck { key: (0, 0), epoch: 1 }).is_empty());
+        // Stale token: ignored.
+        assert!(sm.handle(CoordIn::Timer { token: token + 99 }).is_empty());
+        // Live token: re-prepare with a fresh epoch.
+        let out = sm.handle(CoordIn::Timer { token });
+        assert_eq!(sm.epoch(), 2);
+        assert_eq!(prepares(&out), keys(&[0, 1]));
+    }
+
+    #[test]
+    fn unanimous_break_drains_and_bumps_resume() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1]), 1, 8);
+        start(&mut sm);
+        sm.handle(CoordIn::PrepareAck { key: (0, 0), epoch: 1 });
+        sm.handle(CoordIn::PrepareAck { key: (1, 0), epoch: 1 });
+        // Both report the same in-flight round 3 with 2 applied.
+        let out = sm.handle(CoordIn::RingBroken {
+            key: (0, 0),
+            applied_rounds: 2,
+            in_flight_round: 3,
+        });
+        assert!(prepares(&out).is_empty(), "waits for the second report");
+        let out = sm.handle(CoordIn::RingBroken {
+            key: (1, 0),
+            applied_rounds: 2,
+            in_flight_round: 3,
+        });
+        assert_eq!(sm.epoch(), 2);
+        let drain = out
+            .iter()
+            .find_map(|o| match o {
+                CoordOut::Prepare { drain_round, resume_round, .. } => {
+                    Some((*drain_round, *resume_round))
+                }
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(drain, (3, 4), "drain round 3, resume past it");
+    }
+
+    #[test]
+    fn mixed_reports_discard() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1]), 1, 8);
+        start(&mut sm);
+        sm.handle(CoordIn::PrepareAck { key: (0, 0), epoch: 1 });
+        sm.handle(CoordIn::PrepareAck { key: (1, 0), epoch: 1 });
+        sm.handle(CoordIn::RingBroken { key: (0, 0), applied_rounds: 2, in_flight_round: 3 });
+        let out =
+            sm.handle(CoordIn::RingBroken { key: (1, 0), applied_rounds: 3, in_flight_round: 4 });
+        let drain = out
+            .iter()
+            .find_map(|o| match o {
+                CoordOut::Prepare { drain_round, .. } => Some(*drain_round),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(drain, 0, "disagreement must discard");
+        assert_eq!(sm.resume_round(), 4, "resume from max applied + 1");
+    }
+
+    #[test]
+    fn all_members_lost_fails() {
+        let mut sm = CoordinatorSm::new(keys(&[0]), 1, 4);
+        start(&mut sm);
+        let out = sm.handle(CoordIn::Closed { key: (0, 0) });
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, CoordOut::Failed { reason } if reason == "all workers died")));
+        assert!(sm.is_failed());
+        // Terminal: further inputs are inert.
+        assert!(sm.handle(CoordIn::Start).is_empty());
+    }
+
+    #[test]
+    fn stage_fleet_prunes_partial_clusters() {
+        // Two clusters × two stages; cluster 1 loses stage 0.
+        let members = vec![(0, 0), (0, 1), (1, 0), (1, 1)];
+        let mut sm = CoordinatorSm::new(members, 2, 4);
+        let out = start(&mut sm);
+        assert_eq!(prepares(&out).len(), 4);
+        for k in [(0, 0), (0, 1), (1, 1)] {
+            sm.handle(CoordIn::PrepareAck { key: k, epoch: 1 });
+        }
+        let out = sm.handle(CoordIn::Closed { key: (1, 0) });
+        // The fresh epoch prunes the whole cluster 1: its surviving
+        // stage gets a Shutdown, and the new rings only span cluster 0.
+        assert!(out
+            .iter()
+            .any(|o| matches!(o, CoordOut::Shutdown { to } if *to == (1, 1))));
+        assert_eq!(prepares(&out), vec![(0, 0), (0, 1)]);
+        assert!(!sm.live().contains(&(1, 1)));
+        // Events from the orphan are now filtered.
+        assert!(sm
+            .handle(CoordIn::RingBroken { key: (1, 1), applied_rounds: 9, in_flight_round: 9 })
+            .is_empty());
+        assert_eq!(sm.resume_round(), 1, "orphan report must not bump resume");
+    }
+
+    #[test]
+    fn stage_fleet_finishing_epoch_solo_rings_and_link_teardown() {
+        let mut sm = CoordinatorSm::new(vec![(0, 0), (0, 1)], 2, 2);
+        let out = start(&mut sm);
+        // Initially stage 0 links down to stage 1.
+        let link = out
+            .iter()
+            .find_map(|o| match o {
+                CoordOut::Prepare { to: (0, 0), link_down, .. } => Some(*link_down),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(link, Some((0, 1)));
+        sm.handle(CoordIn::PrepareAck { key: (0, 0), epoch: 1 });
+        sm.handle(CoordIn::PrepareAck { key: (0, 1), epoch: 1 });
+        // Stage 1 finishes round 2 then stage 0 breaks holding round 2
+        // in flight: resume (3) > rounds (2) → a finishing epoch.
+        sm.handle(CoordIn::Heartbeat { key: (0, 1), round: 2 });
+        let out =
+            sm.handle(CoordIn::RingBroken { key: (0, 0), applied_rounds: 1, in_flight_round: 2 });
+        // Only the broken stage is outstanding… the other one is still
+        // running, so the coordinator drains first.
+        let out = if prepares(&out).is_empty() {
+            sm.handle(CoordIn::Done { key: (0, 1) })
+        } else {
+            out
+        };
+        assert_eq!(sm.epoch(), 2);
+        // Stage 0 holds a unanimous in-flight round 2 → drain ring; the
+        // link to the finished stage below must be torn down.
+        let (ring, link, drain) = out
+            .iter()
+            .find_map(|o| match o {
+                CoordOut::Prepare { to: (0, 0), ring, link_down, drain_round, .. } => {
+                    Some((ring.clone(), *link_down, *drain_round))
+                }
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(ring, vec![(0, 0)]);
+        assert_eq!(link, None, "finishing epoch must not dial the done stage");
+        assert_eq!(drain, 2);
+    }
+}

@@ -1,0 +1,310 @@
+//! Pure, I/O-free elastic membership protocol: the 2PC epoch/drain core
+//! as explicit state machines.
+//!
+//! This module is the *correctness core* of the elastic fleet, factored
+//! out of [`crate::transport::elastic`] so it can be exhaustively
+//! verified: [`coordinator::CoordinatorSm`] and [`worker::WorkerSm`] are
+//! plain `fn handle(&mut self, input) -> Vec<output>` machines with no
+//! sockets, no threads, and no clocks — timers and failure detection
+//! arrive as explicit inputs.  The TCP shell in `transport::elastic`
+//! feeds wire frames into the same machines that the deterministic
+//! simulation harness ([`sim`]) drives over virtual time, so every
+//! interleaving the simulator explores is an execution the deployed
+//! fleet could take.
+//!
+//! # Coordinator state diagram
+//!
+//! ```text
+//!             Start/-re-prepare-------------------------------.
+//!               v                                             |
+//!  +-----------------+  all recipients acked  +-----------+   |
+//!  |    Preparing    |----------------------->|  Running  |   |
+//!  | (2PC prepare,   |   (send Commit, log    | (epoch    |   |
+//!  |  ack collection)|    drain decision)     |  committed)|  |
+//!  +-----------------+                        +-----------+   |
+//!    |  ^    | ack timer fired,                  |    |       |
+//!    |  |    | member closed,                    |    | churn |
+//!    |  |    | member done        all live done  |    v       |
+//!    |  |    '----------------.   (Shutdown)     | +----------+
+//!    |  '---------------------|------------------+ | Draining |
+//!    |     re-prepare         v                    | (collect |
+//!    |                    [Finished]               |  breaks) |
+//!    '--- no member left → [Failed]                +----------+
+//!                                             grace timer / all broken
+//!                                                  → re-prepare
+//! ```
+//!
+//! Every epoch is one 2PC generation: `Prepare{epoch, members,
+//! resume_round, drain_round}` → unanimous `PrepareAck{epoch}` →
+//! `Commit{epoch}`.  Any membership change observed mid-prepare (a
+//! closed control channel, a member finishing) supersedes the proposal
+//! with a fresh epoch, so **at most one membership is ever committed per
+//! epoch number** — the first safety invariant the simulator asserts.
+//!
+//! # Worker state diagram
+//!
+//! ```text
+//!   Waiting --Prepare(e>committed)/ack--> Waiting(prepared=e)
+//!   Waiting --Commit(prepared)----------> Forming   (shell dials ring)
+//!   Forming --ok--------> Beginning  (consensus resync + recovery)
+//!   Forming --fail------> Waiting    (report RingBroken)
+//!   Beginning --ok------> Running    (rounds resume_round..=T)
+//!   Beginning --fail----> Waiting    (report RingBroken)
+//!   Running --completed-> Finishing  (trailing in-flight drain)
+//!   Running --broken----> Waiting    (report RingBroken)
+//!   Finishing --ok------> AwaitShutdown (report Done)
+//!   Finishing --fail----> Waiting    (report RingBroken)
+//!   Waiting/AwaitShutdown --Shutdown--> Exited
+//! ```
+//!
+//! # The drain-unanimity invariant
+//!
+//! With one-step-delay overlap every worker holds one δ-reduction in
+//! flight across each round boundary, so churn catches reductions
+//! mid-flight.  The committed `drain_round` of each epoch is computed by
+//! [`drain_decision`]: **drain** (finish the held reduction of round t
+//! on the re-formed ring, exactly once) only when *every* member of the
+//! proposed ring reported the *same* in-flight round t; any
+//! disagreement, any member with nothing in flight, or any member that
+//! never reported forces **discard** (each survivor folds its delta
+//! back into error feedback, where it re-enters the next round's δ
+//! exactly once).  A partial drain collective would stall on the
+//! members with nothing to reduce, so unanimity is the precondition.
+//! The per-worker side of the same arithmetic is [`resume_plan`] —
+//! consumed by the real [`crate::rounds::driver::RoundDriver`] and by
+//! the simulator's virtual driver, so the two cannot diverge.
+//!
+//! # How `sim` schedules relate to real transports
+//!
+//! The harness in [`sim`] replaces every I/O edge with a FIFO queue and
+//! every blocking collective with a ring barrier: delivering a queued
+//! message, firing an armed timer, completing a ring barrier, and
+//! injecting a crash or soft break are *scheduler actions*, and an
+//! execution is one interleaving of those actions.  A TCP deployment is
+//! one particular schedule (messages arrive in socket order, timers
+//! fire when wall-clock grace expires, crashes land wherever the OS
+//! lands them); the fuzzer and the bounded exhaustive explorer walk the
+//! schedules the wall clock happens not to pick.
+
+pub mod coordinator;
+pub mod sim;
+pub mod worker;
+
+pub use coordinator::{CoordIn, CoordOut, CoordinatorSm};
+pub use worker::{EpochPlan, WorkerIn, WorkerOut, WorkerPhase, WorkerSm};
+
+/// Member identity: `(cluster, stage)`.  The single-vector DP fleet is
+/// the degenerate `stage = 0` case.
+pub type Key = (u32, u32);
+
+/// The committed per-ring recovery decision carried by
+/// `Prepare`/`StagePrepare` (see the module docs for the unanimity
+/// rule).  Lives here — next to [`drain_decision`], which produces it —
+/// and is re-exported by [`crate::rounds::driver`], which consumes it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Recovery {
+    /// Fold any in-flight delta into the error buffer (also the benign
+    /// epoch-1 case: nothing in flight, nothing to do).
+    Discard,
+    /// Finish the in-flight reduction of this round on the re-formed
+    /// ring and apply its outer update.
+    Drain { round: u64 },
+}
+
+impl Recovery {
+    /// Wire encoding: `drain_round` field of Prepare/StagePrepare
+    /// (0 = discard).
+    pub fn from_wire(drain_round: u32) -> Recovery {
+        if drain_round == 0 {
+            Recovery::Discard
+        } else {
+            Recovery::Drain { round: drain_round as u64 }
+        }
+    }
+
+    pub fn to_wire(&self) -> u32 {
+        match self {
+            Recovery::Discard => 0,
+            Recovery::Drain { round } => *round as u32,
+        }
+    }
+}
+
+/// The coordinator-side drain-or-discard rule (module docs): drain only
+/// when EVERY member of the proposed ring reported the SAME in-flight
+/// round; mixed rounds, a `None` (member never reported), a `Some(0)`
+/// (member reported nothing in flight), or an empty membership all
+/// force discard.  Returns the drain round (0 = discard).
+pub fn drain_decision(reported: impl Iterator<Item = Option<u32>>) -> u32 {
+    let mut agreed = 0u32;
+    let mut any = false;
+    for r in reported {
+        any = true;
+        match r {
+            None | Some(0) => return 0,
+            Some(v) if agreed == 0 => agreed = v,
+            Some(v) if v != agreed => return 0,
+            _ => {}
+        }
+    }
+    if any {
+        agreed
+    } else {
+        0
+    }
+}
+
+/// What a worker must do with its held in-flight delta on entering a
+/// committed epoch — the worker-side resume arithmetic, pure so the
+/// real driver and the simulator's virtual driver share one copy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResumePlan {
+    /// Nothing in flight: plain consensus resync only.
+    Nothing,
+    /// The committed decision drains our held round: re-reduce it on
+    /// the fresh ring and apply its outer update (exactly once).
+    Drain { round: u64 },
+    /// The abandoned flight COMPLETED before the epoch turned, so the
+    /// old ring's peers already applied its mean — apply it exactly
+    /// once here too (late join), instead of re-injecting it via the
+    /// discard fold.
+    LateJoin { round: u64 },
+    /// Fold the in-flight delta of this round back into error
+    /// feedback, where it re-enters the next round's δ exactly once.
+    Discard { round: u64 },
+}
+
+/// Compute the [`ResumePlan`] from the committed recovery decision, the
+/// round of the delta this worker still holds in flight (if any), and
+/// whether the abandoned flight's collective already completed.
+///
+/// Precedence mirrors the driver's historical behavior: a committed
+/// drain *for the round we hold* wins (the re-formed ring must
+/// re-reduce collectively, every member present — even if our old
+/// flight completed, its mean is dropped in favor of the fresh
+/// collective); otherwise a completed flight late-joins; otherwise the
+/// held delta is discarded.
+pub fn resume_plan(
+    recovery: Recovery,
+    in_flight: Option<u64>,
+    flight_completed: bool,
+) -> ResumePlan {
+    match in_flight {
+        None => ResumePlan::Nothing,
+        Some(r) => match recovery {
+            Recovery::Drain { round } if round == r => ResumePlan::Drain { round },
+            _ if flight_completed => ResumePlan::LateJoin { round: r },
+            _ => ResumePlan::Discard { round: r },
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn recovery_wire_roundtrip() {
+        assert_eq!(Recovery::from_wire(0), Recovery::Discard);
+        assert_eq!(Recovery::from_wire(5), Recovery::Drain { round: 5 });
+        assert_eq!(Recovery::Drain { round: 5 }.to_wire(), 5);
+        assert_eq!(Recovery::Discard.to_wire(), 0);
+    }
+
+    #[test]
+    fn drain_decision_hand_cases() {
+        assert_eq!(drain_decision([Some(3), Some(3)].into_iter()), 3);
+        assert_eq!(drain_decision([Some(3), Some(2)].into_iter()), 0);
+        assert_eq!(drain_decision([Some(3), None].into_iter()), 0);
+        assert_eq!(drain_decision([Some(0), Some(3)].into_iter()), 0);
+        assert_eq!(drain_decision(std::iter::empty()), 0);
+        assert_eq!(drain_decision([Some(7)].into_iter()), 7);
+    }
+
+    /// Property test over seeded arbitrary report vectors: the decision
+    /// is drain(t) iff the vector is non-empty and every entry is
+    /// `Some(t)` with t > 0; everything else must discard.
+    #[test]
+    fn drain_decision_property_unanimity() {
+        let mut rng = Pcg32::seed_from(0xd4a1);
+        for case in 0..5000 {
+            let len = rng.below(6) as usize; // 0..=5 members
+            let reports: Vec<Option<u32>> = (0..len)
+                .map(|_| match rng.below(4) {
+                    0 => None,
+                    // Small round domain so unanimity actually occurs.
+                    _ => Some(rng.below(4)),
+                })
+                .collect();
+            let got = drain_decision(reports.iter().copied());
+            let unanimous = !reports.is_empty()
+                && reports[0].is_some_and(|r| r > 0)
+                && reports.iter().all(|&x| x == reports[0]);
+            let want = if unanimous { reports[0].unwrap() } else { 0 };
+            assert_eq!(
+                got, want,
+                "case {case}: reports {reports:?} → got {got}, want {want}"
+            );
+        }
+    }
+
+    /// Any drain the rule emits is a round some member actually holds
+    /// (never invented), and a drain is never emitted alongside a
+    /// dissenting member — fuzzing the rule's two safety edges.
+    #[test]
+    fn drain_decision_property_never_invents_rounds() {
+        let mut rng = Pcg32::seed_from(0xfeed);
+        for _ in 0..5000 {
+            let len = rng.below(8) as usize;
+            let reports: Vec<Option<u32>> = (0..len)
+                .map(|_| match rng.below(3) {
+                    0 => None,
+                    _ => Some(rng.below(1000)),
+                })
+                .collect();
+            let d = drain_decision(reports.iter().copied());
+            if d > 0 {
+                assert!(reports.iter().all(|&x| x == Some(d)), "{reports:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn resume_plan_cases() {
+        use ResumePlan as P;
+        // Nothing in flight → nothing to do, whatever was committed.
+        assert_eq!(resume_plan(Recovery::Discard, None, false), P::Nothing);
+        assert_eq!(
+            resume_plan(Recovery::Drain { round: 3 }, None, false),
+            P::Nothing
+        );
+        // Matching drain wins, even over a completed flight.
+        assert_eq!(
+            resume_plan(Recovery::Drain { round: 3 }, Some(3), false),
+            P::Drain { round: 3 }
+        );
+        assert_eq!(
+            resume_plan(Recovery::Drain { round: 3 }, Some(3), true),
+            P::Drain { round: 3 }
+        );
+        // Mismatched drain degrades to the local cases.
+        assert_eq!(
+            resume_plan(Recovery::Drain { round: 2 }, Some(3), false),
+            P::Discard { round: 3 }
+        );
+        assert_eq!(
+            resume_plan(Recovery::Drain { round: 2 }, Some(3), true),
+            P::LateJoin { round: 3 }
+        );
+        // Discard decision: completed flight late-joins, live one folds.
+        assert_eq!(
+            resume_plan(Recovery::Discard, Some(5), true),
+            P::LateJoin { round: 5 }
+        );
+        assert_eq!(
+            resume_plan(Recovery::Discard, Some(5), false),
+            P::Discard { round: 5 }
+        );
+    }
+}

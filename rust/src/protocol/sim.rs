@@ -1,0 +1,880 @@
+//! Deterministic virtual-time simulation of the elastic protocol:
+//! a bounded exhaustive interleaving explorer and a seeded
+//! random-schedule fuzzer over the pure machines.
+//!
+//! The harness runs one [`CoordinatorSm`] and N [`WorkerSm`]s with
+//! every I/O edge replaced by a FIFO queue and every blocking
+//! collective replaced by a ring rendezvous.  A *scheduler action* is
+//! one atomic step: deliver one queued message, complete or fail one
+//! worker's parked collective, inject a crash or soft break, or fire
+//! the armed grace timer.  An execution is a sequence of actions run
+//! to quiescence; the explorer and fuzzer walk many executions and
+//! assert the protocol's safety invariants after every step:
+//!
+//! - at most one membership is committed per epoch number, never
+//!   containing a departed or finished member;
+//! - a committed drain round is actually held in flight by every ring
+//!   member (the unanimity rule matched ground truth);
+//! - each round's outer update lands **at most once per worker**
+//!   (drain, late join and normal rounds share one ledger);
+//! - a discarded delta folds into error feedback at most once before
+//!   it re-enters the next completed round's delta.
+//!
+//! At quiescence a liveness check runs: the coordinator must have
+//! finished (or failed with every worker crashed), and every
+//! non-crashed worker must have completed its rounds and exited
+//! cleanly.  A deadlocked schedule — enabled actions exhausted short
+//! of that — is reported as a violation with its minimized schedule.
+//!
+//! Faithfulness notes: message queues are per-peer FIFO (TCP order),
+//! a crashed worker's `Closed` is queued *behind* everything it
+//! already sent (reader-thread EOF order), collectives can complete
+//! for one member and fail for another (partial drains), and the fate
+//! of an abandoned in-flight reduction — completed before the epoch
+//! turned, or not — is a scheduler choice, because on a real network
+//! it is a race.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt;
+
+use super::coordinator::{CoordIn, CoordOut, CoordinatorSm};
+use super::worker::{EpochPlan, WorkerIn, WorkerOut, WorkerPhase, WorkerSm};
+use super::{resume_plan, Recovery, ResumePlan};
+use crate::util::rng::Pcg32;
+
+/// Hard per-execution step bound; exceeding it is reported as a
+/// livelock violation rather than spinning forever.
+const STEP_LIMIT: u32 = 20_000;
+
+/// Fleet shape and fault budgets for one batch of executions.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub workers: u32,
+    pub rounds: u32,
+    /// One-step-delay overlap (in-flight reductions across round
+    /// boundaries) — the mode the drain/discard machinery exists for.
+    pub overlap: bool,
+    /// Crash injections allowed per execution (worker dies, channel
+    /// closes after its queued traffic).
+    pub crashes: u32,
+    /// Soft-break injections allowed per execution (a worker aborts
+    /// its round loop but stays alive, like an injected fault plan).
+    pub breaks: u32,
+}
+
+impl SimConfig {
+    pub fn small() -> SimConfig {
+        SimConfig { workers: 3, rounds: 2, overlap: true, crashes: 1, breaks: 1 }
+    }
+}
+
+/// A schedule that violated an invariant: the deviation list replays
+/// it deterministically (at step `s`, take enabled-action index `c`;
+/// every other step takes index 0).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub deviations: Vec<(u32, u32)>,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "protocol violation: {} :: repro deviations={:?}", self.msg, self.deviations)
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExploreStats {
+    /// Distinct executions run to quiescence.
+    pub executions: u64,
+    /// Longest execution observed, in scheduler steps.
+    pub max_steps: u32,
+    /// True when the execution cap stopped further branching.
+    pub capped: bool,
+}
+
+/// One scheduler step.  Ordering in the enabled list is the *default
+/// schedule*: deliveries first (a healthy network), then collective
+/// completions, then failures and fault injections.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Action {
+    /// Deliver the next coordinator→worker control frame.
+    DeliverDown(usize),
+    /// Deliver the next worker→coordinator event.
+    DeliverUp(usize),
+    /// Complete the worker's parked collective.  For a Begin holding
+    /// an abandoned flight the bool is the flight's fate: `true` if
+    /// the old collective completed before the epoch turned (late
+    /// join), `false` if it died with the ring (discard).
+    Complete(usize, bool),
+    /// Fail the worker's parked collective (only enabled when some
+    /// ring peer observably diverged — crashed, broke out, moved on).
+    Fail(usize),
+    /// Inject a soft break: the worker aborts its round loop.
+    SoftBreak(usize),
+    /// Inject a crash: the worker dies, its channel EOFs behind its
+    /// queued traffic.
+    Crash(usize),
+    /// Fire the armed coordinator timer (grace expiry).  Only offered
+    /// when nothing else can run, as a deadlock backstop.
+    FireTimer,
+}
+
+/// What a worker's shell would be blocked on in a real deployment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+enum JobKind {
+    Form,
+    Begin,
+    Round(u32),
+    Fin,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Job {
+    epoch: u32,
+    kind: JobKind,
+}
+
+/// Worker → coordinator control events (per-worker FIFO).
+#[derive(Clone, Debug)]
+enum UpMsg {
+    Ack { epoch: u32 },
+    Broken { applied: u32, in_flight: u32 },
+    Heartbeat { round: u32 },
+    Done,
+    Closed,
+}
+
+/// Pure model of [`crate::rounds::driver::RoundDriver`]'s round/flight
+/// arithmetic, sharing [`resume_plan`] with the real driver, plus the
+/// per-worker safety ledgers the invariants are asserted against.
+#[derive(Clone, Debug)]
+struct VirtualDriver {
+    overlap: bool,
+    applied: u32,
+    in_flight: Option<u32>,
+    /// Round of a discarded delta folded into error feedback, awaiting
+    /// re-entry into the next completed round's delta.
+    pending_error: Option<u32>,
+    /// Ledger: rounds whose outer update landed on this worker.
+    applied_set: BTreeSet<u32>,
+}
+
+impl VirtualDriver {
+    fn new(overlap: bool) -> VirtualDriver {
+        VirtualDriver {
+            overlap,
+            applied: 0,
+            in_flight: None,
+            pending_error: None,
+            applied_set: BTreeSet::new(),
+        }
+    }
+
+    /// Land round `r`'s outer update — the invariant: at most once.
+    fn apply(&mut self, r: u32) -> Result<(), String> {
+        if !self.applied_set.insert(r) {
+            return Err(format!("round {r} outer update applied twice on one worker"));
+        }
+        self.applied = self.applied.max(r);
+        Ok(())
+    }
+
+    /// Enter a committed epoch: resolve the held flight per the
+    /// committed recovery ruling (consensus resync has no ledger
+    /// effect).  `flight_completed` is the scheduler-chosen fate of
+    /// the abandoned collective.
+    fn begin_epoch(&mut self, recovery: Recovery, flight_completed: bool) -> Result<(), String> {
+        let plan = resume_plan(recovery, self.in_flight.map(u64::from), flight_completed);
+        match plan {
+            ResumePlan::Nothing => Ok(()),
+            ResumePlan::Drain { round } | ResumePlan::LateJoin { round } => {
+                self.in_flight = None;
+                self.apply(round as u32)
+            }
+            ResumePlan::Discard { round } => {
+                if let Some(held) = self.pending_error {
+                    return Err(format!(
+                        "discarded round {round} while round {held} still awaits re-entry"
+                    ));
+                }
+                self.pending_error = Some(round as u32);
+                self.in_flight = None;
+                Ok(())
+            }
+        }
+    }
+
+    /// Complete round `r`: under overlap, join (apply) the previous
+    /// flight and launch this round's; synchronously, apply directly.
+    /// Forming this round's delta consumes any pending error fold.
+    fn complete_round(&mut self, r: u32) -> Result<(), String> {
+        if self.overlap {
+            if let Some(f) = self.in_flight.take() {
+                self.apply(f)?;
+            }
+            self.in_flight = Some(r);
+        } else {
+            self.apply(r)?;
+        }
+        self.pending_error = None;
+        Ok(())
+    }
+
+    /// Trailing drain at the end of the round loop.
+    fn finish(&mut self) -> Result<(), String> {
+        if let Some(f) = self.in_flight.take() {
+            self.apply(f)?;
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Node {
+    sm: WorkerSm,
+    driver: VirtualDriver,
+    crashed: bool,
+    /// The collective this worker's shell is parked on, if any.
+    job: Option<Job>,
+    /// Sent its Done report.
+    completed: bool,
+    /// `Some(clean)` once the machine exited.
+    exited: Option<bool>,
+}
+
+/// One simulated fleet: machines, queues, barrier bookkeeping and the
+/// safety ledgers.  Cloneable so the explorer can branch.
+#[derive(Clone, Debug)]
+struct Sim {
+    cfg: SimConfig,
+    coord: CoordinatorSm,
+    nodes: Vec<Node>,
+    c2w: Vec<VecDeque<WorkerIn>>,
+    w2c: Vec<VecDeque<UpMsg>>,
+    /// Armed coordinator timer token (one-shot).
+    timer: Option<u64>,
+    finished: bool,
+    failed: Option<String>,
+    crashes_left: u32,
+    breaks_left: u32,
+    steps: u32,
+    /// Proposed ring (member ids) per epoch.
+    epoch_rings: BTreeMap<u32, Vec<u32>>,
+    /// Committed drain ruling per epoch.
+    epoch_drains: BTreeMap<u32, u32>,
+    /// Epochs that reached commit (safety: each at most once).
+    committed_epochs: BTreeSet<u32>,
+    /// Members that completed a collective instance, for rendezvous.
+    done_jobs: BTreeMap<(u32, JobKind), BTreeSet<u32>>,
+}
+
+impl Sim {
+    fn new(cfg: SimConfig) -> Result<Sim, String> {
+        let n = cfg.workers as usize;
+        let mut sim = Sim {
+            cfg,
+            coord: CoordinatorSm::new((0..cfg.workers).map(|w| (w, 0)), 1, cfg.rounds),
+            nodes: (0..n)
+                .map(|_| Node {
+                    sm: WorkerSm::new(cfg.rounds, false),
+                    driver: VirtualDriver::new(cfg.overlap),
+                    crashed: false,
+                    job: None,
+                    completed: false,
+                    exited: None,
+                })
+                .collect(),
+            c2w: vec![VecDeque::new(); n],
+            w2c: vec![VecDeque::new(); n],
+            timer: None,
+            finished: false,
+            failed: None,
+            crashes_left: cfg.crashes,
+            breaks_left: cfg.breaks,
+            steps: 0,
+            epoch_rings: BTreeMap::new(),
+            epoch_drains: BTreeMap::new(),
+            committed_epochs: BTreeSet::new(),
+            done_jobs: BTreeMap::new(),
+        };
+        let outs = sim.coord.handle(CoordIn::Start);
+        sim.process_coord_out(outs)?;
+        Ok(sim)
+    }
+
+    fn deliver_down(&mut self, w: usize, msg: WorkerIn) {
+        if !self.nodes[w].crashed {
+            self.c2w[w].push_back(msg);
+        }
+    }
+
+    /// Route one batch of coordinator outputs, checking the commit
+    /// safety invariants as they pass by.
+    fn process_coord_out(&mut self, outs: Vec<CoordOut>) -> Result<(), String> {
+        let mut committed_this_call = None;
+        for o in outs {
+            match o {
+                CoordOut::Prepare { to, epoch, resume_round, ring, drain_round, .. } => {
+                    let members: Vec<u32> = ring.iter().map(|&(c, _)| c).collect();
+                    match self.epoch_rings.get(&epoch) {
+                        Some(prev) if *prev != members => {
+                            return Err(format!(
+                                "epoch {epoch} proposed with two different rings: {prev:?} vs {members:?}"
+                            ));
+                        }
+                        Some(_) => {}
+                        None => {
+                            self.epoch_rings.insert(epoch, members.clone());
+                            self.epoch_drains.insert(epoch, drain_round);
+                        }
+                    }
+                    let plan = EpochPlan { epoch, resume_round, members, drain_round };
+                    self.deliver_down(to.0 as usize, WorkerIn::Prepare(plan));
+                }
+                CoordOut::Commit { to, epoch } => {
+                    if committed_this_call != Some(epoch) {
+                        committed_this_call = Some(epoch);
+                        if !self.committed_epochs.insert(epoch) {
+                            return Err(format!("epoch {epoch} committed twice"));
+                        }
+                        let drain = self.epoch_drains.get(&epoch).copied().unwrap_or(0);
+                        for &m in self.epoch_rings.get(&epoch).into_iter().flatten() {
+                            if !self.coord.live().contains(&(m, 0)) {
+                                return Err(format!(
+                                    "epoch {epoch} committed a ring containing departed member {m}"
+                                ));
+                            }
+                            // The unanimity ruling must match ground
+                            // truth: a committed drain is drainable by
+                            // every member.
+                            if drain > 0 && self.nodes[m as usize].driver.in_flight != Some(drain) {
+                                return Err(format!(
+                                    "epoch {epoch} committed drain of round {drain} but member {m} holds {:?}",
+                                    self.nodes[m as usize].driver.in_flight
+                                ));
+                            }
+                        }
+                    }
+                    if self.coord.done().contains(&to) {
+                        return Err(format!("epoch {epoch} committed to finished member {to:?}"));
+                    }
+                    self.deliver_down(to.0 as usize, WorkerIn::Commit { epoch });
+                }
+                CoordOut::Shutdown { to } => self.deliver_down(to.0 as usize, WorkerIn::Shutdown),
+                CoordOut::ArmTimer { token } => self.timer = Some(token),
+                CoordOut::Committed { .. } => {}
+                CoordOut::Finished => self.finished = true,
+                CoordOut::Failed { reason } => self.failed = Some(reason),
+            }
+        }
+        Ok(())
+    }
+
+    /// Feed one event into a worker machine and execute the local
+    /// (non-blocking) effects it requests; blocking collectives park
+    /// the worker on a job instead.
+    fn feed_worker(&mut self, w: usize, input: WorkerIn) -> Result<(), String> {
+        let mut inputs = VecDeque::from([input]);
+        while let Some(i) = inputs.pop_front() {
+            let outs = self.nodes[w].sm.handle(i);
+            for o in outs {
+                match o {
+                    WorkerOut::SendAck { epoch } => self.w2c[w].push_back(UpMsg::Ack { epoch }),
+                    WorkerOut::SendBroken { .. } => {
+                        let d = &self.nodes[w].driver;
+                        self.w2c[w].push_back(UpMsg::Broken {
+                            applied: d.applied,
+                            in_flight: d.in_flight.unwrap_or(0),
+                        });
+                    }
+                    WorkerOut::FormRing { plan, .. } => {
+                        self.nodes[w].job = Some(Job { epoch: plan.epoch, kind: JobKind::Form });
+                    }
+                    WorkerOut::BeginEpoch { plan, .. } => {
+                        self.nodes[w].job = Some(Job { epoch: plan.epoch, kind: JobKind::Begin });
+                    }
+                    WorkerOut::RunRounds { start } => {
+                        if start > self.cfg.rounds {
+                            inputs.push_back(WorkerIn::RoundsEnd { completed: true });
+                        } else {
+                            let epoch = self.nodes[w].sm.epoch();
+                            self.nodes[w].job = Some(Job { epoch, kind: JobKind::Round(start) });
+                        }
+                    }
+                    WorkerOut::Finish => {
+                        if self.nodes[w].driver.in_flight.is_some() {
+                            let epoch = self.nodes[w].sm.epoch();
+                            self.nodes[w].job = Some(Job { epoch, kind: JobKind::Fin });
+                        } else {
+                            inputs.push_back(WorkerIn::FinishResult { ok: true });
+                        }
+                    }
+                    WorkerOut::SendDone => {
+                        self.nodes[w].completed = true;
+                        self.w2c[w].push_back(UpMsg::Done);
+                    }
+                    WorkerOut::Exit { error } => {
+                        self.nodes[w].exited = Some(error.is_none());
+                        self.nodes[w].job = None;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn feed_coord(&mut self, w: usize, msg: UpMsg) -> Result<(), String> {
+        let key = (w as u32, 0);
+        let input = match msg {
+            UpMsg::Ack { epoch } => CoordIn::PrepareAck { key, epoch },
+            UpMsg::Broken { applied, in_flight } => {
+                CoordIn::RingBroken { key, applied_rounds: applied, in_flight_round: in_flight }
+            }
+            UpMsg::Heartbeat { round } => CoordIn::Heartbeat { key, round },
+            UpMsg::Done => CoordIn::Done { key },
+            UpMsg::Closed => CoordIn::Closed { key },
+        };
+        let outs = self.coord.handle(input);
+        self.process_coord_out(outs)
+    }
+
+    /// Member `m` has reached (is parked at, or already completed)
+    /// this collective instance — its contribution is available.
+    fn reached(&self, m: u32, job: Job) -> bool {
+        self.nodes[m as usize].job == Some(job)
+            || self
+                .done_jobs
+                .get(&(job.epoch, job.kind))
+                .is_some_and(|s| s.contains(&m))
+    }
+
+    /// Member `m` can never reach this instance: it died, broke out of
+    /// the epoch, exited, or committed past it.
+    fn diverged(&self, m: u32, job: Job) -> bool {
+        let n = &self.nodes[m as usize];
+        n.crashed
+            || n.sm.epoch() > job.epoch
+            || (n.sm.epoch() == job.epoch
+                && matches!(n.sm.phase(), WorkerPhase::Waiting | WorkerPhase::Exited))
+    }
+
+    fn can_complete(&self, w: usize) -> bool {
+        let node = &self.nodes[w];
+        if node.crashed {
+            return false;
+        }
+        let Some(job) = node.job else { return false };
+        let Some(ring) = self.epoch_rings.get(&job.epoch) else { return false };
+        ring.iter().all(|&m| self.reached(m, job))
+    }
+
+    fn can_fail(&self, w: usize) -> bool {
+        let node = &self.nodes[w];
+        if node.crashed {
+            return false;
+        }
+        let Some(job) = node.job else { return false };
+        let Some(ring) = self.epoch_rings.get(&job.epoch) else { return false };
+        ring.iter().any(|&m| m as usize != w && self.diverged(m, job))
+    }
+
+    /// Whether a Begin completion's outcome depends on the abandoned
+    /// flight's fate (would otherwise discard — a completed flight
+    /// late-joins instead).
+    fn fate_matters(&self, w: usize) -> bool {
+        let node = &self.nodes[w];
+        let Some(plan) = node.sm.current_plan() else { return false };
+        matches!(
+            resume_plan(plan.recovery(), node.driver.in_flight.map(u64::from), false),
+            ResumePlan::Discard { .. }
+        )
+    }
+
+    fn enabled_actions(&self) -> Vec<Action> {
+        let mut acts = Vec::new();
+        for (w, node) in self.nodes.iter().enumerate() {
+            if !node.crashed && node.sm.wants_read() && !self.c2w[w].is_empty() {
+                acts.push(Action::DeliverDown(w));
+            }
+        }
+        for w in 0..self.nodes.len() {
+            if !self.w2c[w].is_empty() {
+                acts.push(Action::DeliverUp(w));
+            }
+        }
+        for (w, node) in self.nodes.iter().enumerate() {
+            if self.can_complete(w) {
+                acts.push(Action::Complete(w, false));
+                if node.job.map(|j| j.kind) == Some(JobKind::Begin) && self.fate_matters(w) {
+                    acts.push(Action::Complete(w, true));
+                }
+            }
+        }
+        for w in 0..self.nodes.len() {
+            if self.can_fail(w) {
+                acts.push(Action::Fail(w));
+            }
+        }
+        if self.breaks_left > 0 {
+            for (w, node) in self.nodes.iter().enumerate() {
+                if !node.crashed && matches!(node.job.map(|j| j.kind), Some(JobKind::Round(_))) {
+                    acts.push(Action::SoftBreak(w));
+                }
+            }
+        }
+        if self.crashes_left > 0 {
+            for (w, node) in self.nodes.iter().enumerate() {
+                if !node.crashed && node.sm.phase() != WorkerPhase::Exited {
+                    acts.push(Action::Crash(w));
+                }
+            }
+        }
+        if acts.is_empty() && self.timer.is_some() {
+            acts.push(Action::FireTimer);
+        }
+        acts
+    }
+
+    fn complete_job(&mut self, w: usize, fate: bool) -> Result<(), String> {
+        let job = self.nodes[w].job.take().expect("complete without a parked job");
+        self.done_jobs.entry((job.epoch, job.kind)).or_default().insert(w as u32);
+        match job.kind {
+            JobKind::Form => self.feed_worker(w, WorkerIn::FormResult { ok: true }),
+            JobKind::Begin => {
+                let plan =
+                    self.nodes[w].sm.current_plan().cloned().expect("begin without a plan");
+                self.nodes[w].driver.begin_epoch(plan.recovery(), fate)?;
+                self.feed_worker(w, WorkerIn::BeginResult { ok: true })
+            }
+            JobKind::Round(r) => {
+                self.nodes[w].driver.complete_round(r)?;
+                self.w2c[w].push_back(UpMsg::Heartbeat { round: r });
+                if r + 1 > self.cfg.rounds {
+                    self.feed_worker(w, WorkerIn::RoundsEnd { completed: true })
+                } else {
+                    self.nodes[w].job = Some(Job { epoch: job.epoch, kind: JobKind::Round(r + 1) });
+                    Ok(())
+                }
+            }
+            JobKind::Fin => {
+                self.nodes[w].driver.finish()?;
+                self.feed_worker(w, WorkerIn::FinishResult { ok: true })
+            }
+        }
+    }
+
+    fn fail_job(&mut self, w: usize) -> Result<(), String> {
+        let job = self.nodes[w].job.take().expect("fail without a parked job");
+        let input = match job.kind {
+            JobKind::Form => WorkerIn::FormResult { ok: false },
+            JobKind::Begin => WorkerIn::BeginResult { ok: false },
+            JobKind::Round(_) => WorkerIn::RoundsEnd { completed: false },
+            JobKind::Fin => WorkerIn::FinishResult { ok: false },
+        };
+        self.feed_worker(w, input)
+    }
+
+    fn apply(&mut self, a: Action) -> Result<(), String> {
+        self.steps += 1;
+        match a {
+            Action::DeliverDown(w) => {
+                let msg = self.c2w[w].pop_front().expect("empty c2w");
+                self.feed_worker(w, msg)
+            }
+            Action::DeliverUp(w) => {
+                let msg = self.w2c[w].pop_front().expect("empty w2c");
+                self.feed_coord(w, msg)
+            }
+            Action::Complete(w, fate) => self.complete_job(w, fate),
+            Action::Fail(w) => self.fail_job(w),
+            Action::SoftBreak(w) => {
+                self.breaks_left -= 1;
+                self.fail_job(w)
+            }
+            Action::Crash(w) => {
+                self.crashes_left -= 1;
+                self.nodes[w].crashed = true;
+                // EOF lands behind everything already sent.
+                self.w2c[w].push_back(UpMsg::Closed);
+                Ok(())
+            }
+            Action::FireTimer => {
+                let token = self.timer.take().expect("no armed timer");
+                let outs = self.coord.handle(CoordIn::Timer { token });
+                self.process_coord_out(outs)
+            }
+        }
+    }
+
+    /// Liveness: a quiescent state must be a proper terminal state.
+    fn check_quiescent(&self) -> Result<(), String> {
+        if let Some(reason) = &self.failed {
+            if self.nodes.iter().all(|n| n.crashed) {
+                return Ok(());
+            }
+            return Err(format!("coordinator failed ({reason}) with workers still alive"));
+        }
+        if !self.finished {
+            return Err("deadlock: no enabled actions but the coordinator never finished".into());
+        }
+        for (w, n) in self.nodes.iter().enumerate() {
+            if n.crashed {
+                continue;
+            }
+            if !n.completed {
+                return Err(format!("worker {w} never completed its rounds"));
+            }
+            if n.exited != Some(true) {
+                return Err(format!("worker {w} did not exit cleanly (exited: {:?})", n.exited));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run one schedule described by a deviation list: at step `s` take
+/// enabled-action index `c`, otherwise index 0.  Returns the failure
+/// message if the schedule violates an invariant.
+pub fn replay(cfg: SimConfig, deviations: &[(u32, u32)]) -> Result<(), String> {
+    let mut sim = Sim::new(cfg)?;
+    loop {
+        let actions = sim.enabled_actions();
+        if actions.is_empty() {
+            return sim.check_quiescent();
+        }
+        if sim.steps > STEP_LIMIT {
+            return Err("execution exceeded the step limit (livelock?)".into());
+        }
+        let choice = deviations
+            .iter()
+            .find(|d| d.0 == sim.steps)
+            .map(|d| d.1 as usize)
+            .unwrap_or(0)
+            .min(actions.len() - 1);
+        sim.apply(actions[choice])?;
+    }
+}
+
+/// Bounded exhaustive explorer: depth-first over schedules, where
+/// following the default action (index 0) is free and each deviation
+/// consumes one unit of `preemptions` budget — the classic
+/// context-bounding that keeps small-fleet exploration tractable
+/// while still covering crash/soft-break injection at every protocol
+/// point (fault injections are deviations like any other).
+pub fn explore(
+    cfg: SimConfig,
+    preemptions: u32,
+    max_execs: u64,
+) -> Result<ExploreStats, Violation> {
+    let sim = Sim::new(cfg).map_err(|msg| Violation { deviations: Vec::new(), msg })?;
+    let mut stats = ExploreStats::default();
+    let mut trail = Vec::new();
+    dfs(sim, preemptions, max_execs, &mut trail, &mut stats)?;
+    Ok(stats)
+}
+
+fn dfs(
+    mut sim: Sim,
+    budget: u32,
+    cap: u64,
+    trail: &mut Vec<(u32, u32)>,
+    stats: &mut ExploreStats,
+) -> Result<(), Violation> {
+    loop {
+        let actions = sim.enabled_actions();
+        if actions.is_empty() {
+            stats.executions += 1;
+            stats.max_steps = stats.max_steps.max(sim.steps);
+            return sim
+                .check_quiescent()
+                .map_err(|msg| Violation { deviations: trail.clone(), msg });
+        }
+        if sim.steps > STEP_LIMIT {
+            return Err(Violation {
+                deviations: trail.clone(),
+                msg: "execution exceeded the step limit (livelock?)".into(),
+            });
+        }
+        if budget > 0 {
+            for (i, &a) in actions.iter().enumerate().skip(1) {
+                if stats.executions >= cap {
+                    stats.capped = true;
+                    break;
+                }
+                let mut alt = sim.clone();
+                trail.push((sim.steps, i as u32));
+                let step = match alt.apply(a) {
+                    Ok(()) => dfs(alt, budget - 1, cap, trail, stats),
+                    Err(msg) => Err(Violation { deviations: trail.clone(), msg }),
+                };
+                trail.pop();
+                step?;
+            }
+        }
+        sim.apply(actions[0]).map_err(|msg| Violation { deviations: trail.clone(), msg })?;
+    }
+}
+
+/// Seeded random-schedule fuzzer: `seeds` independent Pcg32 walks over
+/// the enabled-action lists.  On a violation the failing schedule is
+/// minimized (greedily resetting choices to the default) before being
+/// reported, so the repro line stays short.
+pub fn fuzz(cfg: SimConfig, seeds: u32, base_seed: u64) -> Result<u32, Violation> {
+    for seed in 0..seeds {
+        let mut rng = Pcg32::seed_from(base_seed.wrapping_add(seed as u64));
+        let mut choices: Vec<u32> = Vec::new();
+        let mut sim = match Sim::new(cfg) {
+            Ok(s) => s,
+            Err(msg) => return Err(Violation { deviations: Vec::new(), msg }),
+        };
+        let failure = loop {
+            let actions = sim.enabled_actions();
+            if actions.is_empty() {
+                break sim.check_quiescent().err();
+            }
+            if sim.steps > STEP_LIMIT {
+                break Some("execution exceeded the step limit (livelock?)".to_string());
+            }
+            let c = rng.below(actions.len() as u32);
+            choices.push(c);
+            if let Err(e) = sim.apply(actions[c as usize]) {
+                break Some(e);
+            }
+        };
+        if let Some(msg) = failure {
+            return Err(minimize(cfg, choices, msg));
+        }
+    }
+    Ok(seeds)
+}
+
+/// Greedy schedule minimization: reset each non-default choice to the
+/// default (back to front) and keep the reset whenever the schedule
+/// still fails.
+fn minimize(cfg: SimConfig, mut choices: Vec<u32>, mut msg: String) -> Violation {
+    for i in (0..choices.len()).rev() {
+        if choices[i] == 0 {
+            continue;
+        }
+        let saved = choices[i];
+        choices[i] = 0;
+        match run_choices(cfg, &choices) {
+            Some(m) => msg = m,
+            None => choices[i] = saved,
+        }
+    }
+    let deviations = choices
+        .iter()
+        .enumerate()
+        .filter(|&(_, &c)| c != 0)
+        .map(|(i, &c)| (i as u32, c))
+        .collect();
+    Violation { deviations, msg }
+}
+
+/// Replay a full choice vector (indexed by step, clamped to the
+/// enabled-action count); `Some(msg)` when the schedule fails.
+fn run_choices(cfg: SimConfig, choices: &[u32]) -> Option<String> {
+    let mut sim = match Sim::new(cfg) {
+        Ok(s) => s,
+        Err(msg) => return Some(msg),
+    };
+    loop {
+        let actions = sim.enabled_actions();
+        if actions.is_empty() {
+            return sim.check_quiescent().err();
+        }
+        if sim.steps > STEP_LIMIT {
+            return Some("execution exceeded the step limit (livelock?)".to_string());
+        }
+        let c = choices.get(sim.steps as usize).copied().unwrap_or(0) as usize;
+        let c = c.min(actions.len() - 1);
+        if let Err(e) = sim.apply(actions[c]) {
+            return Some(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The fault-free default schedule is a healthy fleet run.
+    #[test]
+    fn default_schedule_completes() {
+        let cfg = SimConfig { workers: 3, rounds: 2, overlap: true, crashes: 0, breaks: 0 };
+        let stats = explore(cfg, 0, 1).expect("default schedule must hold invariants");
+        assert_eq!(stats.executions, 1);
+        assert!(stats.max_steps > 20, "a real execution ran ({} steps)", stats.max_steps);
+    }
+
+    /// Acceptance gate: ≥ 1000 distinct executions for a 3-worker
+    /// fleet with crash and soft-break injection available at every
+    /// protocol point, every invariant holding.
+    #[test]
+    fn exhaustive_three_workers_with_faults() {
+        let stats = match explore(SimConfig::small(), 2, 20_000) {
+            Ok(s) => s,
+            Err(v) => panic!("{v}"),
+        };
+        assert!(
+            stats.executions >= 1000,
+            "explorer must enumerate >= 1000 executions, got {}",
+            stats.executions
+        );
+    }
+
+    /// Delivery-order permutations alone (no faults) must all converge
+    /// to the same terminal shape.
+    #[test]
+    fn exhaustive_no_fault_permutations() {
+        let cfg = SimConfig { workers: 3, rounds: 2, overlap: true, crashes: 0, breaks: 0 };
+        let stats = match explore(cfg, 2, 10_000) {
+            Ok(s) => s,
+            Err(v) => panic!("{v}"),
+        };
+        assert!(stats.executions >= 100, "got {}", stats.executions);
+    }
+
+    /// Synchronous (non-overlap) mode: nothing is ever in flight, so
+    /// every recovery is a discard-of-nothing.
+    #[test]
+    fn exhaustive_sync_mode() {
+        let cfg = SimConfig { workers: 2, rounds: 2, overlap: false, crashes: 1, breaks: 1 };
+        if let Err(v) = explore(cfg, 2, 10_000) {
+            panic!("{v}");
+        }
+    }
+
+    /// Seeded fuzz walks over a slightly larger fleet/horizon.
+    #[test]
+    fn fuzz_holds_invariants() {
+        let cfg = SimConfig { workers: 3, rounds: 3, overlap: true, crashes: 1, breaks: 1 };
+        if let Err(v) = fuzz(cfg, 60, 0x51b0_77ed) {
+            panic!("{v}");
+        }
+    }
+
+    /// Two-worker fleet where both crash: the coordinator must fail
+    /// (never hang), and that terminal shape passes liveness.
+    #[test]
+    fn all_crashed_fleet_fails_cleanly() {
+        let cfg = SimConfig { workers: 2, rounds: 2, overlap: true, crashes: 2, breaks: 0 };
+        if let Err(v) = explore(cfg, 2, 10_000) {
+            panic!("{v}");
+        }
+    }
+
+    /// A violation repro line replays deterministically: an
+    /// artificially broken invariant check is out of reach here, so
+    /// instead assert that replaying the default schedule succeeds and
+    /// that deviations index real decision points.
+    #[test]
+    fn replay_is_deterministic() {
+        let cfg = SimConfig::small();
+        assert_eq!(replay(cfg, &[]), Ok(()));
+        // A deviation at step 0 still terminates cleanly.
+        assert_eq!(replay(cfg, &[(0, 1)]), Ok(()));
+    }
+}

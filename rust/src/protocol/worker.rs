@@ -1,0 +1,363 @@
+//! The worker side of the elastic 2PC epoch protocol as a pure state
+//! machine.
+//!
+//! [`WorkerSm`] sequences one worker's life across epochs — ack a
+//! proposal, form the ring on commit, enter the epoch (consensus
+//! resync + drain/discard recovery), run rounds, drain the trailing
+//! flight, report Done, wait for Shutdown — without performing any of
+//! those effects itself.  The effects come back as [`WorkerOut`]
+//! requests; their results return as [`WorkerIn`] events.  The TCP
+//! worker loop in [`crate::transport::elastic`] and the simulator's
+//! virtual workers ([`super::sim`]) both drive this machine, so the
+//! sequencing logic exists exactly once.
+//!
+//! Ring membership is carried as opaque member ids (`u32`): cluster
+//! ranks for the single fleet, cluster ids for a stage fleet.  The
+//! shell keeps the wire-level detail (ports, link endpoints) keyed by
+//! epoch and resolves it when the machine asks it to form the ring.
+
+use super::Recovery;
+
+/// One committed or proposed epoch, as seen by a worker.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EpochPlan {
+    pub epoch: u32,
+    pub resume_round: u32,
+    /// Reduce-ring members (ids; the shell maps them to endpoints).
+    pub members: Vec<u32>,
+    /// Committed drain-or-discard ruling (wire encoding, 0 = discard).
+    pub drain_round: u32,
+}
+
+impl EpochPlan {
+    pub fn recovery(&self) -> Recovery {
+        Recovery::from_wire(self.drain_round)
+    }
+}
+
+/// Events fed into the worker machine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkerIn {
+    /// 2PC phase one from the coordinator.
+    Prepare(EpochPlan),
+    /// 2PC phase two: commit a previously acked proposal.
+    Commit { epoch: u32 },
+    /// Coordinator closed the run (or this member's control channel).
+    Shutdown,
+    /// Result of the [`WorkerOut::FormRing`] request.
+    FormResult { ok: bool },
+    /// Result of the [`WorkerOut::BeginEpoch`] request.
+    BeginResult { ok: bool },
+    /// The round loop ended: `completed` when every round through the
+    /// configured horizon finished, `false` when the ring broke (peer
+    /// failure or an injected soft break).
+    RoundsEnd { completed: bool },
+    /// Result of the [`WorkerOut::Finish`] trailing drain.
+    FinishResult { ok: bool },
+}
+
+/// Effects the worker machine requests from its shell.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkerOut {
+    /// Send `PrepareAck{epoch}` to the coordinator.
+    SendAck { epoch: u32 },
+    /// Send `RingBroken` for this epoch (the shell fills in the
+    /// applied/in-flight rounds from its driver).
+    SendBroken { epoch: u32 },
+    /// Dial/accept the reduce ring (and, in a stage fleet, the
+    /// inter-stage links — skipped when `finishing`).  Answer with
+    /// [`WorkerIn::FormResult`].
+    FormRing { plan: EpochPlan, finishing: bool },
+    /// Enter the committed epoch: consensus resync, then apply the
+    /// recovery ruling via [`super::resume_plan`].  Answer with
+    /// [`WorkerIn::BeginResult`].
+    BeginEpoch { plan: EpochPlan, finishing: bool },
+    /// Run outer rounds starting at `start`.  Answer with
+    /// [`WorkerIn::RoundsEnd`].
+    RunRounds { start: u32 },
+    /// Drain the trailing in-flight reduction.  Answer with
+    /// [`WorkerIn::FinishResult`].
+    Finish,
+    /// Send the final `Done` report to the coordinator.
+    SendDone,
+    /// Leave the protocol loop.  `error` is `Some` when the shutdown
+    /// arrived before this worker ever completed (single-fleet
+    /// semantics: a premature shutdown is an error).
+    Exit { error: Option<&'static str> },
+}
+
+/// Observable phase of the worker machine (see the state diagram in
+/// the [module docs](super)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerPhase {
+    /// Blocking on the coordinator channel for Prepare/Commit.
+    Waiting,
+    /// Ring formation in progress.
+    Forming,
+    /// Consensus resync + recovery in progress.
+    Beginning,
+    /// Outer rounds in progress.
+    Running,
+    /// Trailing drain in progress.
+    Finishing,
+    /// Done reported; blocking on the coordinator for Shutdown.
+    AwaitShutdown,
+    Exited,
+}
+
+/// Pure worker machine for the elastic membership protocol.
+#[derive(Clone, Debug)]
+pub struct WorkerSm {
+    /// Last *committed* epoch (acked proposals don't advance this).
+    epoch: u32,
+    /// Configured outer-round horizon.
+    rounds: u32,
+    /// Whether a Shutdown while still waiting is a clean exit (stage
+    /// fleets shut orphans down mid-run; the single fleet treats a
+    /// pre-completion shutdown as an error).
+    clean_early_shutdown: bool,
+    /// Acked-but-not-committed proposal.
+    prepared: Option<EpochPlan>,
+    /// The committed epoch currently being executed.
+    committed: Option<EpochPlan>,
+    phase: WorkerPhase,
+}
+
+impl WorkerSm {
+    pub fn new(rounds: u32, clean_early_shutdown: bool) -> WorkerSm {
+        WorkerSm {
+            epoch: 0,
+            rounds,
+            clean_early_shutdown,
+            prepared: None,
+            committed: None,
+            phase: WorkerPhase::Waiting,
+        }
+    }
+
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    pub fn phase(&self) -> WorkerPhase {
+        self.phase
+    }
+
+    /// True when the machine is blocked on the coordinator channel —
+    /// the only states in which the shell should read control frames.
+    pub fn wants_read(&self) -> bool {
+        matches!(self.phase, WorkerPhase::Waiting | WorkerPhase::AwaitShutdown)
+    }
+
+    /// The epoch plan currently being executed, if any.
+    pub fn current_plan(&self) -> Option<&EpochPlan> {
+        self.committed.as_ref()
+    }
+
+    /// Feed one event; returns every effect it causes, in order.
+    pub fn handle(&mut self, input: WorkerIn) -> Vec<WorkerOut> {
+        let mut out = Vec::new();
+        match (self.phase, input) {
+            (WorkerPhase::Waiting, WorkerIn::Prepare(plan)) => {
+                // Only proposals beyond the committed generation are
+                // ackable; a stale re-delivery is ignored.
+                if plan.epoch > self.epoch {
+                    out.push(WorkerOut::SendAck { epoch: plan.epoch });
+                    self.prepared = Some(plan);
+                }
+            }
+            (WorkerPhase::Waiting, WorkerIn::Commit { epoch }) => {
+                // A commit for anything but the acked proposal is
+                // stale (a superseded generation) and ignored.
+                if self.prepared.as_ref().map(|p| p.epoch) == Some(epoch) {
+                    let plan = self.prepared.take().unwrap();
+                    self.epoch = plan.epoch;
+                    let finishing = plan.resume_round > self.rounds;
+                    self.committed = Some(plan.clone());
+                    self.phase = WorkerPhase::Forming;
+                    out.push(WorkerOut::FormRing { plan, finishing });
+                }
+            }
+            (WorkerPhase::Waiting, WorkerIn::Shutdown) => {
+                self.phase = WorkerPhase::Exited;
+                let error = if self.clean_early_shutdown {
+                    None
+                } else {
+                    Some("coordinator shut down before commit")
+                };
+                out.push(WorkerOut::Exit { error });
+            }
+            (WorkerPhase::Forming, WorkerIn::FormResult { ok: true }) => {
+                let plan = self.committed.clone().expect("forming without a committed plan");
+                let finishing = plan.resume_round > self.rounds;
+                self.phase = WorkerPhase::Beginning;
+                out.push(WorkerOut::BeginEpoch { plan, finishing });
+            }
+            (WorkerPhase::Forming, WorkerIn::FormResult { ok: false }) => self.broken(&mut out),
+            (WorkerPhase::Beginning, WorkerIn::BeginResult { ok: true }) => {
+                let start = self.committed.as_ref().expect("beginning without a plan").resume_round;
+                self.phase = WorkerPhase::Running;
+                out.push(WorkerOut::RunRounds { start });
+            }
+            (WorkerPhase::Beginning, WorkerIn::BeginResult { ok: false }) => self.broken(&mut out),
+            (WorkerPhase::Running, WorkerIn::RoundsEnd { completed: true }) => {
+                self.phase = WorkerPhase::Finishing;
+                out.push(WorkerOut::Finish);
+            }
+            (WorkerPhase::Running, WorkerIn::RoundsEnd { completed: false }) => {
+                self.broken(&mut out)
+            }
+            (WorkerPhase::Finishing, WorkerIn::FinishResult { ok: true }) => {
+                self.phase = WorkerPhase::AwaitShutdown;
+                out.push(WorkerOut::SendDone);
+            }
+            (WorkerPhase::Finishing, WorkerIn::FinishResult { ok: false }) => self.broken(&mut out),
+            (WorkerPhase::AwaitShutdown, WorkerIn::Shutdown) => {
+                self.phase = WorkerPhase::Exited;
+                out.push(WorkerOut::Exit { error: None });
+            }
+            // Everything else — commits for unacked epochs, shutdown
+            // races, results landing after a phase change — is inert.
+            _ => {}
+        }
+        out
+    }
+
+    /// The current epoch's ring failed: report it and fall back to
+    /// waiting for the next proposal.
+    fn broken(&mut self, out: &mut Vec<WorkerOut>) {
+        out.push(WorkerOut::SendBroken { epoch: self.epoch });
+        self.committed = None;
+        self.phase = WorkerPhase::Waiting;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(epoch: u32, resume: u32, drain: u32) -> EpochPlan {
+        EpochPlan { epoch, resume_round: resume, members: vec![0, 1], drain_round: drain }
+    }
+
+    /// Drive one healthy epoch end-to-end through the machine.
+    #[test]
+    fn happy_path_epoch() {
+        let mut sm = WorkerSm::new(4, false);
+        let out = sm.handle(WorkerIn::Prepare(plan(1, 1, 0)));
+        assert_eq!(out, vec![WorkerOut::SendAck { epoch: 1 }]);
+        assert!(sm.wants_read());
+        let out = sm.handle(WorkerIn::Commit { epoch: 1 });
+        assert!(matches!(out[0], WorkerOut::FormRing { ref plan, finishing: false } if plan.epoch == 1));
+        assert_eq!(sm.epoch(), 1);
+        assert!(!sm.wants_read());
+        let out = sm.handle(WorkerIn::FormResult { ok: true });
+        assert!(matches!(out[0], WorkerOut::BeginEpoch { .. }));
+        let out = sm.handle(WorkerIn::BeginResult { ok: true });
+        assert_eq!(out, vec![WorkerOut::RunRounds { start: 1 }]);
+        let out = sm.handle(WorkerIn::RoundsEnd { completed: true });
+        assert_eq!(out, vec![WorkerOut::Finish]);
+        let out = sm.handle(WorkerIn::FinishResult { ok: true });
+        assert_eq!(out, vec![WorkerOut::SendDone]);
+        assert_eq!(sm.phase(), WorkerPhase::AwaitShutdown);
+        let out = sm.handle(WorkerIn::Shutdown);
+        assert_eq!(out, vec![WorkerOut::Exit { error: None }]);
+    }
+
+    #[test]
+    fn broken_ring_reports_and_rejoins_next_epoch() {
+        let mut sm = WorkerSm::new(4, false);
+        sm.handle(WorkerIn::Prepare(plan(1, 1, 0)));
+        sm.handle(WorkerIn::Commit { epoch: 1 });
+        sm.handle(WorkerIn::FormResult { ok: true });
+        sm.handle(WorkerIn::BeginResult { ok: true });
+        // The ring breaks mid-rounds.
+        let out = sm.handle(WorkerIn::RoundsEnd { completed: false });
+        assert_eq!(out, vec![WorkerOut::SendBroken { epoch: 1 }]);
+        assert_eq!(sm.phase(), WorkerPhase::Waiting);
+        // Next epoch carries a drain ruling and a bumped resume round.
+        let out = sm.handle(WorkerIn::Prepare(plan(2, 4, 3)));
+        assert_eq!(out, vec![WorkerOut::SendAck { epoch: 2 }]);
+        let out = sm.handle(WorkerIn::Commit { epoch: 2 });
+        let WorkerOut::FormRing { plan: p, .. } = &out[0] else { panic!("want FormRing") };
+        assert_eq!(p.recovery(), Recovery::Drain { round: 3 });
+        assert_eq!(p.resume_round, 4);
+    }
+
+    #[test]
+    fn stale_prepare_and_commit_are_ignored() {
+        let mut sm = WorkerSm::new(4, false);
+        sm.handle(WorkerIn::Prepare(plan(3, 1, 0)));
+        sm.handle(WorkerIn::Commit { epoch: 3 });
+        sm.handle(WorkerIn::FormResult { ok: false }); // back to Waiting
+        // A proposal at or below the committed generation is stale.
+        assert!(sm.handle(WorkerIn::Prepare(plan(3, 1, 0))).is_empty());
+        assert_eq!(sm.phase(), WorkerPhase::Waiting);
+        // A commit without a matching acked proposal is stale.
+        assert!(sm.handle(WorkerIn::Commit { epoch: 4 }).is_empty());
+        // A fresh proposal supersedes: ack + commit works.
+        assert_eq!(
+            sm.handle(WorkerIn::Prepare(plan(4, 2, 0))),
+            vec![WorkerOut::SendAck { epoch: 4 }]
+        );
+        assert!(matches!(
+            sm.handle(WorkerIn::Commit { epoch: 4 })[0],
+            WorkerOut::FormRing { .. }
+        ));
+    }
+
+    /// Satellite edge case: a soft break arriving during a *finishing*
+    /// epoch (resume already past the round horizon).  The machine
+    /// must report the break and re-enter the wait — never report Done
+    /// for work it did not finish.
+    #[test]
+    fn soft_break_during_finishing_epoch() {
+        let mut sm = WorkerSm::new(2, true);
+        // resume 3 > rounds 2: a finishing epoch draining round 2.
+        sm.handle(WorkerIn::Prepare(plan(5, 3, 2)));
+        let out = sm.handle(WorkerIn::Commit { epoch: 5 });
+        let WorkerOut::FormRing { finishing, .. } = out[0] else { panic!("want FormRing") };
+        assert!(finishing, "resume past the horizon must flag finishing");
+        // The drain collective itself breaks (a peer soft-broke).
+        sm.handle(WorkerIn::FormResult { ok: true });
+        let out = sm.handle(WorkerIn::BeginResult { ok: false });
+        assert_eq!(out, vec![WorkerOut::SendBroken { epoch: 5 }]);
+        assert_eq!(sm.phase(), WorkerPhase::Waiting);
+        // The re-proposed finishing epoch still carries the drain.
+        sm.handle(WorkerIn::Prepare(plan(6, 3, 2)));
+        let out = sm.handle(WorkerIn::Commit { epoch: 6 });
+        assert!(matches!(out[0], WorkerOut::FormRing { finishing: true, .. }));
+    }
+
+    #[test]
+    fn early_shutdown_semantics_differ_by_fleet_kind() {
+        // Single fleet: premature shutdown is an error.
+        let mut single = WorkerSm::new(4, false);
+        let out = single.handle(WorkerIn::Shutdown);
+        assert_eq!(
+            out,
+            vec![WorkerOut::Exit { error: Some("coordinator shut down before commit") }]
+        );
+        // Stage fleet: orphans are shut down mid-run, cleanly.
+        let mut staged = WorkerSm::new(4, true);
+        let out = staged.handle(WorkerIn::Shutdown);
+        assert_eq!(out, vec![WorkerOut::Exit { error: None }]);
+    }
+
+    /// A prepared-but-uncommitted proposal survives an intervening
+    /// break cycle only if its epoch is still ahead of the committed
+    /// one — mirroring the shell's per-wait proposal stash.
+    #[test]
+    fn reprepare_supersedes_stash() {
+        let mut sm = WorkerSm::new(4, false);
+        sm.handle(WorkerIn::Prepare(plan(1, 1, 0)));
+        // Coordinator re-prepares before committing (ack timeout).
+        sm.handle(WorkerIn::Prepare(plan(2, 1, 0)));
+        // The old commit no longer matches the stash.
+        assert!(sm.handle(WorkerIn::Commit { epoch: 1 }).is_empty());
+        assert!(matches!(
+            sm.handle(WorkerIn::Commit { epoch: 2 })[0],
+            WorkerOut::FormRing { .. }
+        ));
+    }
+}

@@ -54,8 +54,14 @@
 //! for the next epoch.
 
 use super::{movement, RingLane, RoundEngine};
+use crate::protocol::{resume_plan, ResumePlan};
 use crate::transport::RingTransport;
 use anyhow::Result;
+
+/// The committed per-ring recovery decision, re-exported from the pure
+/// protocol core ([`crate::protocol`]) where it is produced; the driver
+/// consumes it in [`RoundDriver::begin_epoch`].
+pub use crate::protocol::Recovery;
 
 /// What one worker trains between outer syncs, as seen by the driver:
 /// the driver owns the engine/lane algebra, the work owns the local
@@ -70,36 +76,6 @@ pub trait RoundWork {
     /// measured compute seconds per inner step).  An `Err` is CHURN
     /// (broken dataflow), not a fatal fault.
     fn local_round(&mut self, h: usize) -> Result<(f32, f64)>;
-}
-
-/// The committed per-ring recovery decision (see the module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Recovery {
-    /// Fold any in-flight delta into the error buffer (also the benign
-    /// epoch-1 case: nothing in flight, nothing to do).
-    Discard,
-    /// Finish the in-flight reduction of this round on the re-formed
-    /// ring and apply its outer update.
-    Drain { round: u64 },
-}
-
-impl Recovery {
-    /// Wire encoding: `drain_round` field of Prepare/StagePrepare
-    /// (0 = discard).
-    pub fn from_wire(drain_round: u32) -> Recovery {
-        if drain_round == 0 {
-            Recovery::Discard
-        } else {
-            Recovery::Drain { round: drain_round as u64 }
-        }
-    }
-
-    pub fn to_wire(&self) -> u32 {
-        match self {
-            Recovery::Discard => 0,
-            Recovery::Drain { round } => *round as u32,
-        }
-    }
 }
 
 /// Per-completed-round telemetry handed to the caller's sink (heartbeats
@@ -200,16 +176,12 @@ impl RoundDriver {
         recovery: Recovery,
     ) -> Result<()> {
         let late = self.lane.reseed(ring);
-        let drain_here = matches!(
-            recovery,
-            Recovery::Drain { round }
-                if self.engine.in_flight_round() == Some(round)
-        );
-        if !drain_here {
-            if let Some(avg) = late {
-                if let Some(r) = self.engine.complete_in_flight_with(&avg) {
-                    self.applied = self.applied.max(r as usize);
-                }
+        let plan =
+            resume_plan(recovery, self.engine.in_flight_round(), late.is_some());
+        if let ResumePlan::LateJoin { .. } = plan {
+            let avg = late.expect("late join without a completed collective");
+            if let Some(r) = self.engine.complete_in_flight_with(&avg) {
+                self.applied = self.applied.max(r as usize);
             }
         }
         {
@@ -219,23 +191,25 @@ impl RoundDriver {
             self.engine.set_theta(&theta);
         }
         self.engine.reset_outer();
-        if drain_here {
-            if let Recovery::Drain { round } = recovery {
+        match plan {
+            ResumePlan::Nothing | ResumePlan::LateJoin { .. } => {}
+            ResumePlan::Drain { round } => {
                 let _s =
                     crate::obs::span_at("driver", "recovery.drain", round as u32);
                 self.engine.drain(&mut self.lane)?;
                 self.applied = self.applied.max(round as usize);
             }
-        } else {
-            // Discard (or nothing left after the late join): any delta
-            // still in flight folds into the error buffer.  When rounds
-            // remain it re-enters the next δ exactly once; in a
-            // finishing epoch (no rounds left, peers already done) it is
-            // bounded staleness — the same tail a sync-mode final-round
-            // break has always had.
-            if let Some(r) = self.engine.in_flight_round() {
-                let _s =
-                    crate::obs::span_at("driver", "recovery.discard", r as u32);
+            // Discard: the delta still in flight folds into the error
+            // buffer.  When rounds remain it re-enters the next δ
+            // exactly once; in a finishing epoch (no rounds left, peers
+            // already done) it is bounded staleness — the same tail a
+            // sync-mode final-round break has always had.
+            ResumePlan::Discard { round } => {
+                let _s = crate::obs::span_at(
+                    "driver",
+                    "recovery.discard",
+                    round as u32,
+                );
                 self.engine.discard_in_flight();
             }
         }
@@ -468,14 +442,6 @@ mod tests {
             "every delta applied exactly once: θ = {}",
             d.engine().theta()[0]
         );
-    }
-
-    #[test]
-    fn recovery_wire_roundtrip() {
-        assert_eq!(Recovery::from_wire(0), Recovery::Discard);
-        assert_eq!(Recovery::from_wire(5), Recovery::Drain { round: 5 });
-        assert_eq!(Recovery::Drain { round: 5 }.to_wire(), 5);
-        assert_eq!(Recovery::Discard.to_wire(), 0);
     }
 
     #[test]

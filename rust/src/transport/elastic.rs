@@ -71,6 +71,20 @@
 //! round), and the first and last stage re-align no matter where the
 //! break caught each of them.  The un-churned path never resets, so
 //! threaded-vs-fleet bit parity is unaffected.
+//!
+//! # Where the protocol logic lives
+//!
+//! This module is deliberately a *shell*: every protocol decision —
+//! when to ack a proposal, what a broken collective means, epoch
+//! formation, membership pruning, the drain-or-discard ruling, grace
+//! draining, fleet completion — is made by the pure state machines in
+//! [`crate::protocol`] ([`CoordinatorSm`] on the coordinator side,
+//! [`WorkerSm`] in each worker process).  The code here only performs
+//! the machines' requested effects (socket I/O, TCP ring formation,
+//! the round driver) and feeds the results back as events.  The same
+//! machines run under the deterministic simulator in
+//! [`crate::protocol::sim`], so every interleaving the simulator
+//! verifies is an execution this shell could take.
 
 use crate::comm::ring::build_ring;
 use crate::compress::Method;
@@ -82,6 +96,10 @@ use crate::pipeline::exec::{
     StageTimeSummary, SyntheticPipeline,
 };
 use crate::pipeline::{one_f_one_b_schedule, validate_schedule};
+use crate::protocol::{
+    CoordIn, CoordOut, CoordinatorSm, EpochPlan, Key, WorkerIn, WorkerOut,
+    WorkerPhase, WorkerSm,
+};
 use crate::rounds::driver::{
     EpochEnd, Recovery, RoundDriver, RoundTelemetry, RoundWork,
 };
@@ -95,7 +113,7 @@ use crate::transport::tcp;
 use crate::transport::RingTransport;
 use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Context, Result};
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::process::{Command, Stdio};
 use std::sync::mpsc;
@@ -568,46 +586,6 @@ fn build_fleet_driver(opts: &WorkerOpts, theta0: Vec<f32>) -> RoundDriver {
     driver
 }
 
-/// Block on the control socket until the coordinator commits a membership
-/// epoch newer than `after_epoch`; acks every Prepare seen on the way.
-/// Returns (epoch, resume_round, members, drain_round).
-#[allow(clippy::type_complexity)]
-fn wait_for_commit(
-    coord: &mut TcpStream,
-    after_epoch: u32,
-) -> Result<(u32, u32, Vec<(u32, u16)>, u32)> {
-    coord
-        .set_read_timeout(Some(Duration::from_secs(120)))
-        .ok();
-    let mut prepared: Option<(u32, u32, Vec<(u32, u16)>, u32)> = None;
-    loop {
-        match read_msg(coord) {
-            Ok(Msg::Prepare { epoch, resume_round, members, drain_round })
-                if epoch > after_epoch =>
-            {
-                write_msg(coord, &Msg::PrepareAck { epoch })?;
-                prepared = Some((epoch, resume_round, members, drain_round));
-            }
-            Ok(Msg::Commit { epoch }) => {
-                if let Some(p) = prepared.clone() {
-                    if p.0 == epoch {
-                        return Ok(p);
-                    }
-                }
-                // A commit for an epoch we never prepared (superseded) —
-                // keep waiting for the current one.
-            }
-            Ok(Msg::Shutdown) => {
-                return Err(anyhow!("coordinator shut down before commit"))
-            }
-            Ok(_) => { /* stale frame — ignore */ }
-            Err(e) => {
-                return Err(anyhow!("control channel lost waiting for commit: {e:#}"))
-            }
-        }
-    }
-}
-
 /// Ship everything this process has recorded so far to the coordinator
 /// as one [`Msg::TraceEvents`] control frame.  Best-effort: a worker
 /// must never fail a round because a trace batch did.
@@ -622,6 +600,14 @@ fn ship_trace(coord: &mut TcpStream) {
 }
 
 /// Worker entry point (the `dilocox worker` subcommand body).
+///
+/// All protocol sequencing — when to ack, when to form the ring, what a
+/// broken collective means — lives in the pure [`WorkerSm`]; this loop
+/// only performs the machine's requested effects (socket writes, TCP
+/// ring formation, the epoch-aware round driver) and feeds the results
+/// back as events.  The machine only blocks on the coordinator while in
+/// a waiting phase, so the loop reads a control frame exactly when the
+/// effect queue runs dry.
 pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     obs::set_scope(opts.rank, 0);
     let addr: SocketAddr = opts
@@ -633,6 +619,7 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     let mut coord = TcpStream::connect_timeout(&addr, connect_timeout)
         .with_context(|| format!("dialing coordinator {addr}"))?;
     coord.set_nodelay(true).ok();
+    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
     let listener = TcpListener::bind("127.0.0.1:0").context("binding ring listener")?;
     let ring_port = listener.local_addr()?.port();
     write_msg(&mut coord, &Msg::Hello { rank: opts.rank, ring_port })?;
@@ -642,109 +629,152 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     // only by outer updates, a failed collective leaves it untouched, and
     // any in-flight overlap delta survives churn for drain-or-discard.
     let mut driver = build_fleet_driver(opts, trainer.params().to_vec());
-    let mut epoch = 0u32;
 
-    'epochs: loop {
-        let (e, resume_round, members, drain_round) = {
-            let _s = obs::span("elastic", "epoch.wait");
-            wait_for_commit(&mut coord, epoch)?
+    let mut sm = WorkerSm::new(opts.rounds as u32, false);
+    // Wire-level ring endpoints of acked proposals, keyed by epoch — the
+    // machine's plans carry only member ids.
+    let mut staged: BTreeMap<u32, Vec<(u32, u16)>> = BTreeMap::new();
+    let mut formed: Option<tcp::TcpRing> = None;
+    let mut effects: VecDeque<WorkerOut> = VecDeque::new();
+    loop {
+        let Some(effect) = effects.pop_front() else {
+            // No pending effects: the machine is blocked on the
+            // coordinator, so read one control frame and translate it.
+            let input = if sm.phase() == WorkerPhase::AwaitShutdown {
+                // Done reported: park until Shutdown (or coordinator EOF).
+                let _ = read_msg(&mut coord);
+                WorkerIn::Shutdown
+            } else {
+                let _s = obs::span("elastic", "epoch.wait");
+                match read_msg(&mut coord) {
+                    Ok(Msg::Prepare { epoch, resume_round, members, drain_round }) => {
+                        let ids = members.iter().map(|&(r, _)| r).collect();
+                        staged.insert(epoch, members);
+                        WorkerIn::Prepare(EpochPlan {
+                            epoch,
+                            resume_round,
+                            members: ids,
+                            drain_round,
+                        })
+                    }
+                    Ok(Msg::Commit { epoch }) => WorkerIn::Commit { epoch },
+                    Ok(Msg::Shutdown) => WorkerIn::Shutdown,
+                    Ok(_) => continue, // stale frame — ignore
+                    Err(e) => {
+                        return Err(anyhow!(
+                            "control channel lost waiting for commit: {e:#}"
+                        ))
+                    }
+                }
+            };
+            effects.extend(sm.handle(input));
+            continue;
         };
-        epoch = e;
-        obs::set_epoch(epoch);
-        let broken = |d: &RoundDriver| Msg::RingBroken {
-            epoch,
-            applied_rounds: d.applied() as u32,
-            in_flight_round: d.in_flight_round(),
-        };
-        let formed = {
-            let _s = obs::span("elastic", "ring.form");
-            tcp::form_ring(
-                opts.rank,
-                epoch,
-                &members,
-                &listener,
-                connect_timeout,
-                ring_timeout,
-            )
-        };
-        let raw = match formed {
-            Ok(r) => r,
-            Err(_) => {
-                let _ = write_msg(&mut coord, &broken(&driver));
-                continue 'epochs;
+        match effect {
+            WorkerOut::SendAck { epoch } => {
+                write_msg(&mut coord, &Msg::PrepareAck { epoch })?;
             }
-        };
-        let ring: Box<dyn RingTransport> = match &opts.faults {
-            Some(plan) => Box::new(FaultyRing::new(raw, plan.clone())),
-            None => Box::new(raw),
-        };
-
-        // Consensus resync + the committed drain-or-discard decision;
-        // a failure here is churn on the fresh ring (state preserved).
-        if driver
-            .begin_epoch(ring, Recovery::from_wire(drain_round))
-            .is_err()
-        {
-            let _ = write_msg(&mut coord, &broken(&driver));
-            continue 'epochs;
-        }
-
-        let end = {
-            let coord = &mut coord;
-            driver.run_rounds(
-                resume_round as usize,
-                trainer.as_work(),
-                &mut |t: RoundTelemetry| {
-                    let _ = write_msg(
-                        coord,
-                        &Msg::Heartbeat {
-                            round: t.round as u32,
-                            loss: t.loss,
-                            step_secs: t.step_secs as f32,
-                            wire_bytes: t.wire_bytes,
+            WorkerOut::SendBroken { epoch } => {
+                // Best-effort: if the control channel is gone too, the
+                // coordinator's failure detector covers it.
+                let _ = write_msg(
+                    &mut coord,
+                    &Msg::RingBroken {
+                        epoch,
+                        applied_rounds: driver.applied() as u32,
+                        in_flight_round: driver.in_flight_round(),
+                    },
+                );
+            }
+            WorkerOut::FormRing { plan, .. } => {
+                obs::set_epoch(plan.epoch);
+                // The commit consumed every proposal below this epoch.
+                staged.retain(|&e, _| e >= plan.epoch);
+                let members = staged.get(&plan.epoch).cloned().unwrap_or_default();
+                let ok = {
+                    let _s = obs::span("elastic", "ring.form");
+                    match tcp::form_ring(
+                        opts.rank,
+                        plan.epoch,
+                        &members,
+                        &listener,
+                        connect_timeout,
+                        ring_timeout,
+                    ) {
+                        Ok(r) => {
+                            formed = Some(r);
+                            true
+                        }
+                        Err(_) => false,
+                    }
+                };
+                effects.extend(sm.handle(WorkerIn::FormResult { ok }));
+            }
+            WorkerOut::BeginEpoch { plan, .. } => {
+                let raw = formed.take().expect("BeginEpoch without a formed ring");
+                let ring: Box<dyn RingTransport> = match &opts.faults {
+                    Some(fp) => Box::new(FaultyRing::new(raw, fp.clone())),
+                    None => Box::new(raw),
+                };
+                // Consensus resync + the committed drain-or-discard
+                // decision; a failure here is churn on the fresh ring
+                // (state preserved).
+                let ok = driver.begin_epoch(ring, plan.recovery()).is_ok();
+                effects.extend(sm.handle(WorkerIn::BeginResult { ok }));
+            }
+            WorkerOut::RunRounds { start } => {
+                let end = {
+                    let coord = &mut coord;
+                    driver.run_rounds(
+                        start as usize,
+                        trainer.as_work(),
+                        &mut |t: RoundTelemetry| {
+                            let _ = write_msg(
+                                coord,
+                                &Msg::Heartbeat {
+                                    round: t.round as u32,
+                                    loss: t.loss,
+                                    step_secs: t.step_secs as f32,
+                                    wire_bytes: t.wire_bytes,
+                                },
+                            );
+                            // Piggyback this round's trace batch on the
+                            // heartbeat (same control socket, so ordering
+                            // is preserved).
+                            ship_trace(coord);
                         },
-                    );
-                    // Piggyback this round's trace batch on the heartbeat
-                    // (same control socket, so ordering is preserved).
-                    ship_trace(coord);
-                },
-            )?
-        };
-        match end {
-            EpochEnd::Completed => {
+                    )?
+                };
+                let completed = matches!(end, EpochEnd::Completed);
+                effects.extend(sm.handle(WorkerIn::RoundsEnd { completed }));
+            }
+            WorkerOut::Finish => {
                 // Trailing in-flight reduction: a peer dying during the
                 // final collective is churn like any other — the next
                 // epoch's drain decision finishes the held delta.
-                if driver.finish(trainer.as_work()).is_err() {
-                    let _ = write_msg(&mut coord, &broken(&driver));
-                    continue 'epochs;
-                }
-                break;
+                let ok = driver.finish(trainer.as_work()).is_ok();
+                effects.extend(sm.handle(WorkerIn::FinishResult { ok }));
             }
-            EpochEnd::Broken(_) => {
-                let _ = write_msg(&mut coord, &broken(&driver));
-                continue 'epochs;
+            WorkerOut::SendDone => {
+                let final_loss = trainer.eval()?;
+                // Final trace batch (finish()'s drained reduction,
+                // recovery spans) BEFORE Done: the coordinator stops
+                // reading after the last Done.
+                ship_trace(&mut coord);
+                write_msg(
+                    &mut coord,
+                    &Msg::Done {
+                        rounds: driver.applied() as u32,
+                        wire_bytes: driver.wire_total(),
+                        final_loss,
+                        params: params_digest(driver.engine().theta()),
+                    },
+                )?;
             }
+            WorkerOut::Exit { error: Some(msg) } => return Err(anyhow!(msg)),
+            WorkerOut::Exit { error: None } => return Ok(()),
         }
     }
-
-    let final_loss = trainer.eval()?;
-    // Final trace batch (finish()'s drained reduction, recovery spans)
-    // BEFORE Done: the coordinator stops reading after the last Done.
-    ship_trace(&mut coord);
-    write_msg(
-        &mut coord,
-        &Msg::Done {
-            rounds: driver.applied() as u32,
-            wire_bytes: driver.wire_total(),
-            final_loss,
-            params: params_digest(driver.engine().theta()),
-        },
-    )?;
-    // Park until Shutdown (or coordinator EOF).
-    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
-    let _ = read_msg(&mut coord);
-    Ok(())
 }
 
 /// In-process reference for the single-vector fleet: the same trainers
@@ -864,57 +894,6 @@ fn build_stage_pipeline(
     }
 }
 
-/// Block on the control socket until the coordinator commits a membership
-/// epoch newer than `after_epoch`; acks every StagePrepare seen on the
-/// way.  `Ok(None)` = clean Shutdown (our cluster was dropped).
-/// Returns (epoch, resume_round, ring_members, link_down_port,
-/// drain_round).
-#[allow(clippy::type_complexity)]
-fn wait_for_stage_commit(
-    coord: &mut TcpStream,
-    after_epoch: u32,
-) -> Result<Option<(u32, u32, Vec<(u32, u16)>, u16, u32)>> {
-    coord
-        .set_read_timeout(Some(Duration::from_secs(120)))
-        .ok();
-    let mut prepared: Option<(u32, u32, Vec<(u32, u16)>, u16, u32)> = None;
-    loop {
-        match read_msg(coord) {
-            Ok(Msg::StagePrepare {
-                epoch,
-                resume_round,
-                ring_members,
-                link_down_port,
-                drain_round,
-            }) if epoch > after_epoch => {
-                write_msg(coord, &Msg::PrepareAck { epoch })?;
-                prepared = Some((
-                    epoch,
-                    resume_round,
-                    ring_members,
-                    link_down_port,
-                    drain_round,
-                ));
-            }
-            Ok(Msg::Commit { epoch }) => {
-                if let Some(p) = prepared.clone() {
-                    if p.0 == epoch {
-                        return Ok(Some(p));
-                    }
-                }
-                // Commit for an epoch we never prepared (superseded).
-            }
-            Ok(Msg::Shutdown) => return Ok(None),
-            Ok(_) => { /* stale frame — ignore */ }
-            Err(e) => {
-                return Err(anyhow!(
-                    "control channel lost waiting for stage commit: {e:#}"
-                ))
-            }
-        }
-    }
-}
-
 /// Stage worker entry point (the `dilocox worker --stage` subcommand
 /// body): one pipeline stage of one DP cluster as its own OS process.
 ///
@@ -953,6 +932,7 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
     let mut coord = TcpStream::connect_timeout(&addr, connect_timeout)
         .with_context(|| format!("dialing coordinator {addr}"))?;
     coord.set_nodelay(true).ok();
+    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
     let (ring_listener, link_listener) = if opts.listen_base > 0 {
         // Validate the full deterministic layout before binding: a base
         // close to 65535 would otherwise wrap in the u16 port arithmetic
@@ -1047,175 +1027,210 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
     if let Some(plan) = &w.faults {
         driver.set_break_round(plan.break_round);
     }
-    let mut epoch = 0u32;
 
-    'epochs: loop {
-        let waited = {
-            let _s = obs::span("elastic", "epoch.wait");
-            wait_for_stage_commit(&mut coord, epoch)?
-        };
-        let Some((e, resume_round, ring_members, down_port, drain_round)) = waited
-        else {
-            // Dropped before completion (a sibling stage died and the
-            // coordinator removed our whole cluster): exit cleanly.
-            return Ok(());
-        };
-        epoch = e;
-        obs::set_epoch(epoch);
-        let broken = |d: &RoundDriver| Msg::RingBroken {
-            epoch,
-            applied_rounds: d.applied() as u32,
-            in_flight_round: d.in_flight_round(),
-        };
-        let finishing = resume_round as usize > w.rounds;
-        let formed = {
-            let _s = obs::span("elastic", "ring.form");
-            tcp::form_ring(
-                w.rank,
-                epoch,
-                &ring_members,
-                &ring_listener,
-                connect_timeout,
-                ring_timeout,
-            )
-        };
-        let raw = match formed {
-            Ok(r) => r,
-            Err(_) => {
-                let _ = write_msg(&mut coord, &broken(&driver));
-                continue 'epochs;
-            }
-        };
-        let ring: Box<dyn RingTransport> = match &w.faults {
-            Some(plan) => Box::new(FaultyRing::new(raw, plan.clone())),
-            None => Box::new(raw),
-        };
-        // Dataflow links (skipped in a finishing epoch: no rounds left to
-        // run — a pending drain needs only the ring — and neighbors that
-        // already completed form no links).
-        work.link = if finishing {
-            Box::new(MpscStageLink::default())
-        } else {
-            let linked = {
-                let _s = obs::span("elastic", "ring.form");
-                tcp::form_stage_links(
-                    opts.stage,
-                    epoch,
-                    &link_listener,
-                    if down_port == 0 { None } else { Some(down_port) },
-                    connect_timeout,
-                    ring_timeout,
-                )
+    // Protocol sequencing lives in the pure machine; `clean_early_shutdown`
+    // because a stage process whose cluster was pruned exits Ok.
+    let mut sm = WorkerSm::new(w.rounds as u32, true);
+    // Wire detail per acked proposal epoch: (ring endpoints, downstream
+    // link port) — the machine's plans carry only member ids.
+    let mut staged: BTreeMap<u32, (Vec<(u32, u16)>, u16)> = BTreeMap::new();
+    let mut formed: Option<tcp::TcpRing> = None;
+    let mut effects: VecDeque<WorkerOut> = VecDeque::new();
+    loop {
+        let Some(effect) = effects.pop_front() else {
+            let input = if sm.phase() == WorkerPhase::AwaitShutdown {
+                // Done reported: park until Shutdown (or coordinator EOF).
+                let _ = read_msg(&mut coord);
+                WorkerIn::Shutdown
+            } else {
+                let _s = obs::span("elastic", "epoch.wait");
+                match read_msg(&mut coord) {
+                    Ok(Msg::StagePrepare {
+                        epoch,
+                        resume_round,
+                        ring_members,
+                        link_down_port,
+                        drain_round,
+                    }) => {
+                        let ids = ring_members.iter().map(|&(c, _)| c).collect();
+                        staged.insert(epoch, (ring_members, link_down_port));
+                        WorkerIn::Prepare(EpochPlan {
+                            epoch,
+                            resume_round,
+                            members: ids,
+                            drain_round,
+                        })
+                    }
+                    Ok(Msg::Commit { epoch }) => WorkerIn::Commit { epoch },
+                    Ok(Msg::Shutdown) => WorkerIn::Shutdown,
+                    Ok(_) => continue, // stale frame — ignore
+                    Err(e) => {
+                        return Err(anyhow!(
+                            "control channel lost waiting for stage commit: {e:#}"
+                        ))
+                    }
+                }
             };
-            match linked {
-                Ok(l) => Box::new(l),
-                Err(_) => {
-                    let _ = write_msg(&mut coord, &broken(&driver));
-                    continue 'epochs;
-                }
-            }
+            effects.extend(sm.handle(input));
+            continue;
         };
-
-        // Consensus resync on this stage's ring + this ring's committed
-        // drain-or-discard decision.
-        if driver
-            .begin_epoch(ring, Recovery::from_wire(drain_round))
-            .is_err()
-        {
-            let _ = write_msg(&mut coord, &broken(&driver));
-            continue 'epochs;
-        }
-        // Re-align the data stream to the resume round after churn
-        // (overlap can catch sibling stages a partial round apart; the
-        // un-churned path never resets, preserving threaded-vs-fleet
-        // bit parity).
-        if epoch > 1 {
-            work.compute.reset_data(resume_round as usize)?;
-        }
-
-        let end = {
-            let coord = &mut coord;
-            driver.run_rounds(
-                resume_round as usize,
-                &mut work,
-                &mut |t: RoundTelemetry| {
-                    // Loss telemetry is real only on the label-bearing
-                    // stage (NaN elsewhere); step_secs is per-stage.
-                    let _ = write_msg(
-                        coord,
-                        &Msg::Heartbeat {
-                            round: t.round as u32,
-                            loss: t.loss,
-                            step_secs: t.step_secs as f32,
-                            wire_bytes: t.wire_bytes,
+        match effect {
+            WorkerOut::SendAck { epoch } => {
+                write_msg(&mut coord, &Msg::PrepareAck { epoch })?;
+            }
+            WorkerOut::SendBroken { epoch } => {
+                let _ = write_msg(
+                    &mut coord,
+                    &Msg::RingBroken {
+                        epoch,
+                        applied_rounds: driver.applied() as u32,
+                        in_flight_round: driver.in_flight_round(),
+                    },
+                );
+            }
+            WorkerOut::FormRing { plan, finishing } => {
+                obs::set_epoch(plan.epoch);
+                staged.retain(|&e, _| e >= plan.epoch);
+                let (ring_members, down_port) =
+                    staged.get(&plan.epoch).cloned().unwrap_or_default();
+                let ok = {
+                    let _s = obs::span("elastic", "ring.form");
+                    match tcp::form_ring(
+                        w.rank,
+                        plan.epoch,
+                        &ring_members,
+                        &ring_listener,
+                        connect_timeout,
+                        ring_timeout,
+                    ) {
+                        Ok(r) => {
+                            // Dataflow links (skipped in a finishing
+                            // epoch: no rounds left to run — a pending
+                            // drain needs only the ring — and neighbors
+                            // that already completed form no links).
+                            if finishing {
+                                formed = Some(r);
+                                work.link = Box::new(MpscStageLink::default());
+                                true
+                            } else {
+                                match tcp::form_stage_links(
+                                    opts.stage,
+                                    plan.epoch,
+                                    &link_listener,
+                                    if down_port == 0 { None } else { Some(down_port) },
+                                    connect_timeout,
+                                    ring_timeout,
+                                ) {
+                                    Ok(l) => {
+                                        formed = Some(r);
+                                        work.link = Box::new(l);
+                                        true
+                                    }
+                                    Err(_) => false,
+                                }
+                            }
+                        }
+                        Err(_) => false,
+                    }
+                };
+                effects.extend(sm.handle(WorkerIn::FormResult { ok }));
+            }
+            WorkerOut::BeginEpoch { plan, .. } => {
+                let raw = formed.take().expect("BeginEpoch without a formed ring");
+                let ring: Box<dyn RingTransport> = match &w.faults {
+                    Some(fp) => Box::new(FaultyRing::new(raw, fp.clone())),
+                    None => Box::new(raw),
+                };
+                // Consensus resync on this stage's ring + this ring's
+                // committed drain-or-discard decision.
+                let ok = if driver.begin_epoch(ring, plan.recovery()).is_ok() {
+                    // Re-align the data stream to the resume round after
+                    // churn (overlap can catch sibling stages a partial
+                    // round apart; the un-churned path never resets,
+                    // preserving threaded-vs-fleet bit parity).
+                    if plan.epoch > 1 {
+                        work.compute.reset_data(plan.resume_round as usize)?;
+                    }
+                    true
+                } else {
+                    false
+                };
+                effects.extend(sm.handle(WorkerIn::BeginResult { ok }));
+            }
+            WorkerOut::RunRounds { start } => {
+                let end = {
+                    let coord = &mut coord;
+                    driver.run_rounds(
+                        start as usize,
+                        &mut work,
+                        &mut |t: RoundTelemetry| {
+                            // Loss telemetry is real only on the
+                            // label-bearing stage (NaN elsewhere);
+                            // step_secs is per-stage.
+                            let _ = write_msg(
+                                coord,
+                                &Msg::Heartbeat {
+                                    round: t.round as u32,
+                                    loss: t.loss,
+                                    step_secs: t.step_secs as f32,
+                                    wire_bytes: t.wire_bytes,
+                                },
+                            );
+                            ship_trace(coord);
                         },
-                    );
-                    ship_trace(coord);
-                },
-            )?
-        };
-        match end {
-            EpochEnd::Completed => {
-                if driver.finish(&mut work).is_err() {
-                    let _ = write_msg(&mut coord, &broken(&driver));
-                    continue 'epochs;
-                }
-                break;
+                    )?
+                };
+                let completed = matches!(end, EpochEnd::Completed);
+                effects.extend(sm.handle(WorkerIn::RoundsEnd { completed }));
             }
-            EpochEnd::Broken(_) => {
-                let _ = write_msg(&mut coord, &broken(&driver));
-                continue 'epochs;
+            WorkerOut::Finish => {
+                let ok = driver.finish(&mut work).is_ok();
+                effects.extend(sm.handle(WorkerIn::FinishResult { ok }));
             }
+            WorkerOut::SendDone => {
+                ship_trace(&mut coord);
+                write_msg(
+                    &mut coord,
+                    &Msg::Done {
+                        rounds: driver.applied() as u32,
+                        wire_bytes: driver.wire_total(),
+                        // The final eval needs the *assembled* model; the
+                        // coordinator computes it from the per-stage
+                        // digests.
+                        final_loss: f32::NAN,
+                        params: params_digest(driver.engine().theta()),
+                    },
+                )?;
+            }
+            WorkerOut::Exit { error: Some(msg) } => return Err(anyhow!(msg)),
+            WorkerOut::Exit { error: None } => return Ok(()),
         }
     }
-
-    ship_trace(&mut coord);
-    write_msg(
-        &mut coord,
-        &Msg::Done {
-            rounds: driver.applied() as u32,
-            wire_bytes: driver.wire_total(),
-            // The final eval needs the *assembled* model; the coordinator
-            // computes it from the per-stage digests.
-            final_loss: f32::NAN,
-            params: params_digest(driver.engine().theta()),
-        },
-    )?;
-    // Park until Shutdown (or coordinator EOF).
-    coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
-    let _ = read_msg(&mut coord);
-    Ok(())
 }
 
 // ---------------------------------------------------------------------------
 // Coordinator side
 // ---------------------------------------------------------------------------
 
-struct WorkerHandle {
-    writer: TcpStream,
-    ring_port: u16,
-}
-
-/// One stage process's control handle (stage fleet).
-struct StageHandle {
+/// One member's control handle: the write half of its control socket
+/// plus the listener ports it announced in its Hello.  Both fleet
+/// shapes share it — the single-vector fleet has no stage links, so its
+/// `link_port` is 0 and unused.
+struct CtrlHandle {
     writer: TcpStream,
     ring_port: u16,
     link_port: u16,
 }
 
-/// Control-plane event, keyed by worker rank (`u32`) or by
-/// `(cluster, stage)` in the stage fleet.
-enum Event<K> {
-    Msg(K, Msg),
-    Closed(K),
+/// Control-plane event, keyed by protocol [`Key`] — `(rank, 0)` in the
+/// single fleet, `(cluster, stage)` in the stage fleet.
+enum Event {
+    Msg(Key, Msg),
+    Closed(Key),
 }
 
 /// One reader thread per control socket feeding the supervisor's queue.
-fn spawn_reader<K: Copy + Send + 'static>(
-    key: K,
-    mut rs: TcpStream,
-    tx: mpsc::Sender<Event<K>>,
-) {
+fn spawn_reader(key: Key, mut rs: TcpStream, tx: mpsc::Sender<Event>) {
     std::thread::spawn(move || loop {
         match read_msg(&mut rs) {
             Ok(m) => {
@@ -1253,28 +1268,197 @@ struct Telemetry {
     trace_events: Vec<TraceEvent>,
 }
 
-/// The commit-time drain-or-discard rule: finish (drain) an in-flight
-/// δ-reduction only when EVERY member of the proposed ring reported the
-/// SAME in-flight round; anything else — mixed rounds, a member that
-/// never reported, nothing in flight — must discard, because a partial
-/// drain collective would stall on the members with nothing to reduce.
-/// Returns the drain round (0 = discard).
-fn drain_decision(reported: impl Iterator<Item = Option<u32>>) -> u32 {
-    let mut agreed = 0u32;
-    let mut any = false;
-    for r in reported {
-        any = true;
-        match r {
-            None | Some(0) => return 0,
-            Some(v) if agreed == 0 => agreed = v,
-            Some(v) if v != agreed => return 0,
-            _ => {}
-        }
+/// Drive the pure [`CoordinatorSm`] over the live control sockets: spawn
+/// one reader thread per member, translate wire frames, closed channels
+/// and the grace timer into [`CoordIn`] events, and perform every
+/// [`CoordOut`] effect (tailored Prepare frames, commits, shutdowns,
+/// telemetry records).  Both fleet shapes run through this one loop;
+/// `stages` selects the frame flavor (`Prepare` vs per-stage-tailored
+/// `StagePrepare`) alongside the machine's own stage semantics.
+///
+/// Every membership decision — epoch formation, pruning, the
+/// drain-or-discard ruling, ack staleness, grace draining, completion —
+/// is the machine's; this loop holds no protocol state beyond the
+/// armed timer and the closed-channel dedup.
+#[allow(clippy::type_complexity)]
+fn drive_coordinator(
+    cfg: &ElasticConfig,
+    stages: u32,
+    mut handles: BTreeMap<Key, CtrlHandle>,
+) -> Result<(u32, BTreeMap<Key, DoneReport>, Telemetry)> {
+    // One reader thread per member feeding a single event queue; the
+    // handles keep the write half.
+    let (tx, rx) = mpsc::channel::<Event>();
+    for (&key, handle) in handles.iter() {
+        let rs = handle.writer.try_clone().context("cloning control stream")?;
+        rs.set_read_timeout(None).ok();
+        spawn_reader(key, rs, tx.clone());
     }
-    if any {
-        agreed
-    } else {
-        0
+    drop(tx);
+
+    let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
+    let grace = Duration::from_millis(cfg.transport.ring_timeout_ms * 2 + 2000);
+    let mut sm =
+        CoordinatorSm::new(handles.keys().copied(), stages, cfg.rounds as u32);
+    let mut done: BTreeMap<Key, DoneReport> = BTreeMap::new();
+    let mut telem = Telemetry::default();
+    // The single coordinator timer; the most recently armed token wins
+    // (the machine ignores stale tokens regardless).
+    let mut timer: Option<(u64, Instant)> = None;
+    // Members already reported closed, so the machine sees exactly one
+    // Closed per member even when a write failure races the reader EOF.
+    let mut closed: BTreeSet<Key> = BTreeSet::new();
+    let mut inputs: VecDeque<CoordIn> = VecDeque::from([CoordIn::Start]);
+
+    loop {
+        // Perform every effect of every queued event before blocking.
+        while let Some(input) = inputs.pop_front() {
+            for out in sm.handle(input) {
+                match out {
+                    CoordOut::Prepare {
+                        to,
+                        epoch,
+                        resume_round,
+                        ring,
+                        link_down,
+                        drain_round,
+                    } => {
+                        obs::set_epoch(epoch);
+                        obs::set_round(resume_round);
+                        let _s = obs::span("elastic", "epoch.prepare");
+                        let msg = if stages > 1 {
+                            Msg::StagePrepare {
+                                epoch,
+                                resume_round,
+                                ring_members: ring
+                                    .iter()
+                                    .map(|k| (k.0, handles[k].ring_port))
+                                    .collect(),
+                                link_down_port: link_down
+                                    .map_or(0, |k| handles[&k].link_port),
+                                drain_round,
+                            }
+                        } else {
+                            Msg::Prepare {
+                                epoch,
+                                resume_round,
+                                members: ring
+                                    .iter()
+                                    .map(|k| (k.0, handles[k].ring_port))
+                                    .collect(),
+                                drain_round,
+                            }
+                        };
+                        let h =
+                            handles.get_mut(&to).expect("prepare for unknown member");
+                        if write_msg(&mut h.writer, &msg).is_err() && closed.insert(to) {
+                            inputs.push_back(CoordIn::Closed { key: to });
+                        }
+                    }
+                    CoordOut::Commit { to, epoch } => {
+                        let _s = obs::span("elastic", "epoch.commit");
+                        let h =
+                            handles.get_mut(&to).expect("commit for unknown member");
+                        if write_msg(&mut h.writer, &Msg::Commit { epoch }).is_err()
+                            && closed.insert(to)
+                        {
+                            inputs.push_back(CoordIn::Closed { key: to });
+                        }
+                    }
+                    CoordOut::Shutdown { to } => {
+                        if let Some(h) = handles.get_mut(&to) {
+                            let _ = write_msg(&mut h.writer, &Msg::Shutdown);
+                        }
+                    }
+                    CoordOut::ArmTimer { token } => {
+                        timer = Some((token, Instant::now() + grace));
+                    }
+                    CoordOut::Committed { epoch, stage, drain_round } => {
+                        telem.recoveries.push((epoch, stage, drain_round));
+                    }
+                    CoordOut::Finished => {}
+                    CoordOut::Failed { reason } => return Err(anyhow!(reason)),
+                }
+            }
+        }
+        if sm.is_finished() {
+            return Ok((sm.epoch(), done, telem));
+        }
+        if Instant::now() >= wall_deadline {
+            return Err(anyhow!(if stages > 1 {
+                "elastic stage run exceeded the wall timeout"
+            } else {
+                "elastic run exceeded the wall timeout"
+            }));
+        }
+        // Fire the armed timer, or wait (bounded) for the next event.
+        let wait = match timer {
+            Some((token, at)) => {
+                let left = at.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    timer = None;
+                    inputs.push_back(CoordIn::Timer { token });
+                    continue;
+                }
+                left.min(Duration::from_millis(200))
+            }
+            None => Duration::from_millis(200),
+        };
+        match rx.recv_timeout(wait) {
+            Ok(Event::Msg(k, msg)) => {
+                // Telemetry ingest keeps the historical filters: the
+                // single fleet counts every reporter; the stage fleet
+                // only still-live members (orphans of a pruned cluster
+                // must not steer the survivors' records).
+                let counted = stages == 1 || sm.live().contains(&k);
+                match msg {
+                    Msg::Heartbeat { round, loss, step_secs, wire_bytes } => {
+                        if counted {
+                            if !loss.is_nan() {
+                                telem.round_losses.push((k.0, round, loss));
+                            }
+                            telem.round_wire.push((k.0, round, wire_bytes));
+                            telem.step_samples.push((k.1, step_secs as f64));
+                        }
+                        inputs.push_back(CoordIn::Heartbeat { key: k, round });
+                    }
+                    Msg::RingBroken { applied_rounds, in_flight_round, .. } => {
+                        inputs.push_back(CoordIn::RingBroken {
+                            key: k,
+                            applied_rounds,
+                            in_flight_round,
+                        });
+                    }
+                    Msg::Done { wire_bytes, final_loss, params, .. } => {
+                        if counted {
+                            done.insert(
+                                k,
+                                DoneReport { wire_bytes, final_loss, params },
+                            );
+                        }
+                        inputs.push_back(CoordIn::Done { key: k });
+                    }
+                    Msg::PrepareAck { epoch } => {
+                        inputs.push_back(CoordIn::PrepareAck { key: k, epoch });
+                    }
+                    Msg::TraceEvents { events } => {
+                        if counted {
+                            telem.trace_events.extend(events);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            Ok(Event::Closed(k)) => {
+                if closed.insert(k) {
+                    inputs.push_back(CoordIn::Closed { key: k });
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(anyhow!("all control channels lost"));
+            }
+        }
     }
 }
 
@@ -1396,11 +1580,13 @@ fn worker_opts_for(
 }
 
 /// Accept one control connection per worker and read its `Hello`.
+/// Workers are keyed `(rank, 0)` — the degenerate stage of the protocol
+/// [`Key`] space.
 fn accept_workers(
     listener: &TcpListener,
     expected: usize,
     deadline: Instant,
-) -> Result<BTreeMap<u32, WorkerHandle>> {
+) -> Result<BTreeMap<Key, CtrlHandle>> {
     listener.set_nonblocking(true).context("control listener nonblocking")?;
     let mut map = BTreeMap::new();
     while map.len() < expected {
@@ -1412,11 +1598,14 @@ fn accept_workers(
                 let mut stream = stream;
                 match read_msg(&mut stream) {
                     Ok(Msg::Hello { rank, ring_port }) => {
-                        if map.contains_key(&rank) {
+                        if map.contains_key(&(rank, 0)) {
                             return Err(anyhow!("duplicate worker rank {rank}"));
                         }
                         stream.set_write_timeout(Some(Duration::from_secs(10))).ok();
-                        map.insert(rank, WorkerHandle { writer: stream, ring_port });
+                        map.insert(
+                            (rank, 0),
+                            CtrlHandle { writer: stream, ring_port, link_port: 0 },
+                        );
                     }
                     _ => { /* not a worker — drop */ }
                 }
@@ -1549,271 +1738,20 @@ pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutco
 /// Accept the fleet, run the 2PC epochs, and watch the run to completion;
 /// returns (final epoch, done reports, heartbeat telemetry).  Sends
 /// `Shutdown` to the fleet on success; error paths leave process cleanup
-/// to the caller's [`reap_children`].
+/// to the caller's [`reap_children`].  All protocol decisions are made by
+/// [`CoordinatorSm`] inside [`drive_coordinator`].
 #[allow(clippy::type_complexity)]
 fn supervise(
     cfg: &ElasticConfig,
     listener: &TcpListener,
 ) -> Result<(u32, BTreeMap<u32, DoneReport>, Telemetry)> {
     obs::set_scope(obs::COORD, 0);
-    let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
     let startup_deadline = Instant::now()
         + Duration::from_millis(cfg.transport.connect_timeout_ms)
         + Duration::from_secs(10);
-    let mut live = accept_workers(listener, cfg.workers, startup_deadline)?;
-
-    // One reader thread per worker feeding a single event queue; the
-    // handles keep the write half.
-    let (tx, rx) = mpsc::channel::<Event<u32>>();
-    for (&rank, handle) in live.iter() {
-        let rs = handle.writer.try_clone().context("cloning control stream")?;
-        rs.set_read_timeout(None).ok();
-        spawn_reader(rank, rs, tx.clone());
-    }
-    drop(tx);
-
-    let grace = Duration::from_millis(cfg.transport.ring_timeout_ms * 2 + 2000);
-    let mut epoch: u32 = 0;
-    let mut resume_round: u32 = 1;
-    let mut done: BTreeMap<u32, DoneReport> = BTreeMap::new();
-    let mut telem = Telemetry::default();
-    // Latest reported in-flight round per live worker (the
-    // drain-or-discard evidence; cleared on every successful commit).
-    let mut inflight: BTreeMap<u32, u32> = BTreeMap::new();
-
-    // Small helper applied to every event everywhere: telemetry +
-    // resume-round + in-flight bookkeeping.
-    fn note_progress(
-        ev: &Event<u32>,
-        resume_round: &mut u32,
-        telem: &mut Telemetry,
-        inflight: &mut BTreeMap<u32, u32>,
-    ) {
-        if let Event::Msg(w, Msg::Heartbeat { round, loss, step_secs, wire_bytes }) =
-            ev
-        {
-            if !loss.is_nan() {
-                telem.round_losses.push((*w, *round, *loss));
-            }
-            telem.round_wire.push((*w, *round, *wire_bytes));
-            telem.step_samples.push((0, *step_secs as f64));
-            *resume_round = (*resume_round).max(round + 1);
-        }
-        if let Event::Msg(w, Msg::RingBroken { applied_rounds, in_flight_round, .. }) =
-            ev
-        {
-            *resume_round = (*resume_round).max(applied_rounds + 1);
-            inflight.insert(*w, *in_flight_round);
-        }
-        if let Event::Msg(_, Msg::TraceEvents { events }) = ev {
-            telem.trace_events.extend(events.iter().cloned());
-        }
-    }
-
-    'epochs: loop {
-        if Instant::now() >= wall_deadline {
-            return Err(anyhow!("elastic run exceeded the wall timeout"));
-        }
-        if live.is_empty() {
-            return Err(anyhow!("all workers died"));
-        }
-        let pending: Vec<u32> =
-            live.keys().copied().filter(|r| !done.contains_key(r)).collect();
-        if pending.is_empty() {
-            break;
-        }
-
-        // -- 2PC prepare/commit over the pending members ------------------
-        epoch += 1;
-        obs::set_epoch(epoch);
-        obs::set_round(resume_round);
-        let prepare_span = obs::span("elastic", "epoch.prepare");
-        // Drain-or-discard: drain only if every proposed member reported
-        // the same in-flight round (see `drain_decision`); a drain pushes
-        // the resume point past the drained round.
-        let drain_round = drain_decision(
-            pending.iter().map(|r| inflight.get(r).copied()),
-        );
-        if drain_round > 0 {
-            resume_round = resume_round.max(drain_round + 1);
-        }
-        let members: Vec<(u32, u16)> =
-            pending.iter().map(|r| (*r, live[r].ring_port)).collect();
-        let mut lost: Vec<u32> = Vec::new();
-        for &r in &pending {
-            let h = live.get_mut(&r).unwrap();
-            if write_msg(
-                &mut h.writer,
-                &Msg::Prepare {
-                    epoch,
-                    resume_round,
-                    members: members.clone(),
-                    drain_round,
-                },
-            )
-            .is_err()
-            {
-                lost.push(r);
-            }
-        }
-        if !lost.is_empty() {
-            for r in lost {
-                live.remove(&r);
-            }
-            continue 'epochs;
-        }
-
-        let mut acked: BTreeSet<u32> = BTreeSet::new();
-        let ack_deadline = Instant::now() + grace;
-        while !pending
-            .iter()
-            .all(|r| acked.contains(r) || done.contains_key(r) || !live.contains_key(r))
-        {
-            let left = ack_deadline.saturating_duration_since(Instant::now());
-            if left.is_zero() {
-                // Someone never acked (e.g. still stuck in an old ring's
-                // timeout window) — supersede with a fresh epoch.
-                continue 'epochs;
-            }
-            match rx.recv_timeout(left) {
-                Ok(ev) => {
-                    note_progress(&ev, &mut resume_round, &mut telem, &mut inflight);
-                    match ev {
-                        Event::Msg(w, Msg::PrepareAck { epoch: e }) if e == epoch => {
-                            acked.insert(w);
-                        }
-                        // A worker can finish (its Done racing our
-                        // Prepare) — record it rather than dropping the
-                        // completion report; it leaves `pending` via the
-                        // loop condition and the next epoch's membership.
-                        Event::Msg(w, Msg::Done { wire_bytes, final_loss, params, .. }) => {
-                            done.insert(w, DoneReport { wire_bytes, final_loss, params });
-                        }
-                        Event::Closed(w) => {
-                            if !done.contains_key(&w) {
-                                live.remove(&w);
-                                continue 'epochs;
-                            }
-                        }
-                        _ => {}
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    return Err(anyhow!("all control channels lost"))
-                }
-            }
-        }
-
-        drop(prepare_span);
-        // A pending member that finished during the ack wait leaves the
-        // proposed membership stale — don't commit a ring containing a
-        // worker that will never join it; re-prepare without it.
-        if pending.iter().any(|r| done.contains_key(r)) {
-            continue 'epochs;
-        }
-
-        let commit_span = obs::span("elastic", "epoch.commit");
-        let mut lost: Vec<u32> = Vec::new();
-        for &r in &pending {
-            if let Some(h) = live.get_mut(&r) {
-                if write_msg(&mut h.writer, &Msg::Commit { epoch }).is_err() {
-                    lost.push(r);
-                }
-            }
-        }
-        drop(commit_span);
-        if !lost.is_empty() {
-            for r in lost {
-                live.remove(&r);
-            }
-            continue 'epochs;
-        }
-        // Committed: the members act on the decision now; their in-flight
-        // state is consumed (a failed recovery re-reports it).
-        telem.recoveries.push((epoch, 0, drain_round));
-        for r in &pending {
-            inflight.remove(r);
-        }
-
-        // -- committed: watch the epoch run -------------------------------
-        let mut broken: BTreeSet<u32> = BTreeSet::new();
-        loop {
-            if Instant::now() >= wall_deadline {
-                return Err(anyhow!("elastic run exceeded the wall timeout"));
-            }
-            let churn = match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(ev) => {
-                    note_progress(&ev, &mut resume_round, &mut telem, &mut inflight);
-                    match ev {
-                        Event::Msg(w, Msg::Done { wire_bytes, final_loss, params, .. }) => {
-                            done.insert(w, DoneReport { wire_bytes, final_loss, params });
-                            false
-                        }
-                        Event::Msg(w, Msg::RingBroken { .. }) => {
-                            broken.insert(w);
-                            true
-                        }
-                        Event::Closed(w) => {
-                            if done.contains_key(&w) {
-                                false
-                            } else {
-                                live.remove(&w);
-                                true
-                            }
-                        }
-                        _ => false,
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => false,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    return Err(anyhow!("all control channels lost"))
-                }
-            };
-            if live.keys().all(|r| done.contains_key(r)) {
-                break 'epochs;
-            }
-            if !churn {
-                continue;
-            }
-            // Churn: drain until every live, not-done member has reported
-            // its break (or a grace period passes), then re-form.
-            let drain_deadline = Instant::now() + grace;
-            loop {
-                let outstanding = live
-                    .keys()
-                    .filter(|r| !done.contains_key(r) && !broken.contains(r))
-                    .count();
-                if outstanding == 0 || Instant::now() >= drain_deadline {
-                    break;
-                }
-                if let Ok(ev) = rx.recv_timeout(Duration::from_millis(100)) {
-                    note_progress(&ev, &mut resume_round, &mut telem, &mut inflight);
-                    match ev {
-                        Event::Msg(w, Msg::RingBroken { .. }) => {
-                            broken.insert(w);
-                        }
-                        Event::Msg(w, Msg::Done { wire_bytes, final_loss, params, .. }) => {
-                            done.insert(w, DoneReport { wire_bytes, final_loss, params });
-                        }
-                        Event::Closed(w) => {
-                            if !done.contains_key(&w) {
-                                live.remove(&w);
-                            }
-                        }
-                        _ => {}
-                    }
-                }
-            }
-            continue 'epochs;
-        }
-    }
-
-    // -- success: graceful shutdown (caller reaps the processes) ----------
-    for h in live.values_mut() {
-        let _ = write_msg(&mut h.writer, &Msg::Shutdown);
-    }
-    Ok((epoch, done, telem))
+    let handles = accept_workers(listener, cfg.workers, startup_deadline)?;
+    let (epoch, done, telem) = drive_coordinator(cfg, 1, handles)?;
+    Ok((epoch, done.into_iter().map(|((r, _), v)| (r, v)).collect(), telem))
 }
 
 // ---------------------------------------------------------------------------
@@ -1950,7 +1888,7 @@ fn accept_stage_workers(
     clusters: usize,
     stages: usize,
     deadline: Instant,
-) -> Result<BTreeMap<(u32, u32), StageHandle>> {
+) -> Result<BTreeMap<Key, CtrlHandle>> {
     listener
         .set_nonblocking(true)
         .context("control listener nonblocking")?;
@@ -1980,7 +1918,7 @@ fn accept_stage_workers(
                             .ok();
                         map.insert(
                             (cluster, stage),
-                            StageHandle { writer: stream, ring_port, link_port },
+                            CtrlHandle { writer: stream, ring_port, link_port },
                         );
                     }
                     _ => { /* not a stage worker — drop */ }
@@ -2000,26 +1938,6 @@ fn accept_stage_workers(
         }
     }
     Ok(map)
-}
-
-/// Drop every cluster missing any stage process: a dead stage starves its
-/// siblings' dataflow, so the whole cluster leaves the membership and the
-/// orphaned siblings are told to shut down.
-fn prune_partial_clusters(
-    live: &mut BTreeMap<(u32, u32), StageHandle>,
-    stages: u32,
-) {
-    let clusters: BTreeSet<u32> = live.keys().map(|(c, _)| *c).collect();
-    for c in clusters {
-        if (0..stages).all(|s| live.contains_key(&(c, s))) {
-            continue;
-        }
-        for s in 0..stages {
-            if let Some(mut h) = live.remove(&(c, s)) {
-                let _ = write_msg(&mut h.writer, &Msg::Shutdown);
-            }
-        }
-    }
 }
 
 /// Run the stage-parallel elastic coordinator to completion: spawn the
@@ -2124,342 +2042,22 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
 
 /// Accept the stage fleet, run the (cluster, stage)-keyed 2PC epochs, and
 /// watch the run to completion; returns (final epoch, per-(cluster,
-/// stage) done reports, heartbeat telemetry keyed by cluster).
+/// stage) done reports, heartbeat telemetry keyed by cluster).  Stage
+/// semantics — whole-cluster pruning, per-stage drain decisions,
+/// finishing epochs with solo rings and link teardown — live in
+/// [`CoordinatorSm`]; [`drive_coordinator`] performs them on the wire.
 #[allow(clippy::type_complexity)]
 fn supervise_stages(
     cfg: &ElasticConfig,
     listener: &TcpListener,
 ) -> Result<(u32, BTreeMap<(u32, u32), DoneReport>, Telemetry)> {
     obs::set_scope(obs::COORD, 0);
-    let stages = cfg.pp_stages as u32;
-    let wall_deadline = Instant::now() + Duration::from_millis(cfg.wall_timeout_ms);
     let startup_deadline = Instant::now()
         + Duration::from_millis(cfg.transport.connect_timeout_ms)
         + Duration::from_secs(10);
-    let mut live =
+    let handles =
         accept_stage_workers(listener, cfg.workers, cfg.pp_stages, startup_deadline)?;
-
-    let (tx, rx) = mpsc::channel::<Event<(u32, u32)>>();
-    for (&key, handle) in live.iter() {
-        let rs = handle.writer.try_clone().context("cloning control stream")?;
-        rs.set_read_timeout(None).ok();
-        spawn_reader(key, rs, tx.clone());
-    }
-    drop(tx);
-
-    let grace = Duration::from_millis(cfg.transport.ring_timeout_ms * 2 + 2000);
-    let mut epoch: u32 = 0;
-    let mut resume_round: u32 = 1;
-    let mut done: BTreeMap<(u32, u32), DoneReport> = BTreeMap::new();
-    let mut telem = Telemetry::default();
-    // Latest reported in-flight round per live (cluster, stage) process
-    // (per-stage drain-or-discard evidence; cleared on commit).
-    let mut inflight: BTreeMap<(u32, u32), u32> = BTreeMap::new();
-
-    // Telemetry + resume-round + in-flight bookkeeping, applied to every
-    // event from a still-live process (orphans of dropped clusters are
-    // ignored — their progress reports must not steer the survivors'
-    // resume point).
-    fn note(
-        ev: &Event<(u32, u32)>,
-        live: &BTreeMap<(u32, u32), StageHandle>,
-        resume_round: &mut u32,
-        telem: &mut Telemetry,
-        inflight: &mut BTreeMap<(u32, u32), u32>,
-    ) {
-        let key = match ev {
-            Event::Msg(k, _) => k,
-            Event::Closed(k) => k,
-        };
-        if !live.contains_key(key) {
-            return;
-        }
-        if let Event::Msg(
-            (c, s),
-            Msg::Heartbeat { round, loss, step_secs, wire_bytes },
-        ) = ev
-        {
-            if !loss.is_nan() {
-                telem.round_losses.push((*c, *round, *loss));
-            }
-            telem.round_wire.push((*c, *round, *wire_bytes));
-            telem.step_samples.push((*s, *step_secs as f64));
-            *resume_round = (*resume_round).max(round + 1);
-        }
-        if let Event::Msg(k, Msg::RingBroken { applied_rounds, in_flight_round, .. }) =
-            ev
-        {
-            *resume_round = (*resume_round).max(applied_rounds + 1);
-            inflight.insert(*k, *in_flight_round);
-        }
-        if let Event::Msg(_, Msg::TraceEvents { events }) = ev {
-            telem.trace_events.extend(events.iter().cloned());
-        }
-    }
-
-    'epochs: loop {
-        if Instant::now() >= wall_deadline {
-            return Err(anyhow!("elastic stage run exceeded the wall timeout"));
-        }
-        prune_partial_clusters(&mut live, stages);
-        if live.is_empty() {
-            return Err(anyhow!("all clusters died"));
-        }
-        let clusters: BTreeSet<u32> = live.keys().map(|(c, _)| *c).collect();
-        let pending: Vec<u32> = clusters
-            .into_iter()
-            .filter(|c| (0..stages).any(|s| !done.contains_key(&(*c, s))))
-            .collect();
-        if pending.is_empty() {
-            break;
-        }
-
-        // -- 2PC prepare/commit, tailored per stage process ---------------
-        epoch += 1;
-        obs::set_epoch(epoch);
-        obs::set_round(resume_round);
-        let prepare_span = obs::span("elastic", "epoch.prepare");
-        let recipients: Vec<(u32, u32)> = pending
-            .iter()
-            .flat_map(|&c| (0..stages).map(move |s| (c, s)))
-            .filter(|k| !done.contains_key(k))
-            .collect();
-        // Per-stage-ring drain-or-discard: under overlap, stage rings can
-        // break one round apart (one stage's join succeeds while its
-        // sibling's stalls), so each stage ring gets its own decision.
-        let stage_drain: Vec<u32> = (0..stages)
-            .map(|s| {
-                drain_decision(
-                    recipients
-                        .iter()
-                        .filter(|&&(_, s2)| s2 == s)
-                        .map(|k| inflight.get(k).copied()),
-                )
-            })
-            .collect();
-        for &d in &stage_drain {
-            if d > 0 {
-                resume_round = resume_round.max(d + 1);
-            }
-        }
-        // When the shared resume point is already past the schedule, the
-        // remaining processes have nothing left to run (their peers
-        // completed the final round before a late break): no dataflow
-        // forms, and a stage ring with no pending drain commits as a
-        // size-1 ring so late-break stragglers finish immediately.  A
-        // stage ring WITH a pending drain stays full so the survivors
-        // finish the held reduction collectively.
-        let finishing = resume_round as usize > cfg.rounds;
-        let mut lost: Vec<(u32, u32)> = Vec::new();
-        for &(c, s) in &recipients {
-            let drain_round = stage_drain[s as usize];
-            let ring_members: Vec<(u32, u16)> = if finishing && drain_round == 0
-            {
-                vec![(c, live[&(c, s)].ring_port)]
-            } else {
-                pending
-                    .iter()
-                    .filter(|&&c2| !done.contains_key(&(c2, s)))
-                    .map(|&c2| (c2, live[&(c2, s)].ring_port))
-                    .collect()
-            };
-            let link_down_port = if !finishing
-                && s + 1 < stages
-                && !done.contains_key(&(c, s + 1))
-            {
-                live[&(c, s + 1)].link_port
-            } else {
-                0
-            };
-            let h = live.get_mut(&(c, s)).unwrap();
-            if write_msg(
-                &mut h.writer,
-                &Msg::StagePrepare {
-                    epoch,
-                    resume_round,
-                    ring_members,
-                    link_down_port,
-                    drain_round,
-                },
-            )
-            .is_err()
-            {
-                lost.push((c, s));
-            }
-        }
-        if !lost.is_empty() {
-            for k in lost {
-                live.remove(&k);
-            }
-            continue 'epochs;
-        }
-
-        let mut acked: BTreeSet<(u32, u32)> = BTreeSet::new();
-        let ack_deadline = Instant::now() + grace;
-        while !recipients.iter().all(|k| {
-            acked.contains(k) || done.contains_key(k) || !live.contains_key(k)
-        }) {
-            let left = ack_deadline.saturating_duration_since(Instant::now());
-            if left.is_zero() {
-                // Someone never acked — supersede with a fresh epoch.
-                continue 'epochs;
-            }
-            match rx.recv_timeout(left) {
-                Ok(ev) => {
-                    note(&ev, &live, &mut resume_round, &mut telem, &mut inflight);
-                    match ev {
-                        Event::Msg(k, Msg::PrepareAck { epoch: e }) if e == epoch => {
-                            acked.insert(k);
-                        }
-                        Event::Msg(k, Msg::Done { wire_bytes, final_loss, params, .. }) => {
-                            if live.contains_key(&k) {
-                                done.insert(
-                                    k,
-                                    DoneReport { wire_bytes, final_loss, params },
-                                );
-                            }
-                        }
-                        Event::Closed(k) => {
-                            if live.contains_key(&k) && !done.contains_key(&k) {
-                                live.remove(&k);
-                                continue 'epochs;
-                            }
-                        }
-                        _ => {}
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    return Err(anyhow!("all control channels lost"))
-                }
-            }
-        }
-        drop(prepare_span);
-        // Membership changed during the ack wait → the proposal is stale.
-        if recipients
-            .iter()
-            .any(|k| done.contains_key(k) || !live.contains_key(k))
-        {
-            continue 'epochs;
-        }
-
-        let commit_span = obs::span("elastic", "epoch.commit");
-        let mut lost: Vec<(u32, u32)> = Vec::new();
-        for k in &recipients {
-            if let Some(h) = live.get_mut(k) {
-                if write_msg(&mut h.writer, &Msg::Commit { epoch }).is_err() {
-                    lost.push(*k);
-                }
-            }
-        }
-        drop(commit_span);
-        if !lost.is_empty() {
-            for k in lost {
-                live.remove(&k);
-            }
-            continue 'epochs;
-        }
-        // Committed: the stage rings act on their decisions now; consumed
-        // in-flight evidence clears (a failed recovery re-reports it).
-        for (s, &d) in stage_drain.iter().enumerate() {
-            telem.recoveries.push((epoch, s as u32, d));
-        }
-        for k in &recipients {
-            inflight.remove(k);
-        }
-
-        // -- committed: watch the epoch run -------------------------------
-        let mut broken: BTreeSet<(u32, u32)> = BTreeSet::new();
-        loop {
-            if Instant::now() >= wall_deadline {
-                return Err(anyhow!("elastic stage run exceeded the wall timeout"));
-            }
-            let churn = match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(ev) => {
-                    note(&ev, &live, &mut resume_round, &mut telem, &mut inflight);
-                    match ev {
-                        Event::Msg(k, Msg::Done { wire_bytes, final_loss, params, .. }) => {
-                            if live.contains_key(&k) {
-                                done.insert(
-                                    k,
-                                    DoneReport { wire_bytes, final_loss, params },
-                                );
-                            }
-                            false
-                        }
-                        Event::Msg(k, Msg::RingBroken { .. }) => {
-                            if live.contains_key(&k) {
-                                broken.insert(k);
-                                true
-                            } else {
-                                false
-                            }
-                        }
-                        Event::Closed(k) => {
-                            if live.contains_key(&k) && !done.contains_key(&k) {
-                                live.remove(&k);
-                                true
-                            } else {
-                                false
-                            }
-                        }
-                        _ => false,
-                    }
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => false,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    return Err(anyhow!("all control channels lost"))
-                }
-            };
-            if live.keys().all(|k| done.contains_key(k)) {
-                break 'epochs;
-            }
-            if !churn {
-                continue;
-            }
-            // Churn: drain until every live, not-done process has reported
-            // its break (or a grace period passes), then re-form.
-            let drain_deadline = Instant::now() + grace;
-            loop {
-                let outstanding = live
-                    .keys()
-                    .filter(|k| !done.contains_key(k) && !broken.contains(k))
-                    .count();
-                if outstanding == 0 || Instant::now() >= drain_deadline {
-                    break;
-                }
-                if let Ok(ev) = rx.recv_timeout(Duration::from_millis(100)) {
-                    note(&ev, &live, &mut resume_round, &mut telem, &mut inflight);
-                    match ev {
-                        Event::Msg(k, Msg::RingBroken { .. }) => {
-                            broken.insert(k);
-                        }
-                        Event::Msg(k, Msg::Done { wire_bytes, final_loss, params, .. }) => {
-                            if live.contains_key(&k) {
-                                done.insert(
-                                    k,
-                                    DoneReport { wire_bytes, final_loss, params },
-                                );
-                            }
-                        }
-                        Event::Closed(k) => {
-                            if !done.contains_key(&k) {
-                                live.remove(&k);
-                            }
-                        }
-                        _ => {}
-                    }
-                }
-            }
-            continue 'epochs;
-        }
-    }
-
-    // -- success: graceful shutdown (caller reaps the processes) ----------
-    for h in live.values_mut() {
-        let _ = write_msg(&mut h.writer, &Msg::Shutdown);
-    }
-    Ok((epoch, done, telem))
+    drive_coordinator(cfg, cfg.pp_stages as u32, handles)
 }
 
 #[cfg(test)]
@@ -2710,18 +2308,6 @@ mod tests {
             out.final_loss,
             r1_mean
         );
-    }
-
-    #[test]
-    fn drain_decision_requires_unanimous_in_flight() {
-        // Unanimous, same round → drain it.
-        assert_eq!(drain_decision([Some(3), Some(3)].into_iter()), 3);
-        // Mixed rounds, an absent report, or nothing in flight → discard.
-        assert_eq!(drain_decision([Some(3), Some(2)].into_iter()), 0);
-        assert_eq!(drain_decision([Some(3), None].into_iter()), 0);
-        assert_eq!(drain_decision([Some(0), Some(3)].into_iter()), 0);
-        assert_eq!(drain_decision(std::iter::empty()), 0);
-        assert_eq!(drain_decision([Some(7)].into_iter()), 7);
     }
 
     #[test]

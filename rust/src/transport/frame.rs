@@ -448,6 +448,7 @@ pub fn read_msg(r: &mut impl Read) -> Result<Msg> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg32;
 
     fn roundtrip(m: Msg) {
         let bytes = encode(&m);
@@ -576,5 +577,172 @@ mod tests {
         s.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
         s.push(0);
         assert!(read_msg(&mut &s[..]).is_err());
+    }
+
+    /// One instance of every frame kind with non-empty variable-length
+    /// parts — the corpus the truncation fuzz slices apart.
+    fn fuzz_corpus() -> Vec<Msg> {
+        vec![
+            Msg::Data { payload: vec![1.0, -2.5, 3.25] },
+            Msg::Hello { rank: 7, ring_port: 40001 },
+            Msg::Prepare {
+                epoch: 3,
+                resume_round: 2,
+                members: vec![(0, 1111), (4, 2222)],
+                drain_round: 1,
+            },
+            Msg::PrepareAck { epoch: 3 },
+            Msg::Commit { epoch: 3 },
+            Msg::RingBroken { epoch: 3, applied_rounds: 1, in_flight_round: 2 },
+            Msg::Heartbeat {
+                round: 5,
+                loss: 0.5,
+                step_secs: 0.01,
+                wire_bytes: 1024,
+            },
+            Msg::Done {
+                rounds: 6,
+                wire_bytes: 1 << 20,
+                final_loss: 0.25,
+                params: vec![0.5; 3],
+            },
+            Msg::Shutdown,
+            Msg::RingHello { rank: 2, epoch: 4 },
+            Msg::Acts { micro: 1, payload: vec![9.0; 2] },
+            Msg::Grads { micro: 2, payload: vec![-9.0; 2] },
+            Msg::StageHello {
+                cluster: 1,
+                stage: 2,
+                ring_port: 40002,
+                link_port: 40003,
+            },
+            Msg::StagePrepare {
+                epoch: 4,
+                resume_round: 3,
+                ring_members: vec![(0, 1111), (2, 2222)],
+                link_down_port: 40004,
+                drain_round: 0,
+            },
+            Msg::TraceEvents {
+                events: vec![TraceEvent {
+                    cluster: 1,
+                    stage: 0,
+                    epoch: 2,
+                    round: 3,
+                    tid: 4,
+                    start_us: 5,
+                    dur_us: 6,
+                    bytes: 7,
+                    target: "wire".to_string(),
+                    phase: "send".to_string(),
+                }],
+            },
+        ]
+    }
+
+    /// Seeded random byte soup must never panic or blow memory in
+    /// `decode` — every outcome is Ok(some Msg) or a clean Err.  Covers
+    /// all kind tags (the first byte cycles through 0..=255 far past the
+    /// 0..=14 valid range) and wildly lying length fields inside bodies.
+    #[test]
+    fn decode_fuzz_random_bytes_never_panic() {
+        let mut rng = Pcg32::new(0xf2a3_1e0d, 0);
+        for case in 0..20_000u32 {
+            let len = (rng.below(257)) as usize;
+            let mut bytes = vec![0u8; len];
+            for b in bytes.iter_mut() {
+                *b = rng.next_u32() as u8;
+            }
+            if !bytes.is_empty() {
+                // Make sure every kind tag gets dense coverage.
+                bytes[0] = (case % 256) as u8;
+            }
+            let _ = decode(&bytes); // must return, not panic
+        }
+    }
+
+    /// Every strict prefix of every valid encoding decodes to a clean
+    /// `Err` — a truncated frame can never be misread as a (different)
+    /// complete message, and the cursor never reads past the slice.
+    #[test]
+    fn decode_fuzz_all_truncations_err() {
+        for msg in fuzz_corpus() {
+            let bytes = encode(&msg);
+            assert_eq!(decode(&bytes).unwrap(), msg);
+            for cut in 0..bytes.len() {
+                // Shutdown is 1 byte; its only strict prefix is empty.
+                let r = decode(&bytes[..cut]);
+                assert!(
+                    r.is_err(),
+                    "truncation to {cut}/{} bytes of {} decoded to {:?}",
+                    bytes.len(),
+                    msg.name(),
+                    r
+                );
+            }
+        }
+    }
+
+    /// Valid encodings with random trailing garbage and random single-byte
+    /// corruption must never panic (corruption may still decode to SOME
+    /// message — the frame has no checksum — but it must return cleanly,
+    /// and count-bearing corruption must not allocate unboundedly).
+    #[test]
+    fn decode_fuzz_mutations_never_panic() {
+        let mut rng = Pcg32::new(0x5eed_cafe, 1);
+        for msg in fuzz_corpus() {
+            let clean = encode(&msg);
+            for _ in 0..200 {
+                let mut bytes = clean.clone();
+                match rng.below(3) {
+                    0 => {
+                        // Flip one byte anywhere (length/count fields
+                        // included — f32s/str/member counts now lie).
+                        let i = rng.below(bytes.len() as u32) as usize;
+                        bytes[i] ^= (rng.next_u32() as u8) | 1;
+                    }
+                    1 => {
+                        // Append garbage: decode reads a prefix and
+                        // returns; trailing bytes are simply unread.
+                        for _ in 0..rng.below(16) {
+                            bytes.push(rng.next_u32() as u8);
+                        }
+                    }
+                    _ => {
+                        // Both.
+                        let i = rng.below(bytes.len() as u32) as usize;
+                        bytes[i] = bytes[i].wrapping_add(1 + rng.below(255) as u8);
+                        bytes.push(rng.next_u32() as u8);
+                    }
+                }
+                let _ = decode(&bytes);
+            }
+        }
+    }
+
+    /// `read_msg` rejects hostile length prefixes — zero and anything
+    /// above [`MAX_FRAME_BYTES`] — *before* allocating the body buffer,
+    /// so a corrupt prefix cannot OOM the process.
+    #[test]
+    fn read_msg_rejects_hostile_length_prefixes() {
+        for len in [0u32, MAX_FRAME_BYTES + 1, u32::MAX] {
+            let mut s: Vec<u8> = Vec::new();
+            s.extend_from_slice(&len.to_le_bytes());
+            s.extend_from_slice(&[0u8; 16]);
+            let err = read_msg(&mut &s[..]).unwrap_err();
+            assert!(
+                err.to_string().contains("bad frame length"),
+                "len {len}: {err}"
+            );
+        }
+        // Truncated streams (mid-prefix and mid-body) error cleanly too.
+        let full = {
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &Msg::Hello { rank: 1, ring_port: 2 }).unwrap();
+            buf
+        };
+        for cut in 0..full.len() {
+            assert!(read_msg(&mut &full[..cut]).is_err());
+        }
     }
 }

@@ -65,6 +65,13 @@
 //! watches control sockets for EOF (process death).  `resume_round` is
 //! max(applied)+1 over the survivors (max(drained)+1 after a drain), so no
 //! committed outer update is replayed.
+//!
+//! The protocol *logic* — when to ack, when membership is stale, the
+//! drain-or-discard ruling, grace draining, completion — lives as pure
+//! state machines in [`crate::protocol`] ([`crate::protocol::CoordinatorSm`]
+//! and [`crate::protocol::WorkerSm`]); [`elastic`] is the I/O shell that
+//! runs them over these wire frames, and [`crate::protocol::sim`] runs
+//! the very same machines under a deterministic interleaving explorer.
 
 pub mod elastic;
 pub mod faulty;
