@@ -16,9 +16,10 @@
 //!     cargo run --release --example decentralized_107b_sim -- \
 //!         --calibrate-from run.json
 
-use dilocox::config::Algo;
+use dilocox::config::{Algo, NetworkConfig};
 use dilocox::metrics::Table;
 use dilocox::netsim::{Link, LinkFaultModel};
+use dilocox::transport::probe::{ring_bottleneck, ring_order, LinkMatrix};
 use dilocox::report::{self, paper};
 use dilocox::sim::{self, ScaleConfig, SimAlgo};
 use dilocox::util::json::Json;
@@ -105,6 +106,50 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
+
+    // ---- reduction topology: flat vs reordered vs hier -------------------
+    // Four 107B clusters spread over two sites, deliberately interleaved
+    // (site 0 holds clusters 0 and 2) so the naive rank-ascending ring
+    // crosses the 1 Gbps WAN on every hop.  Bandwidth-aware reordering
+    // groups each site contiguously; the hierarchical two-level reduce
+    // sends only one leader per site onto the WAN, cutting the cross-site
+    // payload from 2·(C−1)/C to 2·(S−1)/S of the sync.
+    println!(
+        "107B sync topology at 1 Gbps WAN (C=4 clusters, S=2 sites, \
+         interleaved placement):"
+    );
+    let scale = ScaleConfig::qwen_107b();
+    let net4 = NetworkConfig::paper_1gbps(4);
+    let site_of = [0usize, 1, 0, 1];
+    let dx = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+    for (label, payload) in [
+        ("fp32 pseudo-gradient", (4.0 * scale.params) as u64),
+        (
+            "DiLoCoX compressed",
+            sim::sync_payload_bytes(scale.params, scale.d_hidden, &dx.method),
+        ),
+    ] {
+        let mut t = Table::new(&[
+            "topology",
+            "ring order",
+            "WAN bytes/member",
+            "WAN sync",
+        ]);
+        for r in sim::reduce_topology_rows(payload, &net4, &site_of) {
+            t.row(&[
+                r.topology.to_string(),
+                format!("{:?}", r.order),
+                fmt_bytes(r.wan_bytes_per_member),
+                fmt_secs(r.wan_secs),
+            ]);
+        }
+        println!("{label} ({}):\n{}", fmt_bytes(payload), t.render());
+    }
+    println!(
+        "Exact fractions of the payload per member on the WAN: flat and \
+         reordered rings move 2·(C−1)/C = 3/2; a hierarchical site leader \
+         moves 2·(S−1)/S = 1/1.\n"
+    );
 
     // ---- WAN churn: the fault-aware cost model hook ----------------------
     // Decentralized clusters live on real WANs: stragglers and packet loss
@@ -216,6 +261,46 @@ fn calibrate_from(path: &str) {
             ]);
         }
         println!("{}", t.render());
+    }
+    // A reordered-topology fleet ships its probed link matrix in the
+    // report (`links` rows) — round-trip it the same way the measured
+    // stage times are: rebuild the matrix, recompute the ring order the
+    // coordinator would pick, and show what the reorder bought.
+    if let Some(arr) = v.path("links").and_then(|j| j.as_arr()) {
+        let mut entries: Vec<(u32, u32, f64, f64)> = Vec::new();
+        let mut n = 0usize;
+        for e in arr {
+            let g = |k: &str| e.path(k).and_then(|j| j.as_f64()).unwrap_or(0.0);
+            let (from, to) = (g("from") as u32, g("to") as u32);
+            n = n.max(from as usize + 1).max(to as usize + 1);
+            entries.push((from, to, g("gbps"), g("latency_ms")));
+        }
+        if !entries.is_empty() && n > 1 {
+            let m = LinkMatrix::from_entries(n, &entries);
+            println!("Measured links from {path} ({} directed pairs):", entries.len());
+            let mut t = Table::new(&["from", "to", "Gbps", "latency ms"]);
+            for (f, to, gbps, lat) in &entries {
+                t.row(&[
+                    f.to_string(),
+                    to.to_string(),
+                    format!("{gbps:.3}"),
+                    format!("{lat:.3}"),
+                ]);
+            }
+            println!("{}", t.render());
+            let natural: Vec<usize> = (0..n).collect();
+            let order = ring_order(&m);
+            let (nat_bw, nat_lat) = ring_bottleneck(&m, &natural);
+            let (opt_bw, opt_lat) = ring_bottleneck(&m, &order);
+            println!(
+                "natural ring {natural:?}: bottleneck {nat_bw:.3} Gbps, \
+                 {nat_lat:.3} ms total hop latency"
+            );
+            println!(
+                "reordered    {order:?}: bottleneck {opt_bw:.3} Gbps, \
+                 {opt_lat:.3} ms total hop latency\n"
+            );
+        }
     }
     let Some(arr) = v.path("stage_times").and_then(|j| j.as_arr()) else {
         eprintln!(

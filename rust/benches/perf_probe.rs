@@ -27,7 +27,7 @@
 
 use dilocox::comm::ring::build_ring;
 use dilocox::compress::{GroupReducer, Method};
-use dilocox::config::Algo;
+use dilocox::config::{Algo, NetworkConfig};
 use dilocox::runtime::manifest::ParamEntry;
 use dilocox::runtime::Runtime;
 use dilocox::sim::{self, ScaleConfig, SimAlgo};
@@ -75,6 +75,7 @@ fn main() {
 
     let mut sections: Vec<(&str, Json)> = Vec::new();
     sections.push(("ring_allreduce", bench_ring()));
+    sections.push(("ring_topology", bench_ring_topology()));
     sections.push(("reduce", bench_reduce()));
     sections.push(("des", bench_des()));
     sections.push(("step_single", bench_step_single()));
@@ -137,6 +138,18 @@ fn baseline_metrics(doc: &Json) -> Vec<(String, f64, bool)> {
                 r.get("ms_per_op").and_then(Json::as_f64),
             ) {
                 out.push((format!("ring_allreduce[C={c},{e}].ms_per_op"), ms, true));
+            }
+        }
+    }
+    if let Some(rows) = doc.path("sections.ring_topology").and_then(Json::as_arr)
+    {
+        for r in rows {
+            if let (Some(p), Some(t), Some(ms)) = (
+                r.get("payload").and_then(Json::as_str),
+                r.get("topology").and_then(Json::as_str),
+                r.get("wan_ms").and_then(Json::as_f64),
+            ) {
+                out.push((format!("ring_topology[{p},{t}].wan_ms"), ms, true));
             }
         }
     }
@@ -263,6 +276,52 @@ fn bench_ring() -> Json {
             ("ms_per_op", Json::Num(ms_per_op)),
             ("wire_bytes_per_op", Json::Num(wire_per_op as f64)),
         ]));
+    }
+    Json::Arr(rows)
+}
+
+/// Reduction-topology comparison at netsim-modeled heterogeneous links:
+/// four 107B clusters interleaved over two sites (paper 1 Gbps WAN,
+/// 100 Gbps LAN, 30 ms), flat vs bandwidth-reordered vs hierarchical
+/// two-level, for the raw fp32 and the DiLoCoX-compressed sync payload.
+/// Fully deterministic — payload byte math plus the link model, no wall
+/// clock — so a regenerated baseline matches the committed one exactly
+/// and the `--check` gate guards the topology math itself.
+fn bench_ring_topology() -> Json {
+    let scale = ScaleConfig::qwen_107b();
+    let net = NetworkConfig::paper_1gbps(4);
+    let site_of = [0usize, 1, 0, 1];
+    let dx = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+    let mut rows = Vec::new();
+    for (label, payload) in [
+        ("fp32", (4.0 * scale.params) as u64),
+        (
+            "dilocox",
+            sim::sync_payload_bytes(scale.params, scale.d_hidden, &dx.method),
+        ),
+    ] {
+        for r in sim::reduce_topology_rows(payload, &net, &site_of) {
+            println!(
+                "ring_topology[{label},{}]: order {:?}, {} WAN bytes/member, \
+                 {:.1} s modeled WAN sync",
+                r.topology, r.order, r.wan_bytes_per_member, r.wan_secs
+            );
+            rows.push(obj(vec![
+                ("payload", Json::Str(label.to_string())),
+                ("topology", Json::Str(r.topology.to_string())),
+                (
+                    "order",
+                    Json::Arr(
+                        r.order.iter().map(|&i| Json::Num(i as f64)).collect(),
+                    ),
+                ),
+                (
+                    "wan_bytes_per_member",
+                    Json::Num(r.wan_bytes_per_member as f64),
+                ),
+                ("wan_ms", Json::Num(1e3 * r.wan_secs)),
+            ]));
+        }
     }
     Json::Arr(rows)
 }

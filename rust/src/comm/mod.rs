@@ -25,6 +25,50 @@ pub fn ring_allreduce_seconds(payload: u64, net: &NetworkConfig) -> f64 {
     hops as f64 * (chunk / bw + net.latency_ms * 1e-3)
 }
 
+/// Time for one hierarchical two-level all-reduce of `payload` bytes:
+/// each site ring-reduces over the LAN (`intra_bw_gbps`, negligible
+/// latency), one leader per site joins the WAN ring over
+/// `inter_bw_gbps`, then the result is broadcast back through each
+/// site's ring store-and-forward.  `site_sizes[i]` is the number of
+/// clusters at site `i` (the sizes sum to C).
+///
+/// The WAN term moves 2·(S−1)/S·payload per leader instead of the flat
+/// ring's 2·(C−1)/C — the whole point of the topology.  With one
+/// cluster per site (`site_sizes = [1; C]`) this degenerates to exactly
+/// [`ring_allreduce_seconds`].
+pub fn hier_allreduce_seconds(
+    payload: u64,
+    net: &NetworkConfig,
+    site_sizes: &[usize],
+) -> f64 {
+    let s = site_sizes.len();
+    if s == 0 {
+        return 0.0;
+    }
+    let intra_bw = net.intra_bw_gbps * 1e9 / 8.0;
+    // LAN phases run concurrently per site; the slowest site bounds them.
+    let intra = site_sizes
+        .iter()
+        .map(|&n| {
+            if n <= 1 {
+                return 0.0;
+            }
+            let reduce =
+                (2 * (n - 1)) as f64 * (payload as f64 / n as f64) / intra_bw;
+            let bcast = (n - 1) as f64 * payload as f64 / intra_bw;
+            reduce + bcast
+        })
+        .fold(0.0, f64::max);
+    let cross = if s <= 1 {
+        0.0
+    } else {
+        let bw = net.inter_bw_gbps * 1e9 / 8.0;
+        (2 * (s - 1)) as f64
+            * (payload as f64 / s as f64 / bw + net.latency_ms * 1e-3)
+    };
+    intra + cross
+}
+
 /// Parameter-server exchange time (TopK/Cocktail path): every cluster
 /// pushes `up` bytes and pulls `down` bytes over its WAN link, serialized
 /// at the server's link.  The server handles the (c−1) uploads and (c−1)
@@ -84,6 +128,45 @@ mod tests {
         let t = ring_allreduce_seconds(0, &n);
         // 2*(4-1) hops * 50 ms
         assert!((t - 0.3).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn hier_with_one_cluster_per_site_is_the_flat_ring() {
+        let mut n = net(4, 1.0);
+        n.latency_ms = 30.0;
+        let p = 1_000_000_000u64;
+        let flat = ring_allreduce_seconds(p, &n);
+        let hier = hier_allreduce_seconds(p, &n, &[1, 1, 1, 1]);
+        assert!((flat - hier).abs() < 1e-12, "flat={flat} hier={hier}");
+    }
+
+    #[test]
+    fn hier_wan_term_moves_the_two_level_fraction() {
+        // 4 clusters as 2 sites of 2 at 1 Gbps WAN, (near) free LAN: the
+        // WAN term drops from 2·(C−1)/C to 2·(S−1)/S of the payload.
+        let mut n = net(4, 1.0);
+        n.intra_bw_gbps = 1e12; // LAN effectively free
+        n.latency_ms = 0.0;
+        let p = 1_000_000_000u64;
+        let flat = ring_allreduce_seconds(p, &n);
+        let hier = hier_allreduce_seconds(p, &n, &[2, 2]);
+        let flat_frac = 2.0 * 3.0 / 4.0; // 2(C-1)/C
+        let hier_frac = 2.0 * 1.0 / 2.0; // 2(S-1)/S
+        assert!(
+            (hier / flat - hier_frac / flat_frac).abs() < 1e-9,
+            "hier={hier} flat={flat}"
+        );
+    }
+
+    #[test]
+    fn hier_single_site_pays_no_wan() {
+        let mut n = net(4, 0.001); // terrible WAN
+        n.latency_ms = 500.0;
+        let t = hier_allreduce_seconds(1_000_000_000, &n, &[4]);
+        // Pure LAN: 2·(4−1) hops of payload/4 plus a 3-hop broadcast.
+        let bw = 100.0 * 1e9 / 8.0;
+        let expect = 6.0 * 0.25e9 / bw + 3.0 * 1e9 / bw;
+        assert!((t - expect).abs() < 1e-9, "t={t} expect={expect}");
     }
 
     #[test]

@@ -148,6 +148,26 @@ mod tests {
     }
 
     #[test]
+    fn fewer_elements_than_members_yields_empty_chunks() {
+        // n < c: some chunk bounds collapse to zero length; the collective
+        // must still converge, moving only the 4·(hi−lo) bytes per hop
+        // that the non-empty chunks actually carry.
+        run_ring(5, 3);
+        run_ring(4, 1);
+        // n = 0: every chunk is empty — still a valid (if pointless)
+        // collective, not a crash.
+        let members = build_ring(3);
+        std::thread::scope(|scope| {
+            for mut m in members {
+                scope.spawn(move || {
+                    let mut buf: Vec<f32> = Vec::new();
+                    m.allreduce_sum(&mut buf).unwrap();
+                });
+            }
+        });
+    }
+
+    #[test]
     fn wire_bytes_match_ring_formula() {
         let n = 1000usize;
         let c = 4usize;

@@ -161,6 +161,20 @@ pub struct TransportConfig {
     /// quantizes entry k+1 while entry k's ring passes are on the wire.
     /// Results stay bit-for-bit identical at any depth.  Must be ≥ 1.
     pub pipeline_depth: usize,
+    /// Reduce topology: `"flat"` (historical arbitrary-order ring),
+    /// `"reordered"` (probe links at startup, ship the max-bottleneck
+    /// order — see [`crate::transport::probe`]), or `"hier"` (per-site
+    /// rings plus a leaders-only cross-site ring — see
+    /// [`crate::transport::hier`]).  Validated against
+    /// [`crate::transport::ReduceTopology::parse`].
+    pub reduce_topology: String,
+    /// This worker's site tag for the hierarchical topology (`worker
+    /// --site`); 0 = the default single site.
+    pub site: u32,
+    /// Link-probe payload size in f32 elements (reordered topology).
+    pub probe_payload_elems: usize,
+    /// Echo trials per probed link; the minimum RTT wins.  Must be ≥ 1.
+    pub probe_repeats: usize,
 }
 
 impl Default for TransportConfig {
@@ -172,6 +186,10 @@ impl Default for TransportConfig {
             stage_listen_base_port: 0,
             comm_pool_size: 1,
             pipeline_depth: 1,
+            reduce_topology: "flat".to_string(),
+            site: 0,
+            probe_payload_elems: 65_536,
+            probe_repeats: 3,
         }
     }
 }
@@ -426,6 +444,18 @@ impl ExperimentConfig {
         }
         set_usize!("transport.comm_pool_size", cfg.transport.comm_pool_size);
         set_usize!("transport.pipeline_depth", cfg.transport.pipeline_depth);
+        if let Some(s) = v.path("transport.reduce_topology").and_then(|j| j.as_str())
+        {
+            cfg.transport.reduce_topology = s.to_string();
+        }
+        if let Some(x) = v.path("transport.site").and_then(|j| j.as_usize()) {
+            cfg.transport.site = x as u32;
+        }
+        set_usize!(
+            "transport.probe_payload_elems",
+            cfg.transport.probe_payload_elems
+        );
+        set_usize!("transport.probe_repeats", cfg.transport.probe_repeats);
         set_bool!("faults.enabled", cfg.faults.enabled);
         if let Some(x) = v.path("faults.seed").and_then(|j| j.as_usize()) {
             cfg.faults.seed = x as u64;
@@ -493,6 +523,14 @@ impl ExperimentConfig {
             return Err(anyhow!(
                 "transport.pipeline_depth must be >= 1 (1 = sequential reduce)"
             ));
+        }
+        crate::transport::ReduceTopology::parse(&self.transport.reduce_topology)
+            .map_err(|e| anyhow!("transport.reduce_topology: {e}"))?;
+        if self.transport.probe_payload_elems == 0 {
+            return Err(anyhow!("transport.probe_payload_elems must be >= 1"));
+        }
+        if self.transport.probe_repeats == 0 {
+            return Err(anyhow!("transport.probe_repeats must be >= 1"));
         }
         if !(0.0..=1.0).contains(&self.faults.delay_prob) {
             return Err(anyhow!("faults.delay_prob must be in [0, 1]"));
@@ -661,6 +699,10 @@ ring_timeout_ms = 750
 connect_timeout_ms = 1500
 comm_pool_size = 4
 pipeline_depth = 3
+reduce_topology = "hier"
+site = 2
+probe_payload_elems = 4096
+probe_repeats = 5
 [faults]
 enabled = true
 seed = 42
@@ -678,6 +720,10 @@ straggler_ms = 5
         assert_eq!(cfg.transport.connect_timeout_ms, 1500);
         assert_eq!(cfg.transport.comm_pool_size, 4);
         assert_eq!(cfg.transport.pipeline_depth, 3);
+        assert_eq!(cfg.transport.reduce_topology, "hier");
+        assert_eq!(cfg.transport.site, 2);
+        assert_eq!(cfg.transport.probe_payload_elems, 4096);
+        assert_eq!(cfg.transport.probe_repeats, 5);
         assert!(cfg.faults.enabled);
         assert_eq!(cfg.faults.seed, 42);
         assert!((cfg.faults.delay_prob - 0.25).abs() < 1e-12);
@@ -739,6 +785,18 @@ dir = "traces/run1"
 
         let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
         cfg.transport.pipeline_depth = 0;
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.transport.reduce_topology = "mesh".to_string();
+        assert!(cfg.validate().is_err());
+
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.transport.reduce_topology = "hierarchical".to_string();
+        assert!(cfg.validate().is_ok(), "aliases must validate");
+
+        let mut cfg = ExperimentConfig::default_for("tiny", Algo::DiLoCoX);
+        cfg.transport.probe_repeats = 0;
         assert!(cfg.validate().is_err());
     }
 

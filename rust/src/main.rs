@@ -40,7 +40,7 @@ use dilocox::transport::elastic::{
     SpawnMode, StageWorkerOpts, WorkerOpts, Workload,
 };
 use dilocox::transport::faulty::FaultPlan;
-use dilocox::transport::TransportBackend;
+use dilocox::transport::{ReduceTopology, TransportBackend};
 use dilocox::util::cli::CliSpec;
 use dilocox::util::json::{obj, Json};
 use dilocox::util::{fmt_bytes, fmt_secs};
@@ -195,6 +195,8 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
     .opt("kill-stage", "0", "inject: stage process to kill (tcp, --pp > 1)")
     .opt("report", "", "write a run report JSON (incl. stage wall times) here")
     .opt("trace", "", "enable tracing and write the merged Chrome-trace JSON here (tcp)")
+    .opt("reduce-topology", "", "flat | reordered | hier (default: config [transport])")
+    .opt("sites", "", "tcp: comma-separated per-rank site tags, e.g. 0,0,1,1 (hier)")
     .flag("synthetic", "tcp: force the synthetic workload (affine chain with --pp > 1)");
     let args = match spec.parse(argv) {
         Ok(a) => a,
@@ -218,6 +220,11 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
                 return 2;
             }
         };
+    }
+    if !args.get("reduce-topology").is_empty() {
+        // Stored as the config string; validate() below rejects unknown
+        // spellings with the same message as a bad TOML value.
+        cfg.transport.reduce_topology = args.get("reduce-topology").to_string();
     }
     if !args.get("kill-round").is_empty() {
         cfg.faults.enabled = true;
@@ -276,7 +283,22 @@ fn write_report(path: &str, json: &Json) -> Result<(), String> {
         .map_err(|e| format!("writing report {path}: {e}"))
 }
 
-fn elastic_report_json(cfg: &ExperimentConfig, out: &ElasticOutcome) -> Json {
+/// Parse a `--sites 0,0,1,1` list of per-rank site tags.
+fn parse_sites(s: &str) -> Result<Vec<u32>, String> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<u32>()
+                .map_err(|_| format!("--sites: '{t}' is not a site tag (u32)"))
+        })
+        .collect()
+}
+
+fn elastic_report_json(
+    cfg: &ExperimentConfig,
+    ecfg: &ElasticConfig,
+    out: &ElasticOutcome,
+) -> Json {
     let rounds = Json::Arr(
         out.mean_loss_per_round()
             .into_iter()
@@ -313,6 +335,30 @@ fn elastic_report_json(cfg: &ExperimentConfig, out: &ElasticOutcome) -> Json {
         // same shape as the threaded report, so the DES calibration
         // (`--calibrate-from`) consumes either.
         ("stage_times", stage_times_json(&out.stage_times)),
+        ("reduce_topology", Json::Str(ecfg.reduce_topology.name().to_string())),
+        (
+            "sites",
+            Json::Arr(ecfg.sites.iter().map(|s| Json::Num(*s as f64)).collect()),
+        ),
+        // Probed directed links (reordered topology only; empty otherwise) —
+        // the DES consumes these the way `--calibrate-from` consumes
+        // `stage_times`, closing the measure → model loop.
+        (
+            "links",
+            Json::Arr(
+                out.links
+                    .iter()
+                    .map(|(from, to, gbps, lat)| {
+                        obj(vec![
+                            ("from", Json::Num(*from as f64)),
+                            ("to", Json::Num(*to as f64)),
+                            ("gbps", json_num_or_null(*gbps)),
+                            ("latency_ms", json_num_or_null(*lat)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -447,6 +493,23 @@ fn cmd_coordinate_tcp(cfg: &ExperimentConfig, args: &dilocox::util::cli::Args) -
         Workload::Runtime { artifacts_dir: cfg.artifacts_dir.clone() }
     };
     let mut ecfg = ElasticConfig::from_experiment(cfg, workload);
+    if !args.get("sites").is_empty() {
+        ecfg.sites = match parse_sites(args.get("sites")) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+        if ecfg.sites.len() != ecfg.workers {
+            eprintln!(
+                "--sites lists {} tags but the fleet has {} workers",
+                ecfg.sites.len(),
+                ecfg.workers
+            );
+            return 2;
+        }
+    }
     if matches!(ecfg.workload, Workload::Quadratic { .. }) {
         if cfg.parallel.pp > 1 {
             // SyntheticPipeline-tuned defaults (same as the executor
@@ -493,7 +556,7 @@ fn cmd_coordinate_tcp(cfg: &ExperimentConfig, args: &dilocox::util::cli::Args) -
                 );
             }
             if !args.get("report").is_empty() {
-                let j = elastic_report_json(cfg, &out);
+                let j = elastic_report_json(cfg, &ecfg, &out);
                 if let Err(e) = write_report(args.get("report"), &j) {
                     eprintln!("{e}");
                     return 1;
@@ -556,6 +619,8 @@ fn cmd_worker(argv: &[String]) -> i32 {
     .opt("workload", "quad", "quad | runtime")
     .opt("dim", "64", "quadratic workload dimension")
     .opt("artifacts", "", "artifact dir (runtime workload)")
+    .opt("site", "0", "site tag for the hierarchical two-level reduce")
+    .opt("reduce-topology", "flat", "flat | reordered | hier")
     .opt("ring-timeout-ms", "5000", "ring socket timeout")
     .opt("connect-timeout-ms", "5000", "ring formation deadline")
     .opt("comm-pool", "1", "persistent comm-thread pool size (1 = off)")
@@ -690,6 +755,9 @@ fn worker_opts_from_args(args: &dilocox::util::cli::Args) -> Result<WorkerOpts, 
         connect_timeout_ms: args.get_u64("connect-timeout-ms")?,
         comm_pool_size: args.get_usize("comm-pool")?.max(1),
         pipeline_depth: args.get_usize("pipeline-depth")?.max(1),
+        site: args.get_usize("site")? as u32,
+        reduce_topology: ReduceTopology::parse(args.get("reduce-topology"))
+            .map_err(|e| format!("{e:#}"))?,
         faults: if plan.is_quiet() { None } else { Some(plan) },
     })
 }

@@ -118,6 +118,14 @@ pub struct CoordinatorSm {
     resume_round: u32,
     timer_token: u64,
     phase: Phase,
+    /// Preferred cluster order for the reduce ring (bandwidth-aware
+    /// reordering or (site, rank) grouping).  Clusters appear in this
+    /// order first; anything unlisted — e.g. a member that joined after
+    /// the probe ran — trails in ascending cluster order.  Empty means
+    /// the historical ascending order.  A preference only biases the
+    /// ring layout shipped in `Prepare`; membership decisions are
+    /// untouched, which keeps every model-checked property intact.
+    order: Vec<u32>,
 }
 
 impl CoordinatorSm {
@@ -135,7 +143,15 @@ impl CoordinatorSm {
             resume_round: 1,
             timer_token: 0,
             phase: Phase::Idle,
+            order: Vec::new(),
         }
+    }
+
+    /// Install a preferred cluster order for future epochs' rings (see
+    /// the `order` field).  Takes effect at the next `start_epoch`; an
+    /// epoch already in flight keeps the layout it proposed.
+    pub fn set_cluster_order(&mut self, order: Vec<u32>) {
+        self.order = order;
     }
 
     pub fn epoch(&self) -> u32 {
@@ -293,10 +309,15 @@ impl CoordinatorSm {
             return;
         }
         let clusters: BTreeSet<u32> = self.live.iter().map(|&(c, _)| c).collect();
-        let pending: Vec<u32> = clusters
+        let mut pending: Vec<u32> = clusters
             .into_iter()
             .filter(|&c| (0..self.stages).any(|s| !self.done.contains(&(c, s))))
             .collect();
+        if !self.order.is_empty() {
+            let pos =
+                |c: u32| self.order.iter().position(|&o| o == c).unwrap_or(usize::MAX);
+            pending.sort_by_key(|&c| (pos(c), c));
+        }
         if pending.is_empty() {
             self.finish(out);
             return;
@@ -516,6 +537,56 @@ mod tests {
         assert_eq!(out.iter().filter(|o| matches!(o, CoordOut::Shutdown { .. })).count(), 3);
         assert!(matches!(out.last(), Some(CoordOut::Finished)));
         assert!(sm.is_finished());
+    }
+
+    fn ring_of(out: &[CoordOut], who: Key) -> Vec<Key> {
+        out.iter()
+            .find_map(|o| match o {
+                CoordOut::Prepare { to, ring, .. } if *to == who => Some(ring.clone()),
+                _ => None,
+            })
+            .unwrap()
+    }
+
+    /// A cluster-order preference reshapes the proposed ring without
+    /// touching membership; unlisted clusters trail in ascending order.
+    #[test]
+    fn cluster_order_preference_reshapes_the_ring() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1, 2, 3]), 1, 4);
+        sm.set_cluster_order(vec![0, 2, 1, 3]);
+        let out = start(&mut sm);
+        assert_eq!(ring_of(&out, (1, 0)), keys(&[0, 2, 1, 3]));
+        // Same recipients either way — only the layout moved.
+        let mut got = prepares(&out);
+        got.sort();
+        assert_eq!(got, keys(&[0, 1, 2, 3]));
+        // A member missing from the preference (here: everyone after a
+        // preference set pre-churn) trails in ascending order.
+        let mut sm = CoordinatorSm::new(keys(&[0, 1, 2, 3]), 1, 4);
+        sm.set_cluster_order(vec![3, 1]);
+        let out = start(&mut sm);
+        assert_eq!(ring_of(&out, (0, 0)), keys(&[3, 1, 0, 2]));
+    }
+
+    /// The default (empty) preference keeps the historical ascending
+    /// ring, and a preference composes with churn: the re-prepared ring
+    /// keeps the survivors in preference order.
+    #[test]
+    fn cluster_order_survives_churn() {
+        let mut sm = CoordinatorSm::new(keys(&[0, 1, 2]), 1, 4);
+        let out = start(&mut sm);
+        assert_eq!(ring_of(&out, (0, 0)), keys(&[0, 1, 2]), "default stays ascending");
+        let mut sm = CoordinatorSm::new(keys(&[0, 1, 2]), 1, 4);
+        sm.set_cluster_order(vec![2, 0, 1]);
+        start(&mut sm);
+        for r in 0..3 {
+            sm.handle(CoordIn::PrepareAck { key: (r, 0), epoch: 1 });
+        }
+        // Worker 0 dies mid-run → fresh epoch over the survivors, still
+        // laid out by the preference.
+        let out = sm.handle(CoordIn::Closed { key: (0, 0) });
+        assert_eq!(sm.epoch(), 2);
+        assert_eq!(ring_of(&out, (1, 0)), keys(&[2, 1]));
     }
 
     /// Satellite edge case: a worker dies *between* its PrepareAck and

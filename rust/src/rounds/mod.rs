@@ -1554,6 +1554,79 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_reduce_handles_fewer_elements_than_members() {
+        // Every ring pass in this spec is shorter than the 5-member ring
+        // (w: 2×2 → 4-elem P/Q′ passes, b: a 3-elem segment), so each
+        // chunked allreduce runs with empty chunks on some ranks.  The
+        // sequential and the pipelined path must still agree bit for bit,
+        // payload bytes and wire ledger included.
+        let shapes: &[(&str, &[usize])] = &[("w", &[2, 2]), ("b", &[3])];
+        let mut spec = Vec::new();
+        let mut off = 0usize;
+        for (name, shape) in shapes {
+            spec.push(ParamEntry {
+                name: name.to_string(),
+                shape: shape.to_vec(),
+                offset: off,
+            });
+            off += shape.iter().product::<usize>();
+        }
+        let n = off;
+        // Returns per-rank (delta, payload bytes) plus the fleet-wide
+        // wire total, read after every thread joined (the shared meter is
+        // only deterministic once the whole collective has finished).
+        let run = |depth: usize| -> (Vec<(Vec<f32>, u64)>, u64) {
+            let raw = build_ring(5);
+            let meter = std::sync::Arc::clone(&raw[0].meter);
+            let members: Vec<Box<dyn RingTransport>> =
+                raw.into_iter().map(|m| Box::new(m) as _).collect();
+            let per_rank = std::thread::scope(|scope| {
+                let handles: Vec<_> = members
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, mut m)| {
+                        let spec = spec.clone();
+                        scope.spawn(move || {
+                            let mut c = WireCompressor::new(
+                                Method::LowRankQuant { rank: 2, q_bits: 4 },
+                                42,
+                            );
+                            c.set_pipeline_depth(depth);
+                            let mut delta: Vec<f32> = (0..n)
+                                .map(|i| {
+                                    ((i + 1) as f32 * 0.31 + rank as f32)
+                                        .cos()
+                                })
+                                .collect();
+                            let bytes = c
+                                .reduce(&mut *m, &mut delta, &spec, 3)
+                                .unwrap();
+                            (delta, bytes)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect::<Vec<_>>()
+            });
+            (per_rank, meter.total())
+        };
+        let (seq, seq_wire) = run(1);
+        let (pip, pip_wire) = run(3);
+        assert!(seq_wire > 0, "nothing crossed the wire");
+        assert_eq!(seq_wire, pip_wire, "wire ledger diverged");
+        for (rank, (s, p)) in seq.iter().zip(&pip).enumerate() {
+            assert_eq!(s.0, p.0, "rank {rank}: reduced deltas diverged");
+            assert_eq!(s.1, p.1, "rank {rank}: payload bytes diverged");
+        }
+        // All ranks agree on the reduced delta (it is a mean).
+        for (rank, s) in seq.iter().enumerate().skip(1) {
+            assert_eq!(s.0, seq[0].0, "rank {rank} disagrees with rank 0");
+        }
+    }
+
+    #[test]
     fn pooled_lane_flight_joins_and_survives_reseed() {
         // Overlapped flights on the persistent comm pool: the join-then-
         // begin cadence reuses a parked worker round after round, and

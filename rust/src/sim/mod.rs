@@ -359,6 +359,99 @@ pub fn simulate_calibrated(
     }
 }
 
+/// One row of the flat / reordered / hier reduction-topology comparison.
+#[derive(Clone, Debug)]
+pub struct TopologyRow {
+    pub topology: &'static str,
+    /// Global reduce order over the cluster ids.
+    pub order: Vec<usize>,
+    /// Modeled WAN seconds for one sync of the payload.
+    pub wan_secs: f64,
+    /// Bytes a WAN-crossing member moves over cross-site links per sync:
+    /// 2·(C−1)/C·payload for the flat/reordered rings, 2·(S−1)/S·payload
+    /// for a hierarchical site leader.
+    pub wan_bytes_per_member: u64,
+}
+
+/// Model the three reduction topologies over one heterogeneous link
+/// matrix: `site_of[i]` is cluster i's site; same-site links run at
+/// `net.intra_bw_gbps` with negligible latency, cross-site links at
+/// `net.inter_bw_gbps` with `net.latency_ms` per hop.
+///
+/// - flat: the natural rank-ascending ring.  With interleaved placement
+///   every hop crosses the WAN and every member moves 2·(C−1)/C·payload
+///   on it.
+/// - reordered: [`crate::transport::probe::ring_order`] groups each site
+///   contiguously, so only one link per site boundary crosses the WAN —
+///   but a crossing member still moves the full 2·(C−1)/C·payload, and
+///   the synchronous ring is still paced by the slowest hop.
+/// - hier: the two-level reduce — only the S site leaders touch the WAN,
+///   each moving exactly 2·(S−1)/S·payload.
+pub fn reduce_topology_rows(
+    payload: u64,
+    net: &NetworkConfig,
+    site_of: &[usize],
+) -> Vec<TopologyRow> {
+    use crate::transport::probe::{ring_order, ring_step_seconds, LinkMatrix};
+    let c = site_of.len();
+    let mut m = LinkMatrix::new(c);
+    for i in 0..c {
+        for j in 0..c {
+            if i == j {
+                continue;
+            }
+            if site_of[i] == site_of[j] {
+                m.set(i, j, net.intra_bw_gbps, 0.0);
+            } else {
+                m.set(i, j, net.inter_bw_gbps, net.latency_ms);
+            }
+        }
+    }
+    // Site sizes in order of first appearance (what the hier model needs).
+    let mut sites: Vec<usize> = Vec::new();
+    let mut site_sizes: Vec<usize> = Vec::new();
+    for &s in site_of {
+        match sites.iter().position(|&x| x == s) {
+            Some(i) => site_sizes[i] += 1,
+            None => {
+                sites.push(s);
+                site_sizes.push(1);
+            }
+        }
+    }
+    let per_member = crate::comm::ring_wire_bytes_per_worker(payload, c);
+    let natural: Vec<usize> = (0..c).collect();
+    let reordered = ring_order(&m);
+    // The hierarchical global order is (site, rank) ascending — the same
+    // order the elastic coordinator commits for a hier fleet.
+    let mut hier_order: Vec<usize> = (0..c).collect();
+    hier_order.sort_by_key(|&i| (site_of[i], i));
+    let s = site_sizes.len();
+    vec![
+        TopologyRow {
+            topology: "flat",
+            wan_secs: ring_step_seconds(&m, &natural, payload),
+            order: natural,
+            wan_bytes_per_member: per_member,
+        },
+        TopologyRow {
+            topology: "reordered",
+            wan_secs: ring_step_seconds(&m, &reordered, payload),
+            order: reordered,
+            wan_bytes_per_member: per_member,
+        },
+        TopologyRow {
+            topology: "hier",
+            wan_secs: crate::comm::hier_allreduce_seconds(
+                payload, net, &site_sizes,
+            ),
+            order: hier_order,
+            wan_bytes_per_member:
+                crate::transport::hier::hier_cross_bytes_per_leader(payload, s),
+        },
+    ]
+}
+
 /// Paper Fig. 4: all four algorithms at one scale.
 pub fn figure4_row(scale: &ScaleConfig, outer_rounds: usize) -> Vec<SimResult> {
     [Algo::AllReduce, Algo::OpenDiLoCo, Algo::CocktailSgd, Algo::DiLoCoX]
@@ -469,6 +562,43 @@ mod tests {
         assert!(with.comm_secs < with.step_secs * a.local_steps as f64);
         assert!(with.tokens_per_sec > without.tokens_per_sec);
         assert!(with.gpu_utilization > 0.95, "{}", with.gpu_utilization);
+    }
+
+    #[test]
+    fn topology_rows_show_the_exact_two_level_fraction() {
+        // 4 clusters interleaved over 2 sites (0,1,0,1) at the paper's
+        // 1 Gbps WAN: the naive flat ring crosses the WAN on every hop.
+        let net = NetworkConfig::paper_1gbps(4);
+        let payload = 4_000_000_000u64;
+        let rows = reduce_topology_rows(payload, &net, &[0, 1, 0, 1]);
+        let by = |t: &str| rows.iter().find(|r| r.topology == t).unwrap();
+        let (flat, reordered, hier) = (by("flat"), by("reordered"), by("hier"));
+        // Exact §2.4.1 byte math: 2(C−1)/C vs 2(S−1)/S of the payload.
+        assert_eq!(flat.wan_bytes_per_member, 2 * 3 * payload / 4);
+        assert_eq!(reordered.wan_bytes_per_member, 2 * 3 * payload / 4);
+        assert_eq!(hier.wan_bytes_per_member, 2 * 1 * payload / 2);
+        // Reordering groups the sites: consecutive same-site pairs exist.
+        let ro = &reordered.order;
+        let site = [0usize, 1, 0, 1];
+        let crossings = (0..4)
+            .filter(|&i| site[ro[i]] != site[ro[(i + 1) % 4]])
+            .count();
+        assert_eq!(crossings, 2, "reordered={ro:?}");
+        // Hier order is (site, rank) ascending.
+        assert_eq!(hier.order, vec![0, 2, 1, 3]);
+        // On this uniform two-tier matrix the synchronous ring is paced
+        // by its one unavoidable WAN hop either way, so reordering can't
+        // beat flat on time (it wins on aggregate WAN bytes and on
+        // heterogeneous cross-links); hier strictly wins on both.
+        assert!(reordered.wan_secs <= flat.wan_secs + 1e-9);
+        assert!(hier.wan_secs < reordered.wan_secs);
+        let ratio = hier.wan_secs / flat.wan_secs;
+        // Latency terms are second-order at 4 GB payload; the ratio lands
+        // near (2(S−1)/S)/(2(C−1)/C) = 1.0/1.5.
+        assert!(
+            (ratio - (1.0 / 1.5)).abs() < 0.05,
+            "ratio={ratio}"
+        );
     }
 
     #[test]

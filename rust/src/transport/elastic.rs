@@ -108,9 +108,11 @@ use crate::runtime::manifest::ParamEntry;
 use crate::runtime::Manifest;
 use crate::obs::{self, TraceEvent};
 use crate::transport::faulty::{FaultPlan, FaultyRing};
-use crate::transport::frame::{read_msg, write_msg, Msg};
+use crate::transport::frame::{read_msg, write_msg, MemberInfo, Msg, ProbeLink};
+use crate::transport::hier::{self, HierRing};
+use crate::transport::probe::{self, LinkMatrix};
 use crate::transport::tcp;
-use crate::transport::RingTransport;
+use crate::transport::{ReduceTopology, RingTransport};
 use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Context, Result};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
@@ -158,6 +160,12 @@ pub struct WorkerOpts {
     pub comm_pool_size: usize,
     /// Reduce-pipeline depth for the wire compressor (1 = sequential).
     pub pipeline_depth: usize,
+    /// Site tag for the hierarchical topology (`[transport] site` /
+    /// `worker --site`); 0 is the default single site.
+    pub site: u32,
+    /// Which reduce topology this fleet runs (decides whether the worker
+    /// answers link probes and how it forms its committed ring).
+    pub reduce_topology: ReduceTopology,
     pub faults: Option<FaultPlan>,
 }
 
@@ -186,6 +194,18 @@ pub struct ElasticConfig {
     pub microbatches: usize,
     pub transport: TransportConfig,
     pub faults: FaultConfig,
+    /// Reduce topology for the fleet's rings: [`ReduceTopology::Flat`]
+    /// (historical arbitrary-order ring), `Reordered` (probe links, ship
+    /// the max-bottleneck order), or `Hier` (per-site rings + a
+    /// leaders-only cross-site ring).
+    pub reduce_topology: ReduceTopology,
+    /// Per-rank site tags for the hierarchical topology (rank indexes the
+    /// vector; missing entries mean site 0, so empty = one site).
+    pub sites: Vec<u32>,
+    /// Probe payload size in f32 elements (reordered topology).
+    pub probe_payload_elems: usize,
+    /// Echo trials per probed link (minimum RTT wins).
+    pub probe_repeats: usize,
     /// Hard wall-clock ceiling for the whole run (hang safety net).
     pub wall_timeout_ms: u64,
     /// Structured tracing ([`crate::obs`]): workers record spans and ship
@@ -216,10 +236,19 @@ impl ElasticConfig {
             microbatches: 1,
             transport: TransportConfig::default(),
             faults: FaultConfig::default(),
+            reduce_topology: ReduceTopology::Flat,
+            sites: Vec::new(),
+            probe_payload_elems: 65_536,
+            probe_repeats: 3,
             wall_timeout_ms: 120_000,
             trace: false,
             trace_dir: String::new(),
         }
+    }
+
+    /// Site of a rank under the configured tags (missing = site 0).
+    pub fn site_of(&self, rank: u32) -> u32 {
+        self.sites.get(rank as usize).copied().unwrap_or(0)
     }
 
     /// Stage-fleet defaults over the artifact-free [`SyntheticPipeline`]
@@ -270,6 +299,14 @@ impl ElasticConfig {
             microbatches: cfg.parallel.microbatches,
             transport: cfg.transport.clone(),
             faults: cfg.faults.clone(),
+            // `validate()` already rejected unknown names; a locally
+            // spawned fleet shares one machine, hence one site, so the
+            // per-rank tags stay empty (every rank = site 0).
+            reduce_topology: ReduceTopology::parse(&cfg.transport.reduce_topology)
+                .unwrap_or_default(),
+            sites: Vec::new(),
+            probe_payload_elems: cfg.transport.probe_payload_elems,
+            probe_repeats: cfg.transport.probe_repeats,
             wall_timeout_ms,
             trace: cfg.trace.enabled,
             trace_dir: cfg.trace.dir.clone(),
@@ -318,6 +355,11 @@ pub struct ElasticOutcome {
     /// drain_round); drain_round = 0 is a discard/no-op commit.  Tests
     /// assert the drain and discard branches from this ledger.
     pub recoveries: Vec<(u32, u32, u32)>,
+    /// Probed directed links `(from, to, gbps, latency_ms)` (reordered
+    /// topology only; empty otherwise) — what `coordinate --report`
+    /// serializes so link measurements round-trip into the DES the way
+    /// `--calibrate-from` does for stage times.
+    pub links: Vec<(u32, u32, f64, f64)>,
     /// The merged fleet-wide timeline (empty unless
     /// [`ElasticConfig::trace`]): every span each worker shipped over its
     /// control socket plus the coordinator's own 2PC spans, self-keyed by
@@ -586,6 +628,16 @@ fn build_fleet_driver(opts: &WorkerOpts, theta0: Vec<f32>) -> RoundDriver {
     driver
 }
 
+/// Stops a probe echo thread when the worker leaves scope, so thread-mode
+/// fleets don't leak one echo loop per run.
+struct EchoGuard(std::sync::Arc<std::sync::atomic::AtomicBool>);
+
+impl Drop for EchoGuard {
+    fn drop(&mut self) {
+        self.0.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
 /// Ship everything this process has recorded so far to the coordinator
 /// as one [`Msg::TraceEvents`] control frame.  Best-effort: a worker
 /// must never fail a round because a trace batch did.
@@ -597,6 +649,96 @@ fn ship_trace(coord: &mut TcpStream) {
     if !events.is_empty() {
         let _ = write_msg(coord, &Msg::TraceEvents { events });
     }
+}
+
+/// A committed epoch's formed-but-not-yet-begun wire rings.  The flat
+/// and reordered topologies are one TCP ring (reordering only changes
+/// the committed member *order*); hier is the intra-site ring plus, on
+/// leaders, the cross-site ring over the members' hier listeners.
+enum FormedRing {
+    Flat(tcp::TcpRing),
+    Hier {
+        intra: tcp::TcpRing,
+        cross: Option<tcp::TcpRing>,
+        global_rank: usize,
+        total: usize,
+    },
+}
+
+/// Form this worker's ring(s) for a committed member list.  Intra-site
+/// first under hier: every member of a site joins its intra ring before
+/// its leader turns to the cross ring, so cross formation can never
+/// starve a non-leader waiting on the same site.
+fn form_committed_ring(
+    opts: &WorkerOpts,
+    members: &[MemberInfo],
+    ring_listener: &TcpListener,
+    hier_listener: &TcpListener,
+    epoch: u32,
+    connect_timeout: Duration,
+    ring_timeout: Duration,
+) -> Result<FormedRing> {
+    if opts.reduce_topology != ReduceTopology::Hier {
+        let endpoints: Vec<(u32, u16)> =
+            members.iter().map(|m| (m.rank, m.ring_port)).collect();
+        let r = tcp::form_ring(
+            opts.rank,
+            epoch,
+            &endpoints,
+            ring_listener,
+            connect_timeout,
+            ring_timeout,
+        )?;
+        return Ok(FormedRing::Flat(r));
+    }
+    let plan = hier::site_plan(members, opts.rank)?;
+    let intra = tcp::form_ring(
+        opts.rank,
+        epoch,
+        &plan.intra,
+        ring_listener,
+        connect_timeout,
+        ring_timeout,
+    )?;
+    let cross = match &plan.cross {
+        Some(leaders) => Some(tcp::form_ring(
+            opts.rank,
+            epoch,
+            leaders,
+            hier_listener,
+            connect_timeout,
+            ring_timeout,
+        )?),
+        None => None,
+    };
+    Ok(FormedRing::Hier { intra, cross, global_rank: plan.global_rank, total: plan.total })
+}
+
+/// Turn formed wire rings into the transport the driver runs, applying
+/// the fault plan.  Under hier the faults wrap the *sub*-rings — never
+/// the composed [`HierRing`]: [`FaultyRing`] does not override the
+/// composed `allreduce_sum`, so an outermost wrapper would silently run
+/// the flat algorithm over hier's raw hops.  The injected kill fires in
+/// the intra ring's `begin_round` (`HierRing` enters intra before
+/// cross), which covers leader and non-leader deaths alike.
+fn assemble_ring(
+    formed: FormedRing,
+    faults: &Option<FaultPlan>,
+) -> Result<Box<dyn RingTransport>> {
+    Ok(match formed {
+        FormedRing::Flat(raw) => match faults {
+            Some(fp) => Box::new(FaultyRing::new(raw, fp.clone())),
+            None => Box::new(raw),
+        },
+        FormedRing::Hier { intra, cross, global_rank, total } => {
+            let intra: Box<dyn RingTransport> = match faults {
+                Some(fp) => Box::new(FaultyRing::new(intra, fp.clone())),
+                None => Box::new(intra),
+            };
+            let cross = cross.map(|c| Box::new(c) as Box<dyn RingTransport>);
+            Box::new(HierRing::new(intra, cross, global_rank, total)?)
+        }
+    })
 }
 
 /// Worker entry point (the `dilocox worker` subcommand body).
@@ -622,7 +764,34 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     coord.set_read_timeout(Some(Duration::from_secs(120))).ok();
     let listener = TcpListener::bind("127.0.0.1:0").context("binding ring listener")?;
     let ring_port = listener.local_addr()?.port();
-    write_msg(&mut coord, &Msg::Hello { rank: opts.rank, ring_port })?;
+    // Second listener for the leaders-only cross-site ring.  Bound
+    // unconditionally: it is one idle socket, and keeping the Hello shape
+    // topology-independent lets the coordinator flip topologies without
+    // re-registering the fleet.
+    let hier_listener =
+        TcpListener::bind("127.0.0.1:0").context("binding hier listener")?;
+    let hier_port = hier_listener.local_addr()?.port();
+    // The probe echo responder only exists under the reordered topology
+    // (port 0 in the Hello = no echo service).
+    let (probe_port, _probe_stop) =
+        if opts.reduce_topology == ReduceTopology::Reordered {
+            let l = TcpListener::bind("127.0.0.1:0")
+                .context("binding probe echo listener")?;
+            let port = l.local_addr()?.port();
+            (port, Some(EchoGuard(probe::spawn_echo_server(l))))
+        } else {
+            (0, None)
+        };
+    write_msg(
+        &mut coord,
+        &Msg::Hello {
+            rank: opts.rank,
+            ring_port,
+            hier_port,
+            probe_port,
+            site: opts.site,
+        },
+    )?;
 
     let mut trainer = build_trainer(opts)?;
     // Outer rounds run through the shared epoch-aware driver: θ_g moves
@@ -633,8 +802,8 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     let mut sm = WorkerSm::new(opts.rounds as u32, false);
     // Wire-level ring endpoints of acked proposals, keyed by epoch — the
     // machine's plans carry only member ids.
-    let mut staged: BTreeMap<u32, Vec<(u32, u16)>> = BTreeMap::new();
-    let mut formed: Option<tcp::TcpRing> = None;
+    let mut staged: BTreeMap<u32, Vec<MemberInfo>> = BTreeMap::new();
+    let mut formed: Option<FormedRing> = None;
     let mut effects: VecDeque<WorkerOut> = VecDeque::new();
     loop {
         let Some(effect) = effects.pop_front() else {
@@ -648,7 +817,7 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
                 let _s = obs::span("elastic", "epoch.wait");
                 match read_msg(&mut coord) {
                     Ok(Msg::Prepare { epoch, resume_round, members, drain_round }) => {
-                        let ids = members.iter().map(|&(r, _)| r).collect();
+                        let ids = members.iter().map(|m| m.rank).collect();
                         staged.insert(epoch, members);
                         WorkerIn::Prepare(EpochPlan {
                             epoch,
@@ -659,6 +828,28 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
                     }
                     Ok(Msg::Commit { epoch }) => WorkerIn::Commit { epoch },
                     Ok(Msg::Shutdown) => WorkerIn::Shutdown,
+                    Ok(Msg::ProbeRequest { payload_elems, repeats, peers }) => {
+                        // Answered inline: the machine is parked waiting
+                        // for a Prepare, so the probe never races an
+                        // epoch.  This arm must precede the stale-frame
+                        // catch-all or the coordinator would wait out its
+                        // report forever.
+                        let links = probe::probe_peers(
+                            &peers,
+                            payload_elems as usize,
+                            repeats as usize,
+                            ring_timeout,
+                        )
+                        .into_iter()
+                        .map(|(to, gbps, latency_ms)| ProbeLink {
+                            to,
+                            gbps,
+                            latency_ms,
+                        })
+                        .collect();
+                        write_msg(&mut coord, &Msg::ProbeReport { links })?;
+                        continue;
+                    }
                     Ok(_) => continue, // stale frame — ignore
                     Err(e) => {
                         return Err(anyhow!(
@@ -693,11 +884,12 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
                 let members = staged.get(&plan.epoch).cloned().unwrap_or_default();
                 let ok = {
                     let _s = obs::span("elastic", "ring.form");
-                    match tcp::form_ring(
-                        opts.rank,
-                        plan.epoch,
+                    match form_committed_ring(
+                        opts,
                         &members,
                         &listener,
+                        &hier_listener,
+                        plan.epoch,
                         connect_timeout,
                         ring_timeout,
                     ) {
@@ -712,14 +904,13 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
             }
             WorkerOut::BeginEpoch { plan, .. } => {
                 let raw = formed.take().expect("BeginEpoch without a formed ring");
-                let ring: Box<dyn RingTransport> = match &opts.faults {
-                    Some(fp) => Box::new(FaultyRing::new(raw, fp.clone())),
-                    None => Box::new(raw),
-                };
                 // Consensus resync + the committed drain-or-discard
                 // decision; a failure here is churn on the fresh ring
                 // (state preserved).
-                let ok = driver.begin_epoch(ring, plan.recovery()).is_ok();
+                let ok = match assemble_ring(raw, &opts.faults) {
+                    Ok(ring) => driver.begin_epoch(ring, plan.recovery()).is_ok(),
+                    Err(_) => false,
+                };
                 effects.extend(sm.handle(WorkerIn::BeginResult { ok }));
             }
             WorkerOut::RunRounds { start } => {
@@ -794,7 +985,24 @@ pub fn run_local_reference(cfg: &ElasticConfig) -> Result<(Vec<f32>, f32, u64)> 
     if cfg.workers == 0 {
         return Err(anyhow!("need at least one worker"));
     }
-    let members = build_ring(cfg.workers);
+    // The reordered topology intentionally has no bit-for-bit reference:
+    // the probed order is a property of the live wire, and float
+    // summation is not associative under reordering.  Flat and hier both
+    // have one — their schedules are fixed by rank resp. (site, rank).
+    let members: Vec<Box<dyn RingTransport>> = match cfg.reduce_topology {
+        ReduceTopology::Hier => {
+            let sites: Vec<u32> =
+                (0..cfg.workers as u32).map(|r| cfg.site_of(r)).collect();
+            hier::build_hier_rings(&sites)
+                .into_iter()
+                .map(|h| Box::new(h) as Box<dyn RingTransport>)
+                .collect()
+        }
+        _ => build_ring(cfg.workers)
+            .into_iter()
+            .map(|m| Box::new(m) as Box<dyn RingTransport>)
+            .collect(),
+    };
     let outs: Vec<Result<(Vec<f32>, f32, u64)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = members
             .into_iter()
@@ -808,7 +1016,7 @@ pub fn run_local_reference(cfg: &ElasticConfig) -> Result<(Vec<f32>, f32, u64)> 
                     let mut trainer = build_trainer(&opts)?;
                     let mut driver =
                         build_fleet_driver(&opts, trainer.params().to_vec());
-                    driver.begin_epoch(Box::new(member), Recovery::Discard)?;
+                    driver.begin_epoch(member, Recovery::Discard)?;
                     match driver.run_rounds(1, trainer.as_work(), &mut |_| {})? {
                         EpochEnd::Completed => {}
                         EpochEnd::Broken(e) => {
@@ -1220,6 +1428,12 @@ struct CtrlHandle {
     writer: TcpStream,
     ring_port: u16,
     link_port: u16,
+    /// Cross-site ring listener (hier topology; 0 for stage workers).
+    hier_port: u16,
+    /// Probe echo listener (reordered topology; 0 = no echo service).
+    probe_port: u16,
+    /// Announced site tag (0 for stage workers and untagged fleets).
+    site: u32,
 }
 
 /// Control-plane event, keyed by protocol [`Key`] — `(rank, 0)` in the
@@ -1264,6 +1478,9 @@ struct Telemetry {
     step_samples: Vec<(u32, f64)>,
     /// Committed recovery decisions: (epoch, stage, drain_round).
     recoveries: Vec<(u32, u32, u32)>,
+    /// Probed directed links (from, to, gbps, latency_ms) — filled by
+    /// the pre-epoch probe phase under the reordered topology.
+    links: Vec<(u32, u32, f64, f64)>,
     /// Trace batches shipped by the workers (merged fleet timeline).
     trace_events: Vec<TraceEvent>,
 }
@@ -1285,6 +1502,7 @@ fn drive_coordinator(
     cfg: &ElasticConfig,
     stages: u32,
     mut handles: BTreeMap<Key, CtrlHandle>,
+    cluster_order: Vec<u32>,
 ) -> Result<(u32, BTreeMap<Key, DoneReport>, Telemetry)> {
     // One reader thread per member feeding a single event queue; the
     // handles keep the write half.
@@ -1300,6 +1518,11 @@ fn drive_coordinator(
     let grace = Duration::from_millis(cfg.transport.ring_timeout_ms * 2 + 2000);
     let mut sm =
         CoordinatorSm::new(handles.keys().copied(), stages, cfg.rounds as u32);
+    // Topology-derived ring-order preference (probed max-bottleneck
+    // order, or (site, rank) grouping for hier).  A pure layout bias:
+    // the machine's membership decisions — and so every model-checked
+    // property — are untouched.
+    sm.set_cluster_order(cluster_order);
     let mut done: BTreeMap<Key, DoneReport> = BTreeMap::new();
     let mut telem = Telemetry::default();
     // The single coordinator timer; the most recently armed token wins
@@ -1344,7 +1567,15 @@ fn drive_coordinator(
                                 resume_round,
                                 members: ring
                                     .iter()
-                                    .map(|k| (k.0, handles[k].ring_port))
+                                    .map(|k| {
+                                        let h = &handles[k];
+                                        MemberInfo {
+                                            rank: k.0,
+                                            ring_port: h.ring_port,
+                                            hier_port: h.hier_port,
+                                            site: h.site,
+                                        }
+                                    })
                                     .collect(),
                                 drain_round,
                             }
@@ -1499,7 +1730,11 @@ fn spawn_workers(
                     .arg("--comm-pool")
                     .arg(cfg.transport.comm_pool_size.to_string())
                     .arg("--pipeline-depth")
-                    .arg(cfg.transport.pipeline_depth.to_string());
+                    .arg(cfg.transport.pipeline_depth.to_string())
+                    .arg("--site")
+                    .arg(opts.site.to_string())
+                    .arg("--reduce-topology")
+                    .arg(cfg.reduce_topology.name());
                 if cfg.overlap {
                     cmd.arg("--overlap");
                 }
@@ -1575,6 +1810,8 @@ fn worker_opts_for(
         connect_timeout_ms: cfg.transport.connect_timeout_ms,
         comm_pool_size: cfg.transport.comm_pool_size,
         pipeline_depth: cfg.transport.pipeline_depth,
+        site: cfg.site_of(rank),
+        reduce_topology: cfg.reduce_topology,
         faults: fault_plan_for(&cfg.faults, rank, exit_on_kill),
     }
 }
@@ -1597,14 +1834,21 @@ fn accept_workers(
                 stream.set_read_timeout(Some(Duration::from_secs(10))).ok();
                 let mut stream = stream;
                 match read_msg(&mut stream) {
-                    Ok(Msg::Hello { rank, ring_port }) => {
+                    Ok(Msg::Hello { rank, ring_port, hier_port, probe_port, site }) => {
                         if map.contains_key(&(rank, 0)) {
                             return Err(anyhow!("duplicate worker rank {rank}"));
                         }
                         stream.set_write_timeout(Some(Duration::from_secs(10))).ok();
                         map.insert(
                             (rank, 0),
-                            CtrlHandle { writer: stream, ring_port, link_port: 0 },
+                            CtrlHandle {
+                                writer: stream,
+                                ring_port,
+                                link_port: 0,
+                                hier_port,
+                                probe_port,
+                                site,
+                            },
                         );
                     }
                     _ => { /* not a worker — drop */ }
@@ -1731,6 +1975,7 @@ pub fn run_elastic(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOutco
         round_wire: telem.round_wire,
         stage_times: summarize_step_samples(&telem.step_samples),
         recoveries: telem.recoveries,
+        links: telem.links,
         trace_events,
     })
 }
@@ -1749,9 +1994,104 @@ fn supervise(
     let startup_deadline = Instant::now()
         + Duration::from_millis(cfg.transport.connect_timeout_ms)
         + Duration::from_secs(10);
-    let handles = accept_workers(listener, cfg.workers, startup_deadline)?;
-    let (epoch, done, telem) = drive_coordinator(cfg, 1, handles)?;
+    let mut handles = accept_workers(listener, cfg.workers, startup_deadline)?;
+    let (order, links) = topology_order(cfg, &mut handles)?;
+    let (epoch, done, mut telem) = drive_coordinator(cfg, 1, handles, order)?;
+    telem.links = links;
     Ok((epoch, done.into_iter().map(|((r, _), v)| (r, v)).collect(), telem))
+}
+
+/// Compute the fleet's ring-order preference (and, under the reordered
+/// topology, the measured link ledger) before the first epoch:
+///
+/// - `flat` — empty preference, the historical ascending order;
+/// - `hier` — ranks grouped by announced (site, rank), so every
+///   committed member list arrives site-contiguous and
+///   [`hier::site_plan`] can slice it;
+/// - `reordered` — probe every directed pair over the workers' echo
+///   listeners and run the max-bottleneck ordering over the measured
+///   matrix.
+///
+/// The probe runs once at startup, between registration and the first
+/// Prepare; later epochs reuse the preference (churn only removes
+/// members, and max-bottleneck order is stable under member removal in
+/// the greedy sense — re-probing mid-churn would stall recovery).
+fn topology_order(
+    cfg: &ElasticConfig,
+    handles: &mut BTreeMap<Key, CtrlHandle>,
+) -> Result<(Vec<u32>, Vec<(u32, u32, f64, f64)>)> {
+    match cfg.reduce_topology {
+        ReduceTopology::Flat => Ok((Vec::new(), Vec::new())),
+        ReduceTopology::Hier => {
+            let mut tagged: Vec<(u32, u32)> =
+                handles.iter().map(|(&(r, _), h)| (h.site, r)).collect();
+            tagged.sort_unstable();
+            Ok((tagged.into_iter().map(|(_, r)| r).collect(), Vec::new()))
+        }
+        ReduceTopology::Reordered => {
+            let ranks: Vec<u32> = handles.keys().map(|&(r, _)| r).collect();
+            let index: BTreeMap<u32, usize> =
+                ranks.iter().enumerate().map(|(i, &r)| (r, i)).collect();
+            let peers_all: Vec<(u32, u16)> =
+                handles.iter().map(|(&(r, _), h)| (r, h.probe_port)).collect();
+            let mut matrix = LinkMatrix::new(ranks.len());
+            let mut links = Vec::new();
+            let _s = obs::span("elastic", "probe");
+            // Sequential on purpose: concurrent probes would contend for
+            // the same NICs and measure each other instead of the links.
+            for &r in &ranks {
+                let peers: Vec<(u32, u16)> = peers_all
+                    .iter()
+                    .copied()
+                    .filter(|&(p, _)| p != r)
+                    .collect();
+                let h = handles.get_mut(&(r, 0)).expect("probing unknown rank");
+                h.writer.set_read_timeout(Some(Duration::from_secs(60))).ok();
+                write_msg(
+                    &mut h.writer,
+                    &Msg::ProbeRequest {
+                        payload_elems: cfg.probe_payload_elems.max(1) as u32,
+                        repeats: cfg.probe_repeats.max(1) as u32,
+                        peers,
+                    },
+                )
+                .with_context(|| format!("sending probe request to worker {r}"))?;
+                match read_msg(&mut h.writer) {
+                    Ok(Msg::ProbeReport { links: rows }) => {
+                        for l in rows {
+                            if let Some(&j) = index.get(&l.to) {
+                                // An unreachable peer reports 0 Gbps; keep
+                                // it as a heavily penalized (never free)
+                                // link so the ordering avoids it.
+                                matrix.set(
+                                    index[&r],
+                                    j,
+                                    l.gbps.max(1e-6),
+                                    l.latency_ms,
+                                );
+                                links.push((r, l.to, l.gbps, l.latency_ms));
+                            }
+                        }
+                    }
+                    Ok(_) => {
+                        return Err(anyhow!(
+                            "worker {r} answered the link probe with an \
+                             unexpected frame"
+                        ))
+                    }
+                    Err(e) => {
+                        return Err(anyhow!(
+                            "worker {r} lost its control channel during the \
+                             link probe: {e:#}"
+                        ))
+                    }
+                }
+                h.writer.set_read_timeout(Some(Duration::from_secs(10))).ok();
+            }
+            let order = probe::ring_order(&matrix);
+            Ok((order.into_iter().map(|i| ranks[i]).collect(), links))
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1918,7 +2258,14 @@ fn accept_stage_workers(
                             .ok();
                         map.insert(
                             (cluster, stage),
-                            CtrlHandle { writer: stream, ring_port, link_port },
+                            CtrlHandle {
+                                writer: stream,
+                                ring_port,
+                                link_port,
+                                hier_port: 0,
+                                probe_port: 0,
+                                site: 0,
+                            },
                         );
                     }
                     _ => { /* not a stage worker — drop */ }
@@ -2036,6 +2383,7 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
         round_wire: telem.round_wire,
         stage_times: summarize_step_samples(&telem.step_samples),
         recoveries: telem.recoveries,
+        links: telem.links,
         trace_events,
     })
 }
@@ -2057,7 +2405,9 @@ fn supervise_stages(
         + Duration::from_secs(10);
     let handles =
         accept_stage_workers(listener, cfg.workers, cfg.pp_stages, startup_deadline)?;
-    drive_coordinator(cfg, cfg.pp_stages as u32, handles)
+    // Stage fleets keep the flat per-stage rings: `StageHello` carries no
+    // site tag or probe listener, so the order preference stays empty.
+    drive_coordinator(cfg, cfg.pp_stages as u32, handles, Vec::new())
 }
 
 #[cfg(test)]
@@ -2432,5 +2782,124 @@ mod tests {
         let p = fault_plan_for(&f, 2, true).unwrap();
         assert_eq!(p.kill_round, 3);
         assert!(p.exit_on_kill);
+    }
+
+    fn hier_cfg(sites: &[u32]) -> ElasticConfig {
+        let mut c = quick_cfg(sites.len());
+        c.reduce_topology = ReduceTopology::Hier;
+        c.sites = sites.to_vec();
+        c
+    }
+
+    /// Tentpole determinism contract, leg 1: the hierarchical loopback
+    /// TCP fleet is bit-for-bit the hierarchical local-mpsc fleet —
+    /// params, mean loss, and the wire ledger — because the hier float
+    /// schedule is a pure function of (site, rank) order.
+    #[test]
+    fn thread_mode_hier_fleet_matches_local_reference_bit_for_bit() {
+        let cfg = hier_cfg(&[0, 0, 1, 1]);
+        let (ref_params, ref_loss, ref_wire) = run_local_reference(&cfg).unwrap();
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.epochs, 1, "no churn expected");
+        assert_eq!(out.survivors, vec![0, 1, 2, 3]);
+        assert_eq!(out.final_params, ref_params, "hier TCP != hier mpsc");
+        assert_eq!(out.final_loss, ref_loss);
+        assert_eq!(out.total_wire_bytes, ref_wire, "wire ledger diverged");
+    }
+
+    /// Tentpole determinism contract, leg 2: a single-site hierarchical
+    /// run degenerates to a pure delegation and is bit-for-bit today's
+    /// flat ring — reference vs reference AND deployed fleet vs both.
+    #[test]
+    fn hier_single_site_is_bit_for_bit_the_flat_ring() {
+        let flat = quick_cfg(3);
+        let mut hier = quick_cfg(3);
+        hier.reduce_topology = ReduceTopology::Hier;
+        hier.sites = vec![7, 7, 7];
+        let (fp, fl, fw) = run_local_reference(&flat).unwrap();
+        let (hp, hl, hw) = run_local_reference(&hier).unwrap();
+        assert_eq!(fp, hp, "single-site hier mpsc != flat mpsc");
+        assert_eq!(fl, hl);
+        assert_eq!(fw, hw);
+        let out = run_elastic(&hier, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.final_params, fp, "single-site hier TCP != flat");
+        assert_eq!(out.final_loss, fl);
+        assert_eq!(out.total_wire_bytes, fw);
+    }
+
+    /// Leader death under hier + overlap: kill the site-1 leader (rank 2,
+    /// first member of its site in (site, rank) order) mid-run.  The
+    /// survivors re-form, leadership of site 1 falls to rank 3 purely by
+    /// position in the committed order, and the drain branch finishes the
+    /// in-flight reduction — the `recoveries` ledger shows the commit.
+    #[test]
+    fn thread_mode_hier_leader_kill_recovers_via_drain() {
+        let mut cfg = hier_cfg(&[0, 0, 1, 1]);
+        cfg.overlap = true;
+        cfg.faults.enabled = true;
+        cfg.faults.kill_rank = 2;
+        cfg.faults.kill_round = 2;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 1, 3]);
+        assert!(out.epochs >= 2, "epochs={}", out.epochs);
+        assert!(
+            out.recoveries.iter().any(|&(_, _, d)| d > 0),
+            "expected a drain commit, got {:?}",
+            out.recoveries
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round =
+            out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    /// The discard branch under hier: a soft break (rank 1 parks without
+    /// dying) leaves mixed in-flight evidence, so the coordinator must
+    /// discard — and everyone, breaker included, completes.
+    #[test]
+    fn thread_mode_hier_soft_break_recovers_via_discard() {
+        let mut cfg = hier_cfg(&[0, 0, 1, 1]);
+        cfg.overlap = true;
+        cfg.faults.enabled = true;
+        cfg.faults.break_rank = 1;
+        cfg.faults.break_round = 3;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 1, 2, 3], "nobody died");
+        assert!(out.epochs >= 2, "epochs={}", out.epochs);
+        assert!(
+            out.recoveries.iter().all(|&(_, _, d)| d == 0),
+            "mixed in-flight must discard, got {:?}",
+            out.recoveries
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round =
+            out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    /// The reordered topology over loopback: the probe phase measures
+    /// every directed pair, the fleet completes on the reordered ring,
+    /// and the measured links surface in the outcome ledger (what
+    /// `coordinate --report` serializes for the DES round-trip).
+    #[test]
+    fn thread_mode_reordered_fleet_probes_and_converges() {
+        let mut cfg = quick_cfg(3);
+        cfg.reduce_topology = ReduceTopology::Reordered;
+        // Small probe payload: this is a wiring test, not a benchmark.
+        cfg.probe_payload_elems = 2048;
+        cfg.probe_repeats = 2;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.epochs, 1, "no churn expected");
+        assert_eq!(out.survivors, vec![0, 1, 2]);
+        assert_eq!(out.links.len(), 6, "3 workers = 6 directed links");
+        assert!(
+            out.links.iter().all(|&(_, _, g, _)| g > 0.0),
+            "loopback links must all measure: {:?}",
+            out.links
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round =
+            out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
     }
 }

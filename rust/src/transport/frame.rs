@@ -13,25 +13,58 @@ use std::io::{Read, Write};
 /// Refuse frames above this size (corrupt length prefix guard): 1 GiB.
 pub const MAX_FRAME_BYTES: u32 = 1 << 30;
 
+/// One committed ring member as shipped in [`Msg::Prepare`]: the global
+/// rank, where its two listeners are (the flat/intra ring listener and
+/// the hierarchical cross-site listener), and its site tag.  The order of
+/// the member list IS the committed ring order — flat fleets use it
+/// directly, `reordered` fleets receive the probe-optimized order, and
+/// `hier` fleets receive (site, rank) order and slice it per site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemberInfo {
+    pub rank: u32,
+    pub ring_port: u16,
+    /// Listener for the leaders-only cross-site ring (hier topology).
+    pub hier_port: u16,
+    /// Site tag (0 = default single site).
+    pub site: u32,
+}
+
+/// One directed link measurement reported by a worker probe
+/// ([`Msg::ProbeReport`]): destination rank, throughput, latency.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProbeLink {
+    pub to: u32,
+    pub gbps: f64,
+    pub latency_ms: f64,
+}
+
 /// Everything that crosses a transport socket.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// One ring chunk (data plane).
     Data { payload: Vec<f32> },
-    /// Worker → coordinator, once at startup: where my ring listener is.
-    Hello { rank: u32, ring_port: u16 },
+    /// Worker → coordinator, once at startup: where my listeners are
+    /// (flat/intra ring, hierarchical cross-site ring, link-probe echo —
+    /// `probe_port` 0 = no echo server running) and which site I am in.
+    Hello {
+        rank: u32,
+        ring_port: u16,
+        hier_port: u16,
+        probe_port: u16,
+        site: u32,
+    },
     /// Coordinator → workers: proposed membership for `epoch`.
-    /// `members` is the ring order, `(rank, ring_port)` on 127.0.0.1.
-    /// `drain_round` is the committed drain-or-discard decision for
-    /// one-step-delay overlap recovery: non-zero means every member of
-    /// this epoch reported the SAME in-flight round, so the re-formed
-    /// ring finishes that reduction (survivor-rescaled mean) before
-    /// training resumes; zero means any in-flight delta is discarded
-    /// back into error feedback (see [`crate::rounds::driver`]).
+    /// `members` is the committed ring order ([`MemberInfo`] rows on
+    /// 127.0.0.1).  `drain_round` is the committed drain-or-discard
+    /// decision for one-step-delay overlap recovery: non-zero means every
+    /// member of this epoch reported the SAME in-flight round, so the
+    /// re-formed ring finishes that reduction (survivor-rescaled mean)
+    /// before training resumes; zero means any in-flight delta is
+    /// discarded back into error feedback (see [`crate::rounds::driver`]).
     Prepare {
         epoch: u32,
         resume_round: u32,
-        members: Vec<(u32, u16)>,
+        members: Vec<MemberInfo>,
         drain_round: u32,
     },
     /// Worker → coordinator: membership proposal accepted.
@@ -83,6 +116,14 @@ pub enum Msg {
         link_down_port: u16,
         drain_round: u32,
     },
+    /// Coordinator → one worker, before the first membership epoch: probe
+    /// the listed peers' echo listeners (`(rank, probe_port)` on
+    /// 127.0.0.1) with a seeded payload of `payload_elems` f32s,
+    /// `repeats` trials each, and answer with a [`Msg::ProbeReport`].
+    ProbeRequest { payload_elems: u32, repeats: u32, peers: Vec<(u32, u16)> },
+    /// Worker → coordinator: measured outgoing links, one row per probed
+    /// peer.
+    ProbeReport { links: Vec<ProbeLink> },
     /// Worker → coordinator: a drained batch of structured trace events
     /// (see [`crate::obs`]) riding the control socket, so the
     /// coordinator can merge a fleet-wide timeline.  Control plane only
@@ -109,6 +150,8 @@ impl Msg {
             Msg::StageHello { .. } => 12,
             Msg::StagePrepare { .. } => 13,
             Msg::TraceEvents { .. } => 14,
+            Msg::ProbeRequest { .. } => 15,
+            Msg::ProbeReport { .. } => 16,
         }
     }
 
@@ -130,6 +173,8 @@ impl Msg {
             Msg::StageHello { .. } => "StageHello",
             Msg::StagePrepare { .. } => "StagePrepare",
             Msg::TraceEvents { .. } => "TraceEvents",
+            Msg::ProbeRequest { .. } => "ProbeRequest",
+            Msg::ProbeReport { .. } => "ProbeReport",
         }
     }
 }
@@ -150,6 +195,10 @@ fn put_u64(buf: &mut Vec<u8>, v: u64) {
 
 fn put_f32(buf: &mut Vec<u8>, v: f32) {
     buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
 }
 
 fn put_f32s(buf: &mut Vec<u8>, vs: &[f32]) {
@@ -198,6 +247,12 @@ impl<'a> Cursor<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(u64::from_le_bytes(
+            self.take(8)?.try_into().unwrap(),
+        )))
+    }
+
     fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
         let raw = self.take(4 * n)?;
@@ -231,17 +286,22 @@ pub fn encode_into(b: &mut Vec<u8>, msg: &Msg) {
     b.push(msg.kind());
     match msg {
         Msg::Data { payload } => put_f32s(&mut b, payload),
-        Msg::Hello { rank, ring_port } => {
+        Msg::Hello { rank, ring_port, hier_port, probe_port, site } => {
             put_u32(&mut b, *rank);
             put_u16(&mut b, *ring_port);
+            put_u16(&mut b, *hier_port);
+            put_u16(&mut b, *probe_port);
+            put_u32(&mut b, *site);
         }
         Msg::Prepare { epoch, resume_round, members, drain_round } => {
             put_u32(&mut b, *epoch);
             put_u32(&mut b, *resume_round);
             put_u16(&mut b, members.len() as u16);
-            for (rank, port) in members {
-                put_u32(&mut b, *rank);
-                put_u16(&mut b, *port);
+            for m in members {
+                put_u32(&mut b, m.rank);
+                put_u16(&mut b, m.ring_port);
+                put_u16(&mut b, m.hier_port);
+                put_u32(&mut b, m.site);
             }
             put_u32(&mut b, *drain_round);
         }
@@ -296,6 +356,23 @@ pub fn encode_into(b: &mut Vec<u8>, msg: &Msg) {
             put_u16(&mut b, *link_down_port);
             put_u32(&mut b, *drain_round);
         }
+        Msg::ProbeRequest { payload_elems, repeats, peers } => {
+            put_u32(&mut b, *payload_elems);
+            put_u32(&mut b, *repeats);
+            put_u16(&mut b, peers.len() as u16);
+            for (rank, port) in peers {
+                put_u32(&mut b, *rank);
+                put_u16(&mut b, *port);
+            }
+        }
+        Msg::ProbeReport { links } => {
+            put_u16(&mut b, links.len() as u16);
+            for l in links {
+                put_u32(&mut b, l.to);
+                put_f64(&mut b, l.gbps);
+                put_f64(&mut b, l.latency_ms);
+            }
+        }
         Msg::TraceEvents { events } => {
             put_u32(&mut b, events.len() as u32);
             for e in events {
@@ -322,16 +399,25 @@ pub fn decode(bytes: &[u8]) -> Result<Msg> {
     let mut c = Cursor { buf: bytes, pos: 1 };
     let msg = match bytes[0] {
         0 => Msg::Data { payload: c.f32s()? },
-        1 => Msg::Hello { rank: c.u32()?, ring_port: c.u16()? },
+        1 => Msg::Hello {
+            rank: c.u32()?,
+            ring_port: c.u16()?,
+            hier_port: c.u16()?,
+            probe_port: c.u16()?,
+            site: c.u32()?,
+        },
         2 => {
             let epoch = c.u32()?;
             let resume_round = c.u32()?;
             let n = c.u16()? as usize;
             let mut members = Vec::with_capacity(n);
             for _ in 0..n {
-                let rank = c.u32()?;
-                let port = c.u16()?;
-                members.push((rank, port));
+                members.push(MemberInfo {
+                    rank: c.u32()?,
+                    ring_port: c.u16()?,
+                    hier_port: c.u16()?,
+                    site: c.u32()?,
+                });
             }
             Msg::Prepare { epoch, resume_round, members, drain_round: c.u32()? }
         }
@@ -401,6 +487,30 @@ pub fn decode(bytes: &[u8]) -> Result<Msg> {
             }
             Msg::TraceEvents { events }
         }
+        15 => {
+            let payload_elems = c.u32()?;
+            let repeats = c.u32()?;
+            let n = c.u16()? as usize;
+            let mut peers = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = c.u32()?;
+                let port = c.u16()?;
+                peers.push((rank, port));
+            }
+            Msg::ProbeRequest { payload_elems, repeats, peers }
+        }
+        16 => {
+            let n = c.u16()? as usize;
+            let mut links = Vec::with_capacity(n);
+            for _ in 0..n {
+                links.push(ProbeLink {
+                    to: c.u32()?,
+                    gbps: c.f64()?,
+                    latency_ms: c.f64()?,
+                });
+            }
+            Msg::ProbeReport { links }
+        }
         k => return Err(anyhow!("unknown frame kind {k}")),
     };
     Ok(msg)
@@ -458,17 +568,32 @@ mod tests {
     #[test]
     fn all_kinds_roundtrip() {
         roundtrip(Msg::Data { payload: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE] });
-        roundtrip(Msg::Hello { rank: 3, ring_port: 40123 });
+        roundtrip(Msg::Hello {
+            rank: 3,
+            ring_port: 40123,
+            hier_port: 40124,
+            probe_port: 40125,
+            site: 2,
+        });
         roundtrip(Msg::Prepare {
             epoch: 7,
             resume_round: 4,
-            members: vec![(0, 1111), (2, 2222), (5, 65535)],
+            members: vec![
+                MemberInfo { rank: 0, ring_port: 1111, hier_port: 3111, site: 0 },
+                MemberInfo { rank: 2, ring_port: 2222, hier_port: 3222, site: 1 },
+                MemberInfo { rank: 5, ring_port: 65535, hier_port: 0, site: 1 },
+            ],
             drain_round: 0,
         });
         roundtrip(Msg::Prepare {
             epoch: 8,
             resume_round: 5,
-            members: vec![(0, 1111)],
+            members: vec![MemberInfo {
+                rank: 0,
+                ring_port: 1111,
+                hier_port: 0,
+                site: 0,
+            }],
             drain_round: 4,
         });
         roundtrip(Msg::PrepareAck { epoch: 7 });
@@ -514,6 +639,24 @@ mod tests {
             link_down_port: 40100,
             drain_round: 0,
         });
+        roundtrip(Msg::ProbeRequest {
+            payload_elems: 65536,
+            repeats: 3,
+            peers: vec![(1, 40200), (2, 40201)],
+        });
+        roundtrip(Msg::ProbeRequest {
+            payload_elems: 0,
+            repeats: 0,
+            peers: Vec::new(),
+        });
+        roundtrip(Msg::ProbeReport {
+            links: vec![
+                ProbeLink { to: 1, gbps: 94.25, latency_ms: 0.125 },
+                ProbeLink { to: 2, gbps: 0.0, latency_ms: 0.0 },
+                ProbeLink { to: 3, gbps: f64::INFINITY, latency_ms: 30.0 },
+            ],
+        });
+        roundtrip(Msg::ProbeReport { links: Vec::new() });
         roundtrip(Msg::TraceEvents { events: Vec::new() });
         roundtrip(Msg::TraceEvents {
             events: vec![
@@ -549,7 +692,13 @@ mod tests {
     fn stream_roundtrip_over_a_pipe() {
         let mut buf: Vec<u8> = Vec::new();
         let msgs = vec![
-            Msg::Hello { rank: 0, ring_port: 9 },
+            Msg::Hello {
+                rank: 0,
+                ring_port: 9,
+                hier_port: 10,
+                probe_port: 11,
+                site: 1,
+            },
             Msg::Data { payload: vec![3.0; 5] },
             Msg::Shutdown,
         ];
@@ -584,11 +733,30 @@ mod tests {
     fn fuzz_corpus() -> Vec<Msg> {
         vec![
             Msg::Data { payload: vec![1.0, -2.5, 3.25] },
-            Msg::Hello { rank: 7, ring_port: 40001 },
+            Msg::Hello {
+                rank: 7,
+                ring_port: 40001,
+                hier_port: 40002,
+                probe_port: 40003,
+                site: 1,
+            },
             Msg::Prepare {
                 epoch: 3,
                 resume_round: 2,
-                members: vec![(0, 1111), (4, 2222)],
+                members: vec![
+                    MemberInfo {
+                        rank: 0,
+                        ring_port: 1111,
+                        hier_port: 3111,
+                        site: 0,
+                    },
+                    MemberInfo {
+                        rank: 4,
+                        ring_port: 2222,
+                        hier_port: 3222,
+                        site: 1,
+                    },
+                ],
                 drain_round: 1,
             },
             Msg::PrepareAck { epoch: 3 },
@@ -636,6 +804,14 @@ mod tests {
                     target: "wire".to_string(),
                     phase: "send".to_string(),
                 }],
+            },
+            Msg::ProbeRequest {
+                payload_elems: 4096,
+                repeats: 2,
+                peers: vec![(1, 40200), (3, 40201)],
+            },
+            Msg::ProbeReport {
+                links: vec![ProbeLink { to: 1, gbps: 2.5, latency_ms: 30.0 }],
             },
         ]
     }
@@ -738,7 +914,17 @@ mod tests {
         // Truncated streams (mid-prefix and mid-body) error cleanly too.
         let full = {
             let mut buf = Vec::new();
-            write_msg(&mut buf, &Msg::Hello { rank: 1, ring_port: 2 }).unwrap();
+            write_msg(
+                &mut buf,
+                &Msg::Hello {
+                    rank: 1,
+                    ring_port: 2,
+                    hier_port: 3,
+                    probe_port: 4,
+                    site: 5,
+                },
+            )
+            .unwrap();
             buf
         };
         for cut in 0..full.len() {

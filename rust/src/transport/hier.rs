@@ -1,0 +1,509 @@
+//! Hierarchical two-level ring reduce: fast intra-site rings, one elected
+//! leader per site on the slow cross-site ring.
+//!
+//! A flat ring puts 2·(C−1)/C of the payload on *every* link, including
+//! the WAN links between sites.  [`HierRing`] composes two
+//! [`RingTransport`]s instead:
+//!
+//! 1. **intra-site reduce** — every member of a site runs the chunked ring
+//!    all-reduce over the site's fast links; afterwards all site members
+//!    hold the site sum (bit-identically — the flat collective already
+//!    guarantees that).
+//! 2. **cross-site reduce** — only the site *leaders* (the first member of
+//!    each site in the committed order, i.e. the minimum rank alive) run a
+//!    second ring over the S sites; each leader ends with the global sum.
+//!    Cross-site payload per leader is 2·(S−1)/S·payload — the WAN now
+//!    carries the §2.4.1 factor in S, not C, and non-leaders never touch
+//!    it.
+//! 3. **intra-site broadcast** — the leader relays the global sum around
+//!    the intra ring (C_site−1 store-and-forward hops), so every member
+//!    ends bit-identical to its leader.
+//!
+//! # Invariants
+//!
+//! * **The float schedule is fixed by (site, rank) order.**  The
+//!   coordinator commits members sorted by (site, rank); intra rings form
+//!   over that order and leaders join the cross ring in ascending site
+//!   order.  Any two backends (local mpsc, loopback TCP) therefore
+//!   produce bit-for-bit identical results.
+//! * **A single-site fleet is the flat ring.**  When every member shares
+//!   one site, `allreduce_sum` delegates verbatim to the intra transport —
+//!   same floats, same metered bytes, no broadcast pass — so
+//!   `reduce_topology = hier` with one site is indistinguishable from
+//!   today's flat ring.
+//! * **Leader election is epoch-scoped.**  Leadership is a pure function
+//!   of the committed member list (first member of each site), so a dead
+//!   leader is replaced at the next membership epoch by re-running the
+//!   same rule over the survivors — no extra protocol states.
+//! * `size()` reports the *total* member count (so the provided
+//!   `allreduce_mean` divides globally) and `rank()` the member's position
+//!   in the global (site, rank) order; the chunk math of the overridden
+//!   collective never consults them.
+//! * `recycle` feeds the intra transport (the hot path); `begin_round`
+//!   reaches both transports so fault injection wrapped around either
+//!   sub-ring still fires on schedule.
+
+use crate::comm::ring::build_ring;
+use crate::transport::frame::MemberInfo;
+use crate::transport::{ByteMeter, RingTransport};
+use anyhow::{anyhow, Result};
+
+/// Two composed rings: `intra` spans this member's site, `cross` (leaders
+/// only) spans the sites.  See the module docs for the algorithm and its
+/// invariants.
+pub struct HierRing {
+    intra: Box<dyn RingTransport>,
+    cross: Option<Box<dyn RingTransport>>,
+    global_rank: usize,
+    total: usize,
+    single_site: bool,
+}
+
+impl HierRing {
+    /// Compose an intra-site transport (positions = site members in
+    /// committed order; the leader is position 0) with an optional
+    /// cross-site transport (present iff this member leads its site).
+    pub fn new(
+        intra: Box<dyn RingTransport>,
+        cross: Option<Box<dyn RingTransport>>,
+        global_rank: usize,
+        total: usize,
+    ) -> Result<HierRing> {
+        if intra.size() > total {
+            return Err(anyhow!(
+                "hier: intra ring of {} exceeds fleet of {total}",
+                intra.size()
+            ));
+        }
+        let single_site = intra.size() == total;
+        if single_site && cross.is_some() {
+            return Err(anyhow!("hier: single-site fleet has no cross ring"));
+        }
+        if let Some(c) = &cross {
+            if intra.rank() != 0 {
+                return Err(anyhow!(
+                    "hier: cross ring on a non-leader (intra position {})",
+                    intra.rank()
+                ));
+            }
+            if c.size() < 2 {
+                return Err(anyhow!("hier: cross ring needs >= 2 sites"));
+            }
+        }
+        Ok(HierRing { intra, cross, global_rank, total, single_site })
+    }
+
+    /// Payload bytes this member put on the cross-site (WAN) ring —
+    /// non-zero only on leaders.  Separate from [`RingTransport::meter`],
+    /// which stays intra-site (the hot, cheap links).
+    pub fn wan_bytes(&self) -> u64 {
+        self.cross.as_ref().map(|c| c.meter().total()).unwrap_or(0)
+    }
+
+    /// Does this member lead its site (run the cross-site ring)?
+    pub fn is_leader(&self) -> bool {
+        self.cross.is_some() || self.single_site
+    }
+}
+
+impl RingTransport for HierRing {
+    fn rank(&self) -> usize {
+        self.global_rank
+    }
+
+    fn size(&self) -> usize {
+        self.total
+    }
+
+    fn send_next(&mut self, chunk: &[f32]) -> Result<()> {
+        self.intra.send_next(chunk)
+    }
+
+    fn recv_prev(&mut self) -> Result<Vec<f32>> {
+        self.intra.recv_prev()
+    }
+
+    fn meter(&self) -> &ByteMeter {
+        self.intra.meter()
+    }
+
+    fn begin_round(&mut self, round: usize) -> Result<()> {
+        self.intra.begin_round(round)?;
+        if let Some(c) = self.cross.as_mut() {
+            c.begin_round(round)?;
+        }
+        Ok(())
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        self.intra.recycle(buf)
+    }
+
+    fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        if self.single_site {
+            // Bit-for-bit the flat ring: same transport, same schedule,
+            // same metered bytes, no broadcast pass.
+            return self.intra.allreduce_sum(buf);
+        }
+        let _s = crate::obs::span("hier", "allreduce")
+            .bytes(4 * buf.len() as u64);
+        // 1. Site sum over the fast intra ring.
+        self.intra.allreduce_sum(buf)?;
+        // 2. Global sum over the leaders-only cross ring (WAN).
+        if let Some(c) = self.cross.as_mut() {
+            c.allreduce_sum(buf)?;
+        }
+        // 3. Broadcast the leader's global sum around the intra ring:
+        //    store-and-forward, C_site−1 hops, each metered like a ring
+        //    hop (the provided collective meters inside itself; this pass
+        //    is ours to account for).
+        let c = self.intra.size();
+        if c > 1 {
+            let pos = self.intra.rank();
+            if pos == 0 {
+                let hop =
+                    crate::obs::span("hier", "bcast").bytes(4 * buf.len() as u64);
+                self.intra.meter().add(4 * buf.len() as u64);
+                self.intra.send_next(buf)?;
+                drop(hop);
+            } else {
+                let incoming = self.intra.recv_prev()?;
+                if incoming.len() != buf.len() {
+                    return Err(anyhow!(
+                        "hier broadcast size mismatch: got {}, want {}",
+                        incoming.len(),
+                        buf.len()
+                    ));
+                }
+                buf.copy_from_slice(&incoming);
+                self.intra.recycle(incoming);
+                if pos < c - 1 {
+                    let hop = crate::obs::span("hier", "bcast")
+                        .bytes(4 * buf.len() as u64);
+                    self.intra.meter().add(4 * buf.len() as u64);
+                    self.intra.send_next(buf)?;
+                    drop(hop);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Cross-site (WAN) payload bytes per *leader* for one hierarchical
+/// all-reduce of `payload` bytes across `s` sites: 2·(S−1)/S·payload —
+/// the §2.4.1 factor in S instead of C.
+pub fn hier_cross_bytes_per_leader(payload: u64, s: usize) -> u64 {
+    crate::comm::ring::ring_wire_bytes_per_worker(payload, s)
+}
+
+// ---------------------------------------------------------------------------
+// Local (mpsc) builder — the threaded reference fleet
+// ---------------------------------------------------------------------------
+
+/// Build one [`HierRing`] per member over in-memory mpsc channels, from a
+/// rank → site map.  Returned in *original rank order* (index = rank);
+/// the global hierarchical order is (site, rank) ascending, exactly what
+/// the elastic coordinator commits for a TCP fleet — so this is the
+/// bit-for-bit local reference for the hierarchical schedule.
+pub fn build_hier_rings(sites: &[u32]) -> Vec<HierRing> {
+    let n = sites.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&r| (sites[r], r));
+    // Contiguous site groups in global order.
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for &r in &order {
+        match groups.last_mut() {
+            Some(g) if sites[*g.last().unwrap()] == sites[r] => g.push(r),
+            _ => groups.push(vec![r]),
+        }
+    }
+    let s = groups.len();
+    let mut cross: Vec<Option<Box<dyn RingTransport>>> = if s > 1 {
+        build_ring(s)
+            .into_iter()
+            .map(|m| Some(Box::new(m) as Box<dyn RingTransport>))
+            .collect()
+    } else {
+        vec![None]
+    };
+    let mut slots: Vec<Option<HierRing>> = (0..n).map(|_| None).collect();
+    let mut global_rank = 0usize;
+    for (si, group) in groups.iter().enumerate() {
+        let intra = build_ring(group.len());
+        for (pos, (&r, member)) in group.iter().zip(intra).enumerate() {
+            let cross_ring =
+                if pos == 0 && s > 1 { cross[si].take() } else { None };
+            slots[r] = Some(
+                HierRing::new(Box::new(member), cross_ring, global_rank, n)
+                    .expect("local hier ring composition is well-formed"),
+            );
+            global_rank += 1;
+        }
+    }
+    slots.into_iter().map(|o| o.unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Site plan — how a TCP worker slices a committed member list
+// ---------------------------------------------------------------------------
+
+/// One worker's slice of a committed (site, rank)-ordered member list:
+/// who to form the intra ring with, whether to lead the cross ring, and
+/// where this member sits in the global order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SitePlan {
+    /// (rank, ring_port) of this member's site, in committed order — the
+    /// intra ring.
+    pub intra: Vec<(u32, u16)>,
+    /// (rank, hier_port) of every site leader in committed (site) order —
+    /// `Some` iff this member leads its site.
+    pub cross: Option<Vec<(u32, u16)>>,
+    /// Position in the committed global order.
+    pub global_rank: usize,
+    /// Total committed members.
+    pub total: usize,
+    /// Number of sites in the epoch.
+    pub site_count: usize,
+}
+
+/// Slice a committed member list for `my_rank`.  The list must keep each
+/// site contiguous (the coordinator commits (site, rank) order); a site
+/// split across two runs means a coordinator bug and is rejected rather
+/// than silently forming a mis-shapen ring.
+pub fn site_plan(members: &[MemberInfo], my_rank: u32) -> Result<SitePlan> {
+    if members.is_empty() {
+        return Err(anyhow!("hier: empty member list"));
+    }
+    // Runs of equal site, preserving committed order.
+    let mut runs: Vec<(u32, Vec<&MemberInfo>)> = Vec::new();
+    for m in members {
+        match runs.last_mut() {
+            Some((site, run)) if *site == m.site => run.push(m),
+            _ => {
+                if runs.iter().any(|(s, _)| *s == m.site) {
+                    return Err(anyhow!(
+                        "hier: site {} is not contiguous in the committed \
+                         member order",
+                        m.site
+                    ));
+                }
+                runs.push((m.site, vec![m]));
+            }
+        }
+    }
+    let global_rank = members
+        .iter()
+        .position(|m| m.rank == my_rank)
+        .ok_or_else(|| anyhow!("hier: rank {my_rank} not in member list"))?;
+    let my_site = members[global_rank].site;
+    let (_, my_run) = runs
+        .iter()
+        .find(|(s, _)| *s == my_site)
+        .expect("own site present");
+    let intra: Vec<(u32, u16)> =
+        my_run.iter().map(|m| (m.rank, m.ring_port)).collect();
+    let leader = my_run[0].rank == my_rank;
+    let cross = if leader && runs.len() > 1 {
+        Some(runs.iter().map(|(_, run)| (run[0].rank, run[0].hier_port)).collect())
+    } else {
+        None
+    };
+    Ok(SitePlan {
+        intra,
+        cross,
+        global_rank,
+        total: members.len(),
+        site_count: runs.len(),
+    })
+}
+
+/// Sort members into the committed hierarchical order: (site, rank)
+/// ascending — the order every backend derives the float schedule from.
+pub fn site_sorted(mut members: Vec<MemberInfo>) -> Vec<MemberInfo> {
+    members.sort_by_key(|m| (m.site, m.rank));
+    members
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use std::sync::Arc;
+
+    fn inputs(n: usize, dim: usize) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::seed_from(42);
+        (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; dim];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect()
+    }
+
+    fn run_hier(sites: &[u32], dim: usize) -> (Vec<Vec<f32>>, u64) {
+        let rings = build_hier_rings(sites);
+        let wan = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let bufs = inputs(sites.len(), dim);
+        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = rings
+                .into_iter()
+                .zip(bufs)
+                .map(|(mut ring, mut buf)| {
+                    let wan = Arc::clone(&wan);
+                    scope.spawn(move || {
+                        ring.allreduce_sum(&mut buf).unwrap();
+                        // Leaders share one cross meter in the local
+                        // builder; taking the max yields the fleet total.
+                        wan.fetch_max(
+                            ring.wan_bytes(),
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                        buf
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        (results, wan.load(std::sync::atomic::Ordering::Relaxed))
+    }
+
+    #[test]
+    fn hier_sum_matches_flat_sum_and_is_bit_identical_across_members() {
+        let sites = [0u32, 0, 1, 1, 1];
+        let dim = 257;
+        let (results, _) = run_hier(&sites, dim);
+        let expect: Vec<f64> = (0..dim)
+            .map(|i| inputs(5, dim).iter().map(|v| v[i] as f64).sum())
+            .collect();
+        for r in &results {
+            assert_eq!(r, &results[0], "all members end bit-identical");
+            for (a, b) in r.iter().zip(&expect) {
+                assert!(
+                    ((*a as f64) - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "{a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wan_bytes_follow_the_two_level_formula() {
+        // 2 sites × 2 members, payload = dim f32s. Cross ring: 2 leaders,
+        // total WAN bytes = 2·(S−1)·payload = payload·2 for S=2 (summed
+        // over both leaders; per leader it's the 2·(S−1)/S factor).
+        let dim = 64;
+        let (_, wan) = run_hier(&[0, 0, 1, 1], dim);
+        let payload = 4 * dim as u64;
+        assert_eq!(wan, 2 * payload);
+        assert_eq!(hier_cross_bytes_per_leader(payload, 2), payload);
+        // The §2.4.1 shape: S=3 leaders each send 2·2/3 of the payload.
+        assert_eq!(hier_cross_bytes_per_leader(300, 3), 400);
+    }
+
+    #[test]
+    fn single_site_is_bit_for_bit_the_flat_ring() {
+        let dim = 129;
+        let n = 4;
+        let bufs = inputs(n, dim);
+        // Flat reference.
+        let flat: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = build_ring(n)
+                .into_iter()
+                .zip(bufs.clone())
+                .map(|(mut m, mut b)| {
+                    scope.spawn(move || {
+                        m.allreduce_sum(&mut b).unwrap();
+                        b
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Hierarchical with one site.
+        let (hier, wan) = run_hier(&[7, 7, 7, 7], dim);
+        assert_eq!(wan, 0, "no WAN traffic with a single site");
+        for (a, b) in hier.iter().zip(&flat) {
+            assert_eq!(a, b, "single-site hier must equal the flat ring bits");
+        }
+    }
+
+    #[test]
+    fn provided_mean_divides_by_the_global_size() {
+        let rings = build_hier_rings(&[0, 0, 1, 1]);
+        let bufs =
+            vec![vec![2.0f32; 8], vec![4.0f32; 8], vec![6.0f32; 8], vec![8.0f32; 8]];
+        let results: Vec<Vec<f32>> = std::thread::scope(|scope| {
+            rings
+                .into_iter()
+                .zip(bufs)
+                .map(|(mut ring, mut b)| {
+                    scope.spawn(move || {
+                        ring.allreduce_mean(&mut b).unwrap();
+                        b
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        for r in results {
+            assert!(r.iter().all(|&v| (v - 5.0).abs() < 1e-6), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn one_member_per_site_degenerates_to_a_leaders_only_ring() {
+        let (results, wan) = run_hier(&[0, 1, 2], 33);
+        let expect: Vec<f64> = (0..33)
+            .map(|i| inputs(3, 33).iter().map(|v| v[i] as f64).sum())
+            .collect();
+        for r in &results {
+            assert_eq!(r, &results[0]);
+            for (a, b) in r.iter().zip(&expect) {
+                assert!(((*a as f64) - b).abs() < 1e-3 * (1.0 + b.abs()));
+            }
+        }
+        // All traffic is WAN: 2·(S−1)·payload across the 3 leaders.
+        assert_eq!(wan, 2 * 2 * (4 * 33) as u64);
+    }
+
+    #[test]
+    fn site_plan_slices_the_committed_order() {
+        let members = vec![
+            MemberInfo { rank: 1, ring_port: 11, hier_port: 21, site: 0 },
+            MemberInfo { rank: 3, ring_port: 13, hier_port: 23, site: 0 },
+            MemberInfo { rank: 0, ring_port: 10, hier_port: 20, site: 2 },
+            MemberInfo { rank: 2, ring_port: 12, hier_port: 22, site: 2 },
+        ];
+        // Leader of site 0.
+        let p = site_plan(&members, 1).unwrap();
+        assert_eq!(p.intra, vec![(1, 11), (3, 13)]);
+        assert_eq!(p.cross, Some(vec![(1, 21), (0, 20)]));
+        assert_eq!((p.global_rank, p.total, p.site_count), (0, 4, 2));
+        // Non-leader of site 2.
+        let p = site_plan(&members, 2).unwrap();
+        assert_eq!(p.intra, vec![(0, 10), (2, 12)]);
+        assert_eq!(p.cross, None);
+        assert_eq!(p.global_rank, 3);
+        // Unknown rank and split sites are rejected.
+        assert!(site_plan(&members, 9).is_err());
+        let mut split = members.clone();
+        split.swap(1, 2);
+        assert!(site_plan(&split, 1).is_err());
+    }
+
+    #[test]
+    fn site_sorted_orders_by_site_then_rank() {
+        let members = vec![
+            MemberInfo { rank: 2, ring_port: 0, hier_port: 0, site: 1 },
+            MemberInfo { rank: 0, ring_port: 0, hier_port: 0, site: 1 },
+            MemberInfo { rank: 1, ring_port: 0, hier_port: 0, site: 0 },
+        ];
+        let s = site_sorted(members);
+        let key: Vec<(u32, u32)> = s.iter().map(|m| (m.site, m.rank)).collect();
+        assert_eq!(key, vec![(0, 1), (1, 0), (1, 2)]);
+    }
+}

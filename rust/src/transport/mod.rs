@@ -17,6 +17,15 @@
 //! * **faulty** ([`faulty::FaultyRing`]) — a deterministic, Pcg32-seeded
 //!   wrapper over any backend that injects message delays, stragglers, and
 //!   worker kills at configured rounds (WAN churn scenarios).
+//! * **hier** ([`hier::HierRing`]) — a composition layer, not a fourth
+//!   wire: fast intra-site rings plus a leaders-only cross-site ring, so
+//!   WAN links carry 2·(S−1)/S of the payload instead of 2·(C−1)/C.
+//!
+//! The member *order* those rings form in is itself a measured quantity:
+//! [`probe`] fills a directed link matrix (seeded payload echo against
+//! per-worker echo listeners) and computes a max-bottleneck ring order
+//! that the elastic coordinator ships as the committed `Prepare.members`
+//! order (see [`ReduceTopology`]).
 //!
 //! # Frame format (tcp backend)
 //!
@@ -76,6 +85,8 @@
 pub mod elastic;
 pub mod faulty;
 pub mod frame;
+pub mod hier;
+pub mod probe;
 pub mod tcp;
 
 use anyhow::{anyhow, Result};
@@ -279,9 +290,179 @@ impl TransportBackend {
     }
 }
 
+/// How the elastic coordinator arranges the reduction across the fleet.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReduceTopology {
+    /// One flat ring in natural (rank-ascending) member order — the
+    /// historical behavior.
+    #[default]
+    Flat,
+    /// One flat ring, but in the max-bottleneck order computed from the
+    /// measured link matrix ([`probe::ring_order`]); the order ships as
+    /// the committed `Prepare.members` order, so churn re-runs it.
+    Reordered,
+    /// Two-level hierarchical reduce ([`hier::HierRing`]): intra-site
+    /// rings plus a leaders-only cross-site ring, members committed in
+    /// (site, rank) order.
+    Hier,
+}
+
+impl ReduceTopology {
+    pub fn parse(s: &str) -> Result<ReduceTopology> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "flat" | "ring" => ReduceTopology::Flat,
+            "reordered" | "reorder" | "bandwidth" => ReduceTopology::Reordered,
+            "hier" | "hierarchical" | "two-level" => ReduceTopology::Hier,
+            other => {
+                return Err(anyhow!(
+                    "unknown reduce topology '{other}' (flat | reordered | hier)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceTopology::Flat => "flat",
+            ReduceTopology::Reordered => "reordered",
+            ReduceTopology::Hier => "hier",
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::ring::{build_ring, RingMember};
+    use crate::transport::faulty::{FaultPlan, FaultyRing};
+    use crate::transport::hier::HierRing;
+    use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+    use std::sync::Arc;
+
+    /// Wrapper that counts how many spent buffers flow back through
+    /// `recycle` — the delegation contract every composition layer
+    /// (`Box`, `faulty`, `hier`) must honor, or the inner pool silently
+    /// starves back to allocating per hop.
+    struct CountingRing<T: RingTransport> {
+        inner: T,
+        recycled: Arc<AtomicUsize>,
+    }
+
+    impl<T: RingTransport> RingTransport for CountingRing<T> {
+        fn rank(&self) -> usize {
+            self.inner.rank()
+        }
+
+        fn size(&self) -> usize {
+            self.inner.size()
+        }
+
+        fn send_next(&mut self, chunk: &[f32]) -> Result<()> {
+            self.inner.send_next(chunk)
+        }
+
+        fn recv_prev(&mut self) -> Result<Vec<f32>> {
+            self.inner.recv_prev()
+        }
+
+        fn meter(&self) -> &ByteMeter {
+            self.inner.meter()
+        }
+
+        fn recycle(&mut self, buf: Vec<f32>) {
+            self.recycled.fetch_add(1, AtomicOrdering::Relaxed);
+            self.inner.recycle(buf)
+        }
+    }
+
+    fn counting_pair() -> (Vec<CountingRing<RingMember>>, Vec<Arc<AtomicUsize>>) {
+        let counters: Vec<Arc<AtomicUsize>> =
+            (0..2).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let rings = build_ring(2)
+            .into_iter()
+            .zip(&counters)
+            .map(|(m, c)| CountingRing { inner: m, recycled: Arc::clone(c) })
+            .collect();
+        (rings, counters)
+    }
+
+    #[test]
+    fn boxed_transport_delegates_recycle() {
+        let (rings, counters) = counting_pair();
+        std::thread::scope(|s| {
+            for r in rings {
+                s.spawn(move || {
+                    let mut b: Box<dyn RingTransport> = Box::new(r);
+                    let mut buf = vec![1.0f32; 32];
+                    b.allreduce_sum(&mut buf).unwrap();
+                });
+            }
+        });
+        for c in &counters {
+            // The provided collective consumes 2·(C−1) incoming chunks.
+            assert_eq!(c.load(AtomicOrdering::Relaxed), 2);
+        }
+    }
+
+    #[test]
+    fn faulty_ring_delegates_recycle() {
+        let (rings, counters) = counting_pair();
+        std::thread::scope(|s| {
+            for r in rings {
+                s.spawn(move || {
+                    let mut f = FaultyRing::new(r, FaultPlan::quiet(3));
+                    let mut buf = vec![1.0f32; 32];
+                    f.allreduce_sum(&mut buf).unwrap();
+                });
+            }
+        });
+        for c in &counters {
+            assert_eq!(c.load(AtomicOrdering::Relaxed), 2);
+        }
+    }
+
+    #[test]
+    fn hier_ring_delegates_recycle_through_both_levels() {
+        // 2 sites × 2 members: each member recycles 2·(C_site−1) = 2
+        // buffers in the intra reduce; each NON-leader additionally
+        // recycles the one store-and-forward broadcast buffer.
+        let counters: Vec<Arc<AtomicUsize>> =
+            (0..4).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let mut cross: Vec<Option<Box<dyn RingTransport>>> = build_ring(2)
+            .into_iter()
+            .map(|m| Some(Box::new(m) as Box<dyn RingTransport>))
+            .collect();
+        let mut members: Vec<HierRing> = Vec::new();
+        for (si, site) in [build_ring(2), build_ring(2)].into_iter().enumerate() {
+            for (pos, m) in site.into_iter().enumerate() {
+                let idx = si * 2 + pos;
+                let counting = CountingRing {
+                    inner: m,
+                    recycled: Arc::clone(&counters[idx]),
+                };
+                let cross_ring = if pos == 0 { cross[si].take() } else { None };
+                members.push(
+                    HierRing::new(Box::new(counting), cross_ring, idx, 4)
+                        .unwrap(),
+                );
+            }
+        }
+        std::thread::scope(|s| {
+            for mut m in members {
+                s.spawn(move || {
+                    let mut buf = vec![1.0f32; 16];
+                    m.allreduce_sum(&mut buf).unwrap();
+                });
+            }
+        });
+        for (idx, expect) in [(0usize, 2usize), (2, 2), (1, 3), (3, 3)] {
+            assert_eq!(
+                counters[idx].load(AtomicOrdering::Relaxed),
+                expect,
+                "member {idx}"
+            );
+        }
+    }
 
     #[test]
     fn backend_parse_names() {
@@ -292,5 +473,21 @@ mod tests {
         );
         assert!(TransportBackend::parse("carrier-pigeon").is_err());
         assert_eq!(TransportBackend::Tcp.name(), "tcp");
+    }
+
+    #[test]
+    fn topology_parse_names() {
+        assert_eq!(ReduceTopology::parse("flat").unwrap(), ReduceTopology::Flat);
+        assert_eq!(
+            ReduceTopology::parse("Reordered").unwrap(),
+            ReduceTopology::Reordered
+        );
+        assert_eq!(
+            ReduceTopology::parse("hierarchical").unwrap(),
+            ReduceTopology::Hier
+        );
+        assert!(ReduceTopology::parse("gossip").is_err());
+        assert_eq!(ReduceTopology::Hier.name(), "hier");
+        assert_eq!(ReduceTopology::default(), ReduceTopology::Flat);
     }
 }

@@ -1,0 +1,480 @@
+//! Link probing and bandwidth-aware ring ordering.
+//!
+//! The flat chunked ring AllReduce sends every hop over whatever member
+//! order the coordinator happened to commit — on a heterogeneous WAN that
+//! means 2·(C−1) synchronous steps each paced by the *slowest* link that
+//! the arbitrary order put on the cycle.  This module makes the topology a
+//! measured quantity instead:
+//!
+//! * [`LinkMatrix`] — directed per-pair throughput (Gbps) and latency (ms),
+//!   filled either from a live probe ([`measure_link`] against each peer's
+//!   echo listener, [`serve_echo`]) or from a `netsim`-style model.
+//! * [`ring_order`] — a max-bottleneck ring order over the matrix: greedy
+//!   nearest-neighbor construction followed by 2-opt segment reversals,
+//!   maximizing the minimum link bandwidth on the directed cycle (ties
+//!   broken by lower total hop latency, then lexicographically).
+//! * [`ring_step_seconds`] — the synchronous-ring cost model the ordering
+//!   optimizes: 2·(C−1) steps, each paced by the slowest hop on the cycle.
+//!
+//! # Invariants
+//!
+//! * `ring_order` is **deterministic**: the same matrix always yields the
+//!   same order, rotated so member 0 leads (a ring is rotation-invariant).
+//!   Fleet determinism therefore only depends on the matrix the
+//!   coordinator measured, which it ships to every worker as the
+//!   `Prepare.members` order — workers never reorder locally.
+//! * On a homogeneous matrix (all links equal) the order is the identity,
+//!   so probing never perturbs a fleet whose links are symmetric — the
+//!   bit-for-bit loopback contracts for the flat ring are unaffected.
+//! * The live probe runs strictly *before* the first membership epoch on
+//!   dedicated echo listeners; it never touches ring sockets, so a probe
+//!   failure degrades to the natural (rank-sorted) order rather than
+//!   poisoning ring formation.
+
+use crate::transport::frame::{read_msg, write_msg, Msg};
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Directed link measurements for `n` fleet members: `gbps[from][to]` and
+/// `latency_ms[from][to]`, stored dense.  Self-links are ignored by every
+/// consumer.  Unmeasured links default to infinite bandwidth / zero
+/// latency so a partially filled matrix never penalizes a link nobody
+/// measured.
+#[derive(Clone, Debug)]
+pub struct LinkMatrix {
+    n: usize,
+    gbps: Vec<f64>,
+    latency_ms: Vec<f64>,
+}
+
+impl LinkMatrix {
+    pub fn new(n: usize) -> LinkMatrix {
+        LinkMatrix {
+            n,
+            gbps: vec![f64::INFINITY; n * n],
+            latency_ms: vec![0.0; n * n],
+        }
+    }
+
+    /// All links identical — the homogeneous (e.g. loopback) baseline.
+    pub fn homogeneous(n: usize, gbps: f64, latency_ms: f64) -> LinkMatrix {
+        LinkMatrix {
+            n,
+            gbps: vec![gbps; n * n],
+            latency_ms: vec![latency_ms; n * n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn set(&mut self, from: usize, to: usize, gbps: f64, latency_ms: f64) {
+        self.gbps[from * self.n + to] = gbps;
+        self.latency_ms[from * self.n + to] = latency_ms;
+    }
+
+    pub fn gbps(&self, from: usize, to: usize) -> f64 {
+        self.gbps[from * self.n + to]
+    }
+
+    pub fn latency_ms(&self, from: usize, to: usize) -> f64 {
+        self.latency_ms[from * self.n + to]
+    }
+
+    /// Flatten to `(from, to, gbps, latency_ms)` rows (off-diagonal only)
+    /// — the shape the run report serializes and `--calibrate-from` reads
+    /// back.
+    pub fn entries(&self) -> Vec<(u32, u32, f64, f64)> {
+        let mut out = Vec::new();
+        for f in 0..self.n {
+            for t in 0..self.n {
+                if f != t {
+                    out.push((
+                        f as u32,
+                        t as u32,
+                        self.gbps(f, t),
+                        self.latency_ms(f, t),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn from_entries(n: usize, rows: &[(u32, u32, f64, f64)]) -> LinkMatrix {
+        let mut m = LinkMatrix::new(n);
+        for &(f, t, g, l) in rows {
+            if (f as usize) < n && (t as usize) < n {
+                m.set(f as usize, t as usize, g, l);
+            }
+        }
+        m
+    }
+}
+
+/// Bottleneck bandwidth (min Gbps over the directed cycle's links) and
+/// total hop latency of a ring order — the objective [`ring_order`]
+/// maximizes (bottleneck first, then lower latency).
+pub fn ring_bottleneck(m: &LinkMatrix, order: &[usize]) -> (f64, f64) {
+    let c = order.len();
+    if c <= 1 {
+        return (f64::INFINITY, 0.0);
+    }
+    let mut min_gbps = f64::INFINITY;
+    let mut lat = 0.0;
+    for i in 0..c {
+        let from = order[i];
+        let to = order[(i + 1) % c];
+        min_gbps = min_gbps.min(m.gbps(from, to));
+        lat += m.latency_ms(from, to);
+    }
+    (min_gbps, lat)
+}
+
+/// Seconds for one chunked ring all-reduce of `payload_bytes` over the
+/// measured links in the given order: the ring is synchronous, so each of
+/// the 2·(C−1) steps is paced by the slowest hop on the cycle.
+pub fn ring_step_seconds(
+    m: &LinkMatrix,
+    order: &[usize],
+    payload_bytes: u64,
+) -> f64 {
+    let c = order.len();
+    if c <= 1 {
+        return 0.0;
+    }
+    let chunk = payload_bytes as f64 / c as f64;
+    let mut step = 0.0f64;
+    for i in 0..c {
+        let from = order[i];
+        let to = order[(i + 1) % c];
+        let bw = m.gbps(from, to) * 1e9 / 8.0; // bytes/sec
+        let t = chunk / bw + m.latency_ms(from, to) * 1e-3;
+        step = step.max(t);
+    }
+    2.0 * (c as f64 - 1.0) * step
+}
+
+/// `(bottleneck, latency)` strictly better than the incumbent?
+fn better(cand: (f64, f64), best: (f64, f64)) -> bool {
+    cand.0 > best.0 || (cand.0 == best.0 && cand.1 < best.1)
+}
+
+/// Max-bottleneck ring order over a measured link matrix: greedy
+/// nearest-neighbor construction (highest-bandwidth outgoing link first,
+/// ties by lower latency then lower index) followed by 2-opt segment
+/// reversals accepted only when they strictly improve
+/// `(bottleneck ↑, total latency ↓)`.  Deterministic; returned rotated so
+/// index 0 leads.
+pub fn ring_order(m: &LinkMatrix) -> Vec<usize> {
+    let n = m.n();
+    if n <= 2 {
+        return (0..n).collect();
+    }
+    // Greedy nearest-neighbor from 0.
+    let mut order = Vec::with_capacity(n);
+    let mut used = vec![false; n];
+    order.push(0usize);
+    used[0] = true;
+    while order.len() < n {
+        let cur = *order.last().unwrap();
+        let mut best: Option<usize> = None;
+        for cand in 0..n {
+            if used[cand] {
+                continue;
+            }
+            let score = (m.gbps(cur, cand), -m.latency_ms(cur, cand));
+            let take = match best {
+                None => true,
+                Some(b) => {
+                    let bs = (m.gbps(cur, b), -m.latency_ms(cur, b));
+                    score.0 > bs.0 || (score.0 == bs.0 && score.1 > bs.1)
+                }
+            };
+            if take {
+                best = Some(cand);
+            }
+        }
+        let next = best.unwrap();
+        used[next] = true;
+        order.push(next);
+    }
+    // 2-opt: reverse order[i..=j]; each acceptance strictly improves the
+    // lexicographic objective, so the loop terminates.
+    let mut score = ring_bottleneck(m, &order);
+    loop {
+        let mut improved = false;
+        'outer: for i in 1..n - 1 {
+            for j in i + 1..n {
+                order[i..=j].reverse();
+                let cand = ring_bottleneck(m, &order);
+                if better(cand, score) {
+                    score = cand;
+                    improved = true;
+                    break 'outer;
+                }
+                order[i..=j].reverse(); // undo
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    // Canonical rotation: member 0 leads.
+    let zero = order.iter().position(|&v| v == 0).unwrap();
+    order.rotate_left(zero);
+    order
+}
+
+// ---------------------------------------------------------------------------
+// Live probe: echo server + directed link measurement
+// ---------------------------------------------------------------------------
+
+/// Elements in the small echo used to estimate latency.
+const LATENCY_ELEMS: usize = 16;
+
+/// Serve echo connections until `stop` is set: each accepted connection
+/// gets every `Data` frame written straight back.  Probes arrive one at a
+/// time (the coordinator probes workers sequentially), so connections are
+/// handled inline.
+pub fn serve_echo(listener: TcpListener, stop: Arc<AtomicBool>) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut conn, _)) => {
+                let _ = conn.set_nodelay(true);
+                let _ = conn.set_read_timeout(Some(Duration::from_secs(10)));
+                let _ = conn.set_nonblocking(false);
+                loop {
+                    match read_msg(&mut conn) {
+                        Ok(Msg::Data { payload }) => {
+                            let echo = Msg::Data { payload };
+                            if write_msg(&mut conn, &echo).is_err() {
+                                break;
+                            }
+                        }
+                        _ => break,
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Spawn [`serve_echo`] on its own thread; the returned flag stops it.
+pub fn spawn_echo_server(listener: TcpListener) -> Arc<AtomicBool> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    std::thread::Builder::new()
+        .name("probe-echo".into())
+        .spawn(move || serve_echo(listener, flag))
+        .expect("spawn probe echo thread");
+    stop
+}
+
+/// Measure the directed link to one peer's echo listener: seeded payload
+/// echo, `repeats` trials, minimum taken (the cleanest sample of an
+/// otherwise noisy path).  Returns `(gbps, latency_ms)`.
+pub fn measure_link(
+    addr: &str,
+    payload_elems: usize,
+    repeats: usize,
+    timeout: Duration,
+) -> Result<(f64, f64)> {
+    let mut conn = TcpStream::connect(addr)
+        .with_context(|| format!("probe dial {addr}"))?;
+    conn.set_nodelay(true).ok();
+    conn.set_read_timeout(Some(timeout)).ok();
+    conn.set_write_timeout(Some(timeout)).ok();
+    let repeats = repeats.max(1);
+    // Latency: tiny echo round-trips, min RTT / 2.
+    let mut rng = Pcg32::new(0x9b0b, 0);
+    let mut small = vec![0.0f32; LATENCY_ELEMS];
+    rng.fill_normal(&mut small, 0.0, 1.0);
+    let mut rtt_min = f64::INFINITY;
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        write_msg(&mut conn, &Msg::Data { payload: small.clone() })?;
+        match read_msg(&mut conn)? {
+            Msg::Data { payload: v } if v.len() == small.len() => {}
+            _ => return Err(anyhow!("probe echo returned a foreign frame")),
+        }
+        rtt_min = rtt_min.min(t0.elapsed().as_secs_f64());
+    }
+    // Throughput: big echo, min elapsed, RTT subtracted.
+    let elems = payload_elems.max(LATENCY_ELEMS);
+    let mut payload = vec![0.0f32; elems];
+    rng.fill_normal(&mut payload, 0.0, 1.0);
+    let mut big_min = f64::INFINITY;
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        write_msg(&mut conn, &Msg::Data { payload: payload.clone() })?;
+        match read_msg(&mut conn)? {
+            Msg::Data { payload: v } if v.len() == payload.len() => {}
+            _ => return Err(anyhow!("probe echo returned a foreign frame")),
+        }
+        big_min = big_min.min(t0.elapsed().as_secs_f64());
+    }
+    let bytes = (2 * 4 * elems) as f64; // both directions count
+    let net = (big_min - rtt_min).max(1e-9);
+    // Loopback can be effectively infinite; cap so downstream math stays
+    // finite and comparisons stay total.
+    let gbps = (bytes * 8.0 / net / 1e9).min(1e6);
+    Ok((gbps, (rtt_min / 2.0 * 1e3).max(0.0)))
+}
+
+/// Probe every peer in turn (the worker side of `ProbeRequest`).
+/// Returns `(peer_rank, gbps, latency_ms)` rows; a peer that cannot be
+/// measured is reported with zero bandwidth so the coordinator sees the
+/// degraded link instead of a hole.
+pub fn probe_peers(
+    peers: &[(u32, u16)],
+    payload_elems: usize,
+    repeats: usize,
+    timeout: Duration,
+) -> Vec<(u32, f64, f64)> {
+    peers
+        .iter()
+        .map(|&(rank, port)| {
+            match measure_link(
+                &format!("127.0.0.1:{port}"),
+                payload_elems,
+                repeats,
+                timeout,
+            ) {
+                Ok((g, l)) => (rank, g, l),
+                Err(_) => (rank, 0.0, 0.0),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 4 members, two fast islands {0,2} and {1,3} (interleaved on
+    /// purpose, so the natural rank order crosses a slow boundary on
+    /// every hop) with one decent cross link each way.
+    fn two_island_matrix() -> LinkMatrix {
+        let mut m = LinkMatrix::homogeneous(4, 0.5, 20.0); // slow default
+        for (a, b) in [(0, 2), (2, 0), (1, 3), (3, 1)] {
+            m.set(a, b, 100.0, 0.1); // fast intra-island
+        }
+        // One decent cross link each way.
+        m.set(2, 1, 2.0, 10.0);
+        m.set(3, 0, 2.0, 10.0);
+        m
+    }
+
+    #[test]
+    fn homogeneous_matrix_keeps_identity_order() {
+        let m = LinkMatrix::homogeneous(5, 1.0, 1.0);
+        assert_eq!(ring_order(&m), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_order_raises_the_bottleneck() {
+        let m = two_island_matrix();
+        let natural: Vec<usize> = (0..4).collect();
+        // Natural order 0→1→2→3→0 rides the 0.5 Gbps default on its first
+        // three hops; the optimizer chains the islands via fast links and
+        // crosses the boundary exactly twice at 2.0 Gbps.
+        let picked = ring_order(&m);
+        let (b_nat, _) = ring_bottleneck(&m, &natural);
+        let (b_opt, _) = ring_bottleneck(&m, &picked);
+        assert!(b_opt > b_nat, "{b_opt} vs {b_nat}");
+        assert_eq!(picked, vec![0, 2, 1, 3], "islands chained via fast links");
+        assert_eq!(b_opt, 2.0);
+        assert_eq!(b_nat, 0.5);
+    }
+
+    #[test]
+    fn ring_order_is_deterministic_and_rotated_to_zero() {
+        let mut m = LinkMatrix::homogeneous(6, 1.0, 5.0);
+        // Scatter heterogeneous links (deterministic pattern).
+        for f in 0..6usize {
+            for t in 0..6usize {
+                if f != t {
+                    let g = 1.0 + ((f * 7 + t * 3) % 11) as f64;
+                    m.set(f, t, g, 1.0 + ((f + t) % 4) as f64);
+                }
+            }
+        }
+        let a = ring_order(&m);
+        let b = ring_order(&m);
+        assert_eq!(a, b);
+        assert_eq!(a[0], 0);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4, 5]);
+        // 2-opt never loses to the natural order.
+        let (b_opt, _) = ring_bottleneck(&m, &a);
+        let (b_nat, _) = ring_bottleneck(&m, &(0..6).collect::<Vec<_>>());
+        assert!(b_opt >= b_nat);
+    }
+
+    #[test]
+    fn step_model_prefers_the_reordered_ring() {
+        let m = two_island_matrix();
+        let payload = 4_000_000u64;
+        // The natural rank order crosses the slow 0.5 links.
+        let bad = vec![0, 1, 2, 3];
+        let good = ring_order(&m);
+        assert!(
+            ring_step_seconds(&m, &good, payload)
+                < ring_step_seconds(&m, &bad, payload)
+        );
+        // c <= 1 is free.
+        assert_eq!(ring_step_seconds(&m, &[0], payload), 0.0);
+    }
+
+    #[test]
+    fn entries_roundtrip() {
+        let m = two_island_matrix();
+        let rows = m.entries();
+        let back = LinkMatrix::from_entries(4, &rows);
+        for f in 0..4 {
+            for t in 0..4 {
+                if f != t {
+                    assert_eq!(m.gbps(f, t), back.gbps(f, t));
+                    assert_eq!(m.latency_ms(f, t), back.latency_ms(f, t));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn live_probe_measures_loopback_fast_and_close() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.local_addr().unwrap().port();
+        let stop = spawn_echo_server(listener);
+        let (gbps, lat_ms) = measure_link(
+            &format!("127.0.0.1:{port}"),
+            16 * 1024,
+            2,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        stop.store(true, Ordering::Relaxed);
+        assert!(gbps > 0.0, "loopback bandwidth must be positive: {gbps}");
+        assert!(lat_ms < 1000.0, "loopback latency is sub-second: {lat_ms}");
+        // probe_peers degrades an unreachable peer to zero bandwidth
+        // instead of failing the whole report.
+        let rows = probe_peers(&[(7, 1)], 64, 1, Duration::from_millis(200));
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, 7);
+        assert_eq!(rows[0].1, 0.0);
+    }
+}

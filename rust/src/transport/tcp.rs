@@ -522,6 +522,19 @@ mod tests {
     }
 
     #[test]
+    fn tcp_handles_fewer_elements_than_members() {
+        // n < c: two of the four chunk bounds collapse to zero length, so
+        // empty `Data` frames must round-trip the wire; the result still
+        // matches the local mpsc ring bit-for-bit.
+        let bufs = inputs(4, 3);
+        assert_eq!(run_local(&bufs), run_tcp(&bufs));
+        // n = 0: every frame is empty — the degenerate collective is a
+        // no-op on the values but still a valid wire exchange.
+        let empty = vec![Vec::new(); 3];
+        assert_eq!(run_local(&empty), run_tcp(&empty));
+    }
+
+    #[test]
     fn size_one_ring_is_noop() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let members = vec![(0u32, listener.local_addr().unwrap().port())];

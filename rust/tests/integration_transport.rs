@@ -10,7 +10,7 @@ use dilocox::transport::elastic::{
     run_elastic, run_local_reference, ElasticConfig, SpawnMode,
 };
 use dilocox::transport::tcp::form_ring;
-use dilocox::transport::RingTransport;
+use dilocox::transport::{ReduceTopology, RingTransport};
 use dilocox::util::rng::Pcg32;
 use std::net::TcpListener;
 use std::time::Duration;
@@ -271,6 +271,83 @@ fn elastic_overlap_process_kill_drains_with_pool_and_pipeline() {
     assert!(
         out.recoveries.iter().any(|&(_, _, d)| d > 0),
         "expected a drain commit, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    let max_round = out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap();
+    assert_eq!(max_round as usize, cfg.rounds);
+}
+
+fn hier_process_cfg(rounds: usize) -> ElasticConfig {
+    let mut cfg = ElasticConfig::quadratic(4, rounds, 48);
+    cfg.reduce_topology = ReduceTopology::Hier;
+    cfg.sites = vec![0, 0, 1, 1];
+    cfg.transport.ring_timeout_ms = 1500;
+    cfg.wall_timeout_ms = 90_000;
+    cfg
+}
+
+#[test]
+fn hier_process_fleet_matches_local_reference_bit_for_bit() {
+    // The two-level reduce across real worker OS processes (2 sites × 2
+    // clusters, intra rings + a leaders-only cross ring) must be
+    // bit-for-bit the in-process hier reference: the hier float schedule
+    // is a pure function of (site, rank) order, never of the transport.
+    let mut cfg = hier_process_cfg(4);
+    cfg.transport.ring_timeout_ms = 2000;
+    let (ref_params, ref_loss, ref_wire) = run_local_reference(&cfg).unwrap();
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.epochs, 1, "no churn expected");
+    assert_eq!(out.survivors, vec![0, 1, 2, 3]);
+    assert_eq!(out.final_params, ref_params, "hier process != hier mpsc");
+    assert_eq!(out.final_loss, ref_loss);
+    assert_eq!(out.total_wire_bytes, ref_wire, "wire ledger diverged");
+}
+
+#[test]
+fn hier_process_leader_kill_drains_and_completes() {
+    // Kill the site-1 leader process (rank 2) mid-run under overlap: the
+    // survivors re-form, leadership of site 1 falls to rank 3 purely by
+    // position in the committed order, and the drain branch finishes the
+    // in-flight reduction across the re-formed two-level rings.
+    let mut cfg = hier_process_cfg(6);
+    cfg.overlap = true;
+    cfg.faults.enabled = true;
+    cfg.faults.kill_rank = 2;
+    cfg.faults.kill_round = 2;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 1, 3], "site-1 leader must be gone");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().any(|&(_, _, d)| d > 0),
+        "expected a drain commit, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    let max_round = out.round_losses.iter().map(|(_, r, _)| *r).max().unwrap();
+    assert_eq!(max_round as usize, cfg.rounds);
+}
+
+#[test]
+fn hier_process_soft_break_discards_and_completes() {
+    // The discard branch under hier across OS processes: rank 1 (a
+    // non-leader) soft-breaks without dying, survivors hold mixed
+    // in-flight evidence, the coordinator discards, and everyone —
+    // breaker included — completes the schedule.
+    let mut cfg = hier_process_cfg(6);
+    cfg.overlap = true;
+    cfg.faults.enabled = true;
+    cfg.faults.break_rank = 1;
+    cfg.faults.break_round = 3;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 1, 2, 3], "nobody died");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().all(|&(_, _, d)| d == 0),
+        "mixed in-flight must discard, got {:?}",
         out.recoveries
     );
     assert!(out.final_loss.is_finite());
