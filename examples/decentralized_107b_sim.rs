@@ -18,7 +18,8 @@
 
 use dilocox::config::{Algo, NetworkConfig};
 use dilocox::metrics::Table;
-use dilocox::netsim::{Link, LinkFaultModel};
+use dilocox::netsim::{Link, LinkFaultModel, Topology};
+use dilocox::pipeline::ScheduleKind;
 use dilocox::transport::probe::{ring_bottleneck, ring_order, LinkMatrix};
 use dilocox::report::{self, paper};
 use dilocox::sim::{self, ScaleConfig, SimAlgo};
@@ -103,6 +104,71 @@ fn main() {
             report::fmt_tps(r.tokens_per_sec),
             format!("{:.1}", 3600.0 / round_secs),
             format!("{:.0}%", 100.0 * r.gpu_utilization),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- microbatch schedule: killing the pipeline bubble ----------------
+    // The 107B pipeline is deep (S = 80 executors, M = 160 microbatches),
+    // so the fill/drain ramp is material: 1F1B idles (S−1)/(M+S−1) ≈ 33%
+    // of each executor's step.  Interleaving v model chunks per executor
+    // divides the ramp by v; the ZB-H1 split-backward stream back-fills
+    // the drain with weight-grad work and removes it entirely.
+    println!(
+        "Qwen1.5-107B inner-step schedule (S=80 stages, M=160 microbatches):"
+    );
+    let mut t = Table::new(&[
+        "schedule",
+        "ideal bubble",
+        "step time",
+        "tokens/s",
+        "vs 1f1b",
+    ]);
+    let scale = ScaleConfig::qwen_107b();
+    let mut base_step = 0.0f64;
+    for (kind, v) in [
+        (ScheduleKind::OneFOneB, 1usize),
+        (ScheduleKind::Interleaved, 2),
+        (ScheduleKind::Interleaved, 4),
+        (ScheduleKind::ZeroBubble, 1),
+    ] {
+        let mut topo = Topology::new(&scale.net, scale.pp_stages);
+        let step = match sim::pipeline_step_secs_for(&scale, &mut topo, kind, v)
+        {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("schedule {}: {e}", kind.name());
+                continue;
+            }
+        };
+        if kind == ScheduleKind::OneFOneB {
+            base_step = step;
+        }
+        let algo = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+        let r = sim::simulate_calibrated(&scale, &algo, rounds, Some(step));
+        let name = if v > 1 {
+            format!("{} v={v}", kind.name())
+        } else {
+            kind.name().to_string()
+        };
+        t.row(&[
+            name,
+            format!(
+                "{:.1}%",
+                100.0
+                    * kind.ideal_bubble_fraction(
+                        scale.pp_stages,
+                        v,
+                        scale.microbatches
+                    )
+            ),
+            fmt_secs(step),
+            report::fmt_tps(r.tokens_per_sec),
+            if base_step > 0.0 {
+                format!("{:.2}x", base_step / step)
+            } else {
+                "-".into()
+            },
         ]);
     }
     println!("{}", t.render());
@@ -399,6 +465,7 @@ fn measured_stage_times() {
         error_feedback: false,
         method: Method::None,
         seed: 7,
+        ..PipelineRunOpts::default()
     };
     let out = match run_pipeline(&wl, dp, local_stage_rings(dp, stages), &opts) {
         Ok(o) => o,

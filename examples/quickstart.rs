@@ -40,6 +40,7 @@ fn synthetic_pipeline_demo() -> anyhow::Result<()> {
         error_feedback: false,
         method: Method::Quant { q_bits: 8 },
         seed: 1234,
+        ..PipelineRunOpts::default()
     };
     let out = run_pipeline(&wl, dp, local_stage_rings(dp, stages), &opts)?;
     println!(

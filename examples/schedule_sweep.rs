@@ -1,0 +1,158 @@
+//! Which microbatch schedule wins where?  Sweep (schedule × stages ×
+//! micros × virtual_stages) over the calibrated pipeline model and the
+//! DES, and print one time-to-target table naming the winner per cell.
+//!
+//! Each cell clones the OPT-1.3B testbed (2 clusters over a 1 Gbps WAN,
+//! paper §4.1.2), resizes its pipeline to (S stages, M microbatches),
+//! prices one inner step with [`sim::pipeline_step_secs_for`] under the
+//! candidate schedule, then feeds that step time through
+//! [`sim::simulate_calibrated`] with the paper's DiLoCoX settings — so
+//! the ranking reflects end-to-end tokens/s (local phase + overlapped
+//! WAN sync), not just the bubble fraction.
+//!
+//!     cargo run --release --example schedule_sweep
+//!     cargo run --release --example schedule_sweep -- --out sweep.json
+
+use dilocox::config::Algo;
+use dilocox::metrics::Table;
+use dilocox::netsim::Topology;
+use dilocox::pipeline::ScheduleKind;
+use dilocox::sim::{self, ScaleConfig, SimAlgo};
+use dilocox::util::fmt_secs;
+use dilocox::util::json::{obj, Json};
+
+/// Time-to-target horizon: tokens one run must process.
+const TARGET_TOKENS: f64 = 100e9;
+
+/// (schedule, virtual_stages) candidates per cell.  Interleaved needs
+/// micros % stages == 0 and v dividing the model evenly; cells where a
+/// candidate is inapplicable simply omit it.
+const CANDIDATES: [(ScheduleKind, usize); 5] = [
+    (ScheduleKind::GPipe, 1),
+    (ScheduleKind::OneFOneB, 1),
+    (ScheduleKind::Interleaved, 2),
+    (ScheduleKind::Interleaved, 4),
+    (ScheduleKind::ZeroBubble, 1),
+];
+
+fn label(kind: ScheduleKind, v: usize) -> String {
+    if v > 1 {
+        format!("{} v={v}", kind.name())
+    } else {
+        kind.name().to_string()
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let out_path = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1).cloned());
+
+    let rounds = 16;
+    let mut table = Table::new(&[
+        "S", "M", "schedule", "ideal bubble", "step", "tokens/s",
+        "time to 100B tok", "winner",
+    ]);
+    let mut cells: Vec<Json> = Vec::new();
+
+    for stages in [2usize, 4, 8] {
+        for micros in [8usize, 16] {
+            // Price every applicable candidate for this (S, M) cell.
+            let mut rows: Vec<(String, f64, f64, f64, f64)> = Vec::new();
+            for (kind, v) in CANDIDATES {
+                if kind == ScheduleKind::Interleaved && micros % stages != 0 {
+                    continue;
+                }
+                let mut scale = ScaleConfig::opt_1_3b();
+                scale.pp_stages = stages;
+                scale.gpus_per_cluster = stages;
+                scale.microbatches = micros;
+                let mut topo = Topology::new(&scale.net, scale.pp_stages);
+                let step = match sim::pipeline_step_secs_for(
+                    &scale, &mut topo, kind, v,
+                ) {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                let algo = SimAlgo::paper_setting(Algo::DiLoCoX, &scale);
+                let r =
+                    sim::simulate_calibrated(&scale, &algo, rounds, Some(step));
+                if r.tokens_per_sec <= 0.0 {
+                    continue;
+                }
+                let ideal = kind.ideal_bubble_fraction(stages, v, micros);
+                rows.push((
+                    label(kind, v),
+                    ideal,
+                    step,
+                    r.tokens_per_sec,
+                    TARGET_TOKENS / r.tokens_per_sec,
+                ));
+            }
+            let winner = rows
+                .iter()
+                .min_by(|a, b| a.4.total_cmp(&b.4))
+                .map(|r| r.0.clone())
+                .unwrap_or_default();
+            for (name, ideal, step, tps, tts) in &rows {
+                table.row(&[
+                    stages.to_string(),
+                    micros.to_string(),
+                    name.clone(),
+                    format!("{:.1}%", 100.0 * ideal),
+                    format!("{:.2} s", step),
+                    format!("{tps:.0}"),
+                    fmt_secs(*tts),
+                    if *name == winner { "<-".into() } else { String::new() },
+                ]);
+            }
+            cells.push(obj(vec![
+                ("stages", Json::Num(stages as f64)),
+                ("micros", Json::Num(micros as f64)),
+                ("winner", Json::Str(winner)),
+                (
+                    "rows",
+                    Json::Arr(
+                        rows.iter()
+                            .map(|(name, ideal, step, tps, tts)| {
+                                obj(vec![
+                                    ("schedule", Json::Str(name.clone())),
+                                    ("ideal_bubble", Json::Num(*ideal)),
+                                    ("step_secs", Json::Num(*step)),
+                                    ("tokens_per_sec", Json::Num(*tps)),
+                                    ("time_to_target_secs", Json::Num(*tts)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+    }
+
+    println!(
+        "Schedule sweep on the OPT-1.3B testbed (DiLoCoX paper settings, \
+         time-to-target = {:.0}B tokens):",
+        TARGET_TOKENS / 1e9
+    );
+    println!("{}", table.render());
+
+    let doc = obj(vec![
+        ("scale", Json::Str("OPT-1.3B".into())),
+        ("algo", Json::Str("dilocox".into())),
+        ("target_tokens", Json::Num(TARGET_TOKENS)),
+        ("cells", Json::Arr(cells)),
+    ]);
+    match out_path {
+        Some(path) => {
+            if let Err(e) = std::fs::write(&path, doc.to_string_pretty()) {
+                eprintln!("failed to write {path}: {e}");
+                std::process::exit(1);
+            }
+            println!("wrote {path}");
+        }
+        None => println!("{}", doc.to_string_pretty()),
+    }
+}

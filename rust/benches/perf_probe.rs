@@ -28,6 +28,11 @@
 use dilocox::comm::ring::build_ring;
 use dilocox::compress::{GroupReducer, Method};
 use dilocox::config::{Algo, NetworkConfig};
+use dilocox::obs;
+use dilocox::pipeline::exec::{
+    local_stage_rings, run_pipeline, PipelineRunOpts, SyntheticPipeline,
+};
+use dilocox::pipeline::{self, OpKind, ScheduleKind};
 use dilocox::runtime::manifest::ParamEntry;
 use dilocox::runtime::Runtime;
 use dilocox::sim::{self, ScaleConfig, SimAlgo};
@@ -78,6 +83,7 @@ fn main() {
     sections.push(("ring_topology", bench_ring_topology()));
     sections.push(("reduce", bench_reduce()));
     sections.push(("des", bench_des()));
+    sections.push(("pipeline_schedule", bench_pipeline_schedule()));
     sections.push(("step_single", bench_step_single()));
     sections.push(("traced_overhead", bench_traced_overhead()));
 
@@ -165,6 +171,43 @@ fn baseline_metrics(doc: &Json) -> Vec<(String, f64, bool)> {
     }
     if let Some(ms) = doc.path("sections.des.ms_per_run").and_then(Json::as_f64) {
         out.push(("des.ms_per_run".to_string(), ms, false));
+    }
+    if let Some(rows) =
+        doc.path("sections.pipeline_schedule.rows").and_then(Json::as_arr)
+    {
+        for r in rows {
+            let Some(s) = r.get("schedule").and_then(Json::as_str) else {
+                continue;
+            };
+            // Deterministic schedule math: guarded.  Wall clock: not.
+            if let Some(mk) = r.get("modeled_makespan").and_then(Json::as_f64) {
+                out.push((
+                    format!("pipeline_schedule[{s}].modeled_makespan"),
+                    mk,
+                    true,
+                ));
+            }
+            if let Some(ms) = r.get("ms_per_round").and_then(Json::as_f64) {
+                out.push((
+                    format!("pipeline_schedule[{s}].ms_per_round"),
+                    ms,
+                    false,
+                ));
+            }
+        }
+    }
+    if let Some(r) = doc
+        .path("sections.pipeline_schedule.zb_speedup_vs_1f1b_modeled")
+        .and_then(Json::as_f64)
+    {
+        // Stored inverted (1/speedup) so "bigger is worse" matches the
+        // gate's regression direction: a future schedule change that
+        // erodes the zero-bubble win shows up as this row growing.
+        out.push((
+            "pipeline_schedule.inv_zb_speedup_modeled".to_string(),
+            1.0 / r,
+            true,
+        ));
     }
     if let Some(ms) = doc
         .path("sections.step_single.ms_wall_per_call")
@@ -412,6 +455,142 @@ fn bench_des() -> Json {
     obj(vec![
         ("ms_per_run", Json::Num(ms_per_run)),
         ("fig4", Json::Arr(fig4)),
+    ])
+}
+
+/// Unit-cost list-scheduled makespan of a schedule's op streams: a full
+/// stage forward costs 1, a fused backward 2 (input + weight grads), a
+/// split backward 1 + 1; interleaved chunk ops cost 1/v of a full-stage
+/// op (the chunk is 1/v of the model).  Fully deterministic — the same
+/// dependency oracle the executor validates against, no wall clock —
+/// so these rows reproduce bit-for-bit and the `--check` gate guards
+/// the schedule math itself.
+fn modeled_makespan(kind: ScheduleKind, execs: usize, v: usize, micros: usize) -> f64 {
+    let streams = kind.streams(execs, v, micros).expect("schedule");
+    let split = pipeline::splits_backward(&streams);
+    let mut clock = vec![0.0f64; execs];
+    pipeline::execute_streams(
+        &streams,
+        micros,
+        |c, a: Option<&f64>, b: Option<&f64>| {
+            let dur = match c.op {
+                OpKind::F => 1.0,
+                OpKind::B if split => 1.0,
+                OpKind::B => 2.0,
+                OpKind::W => 1.0,
+            } / v as f64;
+            let ready =
+                a.copied().unwrap_or(0.0).max(b.copied().unwrap_or(0.0));
+            let start = clock[c.stage].max(ready);
+            clock[c.stage] = start + dur;
+            clock[c.stage]
+        },
+    )
+    .expect("valid schedule");
+    clock.into_iter().fold(0.0, f64::max)
+}
+
+/// The four microbatch schedules head-to-head on the real threaded
+/// executor (S = 4 executors, M = 8 microbatches, dp = 1 so compute
+/// dominates): deterministic modeled makespans (guarded rows) plus
+/// measured wall time and the trace-measured bubble fraction per round.
+/// Every row drives the same total model and burn work — the
+/// interleaved row cuts it into 2x more chunks of half the size, the
+/// Megatron virtual-stage semantics.
+fn bench_pipeline_schedule() -> Json {
+    const EXECS: usize = 4;
+    const MICROS: usize = 8;
+    let specs = [
+        (ScheduleKind::GPipe, 1usize),
+        (ScheduleKind::OneFOneB, 1),
+        (ScheduleKind::Interleaved, 2),
+        (ScheduleKind::ZeroBubble, 1),
+    ];
+    let mut rows = Vec::new();
+    let mut wall_ms: Vec<(ScheduleKind, f64)> = Vec::new();
+    for (kind, v) in specs {
+        let makespan = modeled_makespan(kind, EXECS, v, MICROS);
+        // Per-executor busy time is schedule-invariant (3 cost units per
+        // microbatch), so makespan overhang IS the bubble.
+        let work = 3.0 * MICROS as f64;
+        let modeled_bubble = (makespan - work) / makespan;
+        let ideal_bubble = kind.ideal_bubble_fraction(EXECS, v, MICROS);
+
+        // Same model, same burn work on every row: EXECS*v chunks of
+        // dim 512/v, each op burning 200/v passes.
+        let wl = SyntheticPipeline::new(EXECS * v, MICROS, 512 / v, SEED)
+            .with_compute_passes(200 / v);
+        let opts = PipelineRunOpts {
+            rounds: 2,
+            local_steps: 4,
+            schedule: kind,
+            virtual_stages: v,
+            ..PipelineRunOpts::default()
+        };
+        obs::set_enabled(true);
+        obs::drain();
+        let t0 = Instant::now();
+        let out =
+            run_pipeline(&wl, 1, local_stage_rings(1, EXECS * v), &opts)
+                .expect("schedule bench run");
+        let wall = t0.elapsed().as_secs_f64();
+        let events = obs::drain();
+        obs::set_enabled(false);
+        let acct = obs::report::round_accounting(&events);
+        let measured_bubble = if acct.is_empty() {
+            0.0
+        } else {
+            acct.iter().map(|a| a.bubble_fraction).sum::<f64>()
+                / acct.len() as f64
+        };
+        let ms_per_round = 1e3 * wall / opts.rounds as f64;
+        wall_ms.push((kind, ms_per_round));
+        println!(
+            "pipeline_schedule[{}] (S={EXECS}, M={MICROS}, v={v}): modeled \
+             makespan {makespan:.2}, bubble modeled {modeled_bubble:.3} / \
+             measured {measured_bubble:.3}, {ms_per_round:.1} ms/round, \
+             final eval {:.3e}",
+            kind.name(),
+            out.final_eval
+        );
+        rows.push(obj(vec![
+            ("schedule", Json::Str(kind.name().to_string())),
+            ("virtual_stages", Json::Num(v as f64)),
+            ("modeled_makespan", Json::Num(makespan)),
+            ("modeled_bubble", Json::Num(modeled_bubble)),
+            ("ideal_bubble", Json::Num(ideal_bubble)),
+            ("ms_per_round", Json::Num(ms_per_round)),
+            ("measured_bubble", Json::Num(measured_bubble)),
+        ]));
+    }
+    let ms_of = |k: ScheduleKind| {
+        wall_ms.iter().find(|(kk, _)| *kk == k).map(|&(_, ms)| ms).unwrap()
+    };
+    let modeled_speedup = modeled_makespan(
+        ScheduleKind::OneFOneB,
+        EXECS,
+        1,
+        MICROS,
+    ) / modeled_makespan(ScheduleKind::ZeroBubble, EXECS, 1, MICROS);
+    let measured_speedup =
+        ms_of(ScheduleKind::OneFOneB) / ms_of(ScheduleKind::ZeroBubble);
+    // The headline claim, asserted on the deterministic model (33/27 at
+    // S=4, M=8); the measured ratio is reported but never gated — wall
+    // clock on a shared runner is noise.
+    assert!(
+        modeled_speedup >= 1.2,
+        "zero-bubble modeled speedup {modeled_speedup:.3} < 1.2x over 1F1B"
+    );
+    println!(
+        "pipeline_schedule: zero-bubble vs 1f1b speedup {modeled_speedup:.3}x \
+         modeled, {measured_speedup:.3}x measured"
+    );
+    obj(vec![
+        ("executors", Json::Num(EXECS as f64)),
+        ("micros", Json::Num(MICROS as f64)),
+        ("rows", Json::Arr(rows)),
+        ("zb_speedup_vs_1f1b_modeled", Json::Num(modeled_speedup)),
+        ("zb_speedup_vs_1f1b_measured", Json::Num(measured_speedup)),
     ])
 }
 

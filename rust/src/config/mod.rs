@@ -53,9 +53,17 @@ pub struct ParallelConfig {
     /// match the artifact manifest (see
     /// [`ExperimentConfig::validate_with_manifest`]).
     pub pp: usize,
-    /// U — in-flight microbatches per inner step on the 1F1B schedule
-    /// (only meaningful with `pp > 1`; must be ≥ 1).
+    /// U — in-flight microbatches per inner step of the pipeline
+    /// schedule (only meaningful with `pp > 1`; must be ≥ 1).
     pub microbatches: usize,
+    /// Pipeline schedule: `gpipe`, `1f1b`, `interleaved` (virtual-stage
+    /// 1F1B), or `zero-bubble` (ZB-H1 split backward).  Parsed by
+    /// [`crate::pipeline::ScheduleKind::parse`].
+    pub schedule: String,
+    /// v — virtual stages (model chunks) per executor.  Must be 1 unless
+    /// `schedule = "interleaved"`; must divide `pp`, and `microbatches`
+    /// must be a multiple of the executor count `pp / v` when v > 1.
+    pub virtual_stages: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -323,7 +331,13 @@ impl ExperimentConfig {
             preset: preset.to_string(),
             artifacts_dir: format!("artifacts/{preset}"),
             algo,
-            parallel: ParallelConfig { dp, pp: 1, microbatches: 1 },
+            parallel: ParallelConfig {
+                dp,
+                pp: 1,
+                microbatches: 1,
+                schedule: "1f1b".into(),
+                virtual_stages: 1,
+            },
             train: TrainConfig {
                 outer_steps: 8,
                 local_steps,
@@ -384,6 +398,10 @@ impl ExperimentConfig {
         set_usize!("parallel.dp", cfg.parallel.dp);
         set_usize!("parallel.pp", cfg.parallel.pp);
         set_usize!("parallel.microbatches", cfg.parallel.microbatches);
+        if let Some(s) = v.path("parallel.schedule").and_then(|j| j.as_str()) {
+            cfg.parallel.schedule = s.to_string();
+        }
+        set_usize!("parallel.virtual_stages", cfg.parallel.virtual_stages);
         set_usize!("train.outer_steps", cfg.train.outer_steps);
         set_usize!("train.local_steps", cfg.train.local_steps);
         set_f32!("train.inner_lr", cfg.train.inner_lr);
@@ -490,9 +508,38 @@ impl ExperimentConfig {
         }
         if self.parallel.microbatches == 0 {
             return Err(anyhow!(
-                "parallel.microbatches must be >= 1 (the 1F1B schedule \
+                "parallel.microbatches must be >= 1 (the pipeline schedule \
                  needs at least one in-flight microbatch)"
             ));
+        }
+        let kind = crate::pipeline::ScheduleKind::parse(&self.parallel.schedule)
+            .map_err(|e| anyhow!("parallel.schedule: {e}"))?;
+        let v = self.parallel.virtual_stages;
+        if v == 0 {
+            return Err(anyhow!("parallel.virtual_stages must be >= 1"));
+        }
+        if v > 1 {
+            if kind != crate::pipeline::ScheduleKind::Interleaved {
+                return Err(anyhow!(
+                    "parallel.virtual_stages = {v} needs parallel.schedule = \
+                     \"interleaved\" (got \"{}\")",
+                    self.parallel.schedule
+                ));
+            }
+            if self.parallel.pp % v != 0 {
+                return Err(anyhow!(
+                    "parallel.virtual_stages = {v} must divide parallel.pp = {}",
+                    self.parallel.pp
+                ));
+            }
+            let execs = self.parallel.pp / v;
+            if self.parallel.microbatches % execs != 0 {
+                return Err(anyhow!(
+                    "interleaved schedule needs parallel.microbatches ({}) \
+                     to be a multiple of the executor count pp/v = {execs}",
+                    self.parallel.microbatches
+                ));
+            }
         }
         if self.train.outer_steps == 0 || self.train.local_steps == 0 {
             return Err(anyhow!("outer_steps and local_steps must be >= 1"));

@@ -330,6 +330,8 @@ pub fn run_threaded_pp(
     )?;
     let dp = cfg.parallel.dp;
     let rings = local_stage_rings(dp, workload.stages());
+    let schedule = crate::pipeline::ScheduleKind::parse(&cfg.parallel.schedule)
+        .map_err(|e| anyhow!(e))?;
     let opts = PipelineRunOpts {
         rounds: cfg.train.outer_steps,
         local_steps: cfg.train.local_steps,
@@ -343,6 +345,8 @@ pub fn run_threaded_pp(
         seed: cfg.train.seed,
         comm_pool_size: cfg.transport.comm_pool_size,
         pipeline_depth: cfg.transport.pipeline_depth,
+        schedule,
+        virtual_stages: cfg.parallel.virtual_stages.max(1),
     };
     let out = run_pipeline(&workload, dp, rings, &opts)?;
 

@@ -196,6 +196,8 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
     .opt("report", "", "write a run report JSON (incl. stage wall times) here")
     .opt("trace", "", "enable tracing and write the merged Chrome-trace JSON here (tcp)")
     .opt("reduce-topology", "", "flat | reordered | hier (default: config [transport])")
+    .opt("schedule", "", "gpipe | 1f1b | interleaved | zero-bubble (default: config [parallel])")
+    .opt("virtual-stages", "", "model chunks v per executor (default: config [parallel])")
     .opt("sites", "", "tcp: comma-separated per-rank site tags, e.g. 0,0,1,1 (hier)")
     .flag("synthetic", "tcp: force the synthetic workload (affine chain with --pp > 1)");
     let args = match spec.parse(argv) {
@@ -225,6 +227,18 @@ fn cmd_coordinate(argv: &[String]) -> i32 {
         // Stored as the config string; validate() below rejects unknown
         // spellings with the same message as a bad TOML value.
         cfg.transport.reduce_topology = args.get("reduce-topology").to_string();
+    }
+    if !args.get("schedule").is_empty() {
+        cfg.parallel.schedule = args.get("schedule").to_string();
+    }
+    if !args.get("virtual-stages").is_empty() {
+        cfg.parallel.virtual_stages = match args.get_usize("virtual-stages") {
+            Ok(v) => v.max(1),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
     }
     if !args.get("kill-round").is_empty() {
         cfg.faults.enabled = true;
@@ -607,7 +621,9 @@ fn cmd_worker(argv: &[String]) -> i32 {
     .opt("rank", "0", "worker rank (cluster id)")
     .opt("stage", "0", "pipeline stage of this process (with --stages > 1)")
     .opt("stages", "1", "pipeline stages M; > 1 joins the stage-parallel fleet")
-    .opt("micros", "1", "in-flight microbatches U (1F1B, with --stages > 1)")
+    .opt("micros", "1", "in-flight microbatches U (with --stages > 1)")
+    .opt("schedule", "1f1b", "gpipe | 1f1b | interleaved | zero-bubble")
+    .opt("virtual-stages", "1", "model chunks v per executor (interleaved)")
     .opt("listen-base", "0", "deterministic listener base port (0 = ephemeral)")
     .opt("rounds", "8", "outer rounds T")
     .opt("local-steps", "8", "inner steps H per round")
@@ -714,6 +730,8 @@ fn stage_worker_opts_from_args(
         stage: args.get_usize("stage")? as u32,
         stages: stages as u32,
         micros: args.get_usize("micros")?.max(1),
+        schedule: args.get("schedule").to_string(),
+        virtual_stages: args.get_usize("virtual-stages")?.max(1),
         listen_base: listen_base as u16,
     })
 }

@@ -23,6 +23,10 @@ pub struct Topology {
     /// Intra-cluster stage-to-stage links: index [cluster][stage] connects
     /// stage -> stage+1.
     pub intra: Vec<Vec<Link>>,
+    /// Per-cluster wrap-around link (last stage -> stage 0), used only by
+    /// interleaved virtual-stage schedules that hand the last model chunk's
+    /// activations back to executor 0.
+    pub wrap: Vec<Link>,
     /// One shared WAN "bus" per ring direction between adjacent clusters:
     /// inter[c] connects cluster c -> (c+1) % C.
     pub inter: Vec<Link>,
@@ -49,6 +53,15 @@ impl Topology {
             }
             intra.push(links);
         }
+        let wrap = (0..clusters)
+            .map(|c| {
+                Link::new(
+                    format!("intra[c{c},{}->0]", stages.saturating_sub(1)),
+                    net.intra_bw_gbps,
+                    0.01,
+                )
+            })
+            .collect();
         let inter = (0..clusters)
             .map(|c| {
                 Link::new(
@@ -58,7 +71,7 @@ impl Topology {
                 )
             })
             .collect();
-        Topology { clusters, stages, gpus, comm_engines, intra, inter }
+        Topology { clusters, stages, gpus, comm_engines, intra, wrap, inter }
     }
 
     pub fn gpu_index(&self, w: WorkerId) -> usize {
@@ -78,6 +91,11 @@ impl Topology {
     /// Link used by stage s -> s+1 inside cluster c.
     pub fn intra_link(&mut self, c: usize, s: usize) -> &mut Link {
         &mut self.intra[c][s]
+    }
+
+    /// Wrap link used by the last stage -> stage 0 inside cluster c.
+    pub fn wrap_link(&mut self, c: usize) -> &mut Link {
+        &mut self.wrap[c]
     }
 
     /// WAN link leaving cluster c toward (c+1) % C.

@@ -7,8 +7,9 @@
 //! instrumentation records:
 //!
 //! * **compute** — the driver's `"compute"` span (H inner steps; the
-//!   finer `fwd`/`bwd` pipeline spans nest *inside* it and are detail,
-//!   not accounting, to avoid double counting);
+//!   finer `fwd`/`bwd`/`wgrad` pipeline spans nest *inside* it and are
+//!   not summed into the phase totals, to avoid double counting — but
+//!   they DO feed the measured pipeline bubble fraction below);
 //! * **compress** — `"compress.*"` (projection/quantization passes);
 //! * **wire** — `"allreduce"` (one span per collective, carrying the
 //!   compressed payload bytes; the per-hop `"hop"` spans nest inside);
@@ -20,6 +21,15 @@
 //! overlapped *any* compute interval of the same cluster — 0 in sync
 //! mode, approaching 1 when one-step-delay overlap fully hides the
 //! reduction of round t under the compute of round t+1.
+//!
+//! The **bubble fraction** of round t is measured from the pipeline op
+//! spans (`fwd`, `bwd`, `wgrad` — link stalls excluded): with busy time
+//! summed over every stage and the round's pipeline window taken per
+//! cluster from first op start to last op end,
+//! `bubble = 1 − Σ busy / Σ_c (stages_c · window_c)`.  It is 0 when the
+//! round ran no pipeline ops (dp-only training), ≈(S−1)/(M+S−1) for
+//! GPipe/1F1B, shrinking with interleaved virtual stages and toward
+//! the α/β ratio noise floor for the zero-bubble schedule.
 
 use super::TraceEvent;
 use crate::metrics::Table;
@@ -43,7 +53,14 @@ pub struct RoundAccount {
     pub wire_bytes: u64,
     /// Fraction of wire time overlapped by same-cluster compute.
     pub hiding_ratio: f64,
+    /// Measured pipeline bubble: 1 − Σ op busy / Σ (stages · window).
+    pub bubble_fraction: f64,
 }
+
+/// Pipeline op spans counted as busy time for the bubble fraction.
+/// `link.acts` / `link.grads` are stalls (waiting on a peer stage) and
+/// deliberately excluded — they ARE the bubble.
+const PIPELINE_OPS: [&str; 3] = ["fwd", "bwd", "wgrad"];
 
 fn secs(e: &TraceEvent) -> f64 {
     e.dur_us as f64 / 1e6
@@ -92,6 +109,12 @@ pub fn round_accounting(events: &[TraceEvent]) -> Vec<RoundAccount> {
     let mut acct: BTreeMap<u32, RoundAccount> = BTreeMap::new();
     let mut wire_us: BTreeMap<u32, u64> = BTreeMap::new();
     let mut hidden_us: BTreeMap<u32, u64> = BTreeMap::new();
+    // Bubble accounting: per-round busy op time, plus per-(round,
+    // cluster) pipeline window and the distinct stages that ran ops.
+    let mut pipe_busy_us: BTreeMap<u32, u64> = BTreeMap::new();
+    let mut pipe_window: BTreeMap<(u32, u32), (u64, u64)> = BTreeMap::new();
+    let mut pipe_stages: BTreeMap<(u32, u32), std::collections::BTreeSet<u32>> =
+        BTreeMap::new();
     for e in events {
         let a = acct.entry(e.round).or_insert_with(|| RoundAccount {
             round: e.round,
@@ -114,12 +137,41 @@ pub fn round_accounting(events: &[TraceEvent]) -> Vec<RoundAccount> {
         } else if e.phase.starts_with("recovery.") {
             a.recovery_secs += secs(e);
         }
+        if PIPELINE_OPS.contains(&e.phase.as_str()) {
+            *pipe_busy_us.entry(e.round).or_default() += e.dur_us;
+            let end = e.start_us + e.dur_us;
+            pipe_window
+                .entry((e.round, e.cluster))
+                .and_modify(|w| {
+                    w.0 = w.0.min(e.start_us);
+                    w.1 = w.1.max(end);
+                })
+                .or_insert((e.start_us, end));
+            pipe_stages.entry((e.round, e.cluster)).or_default().insert(e.stage);
+        }
     }
     for (round, a) in acct.iter_mut() {
         let w = wire_us.get(round).copied().unwrap_or(0);
         if w > 0 {
             a.hiding_ratio =
                 hidden_us.get(round).copied().unwrap_or(0) as f64 / w as f64;
+        }
+        // Slot capacity: every stage of a cluster could have been busy
+        // for the cluster's whole pipeline window.
+        let capacity_us: u64 = pipe_window
+            .range((*round, 0)..=(*round, u32::MAX))
+            .map(|(&(_, c), &(start, end))| {
+                let stages = pipe_stages
+                    .get(&(*round, c))
+                    .map(|s| s.len() as u64)
+                    .unwrap_or(0);
+                stages * (end - start)
+            })
+            .sum();
+        if capacity_us > 0 {
+            let busy = pipe_busy_us.get(round).copied().unwrap_or(0);
+            a.bubble_fraction =
+                (1.0 - busy as f64 / capacity_us as f64).max(0.0);
         }
     }
     acct.into_values().collect()
@@ -129,7 +181,7 @@ pub fn round_accounting(events: &[TraceEvent]) -> Vec<RoundAccount> {
 pub fn accounting_table(accounts: &[RoundAccount]) -> String {
     let mut t = Table::new(&[
         "round", "compute s", "compress s", "wire s", "barrier s",
-        "recovery s", "wire bytes", "hiding",
+        "recovery s", "wire bytes", "hiding", "bubble",
     ]);
     for a in accounts {
         t.row(&[
@@ -141,6 +193,7 @@ pub fn accounting_table(accounts: &[RoundAccount]) -> String {
             format!("{:.3}", a.recovery_secs),
             a.wire_bytes.to_string(),
             format!("{:.2}", a.hiding_ratio),
+            format!("{:.3}", a.bubble_fraction),
         ]);
     }
     t.render()
@@ -161,6 +214,7 @@ pub fn accounting_json(accounts: &[RoundAccount]) -> Json {
                     ("recovery_secs", Json::Num(a.recovery_secs)),
                     ("wire_bytes", Json::Num(a.wire_bytes as f64)),
                     ("hiding_ratio", Json::Num(a.hiding_ratio)),
+                    ("bubble_fraction", Json::Num(a.bubble_fraction)),
                 ])
             })
             .collect(),
@@ -356,6 +410,38 @@ mod tests {
         assert_eq!(r1.wire_bytes, 512);
         let r2 = &acct[1];
         assert!((r2.recovery_secs - 5e-5).abs() < 1e-9);
+    }
+
+    fn ev_stage(
+        stage: u32,
+        round: u32,
+        phase: &str,
+        start_us: u64,
+        dur_us: u64,
+    ) -> TraceEvent {
+        TraceEvent { stage, ..ev(0, round, phase, start_us, dur_us, 0) }
+    }
+
+    #[test]
+    fn bubble_fraction_is_idle_slot_share() {
+        // Two stages over a [0..300] window: 4 ops of 100us each fill
+        // 400 of the 600 stage-slots, so the bubble is 1/3.  Link
+        // stalls must not count as busy.
+        let events = vec![
+            ev_stage(0, 1, "fwd", 0, 100),
+            ev_stage(0, 1, "bwd", 200, 100),
+            ev_stage(1, 1, "fwd", 100, 100),
+            ev_stage(1, 1, "link.grads", 200, 50),
+            ev_stage(1, 1, "wgrad", 250, 50),
+            ev_stage(1, 1, "bwd", 200, 50),
+        ];
+        let acct = round_accounting(&events);
+        assert_eq!(acct.len(), 1);
+        assert!((acct[0].bubble_fraction - 1.0 / 3.0).abs() < 1e-9);
+
+        // No pipeline ops at all: bubble reads 0, not NaN.
+        let flat = vec![ev(0, 1, "compute", 0, 100, 0)];
+        assert_eq!(round_accounting(&flat)[0].bubble_fraction, 0.0);
     }
 
     #[test]

@@ -1,12 +1,13 @@
-//! Stage-parallel 1F1B executor: pipeline parallelism run for real.
+//! Stage-parallel pipeline executor: microbatch schedules run for real.
 //!
 //! Each DP cluster runs its model as `stages` stage executors — one OS
-//! thread per stage — each executing its own 1F1B op stream
-//! ([`super::one_f_one_b_schedule`]) in order.  Activations flow down and
-//! grad-activations flow up over blocking mpsc channels, which realize
-//! exactly the dependency rules that [`super::execute_streams`] encodes
-//! for the validator and the DES: a stage's next op blocks until its
-//! upstream forward (or downstream backward) has delivered.
+//! thread per executor — each executing its own op stream (any
+//! [`super::ScheduleKind`]: GPipe, 1F1B, interleaved virtual stages, or
+//! zero-bubble) in order.  Activations flow down and grad-activations
+//! flow up over blocking mpsc channels, which realize exactly the
+//! dependency rules that [`super::execute_streams`] encodes for the
+//! validator and the DES: a stage's next op blocks until its upstream
+//! forward (or downstream backward) has delivered.
 //!
 //! The paper's §2.2 Dual Optimizer Policy is realized literally: every
 //! stage thread holds ONLY its own parameter shard plus its slice of
@@ -20,39 +21,47 @@
 //! stage's collective runs on its own comm thread while the stage trains
 //! the next H local steps.
 //!
-//! Workloads implement [`PipelineWorkload`]/[`StageCompute`]: the PJRT
-//! artifact-backed implementation lives in [`crate::coordinator`]; the
-//! [`SyntheticPipeline`] here (a depth-M affine chain with per-worker
-//! targets) exercises the full executor — schedule, channels, per-stage
-//! duals, ring reduction, overlap — with no artifacts at all.
+//! # Virtual stages (interleaved schedules)
 //!
-//! Data-bearing stages (first and last) must draw identical input
-//! streams: they are constructed with the same seed and advance in
-//! lockstep (one draw per inner step), so the tokens consumed at stage 0
-//! and the labels consumed at the last stage always belong to the same
-//! microbatch.
+//! Under `virtual_stages = v > 1` an executor owns `v` model *chunks*:
+//! chunk c on executor s is model stage `c·S + s`, so consecutive chunks
+//! wrap from executor S−1 back to executor 0 (the Megatron virtual
+//! pipeline layout).  The executor holds per-chunk [`StageCompute`]s and
+//! parameter shards ([`StageChunk`]) concatenated into one flat vector —
+//! one inner AdamW, one round engine, one lane — while the DP reduction
+//! stays *per model stage*: [`ChunkedRing`] splits the concatenated
+//! pseudo-gradient at chunk boundaries and reduces each slice over the
+//! (stage, chunk) ring, so an interleaved run is bit-for-bit identical
+//! to the same model run un-interleaved.
 //!
-//! # The 1F1B stream format (executor contract)
+//! # Split backward (zero-bubble schedules)
+//!
+//! Zero-bubble streams carry `B` (input-grad) and `W` (weight-grad)
+//! cells.  Computes that implement
+//! [`StageCompute::backward_input`]/[`StageCompute::backward_weight`]
+//! (and report [`StageCompute::supports_split_backward`]) run them
+//! separately — the upstream stage unblocks after the cheap input-grad
+//! half.  Computes that can't split (the PJRT artifact path) fall back
+//! transparently: the fused backward runs at the `B` cell and the `W`
+//! cell just collects the already-computed weight gradient, so every
+//! workload runs every schedule.
+//!
+//! # The stream format (executor contract)
 //!
 //! A stage executor consumes one `Vec<Cell>` — *its own* per-stage op
-//! stream from [`one_f_one_b_schedule`], validated up front by
-//! [`super::validate_schedule`] — strictly in order.  For every forward
-//! cell it first receives the upstream activations (unless it is stage
-//! 0), runs [`StageCompute::forward`], and ships the result downstream
-//! (unless it is the last stage); for every backward cell it first
-//! receives the downstream grad-activations (unless last), runs
-//! [`StageCompute::backward`], accumulates the parameter gradient, and
-//! ships grad-activations upstream (unless stage 0).  Each message
-//! carries its microbatch index and executors verify it against the
-//! cell's, so a mis-ordered wire is an error, never silent corruption.
-//! The blocking receive realizes exactly the dependency rules that
-//! [`super::execute_streams`] encodes for the validator and the DES.
+//! stream, validated up front by [`super::validate_schedule`] — strictly
+//! in order.  Messages carry (chunk, micro) tags; receives route through
+//! a stash so an executor interleaving two chunks never mis-binds a
+//! frame, and a mis-tagged wire is an error, never silent corruption.
+//! Gradient accumulation is per-(chunk, micro) slots summed in a fixed
+//! order after the stream completes, so every schedule — whatever order
+//! its backwards ran in — produces bit-identical gradients.
 //!
 //! # StageLink: wire-agnostic activation transport
 //!
 //! The executor speaks to its pipeline neighbors only through the
-//! [`StageLink`] trait (send/recv of microbatch-indexed activations and
-//! grad-activations).  Two wires implement it: [`MpscStageLink`] —
+//! [`StageLink`] trait (send/recv of (chunk, micro)-tagged activations
+//! and grad-activations).  Two wires implement it: [`MpscStageLink`] —
 //! in-process blocking channels, used by [`run_pipeline`]'s one thread
 //! per (worker, stage) — and
 //! [`TcpStageLink`](crate::transport::tcp::TcpStageLink) —
@@ -66,15 +75,15 @@
 use crate::comm::ring::build_ring;
 use crate::compress::Method;
 use crate::optim::{AdamW, DualOptimizer};
-use crate::pipeline::{one_f_one_b_schedule, validate_schedule, Cell};
+use crate::pipeline::{validate_schedule, Cell, OpKind, ScheduleKind};
 use crate::rounds::driver::{EpochEnd, RoundDriver, RoundTelemetry, RoundWork};
 use crate::rounds::{RingLane, RoundEngine};
 use crate::runtime::manifest::ParamEntry;
-use crate::transport::RingTransport;
+use crate::transport::{ByteMeter, RingTransport};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -112,21 +121,49 @@ pub trait StageCompute {
         micro: usize,
         acts_in: Option<Vec<f32>>,
     ) -> Result<Option<Vec<f32>>>;
-    /// Backward one microbatch.  `grad_in` is `None` on the last stage.
-    /// Returns (parameter gradients, grad-activations to ship upstream
-    /// (`None` on stage 0), microbatch loss (`Some` on the last stage)).
+    /// Fused backward one microbatch.  `grad_in` is `None` on the last
+    /// stage.  Returns (parameter gradients, grad-activations to ship
+    /// upstream (`None` on stage 0), microbatch loss (`Some` on the last
+    /// stage)).
     fn backward(
         &mut self,
         params: &[f32],
         micro: usize,
         grad_in: Option<Vec<f32>>,
     ) -> Result<(Vec<f32>, Option<Vec<f32>>, Option<f32>)>;
+    /// True when this compute implements the split backward
+    /// ([`Self::backward_input`] + [`Self::backward_weight`]).  The
+    /// executor uses the fused [`Self::backward`] fallback on zero-bubble
+    /// schedules otherwise.
+    fn supports_split_backward(&self) -> bool {
+        false
+    }
+    /// Input-grad half of a split backward: everything the *upstream*
+    /// stage is waiting for.  Returns (grad-activations to ship upstream
+    /// (`None` on stage 0), microbatch loss (`Some` on the last stage)).
+    /// The weight gradient must be deferred to
+    /// [`Self::backward_weight`].
+    fn backward_input(
+        &mut self,
+        _params: &[f32],
+        micro: usize,
+        _grad_in: Option<Vec<f32>>,
+    ) -> Result<(Option<Vec<f32>>, Option<f32>)> {
+        Err(anyhow!("split backward unsupported (micro {micro})"))
+    }
+    /// Weight-grad half of a split backward for a microbatch whose
+    /// [`Self::backward_input`] already ran.  Returns the parameter
+    /// gradients.
+    fn backward_weight(&mut self, _params: &[f32], micro: usize) -> Result<Vec<f32>> {
+        Err(anyhow!("split backward unsupported (micro {micro})"))
+    }
 }
 
 /// A model partitioned into pipeline stages: builds per-(worker, stage)
 /// compute and evaluates assembled full parameter vectors.  `Sync`
 /// because one instance is shared by reference across all stage threads.
 pub trait PipelineWorkload: Sync {
+    /// Number of *model* stages (= executors × virtual stages).
     fn stages(&self) -> usize;
     /// In-flight microbatches per inner step.
     fn micros(&self) -> usize;
@@ -157,6 +194,11 @@ pub struct PipelineRunOpts {
     /// Reduce pipeline depth (1 = sequential per-entry reduce).  See
     /// [`crate::rounds::WireCompressor::set_pipeline_depth`].
     pub pipeline_depth: usize,
+    /// Microbatch schedule the stage executors run.
+    pub schedule: ScheduleKind,
+    /// Model chunks per executor (> 1 only with the interleaved
+    /// schedule); must divide [`PipelineWorkload::stages`].
+    pub virtual_stages: usize,
 }
 
 impl Default for PipelineRunOpts {
@@ -174,6 +216,8 @@ impl Default for PipelineRunOpts {
             seed: 1234,
             comm_pool_size: 1,
             pipeline_depth: 1,
+            schedule: ScheduleKind::OneFOneB,
+            virtual_stages: 1,
         }
     }
 }
@@ -204,8 +248,8 @@ pub struct StageRoundReport {
 pub struct PipelineOutcome {
     pub reports: Vec<StageRoundReport>,
     pub final_eval: f32,
-    /// Worker 0's assembled params (stage concatenation == the single
-    /// flat layout; all workers are verified to agree).
+    /// Worker 0's assembled params (model-stage concatenation == the
+    /// single flat layout; all workers are verified to agree).
     pub final_params: Vec<f32>,
     pub total_wire_bytes: u64,
 }
@@ -219,8 +263,8 @@ pub struct StageTimeSummary {
     /// Mean measured compute seconds per inner step (kernel time only;
     /// see [`StageRoundReport::step_secs`]).
     pub mean_step_secs: f64,
-    /// Slowest (worker, round) sample — the straggler bound the 1F1B
-    /// critical path actually saw.
+    /// Slowest (worker, round) sample — the straggler bound the
+    /// schedule's critical path actually saw.
     pub max_step_secs: f64,
 }
 
@@ -343,35 +387,42 @@ impl PipelineOutcome {
 }
 
 /// One stage executor's view of its pipeline neighbors, independent of
-/// the wire: microbatch-indexed activations flow downstream (stage s →
-/// s+1), grad-activations flow upstream (s+1 → s).  Implementations:
-/// [`MpscStageLink`] (in-process channels) and
+/// the wire: (chunk, micro)-tagged activations flow downstream (stage s
+/// → s+1, wrapping S−1 → 0 between virtual-stage chunks), grad-
+/// activations flow upstream.  Implementations: [`MpscStageLink`]
+/// (in-process channels) and
 /// [`TcpStageLink`](crate::transport::tcp::TcpStageLink)
 /// (length-delimited frames between stage OS processes).
 ///
-/// Contract: `has_upstream()` iff this is not stage 0, `has_downstream()`
-/// iff this is not the last stage; receives block until the neighbor
-/// delivers (or the wire errors — a dead neighbor must surface as `Err`,
-/// never a hang, so the elastic fleet can treat it as churn).
+/// Contract: `has_upstream()`/`has_downstream()` report whether the
+/// corresponding wire exists (chained links omit them at the pipeline
+/// ends; ring links for interleaved schedules always have both);
+/// receives block until the neighbor delivers (or the wire errors — a
+/// dead neighbor must surface as `Err`, never a hang, so the elastic
+/// fleet can treat it as churn).
 pub trait StageLink: Send {
-    /// A stage s−1 exists (this executor receives acts, sends grads).
+    /// A producer of activations exists (stage s−1, or stage S−1 via the
+    /// virtual-stage wrap link).
     fn has_upstream(&self) -> bool;
-    /// A stage s+1 exists (this executor sends acts, receives grads).
+    /// A consumer of activations exists (stage s+1, or stage 0 via the
+    /// virtual-stage wrap link).
     fn has_downstream(&self) -> bool;
-    fn send_acts(&mut self, micro: usize, acts: Vec<f32>) -> Result<()>;
-    fn recv_acts(&mut self) -> Result<(usize, Vec<f32>)>;
-    fn send_grads(&mut self, micro: usize, grads: Vec<f32>) -> Result<()>;
-    fn recv_grads(&mut self) -> Result<(usize, Vec<f32>)>;
+    fn send_acts(&mut self, chunk: usize, micro: usize, acts: Vec<f32>) -> Result<()>;
+    fn recv_acts(&mut self) -> Result<(usize, usize, Vec<f32>)>;
+    fn send_grads(&mut self, chunk: usize, micro: usize, grads: Vec<f32>) -> Result<()>;
+    fn recv_grads(&mut self) -> Result<(usize, usize, Vec<f32>)>;
 }
+
+type TaggedPayload = (usize, usize, Vec<f32>);
 
 /// In-process [`StageLink`]: blocking mpsc channels between the stage
 /// threads of one worker.
 #[derive(Default)]
 pub struct MpscStageLink {
-    acts_rx: Option<mpsc::Receiver<(usize, Vec<f32>)>>,
-    acts_tx: Option<mpsc::Sender<(usize, Vec<f32>)>>,
-    grads_rx: Option<mpsc::Receiver<(usize, Vec<f32>)>>,
-    grads_tx: Option<mpsc::Sender<(usize, Vec<f32>)>>,
+    acts_rx: Option<mpsc::Receiver<TaggedPayload>>,
+    acts_tx: Option<mpsc::Sender<TaggedPayload>>,
+    grads_rx: Option<mpsc::Receiver<TaggedPayload>>,
+    grads_tx: Option<mpsc::Sender<TaggedPayload>>,
 }
 
 impl StageLink for MpscStageLink {
@@ -383,15 +434,15 @@ impl StageLink for MpscStageLink {
         self.acts_tx.is_some()
     }
 
-    fn send_acts(&mut self, micro: usize, acts: Vec<f32>) -> Result<()> {
+    fn send_acts(&mut self, chunk: usize, micro: usize, acts: Vec<f32>) -> Result<()> {
         self.acts_tx
             .as_ref()
             .ok_or_else(|| anyhow!("last stage has no downstream link"))?
-            .send((micro, acts))
+            .send((chunk, micro, acts))
             .map_err(|_| anyhow!("downstream stage hung up"))
     }
 
-    fn recv_acts(&mut self) -> Result<(usize, Vec<f32>)> {
+    fn recv_acts(&mut self) -> Result<TaggedPayload> {
         self.acts_rx
             .as_ref()
             .ok_or_else(|| anyhow!("first stage has no upstream link"))?
@@ -399,15 +450,15 @@ impl StageLink for MpscStageLink {
             .map_err(|_| anyhow!("upstream stage hung up"))
     }
 
-    fn send_grads(&mut self, micro: usize, grads: Vec<f32>) -> Result<()> {
+    fn send_grads(&mut self, chunk: usize, micro: usize, grads: Vec<f32>) -> Result<()> {
         self.grads_tx
             .as_ref()
             .ok_or_else(|| anyhow!("first stage has no upstream link"))?
-            .send((micro, grads))
+            .send((chunk, micro, grads))
             .map_err(|_| anyhow!("upstream stage hung up"))
     }
 
-    fn recv_grads(&mut self) -> Result<(usize, Vec<f32>)> {
+    fn recv_grads(&mut self) -> Result<TaggedPayload> {
         self.grads_rx
             .as_ref()
             .ok_or_else(|| anyhow!("last stage has no downstream link"))?
@@ -417,105 +468,346 @@ impl StageLink for MpscStageLink {
 }
 
 /// Build the intra-worker chain of [`MpscStageLink`]s: element s talks to
-/// s−1 and s+1.
+/// s−1 and s+1; the pipeline ends have no wrap (plain schedules).
 pub fn mpsc_stage_links(stages: usize) -> Vec<MpscStageLink> {
     let mut links: Vec<MpscStageLink> =
         (0..stages).map(|_| MpscStageLink::default()).collect();
     for b in 0..stages.saturating_sub(1) {
-        let (ta, ra) = mpsc::channel();
-        links[b].acts_tx = Some(ta);
-        links[b + 1].acts_rx = Some(ra);
-        let (tg, rg) = mpsc::channel();
-        links[b + 1].grads_tx = Some(tg);
-        links[b].grads_rx = Some(rg);
+        wire_pair(&mut links, b, b + 1);
     }
     links
 }
 
-/// Drive ONE inner step's 1F1B op stream over a stage link: receive and
-/// ship activations / grad-activations per the stream order, accumulate
-/// this stage's parameter gradient into `grad_acc` (summed over
-/// microbatches, *not* yet divided), and return the (loss sum, loss
-/// count, compute seconds) of the step — compute seconds covers only the
-/// time inside [`StageCompute::forward`]/[`StageCompute::backward`], so
-/// per-stage balance is visible instead of every stage reporting the
-/// pipeline critical path.  Shared by the local threaded executor and
-/// the elastic TCP stage workers so both run the identical instruction
+/// Build the intra-worker *ring* of [`MpscStageLink`]s: like
+/// [`mpsc_stage_links`] plus the wrap link S−1 → 0 that interleaved
+/// virtual-stage schedules need (chunk c ends on executor S−1 and chunk
+/// c+1 begins on executor 0).  With one executor the link loops to
+/// itself.
+pub fn mpsc_stage_links_ring(stages: usize) -> Vec<MpscStageLink> {
+    let mut links: Vec<MpscStageLink> =
+        (0..stages).map(|_| MpscStageLink::default()).collect();
+    for b in 0..stages {
+        wire_pair(&mut links, b, (b + 1) % stages);
+    }
+    links
+}
+
+fn wire_pair(links: &mut [MpscStageLink], from: usize, to: usize) {
+    let (ta, ra) = mpsc::channel();
+    links[from].acts_tx = Some(ta);
+    links[to].acts_rx = Some(ra);
+    let (tg, rg) = mpsc::channel();
+    links[to].grads_tx = Some(tg);
+    links[from].grads_rx = Some(rg);
+}
+
+/// DP ring for an executor owning several virtual-stage chunks: splits
+/// each all-reduce at the chunk parameter boundaries and reduces every
+/// slice over that chunk's own sub-ring, so the floating-point schedule
+/// is bit-identical to running the chunks as separate executors.  Built
+/// with either one sub-ring per chunk (threaded executor: the
+/// per-(stage, chunk) rings) or a single shared sub-ring used for every
+/// slice in turn (elastic stage processes: one TCP ring per stage) — the
+/// reduce algebra is identical either way because each slice's
+/// collective sees the same lengths, ranks, and hop order.  Buffers
+/// whose length is not the concatenated parameter size (compressed
+/// payloads, pipelined segments) are reduced whole over the first
+/// sub-ring.
+pub struct ChunkedRing {
+    subs: Vec<Box<dyn RingTransport>>,
+    sizes: Vec<usize>,
+    meter: ByteMeter,
+}
+
+impl ChunkedRing {
+    /// `subs` is one ring per chunk, or exactly one shared ring.
+    pub fn new(subs: Vec<Box<dyn RingTransport>>, sizes: Vec<usize>) -> Result<Self> {
+        if subs.is_empty() || sizes.is_empty() {
+            return Err(anyhow!("chunked ring needs >= 1 sub-ring and chunk"));
+        }
+        if subs.len() != 1 && subs.len() != sizes.len() {
+            return Err(anyhow!(
+                "chunked ring: {} sub-rings for {} chunks",
+                subs.len(),
+                sizes.len()
+            ));
+        }
+        let (r, c) = (subs[0].rank(), subs[0].size());
+        if subs.iter().any(|s| s.rank() != r || s.size() != c) {
+            return Err(anyhow!("chunked ring sub-rings disagree on rank/size"));
+        }
+        Ok(ChunkedRing { subs, sizes, meter: ByteMeter::default() })
+    }
+
+    fn sub_for(&mut self, chunk: usize) -> &mut Box<dyn RingTransport> {
+        let i = if self.subs.len() == 1 { 0 } else { chunk };
+        &mut self.subs[i]
+    }
+}
+
+impl RingTransport for ChunkedRing {
+    fn rank(&self) -> usize {
+        self.subs[0].rank()
+    }
+
+    fn size(&self) -> usize {
+        self.subs[0].size()
+    }
+
+    fn send_next(&mut self, chunk: &[f32]) -> Result<()> {
+        self.subs[0].send_next(chunk)
+    }
+
+    fn recv_prev(&mut self) -> Result<Vec<f32>> {
+        self.subs[0].recv_prev()
+    }
+
+    fn meter(&self) -> &ByteMeter {
+        &self.meter
+    }
+
+    fn begin_round(&mut self, round: usize) -> Result<()> {
+        for s in self.subs.iter_mut() {
+            s.begin_round(round)?;
+        }
+        Ok(())
+    }
+
+    fn recycle(&mut self, buf: Vec<f32>) {
+        self.subs[0].recycle(buf);
+    }
+
+    fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        let before: u64 = self.subs.iter().map(|s| s.meter().total()).sum();
+        let total: usize = self.sizes.iter().sum();
+        let res = if buf.len() == total && self.sizes.len() > 1 {
+            let mut off = 0usize;
+            let sizes = self.sizes.clone();
+            for (c, n) in sizes.into_iter().enumerate() {
+                let (lo, hi) = (off, off + n);
+                self.sub_for(c).allreduce_sum(&mut buf[lo..hi])?;
+                off = hi;
+            }
+            Ok(())
+        } else {
+            self.subs[0].allreduce_sum(buf)
+        };
+        let after: u64 = self.subs.iter().map(|s| s.meter().total()).sum();
+        // Mirror the sub-ring traffic onto this ring's own meter (the
+        // lane reads wire bytes from here).
+        self.meter.add(after.saturating_sub(before));
+        res
+    }
+}
+
+/// One virtual-stage chunk owned by a stage executor: the compute for
+/// model stage `chunk·S + stage` plus its slice [offset, offset+numel)
+/// of the executor's concatenated parameter vector.
+pub struct StageChunk {
+    pub compute: Box<dyn StageCompute>,
+    pub offset: usize,
+    pub numel: usize,
+}
+
+/// Route a (chunk, micro)-tagged receive: deliver the wanted payload,
+/// stashing any frames for other (chunk, micro) pairs until their cell
+/// comes up.  Out-of-order arrival is expected when an executor
+/// interleaves chunks; a *duplicate* tag is a wire error.
+fn recv_routed(
+    stash: &mut HashMap<(usize, usize), Vec<f32>>,
+    chunk: usize,
+    micro: usize,
+    what: &str,
+    mut recv: impl FnMut() -> Result<TaggedPayload>,
+) -> Result<Vec<f32>> {
+    if let Some(p) = stash.remove(&(chunk, micro)) {
+        return Ok(p);
+    }
+    loop {
+        let (c, m, p) = recv()?;
+        if c == chunk && m == micro {
+            return Ok(p);
+        }
+        if stash.insert((c, m), p).is_some() {
+            return Err(anyhow!("duplicate {what} frame for chunk {c} micro {m}"));
+        }
+    }
+}
+
+/// Drive ONE inner step's op stream over a stage link: receive and ship
+/// activations / grad-activations per the stream order, accumulate this
+/// executor's parameter gradient into `grad_acc` (summed over
+/// microbatches in fixed (chunk, micro) order — *not* yet divided), and
+/// return the (loss sum, loss count, compute seconds) of the step —
+/// compute seconds covers only the time inside the
+/// [`StageCompute`] forward/backward calls, so per-stage balance is
+/// visible instead of every stage reporting the pipeline critical path.
+/// `stages` is the executor count S (cells address model stage
+/// `chunk·S + stage`).  Shared by the local threaded executor and the
+/// elastic TCP stage workers so both run the identical instruction
 /// sequence.
 pub fn run_stream_step(
-    compute: &mut dyn StageCompute,
+    chunks: &mut [StageChunk],
     params: &[f32],
     stream: &[Cell],
+    stages: usize,
     link: &mut dyn StageLink,
     grad_acc: &mut [f32],
 ) -> Result<(f64, usize, f64)> {
-    let n = grad_acc.len();
+    let k_total = stages * chunks.len();
+    let split = stream.iter().any(|c| c.op == OpKind::W);
     let mut loss_acc = 0.0f64;
     let mut loss_n = 0usize;
     let mut busy_secs = 0.0f64;
+    // Out-of-order frame stashes and per-(chunk, micro) gradient slots.
+    let mut acts_stash: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+    let mut grads_stash: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+    let mut pending_w: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+    let mut slots: BTreeMap<(usize, usize), Vec<f32>> = BTreeMap::new();
     for cell in stream {
-        if cell.is_forward {
-            let acts_in = if link.has_upstream() {
-                let _s = crate::obs::span("pipeline", "link.acts");
-                let (mi, a) = link.recv_acts()?;
-                if mi != cell.micro {
+        let chunk = chunks
+            .get_mut(cell.chunk)
+            .ok_or_else(|| anyhow!("cell chunk {} out of range", cell.chunk))?;
+        let pslice = &params[chunk.offset..chunk.offset + chunk.numel];
+        let k = cell.model_stage(stages);
+        match cell.op {
+            OpKind::F => {
+                let acts_in = if k > 0 {
+                    if !link.has_upstream() {
+                        return Err(anyhow!(
+                            "model stage {k} needs an upstream link"
+                        ));
+                    }
+                    let _s = crate::obs::span("pipeline", "link.acts");
+                    Some(recv_routed(
+                        &mut acts_stash,
+                        cell.chunk,
+                        cell.micro,
+                        "acts",
+                        || link.recv_acts(),
+                    )?)
+                } else {
+                    None
+                };
+                let t0 = Instant::now();
+                let out = {
+                    let _s = crate::obs::span("pipeline", "fwd");
+                    chunk.compute.forward(pslice, cell.micro, acts_in)?
+                };
+                busy_secs += t0.elapsed().as_secs_f64();
+                if k + 1 < k_total {
+                    let a = out.ok_or_else(|| {
+                        anyhow!("model stage {k} produced no activations")
+                    })?;
+                    // Tag with the RECEIVER's chunk id so routing keys
+                    // match the consumer's own cells.
+                    link.send_acts((k + 1) / stages, cell.micro, a)?;
+                }
+            }
+            OpKind::B => {
+                let grad_in = if k + 1 < k_total {
+                    if !link.has_downstream() {
+                        return Err(anyhow!(
+                            "model stage {k} needs a downstream link"
+                        ));
+                    }
+                    let _s = crate::obs::span("pipeline", "link.grads");
+                    Some(recv_routed(
+                        &mut grads_stash,
+                        cell.chunk,
+                        cell.micro,
+                        "grads",
+                        || link.recv_grads(),
+                    )?)
+                } else {
+                    None
+                };
+                let t0 = Instant::now();
+                let (gp, gout, loss) = {
+                    let _s = crate::obs::span("pipeline", "bwd");
+                    if split && chunk.compute.supports_split_backward() {
+                        let (gout, loss) = chunk
+                            .compute
+                            .backward_input(pslice, cell.micro, grad_in)?;
+                        (None, gout, loss)
+                    } else {
+                        let (gp, gout, loss) =
+                            chunk.compute.backward(pslice, cell.micro, grad_in)?;
+                        (Some(gp), gout, loss)
+                    }
+                };
+                busy_secs += t0.elapsed().as_secs_f64();
+                if let Some(gp) = gp {
+                    if gp.len() != chunk.numel {
+                        return Err(anyhow!(
+                            "stage grad len {} != numel {}",
+                            gp.len(),
+                            chunk.numel
+                        ));
+                    }
+                    if split {
+                        // Fused fallback on a split schedule: hold the
+                        // weight grad for this (chunk, micro)'s W cell.
+                        pending_w.insert((cell.chunk, cell.micro), gp);
+                    } else {
+                        slots.insert((cell.chunk, cell.micro), gp);
+                    }
+                }
+                if k > 0 {
+                    if !link.has_upstream() {
+                        return Err(anyhow!(
+                            "model stage {k} needs an upstream link"
+                        ));
+                    }
+                    let g = gout.ok_or_else(|| {
+                        anyhow!("model stage {k} produced no upstream grads")
+                    })?;
+                    link.send_grads((k - 1) / stages, cell.micro, g)?;
+                }
+                if let Some(l) = loss {
+                    loss_acc += l as f64;
+                    loss_n += 1;
+                }
+            }
+            OpKind::W => {
+                let t0 = Instant::now();
+                let gp = {
+                    let _s = crate::obs::span("pipeline", "wgrad");
+                    if chunk.compute.supports_split_backward() {
+                        chunk.compute.backward_weight(pslice, cell.micro)?
+                    } else {
+                        // The fused fallback already computed it at the
+                        // B cell; the W cell just collects.
+                        pending_w
+                            .remove(&(cell.chunk, cell.micro))
+                            .ok_or_else(|| {
+                                anyhow!(
+                                    "W cell for chunk {} micro {} has no \
+                                     pending fused backward",
+                                    cell.chunk,
+                                    cell.micro
+                                )
+                            })?
+                    }
+                };
+                busy_secs += t0.elapsed().as_secs_f64();
+                if gp.len() != chunk.numel {
                     return Err(anyhow!(
-                        "acts for micro {mi}, expected {}",
-                        cell.micro
+                        "stage grad len {} != numel {}",
+                        gp.len(),
+                        chunk.numel
                     ));
                 }
-                Some(a)
-            } else {
-                None
-            };
-            let t0 = Instant::now();
-            let out = {
-                let _s = crate::obs::span("pipeline", "fwd");
-                compute.forward(params, cell.micro, acts_in)?
-            };
-            busy_secs += t0.elapsed().as_secs_f64();
-            if link.has_downstream() {
-                let a = out.ok_or_else(|| {
-                    anyhow!("stage {} produced no activations", cell.stage)
-                })?;
-                link.send_acts(cell.micro, a)?;
+                slots.insert((cell.chunk, cell.micro), gp);
             }
-        } else {
-            let grad_in = if link.has_downstream() {
-                let _s = crate::obs::span("pipeline", "link.grads");
-                let (mi, g) = link.recv_grads()?;
-                if mi != cell.micro {
-                    return Err(anyhow!(
-                        "grads for micro {mi}, expected {}",
-                        cell.micro
-                    ));
-                }
-                Some(g)
-            } else {
-                None
-            };
-            let t0 = Instant::now();
-            let (gp, gout, loss) = {
-                let _s = crate::obs::span("pipeline", "bwd");
-                compute.backward(params, cell.micro, grad_in)?
-            };
-            busy_secs += t0.elapsed().as_secs_f64();
-            if gp.len() != n {
-                return Err(anyhow!("stage grad len {} != numel {n}", gp.len()));
-            }
-            for (a, b) in grad_acc.iter_mut().zip(&gp) {
-                *a += b;
-            }
-            if link.has_upstream() {
-                let g = gout.ok_or_else(|| {
-                    anyhow!("stage {} produced no upstream grads", cell.stage)
-                })?;
-                link.send_grads(cell.micro, g)?;
-            }
-            if let Some(l) = loss {
-                loss_acc += l as f64;
-                loss_n += 1;
-            }
+        }
+    }
+    // Fixed (chunk, micro) accumulation order: every schedule — whatever
+    // order its backwards ran in — sums the same floats the same way.
+    for ((c, _m), gp) in slots {
+        let off = chunks[c].offset;
+        for (a, b) in grad_acc[off..off + gp.len()].iter_mut().zip(&gp) {
+            *a += b;
         }
     }
     Ok((loss_acc, loss_n, busy_secs))
@@ -523,19 +815,45 @@ pub fn run_stream_step(
 
 /// One stage executor's local work for the shared round driver
 /// ([`crate::rounds::driver::RoundDriver`]): H inner steps of this
-/// stage's 1F1B stream over a [`StageLink`], each followed by one
-/// per-stage inner AdamW step.  Used by BOTH the threaded executor
-/// (`stage_main`) and the elastic stage fleet
+/// executor's op stream over a [`StageLink`], each followed by one inner
+/// AdamW step over the concatenated chunk parameters.  Used by BOTH the
+/// threaded executor (`stage_main`) and the elastic stage fleet
 /// ([`crate::transport::elastic::run_stage_worker`]) so the two
 /// deployments execute the identical instruction sequence — the fleet
 /// swaps `link` per membership epoch, the threaded path never does.
 pub struct StageStepWork {
-    pub compute: Box<dyn StageCompute>,
+    pub chunks: Vec<StageChunk>,
     pub stream: Vec<Cell>,
     pub link: Box<dyn StageLink>,
     pub params: Vec<f32>,
     pub inner: AdamW,
     pub micros: usize,
+    /// Executor count S (cells address model stage `chunk·S + stage`).
+    pub stages: usize,
+}
+
+impl StageStepWork {
+    /// Wrap a single compute (no virtual stages) — the historical shape.
+    pub fn single(
+        compute: Box<dyn StageCompute>,
+        stream: Vec<Cell>,
+        link: Box<dyn StageLink>,
+        params: Vec<f32>,
+        inner: AdamW,
+        micros: usize,
+        stages: usize,
+    ) -> Self {
+        let numel = compute.numel();
+        StageStepWork {
+            chunks: vec![StageChunk { compute, offset: 0, numel }],
+            stream,
+            link,
+            params,
+            inner,
+            micros,
+            stages,
+        }
+    }
 }
 
 impl RoundWork for StageStepWork {
@@ -553,14 +871,17 @@ impl RoundWork for StageStepWork {
         let mut loss_n = 0usize;
         let mut busy_secs = 0.0f64;
         for _ in 0..h {
-            self.compute.next_step()?;
+            for c in self.chunks.iter_mut() {
+                c.compute.next_step()?;
+            }
             let mut grad_acc = vec![0.0f32; n];
             // A dead neighbor surfaces here (link timeout / EOF): churn
             // for the elastic fleet, a hard error for the threaded path.
             let (ls, ln, busy) = run_stream_step(
-                self.compute.as_mut(),
+                &mut self.chunks,
                 &self.params,
                 &self.stream,
+                self.stages,
                 self.link.as_mut(),
                 &mut grad_acc,
             )?;
@@ -581,8 +902,10 @@ impl RoundWork for StageStepWork {
     }
 }
 
-/// Build the per-stage DP rings over the local mpsc backend:
-/// `rings[worker][stage]` — stage s of every worker shares one ring.
+/// Build the per-model-stage DP rings over the local mpsc backend:
+/// `rings[worker][model_stage]` — model stage k of every worker shares
+/// one ring (executors with virtual stages group v of them through
+/// [`ChunkedRing`]).
 pub fn local_stage_rings(dp: usize, stages: usize) -> Vec<Vec<Box<dyn RingTransport>>> {
     let mut rings: Vec<Vec<Box<dyn RingTransport>>> =
         (0..dp).map(|_| Vec::with_capacity(stages)).collect();
@@ -594,26 +917,35 @@ pub fn local_stage_rings(dp: usize, stages: usize) -> Vec<Vec<Box<dyn RingTransp
     rings
 }
 
-/// Run `opts.rounds` outer rounds of stage-parallel 1F1B training:
-/// `dp × stages` executor threads, per-stage dual optimizers, per-stage
-/// ring reduction of pseudo-gradients through the shared round engine.
+/// Run `opts.rounds` outer rounds of stage-parallel training under
+/// `opts.schedule`: `dp × (stages / virtual_stages)` executor threads,
+/// per-executor dual optimizers over concatenated chunk params,
+/// per-model-stage ring reduction of pseudo-gradients through the shared
+/// round engine.  `rings[worker]` carries one ring per *model* stage.
 pub fn run_pipeline(
     workload: &dyn PipelineWorkload,
     dp: usize,
     rings: Vec<Vec<Box<dyn RingTransport>>>,
     opts: &PipelineRunOpts,
 ) -> Result<PipelineOutcome> {
-    let m = workload.stages();
+    let k_total = workload.stages();
     let micros = workload.micros();
-    if dp == 0 || m == 0 {
+    if dp == 0 || k_total == 0 {
         return Err(anyhow!("need at least one worker and one stage"));
     }
     if micros == 0 {
         return Err(anyhow!("need at least one microbatch"));
     }
-    if rings.len() != dp || rings.iter().any(|r| r.len() != m) {
+    let v = opts.virtual_stages.max(1);
+    if k_total % v != 0 {
         return Err(anyhow!(
-            "ring shape mismatch: want {dp} workers x {m} stages"
+            "{k_total} model stages not divisible by {v} virtual stages"
+        ));
+    }
+    let execs = k_total / v;
+    if rings.len() != dp || rings.iter().any(|r| r.len() != k_total) {
+        return Err(anyhow!(
+            "ring shape mismatch: want {dp} workers x {k_total} model stages"
         ));
     }
     if !opts.method.allreduce_compatible() {
@@ -621,19 +953,42 @@ pub fn run_pipeline(
             "stage-parallel path needs AllReduce-compatible compression"
         ));
     }
-    let streams = one_f_one_b_schedule(m, micros);
+    let streams = opts
+        .schedule
+        .streams(execs, v, micros)
+        .map_err(|e| anyhow!("schedule: {e}"))?;
     validate_schedule(&streams, micros)
-        .map_err(|e| anyhow!("invalid 1F1B schedule: {e}"))?;
+        .map_err(|e| anyhow!("invalid {} schedule: {e}", opts.schedule.name()))?;
 
     let (tx_report, rx_report) = mpsc::channel::<StageRoundReport>();
     let results: Vec<Result<(Vec<f32>, u64)>> = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(dp * m);
+        let mut handles = Vec::with_capacity(dp * execs);
         for (w, worker_rings) in rings.into_iter().enumerate() {
-            // Intra-worker links: acts flow s -> s+1, grads s+1 -> s.
-            let links = mpsc_stage_links(m);
-            for (s, (link, ring)) in
-                links.into_iter().zip(worker_rings).enumerate()
+            // Intra-worker links: acts flow s -> s+1, grads s+1 -> s;
+            // virtual stages add the wrap link S−1 -> 0.
+            let links = if v > 1 {
+                mpsc_stage_links_ring(execs)
+            } else {
+                mpsc_stage_links(execs)
+            };
+            // Regroup this worker's per-model-stage rings by executor:
+            // executor s owns model stages {c·S + s}.
+            let mut per_exec: Vec<Vec<Box<dyn RingTransport>>> =
+                (0..execs).map(|_| Vec::with_capacity(v)).collect();
+            for (k, ring) in worker_rings.into_iter().enumerate() {
+                per_exec[k % execs].push(ring);
+            }
+            for (s, (link, exec_rings)) in
+                links.into_iter().zip(per_exec).enumerate()
             {
+                let ring: Box<dyn RingTransport> = if v > 1 {
+                    let sizes: Vec<usize> = (0..v)
+                        .map(|c| workload.stage_numel(c * execs + s))
+                        .collect();
+                    Box::new(ChunkedRing::new(exec_rings, sizes)?)
+                } else {
+                    exec_rings.into_iter().next().unwrap()
+                };
                 let stream = streams[s].clone();
                 let tx = tx_report.clone();
                 handles.push(scope.spawn(move || {
@@ -641,6 +996,7 @@ pub fn run_pipeline(
                         workload,
                         w,
                         s,
+                        v,
                         Box::new(link),
                         ring,
                         opts,
@@ -658,19 +1014,26 @@ pub fn run_pipeline(
     let mut reports: Vec<StageRoundReport> = rx_report.into_iter().collect();
     reports.sort_by_key(|r| (r.round, r.worker, r.stage));
 
-    // Assemble per-worker full vectors (stage order == single layout).
-    let mut stage_params: Vec<Vec<f32>> = Vec::with_capacity(dp * m);
+    // Assemble per-worker full vectors in model-stage order: executor
+    // s's concat holds [chunk 0 | chunk 1 | ...] = model stages
+    // {s, S+s, 2S+s, ...}.
+    let mut exec_params: Vec<Vec<f32>> = Vec::with_capacity(dp * execs);
     let mut total_wire = 0u64;
     for r in results {
         let (p, wire) = r?;
         total_wire += wire;
-        stage_params.push(p);
+        exec_params.push(p);
     }
     let mut assembled: Vec<Vec<f32>> = Vec::with_capacity(dp);
     for w in 0..dp {
         let mut full = Vec::new();
-        for s in 0..m {
-            full.extend_from_slice(&stage_params[w * m + s]);
+        for k in 0..k_total {
+            let (s, c) = (k % execs, k / execs);
+            let off: usize = (0..c)
+                .map(|cc| workload.stage_numel(cc * execs + s))
+                .sum();
+            let n = workload.stage_numel(k);
+            full.extend_from_slice(&exec_params[w * execs + s][off..off + n]);
         }
         assembled.push(full);
     }
@@ -696,16 +1059,18 @@ pub fn run_pipeline(
     })
 }
 
-/// One stage executor thread: run the 1F1B stream for H inner steps per
-/// round, step the per-stage dual optimizer, and close each round through
-/// the shared outer-round engine over this stage's DP ring — all via the
-/// single epoch-aware [`RoundDriver`] (one epoch here: the threaded
-/// executor has no membership churn, so a broken wire is a hard error).
+/// One stage executor thread: run the schedule stream for H inner steps
+/// per round over this executor's v chunk computes, step the
+/// per-executor dual optimizer, and close each round through the shared
+/// outer-round engine over this executor's DP ring — all via the single
+/// epoch-aware [`RoundDriver`] (one epoch here: the threaded executor
+/// has no membership churn, so a broken wire is a hard error).
 #[allow(clippy::too_many_arguments)]
 fn stage_main(
     workload: &dyn PipelineWorkload,
     worker: usize,
     stage: usize,
+    virtual_stages: usize,
     link: Box<dyn StageLink>,
     ring: Box<dyn RingTransport>,
     opts: &PipelineRunOpts,
@@ -713,15 +1078,31 @@ fn stage_main(
     tx_report: mpsc::Sender<StageRoundReport>,
 ) -> Result<(Vec<f32>, u64)> {
     crate::obs::set_scope(worker as u32, stage as u32);
-    let compute = workload.make_stage(worker, stage)?;
-    let n = compute.numel();
-    let params = compute.init()?;
-    if params.len() != n {
-        return Err(anyhow!("init len {} != numel {n}", params.len()));
-    }
+    let execs = workload.stages() / virtual_stages;
     let micros = workload.micros();
+    // Build this executor's chunk computes (model stage c·S + s) and the
+    // concatenated parameter vector + wire spec.
+    let mut chunks: Vec<StageChunk> = Vec::with_capacity(virtual_stages);
+    let mut params: Vec<f32> = Vec::new();
+    let mut spec: Vec<ParamEntry> = Vec::new();
+    for c in 0..virtual_stages {
+        let compute = workload.make_stage(worker, c * execs + stage)?;
+        let numel = compute.numel();
+        let init = compute.init()?;
+        if init.len() != numel {
+            return Err(anyhow!("init len {} != numel {numel}", init.len()));
+        }
+        let offset = params.len();
+        for mut e in compute.param_spec() {
+            e.offset += offset;
+            spec.push(e);
+        }
+        params.extend_from_slice(&init);
+        chunks.push(StageChunk { compute, offset, numel });
+    }
+    let n = params.len();
 
-    // §2.2: this thread holds only this stage's optimizer pair.
+    // §2.2: this thread holds only this executor's optimizer pair.
     let DualOptimizer { inner, outer } = DualOptimizer::new(
         n,
         opts.inner_lr,
@@ -741,15 +1122,21 @@ fn stage_main(
     // stages; stage 0 reduces exactly like the single-stage path.
     let stage_seed =
         opts.seed ^ (stage as u64).wrapping_mul(0x9e3779b97f4a7c15);
-    let spec = compute.param_spec();
     crate::comm::pool::configure(opts.comm_pool_size);
     let mut lane =
         RingLane::new(ring, opts.method.clone(), stage_seed, spec, opts.overlap);
     lane.set_pipeline_depth(opts.pipeline_depth);
     lane.set_use_pool(opts.comm_pool_size >= 2);
 
-    let mut work =
-        StageStepWork { compute, stream, link, params, inner, micros };
+    let mut work = StageStepWork {
+        chunks,
+        stream,
+        link,
+        params,
+        inner,
+        micros,
+        stages: execs,
+    };
     let mut driver = RoundDriver::new(engine, lane, opts.rounds, opts.local_steps);
     let end = driver.run_rounds(1, &mut work, &mut |t: RoundTelemetry| {
         tx_report
@@ -789,6 +1176,12 @@ fn stage_main(
 /// grad carries its downstream gain product, so mis-routed grads are
 /// caught), and eval has a closed form: the input term cancels, leaving
 /// `½·mean((Σ_s (Π_{j>s} g_j)·w_s − c_shared)²)`.
+///
+/// Implements the full split backward (input-grad / weight-grad halves),
+/// and an optional `compute_passes` cost knob: each forward, input-grad,
+/// and weight-grad burns that many busy-loop passes (a fused backward
+/// burns twice — it does both halves), so schedule bubbles become
+/// measurable wall time without changing any numerics.
 #[derive(Clone, Debug)]
 pub struct SyntheticPipeline {
     pub stages: usize,
@@ -796,12 +1189,21 @@ pub struct SyntheticPipeline {
     /// Activation / per-stage parameter dimension k.
     pub dim: usize,
     pub seed: u64,
+    /// Busy-loop passes per op (0 = free, the default).
+    pub compute_passes: usize,
 }
 
 impl SyntheticPipeline {
     pub fn new(stages: usize, micros: usize, dim: usize, seed: u64) -> Self {
         assert!(stages >= 1 && micros >= 1 && dim >= 1);
-        SyntheticPipeline { stages, micros, dim, seed }
+        SyntheticPipeline { stages, micros, dim, seed, compute_passes: 0 }
+    }
+
+    /// Give every op a measurable cost (see type docs) — for schedule
+    /// benchmarks, where the bubble must show up as wall time.
+    pub fn with_compute_passes(mut self, passes: usize) -> Self {
+        self.compute_passes = passes;
+        self
     }
 
     /// Per-stage gain g_s in [0.85, 1.15] — stage-dependent so gradient
@@ -839,6 +1241,18 @@ impl SyntheticPipeline {
     }
 }
 
+/// Deterministic busy loop for the compute-cost knob: pure spin, no
+/// effect on any training number.
+fn burn(passes: usize) {
+    let mut acc = 1.0f32;
+    for _ in 0..passes {
+        for _ in 0..256 {
+            acc = std::hint::black_box(acc).mul_add(1.000_000_1, 1.0e-9);
+        }
+    }
+    std::hint::black_box(acc);
+}
+
 impl PipelineWorkload for SyntheticPipeline {
     fn stages(&self) -> usize {
         self.stages
@@ -865,6 +1279,7 @@ impl PipelineWorkload for SyntheticPipeline {
             xs: Vec::new(),
             target: self.worker_target(worker),
             stash: HashMap::new(),
+            w_stash: HashMap::new(),
         }))
     }
 
@@ -904,6 +1319,9 @@ struct SyntheticStage {
     target: Vec<f32>,
     /// Last stage: a_{M-1} per in-flight micro, for the loss gradient.
     stash: HashMap<usize, Vec<f32>>,
+    /// Split backward: activation grad per micro, held between
+    /// `backward_input` and `backward_weight`.
+    w_stash: HashMap<usize, Vec<f32>>,
 }
 
 impl SyntheticStage {
@@ -913,6 +1331,49 @@ impl SyntheticStage {
 
     fn is_last(&self) -> bool {
         self.stage == self.cfg.stages - 1
+    }
+
+    /// Shared core of the fused and split backwards: compute this
+    /// stage's activation gradient (== its parameter gradient — the bias
+    /// path has unit Jacobian), the upstream message, and the loss.
+    fn backward_core(
+        &mut self,
+        micro: usize,
+        grad_in: Option<Vec<f32>>,
+    ) -> Result<(Vec<f32>, Option<Vec<f32>>, Option<f32>)> {
+        let k = self.cfg.dim as f32;
+        let (g_act, loss) = if self.is_last() {
+            let a = self
+                .stash
+                .remove(&micro)
+                .ok_or_else(|| anyhow!("no stashed forward for micro {micro}"))?;
+            let x = self
+                .xs
+                .get(micro)
+                .ok_or_else(|| anyhow!("micro {micro} not drawn"))?;
+            let total = self.cfg.total_gain();
+            // y = (Π g)·x + c_w; loss = ½·mean((a − y)²).
+            let mut loss = 0.0f64;
+            let mut g = vec![0.0f32; self.cfg.dim];
+            for i in 0..self.cfg.dim {
+                let d = a[i] - (total * x[i] + self.target[i]);
+                loss += 0.5 * (d as f64) * (d as f64);
+                g[i] = d / k;
+            }
+            (g, Some((loss / k as f64) as f32))
+        } else {
+            (
+                grad_in.ok_or_else(|| anyhow!("mid/first stage needs grad_in"))?,
+                None,
+            )
+        };
+        let upstream = if self.is_first() {
+            None
+        } else {
+            let g = self.cfg.gain(self.stage);
+            Some(g_act.iter().map(|v| g * v).collect())
+        };
+        Ok((g_act, upstream, loss))
     }
 }
 
@@ -958,6 +1419,7 @@ impl StageCompute for SyntheticStage {
         );
         self.xs.clear();
         self.stash.clear();
+        self.w_stash.clear();
         Ok(())
     }
 
@@ -967,6 +1429,7 @@ impl StageCompute for SyntheticStage {
         micro: usize,
         acts_in: Option<Vec<f32>>,
     ) -> Result<Option<Vec<f32>>> {
+        burn(self.cfg.compute_passes);
         let input: Vec<f32> = if self.is_first() {
             self.xs
                 .get(micro)
@@ -995,42 +1458,35 @@ impl StageCompute for SyntheticStage {
         micro: usize,
         grad_in: Option<Vec<f32>>,
     ) -> Result<(Vec<f32>, Option<Vec<f32>>, Option<f32>)> {
-        let k = self.cfg.dim as f32;
-        let (g_act, loss) = if self.is_last() {
-            let a = self
-                .stash
-                .remove(&micro)
-                .ok_or_else(|| anyhow!("no stashed forward for micro {micro}"))?;
-            let x = self
-                .xs
-                .get(micro)
-                .ok_or_else(|| anyhow!("micro {micro} not drawn"))?;
-            let total = self.cfg.total_gain();
-            // y = (Π g)·x + c_w; loss = ½·mean((a − y)²).
-            let mut loss = 0.0f64;
-            let mut g = vec![0.0f32; self.cfg.dim];
-            for i in 0..self.cfg.dim {
-                let d = a[i] - (total * x[i] + self.target[i]);
-                loss += 0.5 * (d as f64) * (d as f64);
-                g[i] = d / k;
-            }
-            (g, Some((loss / k as f64) as f32))
-        } else {
-            (
-                grad_in.ok_or_else(|| anyhow!("mid/first stage needs grad_in"))?,
-                None,
-            )
-        };
+        // Fused = both halves of the split backward.
+        burn(2 * self.cfg.compute_passes);
+        let (g_act, upstream, loss) = self.backward_core(micro, grad_in)?;
         // ∂a_s/∂w_s = 1, so the param grad IS the activation grad; the
         // upstream message carries this stage's gain.
-        let grads = g_act.clone();
-        let upstream = if self.is_first() {
-            None
-        } else {
-            let g = self.cfg.gain(self.stage);
-            Some(g_act.iter().map(|v| g * v).collect())
-        };
-        Ok((grads, upstream, loss))
+        Ok((g_act, upstream, loss))
+    }
+
+    fn supports_split_backward(&self) -> bool {
+        true
+    }
+
+    fn backward_input(
+        &mut self,
+        _params: &[f32],
+        micro: usize,
+        grad_in: Option<Vec<f32>>,
+    ) -> Result<(Option<Vec<f32>>, Option<f32>)> {
+        burn(self.cfg.compute_passes);
+        let (g_act, upstream, loss) = self.backward_core(micro, grad_in)?;
+        self.w_stash.insert(micro, g_act);
+        Ok((upstream, loss))
+    }
+
+    fn backward_weight(&mut self, _params: &[f32], micro: usize) -> Result<Vec<f32>> {
+        burn(self.cfg.compute_passes);
+        self.w_stash
+            .remove(&micro)
+            .ok_or_else(|| anyhow!("no backward_input for micro {micro}"))
     }
 }
 
@@ -1053,6 +1509,8 @@ mod tests {
             seed: 1234,
             comm_pool_size: 1,
             pipeline_depth: 1,
+            schedule: ScheduleKind::OneFOneB,
+            virtual_stages: 1,
         }
     }
 
@@ -1105,6 +1563,39 @@ mod tests {
     }
 
     #[test]
+    fn split_backward_matches_fused() {
+        // backward_input + backward_weight must reproduce the fused
+        // backward bit-for-bit (same upstream grads, same param grads).
+        let wl = SyntheticPipeline::new(3, 2, 5, 42);
+        for s in 0..3 {
+            let mut fused = wl.make_stage(0, s).unwrap();
+            let mut split = wl.make_stage(0, s).unwrap();
+            assert!(split.supports_split_backward());
+            let mut p = vec![0.0f32; 5];
+            Pcg32::new(9, s as u64).fill_normal(&mut p, 0.0, 0.3);
+            fused.next_step().unwrap();
+            split.next_step().unwrap();
+            let gi: Option<Vec<f32>> = if s == 2 {
+                None
+            } else {
+                Some((0..5).map(|i| 0.1 * (i as f32 + 1.0)).collect())
+            };
+            // Feed the last stage a forward so it has a stash.
+            if s == 2 {
+                let acts = Some(vec![0.5f32; 5]);
+                fused.forward(&p, 0, acts.clone()).unwrap();
+                split.forward(&p, 0, acts).unwrap();
+            }
+            let (gp_f, up_f, loss_f) = fused.backward(&p, 0, gi.clone()).unwrap();
+            let (up_s, loss_s) = split.backward_input(&p, 0, gi).unwrap();
+            let gp_s = split.backward_weight(&p, 0).unwrap();
+            assert_eq!(gp_f, gp_s);
+            assert_eq!(up_f, up_s);
+            assert_eq!(loss_f.map(f32::to_bits), loss_s.map(f32::to_bits));
+        }
+    }
+
+    #[test]
     fn stage_parallel_converges_and_workers_agree() {
         let wl = SyntheticPipeline::new(3, 4, 16, 99);
         let rings = local_stage_rings(2, 3);
@@ -1141,6 +1632,110 @@ mod tests {
     }
 
     #[test]
+    fn all_schedules_agree_bit_for_bit() {
+        // The same 8-model-stage workload run under every schedule —
+        // including interleaved regrouped as 4 executors × 2 chunks and
+        // 2 executors × 4 chunks — must land on IDENTICAL final params:
+        // same per-(chunk, micro) gradient algebra, same per-model-stage
+        // ring reduction, same elementwise optimizers.
+        let wl = SyntheticPipeline::new(8, 8, 8, 77);
+        let run = |kind: ScheduleKind, v: usize| {
+            let mut o = opts(3, false);
+            o.schedule = kind;
+            o.virtual_stages = v;
+            run_pipeline(&wl, 2, local_stage_rings(2, 8), &o).unwrap()
+        };
+        let base = run(ScheduleKind::OneFOneB, 1);
+        assert!(base.final_eval.is_finite());
+        for (kind, v) in [
+            (ScheduleKind::GPipe, 1),
+            (ScheduleKind::ZeroBubble, 1),
+            (ScheduleKind::Interleaved, 1),
+            (ScheduleKind::Interleaved, 2),
+            (ScheduleKind::Interleaved, 4),
+        ] {
+            let out = run(kind, v);
+            assert_eq!(
+                base.final_params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                out.final_params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "{} v={v} diverged from 1f1b",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn zero_bubble_runs_with_fused_fallback() {
+        // A compute WITHOUT split backward still runs zero-bubble
+        // streams (fused at B, collect at W) and matches its own 1f1b
+        // result bit-for-bit.
+        struct Fused(SyntheticPipeline);
+        struct FusedStage(Box<dyn StageCompute>);
+        impl StageCompute for FusedStage {
+            fn numel(&self) -> usize {
+                self.0.numel()
+            }
+            fn init(&self) -> Result<Vec<f32>> {
+                self.0.init()
+            }
+            fn param_spec(&self) -> Vec<ParamEntry> {
+                self.0.param_spec()
+            }
+            fn next_step(&mut self) -> Result<()> {
+                self.0.next_step()
+            }
+            fn reset_data(&mut self, round: usize) -> Result<()> {
+                self.0.reset_data(round)
+            }
+            fn forward(
+                &mut self,
+                params: &[f32],
+                micro: usize,
+                acts_in: Option<Vec<f32>>,
+            ) -> Result<Option<Vec<f32>>> {
+                self.0.forward(params, micro, acts_in)
+            }
+            fn backward(
+                &mut self,
+                params: &[f32],
+                micro: usize,
+                grad_in: Option<Vec<f32>>,
+            ) -> Result<(Vec<f32>, Option<Vec<f32>>, Option<f32>)> {
+                self.0.backward(params, micro, grad_in)
+            }
+            // supports_split_backward stays false (the default).
+        }
+        impl PipelineWorkload for Fused {
+            fn stages(&self) -> usize {
+                self.0.stages()
+            }
+            fn micros(&self) -> usize {
+                self.0.micros()
+            }
+            fn stage_numel(&self, s: usize) -> usize {
+                self.0.stage_numel(s)
+            }
+            fn make_stage(&self, w: usize, s: usize) -> Result<Box<dyn StageCompute>> {
+                Ok(Box::new(FusedStage(self.0.make_stage(w, s)?)))
+            }
+            fn eval(&self, p: &[f32]) -> Result<f32> {
+                self.0.eval(p)
+            }
+        }
+        let wl = Fused(SyntheticPipeline::new(3, 4, 8, 13));
+        let mut o = opts(3, false);
+        o.schedule = ScheduleKind::ZeroBubble;
+        let zb = run_pipeline(&wl, 2, local_stage_rings(2, 3), &o).unwrap();
+        let base =
+            run_pipeline(&wl, 2, local_stage_rings(2, 3), &opts(3, false))
+                .unwrap();
+        assert_eq!(
+            base.final_params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            zb.final_params.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+
+    #[test]
     fn overlap_defers_round_one_and_still_converges() {
         let wl = SyntheticPipeline::new(2, 3, 16, 7);
         let rings = local_stage_rings(2, 2);
@@ -1165,6 +1760,28 @@ mod tests {
             .all(|r| r.wire_bytes > 0));
         let first = out.mean_loss_per_round().first().unwrap().1;
         assert!(out.final_eval < first * 0.5, "{}", out.final_eval);
+    }
+
+    #[test]
+    fn interleaved_overlap_and_zero_bubble_overlap_converge() {
+        let wl = SyntheticPipeline::new(4, 4, 16, 7);
+        for (kind, v) in
+            [(ScheduleKind::Interleaved, 2), (ScheduleKind::ZeroBubble, 1)]
+        {
+            let mut o = opts(6, true);
+            o.outer_lr = 0.3;
+            o.outer_momentum = 0.3;
+            o.schedule = kind;
+            o.virtual_stages = v;
+            let out =
+                run_pipeline(&wl, 2, local_stage_rings(2, 4), &o).unwrap();
+            assert!(out.final_eval.is_finite());
+            assert!(out
+                .reports
+                .iter()
+                .filter(|r| r.round == 2)
+                .all(|r| r.wire_bytes > 0));
+        }
     }
 
     #[test]
@@ -1228,19 +1845,116 @@ mod tests {
     }
 
     #[test]
-    fn mpsc_links_route_acts_and_grads_by_micro() {
+    fn quantized_compression_runs_interleaved() {
+        // Compression composes with virtual stages (the chunked ring
+        // reduces compressed payloads whole over its first sub-ring).
+        let wl = SyntheticPipeline::new(4, 4, 16, 21);
+        let mut o = opts(4, false);
+        o.method = Method::Quant { q_bits: 8 };
+        o.error_feedback = true;
+        o.schedule = ScheduleKind::Interleaved;
+        o.virtual_stages = 2;
+        let out = run_pipeline(&wl, 2, local_stage_rings(2, 4), &o).unwrap();
+        let first = out.mean_loss_per_round().first().unwrap().1;
+        assert!(out.final_eval < first, "{} vs {first}", out.final_eval);
+        assert!(out.total_wire_bytes > 0);
+    }
+
+    #[test]
+    fn mpsc_links_route_acts_and_grads_by_chunk_and_micro() {
         let mut links = mpsc_stage_links(2);
         let mut l1 = links.pop().unwrap();
         let mut l0 = links.pop().unwrap();
         assert!(!l0.has_upstream() && l0.has_downstream());
         assert!(l1.has_upstream() && !l1.has_downstream());
-        l0.send_acts(0, vec![1.0]).unwrap();
-        assert_eq!(l1.recv_acts().unwrap(), (0, vec![1.0]));
-        l1.send_grads(0, vec![2.0]).unwrap();
-        assert_eq!(l0.recv_grads().unwrap(), (0, vec![2.0]));
+        l0.send_acts(0, 0, vec![1.0]).unwrap();
+        assert_eq!(l1.recv_acts().unwrap(), (0, 0, vec![1.0]));
+        l1.send_grads(1, 3, vec![2.0]).unwrap();
+        assert_eq!(l0.recv_grads().unwrap(), (1, 3, vec![2.0]));
         // Endpoint misuse is an error, not a hang.
         assert!(l0.recv_acts().is_err());
-        assert!(l1.send_acts(0, vec![0.0]).is_err());
+        assert!(l1.send_acts(0, 0, vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn ring_links_wrap_and_self_loop() {
+        let mut links = mpsc_stage_links_ring(2);
+        let mut l1 = links.pop().unwrap();
+        let mut l0 = links.pop().unwrap();
+        assert!(l0.has_upstream() && l0.has_downstream());
+        assert!(l1.has_upstream() && l1.has_downstream());
+        // Wrap: stage 1's acts go to stage 0 (next chunk).
+        l1.send_acts(1, 0, vec![4.0]).unwrap();
+        assert_eq!(l0.recv_acts().unwrap(), (1, 0, vec![4.0]));
+        // And stage 0's grads go back to stage 1.
+        l0.send_grads(0, 2, vec![5.0]).unwrap();
+        assert_eq!(l1.recv_grads().unwrap(), (0, 2, vec![5.0]));
+        // Single executor: the link loops to itself.
+        let mut solo = mpsc_stage_links_ring(1);
+        let mut l = solo.pop().unwrap();
+        l.send_acts(1, 0, vec![6.0]).unwrap();
+        assert_eq!(l.recv_acts().unwrap(), (1, 0, vec![6.0]));
+    }
+
+    #[test]
+    fn chunked_ring_matches_separate_rings() {
+        // Reducing [a | b] through a ChunkedRing must equal reducing a
+        // and b over the separate rings — bitwise.
+        let dp = 3;
+        let (na, nb) = (7usize, 5usize);
+        let mk = |w: usize, salt: u64, n: usize| {
+            let mut v = vec![0.0f32; n];
+            Pcg32::new(salt, w as u64).fill_normal(&mut v, 0.0, 1.0);
+            v
+        };
+        // Separate reference.
+        let mut ra = build_ring(dp);
+        let mut rb = build_ring(dp);
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        let hs: Vec<_> = (0..dp)
+            .map(|w| {
+                let mut ma = ra.remove(0);
+                let mut mb = rb.remove(0);
+                std::thread::spawn(move || {
+                    let mut a = mk(w, 3, na);
+                    let mut b = mk(w, 4, nb);
+                    ma.allreduce_sum(&mut a).unwrap();
+                    mb.allreduce_sum(&mut b).unwrap();
+                    (a, b)
+                })
+            })
+            .collect();
+        for h in hs {
+            let (a, b) = h.join().unwrap();
+            let mut full = a;
+            full.extend_from_slice(&b);
+            want.push(full);
+        }
+        // Chunked.
+        let mut r1 = build_ring(dp);
+        let mut r2 = build_ring(dp);
+        let hs: Vec<_> = (0..dp)
+            .map(|w| {
+                let m1 = Box::new(r1.remove(0)) as Box<dyn RingTransport>;
+                let m2 = Box::new(r2.remove(0)) as Box<dyn RingTransport>;
+                std::thread::spawn(move || {
+                    let mut ring =
+                        ChunkedRing::new(vec![m1, m2], vec![na, nb]).unwrap();
+                    let mut full = mk(w, 3, na);
+                    full.extend_from_slice(&mk(w, 4, nb));
+                    ring.allreduce_sum(&mut full).unwrap();
+                    assert!(ring.meter().total() > 0);
+                    full
+                })
+            })
+            .collect();
+        for (w, h) in hs.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_eq!(
+                want[w].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            );
+        }
     }
 
     #[test]
@@ -1250,6 +1964,15 @@ mod tests {
             .is_err());
         let mut o = opts(1, false);
         o.method = Method::TopK { ratio: 0.1, q_bits: 4 };
+        assert!(run_pipeline(&wl, 2, local_stage_rings(2, 2), &o).is_err());
+        // virtual_stages must divide the model stage count, and only the
+        // interleaved schedule accepts v > 1.
+        let mut o = opts(1, false);
+        o.schedule = ScheduleKind::Interleaved;
+        o.virtual_stages = 3;
+        assert!(run_pipeline(&wl, 2, local_stage_rings(2, 2), &o).is_err());
+        let mut o = opts(1, false);
+        o.virtual_stages = 2;
         assert!(run_pipeline(&wl, 2, local_stage_rings(2, 2), &o).is_err());
     }
 }

@@ -1,38 +1,192 @@
 //! Pipeline parallelism (paper §2.2): stage partitioning, microbatch
 //! schedules, and the stage-parallel executor ([`exec`]).  The schedule is
-//! an abstract per-stage op-stream that three consumers share — the
+//! an abstract per-executor op-stream that three consumers share — the
 //! schedule validator and the DES throughput simulator interpret it
 //! through [`execute_streams`] (the single dependency oracle), and the
 //! real executor's stage threads run their streams in order with blocking
 //! channels realizing the same dependencies structurally — one source of
 //! truth for the dependency structure and therefore for bubble fractions.
+//!
+//! Four schedules share the [`Cell`] stream format (pick one with
+//! [`ScheduleKind`]):
+//!
+//! * [`gpipe_schedule`] — fill-drain; bubble (S−1)/(M+S−1).
+//! * [`one_f_one_b_schedule`] — PipeDream-flush 1F1B; same bubble, bounded
+//!   activation memory.
+//! * [`interleaved_1f1b_schedule`] — Megatron-style virtual stages: each
+//!   executor owns `v` model chunks, shrinking the bubble ~1/v at the cost
+//!   of a wrap-around activation link (executor S−1 → 0).
+//! * [`zero_bubble_schedule`] — ZB-H1-style: the backward is split into an
+//!   input-grad op `B` kept on the critical path and a weight-grad op `W`
+//!   back-filled into the drain bubbles, driving the bubble toward zero
+//!   when F ≈ B ≈ W.
 
 pub mod exec;
 
-/// One scheduled cell: stage `stage` runs a forward or backward for
-/// microbatch `micro`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// What a scheduled cell computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Forward one microbatch through this model chunk.
+    F,
+    /// Backward: with a matching [`OpKind::W`] cell in the stream this is
+    /// the *input-grad* half (activation gradients only — the part the
+    /// upstream stage is waiting for); without one it is the classic
+    /// fused backward (input + weight grads in one op).
+    B,
+    /// Weight-grad half of a split backward — off the critical path, so
+    /// schedulers back-fill it into bubbles.  Must follow its own `B`.
+    W,
+}
+
+/// One scheduled cell: executor `stage` runs `op` for microbatch `micro`
+/// of virtual-stage chunk `chunk` (chunk 0 for non-interleaved
+/// schedules).  The model stage it touches is `chunk·S + stage` — chunk 1
+/// of every executor sits *after* chunk 0 of all executors, Megatron
+/// virtual-pipeline style.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Cell {
     pub stage: usize,
+    pub chunk: usize,
     pub micro: usize,
-    pub is_forward: bool,
+    pub op: OpKind,
+}
+
+impl Cell {
+    pub fn f(stage: usize, chunk: usize, micro: usize) -> Cell {
+        Cell { stage, chunk, micro, op: OpKind::F }
+    }
+
+    pub fn b(stage: usize, chunk: usize, micro: usize) -> Cell {
+        Cell { stage, chunk, micro, op: OpKind::B }
+    }
+
+    pub fn w(stage: usize, chunk: usize, micro: usize) -> Cell {
+        Cell { stage, chunk, micro, op: OpKind::W }
+    }
+
+    pub fn is_forward(&self) -> bool {
+        self.op == OpKind::F
+    }
+
+    /// Global model-stage index of this cell on an S-executor pipeline.
+    pub fn model_stage(&self, stages: usize) -> usize {
+        self.chunk * stages + self.stage
+    }
+}
+
+/// The schedule axis: which microbatch schedule the executor (and the
+/// DES) runs.  Parsed from `[parallel] schedule` / `--schedule`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    GPipe,
+    OneFOneB,
+    Interleaved,
+    ZeroBubble,
+}
+
+impl ScheduleKind {
+    pub fn parse(s: &str) -> Result<ScheduleKind, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "gpipe" => ScheduleKind::GPipe,
+            "1f1b" | "one-f-one-b" | "pipedream" => ScheduleKind::OneFOneB,
+            "interleaved" | "virtual" => ScheduleKind::Interleaved,
+            "zero-bubble" | "zerobubble" | "zb" | "zb-h1" => {
+                ScheduleKind::ZeroBubble
+            }
+            other => {
+                return Err(format!(
+                    "unknown schedule '{other}' \
+                     (gpipe | 1f1b | interleaved | zero-bubble)"
+                ))
+            }
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::GPipe => "gpipe",
+            ScheduleKind::OneFOneB => "1f1b",
+            ScheduleKind::Interleaved => "interleaved",
+            ScheduleKind::ZeroBubble => "zero-bubble",
+        }
+    }
+
+    pub fn all() -> [ScheduleKind; 4] {
+        [
+            ScheduleKind::GPipe,
+            ScheduleKind::OneFOneB,
+            ScheduleKind::Interleaved,
+            ScheduleKind::ZeroBubble,
+        ]
+    }
+
+    /// Per-executor op streams for `executors` executors running
+    /// `virtual_stages` chunks each over `micros` microbatches.  Only the
+    /// interleaved schedule accepts `virtual_stages > 1`.
+    pub fn streams(
+        &self,
+        executors: usize,
+        virtual_stages: usize,
+        micros: usize,
+    ) -> Result<Vec<Vec<Cell>>, String> {
+        if executors == 0 || micros == 0 || virtual_stages == 0 {
+            return Err("executors, micros, virtual_stages must be >= 1".into());
+        }
+        if virtual_stages > 1 && *self != ScheduleKind::Interleaved {
+            return Err(format!(
+                "schedule '{}' does not support virtual_stages > 1 \
+                 (only 'interleaved' does)",
+                self.name()
+            ));
+        }
+        Ok(match self {
+            ScheduleKind::GPipe => gpipe_schedule(executors, micros),
+            ScheduleKind::OneFOneB => one_f_one_b_schedule(executors, micros),
+            ScheduleKind::Interleaved => {
+                interleaved_1f1b_schedule(executors, virtual_stages, micros)?
+            }
+            ScheduleKind::ZeroBubble => zero_bubble_schedule(executors, micros),
+        })
+    }
+
+    /// Theoretical bubble fraction of this schedule at uniform per-cell
+    /// cost (forward = input-grad = weight-grad): the fill-drain family
+    /// pays (S−1)/(M+S−1), interleaving divides the fill/drain ramp by v,
+    /// and the ZB-H1 back-fill drives it to ~0.
+    pub fn ideal_bubble_fraction(
+        &self,
+        executors: usize,
+        virtual_stages: usize,
+        micros: usize,
+    ) -> f64 {
+        let s = executors as f64;
+        let m = micros as f64;
+        let v = virtual_stages.max(1) as f64;
+        match self {
+            ScheduleKind::GPipe | ScheduleKind::OneFOneB => {
+                (s - 1.0) / (m + s - 1.0)
+            }
+            ScheduleKind::Interleaved => ((s - 1.0) / v) / (m + s - 1.0),
+            ScheduleKind::ZeroBubble => 0.0,
+        }
+    }
 }
 
 /// GPipe fill-drain: all forwards (in microbatch-major order), then all
-/// backwards (reverse).  Bubble fraction = (M−1)/(M−1+U) per phase.
-pub fn gpipe_schedule(stages: usize, micros: usize) -> Vec<Cell> {
-    let mut cells = Vec::with_capacity(2 * stages * micros);
+/// backwards (reverse).  Bubble fraction = (S−1)/(M+S−1).
+pub fn gpipe_schedule(stages: usize, micros: usize) -> Vec<Vec<Cell>> {
+    let mut streams = vec![Vec::with_capacity(2 * micros); stages];
     for m in 0..micros {
-        for s in 0..stages {
-            cells.push(Cell { stage: s, micro: m, is_forward: true });
+        for (s, stream) in streams.iter_mut().enumerate() {
+            stream.push(Cell::f(s, 0, m));
         }
     }
     for m in (0..micros).rev() {
-        for s in (0..stages).rev() {
-            cells.push(Cell { stage: s, micro: m, is_forward: false });
+        for (s, stream) in streams.iter_mut().enumerate() {
+            stream.push(Cell::b(s, 0, m));
         }
     }
-    cells
+    streams
 }
 
 /// 1F1B (PipeDream-flush): warm-up forwards, steady-state alternation,
@@ -46,45 +200,145 @@ pub fn one_f_one_b_schedule(stages: usize, micros: usize) -> Vec<Vec<Cell>> {
         let mut next_f = 0usize;
         let mut next_b = 0usize;
         for _ in 0..warmup {
-            stream.push(Cell { stage: s, micro: next_f, is_forward: true });
+            stream.push(Cell::f(s, 0, next_f));
             next_f += 1;
         }
         while next_b < micros {
             if next_f < micros {
-                stream.push(Cell { stage: s, micro: next_f, is_forward: true });
+                stream.push(Cell::f(s, 0, next_f));
                 next_f += 1;
             }
-            stream.push(Cell { stage: s, micro: next_b, is_forward: false });
+            stream.push(Cell::b(s, 0, next_b));
             next_b += 1;
         }
     }
     streams
 }
 
-/// Per-(stage, micro) completion values from an interpretation of
-/// per-stage streams (see [`execute_streams`]).
+/// Megatron-style interleaved virtual-stage 1F1B: each executor owns
+/// `virtual_per_stage` model chunks (model stage `c·S + s` for chunk c on
+/// executor s), so the fill/drain ramp crosses each executor v times with
+/// 1/v of the work — bubble ~((S−1)/v)/(M+S−1).  Activations wrap from
+/// executor S−1 back to executor 0 between consecutive chunks.
+/// Requires `micros % stages == 0` when `virtual_per_stage > 1` (the
+/// Megatron microbatch-group constraint).
+pub fn interleaved_1f1b_schedule(
+    stages: usize,
+    virtual_per_stage: usize,
+    micros: usize,
+) -> Result<Vec<Vec<Cell>>, String> {
+    let v = virtual_per_stage;
+    if v == 0 {
+        return Err("virtual_per_stage must be >= 1".into());
+    }
+    if v > 1 && micros % stages != 0 {
+        return Err(format!(
+            "interleaved schedule with {v} virtual stages needs \
+             micros ({micros}) divisible by stages ({stages})"
+        ));
+    }
+    // Iteration i of the forward (resp. backward) pass on any executor
+    // maps to chunk (i mod S·v)/S — reversed for backwards — and
+    // microbatch (i div S·v)·S + (i mod S): microbatch groups of S sweep
+    // each chunk in turn (Megatron's get_model_chunk_id enumeration).
+    let group = stages * v;
+    let total = micros * v;
+    let f_chunk = |i: usize| (i % group) / stages;
+    let b_chunk = |i: usize| v - 1 - (i % group) / stages;
+    let micro_of = |i: usize| (i / group) * stages + i % stages;
+    let mut streams = vec![Vec::with_capacity(2 * total); stages];
+    for (s, stream) in streams.iter_mut().enumerate() {
+        let warmup = (2 * (stages - 1 - s) + (v - 1) * stages).min(total);
+        for i in 0..warmup {
+            stream.push(Cell::f(s, f_chunk(i), micro_of(i)));
+        }
+        for j in 0..total - warmup {
+            let i = warmup + j;
+            stream.push(Cell::f(s, f_chunk(i), micro_of(i)));
+            stream.push(Cell::b(s, b_chunk(j), micro_of(j)));
+        }
+        for j in total - warmup..total {
+            stream.push(Cell::b(s, b_chunk(j), micro_of(j)));
+        }
+    }
+    Ok(streams)
+}
+
+/// ZB-H1-style zero-bubble schedule: the backward is split into the
+/// input-grad op `B` (critical path — the upstream stage waits on it) and
+/// the weight-grad op `W` (no one waits on it), with `W`s back-filled
+/// into the drain-phase bubbles.  The warm-up runs 2·(S−1−s) forwards —
+/// deep enough that at uniform cost (F = B = W) the first input-grad
+/// arrives exactly when the warm-up ends, leaving (near) zero idle.
+/// Steady state pairs F with B; the drain alternates B with back-filled
+/// Ws and flushes the W backlog at the end.  Trades activation memory
+/// (up to 2(S−1)+1 microbatches in flight on stage 0, vs S for 1F1B) for
+/// the bubble, like the ZB-H2 end of the zero-bubble family.
+pub fn zero_bubble_schedule(stages: usize, micros: usize) -> Vec<Vec<Cell>> {
+    let mut streams = vec![Vec::with_capacity(3 * micros); stages];
+    for (s, stream) in streams.iter_mut().enumerate() {
+        let warmup = (2 * (stages - 1 - s)).min(micros);
+        let mut next_f = 0usize;
+        let mut next_b = 0usize;
+        let mut next_w = 0usize;
+        for _ in 0..warmup {
+            stream.push(Cell::f(s, 0, next_f));
+            next_f += 1;
+        }
+        // Steady state: strict 1F1B pairs; weight grads pile up.
+        while next_f < micros {
+            stream.push(Cell::f(s, 0, next_f));
+            next_f += 1;
+            stream.push(Cell::b(s, 0, next_b));
+            next_b += 1;
+        }
+        // Drain: input grads stay on the critical path, weight grads
+        // back-fill the wait for the next downstream grad.
+        while next_b < micros {
+            stream.push(Cell::b(s, 0, next_b));
+            next_b += 1;
+            if next_w < next_b {
+                stream.push(Cell::w(s, 0, next_w));
+                next_w += 1;
+            }
+        }
+        while next_w < micros {
+            stream.push(Cell::w(s, 0, next_w));
+            next_w += 1;
+        }
+    }
+    streams
+}
+
+/// Per-(model stage, micro) completion values from an interpretation of
+/// per-executor streams (see [`execute_streams`]).  Tables are indexed
+/// `[chunk·S + stage][micro]`; `wgrad` entries are `None` where the
+/// schedule had no weight-grad cell (only zero-bubble schedules emit
+/// them).
 #[derive(Clone, Debug)]
 pub struct ScheduleTrace<T> {
     pub fwd: Vec<Vec<T>>,
     pub bwd: Vec<Vec<T>>,
+    pub wgrad: Vec<Vec<Option<T>>>,
 }
 
-/// Interpret per-stage streams against the pipeline dependency rules,
-/// calling `f(cell, fwd_dep, bwd_dep)` exactly once per cell when its
-/// dependencies have completed:
+/// Interpret per-executor streams against the pipeline dependency rules,
+/// calling `f(cell, dep_a, dep_b)` exactly once per cell when its
+/// dependencies have completed.  With model stage k = chunk·S + stage:
 ///
-/// * forward at stage s: `fwd_dep` = completion of the forward of
-///   (s−1, micro) — `None` at stage 0; `bwd_dep` is `None`;
-/// * backward at stage s: `fwd_dep` = completion of this stage's own
-///   forward of (s, micro); `bwd_dep` = completion of the backward of
-///   (s+1, micro) — `None` at the last stage.
+/// * `F(k, m)`: `dep_a` = completion of `F(k−1, m)` (`None` at k = 0);
+///   `dep_b` is `None`;
+/// * `B(k, m)`: `dep_a` = completion of this model stage's own
+///   `F(k, m)`; `dep_b` = completion of `B(k+1, m)` (`None` at the last
+///   model stage);
+/// * `W(k, m)`: `dep_a` = own `F(k, m)`, `dep_b` = own `B(k, m)`.
 ///
 /// `f` returns the cell's own completion value (`()` for pure
-/// validation, a finish *time* for the DES).  Errors on deadlock or
-/// missing ops.  This is the single dependency oracle: the schedule
-/// validator and the DES simulator call it directly, and the real
-/// stage-parallel executor ([`exec`]) realizes the identical rules
-/// structurally (per-stage in-order streams + blocking channels).
+/// validation, a finish *time* for the DES).  Errors on deadlock,
+/// duplicate ops, or missing ops.  This is the single dependency oracle:
+/// the schedule validator and the DES simulator call it directly, and the
+/// real stage-parallel executor ([`exec`]) realizes the identical rules
+/// structurally (per-executor in-order streams + blocking channels).
 pub fn execute_streams<T: Clone, F>(
     streams: &[Vec<Cell>],
     micros: usize,
@@ -94,8 +348,17 @@ where
     F: FnMut(Cell, Option<&T>, Option<&T>) -> T,
 {
     let stages = streams.len();
-    let mut fwd: Vec<Vec<Option<T>>> = vec![vec![None; micros]; stages];
-    let mut bwd: Vec<Vec<Option<T>>> = vec![vec![None; micros]; stages];
+    let chunks = streams
+        .iter()
+        .flatten()
+        .map(|c| c.chunk + 1)
+        .max()
+        .unwrap_or(1);
+    let k_total = stages * chunks;
+    let mut fwd: Vec<Vec<Option<T>>> = vec![vec![None; micros]; k_total];
+    let mut bwd: Vec<Vec<Option<T>>> = vec![vec![None; micros]; k_total];
+    let mut wgrad: Vec<Vec<Option<T>>> = vec![vec![None; micros]; k_total];
+    let mut has_w = false;
     let mut idx = vec![0usize; stages];
     let total: usize = streams.iter().map(|s| s.len()).sum();
     let mut executed = 0usize;
@@ -116,34 +379,52 @@ where
                         c.micro
                     ));
                 }
+                let k = c.model_stage(stages);
                 // Dependency completion values (None = not ready yet).
-                let deps: Option<(Option<T>, Option<T>)> = if c.is_forward {
-                    if s == 0 {
-                        Some((None, None))
-                    } else {
-                        fwd[s - 1][c.micro].clone().map(|t| (Some(t), None))
+                let deps: Option<(Option<T>, Option<T>)> = match c.op {
+                    OpKind::F => {
+                        if k == 0 {
+                            Some((None, None))
+                        } else {
+                            fwd[k - 1][c.micro].clone().map(|t| (Some(t), None))
+                        }
                     }
-                } else {
-                    match fwd[s][c.micro].clone() {
+                    OpKind::B => match fwd[k][c.micro].clone() {
                         None => None,
                         Some(own) => {
-                            if s == stages - 1 {
+                            if k == k_total - 1 {
                                 Some((Some(own), None))
                             } else {
-                                bwd[s + 1][c.micro]
+                                bwd[k + 1][c.micro]
                                     .clone()
                                     .map(|d| (Some(own), Some(d)))
                             }
                         }
+                    },
+                    OpKind::W => match (
+                        fwd[k][c.micro].clone(),
+                        bwd[k][c.micro].clone(),
+                    ) {
+                        (Some(fo), Some(bo)) => Some((Some(fo), Some(bo))),
+                        _ => None,
+                    },
+                };
+                let Some((dep_a, dep_b)) = deps else { break };
+                let slot = match c.op {
+                    OpKind::F => &mut fwd[k][c.micro],
+                    OpKind::B => &mut bwd[k][c.micro],
+                    OpKind::W => {
+                        has_w = true;
+                        &mut wgrad[k][c.micro]
                     }
                 };
-                let Some((fdep, bdep)) = deps else { break };
-                let v = f(c, fdep.as_ref(), bdep.as_ref());
-                if c.is_forward {
-                    fwd[s][c.micro] = Some(v);
-                } else {
-                    bwd[s][c.micro] = Some(v);
+                if slot.is_some() {
+                    return Err(format!(
+                        "duplicate {:?} op for model stage {k} micro {}",
+                        c.op, c.micro
+                    ));
                 }
+                *slot = Some(f(c, dep_a.as_ref(), dep_b.as_ref()));
                 idx[s] += 1;
                 executed += 1;
                 progressed = true;
@@ -155,14 +436,14 @@ where
     }
     let unwrap_all = |table: Vec<Vec<Option<T>>>, what: &str| {
         let mut out = Vec::with_capacity(table.len());
-        for (s, row) in table.into_iter().enumerate() {
+        for (k, row) in table.into_iter().enumerate() {
             let mut r = Vec::with_capacity(row.len());
             for (m, v) in row.into_iter().enumerate() {
                 match v {
                     Some(v) => r.push(v),
                     None => {
                         return Err(format!(
-                            "missing {what} op for stage {s} micro {m}"
+                            "missing {what} op for model stage {k} micro {m}"
                         ))
                     }
                 }
@@ -171,18 +452,51 @@ where
         }
         Ok(out)
     };
+    // A schedule that splits ANY backward must split them all: the
+    // executor derives fused-vs-split per model stage from the stream,
+    // and a half-split stage would drop weight gradients.
+    if has_w {
+        for (k, row) in wgrad.iter().enumerate() {
+            for (m, v) in row.iter().enumerate() {
+                if v.is_none() {
+                    return Err(format!(
+                        "schedule splits backwards but model stage {k} \
+                         micro {m} has no weight-grad op"
+                    ));
+                }
+            }
+        }
+    }
     Ok(ScheduleTrace {
         fwd: unwrap_all(fwd, "forward")?,
         bwd: unwrap_all(bwd, "backward")?,
+        wgrad,
     })
 }
 
 /// Validity check used by executors and property tests: within each
-/// stage ops are ordered, forward of (s, m) precedes forward of (s+1, m),
-/// backward of (s, m) precedes backward of (s−1, m), and the backward of
-/// the last stage follows its forward.
+/// executor ops are ordered, forward of (k, m) precedes forward of
+/// (k+1, m), backward of (k, m) precedes backward of (k−1, m), the
+/// backward of the last model stage follows its forward, and weight-grad
+/// ops follow their own backward.
 pub fn validate_schedule(streams: &[Vec<Cell>], micros: usize) -> Result<(), String> {
-    execute_streams(streams, micros, |_c, _f, _b| ()).map(|_| ())
+    execute_streams(streams, micros, |_c, _a, _b| ()).map(|_| ())
+}
+
+/// True when the streams split the backward into B + W cells (the
+/// executor then routes weight-grad work to the W cells).
+pub fn splits_backward(streams: &[Vec<Cell>]) -> bool {
+    streams.iter().flatten().any(|c| c.op == OpKind::W)
+}
+
+/// Number of virtual-stage chunks per executor encoded in the streams.
+pub fn virtual_stages_of(streams: &[Vec<Cell>]) -> usize {
+    streams
+        .iter()
+        .flatten()
+        .map(|c| c.chunk + 1)
+        .max()
+        .unwrap_or(1)
 }
 
 /// Partition L layers over M stages (equal split required, as in aot.py).
@@ -193,11 +507,11 @@ pub fn layers_per_stage(n_layers: usize, stages: usize) -> Result<usize, String>
     Ok(n_layers / stages)
 }
 
-/// Ideal-pipeline bubble fraction for a fill-drain schedule.
+/// Ideal-pipeline bubble fraction for a fill-drain (GPipe/1F1B) schedule
+/// — the legacy helper; [`ScheduleKind::ideal_bubble_fraction`] covers
+/// every schedule.
 pub fn bubble_fraction(stages: usize, micros: usize) -> f64 {
-    let m = stages as f64;
-    let u = micros as f64;
-    (m - 1.0) / (m - 1.0 + u)
+    ScheduleKind::OneFOneB.ideal_bubble_fraction(stages, 1, micros)
 }
 
 #[cfg(test)]
@@ -207,13 +521,9 @@ mod tests {
 
     #[test]
     fn gpipe_has_all_cells_in_dependency_order() {
-        let cells = gpipe_schedule(4, 3);
-        assert_eq!(cells.len(), 2 * 4 * 3);
-        // Split into per-stage streams and validate.
-        let mut streams = vec![Vec::new(); 4];
-        for c in cells {
-            streams[c.stage].push(c);
-        }
+        let streams = gpipe_schedule(4, 3);
+        let total: usize = streams.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 2 * 4 * 3);
         validate_schedule(&streams, 3).unwrap();
     }
 
@@ -228,6 +538,59 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_is_valid_over_grid() {
+        // Exhaustive (stages <= 6, micros <= 12, v <= 3) grid; v > 1
+        // needs micros % stages == 0.
+        for stages in 1..=6usize {
+            for v in 1..=3usize {
+                for micros in 1..=12usize {
+                    let r = interleaved_1f1b_schedule(stages, v, micros);
+                    if v > 1 && micros % stages != 0 {
+                        assert!(r.is_err(), "S={stages} v={v} M={micros}");
+                        continue;
+                    }
+                    let streams = r.unwrap();
+                    validate_schedule(&streams, micros).unwrap_or_else(|e| {
+                        panic!("S={stages} v={v} M={micros}: {e}")
+                    });
+                    let total: usize = streams.iter().map(|s| s.len()).sum();
+                    assert_eq!(total, 2 * stages * v * micros);
+                    assert_eq!(virtual_stages_of(&streams), v);
+                    assert!(!splits_backward(&streams));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_bubble_is_valid_over_grid() {
+        for stages in 1..=6usize {
+            for micros in 1..=12usize {
+                let streams = zero_bubble_schedule(stages, micros);
+                validate_schedule(&streams, micros)
+                    .unwrap_or_else(|e| panic!("S={stages} M={micros}: {e}"));
+                let total: usize = streams.iter().map(|s| s.len()).sum();
+                assert_eq!(total, 3 * stages * micros);
+                assert!(splits_backward(&streams));
+                // Every W follows its own B within the stream.
+                for stream in &streams {
+                    for (i, c) in stream.iter().enumerate() {
+                        if c.op == OpKind::W {
+                            let b_pos = stream
+                                .iter()
+                                .position(|x| {
+                                    x.op == OpKind::B && x.micro == c.micro
+                                })
+                                .unwrap();
+                            assert!(b_pos < i);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn one_f_one_b_bounds_in_flight_activations() {
         let stages = 4;
         let micros = 12;
@@ -236,7 +599,11 @@ mod tests {
             let mut live: i64 = 0;
             let mut peak: i64 = 0;
             for c in stream {
-                live += if c.is_forward { 1 } else { -1 };
+                match c.op {
+                    OpKind::F => live += 1,
+                    OpKind::B => live -= 1,
+                    OpKind::W => {}
+                }
                 peak = peak.max(live);
             }
             let bound = (stages - s) as i64;
@@ -245,13 +612,88 @@ mod tests {
     }
 
     #[test]
+    fn zero_bubble_backfills_the_drain() {
+        // Stage 0 of S=4, M=8: the drain must alternate B and W (the
+        // back-fill), not run all Bs then all Ws.
+        let streams = zero_bubble_schedule(4, 8);
+        let s0 = &streams[0];
+        let first_b = s0.iter().position(|c| c.op == OpKind::B).unwrap();
+        // Deep warm-up: 2·(S−1) forwards before the first input-grad.
+        assert_eq!(first_b, 2 * 3 + 1);
+        let drain: Vec<OpKind> = s0
+            .iter()
+            .skip_while(|c| c.op != OpKind::W)
+            .map(|c| c.op)
+            .collect();
+        assert!(drain.windows(2).any(|w| w == [OpKind::W, OpKind::B]));
+        assert_eq!(s0.last().unwrap().op, OpKind::W);
+    }
+
+    #[test]
     fn stage0_of_1f1b_interleaves() {
         let streams = one_f_one_b_schedule(3, 6);
-        let s0: Vec<bool> = streams[0].iter().map(|c| c.is_forward).collect();
+        let s0: Vec<bool> = streams[0].iter().map(|c| c.is_forward()).collect();
         // warm-up of 2 forwards, then alternating, then drain.
         assert_eq!(s0[0..2], [true, true]);
         assert!(s0.windows(2).any(|w| w == [true, false]));
         assert_eq!(s0.last(), Some(&false));
+    }
+
+    #[test]
+    fn interleaved_chunks_cover_all_model_stages() {
+        let (stages, v, micros) = (3usize, 2usize, 6usize);
+        let streams = interleaved_1f1b_schedule(stages, v, micros).unwrap();
+        let trace = execute_streams(&streams, micros, |_c, _a, _b| ()).unwrap();
+        assert_eq!(trace.fwd.len(), stages * v);
+        assert_eq!(trace.bwd.len(), stages * v);
+        // Executor s runs chunks {0, 1} only, each covering all micros.
+        for (s, stream) in streams.iter().enumerate() {
+            for c in stream {
+                assert_eq!(c.stage, s);
+                assert!(c.chunk < v);
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_kind_parses_and_generates() {
+        assert_eq!(ScheduleKind::parse("1f1b").unwrap(), ScheduleKind::OneFOneB);
+        assert_eq!(ScheduleKind::parse("GPipe").unwrap(), ScheduleKind::GPipe);
+        assert_eq!(
+            ScheduleKind::parse("zero-bubble").unwrap(),
+            ScheduleKind::ZeroBubble
+        );
+        assert_eq!(ScheduleKind::parse("zb").unwrap(), ScheduleKind::ZeroBubble);
+        assert_eq!(
+            ScheduleKind::parse("interleaved").unwrap(),
+            ScheduleKind::Interleaved
+        );
+        assert!(ScheduleKind::parse("dualpipe").is_err());
+
+        for kind in ScheduleKind::all() {
+            let streams = kind.streams(4, 1, 8).unwrap();
+            validate_schedule(&streams, 8).unwrap();
+            assert_eq!(ScheduleKind::parse(kind.name()).unwrap(), kind);
+        }
+        // v > 1 only for interleaved; micros must divide.
+        assert!(ScheduleKind::OneFOneB.streams(4, 2, 8).is_err());
+        assert!(ScheduleKind::Interleaved.streams(4, 2, 6).is_err());
+        let il = ScheduleKind::Interleaved.streams(4, 2, 8).unwrap();
+        validate_schedule(&il, 8).unwrap();
+    }
+
+    #[test]
+    fn ideal_bubble_fractions_order_the_schedules() {
+        // The worked S=8, M=8 example from the README: 46.7% fill-drain,
+        // ~15.6% interleaved v=3, ~0% ZB-H1.
+        let fd = ScheduleKind::OneFOneB.ideal_bubble_fraction(8, 1, 8);
+        assert!((fd - 7.0 / 15.0).abs() < 1e-12);
+        assert_eq!(fd, ScheduleKind::GPipe.ideal_bubble_fraction(8, 1, 8));
+        let il = ScheduleKind::Interleaved.ideal_bubble_fraction(8, 3, 8);
+        assert!((il - (7.0 / 3.0) / 15.0).abs() < 1e-12);
+        let zb = ScheduleKind::ZeroBubble.ideal_bubble_fraction(8, 1, 8);
+        assert!(fd > il && il > zb);
+        assert_eq!(zb, 0.0);
     }
 
     #[test]
@@ -272,9 +714,9 @@ mod tests {
     fn execute_streams_yields_dependency_consistent_trace() {
         let streams = one_f_one_b_schedule(3, 4);
         let mut clock = 0usize;
-        let trace = execute_streams(&streams, 4, |_c, f, b| {
+        let trace = execute_streams(&streams, 4, |_c, a, b| {
             clock += 1;
-            assert!(f.map_or(true, |&x| x < clock));
+            assert!(a.map_or(true, |&x| x < clock));
             assert!(b.map_or(true, |&x| x < clock));
             clock
         })
@@ -288,6 +730,27 @@ mod tests {
                 if s < 2 {
                     assert!(trace.bwd[s + 1][m] < trace.bwd[s][m]);
                 }
+                assert!(trace.wgrad[s][m].is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn execute_streams_orders_weight_grads_after_backwards() {
+        let streams = zero_bubble_schedule(4, 6);
+        let mut clock = 0usize;
+        let trace = execute_streams(&streams, 6, |_c, a, b| {
+            clock += 1;
+            assert!(a.map_or(true, |&x| x < clock));
+            assert!(b.map_or(true, |&x| x < clock));
+            clock
+        })
+        .unwrap();
+        for k in 0..4 {
+            for m in 0..6 {
+                let w = trace.wgrad[k][m].unwrap();
+                assert!(trace.bwd[k][m] < w);
+                assert!(trace.fwd[k][m] < trace.bwd[k][m]);
             }
         }
     }
@@ -295,10 +758,31 @@ mod tests {
     #[test]
     fn deadlock_detection_catches_bad_schedule() {
         // Backward before its forward on the last stage.
+        let streams = vec![vec![Cell::b(0, 0, 0), Cell::f(0, 0, 0)]];
+        assert!(validate_schedule(&streams, 1).is_err());
+        // W before its B deadlocks too.
         let streams = vec![vec![
-            Cell { stage: 0, micro: 0, is_forward: false },
-            Cell { stage: 0, micro: 0, is_forward: true },
+            Cell::f(0, 0, 0),
+            Cell::w(0, 0, 0),
+            Cell::b(0, 0, 0),
         ]];
         assert!(validate_schedule(&streams, 1).is_err());
+        // Duplicate op is an error, not a silent overwrite.
+        let streams = vec![vec![
+            Cell::f(0, 0, 0),
+            Cell::f(0, 0, 0),
+            Cell::b(0, 0, 0),
+        ]];
+        assert!(validate_schedule(&streams, 1).is_err());
+        // A half-split schedule (one B has a W, the other doesn't) is
+        // rejected.
+        let streams = vec![vec![
+            Cell::f(0, 0, 0),
+            Cell::f(0, 0, 1),
+            Cell::b(0, 0, 0),
+            Cell::w(0, 0, 0),
+            Cell::b(0, 0, 1),
+        ]];
+        assert!(validate_schedule(&streams, 2).is_err());
     }
 }

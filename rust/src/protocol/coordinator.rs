@@ -126,6 +126,12 @@ pub struct CoordinatorSm {
     /// ring layout shipped in `Prepare`; membership decisions are
     /// untouched, which keeps every model-checked property intact.
     order: Vec<u32>,
+    /// Close each cluster's stage-link chain into a ring: the last
+    /// executor also links down to stage 0 (interleaved virtual-stage
+    /// schedules hand the final model chunk's activations back to the
+    /// first executor).  Like `order`, this only shapes the wiring
+    /// shipped in `Prepare` — membership decisions are untouched.
+    wrap_links: bool,
 }
 
 impl CoordinatorSm {
@@ -144,7 +150,14 @@ impl CoordinatorSm {
             timer_token: 0,
             phase: Phase::Idle,
             order: Vec::new(),
+            wrap_links: false,
         }
+    }
+
+    /// Close the stage-link chain into a ring for future epochs (the
+    /// interleaved virtual-stage topology).  No-op for single fleets.
+    pub fn set_wrap_links(&mut self, wrap: bool) {
+        self.wrap_links = wrap;
     }
 
     /// Install a preferred cluster order for future epochs' rings (see
@@ -359,12 +372,14 @@ impl CoordinatorSm {
                     .map(|&c2| (c2, s))
                     .collect()
             };
+            let next_s = if self.wrap_links { (s + 1) % self.stages } else { s + 1 };
             let link_down = if self.stages > 1
                 && !finishing
-                && s + 1 < self.stages
-                && !self.done.contains(&(c, s + 1))
+                && next_s < self.stages
+                && next_s != s
+                && !self.done.contains(&(c, next_s))
             {
-                Some((c, s + 1))
+                Some((c, next_s))
             } else {
                 None
             };

@@ -176,53 +176,99 @@ pub fn sync_payload_bytes(params: f64, d_hidden: usize, method: &Method) -> u64 
 
 /// One inner training step's makespan from a DES run of the 1F1B pipeline
 /// over per-stage GPU resources + intra-cluster activation links.
+pub fn pipeline_step_secs(scale: &ScaleConfig, topo: &mut Topology) -> f64 {
+    pipeline_step_secs_for(scale, topo, pipeline::ScheduleKind::OneFOneB, 1)
+        .expect("1F1B schedule is valid")
+}
+
+/// Like [`pipeline_step_secs`], but for any [`pipeline::ScheduleKind`]
+/// and virtual-stage count: `pp_stages` executors each own `v` model
+/// chunks of θ/(S·v) parameters, so per-executor compute per step is
+/// unchanged while the schedule's cell granularity shrinks.
 ///
 /// The dependency structure comes from [`pipeline::execute_streams`] —
 /// the same oracle the schedule validator uses and the same streams the
 /// real stage-parallel executor runs, so the simulated bubble structure
-/// can never drift from the executed one.
-pub fn pipeline_step_secs(scale: &ScaleConfig, topo: &mut Topology) -> f64 {
-    let m = scale.pp_stages;
+/// can never drift from the executed one.  Split-backward schedules
+/// (zero-bubble) spend half the fused backward on the input grad (the
+/// critical-path B cell) and half on the back-filled weight grad W.
+pub fn pipeline_step_secs_for(
+    scale: &ScaleConfig,
+    topo: &mut Topology,
+    kind: pipeline::ScheduleKind,
+    virtual_stages: usize,
+) -> Result<f64, String> {
+    let s_execs = scale.pp_stages;
+    let v = virtual_stages.max(1);
     let u = scale.microbatches;
+    let k_total = s_execs * v;
     let tok_micro = scale.tokens_per_cluster_step / u as f64;
-    // Per-stage, per-microbatch compute: fwd = 2θ_s·tok, bwd = 4θ_s·tok
+    // Per-chunk, per-microbatch compute: fwd = 2θ_k·tok, bwd = 4θ_k·tok
     // (bwd includes the rematerialized forward, matching the L2 export).
-    let theta_stage = scale.params / m as f64;
+    let theta_chunk = scale.params / k_total as f64;
     let eff = scale.gpu.effective_flops();
-    let fwd = 2.0 * theta_stage * tok_micro / eff;
-    let bwd = 4.0 * theta_stage * tok_micro / eff;
+    let fwd = 2.0 * theta_chunk * tok_micro / eff;
+    let bwd = 4.0 * theta_chunk * tok_micro / eff;
     // Activation tensor crossing stage boundaries.
     let act_bytes = (tok_micro * scale.d_hidden as f64 * 4.0) as u64;
 
-    let streams = pipeline::one_f_one_b_schedule(m, u);
+    let streams = kind.streams(s_execs, v, u)?;
+    let split = streams.iter().flatten().any(|c| c.op == pipeline::OpKind::W);
+    let (b_cost, w_cost) = if split { (bwd / 2.0, bwd / 2.0) } else { (bwd, 0.0) };
+
     // Event-graph execution for cluster 0 (all clusters identical):
     // each cell's completion time = GPU acquire after its dependencies
-    // land, with activation/grad transfers on the intra-cluster links.
+    // land, with activation/grad transfers on the intra-cluster links
+    // (the chunk hand-off from executor S−1 back to 0 rides the wrap
+    // link; a same-executor hand-off at S = 1 is a local move).
     let c = 0usize;
-    let trace = pipeline::execute_streams(&streams, u, |cell, fdep, bdep| {
-        let s = cell.stage;
-        let ready = if cell.is_forward {
-            match fdep {
-                None => 0.0, // stage 0 reads the microbatch locally
-                Some(&t) => {
-                    // activation transfer s-1 -> s
-                    topo.intra_link(c, s - 1).transfer(t, act_bytes).1
-                }
+    let trace = pipeline::execute_streams(&streams, u, |cell, dep_a, dep_b| {
+        let e = cell.stage;
+        let k = cell.model_stage(s_execs);
+        let (ready, dur) = match cell.op {
+            pipeline::OpKind::F => {
+                let ready = match dep_a {
+                    None => 0.0, // model stage 0 reads the microbatch locally
+                    Some(&t) => {
+                        let p = (k - 1) % s_execs; // producer executor
+                        if p == e {
+                            t
+                        } else if p + 1 == s_execs {
+                            topo.wrap_link(c).transfer(t, act_bytes).1
+                        } else {
+                            topo.intra_link(c, p).transfer(t, act_bytes).1
+                        }
+                    }
+                };
+                (ready, fwd)
             }
-        } else {
-            let own_fwd = *fdep.expect("backward depends on its forward");
-            match bdep {
-                None => own_fwd, // last stage: loss grad is local
-                Some(&tb) => {
-                    // grad-activation transfer s+1 -> s
-                    topo.intra_link(c, s).transfer(tb, act_bytes).1.max(own_fwd)
-                }
+            pipeline::OpKind::B => {
+                let own_fwd = *dep_a.expect("backward depends on its forward");
+                let ready = match dep_b {
+                    None => own_fwd, // last model stage: loss grad is local
+                    Some(&tb) => {
+                        let q = (k + 1) % s_execs; // producer executor
+                        let arrive = if q == e {
+                            tb
+                        } else if e + 1 == s_execs {
+                            topo.wrap_link(c).transfer(tb, act_bytes).1
+                        } else {
+                            topo.intra_link(c, e).transfer(tb, act_bytes).1
+                        };
+                        arrive.max(own_fwd)
+                    }
+                };
+                (ready, b_cost)
+            }
+            pipeline::OpKind::W => {
+                // Weight grad consumes stashed local state only.
+                let own_fwd = *dep_a.expect("weight grad depends on forward");
+                let own_bwd = *dep_b.expect("weight grad depends on backward");
+                (own_fwd.max(own_bwd), w_cost)
             }
         };
-        let dur = if cell.is_forward { fwd } else { bwd };
-        topo.gpu(WorkerId { cluster: c, stage: s }).acquire(ready, dur).1
-    })
-    .expect("1F1B schedule is valid");
+        topo.gpu(WorkerId { cluster: c, stage: e }).acquire(ready, dur).1
+    })?;
 
     let mut makespan = 0.0f64;
     for row in trace.fwd.iter().chain(trace.bwd.iter()) {
@@ -230,7 +276,12 @@ pub fn pipeline_step_secs(scale: &ScaleConfig, topo: &mut Topology) -> f64 {
             makespan = makespan.max(t);
         }
     }
-    makespan
+    for row in &trace.wgrad {
+        for t in row.iter().flatten() {
+            makespan = makespan.max(*t);
+        }
+    }
+    Ok(makespan)
 }
 
 /// Simulate `outer_rounds` outer steps and return throughput + breakdown.

@@ -92,10 +92,10 @@ use crate::config::{ExperimentConfig, FaultConfig, TransportConfig};
 use crate::coordinator::{RuntimeStagePipeline, RuntimeStepWork};
 use crate::optim::{DualOptimizer, Nesterov};
 use crate::pipeline::exec::{
-    summarize_step_samples, MpscStageLink, PipelineWorkload, StageStepWork,
-    StageTimeSummary, SyntheticPipeline,
+    summarize_step_samples, ChunkedRing, MpscStageLink, PipelineWorkload,
+    StageChunk, StageStepWork, StageTimeSummary, SyntheticPipeline,
 };
-use crate::pipeline::{one_f_one_b_schedule, validate_schedule};
+use crate::pipeline::{validate_schedule, ScheduleKind};
 use crate::protocol::{
     CoordIn, CoordOut, CoordinatorSm, EpochPlan, Key, WorkerIn, WorkerOut,
     WorkerPhase, WorkerSm,
@@ -192,6 +192,13 @@ pub struct ElasticConfig {
     pub pp_stages: usize,
     /// U — in-flight microbatches per inner step (stage fleet only).
     pub microbatches: usize,
+    /// Pipeline schedule name for the stage fleet (parsed by
+    /// [`ScheduleKind::parse`]): gpipe | 1f1b | interleaved | zero-bubble.
+    pub schedule: String,
+    /// v — virtual stages (model chunks) per executor process.  > 1
+    /// spawns `pp_stages / v` processes per cluster, each owning v
+    /// chunks, and closes the stage-link chain into a ring.
+    pub virtual_stages: usize,
     pub transport: TransportConfig,
     pub faults: FaultConfig,
     /// Reduce topology for the fleet's rings: [`ReduceTopology::Flat`]
@@ -234,6 +241,8 @@ impl ElasticConfig {
             overlap: false,
             pp_stages: 1,
             microbatches: 1,
+            schedule: "1f1b".into(),
+            virtual_stages: 1,
             transport: TransportConfig::default(),
             faults: FaultConfig::default(),
             reduce_topology: ReduceTopology::Flat,
@@ -249,6 +258,17 @@ impl ElasticConfig {
     /// Site of a rank under the configured tags (missing = site 0).
     pub fn site_of(&self, rank: u32) -> u32 {
         self.sites.get(rank as usize).copied().unwrap_or(0)
+    }
+
+    /// Executor-process count per cluster: `pp_stages / virtual_stages`
+    /// (each process owns `virtual_stages` model chunks).
+    pub fn stage_execs(&self) -> usize {
+        let v = self.virtual_stages.max(1);
+        if self.pp_stages % v == 0 {
+            self.pp_stages / v
+        } else {
+            self.pp_stages
+        }
     }
 
     /// Stage-fleet defaults over the artifact-free [`SyntheticPipeline`]
@@ -297,6 +317,8 @@ impl ElasticConfig {
             overlap: cfg.train.overlap,
             pp_stages: cfg.parallel.pp,
             microbatches: cfg.parallel.microbatches,
+            schedule: cfg.parallel.schedule.clone(),
+            virtual_stages: cfg.parallel.virtual_stages,
             transport: cfg.transport.clone(),
             faults: cfg.faults.clone(),
             // `validate()` already rejected unknown names; a locally
@@ -1066,9 +1088,16 @@ pub struct StageWorkerOpts {
     /// bundle).
     pub base: WorkerOpts,
     pub stage: u32,
+    /// Total model stages K (the workload's partition count); this
+    /// process executes `virtual_stages` chunks of it, so the fleet has
+    /// `K / virtual_stages` executor processes per cluster.
     pub stages: u32,
-    /// U — in-flight microbatches per inner step on the 1F1B schedule.
+    /// U — in-flight microbatches per inner step of the schedule.
     pub micros: usize,
+    /// Schedule name (parsed by [`ScheduleKind::parse`]).
+    pub schedule: String,
+    /// v — model chunks owned by this executor process.
+    pub virtual_stages: usize,
     /// Deterministic listener layout base (0 = ephemeral OS ports); see
     /// [`crate::transport::tcp::stage_ports`].
     pub listen_base: u16,
@@ -1125,9 +1154,23 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
              the plain worker)"
         ));
     }
-    if opts.stage as usize >= stages {
+    let v = opts.virtual_stages.max(1);
+    if stages % v != 0 {
         return Err(anyhow!(
-            "stage {} out of range for {stages} stages",
+            "{stages} model stages not divisible by {v} virtual stages"
+        ));
+    }
+    let execs = stages / v;
+    if execs < 2 {
+        return Err(anyhow!(
+            "virtual stages {v} leave fewer than 2 executor processes \
+             ({stages} model stages)"
+        ));
+    }
+    let kind = ScheduleKind::parse(&opts.schedule).map_err(|e| anyhow!(e))?;
+    if opts.stage as usize >= execs {
+        return Err(anyhow!(
+            "stage {} out of range for {execs} executor processes",
             opts.stage
         ));
     }
@@ -1146,13 +1189,13 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
         // close to 65535 would otherwise wrap in the u16 port arithmetic
         // and bind some unrelated (possibly privileged) port.
         let top = opts.listen_base as u64
-            + 2 * (w.rank as u64 * stages as u64 + opts.stage as u64)
+            + 2 * (w.rank as u64 * execs as u64 + opts.stage as u64)
             + 1;
         if top > 65535 {
             return Err(anyhow!(
-                "--listen-base {} + 2*(rank*stages + stage) + 1 = {top} \
-                 overflows the port space (rank {}, stage {}, {stages} \
-                 stages); lower the base",
+                "--listen-base {} + 2*(rank*execs + stage) + 1 = {top} \
+                 overflows the port space (rank {}, stage {}, {execs} \
+                 executors); lower the base",
                 opts.listen_base,
                 w.rank,
                 opts.stage
@@ -1162,7 +1205,7 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
             opts.listen_base,
             w.rank as usize,
             opts.stage as usize,
-            stages,
+            execs,
         );
         (
             TcpListener::bind(("127.0.0.1", rp))
@@ -1191,18 +1234,37 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
         ));
     }
     let micros = workload.micros();
-    let streams = one_f_one_b_schedule(stages, micros);
+    let streams = kind
+        .streams(execs, v, micros)
+        .map_err(|e| anyhow!("schedule: {e}"))?;
     validate_schedule(&streams, micros)
-        .map_err(|e| anyhow!("invalid 1F1B schedule: {e}"))?;
+        .map_err(|e| anyhow!("invalid {} schedule: {e}", kind.name()))?;
     let stream = streams[opts.stage as usize].clone();
 
-    let compute = workload.make_stage(w.rank as usize, opts.stage as usize)?;
-    let n = compute.numel();
-    let params = compute.init()?;
-    if params.len() != n {
-        return Err(anyhow!("init len {} != numel {n}", params.len()));
+    // This executor's chunk computes (model stage c·S + s), concatenated
+    // parameter vector, and wire spec — identical to the threaded
+    // executor's per-executor layout.
+    let mut chunks: Vec<StageChunk> = Vec::with_capacity(v);
+    let mut params: Vec<f32> = Vec::new();
+    let mut spec: Vec<ParamEntry> = Vec::new();
+    for c in 0..v {
+        let compute =
+            workload.make_stage(w.rank as usize, c * execs + opts.stage as usize)?;
+        let numel = compute.numel();
+        let init = compute.init()?;
+        if init.len() != numel {
+            return Err(anyhow!("init len {} != numel {numel}", init.len()));
+        }
+        let offset = params.len();
+        for mut e in compute.param_spec() {
+            e.offset += offset;
+            spec.push(e);
+        }
+        params.extend_from_slice(&init);
+        chunks.push(StageChunk { compute, offset, numel });
     }
-    let spec = compute.param_spec();
+    let chunk_sizes: Vec<usize> = chunks.iter().map(|c| c.numel).collect();
+    let n = params.len();
     // §2.2: this process holds only this stage's optimizer pair.
     let DualOptimizer { inner, outer } = DualOptimizer::new(
         n,
@@ -1224,12 +1286,13 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
     lane.set_pipeline_depth(w.pipeline_depth);
     lane.set_use_pool(w.comm_pool_size >= 2);
     let mut work = StageStepWork {
-        compute,
+        chunks,
         stream,
         link: Box::new(MpscStageLink::default()),
         params,
         inner,
         micros,
+        stages: execs,
     };
     let mut driver = RoundDriver::new(engine, lane, w.rounds, w.local_steps);
     if let Some(plan) = &w.faults {
@@ -1326,6 +1389,7 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
                                     plan.epoch,
                                     &link_listener,
                                     if down_port == 0 { None } else { Some(down_port) },
+                                    if v > 1 { Some(execs as u32) } else { None },
                                     connect_timeout,
                                     ring_timeout,
                                 ) {
@@ -1349,6 +1413,16 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
                     Some(fp) => Box::new(FaultyRing::new(raw, fp.clone())),
                     None => Box::new(raw),
                 };
+                // With virtual stages the concatenated reduction splits
+                // at chunk boundaries over this single TCP ring — the
+                // identical slice lengths / ranks / hop order as the
+                // threaded executor's per-chunk rings, so the two
+                // deployments stay bit-for-bit comparable.
+                let ring: Box<dyn RingTransport> = if v > 1 {
+                    Box::new(ChunkedRing::new(vec![ring], chunk_sizes.clone())?)
+                } else {
+                    ring
+                };
                 // Consensus resync on this stage's ring + this ring's
                 // committed drain-or-discard decision.
                 let ok = if driver.begin_epoch(ring, plan.recovery()).is_ok() {
@@ -1357,7 +1431,9 @@ pub fn run_stage_worker(opts: &StageWorkerOpts) -> Result<()> {
                     // round apart; the un-churned path never resets,
                     // preserving threaded-vs-fleet bit parity).
                     if plan.epoch > 1 {
-                        work.compute.reset_data(plan.resume_round as usize)?;
+                        for c in work.chunks.iter_mut() {
+                            c.compute.reset_data(plan.resume_round as usize)?;
+                        }
                     }
                     true
                 } else {
@@ -1523,6 +1599,9 @@ fn drive_coordinator(
     // the machine's membership decisions — and so every model-checked
     // property — are untouched.
     sm.set_cluster_order(cluster_order);
+    // Interleaved virtual stages close each cluster's stage-link chain
+    // into a ring (last executor dials stage 0's link listener).
+    sm.set_wrap_links(stages > 1 && cfg.virtual_stages.max(1) > 1);
     let mut done: BTreeMap<Key, DoneReport> = BTreeMap::new();
     let mut telem = Telemetry::default();
     // The single coordinator timer; the most recently armed token wins
@@ -2113,6 +2192,8 @@ fn stage_worker_opts_for(
         stage,
         stages: cfg.pp_stages as u32,
         micros: cfg.microbatches.max(1),
+        schedule: cfg.schedule.clone(),
+        virtual_stages: cfg.virtual_stages.max(1),
         listen_base: cfg.transport.stage_listen_base_port,
     }
 }
@@ -2124,7 +2205,7 @@ fn spawn_stage_workers(
 ) -> Result<Vec<std::process::Child>> {
     let mut children = Vec::new();
     for rank in 0..cfg.workers as u32 {
-        for stage in 0..cfg.pp_stages as u32 {
+        for stage in 0..cfg.stage_execs() as u32 {
             let opts = stage_worker_opts_for(cfg, rank, stage, coord_addr, mode);
             match mode {
                 SpawnMode::Process { exe } => {
@@ -2140,6 +2221,10 @@ fn spawn_stage_workers(
                         .arg(cfg.pp_stages.to_string())
                         .arg("--micros")
                         .arg(opts.micros.to_string())
+                        .arg("--schedule")
+                        .arg(&opts.schedule)
+                        .arg("--virtual-stages")
+                        .arg(opts.virtual_stages.to_string())
                         .arg("--listen-base")
                         .arg(opts.listen_base.to_string())
                         .arg("--rounds")
@@ -2296,6 +2381,13 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
         return Err(anyhow!("need at least one cluster"));
     }
     let stages = cfg.pp_stages;
+    let v = cfg.virtual_stages.max(1);
+    if stages % v != 0 {
+        return Err(anyhow!(
+            "{stages} pipeline stages not divisible by {v} virtual stages"
+        ));
+    }
+    let execs = cfg.stage_execs();
     let listener =
         TcpListener::bind("127.0.0.1:0").context("binding coordinator socket")?;
     let coord_addr = listener.local_addr()?.to_string();
@@ -2305,22 +2397,43 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
     reap_children(&mut children);
     let (epoch, done, telem) = supervised?;
 
-    // Survivor clusters: every stage process completed.
+    // Survivor clusters: every executor process completed.
     let clusters: BTreeSet<u32> = done.keys().map(|(c, _)| *c).collect();
     let survivors: Vec<u32> = clusters
         .into_iter()
-        .filter(|c| (0..stages as u32).all(|s| done.contains_key(&(*c, s))))
+        .filter(|c| (0..execs as u32).all(|s| done.contains_key(&(*c, s))))
         .collect();
     if survivors.is_empty() {
         return Err(anyhow!("no cluster completed the run"));
     }
 
-    // Assemble per-cluster full vectors from the per-stage digests (stage
-    // concatenation == the single flat layout).
+    // Assemble per-cluster full vectors from the per-executor digests in
+    // model-stage order: executor s's concat holds [chunk 0 | chunk 1 |
+    // ...] = model stages {s, S+s, 2S+s, ...}; with v = 1 this is the
+    // plain stage concatenation.  A truncated digest (PARAMS_DIGEST_MAX)
+    // falls back to raw concatenation — the final eval is skipped by its
+    // length check anyway.
+    let workload =
+        build_stage_pipeline(&cfg.workload, stages, cfg.microbatches, cfg.seed)?;
+    let exec_len = |s: usize| -> usize {
+        (0..v).map(|c| workload.stage_numel(c * execs + s)).sum()
+    };
     let assemble = |c: u32| -> Vec<f32> {
+        let complete = (0..execs)
+            .all(|s| done[&(c, s as u32)].params.len() == exec_len(s));
         let mut full = Vec::new();
-        for s in 0..stages as u32 {
-            full.extend_from_slice(&done[&(c, s)].params);
+        if !complete || v == 1 {
+            for s in 0..execs as u32 {
+                full.extend_from_slice(&done[&(c, s)].params);
+            }
+            return full;
+        }
+        for k in 0..stages {
+            let (s, ch) = (k % execs, k / execs);
+            let off: usize =
+                (0..ch).map(|cc| workload.stage_numel(cc * execs + s)).sum();
+            let n = workload.stage_numel(k);
+            full.extend_from_slice(&done[&(c, s as u32)].params[off..off + n]);
         }
         full
     };
@@ -2353,8 +2466,6 @@ fn run_elastic_stages(cfg: &ElasticConfig, mode: &SpawnMode) -> Result<ElasticOu
     // its shard, so the coordinator evaluates).  Digests are exact for
     // per-stage shards up to PARAMS_DIGEST_MAX elements; beyond that the
     // eval is skipped rather than run on a strided sample.
-    let workload =
-        build_stage_pipeline(&cfg.workload, stages, cfg.microbatches, cfg.seed)?;
     let expected: usize = (0..stages).map(|s| workload.stage_numel(s)).sum();
     let final_loss = if p0.len() == expected {
         workload.eval(&p0)?
@@ -2403,11 +2514,12 @@ fn supervise_stages(
     let startup_deadline = Instant::now()
         + Duration::from_millis(cfg.transport.connect_timeout_ms)
         + Duration::from_secs(10);
+    let execs = cfg.stage_execs();
     let handles =
-        accept_stage_workers(listener, cfg.workers, cfg.pp_stages, startup_deadline)?;
+        accept_stage_workers(listener, cfg.workers, execs, startup_deadline)?;
     // Stage fleets keep the flat per-stage rings: `StageHello` carries no
     // site tag or probe listener, so the order preference stays empty.
-    drive_coordinator(cfg, cfg.pp_stages as u32, handles, Vec::new())
+    drive_coordinator(cfg, execs as u32, handles, Vec::new())
 }
 
 #[cfg(test)]
@@ -2739,6 +2851,112 @@ mod tests {
             .max()
             .unwrap_or(0);
         assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn thread_mode_zero_bubble_stage_fleet_kill_drains() {
+        // Churn under the ZB-H1 stream: kill one stage process of
+        // cluster 1 mid-run with overlap on.  The split-backward
+        // schedule must not change the drain story — the survivors
+        // finish the held per-stage reductions (≥ 1 drain commit) and
+        // complete every round.
+        let mut cfg = ElasticConfig::synthetic_pipeline(3, 2, 5, 16);
+        cfg.schedule = "zero-bubble".into();
+        cfg.overlap = true;
+        cfg.outer_lr = 0.3;
+        cfg.outer_momentum = 0.3;
+        cfg.transport.ring_timeout_ms = 1000;
+        cfg.transport.connect_timeout_ms = 5000;
+        cfg.wall_timeout_ms = 90_000;
+        cfg.faults.enabled = true;
+        cfg.faults.kill_rank = 1;
+        cfg.faults.kill_stage = 0;
+        cfg.faults.kill_round = 2;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 2], "cluster 1 must be gone entirely");
+        assert!(out.epochs >= 2, "epochs={}", out.epochs);
+        assert!(
+            out.recoveries.iter().any(|&(_, _, d)| d > 0),
+            "expected at least one per-stage drain commit, got {:?}",
+            out.recoveries
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round = out
+            .round_losses
+            .iter()
+            .map(|(_, r, _)| *r)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn thread_mode_zero_bubble_stage_fleet_soft_break_discards() {
+        // Soft cluster-wide break on the zero-bubble fleet: cluster 1
+        // parks at round 3 holding stale deltas while the others run
+        // ahead — mixed in-flight evidence, so every stage ring must
+        // DISCARD; nobody dies and the fleet completes.
+        let mut cfg = ElasticConfig::synthetic_pipeline(3, 2, 6, 16);
+        cfg.schedule = "zero-bubble".into();
+        cfg.overlap = true;
+        cfg.outer_lr = 0.3;
+        cfg.outer_momentum = 0.3;
+        cfg.transport.ring_timeout_ms = 1000;
+        cfg.transport.connect_timeout_ms = 5000;
+        cfg.wall_timeout_ms = 90_000;
+        cfg.faults.enabled = true;
+        cfg.faults.break_rank = 1;
+        cfg.faults.break_round = 3;
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.survivors, vec![0, 1, 2], "nobody died");
+        assert!(out.epochs >= 2, "epochs={}", out.epochs);
+        assert!(
+            out.recoveries.iter().all(|&(_, _, d)| d == 0),
+            "mixed in-flight must discard, got {:?}",
+            out.recoveries
+        );
+        assert!(out.final_loss.is_finite());
+        let max_round = out
+            .round_losses
+            .iter()
+            .map(|(_, r, _)| *r)
+            .max()
+            .unwrap_or(0);
+        assert_eq!(max_round as usize, cfg.rounds);
+    }
+
+    #[test]
+    fn thread_mode_interleaved_stage_fleet_converges() {
+        // v=2 virtual stages on a 4-stage model: each cluster runs
+        // pp_stages / v = 2 executor processes owning 2 chunks each, the
+        // stage-link chain closes into a ring (chunk wrap hops), and the
+        // assembled 4-stage model still converges.
+        let mut cfg = ElasticConfig::synthetic_pipeline(2, 4, 5, 16);
+        cfg.schedule = "interleaved".into();
+        cfg.virtual_stages = 2;
+        cfg.transport.ring_timeout_ms = 1000;
+        cfg.transport.connect_timeout_ms = 5000;
+        cfg.wall_timeout_ms = 60_000;
+        assert_eq!(cfg.stage_execs(), 2);
+        let out = run_elastic(&cfg, &SpawnMode::Thread).unwrap();
+        assert_eq!(out.epochs, 1, "no churn expected");
+        assert_eq!(out.survivors, vec![0, 1]);
+        assert!(out.total_wire_bytes > 0);
+        assert_eq!(out.final_params.len(), 4 * 16);
+        let r1: Vec<f32> = out
+            .round_losses
+            .iter()
+            .filter(|(_, r, _)| *r == 1)
+            .map(|(_, _, l)| *l)
+            .collect();
+        assert!(!r1.is_empty());
+        let r1_mean = r1.iter().sum::<f32>() / r1.len() as f32;
+        assert!(
+            out.final_loss < r1_mean,
+            "final {} vs round-1 {}",
+            out.final_loss,
+            r1_mean
+        );
     }
 
     #[test]

@@ -91,12 +91,14 @@ pub enum Msg {
     /// epoch.  Also reused by the intra-cluster stage-link chain (`rank`
     /// then carries the *stage* index).
     RingHello { rank: u32, epoch: u32 },
-    /// Stage-link data plane: activations for one microbatch flowing
-    /// stage s → s+1 inside one cluster (1F1B dataflow over TCP).
-    Acts { micro: u32, payload: Vec<f32> },
-    /// Stage-link data plane: grad-activations for one microbatch flowing
-    /// stage s+1 → s inside one cluster.
-    Grads { micro: u32, payload: Vec<f32> },
+    /// Stage-link data plane: activations for one (virtual-stage chunk,
+    /// microbatch) flowing stage s → s+1 inside one cluster (pipeline
+    /// dataflow over TCP; `chunk` is 0 except under interleaved
+    /// schedules, where the wrap link S−1 → 0 carries chunk ≥ 1).
+    Acts { chunk: u32, micro: u32, payload: Vec<f32> },
+    /// Stage-link data plane: grad-activations for one (chunk,
+    /// microbatch) flowing stage s+1 → s inside one cluster.
+    Grads { chunk: u32, micro: u32, payload: Vec<f32> },
     /// Stage worker → coordinator, once at startup: one frame per
     /// (cluster, stage) OS process, advertising both of its listeners —
     /// the per-stage DP ring port and the intra-cluster stage-link port.
@@ -329,7 +331,8 @@ pub fn encode_into(b: &mut Vec<u8>, msg: &Msg) {
             put_u32(&mut b, *rank);
             put_u32(&mut b, *epoch);
         }
-        Msg::Acts { micro, payload } | Msg::Grads { micro, payload } => {
+        Msg::Acts { chunk, micro, payload } | Msg::Grads { chunk, micro, payload } => {
+            put_u32(&mut b, *chunk);
             put_u32(&mut b, *micro);
             put_f32s(&mut b, payload);
         }
@@ -442,8 +445,8 @@ pub fn decode(bytes: &[u8]) -> Result<Msg> {
         },
         8 => Msg::Shutdown,
         9 => Msg::RingHello { rank: c.u32()?, epoch: c.u32()? },
-        10 => Msg::Acts { micro: c.u32()?, payload: c.f32s()? },
-        11 => Msg::Grads { micro: c.u32()?, payload: c.f32s()? },
+        10 => Msg::Acts { chunk: c.u32()?, micro: c.u32()?, payload: c.f32s()? },
+        11 => Msg::Grads { chunk: c.u32()?, micro: c.u32()?, payload: c.f32s()? },
         12 => Msg::StageHello {
             cluster: c.u32()?,
             stage: c.u32()?,
@@ -617,8 +620,8 @@ mod tests {
         });
         roundtrip(Msg::Shutdown);
         roundtrip(Msg::RingHello { rank: 1, epoch: 2 });
-        roundtrip(Msg::Acts { micro: 3, payload: vec![1.0, -0.5] });
-        roundtrip(Msg::Grads { micro: 0, payload: vec![0.25; 9] });
+        roundtrip(Msg::Acts { chunk: 1, micro: 3, payload: vec![1.0, -0.5] });
+        roundtrip(Msg::Grads { chunk: 0, micro: 0, payload: vec![0.25; 9] });
         roundtrip(Msg::StageHello {
             cluster: 2,
             stage: 1,
@@ -776,8 +779,8 @@ mod tests {
             },
             Msg::Shutdown,
             Msg::RingHello { rank: 2, epoch: 4 },
-            Msg::Acts { micro: 1, payload: vec![9.0; 2] },
-            Msg::Grads { micro: 2, payload: vec![-9.0; 2] },
+            Msg::Acts { chunk: 2, micro: 1, payload: vec![9.0; 2] },
+            Msg::Grads { chunk: 0, micro: 2, payload: vec![-9.0; 2] },
             Msg::StageHello {
                 cluster: 1,
                 stage: 2,

@@ -297,7 +297,8 @@ pub fn form_ring(
 }
 
 // ---------------------------------------------------------------------------
-// Stage links: the 1F1B dataflow over TCP (one OS process per stage)
+// Stage links: the pipeline-schedule dataflow over TCP (one OS process
+// per stage executor; chain for 1F1B/GPipe/ZB, ring for interleaved)
 // ---------------------------------------------------------------------------
 
 /// Deterministic listener layout for the stage-parallel fleet when
@@ -315,7 +316,7 @@ pub fn stage_ports(base: u16, cluster: usize, stage: usize, stages: usize) -> (u
 
 /// One direction-neighbor socket of a stage process.  Writes are
 /// decoupled onto a writer thread for the same reason as [`TcpRing`]:
-/// the 1F1B steady state has both neighbors sending into each other
+/// the schedule steady state has both neighbors sending into each other
 /// (acts down, grads up), and synchronous writes larger than the socket
 /// buffers would deadlock the pair.  A dead peer still surfaces: the
 /// writer thread exits on a write error, the next send sees the hung-up
@@ -364,42 +365,54 @@ impl StageLink for TcpStageLink {
         self.down.is_some()
     }
 
-    fn send_acts(&mut self, micro: usize, acts: Vec<f32>) -> Result<()> {
+    fn send_acts(&mut self, chunk: usize, micro: usize, acts: Vec<f32>) -> Result<()> {
         let d = self
             .down
             .as_ref()
             .ok_or_else(|| anyhow!("last stage has no downstream link"))?;
-        d.tx.send(Msg::Acts { micro: micro as u32, payload: acts })
-            .map_err(|_| anyhow!("downstream stage link closed"))
+        d.tx.send(Msg::Acts {
+            chunk: chunk as u32,
+            micro: micro as u32,
+            payload: acts,
+        })
+        .map_err(|_| anyhow!("downstream stage link closed"))
     }
 
-    fn recv_acts(&mut self) -> Result<(usize, Vec<f32>)> {
+    fn recv_acts(&mut self) -> Result<(usize, usize, Vec<f32>)> {
         let u = self
             .up
             .as_mut()
             .ok_or_else(|| anyhow!("first stage has no upstream link"))?;
         match read_msg(&mut u.rx).context("stage link recv acts")? {
-            Msg::Acts { micro, payload } => Ok((micro as usize, payload)),
+            Msg::Acts { chunk, micro, payload } => {
+                Ok((chunk as usize, micro as usize, payload))
+            }
             other => Err(anyhow!("expected Acts frame, got {}", other.name())),
         }
     }
 
-    fn send_grads(&mut self, micro: usize, grads: Vec<f32>) -> Result<()> {
+    fn send_grads(&mut self, chunk: usize, micro: usize, grads: Vec<f32>) -> Result<()> {
         let u = self
             .up
             .as_ref()
             .ok_or_else(|| anyhow!("first stage has no upstream link"))?;
-        u.tx.send(Msg::Grads { micro: micro as u32, payload: grads })
-            .map_err(|_| anyhow!("upstream stage link closed"))
+        u.tx.send(Msg::Grads {
+            chunk: chunk as u32,
+            micro: micro as u32,
+            payload: grads,
+        })
+        .map_err(|_| anyhow!("upstream stage link closed"))
     }
 
-    fn recv_grads(&mut self) -> Result<(usize, Vec<f32>)> {
+    fn recv_grads(&mut self) -> Result<(usize, usize, Vec<f32>)> {
         let d = self
             .down
             .as_mut()
             .ok_or_else(|| anyhow!("last stage has no downstream link"))?;
         match read_msg(&mut d.rx).context("stage link recv grads")? {
-            Msg::Grads { micro, payload } => Ok((micro as usize, payload)),
+            Msg::Grads { chunk, micro, payload } => {
+                Ok((chunk as usize, micro as usize, payload))
+            }
             other => Err(anyhow!("expected Grads frame, got {}", other.name())),
         }
     }
@@ -415,29 +428,77 @@ impl StageLink for TcpStageLink {
 /// finishing epoch that runs no dataflow).  The chain has no cycle, so
 /// the sequential accept-then-dial unwinds from stage 0.  All sockets
 /// carry `io_timeout` read/write timeouts so a dead neighbor surfaces
-/// mid-1F1B as an error (churn signal), never a hang.
+/// mid-schedule as an error (churn signal), never a hang.
+///
+/// With `wrap_stages = Some(S)` the links close into a ring (interleaved
+/// virtual stages route the last model chunk's acts back to executor 0):
+/// the last stage's `down_port` is stage 0's link listener, and stage 0
+/// dials *first* and accepts second — a cycle of accept-then-dial would
+/// deadlock, while dial-first unwinds because stage 1 is already
+/// accepting when stage 0 dials.  `Some(1)` forms a self-loop on the
+/// stage's own listener (no handshake needed: the connection in the
+/// backlog is our own).
 pub fn form_stage_links(
     stage: u32,
     epoch: u32,
     link_listener: &TcpListener,
     down_port: Option<u16>,
+    wrap_stages: Option<u32>,
     connect_timeout: Duration,
     io_timeout: Duration,
 ) -> Result<TcpStageLink> {
     let deadline = Instant::now() + connect_timeout;
-    let up = if stage > 0 {
-        let l = link_listener.try_clone().context("cloning link listener")?;
-        let s = accept_predecessor(l, stage, stage - 1, epoch, deadline, io_timeout)?;
-        Some(link_half(s)?)
-    } else {
-        None
-    };
-    let down = match down_port {
-        Some(port) => {
-            let s = dial_handshake(port, stage, stage + 1, epoch, deadline, io_timeout)?;
-            Some(link_half(s)?)
-        }
+    if wrap_stages == Some(1) {
+        // Self-loop: connect() completes via the backlog before accept().
+        let addr = link_listener.local_addr().context("link listener addr")?;
+        let dial = TcpStream::connect(addr).context("self-loop dial")?;
+        dial.set_nodelay(true).ok();
+        dial.set_read_timeout(Some(io_timeout)).ok();
+        dial.set_write_timeout(Some(io_timeout)).ok();
+        link_listener.set_nonblocking(false).ok();
+        let (acc, _) = link_listener.accept().context("self-loop accept")?;
+        acc.set_nodelay(true).ok();
+        acc.set_read_timeout(Some(io_timeout)).ok();
+        acc.set_write_timeout(Some(io_timeout)).ok();
+        return Ok(TcpStageLink {
+            up: Some(link_half(acc)?),
+            down: Some(link_half(dial)?),
+        });
+    }
+    let up_peer = match wrap_stages {
+        Some(s_total) => Some((stage + s_total - 1) % s_total),
+        None if stage > 0 => Some(stage - 1),
         None => None,
+    };
+    let down_peer = match wrap_stages {
+        Some(s_total) => (stage + 1) % s_total,
+        None => stage + 1,
+    };
+    let dial_down = |deadline: Instant| -> Result<Option<LinkHalf>> {
+        match down_port {
+            Some(port) => {
+                let s = dial_handshake(port, stage, down_peer, epoch, deadline, io_timeout)?;
+                Ok(Some(link_half(s)?))
+            }
+            None => Ok(None),
+        }
+    };
+    let accept_up = |deadline: Instant| -> Result<Option<LinkHalf>> {
+        match up_peer {
+            Some(peer) => {
+                let l = link_listener.try_clone().context("cloning link listener")?;
+                let s = accept_predecessor(l, stage, peer, epoch, deadline, io_timeout)?;
+                Ok(Some(link_half(s)?))
+            }
+            None => Ok(None),
+        }
+    };
+    let (up, down) = if wrap_stages.is_some() && stage == 0 {
+        let down = dial_down(deadline)?;
+        (accept_up(deadline)?, down)
+    } else {
+        let up = accept_up(deadline)?;
+        (up, dial_down(deadline)?)
     };
     Ok(TcpStageLink { up, down })
 }
@@ -557,29 +618,82 @@ mod tests {
     fn stage_links_carry_acts_down_and_grads_up() {
         // Two stage processes (threads here) of one cluster: stage 0 dials
         // stage 1's link listener; acts flow down, grads flow up, each
-        // tagged with its microbatch index.
+        // tagged with its (chunk, microbatch) index.
         let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
         let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
         let p1 = l1.local_addr().unwrap().port();
         let t = Duration::from_secs(5);
         let upstream = std::thread::spawn(move || {
             let mut link =
-                form_stage_links(0, 1, &l0, Some(p1), t, t).unwrap();
+                form_stage_links(0, 1, &l0, Some(p1), None, t, t).unwrap();
             assert!(!link.has_upstream() && link.has_downstream());
-            link.send_acts(0, vec![1.0, 2.0]).unwrap();
-            link.send_acts(1, vec![3.0]).unwrap();
-            let (mi, g) = link.recv_grads().unwrap();
-            assert_eq!((mi, g), (0, vec![-1.0]));
+            link.send_acts(0, 0, vec![1.0, 2.0]).unwrap();
+            link.send_acts(1, 1, vec![3.0]).unwrap();
+            let (ci, mi, g) = link.recv_grads().unwrap();
+            assert_eq!((ci, mi, g), (2, 0, vec![-1.0]));
             // Endpoint misuse errors instead of hanging.
             assert!(link.recv_acts().is_err());
         });
-        let mut link = form_stage_links(1, 1, &l1, None, t, t).unwrap();
+        let mut link = form_stage_links(1, 1, &l1, None, None, t, t).unwrap();
         assert!(link.has_upstream() && !link.has_downstream());
-        assert_eq!(link.recv_acts().unwrap(), (0, vec![1.0, 2.0]));
-        assert_eq!(link.recv_acts().unwrap(), (1, vec![3.0]));
-        link.send_grads(0, vec![-1.0]).unwrap();
-        assert!(link.send_acts(0, vec![0.0]).is_err());
+        assert_eq!(link.recv_acts().unwrap(), (0, 0, vec![1.0, 2.0]));
+        assert_eq!(link.recv_acts().unwrap(), (1, 1, vec![3.0]));
+        link.send_grads(2, 0, vec![-1.0]).unwrap();
+        assert!(link.send_acts(0, 0, vec![0.0]).is_err());
         upstream.join().unwrap();
+    }
+
+    #[test]
+    fn stage_links_wrap_into_a_ring() {
+        // Three stages with wrap: every stage has both neighbors, and a
+        // frame sent down by the last stage arrives at stage 0's upstream
+        // receiver (the interleaved chunk hand-off path).
+        let ls: Vec<TcpListener> =
+            (0..3).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        let ports: Vec<u16> =
+            ls.iter().map(|l| l.local_addr().unwrap().port()).collect();
+        let t = Duration::from_secs(5);
+        let handles: Vec<_> = ls
+            .into_iter()
+            .enumerate()
+            .map(|(s, l)| {
+                let down = ports[(s + 1) % 3];
+                std::thread::spawn(move || {
+                    let mut link = form_stage_links(
+                        s as u32,
+                        7,
+                        &l,
+                        Some(down),
+                        Some(3),
+                        t,
+                        t,
+                    )
+                    .unwrap();
+                    assert!(link.has_upstream() && link.has_downstream());
+                    link.send_acts(s, s * 10, vec![s as f32]).unwrap();
+                    let (ci, mi, p) = link.recv_acts().unwrap();
+                    let prev = (s + 2) % 3;
+                    assert_eq!((ci, mi, p), (prev, prev * 10, vec![prev as f32]));
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stage_link_self_loop_round_trips() {
+        // wrap_stages = 1: a single executor owning every chunk talks to
+        // itself over its own listener.
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let t = Duration::from_secs(5);
+        let mut link = form_stage_links(0, 1, &l, None, Some(1), t, t).unwrap();
+        assert!(link.has_upstream() && link.has_downstream());
+        link.send_acts(1, 4, vec![9.0]).unwrap();
+        assert_eq!(link.recv_acts().unwrap(), (1, 4, vec![9.0]));
+        link.send_grads(0, 2, vec![-3.0]).unwrap();
+        assert_eq!(link.recv_grads().unwrap(), (0, 2, vec![-3.0]));
     }
 
     #[test]

@@ -9,6 +9,7 @@ use dilocox::compress::Method;
 use dilocox::pipeline::exec::{
     local_stage_rings, run_pipeline, PipelineRunOpts, SyntheticPipeline,
 };
+use dilocox::pipeline::ScheduleKind;
 use dilocox::transport::elastic::{run_elastic, ElasticConfig, SpawnMode};
 
 fn dilocox_bin() -> String {
@@ -46,6 +47,8 @@ fn local_opts() -> PipelineRunOpts {
         seed: SEED,
         comm_pool_size: 1,
         pipeline_depth: 1,
+        schedule: ScheduleKind::OneFOneB,
+        virtual_stages: 1,
     }
 }
 
@@ -246,6 +249,125 @@ fn tcp_stage_fleet_survives_stage_process_kill_at_round_2() {
         out.final_loss,
         r1_mean
     );
+}
+
+#[test]
+fn tcp_zero_bubble_stage_fleet_matches_local_threaded_run_bit_for_bit() {
+    // The ZB-H1 stream across OS processes: split backward (B then W),
+    // back-filled weight grads, same fp order on every wire — the fleet
+    // must agree EXACTLY with the threaded executor running the same
+    // schedule.
+    let (dp, stages, micros) = (2usize, 2usize, 2usize);
+    let wl = SyntheticPipeline::new(stages, micros, DIM, SEED);
+    let mut o = local_opts();
+    o.schedule = ScheduleKind::ZeroBubble;
+    let local =
+        run_pipeline(&wl, dp, local_stage_rings(dp, stages), &o).unwrap();
+
+    let mut cfg = fleet_cfg(dp, stages);
+    cfg.schedule = "zero-bubble".into();
+    assert_eq!(cfg.microbatches, micros, "test assumes U = 2");
+    let fleet =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+
+    assert_eq!(fleet.epochs, 1, "no churn expected");
+    assert_eq!(local.final_params, fleet.final_params);
+    assert_eq!(local.final_eval, fleet.final_loss);
+    assert_eq!(local.total_wire_bytes, fleet.total_wire_bytes);
+    assert!(fleet.total_wire_bytes > 0);
+}
+
+#[test]
+fn tcp_zero_bubble_stage_fleet_kill_drains_and_completes() {
+    // Churn on the zero-bubble process fleet with overlap: kill the
+    // stage-0 process of cluster 1 at round 2; the survivors drain the
+    // held per-stage reductions and finish every round.
+    let mut cfg = fleet_cfg(3, 2);
+    cfg.rounds = 5;
+    cfg.schedule = "zero-bubble".into();
+    cfg.overlap = true;
+    cfg.outer_lr = 0.3;
+    cfg.outer_momentum = 0.3;
+    cfg.faults.enabled = true;
+    cfg.faults.kill_rank = 1;
+    cfg.faults.kill_stage = 0;
+    cfg.faults.kill_round = 2;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 2], "cluster 1 must be gone entirely");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().any(|&(_, _, d)| d > 0),
+        "expected at least one per-stage drain commit, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    let max_round = out
+        .round_losses
+        .iter()
+        .map(|(_, r, _)| *r)
+        .max()
+        .unwrap_or(0);
+    assert_eq!(max_round as usize, cfg.rounds);
+}
+
+#[test]
+fn tcp_zero_bubble_stage_fleet_soft_break_discards() {
+    // Soft break on the zero-bubble process fleet: cluster 1 parks at
+    // round 3 with stale in-flight deltas — every stage ring must
+    // discard, nobody dies, the run completes.
+    let mut cfg = fleet_cfg(3, 2);
+    cfg.rounds = 6;
+    cfg.schedule = "zero-bubble".into();
+    cfg.overlap = true;
+    cfg.outer_lr = 0.3;
+    cfg.outer_momentum = 0.3;
+    cfg.faults.enabled = true;
+    cfg.faults.break_rank = 1;
+    cfg.faults.break_round = 3;
+    let out =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+    assert_eq!(out.survivors, vec![0, 1, 2], "nobody died");
+    assert!(out.epochs >= 2, "epochs={}", out.epochs);
+    assert!(
+        out.recoveries.iter().all(|&(_, _, d)| d == 0),
+        "mixed in-flight must discard, got {:?}",
+        out.recoveries
+    );
+    assert!(out.final_loss.is_finite());
+    let max_round = out
+        .round_losses
+        .iter()
+        .map(|(_, r, _)| *r)
+        .max()
+        .unwrap_or(0);
+    assert_eq!(max_round as usize, cfg.rounds);
+}
+
+#[test]
+fn tcp_interleaved_stage_fleet_matches_local_threaded_run_bit_for_bit() {
+    // v=2 chunks per executor process over a 4-stage model: the wrap
+    // links close the process chain into a ring, and the chunked
+    // per-exec rings must still reproduce the threaded executor exactly.
+    let (dp, stages, micros, v) = (2usize, 4usize, 2usize, 2usize);
+    let wl = SyntheticPipeline::new(stages, micros, DIM, SEED);
+    let mut o = local_opts();
+    o.schedule = ScheduleKind::Interleaved;
+    o.virtual_stages = v;
+    let local =
+        run_pipeline(&wl, dp, local_stage_rings(dp, stages), &o).unwrap();
+
+    let mut cfg = fleet_cfg(dp, stages);
+    cfg.schedule = "interleaved".into();
+    cfg.virtual_stages = v;
+    assert_eq!(cfg.microbatches, micros, "test assumes U = 2");
+    let fleet =
+        run_elastic(&cfg, &SpawnMode::Process { exe: dilocox_bin() }).unwrap();
+
+    assert_eq!(fleet.epochs, 1, "no churn expected");
+    assert_eq!(local.final_params, fleet.final_params);
+    assert_eq!(local.final_eval, fleet.final_loss);
+    assert_eq!(local.total_wire_bytes, fleet.total_wire_bytes);
 }
 
 #[test]
